@@ -1,0 +1,62 @@
+//! Quickstart: cluster synthetic blobs on the simulated KPynq accelerator.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the minimal public-API path: generate data → build a
+//! system → cluster → read the fit and the hardware report.
+
+use kpynq::coordinator::{KpynqSystem, SystemConfig};
+use kpynq::data::{normalize, synth};
+use kpynq::kmeans::KMeansConfig;
+
+fn main() -> kpynq::Result<()> {
+    // 10k points in 16 dimensions around 8 modes, min-max normalised the
+    // way the fixed-point datapath expects.
+    let mut ds = synth::blobs(10_000, 16, 8, 0xC0FFEE);
+    normalize::min_max(&mut ds);
+
+    let sys = KpynqSystem::new(SystemConfig::default())?; // simulated Pynq-Z1
+    let kcfg = KMeansConfig { k: 8, seed: 42, ..Default::default() };
+    let out = sys.cluster(&ds, &kcfg)?;
+
+    println!("kpynq quickstart — {} points x {} dims, k = {}", ds.n(), ds.d(), kcfg.k);
+    println!(
+        "  converged: {} after {} iterations, inertia {:.4}",
+        out.fit.converged, out.fit.iterations, out.fit.inertia
+    );
+    println!(
+        "  simulated: {} PL cycles = {:.3} ms at 100 MHz",
+        out.report.total_cycles,
+        out.report.sim_seconds * 1e3
+    );
+    println!(
+        "  filter effectiveness: {:.1}% of standard K-means distance work",
+        out.fit.stats.work_ratio(ds.n(), kcfg.k) * 100.0
+    );
+
+    // Cluster sizes (the blobs are balanced, so these should be ~equal).
+    let mut counts = vec![0usize; kcfg.k];
+    for &a in &out.fit.assignments {
+        counts[a as usize] += 1;
+    }
+    println!("  cluster sizes: {counts:?}");
+
+    // Recovery check against the generator's ground truth.
+    if let Some(labels) = &ds.labels {
+        let mut map = std::collections::HashMap::new();
+        let mut agree = 0usize;
+        for i in 0..ds.n() {
+            let e = map.entry(labels[i]).or_insert(out.fit.assignments[i]);
+            if *e == out.fit.assignments[i] {
+                agree += 1;
+            }
+        }
+        println!(
+            "  ground-truth agreement: {:.2}% (up to relabelling)",
+            100.0 * agree as f64 / ds.n() as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,126 @@
+"""AOT driver: lower the Layer-2 graphs to HLO text + manifest.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every exported graph becomes one ``artifacts/<name>.hlo.txt`` plus an entry
+in ``artifacts/manifest.json`` describing its geometry and I/O signature —
+the Rust runtime (``rust/src/runtime``) reads the manifest, compiles each
+module once on the PJRT CPU client, and dispatches tiles to the variant
+whose padded geometry matches.
+
+Usage::
+
+    python -m compile.aot --outdir ../artifacts [--quick]
+
+``--quick`` exports only the smallest variant (used by fast CI loops).
+The Makefile treats the manifest as the stamp: unchanged inputs = no-op.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import distance
+
+# Variant grid. The coordinator pads (d, k) up to the nearest exported
+# variant and slices the results back, so this grid bounds the padding
+# waste, not the supported problem sizes. TILE_N is fixed at the kernel
+# default: it is the unit of DMA bursts and double buffering on the Rust
+# side, mirroring the point-slab BRAM on the FPGA.
+TILE_N = distance.DEFAULT_TILE_N
+VARIANTS = [
+    # (d, k, n_groups)
+    (4, 16, 8),
+    (32, 16, 8),
+    (64, 16, 8),
+    (128, 16, 8),
+    (64, 64, 16),
+]
+# Entries exported for every variant vs. only the demo variant.
+TILE_ENTRIES = ("assign", "group_min")
+DEMO_VARIANT = (32, 16, 8)
+DEMO_ENTRIES = ("kmeans_step", "kmeans_run")
+DEMO_ITERS = 20
+
+_DTYPES = {"float32": "f32", "int32": "s32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals) -> list[dict]:
+    out = []
+    for a in avals:
+        out.append({"shape": list(a.shape), "dtype": _DTYPES[str(a.dtype)]})
+    return out
+
+
+def export_entry(name, fn, example_args, outdir, meta):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as f:
+        f.write(text)
+    out_avals = jax.eval_shape(fn, *example_args)
+    flat, _ = jax.tree.flatten(out_avals)
+    record = {
+        "name": name,
+        "file": fname,
+        "inputs": _sig(example_args),
+        "outputs": _sig(flat),
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        **meta,
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="export only the smallest variant")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    variants = VARIANTS[:1] if args.quick else VARIANTS
+    records = []
+    for d, k, g in variants:
+        entries = model.entry_points(TILE_N, d, k, g, DEMO_ITERS)
+        names = TILE_ENTRIES
+        if (d, k, g) == DEMO_VARIANT and not args.quick:
+            names = TILE_ENTRIES + DEMO_ENTRIES
+        for entry in names:
+            fn, example_args = entries[entry]
+            name = f"{entry}_n{TILE_N}_d{d}_k{k}"
+            meta = {"entry": entry, "tile_n": TILE_N, "d": d, "k": k, "g": g}
+            if entry == "kmeans_run":
+                meta["n_iters"] = DEMO_ITERS
+            rec = export_entry(name, fn, example_args, args.outdir, meta)
+            records.append(rec)
+            print(f"  exported {rec['file']}  "
+                  f"({len(rec['inputs'])} in / {len(rec['outputs'])} out)")
+
+    manifest = {"version": 1, "tile_n": TILE_N, "artifacts": records}
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(records)} artifacts + manifest to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

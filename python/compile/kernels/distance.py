@@ -1,0 +1,148 @@
+"""Layer-1 Pallas kernels: the KPynq Distance Calculator, re-thought for TPU.
+
+On the Pynq-Z1 the paper implements the distance calculator as P parallel
+DSP48 MAC pipelines fed from BRAM at initiation interval 1. A TPU has no
+per-lane dataflow pipeline; its throughput lives in the MXU systolic array.
+The adaptation (DESIGN.md §Hardware-Adaptation):
+
+  * the P-lane MAC tree becomes a tiled matmul: with row norms precomputed,
+    ``d(x, c)^2 = |x|^2 + |c|^2 - 2 x·c^T`` and the ``x·c^T`` term is a
+    (TILE_N × D) @ (D × K) MXU matmul;
+  * BRAM double-buffering becomes the Pallas ``BlockSpec`` HBM→VMEM block
+    schedule: each grid step streams one TILE_N slab of points into VMEM
+    while the full centroid block (K × D — small, the paper's K ≤ 64)
+    stays resident, exactly like the centroid BRAM bank on the FPGA;
+  * the per-point filter branch does NOT live here — filtering is batch
+    compaction in the Rust coordinator; the kernel only ever sees dense
+    survivor tiles.
+
+All kernels run with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime loads AOT. Block shapes are still chosen as if for real VMEM (see
+``vmem_bytes``) so the schedule is hardware-honest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile of points per grid step. 256 × 128 f32 = 128 KiB of VMEM for
+# the point slab; with K ≤ 64 the centroid slab and the output tile are far
+# smaller, leaving headroom under the ~16 MiB VMEM budget (see vmem_bytes).
+DEFAULT_TILE_N = 256
+
+
+def vmem_bytes(tile_n: int, d: int, k: int) -> int:
+    """Estimated VMEM footprint of one grid step of the assign kernel.
+
+    points slab + resident centroids + centroid norms + distance tile +
+    the three output slices. Used by the AOT driver to sanity-check block
+    shapes against the 16 MiB/core budget, and quoted in DESIGN.md §Perf.
+    """
+    f32 = 4
+    return (
+        tile_n * d * f32      # x tile
+        + k * d * f32         # centroids (resident)
+        + k * f32             # |c|^2 (resident)
+        + tile_n * k * f32    # distance tile
+        + tile_n * (4 + f32 + f32)  # assign (i32) + best + second
+    )
+
+
+def mxu_flops(n: int, d: int, k: int) -> int:
+    """MAC-tree / MXU work of one dense assign pass: the 2·N·K·D matmul
+    term dominates; norm and reduction terms are O(N·K + N·D)."""
+    return 2 * n * k * d
+
+
+def _sq_dist_tile(x, c, csq):
+    """Distance tile in matmul form — the MXU-shaped inner loop.
+
+    x: (TN, D) point slab, c: (K, D) centroids, csq: (K,) centroid norms.
+    Returns (TN, K) squared distances, clamped at 0 (f32 cancellation).
+    """
+    xsq = jnp.sum(x * x, axis=1)  # (TN,)
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # MXU term
+    return jnp.maximum(xsq[:, None] + csq[None, :] - 2.0 * xc, 0.0)
+
+
+def _dist_kernel(x_ref, c_ref, csq_ref, o_ref):
+    o_ref[...] = _sq_dist_tile(x_ref[...], c_ref[...], csq_ref[...])
+
+
+def _assign_kernel(x_ref, c_ref, csq_ref, idx_ref, best_ref, second_ref):
+    d = _sq_dist_tile(x_ref[...], c_ref[...], csq_ref[...])  # (TN, K)
+    k = d.shape[1]
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    best = jnp.min(d, axis=1)
+    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    masked = jnp.where(col == idx[:, None], jnp.inf, d)
+    second = jnp.min(masked, axis=1) if k > 1 else jnp.full_like(best, jnp.inf)
+    idx_ref[...] = idx
+    best_ref[...] = best
+    second_ref[...] = second
+
+
+def _grid_and_specs(n: int, d: int, k: int, tile_n: int):
+    if n % tile_n != 0:
+        raise ValueError(f"n={n} must be a multiple of tile_n={tile_n}; "
+                         "the coordinator pads tiles before dispatch")
+    grid = (n // tile_n,)
+    x_spec = pl.BlockSpec((tile_n, d), lambda i: (i, 0))
+    # Centroids + norms are resident across the whole grid (the FPGA's
+    # centroid BRAM bank): every step maps to block (0, 0)/(0,).
+    c_spec = pl.BlockSpec((k, d), lambda i: (0, 0))
+    csq_spec = pl.BlockSpec((k,), lambda i: (0,))
+    return grid, x_spec, c_spec, csq_spec
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def pairwise_sq_dist(points, centroids, tile_n: int = DEFAULT_TILE_N):
+    """Pallas pairwise squared distances: f32[N,D] × f32[K,D] → f32[N,K].
+
+    Oracle: ``ref.pairwise_sq_dist``.
+    """
+    n, d = points.shape
+    k = centroids.shape[0]
+    csq = jnp.sum(centroids * centroids, axis=1)
+    grid, x_spec, c_spec, csq_spec = _grid_and_specs(n, d, k, tile_n)
+    return pl.pallas_call(
+        _dist_kernel,
+        grid=grid,
+        in_specs=[x_spec, c_spec, csq_spec],
+        out_specs=pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(points, centroids, csq)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def assign(points, centroids, tile_n: int = DEFAULT_TILE_N):
+    """Pallas assign tile: nearest centroid + best/second squared distances.
+
+    This is the kernel the AOT path exports for the Rust accelerator's
+    survivor tiles. Oracle: ``ref.assign``.
+
+    Returns (assign i32[N], best f32[N], second f32[N]).
+    """
+    n, d = points.shape
+    k = centroids.shape[0]
+    csq = jnp.sum(centroids * centroids, axis=1)
+    grid, x_spec, c_spec, csq_spec = _grid_and_specs(n, d, k, tile_n)
+    row_spec = pl.BlockSpec((tile_n,), lambda i: (i,))
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[x_spec, c_spec, csq_spec],
+        out_specs=[row_spec, row_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, centroids, csq)

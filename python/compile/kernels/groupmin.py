@@ -1,0 +1,70 @@
+"""Layer-1 Pallas kernel: group-level filter bounds (KPynq Group Filter).
+
+The paper's Group-level Filter keeps, per point, a lower bound on the
+distance to every *group* of centroids (centroids are clustered into G
+groups once at init, Yinyang-style). When a group's bound proves no member
+can beat the current assignment, the whole group is skipped.
+
+On the FPGA this is a compare/accumulate unit sitting in front of the
+distance pipeline. On TPU we compute the per-group minima as a dense
+masked reduction over the full (TILE_N × K) distance tile — the tile is
+already paid for by the MXU matmul, so the group reduction is almost free
+(O(N·K) VPU work after the O(N·K·D) MXU work).
+
+The group mask is passed as a dense f32 (G × K) membership matrix with
++inf off-group sentinels pre-added by the host, which keeps the kernel
+free of gathers (TPU-hostile) and of int comparisons in the reduction.
+
+Oracle: ``ref.group_min_dist``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import distance as _dist
+
+
+def group_penalty_matrix(group_of_centroid, n_groups: int):
+    """Build the (G, K) penalty matrix: 0 where centroid k is in group g,
+    +inf elsewhere. Host-side helper shared with the AOT driver."""
+    k = group_of_centroid.shape[0]
+    gids = jnp.asarray(group_of_centroid, dtype=jnp.int32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n_groups, k), 0)
+    return jnp.where(rows == gids[None, :], 0.0, jnp.inf).astype(jnp.float32)
+
+
+def _group_min_kernel(x_ref, c_ref, csq_ref, pen_ref, o_ref):
+    d = _dist._sq_dist_tile(x_ref[...], c_ref[...], csq_ref[...])  # (TN, K)
+    pen = pen_ref[...]  # (G, K): 0 in-group, +inf off-group
+    # out[n, g] = min_k (d[n, k] + pen[g, k])  — a (TN, G) masked min.
+    o_ref[...] = jnp.min(d[:, None, :] + pen[None, :, :], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "tile_n"))
+def group_min(points, centroids, group_of_centroid, n_groups: int,
+              tile_n: int = _dist.DEFAULT_TILE_N):
+    """Per-point, per-group minimum squared distance: f32[N, G].
+
+    Used once per Yinyang run to initialise the group lower bounds, and by
+    the accelerator model whenever a point fails the group filter for all
+    groups (full refresh).
+    """
+    n, d = points.shape
+    k = centroids.shape[0]
+    csq = jnp.sum(centroids * centroids, axis=1)
+    pen = group_penalty_matrix(group_of_centroid, n_groups)
+    grid, x_spec, c_spec, csq_spec = _dist._grid_and_specs(n, d, k, tile_n)
+    pen_spec = pl.BlockSpec((n_groups, k), lambda i: (0, 0))
+    return pl.pallas_call(
+        _group_min_kernel,
+        grid=grid,
+        in_specs=[x_spec, c_spec, csq_spec, pen_spec],
+        out_specs=pl.BlockSpec((tile_n, n_groups), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n_groups), jnp.float32),
+        interpret=True,
+    )(points, centroids, csq, pen)

@@ -1,0 +1,98 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+plain ``jax.numpy`` with no Pallas, no tiling and no tricks. The pytest
+suite (``python/tests/``) sweeps shapes/dtypes with hypothesis and asserts
+``allclose`` between kernel and oracle — this file is the single source of
+numerical truth for Layer 1.
+
+All distances are *squared* Euclidean distances, clamped at zero (the
+matmul-form expansion ``|x|^2 + |c|^2 - 2 x.c`` can go slightly negative in
+f32; the hardware model and the bound maintenance in the Rust coordinator
+both assume non-negative squared distances).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dist(points: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Squared Euclidean distance between every point and every centroid.
+
+    Args:
+      points:    f32[N, D]
+      centroids: f32[K, D]
+
+    Returns:
+      f32[N, K] with ``out[n, k] = max(0, |points[n] - centroids[k]|^2)``.
+    """
+    diff = points[:, None, :] - centroids[None, :, :]  # (N, K, D)
+    return jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
+
+
+def assign(points: jax.Array, centroids: jax.Array):
+    """Nearest-centroid assignment with first- and second-best distances.
+
+    This is the oracle for the accelerator's assign tile: the Rust
+    coordinator needs, per point, the winning centroid index, the winning
+    squared distance (the Hamerly/Yinyang *upper bound* before sqrt) and the
+    runner-up squared distance (the *lower bound*).
+
+    Returns:
+      (assign i32[N], best f32[N], second f32[N])
+    """
+    d = pairwise_sq_dist(points, centroids)
+    best_idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    best = jnp.min(d, axis=1)
+    k = d.shape[1]
+    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    masked = jnp.where(col == best_idx[:, None], jnp.inf, d)
+    second = jnp.min(masked, axis=1) if k > 1 else jnp.full_like(best, jnp.inf)
+    return best_idx, best, second
+
+
+def group_min_dist(points: jax.Array, centroids: jax.Array,
+                   group_of_centroid: jax.Array, n_groups: int) -> jax.Array:
+    """Per-point minimum squared distance to each *group* of centroids.
+
+    Oracle for the group-level filter: ``out[n, g] = min over centroids c in
+    group g of |points[n] - c|^2``. Groups with no centroid get ``+inf``.
+
+    Args:
+      points:            f32[N, D]
+      centroids:         f32[K, D]
+      group_of_centroid: i32[K] in [0, n_groups)
+      n_groups:          static int
+    """
+    d = pairwise_sq_dist(points, centroids)  # (N, K)
+    onehot = jax.nn.one_hot(group_of_centroid, n_groups, dtype=jnp.bool_)  # (K, G)
+    # min over each group: mask non-members with +inf then reduce.
+    masked = jnp.where(onehot.T[None, :, :], d[:, None, :], jnp.inf)  # (N, G, K)
+    return jnp.min(masked, axis=-1)
+
+
+def centroid_update(points: jax.Array, assign_idx: jax.Array, k: int):
+    """Accumulate per-cluster sums and counts (the M-step).
+
+    Returns (sums f32[K, D], counts f32[K]). Empty-cluster policy (keep the
+    old centroid) is applied by the caller, matching the Rust implementation.
+    """
+    onehot = jax.nn.one_hot(assign_idx, k, dtype=points.dtype)  # (N, K)
+    sums = onehot.T @ points
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts
+
+
+def lloyd_step(points: jax.Array, centroids: jax.Array):
+    """One full Lloyd iteration — the oracle for ``model.kmeans_step``.
+
+    Returns (new_centroids, assign_idx, counts, inertia).
+    """
+    idx, best, _ = assign(points, centroids)
+    sums, counts = centroid_update(points, idx, centroids.shape[0])
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new_c = jnp.where(counts[:, None] > 0, sums / safe, centroids)
+    inertia = jnp.sum(best)
+    return new_c, idx, counts, inertia

@@ -1,0 +1,114 @@
+"""Layer-2 JAX compute graphs for KPynq.
+
+These are the graphs the AOT driver (``aot.py``) lowers to HLO text and the
+Rust runtime executes through PJRT. Python never runs on the request path:
+each graph is traced once per (tile_n, d, k) variant at build time.
+
+Graphs:
+
+  * ``assign_tile``   — the accelerator's hot tile: nearest centroid plus
+    first/second-best squared distances for one dense survivor tile. This
+    is what the Rust coordinator dispatches after the multi-level filter
+    has compacted the surviving points (DESIGN.md §Hardware-Adaptation).
+  * ``group_min_tile``— group-filter bound initialisation for one tile.
+  * ``kmeans_step``   — a full Lloyd iteration (assign + centroid update +
+    inertia) for tile-sized problems; used by the quickstart path and as
+    the L2-level correctness anchor against ``ref.lloyd_step``.
+
+All graphs call the Layer-1 Pallas kernels so the kernels lower into the
+same HLO module the Rust side loads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distance, groupmin, ref
+
+
+def assign_tile(points, centroids):
+    """Assign one dense tile of points to their nearest centroids.
+
+    Args:
+      points:    f32[N, D] (N a multiple of the kernel tile)
+      centroids: f32[K, D]
+
+    Returns:
+      (assign i32[N], best f32[N], second f32[N]) — squared distances.
+    """
+    return distance.assign(points, centroids)
+
+
+def group_min_tile(points, centroids, group_of_centroid, n_groups: int):
+    """Group-filter bounds for one tile: f32[N, G] min squared distance."""
+    return groupmin.group_min(points, centroids, group_of_centroid, n_groups)
+
+
+def kmeans_step(points, centroids):
+    """One full Lloyd iteration over a tile-sized problem.
+
+    The assignment leg runs through the Pallas kernel; the update leg is the
+    one-hot matmul segment-sum (MXU-friendly, no scatters). Empty clusters
+    keep their previous centroid, matching the Rust implementation and the
+    oracle ``ref.lloyd_step``.
+
+    Returns (new_centroids f32[K,D], assign i32[N], counts f32[K],
+    inertia f32[]).
+    """
+    k = centroids.shape[0]
+    idx, best, _ = distance.assign(points, centroids)
+    sums, counts = ref.centroid_update(points, idx, k)
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new_c = jnp.where(counts[:, None] > 0, sums / safe, centroids)
+    inertia = jnp.sum(best)
+    return new_c, idx, counts, inertia
+
+
+def kmeans_run(points, centroids, n_iters: int):
+    """``n_iters`` Lloyd iterations as a single scanned graph.
+
+    Scan (not unroll) keeps the HLO module size O(1) in the iteration count
+    — the L2 perf note in DESIGN.md §Perf. Returns the final centroids, the
+    final assignment and the per-iteration inertia trace.
+    """
+    def body(c, _):
+        new_c, _idx, _counts, inertia = kmeans_step(points, c)
+        return new_c, inertia
+
+    final_c, inertias = jax.lax.scan(body, centroids, None, length=n_iters)
+    idx, best, _ = distance.assign(points, final_c)
+    return final_c, idx, inertias
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points: name -> (traceable, example-arg builder). The builder
+# receives the variant geometry and returns the ShapeDtypeStruct tuple that
+# jax.jit(...).lower() is called with. Kept here (not in aot.py) so the
+# model and its export surface evolve together.
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points(tile_n: int, d: int, k: int, n_groups: int, n_iters: int):
+    """The export table for one (tile_n, d, k, g) variant."""
+    return {
+        "assign": (
+            assign_tile,
+            (_sds((tile_n, d)), _sds((k, d))),
+        ),
+        "group_min": (
+            lambda p, c, g: group_min_tile(p, c, g, n_groups),
+            (_sds((tile_n, d)), _sds((k, d)), _sds((k,), jnp.int32)),
+        ),
+        "kmeans_step": (
+            kmeans_step,
+            (_sds((tile_n, d)), _sds((k, d))),
+        ),
+        "kmeans_run": (
+            lambda p, c: kmeans_run(p, c, n_iters),
+            (_sds((tile_n, d)), _sds((k, d))),
+        ),
+    }

@@ -1,0 +1,27 @@
+"""Shared pytest fixtures for the KPynq build-time test suite.
+
+Run from the ``python/`` directory (``cd python && pytest tests/``) so the
+``compile`` package resolves. The suite is hermetic: every random input is
+derived from a fixed seed or from hypothesis's managed entropy.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0xC0FFEE)
+
+
+def make_blobs(rng, n, d, k, spread=0.05, sep=4.0):
+    """Well-separated Gaussian blobs + the true centers that generated them."""
+    centers = rng.randn(k, d).astype(np.float32) * sep
+    labels = rng.randint(0, k, size=n)
+    pts = centers[labels] + rng.randn(n, d).astype(np.float32) * spread
+    return pts.astype(np.float32), centers, labels

@@ -1,0 +1,72 @@
+"""AOT export: HLO text well-formedness, manifest schema, determinism."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    outdir = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--outdir", str(outdir), "--quick"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True,
+    )
+    return outdir
+
+
+def test_manifest_schema(exported):
+    manifest = json.loads((exported / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert manifest["tile_n"] == aot.TILE_N
+    assert len(manifest["artifacts"]) == 2  # assign + group_min for d4k16
+    for rec in manifest["artifacts"]:
+        for key in ("name", "file", "entry", "tile_n", "d", "k", "g",
+                    "inputs", "outputs", "sha256"):
+            assert key in rec, f"manifest record missing {key}"
+        assert (exported / rec["file"]).exists()
+
+
+def test_hlo_text_is_parseable_shape(exported):
+    manifest = json.loads((exported / "manifest.json").read_text())
+    for rec in manifest["artifacts"]:
+        text = (exported / rec["file"]).read_text()
+        assert text.startswith("HloModule"), "must be HLO text, not proto"
+        assert "ENTRY" in text
+        # Input signature embedded in the entry layout must match manifest.
+        for inp in rec["inputs"]:
+            dims = ",".join(str(x) for x in inp["shape"])
+            assert f"{inp['dtype']}[{dims}]" in text
+
+
+def test_sha_matches_content(exported):
+    import hashlib
+    manifest = json.loads((exported / "manifest.json").read_text())
+    for rec in manifest["artifacts"]:
+        text = (exported / rec["file"]).read_text()
+        assert hashlib.sha256(text.encode()).hexdigest() == rec["sha256"]
+
+
+def test_export_is_deterministic(tmp_path):
+    """Two exports of the same entry must produce byte-identical HLO —
+    the Makefile's no-op stamp logic depends on this."""
+    from compile import model
+    eps = model.entry_points(aot.TILE_N, 4, 16, 8, 2)
+    fn, args = eps["assign"]
+    r1 = aot.export_entry("a", fn, args, str(tmp_path), {"entry": "assign"})
+    r2 = aot.export_entry("a", fn, args, str(tmp_path), {"entry": "assign"})
+    assert r1["sha256"] == r2["sha256"]
+
+
+def test_variant_grid_covers_demo():
+    assert aot.DEMO_VARIANT in aot.VARIANTS
+    for d, k, g in aot.VARIANTS:
+        assert k >= 1 and d >= 1 and g >= 1
+        assert g <= k, "never more groups than centroids"

@@ -1,0 +1,116 @@
+"""L1 correctness: Pallas distance/assign kernels vs. the pure-jnp oracle.
+
+This is the CORE correctness signal for Layer 1 (DESIGN.md §6): hypothesis
+sweeps the kernel's shape space and asserts allclose against ``ref.py``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distance, ref
+
+TILE = distance.DEFAULT_TILE_N
+
+
+def _tolerant_assign_check(pts, cents, idx_k, best_k, second_k):
+    """Assignments must agree with the oracle except at float near-ties,
+    where the kernel's pick must be within tolerance of the oracle's best."""
+    idx_r, best_r, second_r = ref.assign(jnp.asarray(pts), jnp.asarray(cents))
+    idx_r, best_r, second_r = map(np.asarray, (idx_r, best_r, second_r))
+    np.testing.assert_allclose(best_k, best_r, rtol=1e-4, atol=1e-4)
+    if cents.shape[0] > 1:
+        finite = np.isfinite(second_r)
+        np.testing.assert_allclose(second_k[finite], second_r[finite],
+                                   rtol=1e-4, atol=1e-4)
+    mismatch = idx_k != idx_r
+    if mismatch.any():
+        # Every mismatch must be a near-tie: the kernel's chosen centroid is
+        # within float tolerance of the oracle's best distance.
+        d_full = np.asarray(ref.pairwise_sq_dist(jnp.asarray(pts),
+                                                 jnp.asarray(cents)))
+        chosen = d_full[np.arange(len(idx_k)), idx_k]
+        scale = np.maximum(1.0, np.abs(best_r[mismatch]))
+        assert np.all(np.abs(chosen[mismatch] - best_r[mismatch])
+                      <= 1e-3 * scale), "non-tie assignment mismatch"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 3),
+    d=st.integers(1, 130),
+    k=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_sq_dist_matches_ref(n_tiles, d, k, seed):
+    rng = np.random.RandomState(seed)
+    pts = rng.randn(n_tiles * TILE, d).astype(np.float32)
+    cents = rng.randn(k, d).astype(np.float32)
+    got = np.asarray(distance.pairwise_sq_dist(jnp.asarray(pts), jnp.asarray(cents)))
+    want = np.asarray(ref.pairwise_sq_dist(jnp.asarray(pts), jnp.asarray(cents)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert (got >= 0).all(), "squared distances must be clamped non-negative"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 130),
+    k=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_assign_matches_ref(d, k, seed, scale):
+    rng = np.random.RandomState(seed)
+    pts = (rng.randn(TILE, d) * scale).astype(np.float32)
+    cents = (rng.randn(k, d) * scale).astype(np.float32)
+    idx, best, second = distance.assign(jnp.asarray(pts), jnp.asarray(cents))
+    idx, best, second = map(np.asarray, (idx, best, second))
+    # Normalise tolerance by the scale^2 of the squared distances.
+    _tolerant_assign_check(pts / scale, cents / scale,
+                           idx, best / scale**2, second / scale**2)
+
+
+def test_assign_k1_second_is_inf(rng):
+    pts = rng.randn(TILE, 8).astype(np.float32)
+    cents = rng.randn(1, 8).astype(np.float32)
+    idx, best, second = distance.assign(jnp.asarray(pts), jnp.asarray(cents))
+    assert (np.asarray(idx) == 0).all()
+    assert np.isinf(np.asarray(second)).all()
+
+
+def test_point_on_centroid_has_zero_distance(rng):
+    cents = rng.randn(4, 16).astype(np.float32)
+    pts = np.tile(cents, (TILE // 4, 1)).astype(np.float32)
+    idx, best, _ = distance.assign(jnp.asarray(pts), jnp.asarray(cents))
+    np.testing.assert_allclose(np.asarray(best), 0.0, atol=1e-4)
+    assert (np.asarray(idx) == np.tile(np.arange(4), TILE // 4)).all()
+
+
+def test_multi_tile_grid_consistent(rng):
+    """A 3-tile input must equal three independent 1-tile calls."""
+    pts = rng.randn(3 * TILE, 24).astype(np.float32)
+    cents = rng.randn(16, 24).astype(np.float32)
+    full = np.asarray(distance.pairwise_sq_dist(jnp.asarray(pts), jnp.asarray(cents)))
+    for t in range(3):
+        part = np.asarray(distance.pairwise_sq_dist(
+            jnp.asarray(pts[t * TILE:(t + 1) * TILE]), jnp.asarray(cents)))
+        np.testing.assert_array_equal(full[t * TILE:(t + 1) * TILE], part)
+
+
+def test_non_multiple_tile_rejected(rng):
+    pts = rng.randn(100, 8).astype(np.float32)
+    cents = rng.randn(4, 8).astype(np.float32)
+    with pytest.raises(ValueError, match="multiple of tile_n"):
+        distance.pairwise_sq_dist(jnp.asarray(pts), jnp.asarray(cents))
+
+
+def test_vmem_budget_of_exported_variants():
+    """Every AOT variant must fit the 16 MiB VMEM budget (DESIGN.md §Perf)."""
+    from compile import aot
+    for d, k, _g in aot.VARIANTS:
+        assert distance.vmem_bytes(TILE, d, k) < 16 * 2**20
+
+
+def test_mxu_flops_accounting():
+    assert distance.mxu_flops(256, 64, 16) == 2 * 256 * 64 * 16

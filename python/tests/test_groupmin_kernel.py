@@ -1,0 +1,63 @@
+"""L1 correctness: group-filter kernel vs. oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distance, groupmin, ref
+
+TILE = distance.DEFAULT_TILE_N
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(1, 96),
+    k=st.integers(1, 32),
+    g=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_group_min_matches_ref(d, k, g, seed):
+    rng = np.random.RandomState(seed)
+    pts = rng.randn(TILE, d).astype(np.float32)
+    cents = rng.randn(k, d).astype(np.float32)
+    gids = rng.randint(0, g, size=k).astype(np.int32)
+    got = np.asarray(groupmin.group_min(
+        jnp.asarray(pts), jnp.asarray(cents), jnp.asarray(gids), g))
+    want = np.asarray(ref.group_min_dist(
+        jnp.asarray(pts), jnp.asarray(cents), jnp.asarray(gids), g))
+    # Empty groups are +inf in both; compare finite entries numerically.
+    assert (np.isinf(got) == np.isinf(want)).all()
+    finite = np.isfinite(want)
+    np.testing.assert_allclose(got[finite], want[finite], rtol=1e-4, atol=1e-4)
+
+
+def test_single_group_equals_global_min(rng):
+    pts = rng.randn(TILE, 12).astype(np.float32)
+    cents = rng.randn(8, 12).astype(np.float32)
+    gids = np.zeros(8, dtype=np.int32)
+    got = np.asarray(groupmin.group_min(
+        jnp.asarray(pts), jnp.asarray(cents), jnp.asarray(gids), 1))[:, 0]
+    d = np.asarray(ref.pairwise_sq_dist(jnp.asarray(pts), jnp.asarray(cents)))
+    np.testing.assert_allclose(got, d.min(axis=1), rtol=1e-4, atol=1e-4)
+
+
+def test_empty_group_is_inf(rng):
+    pts = rng.randn(TILE, 6).astype(np.float32)
+    cents = rng.randn(4, 6).astype(np.float32)
+    gids = np.zeros(4, dtype=np.int32)  # group 1 of 2 is empty
+    got = np.asarray(groupmin.group_min(
+        jnp.asarray(pts), jnp.asarray(cents), jnp.asarray(gids), 2))
+    assert np.isfinite(got[:, 0]).all()
+    assert np.isinf(got[:, 1]).all()
+
+
+def test_group_min_lower_bounds_member_distances(rng):
+    """Invariant: out[n, g] <= d(n, c) for every centroid c in group g."""
+    pts = rng.randn(TILE, 10).astype(np.float32)
+    cents = rng.randn(12, 10).astype(np.float32)
+    gids = (np.arange(12) % 3).astype(np.int32)
+    gm = np.asarray(groupmin.group_min(
+        jnp.asarray(pts), jnp.asarray(cents), jnp.asarray(gids), 3))
+    d = np.asarray(ref.pairwise_sq_dist(jnp.asarray(pts), jnp.asarray(cents)))
+    for c in range(12):
+        assert (gm[:, gids[c]] <= d[:, c] + 1e-3).all()

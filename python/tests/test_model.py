@@ -1,0 +1,90 @@
+"""L2 correctness: the JAX K-means graphs vs. the oracle and vs. physics
+(inertia monotonicity, convergence on separable data)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import distance, ref
+from tests.conftest import make_blobs
+
+TILE = distance.DEFAULT_TILE_N
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(2, 80), k=st.integers(2, 32), seed=st.integers(0, 2**31 - 1))
+def test_kmeans_step_matches_oracle(d, k, seed):
+    rng = np.random.RandomState(seed)
+    pts = jnp.asarray(rng.randn(TILE, d).astype(np.float32))
+    cents = jnp.asarray(rng.randn(k, d).astype(np.float32))
+    new_c, idx, counts, inertia = model.kmeans_step(pts, cents)
+    ref_c, ref_idx, ref_counts, ref_inertia = ref.lloyd_step(pts, cents)
+    # Assignment near-ties can flip a point; tolerate by comparing where
+    # assignments agree and requiring the overall inertia to match closely.
+    agree = np.asarray(idx) == np.asarray(ref_idx)
+    assert agree.mean() > 0.99
+    if agree.all():
+        np.testing.assert_allclose(np.asarray(new_c), np.asarray(ref_c),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(counts), np.asarray(ref_counts))
+    np.testing.assert_allclose(float(inertia), float(ref_inertia),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_empty_cluster_keeps_centroid(rng):
+    pts, _, _ = make_blobs(rng, TILE, 8, 2)
+    # Put one centroid impossibly far away: it must receive no points and
+    # stay exactly where it was.
+    far = np.full((1, 8), 1e6, dtype=np.float32)
+    near = pts[:2].copy()
+    cents = jnp.asarray(np.concatenate([near, far]))
+    new_c, _idx, counts, _ = model.kmeans_step(jnp.asarray(pts), cents)
+    assert float(counts[2]) == 0.0
+    np.testing.assert_array_equal(np.asarray(new_c)[2], far[0])
+
+
+def test_kmeans_run_inertia_monotone(rng):
+    pts, centers, _ = make_blobs(rng, TILE, 16, 4, spread=0.5)
+    init = jnp.asarray(pts[:4].copy())
+    _, _, inertias = model.kmeans_run(jnp.asarray(pts), init, 12)
+    traj = np.asarray(inertias)
+    assert (np.diff(traj) <= 1e-2 * np.abs(traj[:-1]) + 1e-3).all(), \
+        f"inertia must be non-increasing, got {traj}"
+
+
+def test_kmeans_run_converges_on_separable_blobs(rng):
+    pts, centers, labels = make_blobs(rng, TILE, 8, 4, spread=0.02, sep=10.0)
+    # Seed with one true member per cluster so Lloyd provably recovers them.
+    seeds = np.stack([pts[labels == j][0] for j in range(4)])
+    final_c, idx, _ = model.kmeans_run(jnp.asarray(pts), jnp.asarray(seeds), 10)
+    final_c = np.asarray(final_c)
+    # Each recovered centroid must be near a distinct true center.
+    d = np.linalg.norm(final_c[:, None, :] - centers[None], axis=-1)
+    matched = d.argmin(axis=1)
+    assert len(set(matched.tolist())) == 4
+    assert d.min(axis=1).max() < 0.1
+    # And assignments must reproduce the generating labels up to the match.
+    remap = {j: matched[j] for j in range(4)}
+    got = np.array([remap[int(a)] for a in np.asarray(idx)])
+    assert (got == labels).mean() == 1.0
+
+
+def test_kmeans_step_fixed_point(rng):
+    """At a converged solution, one more step must be a no-op."""
+    pts, _, _ = make_blobs(rng, TILE, 8, 4, spread=0.05, sep=8.0)
+    c = jnp.asarray(pts[:4].copy())
+    for _ in range(20):
+        c, _, _, _ = model.kmeans_step(jnp.asarray(pts), c)
+    c2, _, _, _ = model.kmeans_step(jnp.asarray(pts), c)
+    np.testing.assert_allclose(np.asarray(c2), np.asarray(c), rtol=1e-5, atol=1e-5)
+
+
+def test_entry_points_table_is_complete():
+    eps = model.entry_points(TILE, 8, 4, 2, 3)
+    assert set(eps) == {"assign", "group_min", "kmeans_step", "kmeans_run"}
+    for _name, (fn, args) in eps.items():
+        # Every entry must be traceable with its own example args.
+        import jax
+        jax.eval_shape(fn, *args)

@@ -1,0 +1,40 @@
+//! F5 — where the cycles go: DMA-in vs filter vs distance pipeline vs PS
+//! update, plus the double-buffering overlap gain.
+//!
+//! Expected shape: low-d datasets (roadnetwork) are stream-dominated; the
+//! filter keeps the pipeline share small everywhere after iteration 1;
+//! overlap gain > 1 shows the double-buffered AXIS schedule hiding
+//! transfer behind compute, exactly what the BRAM double-buffers pay for.
+
+use kpynq::harness;
+use kpynq::hw::AccelConfig;
+use kpynq::kmeans::KMeansConfig;
+use kpynq::util::bench::Table;
+
+fn bench_points() -> usize {
+    std::env::var("KPYNQ_BENCH_POINTS").ok().and_then(|v| v.parse().ok()).unwrap_or(12_000)
+}
+
+fn main() {
+    println!("== F5: iteration cycle breakdown (simulated XC7Z020, filters on) ==");
+    let suite = harness::bench_suite(2019, bench_points());
+    let kcfg = KMeansConfig { k: 16, seed: 7, max_iters: 60, ..Default::default() };
+    let acfg = AccelConfig::default();
+
+    let mut t = Table::new(&[
+        "dataset", "dma-in", "filter", "pipeline", "ps-update", "overlap gain",
+    ]);
+    for ds in &suite {
+        let row = harness::dma_breakdown_row(ds, &kcfg, &acfg).unwrap();
+        t.row(vec![
+            row.dataset.clone(),
+            format!("{:.1}%", row.dma_in_frac * 100.0),
+            format!("{:.1}%", row.filter_frac * 100.0),
+            format!("{:.1}%", row.pipeline_frac * 100.0),
+            format!("{:.1}%", row.ps_update_frac * 100.0),
+            format!("{:.2}x", row.overlap_gain),
+        ]);
+    }
+    t.print();
+    println!("(stage shares of serial cycle sum; overlap gain = serial / makespan)");
+}

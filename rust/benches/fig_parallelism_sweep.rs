@@ -1,0 +1,51 @@
+//! F3 — "tunable parameters (e.g. degree of parallelism) … handle various
+//! datasets": lane-count sweep on the XC7Z020 with the resource gate.
+//!
+//! Expected shape: simulated time improves with lanes until either (a) the
+//! AXIS/DMA stream or the filter stage becomes the bottleneck — the knee —
+//! or (b) the configuration stops fitting the part (DSP or BRAM binds).
+//! Low-d datasets knee early (stream-bound); high-d datasets keep scaling
+//! longer (compute-bound).
+
+use kpynq::harness;
+use kpynq::hw::ZynqPart;
+use kpynq::kmeans::KMeansConfig;
+use kpynq::util::bench::Table;
+
+fn bench_points() -> usize {
+    std::env::var("KPYNQ_BENCH_POINTS").ok().and_then(|v| v.parse().ok()).unwrap_or(12_000)
+}
+
+fn main() {
+    println!("== F3: degree-of-parallelism sweep on XC7Z020 (mac_width = 4) ==");
+    let suite = harness::bench_suite(2019, bench_points());
+    let kcfg = KMeansConfig { k: 16, seed: 7, max_iters: 60, ..Default::default() };
+    let part = ZynqPart::xc7z020();
+
+    for ds in &suite {
+        println!("dataset {} (n={}, d={}):", ds.name, ds.n(), ds.d());
+        let mut t = Table::new(&["lanes", "DSP", "BRAM_18K", "fits", "cycles", "speedup vs P=1"]);
+        let mut base: Option<u64> = None;
+        for lanes in [1u64, 2, 4, 8, 16, 32, 64] {
+            let p = harness::parallelism_point(ds, &kcfg, lanes, 4, &part).unwrap();
+            let (cyc, spd) = match p.cycles {
+                Some(c) => {
+                    if base.is_none() {
+                        base = Some(c);
+                    }
+                    (c.to_string(), format!("{:.2}x", base.unwrap() as f64 / c as f64))
+                }
+                None => ("-".into(), "-".into()),
+            };
+            t.row(vec![
+                lanes.to_string(),
+                p.dsp.to_string(),
+                p.bram.to_string(),
+                if p.fits { "yes".into() } else { "NO".into() },
+                cyc,
+                spd,
+            ]);
+        }
+        t.print();
+    }
+}

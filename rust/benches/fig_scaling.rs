@@ -1,0 +1,89 @@
+//! F4 — "large-size, high-dimension datasets": speedup vs. the CPU
+//! baseline over an (n, d, k) grid of synthetic mixtures.
+//!
+//! Expected shape: speedup grows with d (the filter saves O(d) work per
+//! skipped distance while bound checks stay O(1)) and with k (more
+//! centroids to skip); it is flattest for tiny d where the AXIS stream
+//! dominates — matching the paper's focus on large/high-dimension data.
+
+use kpynq::data::synth::MixtureSpec;
+use kpynq::data::normalize;
+use kpynq::harness;
+use kpynq::hw::AccelConfig;
+use kpynq::kmeans::KMeansConfig;
+use kpynq::util::bench::Table;
+
+fn scale(base: usize) -> usize {
+    let cap: usize = std::env::var("KPYNQ_BENCH_POINTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12_000);
+    base.min(cap)
+}
+
+fn grid_dataset(n: usize, d: usize, seed: u64) -> kpynq::data::Dataset {
+    let mut ds = MixtureSpec {
+        name: "grid",
+        n,
+        d,
+        modes: 24,
+        center_spread: 8.0,
+        noise_frac: 0.15,
+        imbalance: 0.3,
+        active_dims_frac: 0.8,
+    }
+    .generate(seed);
+    normalize::min_max(&mut ds);
+    ds
+}
+
+fn main() {
+    println!("== F4: scaling with n, d, k (speedup vs CPU standard K-means) ==");
+    let acfg = AccelConfig::default();
+    let cpu = harness::default_cpu();
+
+    println!("-- dimensionality sweep (n = {}, k = 16) --", scale(12_000));
+    let mut t = Table::new(&["d", "speedup", "work ratio", "energy-eff"]);
+    for d in [2usize, 8, 32, 64, 128] {
+        let ds = grid_dataset(scale(12_000), d, 31);
+        let kcfg = KMeansConfig { k: 16, seed: 7, max_iters: 60, ..Default::default() };
+        let r = harness::speedup_energy_row(&ds, &kcfg, &acfg, &cpu).unwrap();
+        t.row(vec![
+            d.to_string(),
+            format!("{:.2}x", r.speedup),
+            format!("{:.1}%", r.work_ratio * 100.0),
+            format!("{:.1}x", r.energy_efficiency),
+        ]);
+    }
+    t.print();
+
+    println!("-- cluster-count sweep (n = {}, d = 32) --", scale(12_000));
+    let mut t = Table::new(&["k", "groups", "speedup", "work ratio"]);
+    for k in [4usize, 16, 64] {
+        let ds = grid_dataset(scale(12_000), 32, 37);
+        let kcfg = KMeansConfig { k, seed: 7, max_iters: 60, ..Default::default() };
+        let r = harness::speedup_energy_row(&ds, &kcfg, &acfg, &cpu).unwrap();
+        t.row(vec![
+            k.to_string(),
+            kcfg.effective_groups().to_string(),
+            format!("{:.2}x", r.speedup),
+            format!("{:.1}%", r.work_ratio * 100.0),
+        ]);
+    }
+    t.print();
+
+    println!("-- size sweep (d = 32, k = 16) --");
+    let mut t = Table::new(&["n", "speedup", "sim ms", "cpu ms"]);
+    for n in [2_000usize, 8_000, 32_000] {
+        let ds = grid_dataset(n, 32, 41);
+        let kcfg = KMeansConfig { k: 16, seed: 7, max_iters: 60, ..Default::default() };
+        let r = harness::speedup_energy_row(&ds, &kcfg, &acfg, &cpu).unwrap();
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}x", r.speedup),
+            format!("{:.2}", r.fpga_seconds * 1e3),
+            format!("{:.2}", r.cpu_seconds * 1e3),
+        ]);
+    }
+    t.print();
+}

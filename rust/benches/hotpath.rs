@@ -1,0 +1,93 @@
+//! Hot-path microbenchmarks — the §Perf anchor (EXPERIMENTS.md §Perf).
+//!
+//! Real wall-clock on this host for the L3 paths that dominate profiles:
+//!
+//! * `sq_dist` — the scalar distance kernel (vectorisation check);
+//! * `scan_all` — one point against k centroids;
+//! * software iterations — lloyd vs yinyang on a mid-size mixture;
+//! * the cycle simulator itself (host cost of a simulated fit);
+//! * coordinator tile dispatch through the native and XLA engines.
+//!
+//! Run before/after every optimisation; keep if >5% on the affected row.
+
+use std::path::PathBuf;
+
+use kpynq::coordinator::driver::run_with_engine;
+use kpynq::data::{normalize, synth};
+use kpynq::hw::{AccelConfig, Accelerator};
+use kpynq::kmeans::{self, init, Algorithm, KMeansConfig};
+use kpynq::runtime::native::NativeEngine;
+use kpynq::runtime::xla::XlaEngine;
+use kpynq::runtime::Engine;
+use kpynq::util::bench::{black_box, Bencher};
+use kpynq::util::matrix::sq_dist;
+
+fn main() {
+    let b = Bencher::default();
+    let e2e = Bencher::end_to_end();
+
+    // --- scalar kernels ---
+    let x: Vec<f32> = (0..128).map(|i| i as f32 * 0.01).collect();
+    let y: Vec<f32> = (0..128).map(|i| (128 - i) as f32 * 0.02).collect();
+    b.bench("sq_dist/d=128 (x1000)", || {
+        let mut acc = 0.0f32;
+        for _ in 0..1000 {
+            acc += sq_dist(black_box(&x), black_box(&y));
+        }
+        acc
+    });
+
+    let mut ds = synth::uci("mnist", 3).unwrap().subsample(20_000, 3);
+    normalize::min_max(&mut ds);
+    let kcfg = KMeansConfig { k: 16, seed: 7, max_iters: 25, ..Default::default() };
+    let cents = init::initialize(&ds, &kcfg).unwrap();
+    b.bench("scan_all/d=64,k=16 (x1000)", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            acc += kmeans::lloyd::scan_all(black_box(ds.points.row(i)), black_box(&cents)).0;
+        }
+        acc
+    });
+
+    // --- software algorithm end-to-end (the CPU comparator's real cost) ---
+    e2e.bench("fit/lloyd mnist@20k k=16", || {
+        kmeans::fit_from(Algorithm::Lloyd, &ds, &kcfg, cents.clone()).unwrap().iterations
+    });
+    e2e.bench("fit/yinyang mnist@20k k=16", || {
+        kmeans::fit_from(Algorithm::Yinyang, &ds, &kcfg, cents.clone()).unwrap().iterations
+    });
+    e2e.bench("fit/elkan mnist@20k k=16", || {
+        kmeans::fit_from(Algorithm::Elkan, &ds, &kcfg, cents.clone()).unwrap().iterations
+    });
+
+    // --- the simulator's own host cost ---
+    let acc = Accelerator::new(AccelConfig::default());
+    e2e.bench("simulate/fpga mnist@20k k=16", || {
+        acc.run_fit(&ds, &kcfg, cents.clone()).unwrap().total_cycles
+    });
+
+    // --- coordinator + engines ---
+    e2e.bench("coordinator/native mnist@20k k=16", || {
+        run_with_engine(&mut NativeEngine, &ds, &kcfg).unwrap().fit.iterations
+    });
+
+    let artifact_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match XlaEngine::new(&artifact_dir) {
+        Ok(mut eng) => {
+            // Warm the compile cache so the bench measures the request path.
+            let tile = ds.points.gather_rows(&(0..256).collect::<Vec<_>>());
+            eng.assign_tile(&tile, &cents).unwrap();
+            b.bench("engine/xla assign_tile 256x64 k=16", || {
+                eng.assign_tile(black_box(&tile), black_box(&cents)).unwrap().idx[0]
+            });
+            let mut native = NativeEngine;
+            b.bench("engine/native assign_tile 256x64 k=16", || {
+                native.assign_tile(black_box(&tile), black_box(&cents)).unwrap().idx[0]
+            });
+            e2e.bench("coordinator/xla mnist@20k k=16", || {
+                run_with_engine(&mut eng, &ds, &kcfg).unwrap().fit.iterations
+            });
+        }
+        Err(e) => println!("xla benches skipped: {e}"),
+    }
+}

@@ -1,0 +1,51 @@
+//! T2 — "150.90× better energy-efficiency on average … up to 218×".
+//!
+//! Same runs as T1, energy view: E_cpu / E_fpga with the calibrated power
+//! model (§hw::energy — the paper's numbers imply a ~51× power ratio;
+//! energy-efficiency ≈ speedup × power ratio).
+
+use kpynq::harness;
+use kpynq::hw::energy::PowerModel;
+use kpynq::hw::AccelConfig;
+use kpynq::kmeans::KMeansConfig;
+use kpynq::util::bench::Table;
+use kpynq::util::stats::geomean;
+
+fn bench_points() -> usize {
+    std::env::var("KPYNQ_BENCH_POINTS").ok().and_then(|v| v.parse().ok()).unwrap_or(12_000)
+}
+
+fn main() {
+    println!("== T2: energy-efficiency vs optimized CPU standard K-means ==");
+    let suite = harness::bench_suite(2019, bench_points());
+    let kcfg = KMeansConfig { k: 16, seed: 7, max_iters: 100, ..Default::default() };
+    let acfg = AccelConfig::default();
+    let cpu = harness::default_cpu();
+    let power = PowerModel::default();
+
+    let mut t = Table::new(&[
+        "dataset", "cpu (J)", "kpynq (J)", "energy-eff", "speedup", "board W",
+    ]);
+    let mut effs = Vec::new();
+    for ds in &suite {
+        let row = harness::speedup_energy_row(ds, &kcfg, &acfg, &cpu).unwrap();
+        effs.push(row.energy_efficiency);
+        t.row(vec![
+            row.dataset.clone(),
+            format!("{:.3}", row.cpu_joules),
+            format!("{:.5}", row.fpga_joules),
+            format!("{:.1}x", row.energy_efficiency),
+            format!("{:.2}x", row.speedup),
+            format!("{:.2}", row.fpga_joules / row.fpga_seconds.max(1e-12)),
+        ]);
+    }
+    t.print();
+    println!(
+        "geomean energy-eff {:.1}x (max {:.1}x) | operating-point power ratio {:.1}x",
+        geomean(&effs),
+        effs.iter().cloned().fold(0.0, f64::max),
+        power.operating_power_ratio()
+    );
+    println!("paper: avg 150.90x, max 218x (implied power ratio ~51x)");
+    assert!(effs.iter().all(|&e| e > 10.0), "energy-efficiency must be large");
+}

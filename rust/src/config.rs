@@ -1,0 +1,297 @@
+//! Run configuration: the launcher's surface.
+//!
+//! A [`RunConfig`] fully describes one clustering job — dataset, algorithm
+//! parameters, backend and accelerator geometry — and can be loaded from a
+//! TOML file (subset grammar, `util::toml`) or built programmatically.
+//! `kpynq init-config` prints [`EXAMPLE`] as a starting point.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::Backend;
+use crate::error::{Error, Result};
+use crate::hw::{AccelConfig, ZynqPart};
+use crate::kmeans::{Algorithm, InitMethod, KMeansConfig};
+use crate::util::toml::{self, Value};
+
+/// A complete run description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Dataset name: one of the six UCI-equivalents, `blobs`, `uniform`,
+    /// or a path to a `.kpm` / `.csv` file.
+    pub dataset: String,
+    /// Generator seed (synthetic datasets).
+    pub data_seed: u64,
+    /// Subsample cap (0 = use everything).
+    pub max_points: usize,
+    /// Normalisation: "minmax", "zscore" or "none".
+    pub normalize: String,
+    /// Which software algorithm `kpynq run --software` uses.
+    pub algorithm: Algorithm,
+    pub kmeans: KMeansConfig,
+    /// Backend: "fpga-sim", "native" or "xla".
+    pub backend_name: String,
+    pub artifact_dir: PathBuf,
+    /// Accelerator geometry (fpga-sim backend).
+    pub lanes: u64,
+    pub mac_width: u64,
+    pub tile_points: usize,
+    pub enable_filters: bool,
+    /// Part: "xc7z020" or "zu7ev".
+    pub part: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        let accel = AccelConfig::default();
+        Self {
+            dataset: "blobs".into(),
+            data_seed: 0xC0FFEE,
+            max_points: 0,
+            normalize: "minmax".into(),
+            algorithm: Algorithm::Yinyang,
+            kmeans: KMeansConfig::default(),
+            backend_name: "fpga-sim".into(),
+            artifact_dir: PathBuf::from("artifacts"),
+            lanes: accel.pipeline.lanes,
+            mac_width: accel.pipeline.mac_width,
+            tile_points: accel.tile_points,
+            enable_filters: true,
+            part: "xc7z020".into(),
+        }
+    }
+}
+
+/// Example config printed by `kpynq init-config`.
+pub const EXAMPLE: &str = r#"# KPynq run configuration
+dataset = "kegg"        # gassensor|kegg|roadnetwork|uscensus|covtype|mnist|blobs|uniform|<file>
+data_seed = 12648430
+max_points = 0           # 0 = full dataset
+normalize = "minmax"     # minmax|zscore|none
+
+[kmeans]
+k = 16
+groups = 0               # 0 = auto (ceil(k/10))
+max_iters = 100
+tol = 1e-4
+seed = 12648430
+init = "kmeans++"        # kmeans++|random
+algorithm = "yinyang"    # lloyd|hamerly|elkan|yinyang (software runs)
+
+[backend]
+name = "fpga-sim"        # fpga-sim|native|xla
+artifact_dir = "artifacts"
+
+[accelerator]
+lanes = 4
+mac_width = 4
+tile_points = 256
+enable_filters = true
+part = "xc7z020"         # xc7z020|zu7ev
+"#;
+
+impl RunConfig {
+    /// Load from a TOML-subset file.
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let doc = toml::parse(text)?;
+        let mut cfg = RunConfig::default();
+
+        let get = |sec: &str, key: &str| -> Option<&Value> { toml::get(&doc, sec, key) };
+
+        if let Some(v) = get("", "dataset") {
+            cfg.dataset = v.as_str()?.to_string();
+        }
+        if let Some(v) = get("", "data_seed") {
+            cfg.data_seed = v.as_i64()? as u64;
+        }
+        if let Some(v) = get("", "max_points") {
+            cfg.max_points = v.as_usize()?;
+        }
+        if let Some(v) = get("", "normalize") {
+            cfg.normalize = v.as_str()?.to_string();
+        }
+
+        if let Some(v) = get("kmeans", "k") {
+            cfg.kmeans.k = v.as_usize()?;
+        }
+        if let Some(v) = get("kmeans", "groups") {
+            cfg.kmeans.groups = v.as_usize()?;
+        }
+        if let Some(v) = get("kmeans", "max_iters") {
+            cfg.kmeans.max_iters = v.as_usize()?;
+        }
+        if let Some(v) = get("kmeans", "tol") {
+            cfg.kmeans.tol = v.as_f64()?;
+        }
+        if let Some(v) = get("kmeans", "seed") {
+            cfg.kmeans.seed = v.as_i64()? as u64;
+        }
+        if let Some(v) = get("kmeans", "init") {
+            cfg.kmeans.init = match v.as_str()? {
+                "kmeans++" => InitMethod::KMeansPlusPlus,
+                "random" => InitMethod::RandomPoints,
+                other => {
+                    return Err(Error::Config(format!("unknown init '{other}'")));
+                }
+            };
+        }
+        if let Some(v) = get("kmeans", "algorithm") {
+            cfg.algorithm = Algorithm::from_name(v.as_str()?)?;
+        }
+
+        if let Some(v) = get("backend", "name") {
+            cfg.backend_name = v.as_str()?.to_string();
+        }
+        if let Some(v) = get("backend", "artifact_dir") {
+            cfg.artifact_dir = PathBuf::from(v.as_str()?);
+        }
+
+        if let Some(v) = get("accelerator", "lanes") {
+            cfg.lanes = v.as_i64()? as u64;
+        }
+        if let Some(v) = get("accelerator", "mac_width") {
+            cfg.mac_width = v.as_i64()? as u64;
+        }
+        if let Some(v) = get("accelerator", "tile_points") {
+            cfg.tile_points = v.as_usize()?;
+        }
+        if let Some(v) = get("accelerator", "enable_filters") {
+            cfg.enable_filters = v.as_bool()?;
+        }
+        if let Some(v) = get("accelerator", "part") {
+            cfg.part = v.as_str()?.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self.normalize.as_str() {
+            "minmax" | "zscore" | "none" => {}
+            other => return Err(Error::Config(format!("unknown normalize '{other}'"))),
+        }
+        match self.backend_name.as_str() {
+            "fpga-sim" | "native" | "xla" => {}
+            other => return Err(Error::Config(format!("unknown backend '{other}'"))),
+        }
+        match self.part.as_str() {
+            "xc7z020" | "zu7ev" => {}
+            other => return Err(Error::Config(format!("unknown part '{other}'"))),
+        }
+        if self.lanes == 0 || self.mac_width == 0 || self.tile_points == 0 {
+            return Err(Error::Config("lanes/mac_width/tile_points must be positive".into()));
+        }
+        Ok(())
+    }
+
+    pub fn part(&self) -> ZynqPart {
+        match self.part.as_str() {
+            "zu7ev" => ZynqPart::zu7ev(),
+            _ => ZynqPart::xc7z020(),
+        }
+    }
+
+    /// Build the accelerator config described by this run config.
+    pub fn accel_config(&self) -> AccelConfig {
+        AccelConfig {
+            pipeline: crate::hw::pipeline::PipelineConfig {
+                lanes: self.lanes,
+                mac_width: self.mac_width,
+            },
+            tile_points: self.tile_points,
+            enable_filters: self.enable_filters,
+            part: self.part(),
+            ..Default::default()
+        }
+    }
+
+    /// Build the system backend described by this run config.
+    pub fn backend(&self) -> Backend {
+        match self.backend_name.as_str() {
+            "native" => Backend::Native,
+            "xla" => Backend::Xla { artifact_dir: self.artifact_dir.clone() },
+            _ => Backend::SimulatedFpga(Box::new(self.accel_config())),
+        }
+    }
+
+    /// Materialise the dataset this config names.
+    pub fn load_dataset(&self) -> Result<crate::data::Dataset> {
+        use crate::data::{io, normalize, synth, Dataset};
+        let mut ds: Dataset = if let Some(d) = synth::uci(&self.dataset, self.data_seed) {
+            d
+        } else if self.dataset == "blobs" {
+            synth::blobs(20_000, 16, self.kmeans.k.max(2), self.data_seed)
+        } else if self.dataset == "uniform" {
+            synth::uniform(20_000, 16, self.data_seed)
+        } else {
+            let path = Path::new(&self.dataset);
+            match path.extension().and_then(|e| e.to_str()) {
+                Some("kpm") => io::load("file", path)?,
+                Some("csv") => io::read_csv("file", path, true)?,
+                _ => {
+                    return Err(Error::Data(format!(
+                        "unknown dataset '{}' (not a generator, .kpm or .csv)",
+                        self.dataset
+                    )))
+                }
+            }
+        };
+        if self.max_points > 0 {
+            ds = ds.subsample(self.max_points, self.data_seed);
+        }
+        match self.normalize.as_str() {
+            "minmax" => normalize::min_max(&mut ds),
+            "zscore" => normalize::z_score(&mut ds),
+            _ => {}
+        }
+        ds.validate()?;
+        Ok(ds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_config_parses() {
+        let cfg = RunConfig::from_toml(EXAMPLE).unwrap();
+        assert_eq!(cfg.dataset, "kegg");
+        assert_eq!(cfg.kmeans.k, 16);
+        assert_eq!(cfg.algorithm, Algorithm::Yinyang);
+        assert_eq!(cfg.backend_name, "fpga-sim");
+        assert_eq!(cfg.lanes, 4);
+        assert!(cfg.enable_filters);
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RunConfig::from_toml("normalize = \"bogus\"").is_err());
+        assert!(RunConfig::from_toml("[backend]\nname = \"gpu\"").is_err());
+        assert!(RunConfig::from_toml("[kmeans]\ninit = \"fancy\"").is_err());
+        assert!(RunConfig::from_toml("[accelerator]\nlanes = 0").is_err());
+    }
+
+    #[test]
+    fn loads_small_synthetic_dataset() {
+        let cfg = RunConfig {
+            dataset: "blobs".into(),
+            max_points: 500,
+            ..Default::default()
+        };
+        let ds = cfg.load_dataset().unwrap();
+        assert_eq!(ds.n(), 500);
+        // minmax applied by default.
+        assert!(ds.points.as_slice().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

@@ -1,0 +1,261 @@
+//! The coordinator's run loop.
+//!
+//! For the FPGA backend the whole iteration structure lives inside
+//! `hw::Accelerator::run_fit`; this module wraps it into a [`RunReport`].
+//!
+//! For the engine backends (native / XLA) the coordinator itself plays the
+//! role the PS + filter unit share on the board, with the filter moved into
+//! the scheduler per DESIGN.md §Hardware-Adaptation:
+//!
+//! 1. iteration 1 — every tile is dispatched densely; bounds are seeded
+//!    from the engine's (best, second) results (Hamerly-style: one upper,
+//!    one lower bound per point — the point-level filter);
+//! 2. every later iteration — drifts are applied to the bounds on the
+//!    host, the global triangle-inequality test eliminates settled points
+//!    *without any distance work*, and only the survivors are compacted
+//!    into dense tiles for the engine, which rescans them fully and
+//!    refreshes their bounds exactly.
+//!
+//! Exactness argument: a filtered point provably keeps its assignment (the
+//! bound test is conservative, `bounds::filter_safe`); a surviving point
+//! gets the same full scan Lloyd would do. Centroid recomputation is the
+//! shared `kmeans::recompute_centroids`. Hence assignments equal Lloyd's
+//! at every iteration — the `coordinator_equivalence` integration test.
+
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::hw::{AccelConfig, Accelerator};
+use crate::kmeans::bounds::{deflate_lb, filter_safe, inflate_ub};
+use crate::kmeans::hamerly::half_nearest_other;
+use crate::kmeans::metrics::IterStats;
+use crate::kmeans::{
+    centroid_drifts, compute_inertia, init, recompute_centroids, FitResult, KMeansConfig,
+    RunStats,
+};
+use crate::runtime::{native::NativeEngine, xla::XlaEngine, Engine};
+
+use super::scheduler;
+use super::telemetry::RunReport;
+use super::{Backend, SystemConfig, SystemOutput};
+
+/// Default tile size for engine dispatch — matches the AOT tile so the XLA
+/// engine never splits a scheduler tile.
+pub const ENGINE_TILE: usize = 256;
+
+/// Run one clustering job on the configured backend.
+pub fn run(sys: &SystemConfig, ds: &Dataset, kcfg: &KMeansConfig) -> Result<SystemOutput> {
+    match &sys.backend {
+        Backend::SimulatedFpga(acfg) => run_fpga(acfg, ds, kcfg),
+        Backend::Native => run_engine(&mut NativeEngine, "native", ds, kcfg),
+        Backend::Xla { artifact_dir } => {
+            let mut eng = XlaEngine::new(artifact_dir)?;
+            run_engine(&mut eng, "xla-pjrt", ds, kcfg)
+        }
+    }
+}
+
+fn run_fpga(acfg: &AccelConfig, ds: &Dataset, kcfg: &KMeansConfig) -> Result<SystemOutput> {
+    let t0 = Instant::now();
+    let init_c = init::initialize(ds, kcfg)?;
+    let acc = Accelerator::new(acfg.clone());
+    let run = acc.run_fit(ds, kcfg, init_c)?;
+    let report = RunReport {
+        backend: "fpga-sim".into(),
+        total_cycles: run.total_cycles,
+        sim_seconds: run.seconds,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        iter_cycles: run.iters.clone(),
+        pipeline_utilization: run.pipeline_utilization,
+        dma_bytes: run.dma_bytes,
+        tiles_dispatched: 0,
+        points_rescanned: run.fit.stats.iters.iter().map(|i| i.survivors).sum(),
+    };
+    Ok(SystemOutput { fit: run.fit, report })
+}
+
+/// The engine-backed coordinator loop (host filtering + dense tiles).
+fn run_engine(
+    engine: &mut dyn Engine,
+    backend_name: &str,
+    ds: &Dataset,
+    kcfg: &KMeansConfig,
+) -> Result<SystemOutput> {
+    kcfg.validate(ds.n())?;
+    ds.validate()?;
+    let t0 = Instant::now();
+    let n = ds.n();
+    let k = kcfg.k;
+    let mut centroids = init::initialize(ds, kcfg)?;
+
+    let mut assignments = vec![0u32; n];
+    let mut ub = vec![0.0f32; n];
+    let mut lb = vec![0.0f32; n];
+    let mut stats = RunStats::default();
+    let mut tiles_dispatched = 0u64;
+    let mut points_rescanned = 0u64;
+    let mut converged = false;
+    let mut iterations = 0usize;
+
+    // ---- Iteration 1: dense dispatch of the whole dataset ----
+    // One engine call: the engine splits into kernel tiles internally, so
+    // per-call setup (centroid padding + literal upload on the XLA path)
+    // is paid once per iteration, not once per tile (§Perf).
+    {
+        iterations += 1;
+        let mut it = IterStats::default();
+        let out = engine.assign_tile(&ds.points, &centroids)?;
+        tiles_dispatched += n.div_ceil(ENGINE_TILE) as u64;
+        for i in 0..n {
+            assignments[i] = out.idx[i];
+            ub[i] = out.best[i].max(0.0).sqrt();
+            lb[i] = if out.second[i].is_finite() {
+                out.second[i].max(0.0).sqrt()
+            } else {
+                f32::INFINITY
+            };
+        }
+        points_rescanned += n as u64;
+        it.dist_comps = (n as u64) * (k as u64);
+        it.survivors = n as u64;
+        it.reassigned = n as u64;
+        let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
+        let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
+        centroids = new_c;
+        it.max_drift = max_drift;
+        stats.push(it);
+        if (max_drift as f64) <= kcfg.tol {
+            converged = true;
+        } else {
+            for i in 0..n {
+                ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
+                lb[i] = deflate_lb(lb[i], max_drift);
+            }
+        }
+    }
+
+    // ---- Filtered iterations: compacted survivor tiles ----
+    while !converged && iterations < kcfg.max_iters {
+        iterations += 1;
+        let mut it = IterStats::default();
+
+        // Inter-centroid guard (k² on the host — cheap next to n·k).
+        let (s_half, pair_comps) = half_nearest_other(&centroids);
+        it.dist_comps += pair_comps;
+
+        let mut survivors = Vec::new();
+        for i in 0..n {
+            let guard = lb[i].max(s_half[assignments[i] as usize]);
+            if filter_safe(guard, ub[i]) {
+                it.filtered_global += 1;
+            } else {
+                survivors.push(i);
+            }
+        }
+        it.survivors = survivors.len() as u64;
+        points_rescanned += survivors.len() as u64;
+
+        // Compact all survivors into one dense matrix and dispatch once;
+        // scheduler::compact documents the tiling invariants the engines
+        // rely on (ascending order ⇒ cache-friendly gather).
+        let tiles = scheduler::compact(survivors, ENGINE_TILE);
+        if !tiles.is_empty() {
+            let order: Vec<usize> =
+                tiles.iter().flat_map(|t| t.indices.iter().copied()).collect();
+            let pts = ds.points.gather_rows(&order);
+            let out = engine.assign_tile(&pts, &centroids)?;
+            tiles_dispatched += tiles.len() as u64;
+            it.dist_comps += (order.len() * k) as u64;
+            for (j, &i) in order.iter().enumerate() {
+                if assignments[i] != out.idx[j] {
+                    it.reassigned += 1;
+                    assignments[i] = out.idx[j];
+                }
+                ub[i] = out.best[j].max(0.0).sqrt();
+                lb[i] = if out.second[j].is_finite() {
+                    out.second[j].max(0.0).sqrt()
+                } else {
+                    f32::INFINITY
+                };
+            }
+        }
+
+        let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
+        let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
+        centroids = new_c;
+        it.max_drift = max_drift;
+        stats.push(it);
+
+        if (max_drift as f64) <= kcfg.tol {
+            converged = true;
+        } else {
+            for i in 0..n {
+                ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
+                lb[i] = deflate_lb(lb[i], max_drift);
+            }
+        }
+    }
+
+    let inertia = compute_inertia(ds, &centroids, &assignments);
+    let fit = FitResult { centroids, assignments, inertia, iterations, converged, stats };
+    let report = RunReport {
+        backend: backend_name.into(),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        tiles_dispatched,
+        points_rescanned,
+        ..Default::default()
+    };
+    Ok(SystemOutput { fit, report })
+}
+
+/// Convenience for tests/benches: run the engine loop with an explicit
+/// engine instance (bypasses `SystemConfig`).
+pub fn run_with_engine(
+    engine: &mut dyn Engine,
+    ds: &Dataset,
+    kcfg: &KMeansConfig,
+) -> Result<SystemOutput> {
+    let name = engine.name();
+    run_engine(engine, name, ds, kcfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{self, Algorithm};
+
+    #[test]
+    fn native_engine_loop_matches_lloyd() {
+        let ds = synth::blobs(700, 9, 4, 3);
+        let kcfg = KMeansConfig { k: 4, seed: 13, ..Default::default() };
+        let direct = kmeans::fit(Algorithm::Lloyd, &ds, &kcfg).unwrap();
+        let out = run_with_engine(&mut NativeEngine, &ds, &kcfg).unwrap();
+        assert_eq!(direct.assignments, out.fit.assignments);
+        assert_eq!(direct.centroids, out.fit.centroids);
+        assert_eq!(direct.iterations, out.fit.iterations);
+        assert!(out.report.tiles_dispatched > 0);
+    }
+
+    #[test]
+    fn filtering_reduces_rescans() {
+        let ds = synth::blobs(4000, 8, 6, 9);
+        let kcfg = KMeansConfig { k: 6, seed: 3, max_iters: 50, ..Default::default() };
+        let out = run_with_engine(&mut NativeEngine, &ds, &kcfg).unwrap();
+        let dense = (ds.n() * out.fit.iterations) as u64;
+        assert!(
+            out.report.points_rescanned < dense,
+            "rescans {} should be under dense {}",
+            out.report.points_rescanned,
+            dense
+        );
+    }
+
+    #[test]
+    fn engine_tile_matches_aot_tile() {
+        // The scheduler tile must equal the AOT kernel tile so the XLA
+        // engine never pads mid-run (checked against the python constant).
+        assert_eq!(ENGINE_TILE, 256);
+    }
+}

@@ -1,0 +1,133 @@
+//! The KPynq system layer: what the PS-side host does.
+//!
+//! In the paper a Python program on the ARM PS "is responsible for invoking
+//! the PL part hardware accelerator and initiate the DMA data transfer".
+//! Here the host is Rust, and it drives one of three backends:
+//!
+//! * [`Backend::SimulatedFpga`] — the cycle-approximate Zynq accelerator
+//!   (`hw::Accelerator`): the paper's system, timing and all.
+//! * [`Backend::Native`] — filtering on the host + dense survivor tiles on
+//!   the in-process Rust engine. This is the measured (wall-clock) hot
+//!   path that the §Perf pass optimises.
+//! * [`Backend::Xla`] — same scheduling, but tiles execute on the
+//!   AOT-compiled Pallas kernel through PJRT (`runtime::xla`) — the
+//!   TPU-adaptation path of DESIGN.md §Hardware-Adaptation, Python-free
+//!   at run time.
+//!
+//! All three produce identical clusterings for the same seed (asserted by
+//! the `coordinator_equivalence` integration tests): filters are
+//! conservative and distances tie-break identically everywhere.
+
+pub mod buffer;
+pub mod driver;
+pub mod scheduler;
+pub mod telemetry;
+
+use std::path::PathBuf;
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::hw::AccelConfig;
+use crate::kmeans::{FitResult, KMeansConfig};
+
+pub use telemetry::RunReport;
+
+/// Which execution backend the system drives.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// Cycle-approximate Zynq accelerator simulation.
+    SimulatedFpga(Box<AccelConfig>),
+    /// Host filtering + native Rust tile engine (measured wall-clock).
+    Native,
+    /// Host filtering + AOT Pallas/XLA tile engine (measured wall-clock).
+    Xla { artifact_dir: PathBuf },
+}
+
+impl Default for Backend {
+    fn default() -> Self {
+        Backend::SimulatedFpga(Box::new(AccelConfig::default()))
+    }
+}
+
+/// System-level configuration.
+#[derive(Clone, Debug, Default)]
+pub struct SystemConfig {
+    pub backend: Backend,
+    /// Verify the final clustering against a direct Lloyd run (slow; used
+    /// by examples and tests, not benchmarks).
+    pub verify: bool,
+}
+
+/// A fit plus the system-level report.
+#[derive(Clone, Debug)]
+pub struct SystemOutput {
+    pub fit: FitResult,
+    pub report: RunReport,
+}
+
+/// The KPynq system.
+pub struct KpynqSystem {
+    cfg: SystemConfig,
+}
+
+impl KpynqSystem {
+    pub fn new(cfg: SystemConfig) -> Result<Self> {
+        Ok(Self { cfg })
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// Cluster a dataset. Initialisation is deterministic in
+    /// `kcfg.seed`, so any backend (and the pure-software algorithms)
+    /// started from the same config agree exactly.
+    pub fn cluster(&self, ds: &Dataset, kcfg: &KMeansConfig) -> Result<SystemOutput> {
+        let out = driver::run(&self.cfg, ds, kcfg)?;
+        if self.cfg.verify {
+            let direct = crate::kmeans::fit(crate::kmeans::Algorithm::Lloyd, ds, kcfg)?;
+            if direct.assignments != out.fit.assignments {
+                return Err(crate::error::Error::Config(format!(
+                    "verification failed: backend disagrees with Lloyd on {} points",
+                    direct
+                        .assignments
+                        .iter()
+                        .zip(&out.fit.assignments)
+                        .filter(|(a, b)| a != b)
+                        .count()
+                )));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn default_system_clusters_blobs() {
+        let ds = synth::blobs(1200, 8, 4, 3);
+        let sys = KpynqSystem::new(SystemConfig::default()).unwrap();
+        let kcfg = KMeansConfig { k: 4, seed: 11, ..Default::default() };
+        let out = sys.cluster(&ds, &kcfg).unwrap();
+        assert!(out.fit.converged);
+        assert_eq!(out.fit.assignments.len(), 1200);
+        assert!(out.report.total_cycles > 0);
+    }
+
+    #[test]
+    fn verify_mode_accepts_exact_backend() {
+        let ds = synth::blobs(600, 6, 3, 7);
+        let sys = KpynqSystem::new(SystemConfig {
+            backend: Backend::Native,
+            verify: true,
+        })
+        .unwrap();
+        let kcfg = KMeansConfig { k: 3, seed: 5, ..Default::default() };
+        let out = sys.cluster(&ds, &kcfg).unwrap();
+        assert!(out.fit.converged);
+    }
+}

@@ -1,0 +1,94 @@
+//! Tile scheduling: partitioning and survivor compaction.
+//!
+//! The accelerator (and the PJRT kernel) consume fixed-size dense tiles.
+//! The scheduler produces two plans:
+//!
+//! * [`partition`] — split `0..n` into contiguous tiles for full-scan
+//!   iterations (iteration 1, or filters disabled);
+//! * [`compact`] — pack a sparse survivor set into dense tiles, the
+//!   batch-level-sparsity trick of DESIGN.md §Hardware-Adaptation: the
+//!   filter eliminates points on the host, the engine only ever sees dense
+//!   work.
+//!
+//! Invariants (property-tested in `rust/tests/proptest_coordinator.rs`):
+//! every index appears in exactly one tile, order within a tile is
+//! ascending, and no tile exceeds the configured size.
+
+/// A tile of point indices (dense, ascending).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tile {
+    pub indices: Vec<usize>,
+}
+
+/// Contiguous partition of `0..n` into tiles of at most `tile_size`.
+pub fn partition(n: usize, tile_size: usize) -> Vec<Tile> {
+    assert!(tile_size > 0, "tile_size must be positive");
+    let mut out = Vec::with_capacity(n.div_ceil(tile_size));
+    let mut start = 0;
+    while start < n {
+        let end = (start + tile_size).min(n);
+        out.push(Tile { indices: (start..end).collect() });
+        start = end;
+    }
+    out
+}
+
+/// Pack survivor indices (any order, no duplicates) into dense tiles.
+/// Indices are sorted so downstream gathers are cache-friendly and results
+/// are deterministic regardless of how the filter enumerated survivors.
+pub fn compact(mut survivors: Vec<usize>, tile_size: usize) -> Vec<Tile> {
+    assert!(tile_size > 0, "tile_size must be positive");
+    survivors.sort_unstable();
+    survivors
+        .chunks(tile_size)
+        .map(|c| Tile { indices: c.to_vec() })
+        .collect()
+}
+
+/// Occupancy of the last tile (padding waste diagnostic): 1.0 when full.
+pub fn tail_occupancy(tiles: &[Tile], tile_size: usize) -> f64 {
+    match tiles.last() {
+        None => 1.0,
+        Some(t) => t.indices.len() as f64 / tile_size as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_exactly() {
+        let tiles = partition(1000, 256);
+        assert_eq!(tiles.len(), 4);
+        let total: usize = tiles.iter().map(|t| t.indices.len()).sum();
+        assert_eq!(total, 1000);
+        assert_eq!(tiles[3].indices.len(), 232);
+        assert_eq!(tiles[0].indices[0], 0);
+        assert_eq!(tiles[3].indices[231], 999);
+    }
+
+    #[test]
+    fn partition_empty_and_exact() {
+        assert!(partition(0, 64).is_empty());
+        let t = partition(128, 64);
+        assert_eq!(t.len(), 2);
+        assert!(t.iter().all(|t| t.indices.len() == 64));
+    }
+
+    #[test]
+    fn compact_sorts_and_chunks() {
+        let tiles = compact(vec![9, 3, 7, 1, 5], 2);
+        assert_eq!(tiles.len(), 3);
+        assert_eq!(tiles[0].indices, vec![1, 3]);
+        assert_eq!(tiles[1].indices, vec![5, 7]);
+        assert_eq!(tiles[2].indices, vec![9]);
+    }
+
+    #[test]
+    fn tail_occupancy_reports_waste() {
+        let tiles = compact((0..100).collect(), 64);
+        assert!((tail_occupancy(&tiles, 64) - 36.0 / 64.0).abs() < 1e-12);
+        assert_eq!(tail_occupancy(&[], 64), 1.0);
+    }
+}

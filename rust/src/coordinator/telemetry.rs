@@ -1,0 +1,52 @@
+//! Run-level telemetry emitted by the coordinator.
+
+use crate::hw::CycleBreakdown;
+
+/// What a run cost, in whichever currencies the backend produces.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    /// Backend identifier ("fpga-sim", "native", "xla-pjrt").
+    pub backend: String,
+    /// Simulated PL cycles (FPGA backend; 0 otherwise).
+    pub total_cycles: u64,
+    /// Simulated seconds at the PL clock (FPGA backend; 0 otherwise).
+    pub sim_seconds: f64,
+    /// Measured host wall-clock of the whole fit.
+    pub wall_seconds: f64,
+    /// Per-iteration cycle breakdowns (FPGA backend).
+    pub iter_cycles: Vec<CycleBreakdown>,
+    /// Pipeline busy fraction (FPGA backend) — drives dynamic power.
+    pub pipeline_utilization: f64,
+    /// Total DMA traffic in bytes (FPGA backend).
+    pub dma_bytes: u64,
+    /// Tiles dispatched to the engine (engine backends).
+    pub tiles_dispatched: u64,
+    /// Points that survived filtering and were re-scanned, summed over
+    /// iterations (engine backends; equals n × iters with filters off).
+    pub points_rescanned: u64,
+}
+
+impl RunReport {
+    /// Simulated-or-measured seconds, preferring the simulation when the
+    /// backend produced one (engine backends report wall-clock).
+    pub fn seconds(&self) -> f64 {
+        if self.sim_seconds > 0.0 {
+            self.sim_seconds
+        } else {
+            self.wall_seconds
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seconds_prefers_simulation() {
+        let mut r = RunReport { sim_seconds: 2.0, wall_seconds: 0.5, ..Default::default() };
+        assert_eq!(r.seconds(), 2.0);
+        r.sim_seconds = 0.0;
+        assert_eq!(r.seconds(), 0.5);
+    }
+}

@@ -1,0 +1,217 @@
+//! Dataset I/O: a binary matrix format and a CSV reader.
+//!
+//! The binary format (`.kpm`, "KPynq matrix") is a tiny self-describing
+//! little-endian container:
+//!
+//! ```text
+//! magic  "KPM1"          4 bytes
+//! rows   u64 LE          8 bytes
+//! cols   u64 LE          8 bytes
+//! data   rows*cols f32   little-endian row-major
+//! ```
+//!
+//! Generating the large UCI-equivalents takes a couple of seconds each;
+//! examples cache them with [`save`]/[`load`] so repeated bench runs are
+//! instant. [`read_csv`] lets a real UCI CSV be substituted for a generator
+//! when the file is available.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::util::matrix::Matrix;
+
+const MAGIC: &[u8; 4] = b"KPM1";
+
+/// Write a dataset's points to the binary format (labels are not stored).
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(ds.n() as u64).to_le_bytes())?;
+    w.write_all(&(ds.d() as u64).to_le_bytes())?;
+    // Bulk-convert rows to LE bytes. f32::to_le_bytes per element is the
+    // portable route; the buffer writer amortises the syscalls.
+    let mut buf = Vec::with_capacity(ds.d() * 4);
+    for row in ds.points.rows_iter() {
+        buf.clear();
+        for v in row {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a dataset from the binary format.
+pub fn load(name: &str, path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Data(format!(
+            "{}: bad magic {:?} (not a KPM1 file)",
+            path.display(),
+            magic
+        )));
+    }
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let rows = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let cols = u64::from_le_bytes(u64buf) as usize;
+    let total = rows
+        .checked_mul(cols)
+        .ok_or_else(|| Error::Data("matrix size overflow".into()))?;
+    let mut bytes = vec![0u8; total * 4];
+    r.read_exact(&mut bytes)?;
+    let mut data = Vec::with_capacity(total);
+    for chunk in bytes.chunks_exact(4) {
+        data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    let ds = Dataset::new(name, Matrix::from_vec(data, rows, cols)?);
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// Load-or-generate cache helper used by examples and benches.
+pub fn load_or_generate<F>(name: &str, cache_dir: &Path, gen: F) -> Result<Dataset>
+where
+    F: FnOnce() -> Dataset,
+{
+    let path = cache_dir.join(format!("{name}.kpm"));
+    if path.exists() {
+        if let Ok(ds) = load(name, &path) {
+            return Ok(ds);
+        }
+        // Corrupt cache: fall through and regenerate.
+    }
+    let ds = gen();
+    std::fs::create_dir_all(cache_dir)?;
+    save(&ds, &path)?;
+    Ok(ds)
+}
+
+/// Read a numeric CSV (no header handling beyond `skip_header`, `,`
+/// delimiter, non-numeric columns rejected). Rows of inconsistent arity
+/// are an error — silent row-dropping hides data bugs.
+pub fn read_csv(name: &str, path: &Path, skip_header: bool) -> Result<Dataset> {
+    let r = BufReader::new(File::open(path)?);
+    let mut data: Vec<f32> = Vec::new();
+    let mut cols = None;
+    let mut rows = 0usize;
+    for (i, line) in r.lines().enumerate() {
+        let line = line?;
+        if i == 0 && skip_header {
+            continue;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = trimmed.split(',').collect();
+        match cols {
+            None => cols = Some(fields.len()),
+            Some(c) if c != fields.len() => {
+                return Err(Error::Data(format!(
+                    "{}: row {} has {} fields, expected {}",
+                    path.display(),
+                    i + 1,
+                    fields.len(),
+                    c
+                )));
+            }
+            _ => {}
+        }
+        for f in fields {
+            let v: f32 = f.trim().parse().map_err(|_| {
+                Error::Data(format!(
+                    "{}: row {}: non-numeric field '{}'",
+                    path.display(),
+                    i + 1,
+                    f
+                ))
+            })?;
+            data.push(v);
+        }
+        rows += 1;
+    }
+    let cols = cols.ok_or_else(|| Error::Data(format!("{}: empty csv", path.display())))?;
+    let ds = Dataset::new(name, Matrix::from_vec(data, rows, cols)?);
+    ds.validate()?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "kpynq-io-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmpdir();
+        let ds = synth::blobs(200, 7, 3, 5);
+        let path = dir.join("roundtrip.kpm");
+        save(&ds, &path).unwrap();
+        let back = load("blobs", &path).unwrap();
+        assert_eq!(back.points, ds.points);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = tmpdir();
+        let path = dir.join("bad.kpm");
+        std::fs::write(&path, b"NOPEaaaaaaaaaaaaaaaa").unwrap();
+        assert!(load("x", &path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_or_generate_caches() {
+        let dir = tmpdir();
+        let mut calls = 0;
+        let a = load_or_generate("cachetest", &dir, || {
+            calls += 1;
+            synth::blobs(50, 3, 2, 9)
+        })
+        .unwrap();
+        let b = load_or_generate("cachetest", &dir, || {
+            calls += 1;
+            synth::blobs(50, 3, 2, 9)
+        })
+        .unwrap();
+        assert_eq!(calls, 1, "second call must hit the cache");
+        assert_eq!(a.points, b.points);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_reads_and_validates() {
+        let dir = tmpdir();
+        let path = dir.join("data.csv");
+        std::fs::write(&path, "a,b\n1.0,2.0\n3.5,-4\n").unwrap();
+        let ds = read_csv("csv", &path, true).unwrap();
+        assert_eq!((ds.n(), ds.d()), (2, 2));
+        assert_eq!(ds.points.row(1), &[3.5, -4.0]);
+
+        std::fs::write(&path, "1,2\n3\n").unwrap();
+        assert!(read_csv("csv", &path, false).is_err(), "ragged rows rejected");
+
+        std::fs::write(&path, "1,x\n").unwrap();
+        assert!(read_csv("csv", &path, false).is_err(), "non-numeric rejected");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

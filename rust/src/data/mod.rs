@@ -1,0 +1,158 @@
+//! Datasets: the workload substrate.
+//!
+//! The paper evaluates on "six real-life datasets from [the UCI repository]
+//! … covering a wide range of size and dimensionality". UCI downloads are
+//! unavailable in this environment, so [`synth`] provides deterministic
+//! generators shaped to the six sets canonically used in triangle-inequality
+//! K-means evaluations (see DESIGN.md §3 for the substitution argument:
+//! filter effectiveness is governed by n, d, k and cluster separation, all
+//! of which the generators reproduce). [`io`] adds a binary on-disk format
+//! and a CSV reader so real UCI files can be dropped in when available, and
+//! [`normalize`] provides the standard preprocessing.
+
+pub mod io;
+pub mod normalize;
+pub mod synth;
+
+use crate::error::{Error, Result};
+use crate::util::matrix::Matrix;
+
+/// A dataset of `n` points in `d` dimensions.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Short identifier (`gassensor`, `kegg`, …) used in reports.
+    pub name: String,
+    /// Row-major points, `n × d`.
+    pub points: Matrix,
+    /// Ground-truth labels if the generator knows them (synthetic data).
+    pub labels: Option<Vec<u32>>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, points: Matrix) -> Self {
+        Self { name: name.into(), points, labels: None }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.points.rows()
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.points.cols()
+    }
+
+    /// Validate basic invariants (finite values, non-empty).
+    pub fn validate(&self) -> Result<()> {
+        if self.n() == 0 || self.d() == 0 {
+            return Err(Error::Data(format!(
+                "dataset '{}' is empty ({}x{})",
+                self.name,
+                self.n(),
+                self.d()
+            )));
+        }
+        if let Some(bad) = self
+            .points
+            .as_slice()
+            .iter()
+            .position(|x| !x.is_finite())
+        {
+            return Err(Error::Data(format!(
+                "dataset '{}' has non-finite value at flat index {bad}",
+                self.name
+            )));
+        }
+        if let Some(labels) = &self.labels {
+            if labels.len() != self.n() {
+                return Err(Error::Data(format!(
+                    "dataset '{}' has {} labels for {} points",
+                    self.name,
+                    labels.len(),
+                    self.n()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// A deterministic subsample (used by benches to bound run time while
+    /// preserving the generator's geometry).
+    pub fn subsample(&self, max_n: usize, seed: u64) -> Dataset {
+        if self.n() <= max_n {
+            return self.clone();
+        }
+        let mut idx: Vec<usize> = (0..self.n()).collect();
+        let mut rng = crate::util::rng::Rng::new(seed);
+        rng.shuffle(&mut idx);
+        idx.truncate(max_n);
+        idx.sort_unstable();
+        let points = self.points.gather_rows(&idx);
+        let labels = self
+            .labels
+            .as_ref()
+            .map(|l| idx.iter().map(|&i| l[i]).collect());
+        Dataset {
+            name: format!("{}@{}", self.name, max_n),
+            points,
+            labels,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let m = Matrix::from_vec(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0], 3, 2).unwrap();
+        Dataset::new("tiny", m)
+    }
+
+    #[test]
+    fn validate_accepts_good_data() {
+        tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_nan() {
+        let mut ds = tiny();
+        ds.points.row_mut(1)[0] = f32::NAN;
+        assert!(ds.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_label_mismatch() {
+        let mut ds = tiny();
+        ds.labels = Some(vec![0, 1]);
+        assert!(ds.validate().is_err());
+    }
+
+    #[test]
+    fn subsample_preserves_rows() {
+        let ds = synth::blobs(100, 4, 3, 7);
+        let sub = ds.subsample(10, 1);
+        assert_eq!(sub.n(), 10);
+        assert_eq!(sub.d(), 4);
+        // Every subsampled row must exist in the original.
+        for r in 0..sub.n() {
+            let row = sub.points.row(r);
+            assert!(
+                (0..ds.n()).any(|i| ds.points.row(i) == row),
+                "row {r} not found in original"
+            );
+        }
+        // Deterministic.
+        let sub2 = ds.subsample(10, 1);
+        assert_eq!(sub.points, sub2.points);
+    }
+
+    #[test]
+    fn subsample_noop_when_small() {
+        let ds = tiny();
+        let sub = ds.subsample(10, 0);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(sub.name, "tiny");
+    }
+}

@@ -1,0 +1,136 @@
+//! Feature normalization.
+//!
+//! K-means is scale-sensitive and the UCI sets mix wildly different feature
+//! ranges; both the paper's CPU baseline and the accelerator operate on
+//! normalized data (fixed-point hardware *requires* a bounded range — the
+//! Zynq datapath in `hw::pipeline` models Q-format MACs whose calibration
+//! assumes inputs in [0, 1] or z-scored ranges).
+
+use crate::data::Dataset;
+
+/// Per-column min-max scaling into [0, 1]. Constant columns map to 0.
+pub fn min_max(ds: &mut Dataset) {
+    let (n, d) = (ds.n(), ds.d());
+    if n == 0 {
+        return;
+    }
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for row in ds.points.rows_iter() {
+        for j in 0..d {
+            lo[j] = lo[j].min(row[j]);
+            hi[j] = hi[j].max(row[j]);
+        }
+    }
+    let scale: Vec<f32> = (0..d)
+        .map(|j| {
+            let range = hi[j] - lo[j];
+            if range > 0.0 {
+                1.0 / range
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    for i in 0..n {
+        let row = ds.points.row_mut(i);
+        for j in 0..d {
+            row[j] = (row[j] - lo[j]) * scale[j];
+        }
+    }
+}
+
+/// Per-column z-score standardization. Constant columns map to 0.
+pub fn z_score(ds: &mut Dataset) {
+    let (n, d) = (ds.n(), ds.d());
+    if n == 0 {
+        return;
+    }
+    let mut mean = vec![0.0f64; d];
+    for row in ds.points.rows_iter() {
+        for j in 0..d {
+            mean[j] += row[j] as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut var = vec![0.0f64; d];
+    for row in ds.points.rows_iter() {
+        for j in 0..d {
+            let dlt = row[j] as f64 - mean[j];
+            var[j] += dlt * dlt;
+        }
+    }
+    let inv_std: Vec<f32> = var
+        .iter()
+        .map(|&v| {
+            let s = (v / n as f64).sqrt();
+            if s > 0.0 {
+                (1.0 / s) as f32
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    for i in 0..n {
+        let row = ds.points.row_mut(i);
+        for j in 0..d {
+            row[j] = (row[j] - mean[j] as f32) * inv_std[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::matrix::Matrix;
+
+    #[test]
+    fn min_max_bounds() {
+        let mut ds = synth::blobs(500, 6, 3, 1);
+        min_max(&mut ds);
+        for row in ds.points.rows_iter() {
+            for &v in row {
+                assert!((0.0..=1.0).contains(&v), "v={v}");
+            }
+        }
+        // Each column must actually reach (close to) both ends.
+        for j in 0..ds.d() {
+            let col: Vec<f32> = (0..ds.n()).map(|i| ds.points.row(i)[j]).collect();
+            let lo = col.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = col.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(lo.abs() < 1e-6 && (hi - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn z_score_moments() {
+        let mut ds = synth::blobs(2000, 4, 3, 2);
+        z_score(&mut ds);
+        for j in 0..ds.d() {
+            let col: Vec<f64> = (0..ds.n()).map(|i| ds.points.row(i)[j] as f64).collect();
+            let mean: f64 = col.iter().sum::<f64>() / col.len() as f64;
+            let var: f64 =
+                col.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / col.len() as f64;
+            assert!(mean.abs() < 1e-4, "col {j} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn constant_columns_map_to_zero() {
+        let mut ds = crate::data::Dataset::new(
+            "const",
+            Matrix::from_vec(vec![5.0, 1.0, 5.0, 2.0, 5.0, 3.0], 3, 2).unwrap(),
+        );
+        let mut ds2 = ds.clone();
+        min_max(&mut ds);
+        z_score(&mut ds2);
+        for i in 0..3 {
+            assert_eq!(ds.points.row(i)[0], 0.0);
+            assert_eq!(ds2.points.row(i)[0], 0.0);
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! Deterministic synthetic dataset generators.
+//!
+//! Six named generators stand in for the paper's six UCI datasets
+//! (DESIGN.md §3). Each reproduces the axes that matter to a
+//! triangle-inequality K-means evaluation — size `n`, dimensionality `d`,
+//! number of natural modes, mode separation and imbalance — because those
+//! are what determine both the distance-computation count of standard
+//! K-means and the hit rate of the multi-level filters.
+//!
+//! All generators are pure functions of their seed.
+
+use crate::data::Dataset;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Specification of a Gaussian-mixture generator.
+#[derive(Clone, Debug)]
+pub struct MixtureSpec {
+    pub name: &'static str,
+    pub n: usize,
+    pub d: usize,
+    /// Number of generating modes (not necessarily the k used at fit time).
+    pub modes: usize,
+    /// Mode-center spread (box half-width the centers are drawn from).
+    pub center_spread: f32,
+    /// Per-mode point noise std, as a fraction of `center_spread`.
+    pub noise_frac: f32,
+    /// Dirichlet-ish imbalance: 0 = balanced, 1 = heavily skewed.
+    pub imbalance: f32,
+    /// Fraction of dimensions carrying structure (rest is isotropic noise),
+    /// mimicking real tabular data where most variance lives in a subspace.
+    pub active_dims_frac: f32,
+}
+
+impl MixtureSpec {
+    /// Generate the dataset for this spec.
+    pub fn generate(&self, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed ^ fnv(self.name));
+        let modes = self.modes.max(1);
+        let active = ((self.d as f32 * self.active_dims_frac).ceil() as usize)
+            .clamp(1, self.d);
+
+        // Mode centers: uniform in a box, but only in active dimensions.
+        let mut centers = vec![0.0f32; modes * self.d];
+        for m in 0..modes {
+            for j in 0..active {
+                centers[m * self.d + j] =
+                    (rng.next_f32() * 2.0 - 1.0) * self.center_spread;
+            }
+        }
+
+        // Mode weights: geometric decay controlled by `imbalance`.
+        let decay = 1.0 - 0.85 * self.imbalance as f64;
+        let weights: Vec<f64> = (0..modes).map(|m| decay.powi(m as i32)).collect();
+
+        let noise = self.center_spread * self.noise_frac;
+        let mut data = vec![0.0f32; self.n * self.d];
+        let mut labels = vec![0u32; self.n];
+        for i in 0..self.n {
+            let m = rng.sample_weighted(&weights);
+            labels[i] = m as u32;
+            let row = &mut data[i * self.d..(i + 1) * self.d];
+            for j in 0..self.d {
+                let center = centers[m * self.d + j];
+                // Inactive dims get pure small-amplitude noise.
+                let sigma = if j < active { noise } else { noise * 0.3 };
+                row[j] = center + rng.normal_f32(0.0, sigma);
+            }
+        }
+
+        let mut ds = Dataset::new(
+            self.name,
+            Matrix::from_vec(data, self.n, self.d).expect("sized by construction"),
+        );
+        ds.labels = Some(labels);
+        ds
+    }
+}
+
+/// FNV-1a of the generator name, mixed into the seed so different datasets
+/// never share a random stream even with the same user seed.
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The six UCI-equivalent specs (DESIGN.md §3).
+pub fn uci_specs() -> Vec<MixtureSpec> {
+    vec![
+        // Gas Sensor Array Drift: 13,910 × 128 chemosensor features; strong
+        // batch structure → well separated modes.
+        MixtureSpec {
+            name: "gassensor",
+            n: 13_910,
+            d: 128,
+            modes: 24,
+            center_spread: 10.0,
+            noise_frac: 0.06,
+            imbalance: 0.3,
+            active_dims_frac: 0.5,
+        },
+        // KEGG Metabolic Reaction Network (directed): 53,413 × 20 graph
+        // statistics; low-d, skewed mass.
+        MixtureSpec {
+            name: "kegg",
+            n: 53_413,
+            d: 20,
+            modes: 20,
+            center_spread: 8.0,
+            noise_frac: 0.12,
+            imbalance: 0.6,
+            active_dims_frac: 0.8,
+        },
+        // 3D Road Network (North Jutland): 434,874 × 3 coordinates; huge n,
+        // tiny d, spatially smooth → overlapping modes.
+        MixtureSpec {
+            name: "roadnetwork",
+            n: 434_874,
+            d: 3,
+            modes: 40,
+            center_spread: 6.0,
+            noise_frac: 0.35,
+            imbalance: 0.2,
+            active_dims_frac: 1.0,
+        },
+        // US Census 1990 (projected): 100,000 × 68 categorical-derived dims.
+        MixtureSpec {
+            name: "uscensus",
+            n: 100_000,
+            d: 68,
+            modes: 32,
+            center_spread: 5.0,
+            noise_frac: 0.25,
+            imbalance: 0.4,
+            active_dims_frac: 0.6,
+        },
+        // Covertype: 150,000 (subsampled from 581k) × 54 cartographic
+        // features; heavy class imbalance.
+        MixtureSpec {
+            name: "covtype",
+            n: 150_000,
+            d: 54,
+            modes: 7,
+            center_spread: 7.0,
+            noise_frac: 0.2,
+            imbalance: 0.8,
+            active_dims_frac: 0.7,
+        },
+        // MNIST after a 64-d projection (papers use PCA-64): 60,000 × 64
+        // with ten digit modes.
+        MixtureSpec {
+            name: "mnist",
+            n: 60_000,
+            d: 64,
+            modes: 10,
+            center_spread: 9.0,
+            noise_frac: 0.18,
+            imbalance: 0.1,
+            active_dims_frac: 0.9,
+        },
+    ]
+}
+
+/// Generate one of the six UCI-equivalents by name.
+pub fn uci(name: &str, seed: u64) -> Option<Dataset> {
+    uci_specs()
+        .into_iter()
+        .find(|s| s.name == name)
+        .map(|s| s.generate(seed))
+}
+
+/// All six UCI-equivalents.
+pub fn uci_all(seed: u64) -> Vec<Dataset> {
+    uci_specs().into_iter().map(|s| s.generate(seed)).collect()
+}
+
+/// Simple well-separated blobs (tests, quickstart).
+pub fn blobs(n: usize, d: usize, modes: usize, seed: u64) -> Dataset {
+    MixtureSpec {
+        name: "blobs",
+        n,
+        d,
+        modes,
+        center_spread: 10.0,
+        noise_frac: 0.04,
+        imbalance: 0.0,
+        active_dims_frac: 1.0,
+    }
+    .generate(seed)
+}
+
+/// Uniform noise — the adversarial case where triangle-inequality filters
+/// help least (used by the ablation benches as a lower bound).
+pub fn uniform(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ fnv("uniform"));
+    let data: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    Dataset::new("uniform", Matrix::from_vec(data, n, d).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::matrix::sq_dist;
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = uci("kegg", 42).unwrap();
+        let b = uci("kegg", 42).unwrap();
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = blobs(100, 4, 3, 1);
+        let b = blobs(100, 4, 3, 2);
+        assert_ne!(a.points, b.points);
+    }
+
+    #[test]
+    fn all_six_specs_have_paper_shapes() {
+        let specs = uci_specs();
+        assert_eq!(specs.len(), 6);
+        let names: Vec<_> = specs.iter().map(|s| s.name).collect();
+        assert_eq!(
+            names,
+            ["gassensor", "kegg", "roadnetwork", "uscensus", "covtype", "mnist"]
+        );
+        // Dimensional range claim: "wide range of size and dimensionality".
+        let dmin = specs.iter().map(|s| s.d).min().unwrap();
+        let dmax = specs.iter().map(|s| s.d).max().unwrap();
+        assert!(dmin <= 3 && dmax >= 128);
+        let nmin = specs.iter().map(|s| s.n).min().unwrap();
+        let nmax = specs.iter().map(|s| s.n).max().unwrap();
+        assert!(nmin <= 20_000 && nmax >= 400_000);
+    }
+
+    #[test]
+    fn small_generation_is_valid_and_labelled() {
+        // Use shrunken copies of each spec to keep the test fast.
+        for mut spec in uci_specs() {
+            spec.n = 500;
+            let ds = spec.generate(7);
+            ds.validate().unwrap();
+            let labels = ds.labels.as_ref().unwrap();
+            assert_eq!(labels.len(), 500);
+            assert!(labels.iter().all(|&l| (l as usize) < spec.modes));
+        }
+    }
+
+    #[test]
+    fn blobs_are_separated() {
+        // Points sharing a label must be much closer to each other than the
+        // typical cross-label distance.
+        let ds = blobs(300, 8, 4, 3);
+        let labels = ds.labels.as_ref().unwrap();
+        let mut intra = 0.0f64;
+        let mut inter = 0.0f64;
+        let (mut ni, mut nx) = (0u64, 0u64);
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let d2 = sq_dist(ds.points.row(i), ds.points.row(j)) as f64;
+                if labels[i] == labels[j] {
+                    intra += d2;
+                    ni += 1;
+                } else {
+                    inter += d2;
+                    nx += 1;
+                }
+            }
+        }
+        if ni > 0 && nx > 0 {
+            assert!(inter / nx as f64 > 10.0 * (intra / ni as f64).max(1e-9));
+        }
+    }
+
+    #[test]
+    fn imbalance_skews_mode_sizes() {
+        let mut spec = uci_specs().into_iter().find(|s| s.name == "covtype").unwrap();
+        spec.n = 2000;
+        let ds = spec.generate(11);
+        let labels = ds.labels.unwrap();
+        let mut counts = vec![0usize; spec.modes];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max > 4 * min.max(1), "covtype should be imbalanced: {counts:?}");
+    }
+
+    #[test]
+    fn uniform_has_no_labels() {
+        let ds = uniform(100, 5, 3);
+        assert!(ds.labels.is_none());
+        ds.validate().unwrap();
+    }
+}

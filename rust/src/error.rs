@@ -1,0 +1,48 @@
+//! Crate-wide error type.
+//!
+//! One flat enum rather than per-module errors: the coordinator surfaces
+//! every failure to the CLI/examples anyway, and the variants carry enough
+//! context (`String` payloads built at the failure site) to act on.
+
+use thiserror::Error;
+
+/// All errors the KPynq library can produce.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Configuration rejected before any work started.
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// Dataset loading / generation / validation failure.
+    #[error("dataset error: {0}")]
+    Data(String),
+
+    /// An accelerator configuration that does not fit the selected part.
+    #[error("resource overflow on {part}: {detail}")]
+    Resource { part: String, detail: String },
+
+    /// The AOT artifact directory is missing or inconsistent.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT/XLA runtime failure (compile or execute).
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// JSON/TOML parse errors from the in-crate readers.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// I/O wrapper.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

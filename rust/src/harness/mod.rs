@@ -1,0 +1,371 @@
+//! Experiment harness: regenerates the paper's reported results.
+//!
+//! Each bench target (`rust/benches/`) and the end-to-end example call
+//! into this module so table logic lives in one tested place:
+//!
+//! * [`speedup_energy_row`] — one row of T1 (speedup) + T2 (energy):
+//!   CPU-model baseline vs. simulated KPynq on one dataset.
+//! * [`filter_ablation_row`] — F2: distance-computation work ratios for
+//!   {none, point-level, multi-level} filter configurations.
+//! * [`parallelism_point`] — F3: cycles + resource fit across lane counts.
+//! * [`dma_breakdown_row`] — F5: where the cycles go.
+//!
+//! Aggregates use the geometric mean, the standard way to average ratios
+//! across benchmarks.
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::hw::cpu_model::CpuModel;
+use crate::hw::energy::PowerModel;
+use crate::hw::filter_unit::FilterUnitConfig;
+use crate::hw::pipeline::PipelineConfig;
+use crate::hw::resource::{self, ProblemShape};
+use crate::hw::{AccelConfig, Accelerator, ZynqPart};
+use crate::kmeans::{self, init, Algorithm, KMeansConfig};
+use crate::util::bench::Table;
+
+/// One dataset's speedup + energy numbers.
+#[derive(Clone, Debug)]
+pub struct SpeedupRow {
+    pub dataset: String,
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    pub iterations: usize,
+    /// CPU baseline (standard K-means) time from the machine model.
+    pub cpu_seconds: f64,
+    /// Simulated KPynq time.
+    pub fpga_seconds: f64,
+    pub speedup: f64,
+    /// Fraction of Lloyd's distance work the filter actually performed.
+    pub work_ratio: f64,
+    pub cpu_joules: f64,
+    pub fpga_joules: f64,
+    pub energy_efficiency: f64,
+}
+
+/// Run the T1/T2 comparison on one dataset.
+///
+/// Both sides run to the *same* trajectory (exact algorithms, same init),
+/// so the iteration count is shared and the comparison isolates the
+/// architecture, exactly as in the paper.
+pub fn speedup_energy_row(
+    ds: &Dataset,
+    kcfg: &KMeansConfig,
+    acfg: &AccelConfig,
+    cpu: &CpuModel,
+) -> Result<SpeedupRow> {
+    let init_c = init::initialize(ds, kcfg)?;
+    let acc = Accelerator::new(acfg.clone());
+    let run = acc.run_fit(ds, kcfg, init_c)?;
+    let iterations = run.fit.iterations;
+
+    let cpu_seconds = cpu.run_seconds(ds.n(), kcfg.k, ds.d(), iterations);
+    let energy = acfg.power.compare(run.seconds, run.pipeline_utilization, cpu_seconds);
+
+    Ok(SpeedupRow {
+        dataset: ds.name.clone(),
+        n: ds.n(),
+        d: ds.d(),
+        k: kcfg.k,
+        iterations,
+        cpu_seconds,
+        fpga_seconds: run.seconds,
+        speedup: cpu_seconds / run.seconds,
+        work_ratio: run.fit.stats.work_ratio(ds.n(), kcfg.k),
+        cpu_joules: energy.cpu_joules,
+        fpga_joules: energy.fpga_joules,
+        energy_efficiency: energy.efficiency_ratio,
+    })
+}
+
+/// Render T1/T2 rows as the paper-style table.
+pub fn render_speedup_table(rows: &[SpeedupRow]) -> String {
+    let mut t = Table::new(&[
+        "dataset", "n", "d", "k", "iters", "cpu (s)", "kpynq (s)", "speedup",
+        "work", "energy-eff",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.dataset.clone(),
+            r.n.to_string(),
+            r.d.to_string(),
+            r.k.to_string(),
+            r.iterations.to_string(),
+            format!("{:.4}", r.cpu_seconds),
+            format!("{:.4}", r.fpga_seconds),
+            format!("{:.2}x", r.speedup),
+            format!("{:.1}%", r.work_ratio * 100.0),
+            format!("{:.1}x", r.energy_efficiency),
+        ]);
+    }
+    let speedups: Vec<f64> = rows.iter().map(|r| r.speedup).collect();
+    let effs: Vec<f64> = rows.iter().map(|r| r.energy_efficiency).collect();
+    let mut s = t.render();
+    s.push_str(&format!(
+        "geomean speedup {:.2}x (max {:.2}x) | geomean energy-eff {:.1}x (max {:.1}x)\n",
+        crate::util::stats::geomean(&speedups),
+        speedups.iter().cloned().fold(0.0, f64::max),
+        crate::util::stats::geomean(&effs),
+        effs.iter().cloned().fold(0.0, f64::max),
+    ));
+    s
+}
+
+/// One dataset's filter-ablation numbers (F2).
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub dataset: String,
+    /// Work ratios (fraction of n·k·iters distance computations).
+    pub lloyd: f64,
+    pub point_level: f64,  // Hamerly: global/point filter only
+    pub multi_level: f64,  // Yinyang: group + point filters
+    pub elkan: f64,        // software upper bound on filtering
+    /// Simulated cycle counts with filters off / on.
+    pub cycles_off: u64,
+    pub cycles_on: u64,
+}
+
+/// Run the F2 ablation on one dataset.
+pub fn filter_ablation_row(
+    ds: &Dataset,
+    kcfg: &KMeansConfig,
+    acfg: &AccelConfig,
+) -> Result<AblationRow> {
+    let init_c = init::initialize(ds, kcfg)?;
+    let lloyd = kmeans::fit_from(Algorithm::Lloyd, ds, kcfg, init_c.clone())?;
+    let hamerly = kmeans::fit_from(Algorithm::Hamerly, ds, kcfg, init_c.clone())?;
+    let elkan = kmeans::fit_from(Algorithm::Elkan, ds, kcfg, init_c.clone())?;
+    let yinyang = kmeans::fit_from(Algorithm::Yinyang, ds, kcfg, init_c.clone())?;
+
+    let on = Accelerator::new(AccelConfig { enable_filters: true, ..acfg.clone() })
+        .run_fit(ds, kcfg, init_c.clone())?;
+    let off = Accelerator::new(AccelConfig { enable_filters: false, ..acfg.clone() })
+        .run_fit(ds, kcfg, init_c)?;
+
+    let wr = |f: &kmeans::FitResult| f.stats.work_ratio(ds.n(), kcfg.k);
+    Ok(AblationRow {
+        dataset: ds.name.clone(),
+        lloyd: wr(&lloyd),
+        point_level: wr(&hamerly),
+        multi_level: wr(&yinyang),
+        elkan: wr(&elkan),
+        cycles_off: off.total_cycles,
+        cycles_on: on.total_cycles,
+    })
+}
+
+/// One lane-count point of the F3 parallelism sweep.
+#[derive(Clone, Debug)]
+pub struct ParallelismPoint {
+    pub lanes: u64,
+    pub fits: bool,
+    pub dsp: u64,
+    pub bram: u64,
+    pub cycles: Option<u64>,
+    pub seconds: Option<f64>,
+}
+
+/// Evaluate one lane count on one dataset (F3).
+pub fn parallelism_point(
+    ds: &Dataset,
+    kcfg: &KMeansConfig,
+    lanes: u64,
+    mac_width: u64,
+    part: &ZynqPart,
+) -> Result<ParallelismPoint> {
+    let pipe = PipelineConfig { lanes, mac_width };
+    let g = kcfg.effective_groups().clamp(1, kcfg.k);
+    let shape = ProblemShape::new(kcfg.k, ds.d(), g, 256);
+    let est = resource::estimate(&pipe, &FilterUnitConfig::default(), &shape);
+    let fits = est.fits(part);
+    let (cycles, seconds) = if fits {
+        let acfg = AccelConfig { pipeline: pipe, part: part.clone(), ..Default::default() };
+        let init_c = init::initialize(ds, kcfg)?;
+        let run = Accelerator::new(acfg).run_fit(ds, kcfg, init_c)?;
+        (Some(run.total_cycles), Some(run.seconds))
+    } else {
+        (None, None)
+    };
+    Ok(ParallelismPoint { lanes, fits, dsp: est.dsp, bram: est.bram_18k, cycles, seconds })
+}
+
+/// F5: cycle breakdown shares for one run.
+#[derive(Clone, Debug)]
+pub struct DmaBreakdownRow {
+    pub dataset: String,
+    pub dma_in_frac: f64,
+    pub filter_frac: f64,
+    pub pipeline_frac: f64,
+    pub ps_update_frac: f64,
+    /// Overlap efficiency: serial-sum / makespan (≥ 1; higher = better
+    /// double buffering).
+    pub overlap_gain: f64,
+}
+
+/// Compute the F5 row for one dataset.
+pub fn dma_breakdown_row(
+    ds: &Dataset,
+    kcfg: &KMeansConfig,
+    acfg: &AccelConfig,
+) -> Result<DmaBreakdownRow> {
+    let init_c = init::initialize(ds, kcfg)?;
+    let run = Accelerator::new(acfg.clone()).run_fit(ds, kcfg, init_c)?;
+    let mut dma_in = 0u64;
+    let mut filter = 0u64;
+    let mut pipe = 0u64;
+    let mut ps = 0u64;
+    let mut serial = 0u64;
+    let mut makespan = 0u64;
+    for it in &run.iters {
+        dma_in += it.dma_in;
+        filter += it.filter;
+        pipe += it.pipeline;
+        ps += it.ps_update;
+        serial += it.serial_sum();
+        makespan += it.total;
+    }
+    let total = (dma_in + filter + pipe + ps).max(1) as f64;
+    Ok(DmaBreakdownRow {
+        dataset: ds.name.clone(),
+        dma_in_frac: dma_in as f64 / total,
+        filter_frac: filter as f64 / total,
+        pipeline_frac: pipe as f64 / total,
+        ps_update_frac: ps as f64 / total,
+        overlap_gain: serial as f64 / makespan.max(1) as f64,
+    })
+}
+
+/// The benchmark-scale dataset suite: the six UCI-equivalents, subsampled
+/// to keep full-suite bench runs tractable while preserving geometry
+/// (`cap = 0` disables subsampling for the end-to-end example).
+pub fn bench_suite(seed: u64, cap: usize) -> Vec<Dataset> {
+    crate::data::synth::uci_all(seed)
+        .into_iter()
+        .map(|mut ds| {
+            let mut out = if cap > 0 { ds.subsample(cap, seed) } else { ds.clone() };
+            // Normalised features, as the fixed-point datapath requires.
+            crate::data::normalize::min_max(&mut out);
+            ds.labels = None;
+            out
+        })
+        .collect()
+}
+
+/// Default power model shared by benches (kept here so T1/T2 agree).
+pub fn default_power() -> PowerModel {
+    PowerModel::default()
+}
+
+/// Serialise T1/T2 rows as JSON (machine-readable experiment record; the
+/// CLI's `table` command writes these next to the human tables).
+pub fn speedup_rows_to_json(rows: &[SpeedupRow]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let arr = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("dataset".into(), Json::Str(r.dataset.clone()));
+            m.insert("n".into(), Json::Num(r.n as f64));
+            m.insert("d".into(), Json::Num(r.d as f64));
+            m.insert("k".into(), Json::Num(r.k as f64));
+            m.insert("iterations".into(), Json::Num(r.iterations as f64));
+            m.insert("cpu_seconds".into(), Json::Num(r.cpu_seconds));
+            m.insert("fpga_seconds".into(), Json::Num(r.fpga_seconds));
+            m.insert("speedup".into(), Json::Num(r.speedup));
+            m.insert("work_ratio".into(), Json::Num(r.work_ratio));
+            m.insert("energy_efficiency".into(), Json::Num(r.energy_efficiency));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("experiment".into(), Json::Str("t1_t2_speedup_energy".into()));
+    top.insert(
+        "geomean_speedup".into(),
+        Json::Num(crate::util::stats::geomean(
+            &rows.iter().map(|r| r.speedup).collect::<Vec<_>>(),
+        )),
+    );
+    top.insert("rows".into(), Json::Arr(arr));
+    Json::Obj(top)
+}
+
+/// Default CPU baseline model shared by benches.
+pub fn default_cpu() -> CpuModel {
+    CpuModel::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn small_cfg() -> KMeansConfig {
+        KMeansConfig { k: 8, seed: 42, max_iters: 30, ..Default::default() }
+    }
+
+    #[test]
+    fn speedup_row_is_self_consistent() {
+        let ds = synth::blobs(3000, 32, 8, 5);
+        let row = speedup_energy_row(
+            &ds,
+            &small_cfg(),
+            &AccelConfig::default(),
+            &CpuModel::default(),
+        )
+        .unwrap();
+        assert!((row.speedup - row.cpu_seconds / row.fpga_seconds).abs() < 1e-9);
+        assert!((row.energy_efficiency - row.cpu_joules / row.fpga_joules).abs() < 1e-9);
+        assert!(row.work_ratio > 0.0 && row.work_ratio <= 1.01);
+        assert!(row.iterations > 1);
+    }
+
+    #[test]
+    fn ablation_orders_filters_correctly() {
+        let ds = synth::blobs(4000, 16, 8, 7);
+        let row = filter_ablation_row(&ds, &small_cfg(), &AccelConfig::default()).unwrap();
+        assert!((row.lloyd - 1.0).abs() < 1e-9, "lloyd is the 100% yardstick");
+        assert!(row.point_level < row.lloyd);
+        assert!(row.multi_level <= row.point_level * 1.05);
+        assert!(row.elkan <= row.multi_level * 1.5);
+        assert!(row.cycles_on < row.cycles_off);
+    }
+
+    #[test]
+    fn parallelism_sweep_has_a_frontier() {
+        let ds = synth::blobs(2000, 32, 8, 9);
+        let part = ZynqPart::xc7z020();
+        let mut prev_cycles = u64::MAX;
+        let mut saw_unfit = false;
+        for lanes in [1u64, 2, 4, 8, 16, 32, 64] {
+            let p = parallelism_point(&ds, &small_cfg(), lanes, 4, &part).unwrap();
+            if let Some(c) = p.cycles {
+                assert!(c <= prev_cycles, "more lanes should not be slower");
+                prev_cycles = c;
+            } else {
+                saw_unfit = true;
+            }
+        }
+        assert!(saw_unfit, "the sweep must eventually exceed the 7020");
+    }
+
+    #[test]
+    fn breakdown_fracs_sum_to_one() {
+        let ds = synth::blobs(2000, 16, 4, 11);
+        let row = dma_breakdown_row(&ds, &small_cfg(), &AccelConfig::default()).unwrap();
+        let sum = row.dma_in_frac + row.filter_frac + row.pipeline_frac + row.ps_update_frac;
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!(row.overlap_gain >= 1.0);
+    }
+
+    #[test]
+    fn bench_suite_is_capped_and_normalized() {
+        let suite = bench_suite(1, 2000);
+        assert_eq!(suite.len(), 6);
+        for ds in &suite {
+            assert!(ds.n() <= 2000);
+            assert!(ds.points.as_slice().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+}

@@ -1,0 +1,507 @@
+//! The composed KPynq PL accelerator: Multi-level Filters + Distance
+//! Calculator + DMA streaming, executed functionally and timed cycle-
+//! approximately.
+//!
+//! Functional path: every filter decision and every distance comes from
+//! `kmeans::yinyang::step_point` — the same function the software
+//! algorithm runs — so the accelerator's clustering output is identical to
+//! the software's *by construction* (asserted by the `hw_equivalence`
+//! integration tests). What this module adds is the **timing**: each
+//! iteration is split into streamed tiles; each tile charges
+//!
+//! * DMA-in (points + bounds + assignments),
+//! * the filter stage (drift update, global test, writeback),
+//! * the distance pipeline (only the work the filter let through),
+//! * DMA-out (updated bounds + assignments),
+//!
+//! with double buffering overlapping a tile's DMA against the previous
+//! tile's compute, exactly as the BRAM budget provisions (`resource`).
+//! The PS contributes the centroid update (divisions + drift) and transfer
+//! setup, converted to PL-clock cycles so the report has one currency.
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::kmeans::bounds::group_max_drifts;
+use crate::kmeans::lloyd::scan_all;
+use crate::kmeans::yinyang::{group_centroids, step_point, FilterState};
+use crate::kmeans::{
+    centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
+    KMeansConfig, RunStats,
+};
+use crate::util::matrix::Matrix;
+
+use super::dma::{Dir, DmaModel, Transfer};
+use super::energy::PowerModel;
+use super::filter_unit::FilterUnitConfig;
+use super::pipeline::PipelineConfig;
+use super::resource::{self, ProblemShape, ResourceEstimate, BOUND_BYTES, FEATURE_BYTES};
+use super::zynq::ZynqPart;
+
+/// Full accelerator configuration.
+#[derive(Clone, Debug)]
+pub struct AccelConfig {
+    pub pipeline: PipelineConfig,
+    pub filter: FilterUnitConfig,
+    /// Streaming tile size (points per DMA burst / BRAM tile).
+    pub tile_points: usize,
+    /// Disable the multi-level filter (ablation: hardware standard K-means).
+    pub enable_filters: bool,
+    pub part: ZynqPart,
+    pub power: PowerModel,
+}
+
+impl Default for AccelConfig {
+    /// The paper's design point: P=8 lanes × 8-wide MAC trees = 74 DSPs of
+    /// the 220, leaving headroom for the filter/bound arithmetic, with the
+    /// distance pipeline (not the AXIS link) as the unfiltered bottleneck —
+    /// the regime where the multi-level filter buys wall-clock.
+    /// `fig_parallelism_sweep` explores the rest of the space.
+    fn default() -> Self {
+        Self {
+            pipeline: PipelineConfig { lanes: 8, mac_width: 8 },
+            filter: FilterUnitConfig::default(),
+            tile_points: 256,
+            enable_filters: true,
+            part: ZynqPart::xc7z020(),
+            power: PowerModel::default(),
+        }
+    }
+}
+
+/// Cycle breakdown of one iteration (PL cycles; PS work converted).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CycleBreakdown {
+    pub dma_in: u64,
+    pub dma_out: u64,
+    pub filter: u64,
+    pub pipeline: u64,
+    pub ps_update: u64,
+    /// Makespan after double-buffer overlap (≤ sum of the parts).
+    pub total: u64,
+}
+
+impl CycleBreakdown {
+    pub fn serial_sum(&self) -> u64 {
+        self.dma_in + self.dma_out + self.filter + self.pipeline + self.ps_update
+    }
+}
+
+/// One iteration's outcome: work stats + cycles.
+#[derive(Clone, Debug)]
+pub struct IterOutcome {
+    pub stats: IterStats,
+    pub cycles: CycleBreakdown,
+}
+
+/// Whole accelerated run.
+#[derive(Clone, Debug)]
+pub struct AccelRunResult {
+    pub fit: FitResult,
+    pub iters: Vec<CycleBreakdown>,
+    pub total_cycles: u64,
+    pub seconds: f64,
+    /// Fraction of total cycles the distance pipeline was busy — feeds the
+    /// dynamic-power term of the energy model.
+    pub pipeline_utilization: f64,
+    pub dma_bytes: u64,
+    pub resources: ResourceEstimate,
+}
+
+/// The accelerator instance.
+pub struct Accelerator {
+    pub cfg: AccelConfig,
+    dma: DmaModel,
+}
+
+impl Accelerator {
+    pub fn new(cfg: AccelConfig) -> Self {
+        let dma = DmaModel::for_part(&cfg.part);
+        Self { cfg, dma }
+    }
+
+    /// Resource estimate for a problem shape; errors if it does not fit.
+    pub fn check_resources(&self, k: usize, d: usize, g: usize) -> Result<ResourceEstimate> {
+        let shape = ProblemShape::new(k, d, g, self.cfg.tile_points);
+        let est = resource::estimate(&self.cfg.pipeline, &self.cfg.filter, &shape);
+        est.check(&self.cfg.part)?;
+        Ok(est)
+    }
+
+    /// Run a complete K-means fit on the simulated accelerator.
+    ///
+    /// `init` must come from `kmeans::init::initialize` with the same
+    /// config for results to be comparable with the software algorithms.
+    pub fn run_fit(
+        &self,
+        ds: &Dataset,
+        cfg: &KMeansConfig,
+        init: Matrix,
+    ) -> Result<AccelRunResult> {
+        cfg.validate(ds.n())?;
+        let n = ds.n();
+        let d = ds.d();
+        let k = cfg.k;
+        let n_groups = if self.cfg.enable_filters {
+            cfg.effective_groups().clamp(1, k)
+        } else {
+            1
+        };
+        let resources = self.check_resources(k, d, n_groups)?;
+
+        let mut centroids = init;
+        let grouping = group_centroids(&centroids, n_groups, cfg.seed);
+        let mut stats = RunStats::default();
+        let mut iter_cycles: Vec<CycleBreakdown> = Vec::new();
+        let mut converged = false;
+        let mut iterations = 0usize;
+        let mut dma_bytes_total = 0u64;
+
+        // ---- Iteration 1: full scan (filters bypassed, bounds seeded) ----
+        let (mut st, init_dists) = FilterState::init_full_scan(ds, &centroids, &grouping);
+        let mut drifts;
+        let mut group_drifts;
+        {
+            iterations += 1;
+            let mut it = IterStats::default();
+            it.dist_comps = init_dists;
+            it.survivors = n as u64;
+            it.reassigned = n as u64;
+            let (cyc, bytes) = self.iteration_cycles_full_scan(n, d, k, n_groups);
+            dma_bytes_total += bytes;
+            let (new_c, _) = recompute_centroids(ds, &st.assignments, &centroids);
+            let (dr, max_drift) = centroid_drifts(&centroids, &new_c);
+            centroids = new_c;
+            it.max_drift = max_drift;
+            stats.push(it);
+            iter_cycles.push(cyc);
+            group_drifts = group_max_drifts(&dr, &grouping.group_of, grouping.n_groups());
+            drifts = dr;
+            if (max_drift as f64) <= cfg.tol {
+                converged = true;
+            } else if self.cfg.enable_filters {
+                st.apply_drifts(&drifts, &group_drifts);
+            }
+        }
+
+        // ---- Filtered iterations ----
+        while !converged && iterations < cfg.max_iters {
+            iterations += 1;
+            let mut it = IterStats::default();
+            let tile = self.cfg.tile_points;
+            let mut tile_compute: Vec<(u64, u64)> = Vec::new(); // (filter, pipeline)
+
+            let mut t_start = 0usize;
+            while t_start < n {
+                let t_end = (t_start + tile).min(n);
+                let mut tile_dists = 0u64;
+                let mut filter_cycles = 0u64;
+                for i in t_start..t_end {
+                    let row = ds.points.row(i);
+                    if self.cfg.enable_filters {
+                        let c = step_point(
+                            row, &centroids, &grouping, &drifts, &group_drifts, i, &mut st,
+                        );
+                        it.dist_comps += c.dists as u64;
+                        it.filtered_group += c.groups_skipped as u64;
+                        it.filtered_point += c.points_skipped as u64;
+                        if c.globally_filtered {
+                            it.filtered_global += 1;
+                        } else {
+                            it.survivors += 1;
+                        }
+                        if c.reassigned {
+                            it.reassigned += 1;
+                        }
+                        tile_dists += c.dists as u64;
+                        // Filter stage II per point: its sub-units pipeline
+                        // against each other, so a point costs the max.
+                        filter_cycles += self
+                            .cfg
+                            .filter
+                            .drift_update_cycles(n_groups)
+                            .max(self.cfg.filter.global_test_cycles(n_groups))
+                            .max(self.cfg.filter.writeback_cycles(n_groups));
+                    } else {
+                        let (arg, _, _) = scan_all(row, &centroids);
+                        if st.assignments[i] != arg as u32 {
+                            it.reassigned += 1;
+                            st.assignments[i] = arg as u32;
+                        }
+                        it.dist_comps += k as u64;
+                        it.survivors += 1;
+                        tile_dists += k as u64;
+                        filter_cycles += 1; // stream-through commit slot
+                    }
+                }
+                let pipe_cycles = self.cfg.pipeline.cycles(tile_dists, d);
+                tile_compute.push((filter_cycles, pipe_cycles));
+                t_start = t_end;
+            }
+
+            let (cyc, bytes) =
+                self.assemble_iteration(&tile_compute, n, d, k, n_groups, self.cfg.enable_filters);
+            dma_bytes_total += bytes;
+
+            let (new_c, _) = recompute_centroids(ds, &st.assignments, &centroids);
+            let (dr, max_drift) = centroid_drifts(&centroids, &new_c);
+            centroids = new_c;
+            it.max_drift = max_drift;
+            stats.push(it);
+            iter_cycles.push(cyc);
+            group_drifts = group_max_drifts(&dr, &grouping.group_of, grouping.n_groups());
+            drifts = dr;
+
+            if (max_drift as f64) <= cfg.tol {
+                converged = true;
+            } else if self.cfg.enable_filters {
+                st.apply_drifts(&drifts, &group_drifts);
+            }
+        }
+
+        let inertia = compute_inertia(ds, &centroids, &st.assignments);
+        let total_cycles: u64 = iter_cycles.iter().map(|c| c.total).sum();
+        let pipeline_busy: u64 = iter_cycles.iter().map(|c| c.pipeline).sum();
+        let seconds = self.cfg.part.pl_seconds(total_cycles);
+        Ok(AccelRunResult {
+            fit: FitResult {
+                centroids,
+                assignments: st.assignments,
+                inertia,
+                iterations,
+                converged,
+                stats,
+            },
+            iters: iter_cycles,
+            total_cycles,
+            seconds,
+            pipeline_utilization: if total_cycles > 0 {
+                pipeline_busy as f64 / total_cycles as f64
+            } else {
+                0.0
+            },
+            dma_bytes: dma_bytes_total,
+            resources,
+        })
+    }
+
+    /// Tile DMA transfers for one filtered iteration: the point stream is
+    /// split across two HP ports (the Zynq has four; KPynq dedicates two
+    /// to the point slab), bounds + prior assignments ride a third, and
+    /// results return on the fourth — all concurrent, sharing DDR.
+    fn tile_transfers(&self, pts: usize, d: usize, g: usize, filters: bool) -> Vec<Transfer> {
+        let p = pts as u64;
+        let d = d as u64;
+        let g = g as u64;
+        let point_bytes = p * d * FEATURE_BYTES;
+        let mut ts = vec![
+            Transfer { bytes: point_bytes / 2, dir: Dir::ToPl },
+            Transfer { bytes: point_bytes - point_bytes / 2, dir: Dir::ToPl },
+        ];
+        if filters {
+            ts.push(Transfer { bytes: p * (1 + g) * BOUND_BYTES + p * 2, dir: Dir::ToPl });
+            ts.push(Transfer { bytes: p * 2 + p * (1 + g) * BOUND_BYTES, dir: Dir::FromPl });
+        } else {
+            ts.push(Transfer { bytes: p * 2, dir: Dir::FromPl });
+        }
+        ts
+    }
+
+    /// Compose an iteration's makespan from per-tile compute costs with
+    /// double-buffered DMA overlap, plus the PS update step.
+    fn assemble_iteration(
+        &self,
+        tile_compute: &[(u64, u64)],
+        n: usize,
+        d: usize,
+        k: usize,
+        g: usize,
+        filters: bool,
+    ) -> (CycleBreakdown, u64) {
+        let tile = self.cfg.tile_points;
+        let mut cyc = CycleBreakdown::default();
+        let mut bytes_total = 0u64;
+
+        // Centroid broadcast at iteration start (both clock-domain copies).
+        let centroid_bytes = (k * d) as u64 * FEATURE_BYTES;
+        let centroid_dma = self
+            .dma
+            .transfer_cycles(Transfer { bytes: centroid_bytes, dir: Dir::ToPl });
+        bytes_total += centroid_bytes;
+
+        let mut pts_left = n;
+        let mut makespan = centroid_dma;
+        let mut prev_compute_end = makespan;
+        for (idx, &(filt_c, pipe_c)) in tile_compute.iter().enumerate() {
+            let pts = tile.min(pts_left);
+            pts_left -= pts;
+            let transfers = self.tile_transfers(pts, d, g, filters);
+            bytes_total += transfers.iter().map(|t| t.bytes).sum::<u64>();
+            let dma_in = self.dma.concurrent(&transfers);
+            // The filter and pipeline stages of one tile are themselves
+            // pipelined point-streams: tile compute ≈ max of the stages
+            // plus one pipeline drain.
+            let compute = filt_c.max(pipe_c) + self.cfg.pipeline.depth();
+            // Double buffering: tile i's DMA overlaps tile i-1's compute.
+            let dma_done = makespan + dma_in;
+            let compute_start = dma_done.max(prev_compute_end);
+            prev_compute_end = compute_start + compute;
+            makespan = dma_done;
+            cyc.dma_in += dma_in;
+            cyc.filter += filt_c;
+            cyc.pipeline += pipe_c;
+            if idx + 1 == tile_compute.len() {
+                makespan = prev_compute_end;
+            }
+        }
+        // Final result drain already included per-tile via b_out overlap;
+        // charge the residual out-transfer visibility as dma_out.
+        cyc.dma_out = 0;
+
+        // PS update: k·d divisions + drift norms (~6 ops each) at PS clock,
+        // plus one DMA setup for the next centroid broadcast.
+        let ps_ops = (k * d) as f64 * 6.0 + (k * d) as f64 * 2.0;
+        let ps_seconds = ps_ops / self.cfg.part.ps_clock_hz + 1.0e-6;
+        cyc.ps_update = self.cfg.part.pl_cycles(ps_seconds);
+
+        cyc.total = makespan + cyc.ps_update;
+        (cyc, bytes_total)
+    }
+
+    /// Iteration-1 (full scan) cycles: no bounds traffic, pipeline does
+    /// n·k distances, the filter stage only streams commits.
+    fn iteration_cycles_full_scan(
+        &self,
+        n: usize,
+        d: usize,
+        k: usize,
+        g: usize,
+    ) -> (CycleBreakdown, u64) {
+        let tile = self.cfg.tile_points;
+        let n_tiles = n.div_ceil(tile);
+        let mut tile_compute = Vec::with_capacity(n_tiles);
+        let mut pts_left = n;
+        for _ in 0..n_tiles {
+            let pts = tile.min(pts_left);
+            pts_left -= pts;
+            let dists = (pts * k) as u64;
+            // Bound writeback happens even on iteration 1 (seeding).
+            let filt = pts as u64 * self.cfg.filter.writeback_cycles(g);
+            tile_compute.push((filt, self.cfg.pipeline.cycles(dists, d)));
+        }
+        self.assemble_iteration(&tile_compute, n, d, k, g, self.cfg.enable_filters)
+    }
+
+    /// Energy report against a CPU run time (see `energy::PowerModel`).
+    pub fn energy(&self, run: &AccelRunResult, cpu_seconds: f64) -> super::energy::EnergyReport {
+        self.cfg
+            .power
+            .compare(run.seconds, run.pipeline_utilization, cpu_seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{self, init, Algorithm, InitMethod};
+
+    fn kcfg(k: usize, groups: usize) -> KMeansConfig {
+        KMeansConfig {
+            k,
+            groups,
+            seed: 7,
+            init: InitMethod::KMeansPlusPlus,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn functional_output_matches_software_yinyang() {
+        let ds = synth::blobs(1500, 16, 6, 3);
+        let cfg = kcfg(6, 2);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let sw = kmeans::fit_from(Algorithm::Yinyang, &ds, &cfg, c0.clone()).unwrap();
+        let acc = Accelerator::new(AccelConfig::default());
+        let hw = acc.run_fit(&ds, &cfg, c0).unwrap();
+        assert_eq!(sw.assignments, hw.fit.assignments);
+        assert_eq!(sw.centroids, hw.fit.centroids);
+        assert_eq!(sw.iterations, hw.fit.iterations);
+        assert_eq!(sw.stats.total_dist_comps(), hw.fit.stats.total_dist_comps());
+    }
+
+    #[test]
+    fn filters_disabled_matches_lloyd() {
+        let ds = synth::blobs(800, 8, 4, 5);
+        let cfg = kcfg(4, 0);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let sw = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let acc = Accelerator::new(AccelConfig { enable_filters: false, ..Default::default() });
+        let hw = acc.run_fit(&ds, &cfg, c0).unwrap();
+        assert_eq!(sw.assignments, hw.fit.assignments);
+        assert_eq!(sw.centroids, hw.fit.centroids);
+        assert_eq!(sw.iterations, hw.fit.iterations);
+    }
+
+    #[test]
+    fn filters_reduce_cycles() {
+        let ds = synth::blobs(4000, 32, 8, 9);
+        let cfg = kcfg(16, 4);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let on = Accelerator::new(AccelConfig::default())
+            .run_fit(&ds, &cfg, c0.clone())
+            .unwrap();
+        let off = Accelerator::new(AccelConfig { enable_filters: false, ..Default::default() })
+            .run_fit(&ds, &cfg, c0)
+            .unwrap();
+        // Same clustering, fewer cycles with the multi-level filter on.
+        assert_eq!(on.fit.assignments, off.fit.assignments);
+        assert!(
+            on.total_cycles < off.total_cycles,
+            "filters on {} vs off {}",
+            on.total_cycles,
+            off.total_cycles
+        );
+    }
+
+    #[test]
+    fn breakdown_totals_are_consistent() {
+        let ds = synth::blobs(1000, 16, 4, 11);
+        let cfg = kcfg(8, 2);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let run = Accelerator::new(AccelConfig::default()).run_fit(&ds, &cfg, c0).unwrap();
+        assert_eq!(run.iters.len(), run.fit.iterations);
+        for it in &run.iters {
+            assert!(it.total > 0);
+            // Overlap can hide stage time but never create it: the makespan
+            // is bounded by the serial sum.
+            assert!(it.total <= it.serial_sum() + 1);
+        }
+        assert!(run.seconds > 0.0);
+        assert!(run.pipeline_utilization > 0.0 && run.pipeline_utilization <= 1.0);
+        assert!(run.dma_bytes > 0);
+    }
+
+    #[test]
+    fn oversized_config_is_rejected() {
+        let acc = Accelerator::new(AccelConfig {
+            pipeline: PipelineConfig { lanes: 64, mac_width: 16 },
+            ..Default::default()
+        });
+        let ds = synth::blobs(512, 16, 4, 13);
+        let cfg = kcfg(8, 2);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        assert!(acc.run_fit(&ds, &cfg, c0).is_err());
+    }
+
+    #[test]
+    fn energy_report_is_positive_and_scaled() {
+        let ds = synth::blobs(1000, 8, 4, 17);
+        let cfg = kcfg(4, 1);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let acc = Accelerator::new(AccelConfig::default());
+        let run = acc.run_fit(&ds, &cfg, c0).unwrap();
+        let rep = acc.energy(&run, run.seconds * 3.0);
+        assert!(rep.fpga_joules > 0.0);
+        assert!(rep.efficiency_ratio > 3.0, "at 3x speedup the ratio must exceed 3");
+    }
+}

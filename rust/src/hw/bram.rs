@@ -1,0 +1,138 @@
+//! BRAM banking and capacity accounting.
+//!
+//! The PL accelerator keeps four things on-chip: the centroid bank (double
+//! buffered so the PS can write iteration t+1's centroids while t runs),
+//! the streaming point tile (double buffered against DMA), the bound tile
+//! and the per-cluster accumulators. Each allocation is carved from the
+//! part's BRAM_18K blocks; an allocation partitioned across `banks` banks
+//! for parallel access must round *each bank* up to whole 18 Kb blocks —
+//! the granularity loss is real on the 7020 and is what ultimately caps the
+//! lane count (see `resource::estimate` and the parallelism-sweep bench).
+
+use crate::error::{Error, Result};
+
+/// Bytes of data payload in one BRAM_18K block (2.25 KB: 18 Kb including
+/// parity bits, matching the 280 × 18 Kb = 630 KB figure in the paper).
+pub const BRAM_18K_BYTES: u64 = 2304;
+
+/// One named allocation.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub name: String,
+    pub bytes: u64,
+    /// Parallel banks the buffer is partitioned into (cyclic partition).
+    pub banks: u64,
+    /// BRAM_18K blocks consumed (≥ banks, each bank whole blocks).
+    pub blocks: u64,
+}
+
+/// Blocks needed for `bytes` split evenly over `banks` banks.
+pub fn blocks_for(bytes: u64, banks: u64) -> u64 {
+    assert!(banks > 0, "banks must be >= 1");
+    let per_bank = bytes.div_ceil(banks);
+    let blocks_per_bank = per_bank.div_ceil(BRAM_18K_BYTES).max(1);
+    blocks_per_bank * banks
+}
+
+/// A budget of BRAM_18K blocks with named allocations.
+#[derive(Clone, Debug)]
+pub struct BramBudget {
+    capacity_blocks: u64,
+    allocations: Vec<Allocation>,
+}
+
+impl BramBudget {
+    pub fn new(capacity_blocks: u64) -> Self {
+        Self { capacity_blocks, allocations: Vec::new() }
+    }
+
+    /// Allocate `bytes` partitioned over `banks`; errors on overflow.
+    pub fn alloc(&mut self, name: &str, bytes: u64, banks: u64) -> Result<&Allocation> {
+        let blocks = blocks_for(bytes, banks);
+        if self.used_blocks() + blocks > self.capacity_blocks {
+            return Err(Error::Resource {
+                part: format!("BRAM ({} blocks)", self.capacity_blocks),
+                detail: format!(
+                    "allocation '{name}' needs {blocks} BRAM_18K, only {} free \
+                     (used {} of {})",
+                    self.capacity_blocks - self.used_blocks(),
+                    self.used_blocks(),
+                    self.capacity_blocks
+                ),
+            });
+        }
+        self.allocations.push(Allocation {
+            name: name.to_string(),
+            bytes,
+            banks,
+            blocks,
+        });
+        Ok(self.allocations.last().unwrap())
+    }
+
+    pub fn used_blocks(&self) -> u64 {
+        self.allocations.iter().map(|a| a.blocks).sum()
+    }
+
+    pub fn free_blocks(&self) -> u64 {
+        self.capacity_blocks - self.used_blocks()
+    }
+
+    pub fn allocations(&self) -> &[Allocation] {
+        &self.allocations
+    }
+
+    /// Utilisation in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        self.used_blocks() as f64 / self.capacity_blocks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_round_up_per_bank() {
+        // 1 byte still costs a whole block.
+        assert_eq!(blocks_for(1, 1), 1);
+        // Exactly one block.
+        assert_eq!(blocks_for(BRAM_18K_BYTES, 1), 1);
+        // One byte over → two blocks.
+        assert_eq!(blocks_for(BRAM_18K_BYTES + 1, 1), 2);
+        // Partitioned: 4 banks of 1 byte each = 4 blocks, not 1.
+        assert_eq!(blocks_for(4, 4), 4);
+        // 9 KB over 2 banks: 4.5 KB/bank → 2 blocks/bank → 4 total.
+        assert_eq!(blocks_for(9 * 1024, 2), 4);
+    }
+
+    #[test]
+    fn budget_tracks_and_overflows() {
+        let mut b = BramBudget::new(10);
+        b.alloc("centroids", 4 * BRAM_18K_BYTES, 1).unwrap();
+        assert_eq!(b.used_blocks(), 4);
+        assert_eq!(b.free_blocks(), 6);
+        b.alloc("points", 2 * BRAM_18K_BYTES, 2).unwrap();
+        assert_eq!(b.used_blocks(), 6);
+        let err = b.alloc("too-big", 100 * BRAM_18K_BYTES, 1);
+        assert!(matches!(err, Err(Error::Resource { .. })));
+        // Failed allocation must not change state.
+        assert_eq!(b.used_blocks(), 6);
+        assert!((b.utilization() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partitioning_invariants() {
+        // Block count is NOT monotone in banks (per-bank rounding can pack
+        // better), but two invariants always hold: at least one block per
+        // bank, and at least the raw capacity.
+        let bytes = 10_000;
+        for banks in 1..=16 {
+            let blocks = blocks_for(bytes, banks);
+            assert!(blocks >= banks, "banks={banks}");
+            assert!(blocks * BRAM_18K_BYTES >= bytes, "banks={banks}");
+        }
+        // And heavy partitioning of a small buffer is pure waste.
+        assert_eq!(blocks_for(64, 16), 16);
+    }
+}

@@ -1,0 +1,131 @@
+//! Analytic timing model of the CPU baseline.
+//!
+//! Why a model and not host wall-clock: the simulation's FPGA side produces
+//! *Zynq* cycle counts, and comparing those against wall-clock on this
+//! machine's (much newer) CPU would make the speedup an artifact of the
+//! host. Instead both sides are expressed in the same currency — seconds
+//! derived from an explicit machine model — which is also how the paper's
+//! own evaluation should be read (their baseline hardware is fixed).
+//!
+//! The baseline is the paper's "optimized CPU-based standard K-means": a
+//! single-threaded, `-O3`-compiled Lloyd on a desktop-class core (the
+//! paper's implied ~95 W package — see `energy.rs` — rules out the on-board
+//! ARM). Calibration:
+//!
+//! * 3.4 GHz with SSE-class auto-vectorisation: 4 f32 MACs/cycle peak,
+//!   sustained efficiency 0.25 → ~3.4 GMAC/s. This is the measured class
+//!   of straightforward single-threaded K-means distance loops (argmin
+//!   dependency chain + strided centroid reads); hand-blocked AVX2 GEMM
+//!   formulations go far higher, but that is not the baseline the paper
+//!   (or any 2019 K-means acceleration paper) compares against.
+//! * A fixed per-distance overhead (loop control, argmin compare-and-
+//!   select ≈ 2 ns) that dominates for low-d datasets — why FPGA wins
+//!   shrink on roadnetwork-like data.
+//! * The assignment step reads every point every iteration: a bandwidth
+//!   floor of n·d·4 bytes / 20 GB/s effective.
+//!
+//! With these defaults the CPU sustains ~3.4 GMAC/s, against the 7020
+//! accelerator's 6.4 GMAC/s peak at the default P=8×W=8. Raw rates are
+//! comparable; KPynq's margin comes from the multi-level filter doing a
+//! fraction of the work — exactly the paper's "work-efficient" story (§I).
+//! The resulting speedup band (≈1× on d=3 up to ≈4× on d=128) matches the
+//! paper's avg 2.95× / max 4.2× shape; EXPERIMENTS.md §Calibration records
+//! the sensitivity of the table to these constants.
+
+/// CPU baseline parameters.
+#[derive(Clone, Debug)]
+pub struct CpuModel {
+    pub clock_hz: f64,
+    /// Peak f32 MACs per cycle (vector width × FMA ports).
+    pub macs_per_cycle: f64,
+    /// Sustained fraction of peak for the distance kernel.
+    pub efficiency: f64,
+    /// Fixed cost per point↔centroid distance (loop + argmin), seconds.
+    pub per_distance_overhead_s: f64,
+    /// Effective streaming bandwidth (bytes/s) for the n·d point sweep.
+    pub mem_bandwidth: f64,
+    /// Fixed per-iteration overhead (loop setup, reduction), seconds.
+    pub iter_overhead_s: f64,
+}
+
+impl Default for CpuModel {
+    fn default() -> Self {
+        Self {
+            clock_hz: 3.4e9,
+            macs_per_cycle: 4.0,
+            efficiency: 0.25,
+            per_distance_overhead_s: 2.0e-9,
+            mem_bandwidth: 20.0e9,
+            iter_overhead_s: 2.0e-6,
+        }
+    }
+}
+
+impl CpuModel {
+    /// Sustained MACs per second.
+    pub fn sustained_macs(&self) -> f64 {
+        self.clock_hz * self.macs_per_cycle * self.efficiency
+    }
+
+    /// Seconds for one standard-K-means iteration (assignment + update).
+    pub fn iteration_seconds(&self, n: usize, k: usize, d: usize) -> f64 {
+        let n_dists = (n as f64) * (k as f64);
+        let assign_macs = n_dists * (d as f64);
+        let compute =
+            assign_macs / self.sustained_macs() + n_dists * self.per_distance_overhead_s;
+        let memory = (n as f64) * (d as f64) * 4.0 / self.mem_bandwidth;
+        // Assignment is the max of its compute and memory costs (they
+        // overlap on an OoO core); update adds an n·d pass.
+        let update = (n as f64) * (d as f64) / self.sustained_macs()
+            + (n as f64) * (d as f64) * 4.0 / self.mem_bandwidth;
+        compute.max(memory) + update + self.iter_overhead_s
+    }
+
+    /// Seconds for a whole standard-K-means run.
+    pub fn run_seconds(&self, n: usize, k: usize, d: usize, iterations: usize) -> f64 {
+        self.iteration_seconds(n, k, d) * iterations as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sustained_rate_is_sane() {
+        let m = CpuModel::default();
+        let g = m.sustained_macs() / 1e9;
+        assert!((2.0..6.0).contains(&g), "sustained {g} GMAC/s");
+    }
+
+    #[test]
+    fn low_d_is_overhead_dominated() {
+        // At d=3 the per-distance overhead must contribute more than the
+        // MAC work — the reason low-d datasets favour the CPU less/more
+        // evenly (see module docs).
+        let m = CpuModel::default();
+        let overhead = m.per_distance_overhead_s;
+        let macs = 3.0 / m.sustained_macs();
+        assert!(overhead > macs, "{overhead} vs {macs}");
+    }
+
+    #[test]
+    fn compute_bound_for_large_k_memory_bound_for_k1() {
+        let m = CpuModel::default();
+        // k=64: assignment compute dominates the memory sweep.
+        let t64 = m.iteration_seconds(100_000, 64, 32);
+        let macs = 100_000.0 * 64.0 * 32.0;
+        assert!(t64 >= macs / m.sustained_macs());
+        // k=1: memory floor dominates; time must exceed the sweep cost.
+        let t1 = m.iteration_seconds(1_000_000, 1, 8);
+        assert!(t1 >= 1_000_000.0 * 8.0 * 4.0 / m.mem_bandwidth);
+    }
+
+    #[test]
+    fn scales_linearly_in_iterations() {
+        let m = CpuModel::default();
+        let one = m.run_seconds(10_000, 16, 32, 1);
+        let ten = m.run_seconds(10_000, 16, 32, 10);
+        assert!((ten / one - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,184 @@
+//! DMA controller + AXIS stream timing model.
+//!
+//! The paper: "a DMA controller and a high-performance AXIS streaming
+//! interface build the data connection between PS and PL", with the Python
+//! program in PS initiating transfers. The model charges:
+//!
+//! * a fixed per-transfer setup cost (descriptor write + interrupt path,
+//!   paid on the PS but expressed in PL cycles);
+//! * per-burst overhead on the AXI HP port;
+//! * streaming cycles at `min(port width × PL clock, DDR share)`.
+//!
+//! Multiple in-flight streams (points in, bounds in, results out) share the
+//! DDR bandwidth ceiling; [`DmaModel::concurrent`] computes the makespan of
+//! a set of parallel transfers under that ceiling — used by the coordinator
+//! when double-buffering tiles.
+
+use super::zynq::ZynqPart;
+
+/// One direction of a DMA transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// DDR → PL (points, centroids, bounds in).
+    ToPl,
+    /// PL → DDR (assignments, bounds out, accumulators).
+    FromPl,
+}
+
+/// A requested transfer.
+#[derive(Clone, Copy, Debug)]
+pub struct Transfer {
+    pub bytes: u64,
+    pub dir: Dir,
+}
+
+/// Timing parameters of the AXI DMA engine.
+#[derive(Clone, Debug)]
+pub struct DmaModel {
+    /// Port payload per PL cycle (bytes) — AXI HP is 64-bit on Zynq-7000.
+    pub port_bytes_per_cycle: u64,
+    /// Burst length in beats (AXI4 INCR bursts, 256 max; 64 typical).
+    pub burst_beats: u64,
+    /// Dead cycles between bursts (address phase + handshake).
+    pub inter_burst_gap: u64,
+    /// Fixed setup cost per transfer, in PL cycles. AXI DMA in
+    /// scatter-gather mode prefetches descriptor chains, so the steady-
+    /// state per-tile cost is the descriptor fetch + channel turnaround
+    /// (~0.4 µs ≈ 40 PL cycles at 100 MHz), not a full PS interrupt round
+    /// trip.
+    pub setup_cycles: u64,
+    /// Shared DDR bandwidth ceiling, bytes per second.
+    pub ddr_bandwidth: f64,
+    /// PL clock, needed to convert the DDR ceiling into per-cycle budget.
+    pub pl_clock_hz: f64,
+}
+
+impl DmaModel {
+    pub fn for_part(part: &ZynqPart) -> Self {
+        Self {
+            port_bytes_per_cycle: part.axi_hp_bytes,
+            burst_beats: 64,
+            inter_burst_gap: 4,
+            setup_cycles: 40,
+            ddr_bandwidth: part.ddr_bandwidth,
+            pl_clock_hz: part.pl_clock_hz,
+        }
+    }
+
+    /// PL cycles for one transfer on an otherwise idle port.
+    pub fn transfer_cycles(&self, t: Transfer) -> u64 {
+        if t.bytes == 0 {
+            return 0;
+        }
+        let beats = t.bytes.div_ceil(self.port_bytes_per_cycle);
+        let bursts = beats.div_ceil(self.burst_beats);
+        let stream = beats + bursts.saturating_sub(1) * self.inter_burst_gap;
+        // DDR ceiling: the port cannot stream faster than its DDR share.
+        let ddr_bytes_per_cycle = self.ddr_bandwidth / self.pl_clock_hz;
+        let ddr_cycles = (t.bytes as f64 / ddr_bytes_per_cycle).ceil() as u64;
+        self.setup_cycles + stream.max(ddr_cycles)
+    }
+
+    /// Makespan (PL cycles) of transfers running concurrently on separate
+    /// HP ports but sharing DDR bandwidth: each transfer takes at least its
+    /// solo time, and the set takes at least total-bytes / DDR-rate.
+    pub fn concurrent(&self, transfers: &[Transfer]) -> u64 {
+        if transfers.is_empty() {
+            return 0;
+        }
+        let solo_max = transfers
+            .iter()
+            .map(|&t| self.transfer_cycles(t))
+            .max()
+            .unwrap_or(0);
+        let total_bytes: u64 = transfers.iter().map(|t| t.bytes).sum();
+        let ddr_bytes_per_cycle = self.ddr_bandwidth / self.pl_clock_hz;
+        let ddr_floor = (total_bytes as f64 / ddr_bytes_per_cycle).ceil() as u64
+            + self.setup_cycles;
+        solo_max.max(ddr_floor)
+    }
+
+    /// Effective bandwidth (bytes/s) achieved by one transfer of `bytes`.
+    pub fn effective_bandwidth(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let cycles = self.transfer_cycles(Transfer { bytes, dir: Dir::ToPl });
+        bytes as f64 / (cycles as f64 / self.pl_clock_hz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> DmaModel {
+        DmaModel::for_part(&ZynqPart::xc7z020())
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        assert_eq!(model().transfer_cycles(Transfer { bytes: 0, dir: Dir::ToPl }), 0);
+    }
+
+    #[test]
+    fn small_transfer_dominated_by_setup() {
+        let m = model();
+        let c = m.transfer_cycles(Transfer { bytes: 64, dir: Dir::ToPl });
+        // 64 B = 8 beats, one burst → setup + 8.
+        assert_eq!(c, m.setup_cycles + 8);
+    }
+
+    #[test]
+    fn cycles_conserve_bytes() {
+        // Streaming cycles must never be fewer than bytes / port width —
+        // the link physically cannot move more than 8 B/cycle.
+        let m = model();
+        for bytes in [1u64, 100, 4096, 1 << 20, 10 << 20] {
+            let c = m.transfer_cycles(Transfer { bytes, dir: Dir::ToPl });
+            assert!(
+                c >= bytes.div_ceil(m.port_bytes_per_cycle),
+                "bytes {bytes} took only {c} cycles"
+            );
+        }
+    }
+
+    #[test]
+    fn large_transfer_is_port_limited() {
+        // A single HP port moves 8 B/cycle at 100 MHz = 800 MB/s; a big
+        // transfer must approach (but never exceed) that, far below the
+        // DDR ceiling — which only binds for concurrent transfers.
+        let m = model();
+        let bytes = 64u64 << 20; // 64 MB
+        let bw = m.effective_bandwidth(bytes);
+        let port_rate = m.port_bytes_per_cycle as f64 * m.pl_clock_hz;
+        assert!(bw <= port_rate * 1.01, "bw {bw} exceeds the port");
+        assert!(bw > port_rate * 0.85, "bw {bw} too low for a large burst");
+        assert!(bw < m.ddr_bandwidth);
+    }
+
+    #[test]
+    fn concurrent_is_bounded_by_parts() {
+        let m = model();
+        let a = Transfer { bytes: 1 << 20, dir: Dir::ToPl };
+        let b = Transfer { bytes: 1 << 18, dir: Dir::FromPl };
+        let mk = m.concurrent(&[a, b]);
+        // At least as long as the longest member…
+        assert!(mk >= m.transfer_cycles(a));
+        // …and no longer than running them back-to-back.
+        assert!(mk <= m.transfer_cycles(a) + m.transfer_cycles(b));
+    }
+
+    #[test]
+    fn concurrent_respects_ddr_floor() {
+        let m = model();
+        // Many large parallel transfers: makespan must respect total bytes
+        // over DDR bandwidth.
+        let ts: Vec<Transfer> =
+            (0..4).map(|_| Transfer { bytes: 8 << 20, dir: Dir::ToPl }).collect();
+        let mk = m.concurrent(&ts);
+        let ddr_bytes_per_cycle = m.ddr_bandwidth / m.pl_clock_hz;
+        let floor = ((32 << 20) as f64 / ddr_bytes_per_cycle) as u64;
+        assert!(mk >= floor);
+    }
+}

@@ -1,0 +1,121 @@
+//! Power and energy model.
+//!
+//! The paper reports energy-efficiency ratios (up to 218×, 150.90× average)
+//! alongside much smaller speedups (up to 4.2×, 2.95× average). The implied
+//! power ratio is remarkably consistent: 218/4.2 ≈ 51.9 and 150.9/2.95 ≈
+//! 51.2 — i.e. the CPU baseline burns ~51× the board power. That pins the
+//! model: a ~95 W desktop-class CPU package against a ~1.85 W Pynq-Z1
+//! (Zynq-7020 budgets: ~0.24 W static PL, ~0.6 W dynamic PL at full
+//! datapath activity, ~1.4 W PS + DDR + board). The anchor is the
+//! *operating point*: at the ~35% pipeline utilisation the simulated runs
+//! report, board power ≈ 1.85 W and the ratio ≈ 51× — the paper's implied
+//! value. Components stay explicit so the ablation benches can show how
+//! energy scales with utilisation rather than hard-coding the ratio.
+
+/// Power parameters (watts).
+#[derive(Clone, Debug)]
+pub struct PowerModel {
+    /// PL static leakage.
+    pub pl_static_w: f64,
+    /// PL dynamic at 100% datapath activity (scaled by utilisation).
+    pub pl_dynamic_w: f64,
+    /// PS core + DDR + board overhead while the accelerator runs.
+    pub board_base_w: f64,
+    /// CPU baseline package power under K-means load.
+    pub cpu_w: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        Self {
+            pl_static_w: 0.24,
+            pl_dynamic_w: 0.60,
+            board_base_w: 1.40,
+            cpu_w: 95.0,
+        }
+    }
+}
+
+/// Energy figures for one run.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyReport {
+    pub fpga_joules: f64,
+    pub cpu_joules: f64,
+    /// cpu_joules / fpga_joules — the paper's "energy-efficiency" metric.
+    pub efficiency_ratio: f64,
+}
+
+impl PowerModel {
+    /// Board power while the accelerator runs at `utilization` ∈ [0, 1]
+    /// (fraction of cycles the datapath is active, from the cycle model).
+    pub fn board_power(&self, utilization: f64) -> f64 {
+        self.board_base_w + self.pl_static_w + self.pl_dynamic_w * utilization.clamp(0.0, 1.0)
+    }
+
+    /// Energy comparison for an accelerator run of `fpga_seconds` at
+    /// `utilization` against a CPU run of `cpu_seconds`.
+    pub fn compare(&self, fpga_seconds: f64, utilization: f64, cpu_seconds: f64) -> EnergyReport {
+        let fpga_joules = self.board_power(utilization) * fpga_seconds;
+        let cpu_joules = self.cpu_w * cpu_seconds;
+        EnergyReport {
+            fpga_joules,
+            cpu_joules,
+            efficiency_ratio: cpu_joules / fpga_joules,
+        }
+    }
+
+    /// The power ratio at the typical operating utilisation (~35% datapath
+    /// activity in the simulated runs) — the factor linking speedup to
+    /// energy-efficiency (≈ 51 with default parameters, matching the
+    /// paper's implied 150.90/2.95 ≈ 218/4.2 ≈ 51).
+    pub fn operating_power_ratio(&self) -> f64 {
+        self.cpu_w / self.board_power(0.35)
+    }
+
+    /// The power ratio at full datapath activity (lower bound on the
+    /// ratio; utilisation can only help the FPGA).
+    pub fn full_power_ratio(&self) -> f64 {
+        self.cpu_w / self.board_power(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_ratio_matches_papers_implication() {
+        let m = PowerModel::default();
+        let r = m.operating_power_ratio();
+        // 150.90 / 2.95 = 51.15 and 218 / 4.2 = 51.9 — the model must land
+        // in that band at the operating utilisation.
+        assert!((49.0..54.0).contains(&r), "power ratio {r}");
+        assert!(m.full_power_ratio() < r, "full activity draws more");
+    }
+
+    #[test]
+    fn energy_efficiency_is_speedup_times_power_ratio() {
+        let m = PowerModel::default();
+        let cpu_s = 10.0;
+        let fpga_s = cpu_s / 2.95; // the paper's average speedup
+        let rep = m.compare(fpga_s, 0.35, cpu_s);
+        let expected = 2.95 * m.operating_power_ratio();
+        assert!(
+            (rep.efficiency_ratio - expected).abs() < 1e-9,
+            "{} vs {}",
+            rep.efficiency_ratio,
+            expected
+        );
+        // And the band includes the paper's 150.90×.
+        assert!((140.0..160.0).contains(&rep.efficiency_ratio));
+    }
+
+    #[test]
+    fn idle_logic_draws_less() {
+        let m = PowerModel::default();
+        assert!(m.board_power(0.0) < m.board_power(1.0));
+        let low = m.compare(1.0, 0.1, 1.0);
+        let high = m.compare(1.0, 0.9, 1.0);
+        assert!(low.fpga_joules < high.fpga_joules);
+    }
+}

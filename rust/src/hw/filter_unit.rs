@@ -1,0 +1,84 @@
+//! The Multi-level Filter stage, as hardware.
+//!
+//! In the PL the filter sits between the AXIS input and the distance
+//! pipeline: each point's bounds are read from the bound BRAM, the global
+//! test is `G` parallel comparators plus a min-tree (one point per cycle
+//! for G up to [`FilterUnitConfig::max_parallel_groups`]), and survivors
+//! issue group scans to the pipeline. Bound updates on the way out cost
+//! one write slot per point.
+//!
+//! The unit is *timing-only* — functional decisions come from
+//! `kmeans::yinyang::step_point` — but its comparator count shows up in
+//! the LUT budget (`resource::estimate`) and its throughput in the cycle
+//! model.
+
+/// Configuration of the filter stage.
+#[derive(Clone, Copy, Debug)]
+pub struct FilterUnitConfig {
+    /// Comparators instantiated for the group min-tree: the global test
+    /// processes min(G, this) bounds per cycle.
+    pub max_parallel_groups: u64,
+}
+
+impl Default for FilterUnitConfig {
+    fn default() -> Self {
+        Self { max_parallel_groups: 16 }
+    }
+}
+
+impl FilterUnitConfig {
+    /// Cycles for the global-filter test of one point with `g` groups:
+    /// ceil(g / parallel) comparator waves + 1 commit cycle.
+    pub fn global_test_cycles(&self, g: usize) -> u64 {
+        (g as u64).div_ceil(self.max_parallel_groups) + 1
+    }
+
+    /// Cycles to apply drift updates to one point's bounds (1 + g values,
+    /// four per cycle: two true-dual-port BRAMs banked over the bound
+    /// tile, each feeding an add lane per port).
+    pub fn drift_update_cycles(&self, g: usize) -> u64 {
+        (1 + g as u64).div_ceil(4)
+    }
+
+    /// Cycles to write back one point's updated bounds + assignment.
+    pub fn writeback_cycles(&self, g: usize) -> u64 {
+        // assignment + ub in one beat, bounds four per cycle (same banks).
+        1.max((1 + g as u64).div_ceil(4))
+    }
+
+    /// LUTs for the comparator bank + min tree (16-bit compare ≈ 16 LUTs,
+    /// min-tree mux ≈ 24 LUTs per node).
+    pub fn luts(&self) -> u64 {
+        self.max_parallel_groups * 16 + self.max_parallel_groups.saturating_sub(1) * 24
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_wave_for_small_g() {
+        let f = FilterUnitConfig::default();
+        assert_eq!(f.global_test_cycles(1), 2);
+        assert_eq!(f.global_test_cycles(16), 2);
+        assert_eq!(f.global_test_cycles(17), 3);
+        assert_eq!(f.global_test_cycles(32), 3);
+    }
+
+    #[test]
+    fn update_and_writeback_scale_with_groups() {
+        let f = FilterUnitConfig::default();
+        assert_eq!(f.drift_update_cycles(1), 1);
+        assert_eq!(f.drift_update_cycles(8), 3); // ceil(9/4)
+        assert_eq!(f.writeback_cycles(8), 3);
+        assert_eq!(f.writeback_cycles(1), 1);
+    }
+
+    #[test]
+    fn luts_grow_with_parallelism() {
+        let small = FilterUnitConfig { max_parallel_groups: 4 }.luts();
+        let big = FilterUnitConfig { max_parallel_groups: 16 }.luts();
+        assert!(big > small);
+    }
+}

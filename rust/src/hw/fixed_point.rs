@@ -1,0 +1,95 @@
+//! Q-format fixed-point analysis for the PL datapath.
+//!
+//! The Artix-7 DSP48E1 is a 25×18-bit multiplier; KPynq-class designs run
+//! the distance datapath in 16-bit fixed point on min-max-normalised data.
+//! The *functional* simulation uses f32 (so the exactness property against
+//! Lloyd holds bit-for-bit); this module quantifies what the silicon would
+//! lose: quantisation of inputs, products and the accumulator. The
+//! `fixed_point_fidelity` integration test uses it to show that on
+//! normalised data, Q1.15 inputs with a Q12.20 accumulator reproduce f32
+//! assignments for >99.9% of points — the justification for modelling the
+//! datapath functionally in f32 (DESIGN.md §1).
+
+/// A signed fixed-point format with `frac` fractional bits in `bits` total.
+#[derive(Clone, Copy, Debug)]
+pub struct QFormat {
+    pub bits: u32,
+    pub frac: u32,
+}
+
+impl QFormat {
+    /// Q1.15: the 16-bit input format for normalised features.
+    pub const Q1_15: QFormat = QFormat { bits: 16, frac: 15 };
+    /// Q12.20: 32-bit accumulator with headroom for d ≤ 2048 sums of
+    /// unit-range squared terms.
+    pub const Q12_20: QFormat = QFormat { bits: 32, frac: 20 };
+
+    pub fn step(&self) -> f64 {
+        2.0f64.powi(-(self.frac as i32))
+    }
+
+    pub fn max_value(&self) -> f64 {
+        2.0f64.powi(self.bits as i32 - 1 - self.frac as i32) - self.step()
+    }
+
+    pub fn min_value(&self) -> f64 {
+        -2.0f64.powi(self.bits as i32 - 1 - self.frac as i32)
+    }
+
+    /// Quantise (round-to-nearest, saturating).
+    pub fn quantize(&self, x: f64) -> f64 {
+        let clamped = x.clamp(self.min_value(), self.max_value());
+        (clamped / self.step()).round() * self.step()
+    }
+
+    /// Quantise an f32 slice into a new Vec (for fidelity experiments).
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<f32> {
+        xs.iter().map(|&x| self.quantize(x as f64) as f32).collect()
+    }
+
+    /// Worst-case absolute error of a d-dim squared distance computed with
+    /// inputs in this format (each coordinate error ≤ step/2, differences
+    /// double it; first-order bound for |x|,|c| ≤ 1).
+    pub fn sq_dist_error_bound(&self, d: usize) -> f64 {
+        // |(x+e1 - c-e2)^2 - (x-c)^2| ≤ 2|x-c||e1-e2| + (e1-e2)^2,
+        // with |x-c| ≤ 1 and |e1-e2| ≤ step: per-dim ≈ 2·step.
+        2.0 * self.step() * d as f64 + self.step() * self.step() * d as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q115_range_and_step() {
+        let q = QFormat::Q1_15;
+        assert!((q.step() - 3.0517578125e-5).abs() < 1e-15);
+        assert!((q.max_value() - (1.0 - q.step())).abs() < 1e-12);
+        assert_eq!(q.min_value(), -1.0);
+    }
+
+    #[test]
+    fn quantize_rounds_and_saturates() {
+        let q = QFormat::Q1_15;
+        assert_eq!(q.quantize(0.5), 0.5); // exactly representable
+        assert_eq!(q.quantize(10.0), q.max_value());
+        assert_eq!(q.quantize(-10.0), -1.0);
+        let x = 0.123456789;
+        assert!((q.quantize(x) - x).abs() <= q.step() / 2.0 + 1e-15);
+    }
+
+    #[test]
+    fn error_bound_is_small_for_normalized_data() {
+        // d=128 normalised features: error bound ≪ typical inter-centroid
+        // squared distances (~1e-2 after min-max scaling).
+        let b = QFormat::Q1_15.sq_dist_error_bound(128);
+        assert!(b < 1e-2, "bound {b}");
+    }
+
+    #[test]
+    fn accumulator_holds_worst_case_sum() {
+        // Worst-case squared distance on [0,1]^1024 data is 1024 ≤ Q12.20 max.
+        assert!(QFormat::Q12_20.max_value() >= 1024.0);
+    }
+}

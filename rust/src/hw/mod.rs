@@ -1,0 +1,35 @@
+//! Cycle-approximate model of the KPynq hardware (DESIGN.md §1).
+//!
+//! The paper deploys on a Pynq-Z1 (Zynq XC7Z020: ARM Cortex-A9 PS + Artix-7
+//! PL). No FPGA exists in this environment, so this module *is* the board:
+//!
+//! * [`zynq`] — the part: resource counts, clocks, AXI port widths.
+//! * [`bram`] — on-chip BRAM banking and capacity accounting.
+//! * [`dma`] — the DMA controller + AXIS stream timing model.
+//! * [`pipeline`] — the pipelined, lane-parallel Distance Calculator.
+//! * [`filter_unit`] — the Multi-level Filter stage (point + group level).
+//! * [`accelerator`] — the composed PL core: functional execution is
+//!   delegated to `kmeans::yinyang::step_point` (identical decisions to the
+//!   software algorithm, by construction) while the timing model charges
+//!   cycles to DMA / filter / pipeline / PS-update per the configuration.
+//! * [`resource`] — LUT/FF/DSP/BRAM estimator: which configurations fit.
+//! * [`energy`] — power/energy model calibrated to the paper's
+//!   energy-efficiency ratio structure.
+//! * [`cpu_model`] — the CPU baseline's analytic timing model, so CPU and
+//!   FPGA are compared in one consistent currency (see DESIGN.md §1, the
+//!   substitution table, for why measured host wall-clock is *not* used).
+//! * [`fixed_point`] — Q-format quantisation analysis for the datapath.
+
+pub mod accelerator;
+pub mod bram;
+pub mod cpu_model;
+pub mod dma;
+pub mod energy;
+pub mod filter_unit;
+pub mod fixed_point;
+pub mod pipeline;
+pub mod resource;
+pub mod zynq;
+
+pub use accelerator::{AccelConfig, Accelerator, CycleBreakdown, IterOutcome};
+pub use zynq::ZynqPart;

@@ -1,0 +1,129 @@
+//! The Distance Calculator: a lane-parallel, fully pipelined MAC datapath.
+//!
+//! KPynq's compute stage: `lanes` independent distance units, each built
+//! from `mac_width` DSP48 multiply-accumulators feeding a balanced adder
+//! tree, initiation interval 1. One (point, centroid) distance of
+//! dimensionality `d` occupies a lane for `ceil(d / mac_width)` issue
+//! slots; the pipeline's depth (multiplier stages + adder tree +
+//! accumulate + sqrt approx) is paid once per drain.
+//!
+//! The model is deliberately *work-driven*: the accelerator hands it the
+//! exact number of distances the filter let through (from
+//! `yinyang::StepCounts`), and it converts work → cycles. That keeps the
+//! timing faithful to the paper's architecture (compute scales with
+//! surviving work, not with n·k) without simulating every register.
+
+/// Configuration of the distance pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Parallel distance lanes (the paper's "degree of parallelism").
+    pub lanes: u64,
+    /// MACs per lane per cycle (DSP48s in the dot-product tree).
+    pub mac_width: u64,
+}
+
+impl PipelineConfig {
+    /// DSPs consumed: one DSP48E1 per fixed-point MAC, plus one per lane
+    /// for the subtract-square pre-stage sharing.
+    pub fn dsp_used(&self) -> u64 {
+        self.lanes * (self.mac_width + 1)
+    }
+
+    /// Pipeline depth in cycles: subtract (1) + multiply (3) + adder tree
+    /// (log2 width) + accumulate (1) + compare/commit (1).
+    pub fn depth(&self) -> u64 {
+        let tree = 64 - (self.mac_width.max(1) - 1).leading_zeros() as u64;
+        6 + tree
+    }
+
+    /// Issue slots one distance of dimension `d` occupies on a lane.
+    pub fn slots_per_distance(&self, d: usize) -> u64 {
+        (d as u64).div_ceil(self.mac_width)
+    }
+
+    /// Cycles to compute `n_distances` distances of dimension `d`, spread
+    /// over the lanes, including one drain.
+    pub fn cycles(&self, n_distances: u64, d: usize) -> u64 {
+        if n_distances == 0 {
+            return 0;
+        }
+        let slots = n_distances * self.slots_per_distance(d);
+        slots.div_ceil(self.lanes) + self.depth()
+    }
+
+    /// Peak MACs per second at the given clock.
+    pub fn peak_macs_per_sec(&self, clock_hz: f64) -> f64 {
+        (self.lanes * self.mac_width) as f64 * clock_hz
+    }
+
+    /// Fraction of peak MAC throughput achieved for a workload that needed
+    /// `n_distances` distances of dimension `d` in `total_cycles`.
+    pub fn utilization(&self, n_distances: u64, d: usize, total_cycles: u64) -> f64 {
+        if total_cycles == 0 {
+            return 0.0;
+        }
+        let useful_macs = n_distances * d as u64;
+        let peak = total_cycles * self.lanes * self.mac_width;
+        useful_macs as f64 / peak as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dsp_accounting() {
+        let p = PipelineConfig { lanes: 16, mac_width: 8 };
+        assert_eq!(p.dsp_used(), 16 * 9);
+    }
+
+    #[test]
+    fn slots_round_up() {
+        let p = PipelineConfig { lanes: 4, mac_width: 8 };
+        assert_eq!(p.slots_per_distance(8), 1);
+        assert_eq!(p.slots_per_distance(9), 2);
+        assert_eq!(p.slots_per_distance(1), 1);
+        assert_eq!(p.slots_per_distance(64), 8);
+    }
+
+    #[test]
+    fn cycles_scale_linearly_with_work() {
+        let p = PipelineConfig { lanes: 8, mac_width: 4 };
+        let base = p.cycles(1_000, 16) - p.depth();
+        let double = p.cycles(2_000, 16) - p.depth();
+        assert_eq!(double, base * 2);
+        assert_eq!(p.cycles(0, 16), 0);
+    }
+
+    #[test]
+    fn more_lanes_never_slower() {
+        for lanes in [1u64, 2, 4, 8, 16] {
+            let a = PipelineConfig { lanes, mac_width: 4 }.cycles(10_000, 32);
+            let b = PipelineConfig { lanes: lanes * 2, mac_width: 4 }.cycles(10_000, 32);
+            assert!(b <= a, "lanes {lanes}: {b} > {a}");
+        }
+    }
+
+    #[test]
+    fn utilization_bounded_and_high_when_saturated() {
+        let p = PipelineConfig { lanes: 8, mac_width: 8 };
+        let n = 100_000u64;
+        let d = 64usize;
+        let cyc = p.cycles(n, d);
+        let u = p.utilization(n, d, cyc);
+        assert!(u <= 1.0);
+        // d=64 is a multiple of mac_width → utilization near 1 at scale.
+        assert!(u > 0.95, "u = {u}");
+    }
+
+    #[test]
+    fn padding_loss_shows_in_utilization() {
+        // d=9 on width 8 wastes 7/16 of slots.
+        let p = PipelineConfig { lanes: 4, mac_width: 8 };
+        let n = 50_000u64;
+        let cyc = p.cycles(n, 9);
+        let u = p.utilization(n, 9, cyc);
+        assert!(u < 0.6, "u = {u}");
+    }
+}

@@ -1,0 +1,248 @@
+//! Resource estimation: which accelerator configurations fit which part.
+//!
+//! The paper's §I claim — "much more scalable and highly configurable
+//! equipped with a set of tunable parameters (e.g. degree of parallelism),
+//! which help to handle various datasets" — is only meaningful if the
+//! tunables are checked against the part's LUT/FF/DSP/BRAM budget. This
+//! module prices a configuration for a given problem shape and reports
+//! what binds first; `fig_parallelism_sweep` regenerates the resulting
+//! lane-count frontier.
+
+use super::bram::blocks_for;
+use super::filter_unit::FilterUnitConfig;
+use super::pipeline::PipelineConfig;
+use super::zynq::ZynqPart;
+use crate::error::{Error, Result};
+
+/// Static problem geometry the bitstream is built for.
+#[derive(Clone, Copy, Debug)]
+pub struct ProblemShape {
+    /// Max clusters supported by the centroid bank.
+    pub k: usize,
+    /// Max dimensionality.
+    pub d: usize,
+    /// Max filter groups.
+    pub g: usize,
+    /// Streaming tile size in points.
+    pub tile_points: usize,
+}
+
+impl ProblemShape {
+    pub fn new(k: usize, d: usize, g: usize, tile_points: usize) -> Self {
+        Self { k, d, g, tile_points }
+    }
+}
+
+/// Estimated resource usage of one configuration.
+#[derive(Clone, Debug)]
+pub struct ResourceEstimate {
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsp: u64,
+    pub bram_18k: u64,
+    /// Per-buffer BRAM breakdown: (name, blocks).
+    pub bram_detail: Vec<(String, u64)>,
+}
+
+impl ResourceEstimate {
+    /// Check against a part; the error names the binding resource.
+    pub fn check(&self, part: &ZynqPart) -> Result<()> {
+        let mut over = Vec::new();
+        if self.luts > part.luts {
+            over.push(format!("LUT {}/{}", self.luts, part.luts));
+        }
+        if self.ffs > part.ffs {
+            over.push(format!("FF {}/{}", self.ffs, part.ffs));
+        }
+        if self.dsp > part.dsp {
+            over.push(format!("DSP {}/{}", self.dsp, part.dsp));
+        }
+        if self.bram_18k > part.bram_18k {
+            over.push(format!("BRAM_18K {}/{}", self.bram_18k, part.bram_18k));
+        }
+        if over.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Resource { part: part.name.to_string(), detail: over.join(", ") })
+        }
+    }
+
+    pub fn fits(&self, part: &ZynqPart) -> bool {
+        self.check(part).is_ok()
+    }
+
+    /// Utilisation of the scarcest resource, in [0, ∞).
+    pub fn max_utilization(&self, part: &ZynqPart) -> f64 {
+        [
+            self.luts as f64 / part.luts as f64,
+            self.ffs as f64 / part.ffs as f64,
+            self.dsp as f64 / part.dsp as f64,
+            self.bram_18k as f64 / part.bram_18k as f64,
+        ]
+        .into_iter()
+        .fold(0.0, f64::max)
+    }
+}
+
+/// Bytes per stored feature: 16-bit fixed point (Q1.15) in the datapath.
+pub const FEATURE_BYTES: u64 = 2;
+/// Bytes per bound value (ub or group lb): 16-bit fixed point.
+pub const BOUND_BYTES: u64 = 2;
+/// Bytes per accumulator word (cluster sums): 32-bit.
+pub const ACC_BYTES: u64 = 4;
+
+/// Price a configuration.
+pub fn estimate(
+    pipe: &PipelineConfig,
+    filt: &FilterUnitConfig,
+    shape: &ProblemShape,
+) -> ResourceEstimate {
+    let lanes = pipe.lanes;
+    let w = pipe.mac_width;
+    let (k, d, g, tile) = (
+        shape.k as u64,
+        shape.d as u64,
+        shape.g as u64,
+        shape.tile_points as u64,
+    );
+
+    let mut bram_detail = Vec::new();
+    let mut bram = 0u64;
+    let add = |name: &str, bytes: u64, banks: u64, detail: &mut Vec<(String, u64)>| {
+        let blocks = blocks_for(bytes, banks);
+        detail.push((name.to_string(), blocks));
+        blocks
+    };
+
+    // Point tile: block-partitioned over lanes (each lane owns tile/lanes
+    // points) and cyclically over mac_width in the dim axis, double
+    // buffered against the DMA stream.
+    bram += add(
+        "points (x2 dbl-buf)",
+        2 * tile * d * FEATURE_BYTES,
+        lanes * w,
+        &mut bram_detail,
+    );
+    // Centroid bank: every lane reads a (different) centroid row each
+    // slot; cyclic over mac_width, replicated per-lane read port via
+    // double-pumping two lanes per bank → lanes/2 × w banks; double
+    // buffered for the PS's next-iteration write.
+    bram += add(
+        "centroids (x2 dbl-buf)",
+        2 * k * d * FEATURE_BYTES,
+        (lanes.div_ceil(2)).max(1) * w,
+        &mut bram_detail,
+    );
+    // Bound tile: ub + g lower bounds per point, streamed like the points.
+    bram += add(
+        "bounds (x2 dbl-buf)",
+        2 * tile * (1 + g) * BOUND_BYTES,
+        4,
+        &mut bram_detail,
+    );
+    // Assignment tile (in + out).
+    bram += add("assignments", 2 * tile * 2, 2, &mut bram_detail);
+    // Cluster-sum accumulators + counts (one copy, wide words).
+    bram += add("accumulators", k * d * ACC_BYTES + k * 4, w, &mut bram_detail);
+
+    // DSPs: the MAC tree plus 2 for the fixed-point drift/bound arithmetic.
+    let dsp = pipe.dsp_used() + 2;
+
+    // LUTs: control/FSM base, per-lane steering + accumulate, filter
+    // comparators, DMA/AXIS glue, PS mailbox.
+    let luts = 3_000 + 450 * lanes + 40 * lanes * w + filt.luts() + 1_800;
+    // FFs: pipeline registers dominate — depth × lanes × datapath width.
+    let ffs = 4_000 + pipe.depth() * lanes * 48 + 600;
+
+    ResourceEstimate { luts, ffs, dsp, bram_18k: bram, bram_detail }
+}
+
+/// Largest lane count that fits `part` for the shape (mac_width fixed).
+pub fn max_lanes(
+    part: &ZynqPart,
+    filt: &FilterUnitConfig,
+    shape: &ProblemShape,
+    mac_width: u64,
+) -> u64 {
+    let mut best = 0;
+    for lanes in 1..=64 {
+        let pipe = PipelineConfig { lanes, mac_width };
+        if estimate(&pipe, filt, shape).fits(part) {
+            best = lanes;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> ProblemShape {
+        ProblemShape::new(16, 64, 8, 256)
+    }
+
+    #[test]
+    fn default_config_fits_7020() {
+        let part = ZynqPart::xc7z020();
+        let pipe = PipelineConfig { lanes: 8, mac_width: 8 };
+        let est = estimate(&pipe, &FilterUnitConfig::default(), &shape());
+        est.check(&part).unwrap();
+        assert!(est.max_utilization(&part) < 1.0);
+    }
+
+    #[test]
+    fn estimates_are_monotone_in_lanes() {
+        // DSP and LUT grow strictly with lanes; BRAM is bank-granular (it
+        // can locally dip as per-bank rounding repacks) but must always
+        // cover at least one block per bank of the widest buffer.
+        let filt = FilterUnitConfig::default();
+        let mut last = estimate(&PipelineConfig { lanes: 1, mac_width: 4 }, &filt, &shape());
+        for lanes in 2..=32 {
+            let est = estimate(&PipelineConfig { lanes, mac_width: 4 }, &filt, &shape());
+            assert!(est.dsp > last.dsp);
+            assert!(est.luts > last.luts);
+            assert!(est.bram_18k >= lanes * 4, "points buffer has lanes*w banks");
+            last = est;
+        }
+    }
+
+    #[test]
+    fn something_binds_eventually_on_7020() {
+        let part = ZynqPart::xc7z020();
+        let m = max_lanes(&part, &FilterUnitConfig::default(), &shape(), 8);
+        assert!(m >= 4, "at least a few lanes must fit, got {m}");
+        assert!(m < 64, "the 7020 cannot be unbounded, got {m}");
+        let too_big = PipelineConfig { lanes: m + 1, mac_width: 8 };
+        assert!(!estimate(&too_big, &FilterUnitConfig::default(), &shape()).fits(&part));
+    }
+
+    #[test]
+    fn bigger_part_fits_more_lanes() {
+        let filt = FilterUnitConfig::default();
+        let small = max_lanes(&ZynqPart::xc7z020(), &filt, &shape(), 8);
+        let big = max_lanes(&ZynqPart::zu7ev(), &filt, &shape(), 8);
+        assert!(big > small, "{big} vs {small}");
+    }
+
+    #[test]
+    fn high_dimension_costs_more_bram() {
+        let filt = FilterUnitConfig::default();
+        let pipe = PipelineConfig { lanes: 8, mac_width: 8 };
+        // Bank granularity absorbs small d changes (16 → 128 both fit one
+        // block per bank); a big jump must show up.
+        let lo = estimate(&pipe, &filt, &ProblemShape::new(16, 16, 8, 256));
+        let hi = estimate(&pipe, &filt, &ProblemShape::new(16, 512, 8, 256));
+        assert!(hi.bram_18k > lo.bram_18k);
+    }
+
+    #[test]
+    fn bram_detail_sums_to_total() {
+        let pipe = PipelineConfig { lanes: 4, mac_width: 4 };
+        let est = estimate(&pipe, &FilterUnitConfig::default(), &shape());
+        let sum: u64 = est.bram_detail.iter().map(|(_, b)| b).sum();
+        assert_eq!(sum, est.bram_18k);
+        // Sanity: detail covers the five architectural buffers.
+        assert_eq!(est.bram_detail.len(), 5);
+    }
+}

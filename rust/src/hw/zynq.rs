@@ -1,0 +1,116 @@
+//! The Zynq-7000 part and board description.
+//!
+//! Numbers from the paper's §II and the Pynq-Z1 reference manual: ZYNQ
+//! XC7Z020-1CLG400C — 13,300 logic slices (4 six-input LUTs + 8 FFs each),
+//! 630 KB BRAM (280 × BRAM_18K), 220 DSP48E1 slices, dual Cortex-A9 at
+//! 650 MHz. PL fabric clock for this class of design: 100–142 MHz; KPynq's
+//! default is 100 MHz.
+
+/// Static resource and clock description of a Zynq part + board.
+#[derive(Clone, Debug)]
+pub struct ZynqPart {
+    pub name: &'static str,
+    /// 6-input LUTs (13,300 slices × 4).
+    pub luts: u64,
+    /// Flip-flops (13,300 slices × 8).
+    pub ffs: u64,
+    /// BRAM in 18 Kb blocks (280 on the 7020 = 630 KB).
+    pub bram_18k: u64,
+    /// DSP48E1 slices.
+    pub dsp: u64,
+    /// PL fabric clock (Hz).
+    pub pl_clock_hz: f64,
+    /// PS (ARM) clock (Hz).
+    pub ps_clock_hz: f64,
+    /// AXI HP port data width in bytes (64-bit on Zynq-7000).
+    pub axi_hp_bytes: u64,
+    /// Number of AXI HP ports usable by DMA masters.
+    pub axi_hp_ports: u64,
+    /// Effective DDR bandwidth ceiling shared by all ports (bytes/s).
+    /// DDR3-1050 x32 on Pynq-Z1 peaks at 4.2 GB/s; ~60% achievable.
+    pub ddr_bandwidth: f64,
+}
+
+impl ZynqPart {
+    /// The Pynq-Z1's XC7Z020, as used in the paper.
+    pub fn xc7z020() -> Self {
+        Self {
+            name: "XC7Z020-1CLG400C",
+            luts: 53_200,
+            ffs: 106_400,
+            bram_18k: 280,
+            dsp: 220,
+            pl_clock_hz: 100.0e6,
+            ps_clock_hz: 650.0e6,
+            axi_hp_bytes: 8,
+            axi_hp_ports: 4,
+            ddr_bandwidth: 2.5e9,
+        }
+    }
+
+    /// A larger part (ZU7EV-class) used by the design-space example to
+    /// demonstrate the "various FPGAs" configurability claim.
+    pub fn zu7ev() -> Self {
+        Self {
+            name: "XCZU7EV",
+            luts: 230_400,
+            ffs: 460_800,
+            bram_18k: 624,
+            dsp: 1_728,
+            pl_clock_hz: 300.0e6,
+            ps_clock_hz: 1_200.0e6,
+            axi_hp_bytes: 16,
+            axi_hp_ports: 6,
+            ddr_bandwidth: 10.0e9,
+        }
+    }
+
+    /// BRAM capacity in bytes (18 Kb blocks × 18,432 bits, data bits only:
+    /// 16 Kb data + 2 Kb parity; we count the 2 KB data payload per block
+    /// — 280 × 2.25 KB = 630 KB matches the paper's figure).
+    pub fn bram_bytes(&self) -> u64 {
+        self.bram_18k * 2304
+    }
+
+    /// Seconds for `cycles` PL cycles.
+    pub fn pl_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.pl_clock_hz
+    }
+
+    /// PL cycles for a duration (rounded up).
+    pub fn pl_cycles(&self, seconds: f64) -> u64 {
+        (seconds * self.pl_clock_hz).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xc7z020_matches_paper_numbers() {
+        let p = ZynqPart::xc7z020();
+        // §II: "13,300 logic slices, each with four 6-input LUTs and 8
+        // flip-flops, 630 KB BRAM (280 BRAM_18K), and 220 DSP slices".
+        assert_eq!(p.luts, 13_300 * 4);
+        assert_eq!(p.ffs, 13_300 * 8);
+        assert_eq!(p.bram_18k, 280);
+        assert_eq!(p.dsp, 220);
+        assert_eq!(p.bram_bytes(), 630 * 1024);
+        assert_eq!(p.ps_clock_hz, 650.0e6);
+    }
+
+    #[test]
+    fn cycle_time_roundtrip() {
+        let p = ZynqPart::xc7z020();
+        assert_eq!(p.pl_seconds(100_000_000), 1.0);
+        assert_eq!(p.pl_cycles(0.5), 50_000_000);
+    }
+
+    #[test]
+    fn zu7ev_is_strictly_bigger() {
+        let small = ZynqPart::xc7z020();
+        let big = ZynqPart::zu7ev();
+        assert!(big.luts > small.luts && big.dsp > small.dsp && big.bram_18k > small.bram_18k);
+    }
+}

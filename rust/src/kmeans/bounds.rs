@@ -1,0 +1,92 @@
+//! Triangle-inequality bound arithmetic shared by the filtered algorithms.
+//!
+//! All bounds live in *distance* (not squared-distance) space, because the
+//! triangle inequality only composes there:
+//!
+//! * after centroid `c` moves by `δ_c`, any distance `d(x, c)` changes by at
+//!   most `δ_c`, so an upper bound grows by `δ_{a(x)}` and a lower bound
+//!   shrinks by the relevant max drift;
+//! * a point can be skipped when `lb ≥ ub` — its assignment provably cannot
+//!   change.
+//!
+//! Float safety: computed distances carry relative rounding error, so a raw
+//! `lb >= ub` test could filter a point whose true lower bound is a hair
+//! *below* its true upper bound — an incorrect result, not just wasted
+//! work. [`filter_safe`] therefore demands a small relative margin; rounding
+//! can only ever cause extra distance computations. The margin is sized (a
+//! few ulps at f32) so the equivalence property (`filtered == lloyd`) holds
+//! on everything the test suite throws at it.
+
+/// Relative safety margin for bound comparisons.
+pub const SAFETY_REL: f32 = 1e-5;
+/// Absolute safety floor (guards the `ub == lb == 0` case).
+pub const SAFETY_ABS: f32 = 1e-12;
+
+/// True iff `lb >= ub` is certain even under f32 rounding — i.e. it is safe
+/// to skip the candidate(s) guarded by `lb`.
+#[inline]
+pub fn filter_safe(lb: f32, ub: f32) -> bool {
+    lb >= ub + SAFETY_REL * ub.abs() + SAFETY_ABS
+}
+
+/// Apply the post-update drift to an upper bound (assigned centroid moved).
+#[inline]
+pub fn inflate_ub(ub: f32, drift_of_assigned: f32) -> f32 {
+    ub + drift_of_assigned
+}
+
+/// Apply the post-update drift to a lower bound (any guarded centroid may
+/// have moved toward the point). Clamped at zero: distances are
+/// non-negative, and negative lower bounds would poison later max() logic.
+#[inline]
+pub fn deflate_lb(lb: f32, max_drift: f32) -> f32 {
+    (lb - max_drift).max(0.0)
+}
+
+/// Per-group maximum drift (the group filter's deflation amount).
+pub fn group_max_drifts(drifts: &[f32], group_of: &[usize], n_groups: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n_groups];
+    for (c, &g) in group_of.iter().enumerate() {
+        if drifts[c] > out[g] {
+            out[g] = drifts[c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filter_requires_margin() {
+        assert!(filter_safe(1.1, 1.0));
+        assert!(!filter_safe(1.0, 1.0), "exact equality must NOT filter");
+        assert!(!filter_safe(0.0, 0.0));
+        assert!(!filter_safe(1.0 + 1e-7, 1.0), "inside the margin must not filter");
+        assert!(filter_safe(2.0, 0.0));
+    }
+
+    #[test]
+    fn bound_updates_compose() {
+        let ub = inflate_ub(1.0, 0.25);
+        assert_eq!(ub, 1.25);
+        let lb = deflate_lb(0.1, 0.5);
+        assert_eq!(lb, 0.0, "lower bounds clamp at zero");
+        assert_eq!(deflate_lb(2.0, 0.5), 1.5);
+    }
+
+    #[test]
+    fn group_drifts_take_max_per_group() {
+        let drifts = [0.1, 0.9, 0.3, 0.2];
+        let groups = [0, 1, 0, 1];
+        let gd = group_max_drifts(&drifts, &groups, 2);
+        assert_eq!(gd, vec![0.3, 0.9]);
+    }
+
+    #[test]
+    fn empty_group_has_zero_drift() {
+        let gd = group_max_drifts(&[0.5], &[1], 3);
+        assert_eq!(gd, vec![0.0, 0.5, 0.0]);
+    }
+}

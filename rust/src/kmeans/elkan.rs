@@ -1,0 +1,206 @@
+//! Elkan's algorithm: per-centroid lower bounds + inter-centroid pruning.
+//!
+//! The most aggressive pure-software triangle-inequality variant (Elkan
+//! 2003): `n·k` lower bounds, `O(k²)` inter-centroid distances per
+//! iteration. It removes the most distance computations but its per-point
+//! state (`k` bounds) and irregular control flow are exactly what the paper
+//! calls "computation irregularity" — the reason KPynq's hardware design
+//! uses the group-level scheme instead. Elkan is reproduced here as the
+//! software upper bound on filtering effectiveness for the ablation bench.
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::kmeans::bounds::{deflate_lb, filter_safe, inflate_ub};
+use crate::kmeans::hamerly::half_nearest_other;
+use crate::kmeans::lloyd::scan_all;
+use crate::kmeans::{
+    centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
+    KMeansConfig, RunStats,
+};
+use crate::util::matrix::{dist, Matrix};
+
+pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> {
+    let n = ds.n();
+    let k = cfg.k;
+    let mut centroids = init;
+    let mut assignments = vec![0u32; n];
+    let mut ub = vec![0.0f32; n];
+    // Per-point per-centroid lower bounds, row-major n×k.
+    let mut lb = vec![0.0f32; n * k];
+    let mut stats = RunStats::default();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    // Iteration 1: full scan, initialise ub and all lower bounds exactly.
+    {
+        iterations += 1;
+        let mut it = IterStats::default();
+        for (i, row) in ds.points.rows_iter().enumerate() {
+            let lbrow = &mut lb[i * k..(i + 1) * k];
+            let mut best = f32::INFINITY;
+            let mut arg = 0usize;
+            for c in 0..k {
+                let d = dist(row, centroids.row(c));
+                lbrow[c] = d;
+                if d < best {
+                    best = d;
+                    arg = c;
+                }
+            }
+            assignments[i] = arg as u32;
+            ub[i] = best;
+        }
+        it.dist_comps = (n as u64) * (k as u64);
+        it.survivors = n as u64;
+        it.reassigned = n as u64;
+        let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
+        let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
+        centroids = new_c;
+        it.max_drift = max_drift;
+        stats.push(it);
+        if (max_drift as f64) <= cfg.tol {
+            converged = true;
+        } else {
+            for i in 0..n {
+                ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
+                let lbrow = &mut lb[i * k..(i + 1) * k];
+                for c in 0..k {
+                    lbrow[c] = deflate_lb(lbrow[c], drifts[c]);
+                }
+            }
+        }
+    }
+
+    while !converged && iterations < cfg.max_iters {
+        iterations += 1;
+        let mut it = IterStats::default();
+        let mut dist_comps = 0u64;
+
+        // Inter-centroid geometry: s[c] = half distance to nearest other.
+        let (s_half, pair_comps) = half_nearest_other(&centroids);
+        dist_comps += pair_comps;
+
+        for (i, row) in ds.points.rows_iter().enumerate() {
+            let mut a = assignments[i] as usize;
+            // Global test: nothing within 2·s_half[a] can win.
+            if filter_safe(s_half[a], ub[i]) {
+                it.filtered_global += 1;
+                continue;
+            }
+            let lbrow = &mut lb[i * k..(i + 1) * k];
+            let mut ub_i = ub[i];
+            let mut tight = false; // is ub_i the exact current distance?
+            let mut scanned_any = false;
+            for c in 0..k {
+                if c == a {
+                    continue;
+                }
+                // Point-level filter: c cannot win if either bound blocks it.
+                if filter_safe(lbrow[c], ub_i) {
+                    it.filtered_point += 1;
+                    continue;
+                }
+                if !tight {
+                    // Tighten before paying for d(x, c).
+                    ub_i = dist(row, centroids.row(a));
+                    lbrow[a] = ub_i;
+                    dist_comps += 1;
+                    tight = true;
+                    if filter_safe(lbrow[c], ub_i) {
+                        it.filtered_point += 1;
+                        continue;
+                    }
+                }
+                let d = dist(row, centroids.row(c));
+                dist_comps += 1;
+                scanned_any = true;
+                lbrow[c] = d;
+                if d < ub_i {
+                    a = c;
+                    ub_i = d;
+                }
+            }
+            if scanned_any || tight {
+                it.survivors += 1;
+            } else {
+                it.filtered_global += 1;
+            }
+            ub[i] = ub_i;
+            if assignments[i] != a as u32 {
+                it.reassigned += 1;
+                assignments[i] = a as u32;
+            }
+        }
+
+        it.dist_comps = dist_comps;
+        let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
+        let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
+        centroids = new_c;
+        it.max_drift = max_drift;
+        stats.push(it);
+
+        if (max_drift as f64) <= cfg.tol {
+            converged = true;
+        } else {
+            for i in 0..n {
+                ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
+                let lbrow = &mut lb[i * k..(i + 1) * k];
+                for c in 0..k {
+                    lbrow[c] = deflate_lb(lbrow[c], drifts[c]);
+                }
+            }
+        }
+    }
+
+    let inertia = compute_inertia(ds, &centroids, &assignments);
+    let _ = scan_all; // (kept linked for doc cross-reference)
+    Ok(FitResult { centroids, assignments, inertia, iterations, converged, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{self, init, Algorithm, InitMethod};
+
+    fn cfg(k: usize, seed: u64) -> KMeansConfig {
+        KMeansConfig { k, seed, init: InitMethod::KMeansPlusPlus, ..Default::default() }
+    }
+
+    #[test]
+    fn matches_lloyd_on_blobs() {
+        let ds = synth::blobs(600, 10, 5, 13);
+        let cfg = cfg(5, 2);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let e = fit(&ds, &cfg, c0).unwrap();
+        assert_eq!(l.assignments, e.assignments);
+        assert_eq!(l.centroids, e.centroids);
+        assert_eq!(l.iterations, e.iterations);
+    }
+
+    #[test]
+    fn filters_hardest_of_all() {
+        let ds = synth::blobs(3000, 16, 8, 5);
+        let cfg = cfg(8, 3);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let h = kmeans::fit_from(Algorithm::Hamerly, &ds, &cfg, c0.clone()).unwrap();
+        let e = fit(&ds, &cfg, c0).unwrap();
+        assert!(
+            e.stats.total_dist_comps() <= h.stats.total_dist_comps(),
+            "elkan {} should not exceed hamerly {}",
+            e.stats.total_dist_comps(),
+            h.stats.total_dist_comps()
+        );
+    }
+
+    #[test]
+    fn k1_trivially_converges() {
+        let ds = synth::blobs(100, 4, 2, 8);
+        let cfg = cfg(1, 1);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let e = fit(&ds, &cfg, c0).unwrap();
+        assert!(e.converged);
+        assert!(e.assignments.iter().all(|&a| a == 0));
+    }
+}

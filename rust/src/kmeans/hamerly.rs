@@ -1,0 +1,213 @@
+//! Hamerly's algorithm: one upper + one lower bound per point.
+//!
+//! The simplest triangle-inequality K-means (Hamerly 2010). KPynq's
+//! point-level filter is exactly this test, so Hamerly serves both as a
+//! baseline in the ablation (point-level filter only, no groups) and as the
+//! stepping stone to the multi-level [`super::yinyang`] algorithm.
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::kmeans::bounds::{deflate_lb, filter_safe, inflate_ub};
+use crate::kmeans::lloyd::scan_all;
+use crate::kmeans::{
+    centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
+    KMeansConfig, RunStats,
+};
+use crate::util::matrix::{dist, Matrix};
+
+/// Half the distance from each centroid to its nearest other centroid.
+/// A point with `ub <= s[a]` cannot change assignment (any other centroid
+/// is at least `2·s[a]` away from `a`). Returns the pair-scan count.
+pub(crate) fn half_nearest_other(centroids: &Matrix) -> (Vec<f32>, u64) {
+    let k = centroids.rows();
+    let mut s = vec![f32::INFINITY; k];
+    for a in 0..k {
+        for b in (a + 1)..k {
+            let d = dist(centroids.row(a), centroids.row(b));
+            if d < s[a] {
+                s[a] = d;
+            }
+            if d < s[b] {
+                s[b] = d;
+            }
+        }
+    }
+    for v in s.iter_mut() {
+        *v *= 0.5;
+        if !v.is_finite() {
+            *v = f32::INFINITY; // k == 1: no other centroid exists.
+        }
+    }
+    (s, (k as u64 * k.saturating_sub(1) as u64) / 2)
+}
+
+pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> {
+    let n = ds.n();
+    let k = cfg.k;
+    let mut centroids = init;
+    let mut assignments = vec![0u32; n];
+    let mut ub = vec![0.0f32; n];
+    let mut lb = vec![0.0f32; n];
+    let mut stats = RunStats::default();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    // Iteration 1: full scan initialises bounds (counted like Lloyd's).
+    {
+        iterations += 1;
+        let mut it = IterStats::default();
+        for (i, row) in ds.points.rows_iter().enumerate() {
+            let (arg, best, second) = scan_all(row, &centroids);
+            assignments[i] = arg as u32;
+            ub[i] = best.sqrt();
+            lb[i] = second.sqrt();
+        }
+        it.dist_comps = (n as u64) * (k as u64);
+        it.survivors = n as u64;
+        it.reassigned = n as u64;
+        let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
+        let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
+        centroids = new_c;
+        it.max_drift = max_drift;
+        stats.push(it);
+        if (max_drift as f64) <= cfg.tol {
+            converged = true;
+        } else {
+            // Apply drifts for the next iteration's bounds.
+            for i in 0..n {
+                ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
+                lb[i] = deflate_lb(lb[i], max_drift);
+            }
+        }
+    }
+
+    while !converged && iterations < cfg.max_iters {
+        iterations += 1;
+        let mut it = IterStats::default();
+        let mut dist_comps = 0u64;
+
+        let (s_half, pair_comps) = half_nearest_other(&centroids);
+        dist_comps += pair_comps;
+
+        for (i, row) in ds.points.rows_iter().enumerate() {
+            let a = assignments[i] as usize;
+            let m = lb[i].max(s_half[a]);
+            // Global filter on the stale upper bound.
+            if filter_safe(m, ub[i]) {
+                it.filtered_global += 1;
+                continue;
+            }
+            // Tighten ub with one exact distance and retest.
+            let exact = dist(row, centroids.row(a));
+            dist_comps += 1;
+            ub[i] = exact;
+            if filter_safe(m, ub[i]) {
+                it.filtered_global += 1;
+                continue;
+            }
+            // Survivor: full scan.
+            let (arg, best, second) = scan_all(row, &centroids);
+            dist_comps += k as u64;
+            it.survivors += 1;
+            if assignments[i] != arg as u32 {
+                it.reassigned += 1;
+                assignments[i] = arg as u32;
+            }
+            ub[i] = best.sqrt();
+            lb[i] = second.sqrt();
+        }
+
+        it.dist_comps = dist_comps;
+        let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
+        let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
+        centroids = new_c;
+        it.max_drift = max_drift;
+        stats.push(it);
+
+        if (max_drift as f64) <= cfg.tol {
+            converged = true;
+        } else {
+            for i in 0..n {
+                ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
+                lb[i] = deflate_lb(lb[i], max_drift);
+            }
+        }
+    }
+
+    let inertia = compute_inertia(ds, &centroids, &assignments);
+    Ok(FitResult { centroids, assignments, inertia, iterations, converged, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{self, init, Algorithm, InitMethod};
+
+    fn cfg(k: usize, seed: u64) -> KMeansConfig {
+        KMeansConfig { k, seed, init: InitMethod::KMeansPlusPlus, ..Default::default() }
+    }
+
+    #[test]
+    fn half_nearest_other_is_correct() {
+        let c = Matrix::from_vec(vec![0.0, 0.0, 2.0, 0.0, 10.0, 0.0], 3, 2).unwrap();
+        let (s, comps) = half_nearest_other(&c);
+        assert_eq!(comps, 3);
+        assert!((s[0] - 1.0).abs() < 1e-6);
+        assert!((s[1] - 1.0).abs() < 1e-6);
+        assert!((s[2] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn k1_has_infinite_guard() {
+        let c = Matrix::from_vec(vec![0.0, 0.0], 1, 2).unwrap();
+        let (s, comps) = half_nearest_other(&c);
+        assert_eq!(comps, 0);
+        assert!(s[0].is_infinite());
+    }
+
+    #[test]
+    fn matches_lloyd_on_blobs() {
+        let ds = synth::blobs(500, 8, 4, 3);
+        let cfg = cfg(4, 11);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let h = fit(&ds, &cfg, c0).unwrap();
+        assert_eq!(l.assignments, h.assignments);
+        assert_eq!(l.iterations, h.iterations);
+        assert_eq!(l.centroids, h.centroids);
+        assert!((l.inertia - h.inertia).abs() <= 1e-9 * l.inertia.max(1.0));
+    }
+
+    #[test]
+    fn does_less_work_than_lloyd() {
+        let ds = synth::blobs(2000, 16, 8, 5);
+        let cfg = cfg(8, 3);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let h = fit(&ds, &cfg, c0).unwrap();
+        // On easy blobs both converge in few iterations; the first full
+        // scan is shared, so the bound is "meaningfully less", not half.
+        assert!(
+            (h.stats.total_dist_comps() as f64) < 0.75 * l.stats.total_dist_comps() as f64,
+            "hamerly {} vs lloyd {}",
+            h.stats.total_dist_comps(),
+            l.stats.total_dist_comps()
+        );
+    }
+
+    #[test]
+    fn filter_counters_accounted() {
+        let ds = synth::blobs(300, 6, 3, 7);
+        let cfg = cfg(3, 9);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let h = fit(&ds, &cfg, c0).unwrap();
+        for (t, it) in h.stats.iters.iter().enumerate().skip(1) {
+            assert_eq!(
+                it.filtered_global + it.survivors,
+                300,
+                "iter {t}: every point either filtered or scanned"
+            );
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Centroid initialisation: random distinct points and k-means++.
+//!
+//! Both are deterministic in `cfg.seed`. Every algorithm (and the
+//! accelerated coordinator path) initialises through this module, so any
+//! two runs with the same config start from bit-identical centroids — the
+//! foundation of the cross-algorithm equivalence tests.
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::kmeans::{InitMethod, KMeansConfig};
+use crate::util::matrix::{sq_dist, Matrix};
+use crate::util::rng::Rng;
+
+/// Initialise centroids per the config.
+pub fn initialize(ds: &Dataset, cfg: &KMeansConfig) -> Result<Matrix> {
+    cfg.validate(ds.n())?;
+    let mut rng = Rng::new(cfg.seed);
+    Ok(match cfg.init {
+        InitMethod::RandomPoints => random_points(ds, cfg.k, &mut rng),
+        InitMethod::KMeansPlusPlus => kmeans_pp(ds, cfg.k, &mut rng),
+    })
+}
+
+/// k distinct points chosen uniformly.
+pub fn random_points(ds: &Dataset, k: usize, rng: &mut Rng) -> Matrix {
+    // Partial Fisher–Yates over the index range: O(n) memory, O(k) swaps.
+    let n = ds.n();
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + rng.next_below(n - i);
+        idx.swap(i, j);
+    }
+    ds.points.gather_rows(&idx[..k])
+}
+
+/// k-means++: D² weighted seeding (Arthur & Vassilvitskii 2007).
+pub fn kmeans_pp(ds: &Dataset, k: usize, rng: &mut Rng) -> Matrix {
+    let n = ds.n();
+    let d = ds.d();
+    let mut centroids = Matrix::zeros(k, d);
+
+    // First centroid: uniform.
+    let first = rng.next_below(n);
+    centroids.row_mut(0).copy_from_slice(ds.points.row(first));
+
+    // Maintain the running min squared distance to the chosen set.
+    let mut min_d2: Vec<f64> = (0..n)
+        .map(|i| sq_dist(ds.points.row(i), centroids.row(0)) as f64)
+        .collect();
+
+    for c in 1..k {
+        let pick = rng.sample_weighted(&min_d2);
+        centroids.row_mut(c).copy_from_slice(ds.points.row(pick));
+        if c + 1 < k {
+            for i in 0..n {
+                let d2 = sq_dist(ds.points.row(i), centroids.row(c)) as f64;
+                if d2 < min_d2[i] {
+                    min_d2[i] = d2;
+                }
+            }
+        }
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::InitMethod;
+
+    fn cfg(k: usize, init: InitMethod, seed: u64) -> KMeansConfig {
+        KMeansConfig { k, init, seed, ..Default::default() }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let ds = synth::blobs(500, 6, 4, 3);
+        for init in [InitMethod::RandomPoints, InitMethod::KMeansPlusPlus] {
+            let a = initialize(&ds, &cfg(5, init, 7)).unwrap();
+            let b = initialize(&ds, &cfg(5, init, 7)).unwrap();
+            assert_eq!(a, b);
+            let c = initialize(&ds, &cfg(5, init, 8)).unwrap();
+            assert_ne!(a, c);
+        }
+    }
+
+    #[test]
+    fn centroids_are_dataset_points() {
+        let ds = synth::blobs(200, 5, 3, 1);
+        for init in [InitMethod::RandomPoints, InitMethod::KMeansPlusPlus] {
+            let c = initialize(&ds, &cfg(8, init, 5)).unwrap();
+            for r in 0..8 {
+                assert!(
+                    (0..ds.n()).any(|i| ds.points.row(i) == c.row(r)),
+                    "centroid {r} is not a dataset point"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn random_points_are_distinct_indices() {
+        // With distinct data points, the k chosen rows must be distinct.
+        let ds = synth::blobs(100, 4, 2, 9);
+        let c = initialize(&ds, &cfg(10, InitMethod::RandomPoints, 3)).unwrap();
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                assert_ne!(c.row(a), c.row(b), "duplicate centroid {a}/{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn kmeanspp_spreads_over_blobs() {
+        // With 4 well-separated blobs and k=4, k-means++ should (almost
+        // always) pick one seed per blob. Use the ground-truth labels.
+        let ds = synth::blobs(400, 8, 4, 11);
+        let c = initialize(&ds, &cfg(4, InitMethod::KMeansPlusPlus, 1)).unwrap();
+        let labels = ds.labels.as_ref().unwrap();
+        let mut hit = [false; 4];
+        for r in 0..4 {
+            let i = (0..ds.n()).find(|&i| ds.points.row(i) == c.row(r)).unwrap();
+            hit[labels[i] as usize] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "seeds missed a blob: {hit:?}");
+    }
+
+    #[test]
+    fn k_equals_n_takes_every_point() {
+        let ds = synth::blobs(6, 3, 2, 2);
+        let c = initialize(&ds, &cfg(6, InitMethod::RandomPoints, 1)).unwrap();
+        for i in 0..6 {
+            assert!((0..6).any(|r| c.row(r) == ds.points.row(i)));
+        }
+    }
+}

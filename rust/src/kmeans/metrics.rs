@@ -1,0 +1,84 @@
+//! Work accounting: the paper's "work-efficient" claim is quantified here.
+//!
+//! Every algorithm reports, per iteration, how many point↔centroid distance
+//! computations it performed and how many candidates each filter level
+//! removed. Standard K-means does exactly `n·k` per iteration; the
+//! multi-level filter's whole value proposition is the gap between that and
+//! its actual count — reproduced by `fig_filter_ablation`.
+
+/// Statistics for one iteration.
+#[derive(Clone, Debug, Default)]
+pub struct IterStats {
+    /// Point↔centroid distance computations actually executed.
+    pub dist_comps: u64,
+    /// Candidates eliminated by the global (Hamerly-style) filter:
+    /// points whose assignment was proven unchanged without any scan.
+    pub filtered_global: u64,
+    /// Candidate (point, group) pairs eliminated by the group-level filter.
+    pub filtered_group: u64,
+    /// Candidate (point, centroid) pairs eliminated by the point-level
+    /// (local) filter inside surviving groups.
+    pub filtered_point: u64,
+    /// Points whose assignment changed this iteration.
+    pub reassigned: u64,
+    /// Maximum centroid drift after the update step.
+    pub max_drift: f32,
+    /// Points that survived all filters and required a (partial) scan.
+    pub survivors: u64,
+}
+
+/// Whole-run statistics.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub iters: Vec<IterStats>,
+}
+
+impl RunStats {
+    pub fn push(&mut self, it: IterStats) {
+        self.iters.push(it);
+    }
+
+    /// Total distance computations across the run.
+    pub fn total_dist_comps(&self) -> u64 {
+        self.iters.iter().map(|i| i.dist_comps).sum()
+    }
+
+    /// Distance computations standard K-means would have performed for the
+    /// same iteration count.
+    pub fn lloyd_equivalent_dist_comps(&self, n: usize, k: usize) -> u64 {
+        (self.iters.len() as u64) * (n as u64) * (k as u64)
+    }
+
+    /// Fraction of Lloyd's distance work actually performed (≤ 1 for the
+    /// filtered algorithms after the first iteration; the first iteration
+    /// is always a full scan).
+    pub fn work_ratio(&self, n: usize, k: usize) -> f64 {
+        let lloyd = self.lloyd_equivalent_dist_comps(n, k);
+        if lloyd == 0 {
+            return f64::NAN;
+        }
+        self.total_dist_comps() as f64 / lloyd as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn work_ratio_accounts_per_iteration() {
+        let mut rs = RunStats::default();
+        rs.push(IterStats { dist_comps: 100, ..Default::default() });
+        rs.push(IterStats { dist_comps: 20, ..Default::default() });
+        // n=10, k=10 → lloyd does 100/iter → 200 total.
+        assert_eq!(rs.lloyd_equivalent_dist_comps(10, 10), 200);
+        assert!((rs.work_ratio(10, 10) - 0.6).abs() < 1e-12);
+        assert_eq!(rs.total_dist_comps(), 120);
+    }
+
+    #[test]
+    fn empty_run_is_nan() {
+        let rs = RunStats::default();
+        assert!(rs.work_ratio(10, 10).is_nan());
+    }
+}

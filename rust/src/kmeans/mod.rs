@@ -1,0 +1,302 @@
+//! K-means algorithm family.
+//!
+//! Four exact algorithms over the same public interface:
+//!
+//! * [`lloyd`] — the standard algorithm; the paper's CPU baseline.
+//! * [`hamerly`] — single upper + single lower bound per point.
+//! * [`elkan`] — per-centroid lower bounds + inter-centroid pruning.
+//! * [`yinyang`] — the paper's **multi-level filter**: a global filter, a
+//!   group-level filter over centroid groups, and a point-level filter
+//!   inside each surviving group. This is the algorithm KPynq maps to
+//!   hardware; its filter phase is factored out ([`yinyang::FilterState`])
+//!   so the accelerator model and the coordinator execute *the same
+//!   decisions* the software algorithm makes.
+//!
+//! All four are exact: given the same initialisation they produce the same
+//! assignments and centroids as Lloyd's algorithm at every iteration (bound
+//! arithmetic carries a conservative epsilon so float rounding can only
+//! cause extra distance computations, never wrong ones). The property tests
+//! in `rust/tests/` assert this equivalence on random instances.
+
+pub mod bounds;
+pub mod elkan;
+pub mod hamerly;
+pub mod init;
+pub mod lloyd;
+pub mod metrics;
+pub mod yinyang;
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::util::matrix::Matrix;
+
+pub use metrics::{IterStats, RunStats};
+
+/// Initialisation strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitMethod {
+    /// k distinct points chosen uniformly at random.
+    RandomPoints,
+    /// k-means++ (D² sampling).
+    KMeansPlusPlus,
+}
+
+/// Which algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Lloyd,
+    Hamerly,
+    Elkan,
+    Yinyang,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 4] =
+        [Algorithm::Lloyd, Algorithm::Hamerly, Algorithm::Elkan, Algorithm::Yinyang];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Lloyd => "lloyd",
+            Algorithm::Hamerly => "hamerly",
+            Algorithm::Elkan => "elkan",
+            Algorithm::Yinyang => "yinyang",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Algorithm> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|a| a.name() == name)
+            .ok_or_else(|| Error::Config(format!("unknown algorithm '{name}'")))
+    }
+}
+
+/// Shared configuration for every algorithm.
+#[derive(Clone, Debug)]
+pub struct KMeansConfig {
+    /// Number of clusters.
+    pub k: usize,
+    /// Iteration cap.
+    pub max_iters: usize,
+    /// Convergence: stop when the max centroid movement (Euclidean) falls
+    /// at or below this threshold.
+    pub tol: f64,
+    /// Seed for initialisation.
+    pub seed: u64,
+    pub init: InitMethod,
+    /// Yinyang group count; 0 = auto (`ceil(k / 10)`, the Yinyang paper's
+    /// recommendation, clamped to at least 1).
+    pub groups: usize,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        Self {
+            k: 8,
+            max_iters: 100,
+            tol: 1e-4,
+            seed: 0xC0FFEE,
+            init: InitMethod::KMeansPlusPlus,
+            groups: 0,
+        }
+    }
+}
+
+impl KMeansConfig {
+    pub fn validate(&self, n: usize) -> Result<()> {
+        if self.k == 0 {
+            return Err(Error::Config("k must be >= 1".into()));
+        }
+        if self.k > n {
+            return Err(Error::Config(format!("k={} exceeds n={}", self.k, n)));
+        }
+        if self.max_iters == 0 {
+            return Err(Error::Config("max_iters must be >= 1".into()));
+        }
+        if !(self.tol >= 0.0) {
+            return Err(Error::Config(format!("tol must be >= 0, got {}", self.tol)));
+        }
+        if self.groups > self.k {
+            return Err(Error::Config(format!(
+                "groups={} exceeds k={}",
+                self.groups, self.k
+            )));
+        }
+        Ok(())
+    }
+
+    /// Effective Yinyang group count.
+    pub fn effective_groups(&self) -> usize {
+        if self.groups > 0 {
+            self.groups
+        } else {
+            (self.k + 9) / 10
+        }
+    }
+}
+
+/// The result of a fit.
+#[derive(Clone, Debug)]
+pub struct FitResult {
+    pub centroids: Matrix,
+    pub assignments: Vec<u32>,
+    /// Sum of squared distances to assigned centroids at the final state.
+    pub inertia: f64,
+    pub iterations: usize,
+    pub converged: bool,
+    pub stats: RunStats,
+}
+
+/// Run `algo` on `ds`.
+pub fn fit(algo: Algorithm, ds: &Dataset, cfg: &KMeansConfig) -> Result<FitResult> {
+    cfg.validate(ds.n())?;
+    ds.validate()?;
+    let init_c = init::initialize(ds, cfg)?;
+    fit_from(algo, ds, cfg, init_c)
+}
+
+/// Run `algo` from explicit initial centroids (shared by the equivalence
+/// tests and the coordinator, which must agree on initialisation).
+pub fn fit_from(
+    algo: Algorithm,
+    ds: &Dataset,
+    cfg: &KMeansConfig,
+    init_centroids: Matrix,
+) -> Result<FitResult> {
+    if init_centroids.rows() != cfg.k || init_centroids.cols() != ds.d() {
+        return Err(Error::Config(format!(
+            "initial centroids are {}x{}, expected {}x{}",
+            init_centroids.rows(),
+            init_centroids.cols(),
+            cfg.k,
+            ds.d()
+        )));
+    }
+    match algo {
+        Algorithm::Lloyd => lloyd::fit(ds, cfg, init_centroids),
+        Algorithm::Hamerly => hamerly::fit(ds, cfg, init_centroids),
+        Algorithm::Elkan => elkan::fit(ds, cfg, init_centroids),
+        Algorithm::Yinyang => yinyang::fit(ds, cfg, init_centroids),
+    }
+}
+
+/// Recompute centroids from assignments, in point-index order.
+///
+/// Every algorithm uses this same routine so float summation order is
+/// identical across algorithms — a prerequisite for the exact-equivalence
+/// property the test suite asserts. Empty clusters keep their previous
+/// centroid (matching `python/compile/model.py`).
+pub(crate) fn recompute_centroids(
+    ds: &Dataset,
+    assignments: &[u32],
+    prev: &Matrix,
+) -> (Matrix, Vec<usize>) {
+    let (k, d) = (prev.rows(), prev.cols());
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0usize; k];
+    for (i, row) in ds.points.rows_iter().enumerate() {
+        let c = assignments[i] as usize;
+        counts[c] += 1;
+        let acc = &mut sums[c * d..(c + 1) * d];
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += v as f64;
+        }
+    }
+    let mut out = Matrix::zeros(k, d);
+    for c in 0..k {
+        let row = out.row_mut(c);
+        if counts[c] == 0 {
+            row.copy_from_slice(prev.row(c));
+        } else {
+            let inv = 1.0 / counts[c] as f64;
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = (sums[c * d + j] * inv) as f32;
+            }
+        }
+    }
+    (out, counts)
+}
+
+/// Per-centroid drift (Euclidean movement) between two centroid sets, plus
+/// the maximum drift. Used by every bounded algorithm and by convergence.
+pub(crate) fn centroid_drifts(old: &Matrix, new: &Matrix) -> (Vec<f32>, f32) {
+    let mut drifts = Vec::with_capacity(old.rows());
+    let mut max = 0.0f32;
+    for c in 0..old.rows() {
+        let d = crate::util::matrix::dist(old.row(c), new.row(c));
+        max = max.max(d);
+        drifts.push(d);
+    }
+    (drifts, max)
+}
+
+/// Final inertia for a fitted state.
+pub(crate) fn compute_inertia(ds: &Dataset, centroids: &Matrix, assignments: &[u32]) -> f64 {
+    assignments
+        .iter()
+        .enumerate()
+        .map(|(i, &a)| crate::util::matrix::sq_dist(ds.points.row(i), centroids.row(a as usize)) as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn config_validation() {
+        let ds_n = 100;
+        let mut cfg = KMeansConfig::default();
+        cfg.validate(ds_n).unwrap();
+        cfg.k = 0;
+        assert!(cfg.validate(ds_n).is_err());
+        cfg.k = 101;
+        assert!(cfg.validate(ds_n).is_err());
+        cfg.k = 8;
+        cfg.groups = 9;
+        assert!(cfg.validate(ds_n).is_err());
+        cfg.groups = 0;
+        cfg.tol = f64::NAN;
+        assert!(cfg.validate(ds_n).is_err());
+    }
+
+    #[test]
+    fn effective_groups_follows_k_over_10() {
+        let mut cfg = KMeansConfig { k: 25, ..Default::default() };
+        assert_eq!(cfg.effective_groups(), 3);
+        cfg.k = 10;
+        assert_eq!(cfg.effective_groups(), 1);
+        cfg.groups = 5;
+        assert_eq!(cfg.effective_groups(), 5);
+    }
+
+    #[test]
+    fn algorithm_names_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::from_name(a.name()).unwrap(), a);
+        }
+        assert!(Algorithm::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn recompute_keeps_empty_clusters() {
+        let ds = synth::blobs(20, 3, 2, 1);
+        let prev = Matrix::from_vec(vec![9.0; 9], 3, 3).unwrap();
+        // Nobody assigned to cluster 2.
+        let assign: Vec<u32> = (0..20).map(|i| (i % 2) as u32).collect();
+        let (new_c, counts) = recompute_centroids(&ds, &assign, &prev);
+        assert_eq!(counts[2], 0);
+        assert_eq!(new_c.row(2), prev.row(2));
+        assert!(counts[0] > 0 && new_c.row(0) != prev.row(0));
+    }
+
+    #[test]
+    fn drift_of_identical_sets_is_zero() {
+        let m = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
+        let (drifts, max) = centroid_drifts(&m, &m);
+        assert_eq!(drifts, vec![0.0, 0.0]);
+        assert_eq!(max, 0.0);
+    }
+}

@@ -1,0 +1,551 @@
+//! The paper's algorithm: multi-level (group + point) filtered K-means.
+//!
+//! KPynq's "Multi-level Filters" block implements the Yinyang K-means
+//! scheme (Ding et al. 2015 — same senior author as KPynq): centroids are
+//! clustered once into `G` groups, and each point carries one upper bound
+//! (to its assigned centroid) plus `G` group lower bounds. Each iteration
+//! applies three filters in sequence:
+//!
+//! 1. **global filter** — if `min_g lb_g ≥ ub`, the assignment provably
+//!    cannot change: zero distance computations.
+//! 2. **group-level filter** — otherwise, any group with `lb_g ≥ ub` is
+//!    skipped whole.
+//! 3. **point-level filter** — inside a surviving group, centroid `c` is
+//!    skipped when its drift-adjusted old group bound already exceeds the
+//!    current upper bound.
+//!
+//! The decision logic lives in [`step_point`], a free function over
+//! explicit state. Both the software [`fit`] below *and* the accelerator
+//! model (`hw::accelerator`) drive the same function, so the hardware
+//! simulation is functionally bit-identical to the algorithm by
+//! construction, and its cycle model consumes the exact per-level work
+//! counts ([`StepCounts`]) the filter produced.
+//!
+//! Exactness: all bound comparisons go through `bounds::filter_safe`, which
+//! requires a float-safety margin, so rounding can only cause *extra*
+//! distance computations. The equivalence suite asserts assignments match
+//! Lloyd's on every random instance.
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::kmeans::bounds::{filter_safe, group_max_drifts, inflate_ub};
+use crate::kmeans::lloyd::scan_all;
+use crate::kmeans::{
+    centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
+    KMeansConfig, RunStats,
+};
+use crate::util::matrix::{dist, Matrix};
+use crate::util::rng::Rng;
+
+/// A partition of centroids into groups.
+#[derive(Clone, Debug)]
+pub struct Grouping {
+    /// `group_of[c]` = group index of centroid `c`.
+    pub group_of: Vec<usize>,
+    /// `members[g]` = centroid indices in group `g` (ascending).
+    pub members: Vec<Vec<usize>>,
+}
+
+impl Grouping {
+    pub fn n_groups(&self) -> usize {
+        self.members.len()
+    }
+
+    /// One group containing everything (degenerates to Hamerly).
+    pub fn trivial(k: usize) -> Grouping {
+        Grouping { group_of: vec![0; k], members: vec![(0..k).collect()] }
+    }
+
+    fn from_assignment(assign: &[usize], n_groups: usize) -> Grouping {
+        let mut members = vec![Vec::new(); n_groups];
+        for (c, &g) in assign.iter().enumerate() {
+            members[g].push(c);
+        }
+        Grouping { group_of: assign.to_vec(), members }
+    }
+
+    /// Internal consistency check (used by tests and debug assertions).
+    pub fn validate(&self, k: usize) -> bool {
+        if self.group_of.len() != k {
+            return false;
+        }
+        let mut seen = vec![false; k];
+        for (g, m) in self.members.iter().enumerate() {
+            for &c in m {
+                if c >= k || seen[c] || self.group_of[c] != g {
+                    return false;
+                }
+                seen[c] = true;
+            }
+        }
+        seen.iter().all(|&s| s)
+    }
+}
+
+/// Cluster the initial centroids into `n_groups` groups (a few Lloyd
+/// iterations over the k centroids themselves, per the Yinyang recipe).
+/// Deterministic in `seed`; empty groups are re-filled by splitting the
+/// largest group so every group is non-empty.
+pub fn group_centroids(centroids: &Matrix, n_groups: usize, seed: u64) -> Grouping {
+    let k = centroids.rows();
+    let n_groups = n_groups.clamp(1, k);
+    if n_groups == 1 {
+        return Grouping::trivial(k);
+    }
+    if n_groups == k {
+        return Grouping::from_assignment(&(0..k).collect::<Vec<_>>(), k);
+    }
+
+    // Mini k-means++ + Lloyd over the centroid set.
+    let mut rng = Rng::new(seed ^ 0x9159_2A5B_71C3_0DEF);
+    let mut seeds = Matrix::zeros(n_groups, centroids.cols());
+    let first = rng.next_below(k);
+    seeds.row_mut(0).copy_from_slice(centroids.row(first));
+    let mut min_d2: Vec<f64> = (0..k)
+        .map(|c| crate::util::matrix::sq_dist(centroids.row(c), seeds.row(0)) as f64)
+        .collect();
+    for s in 1..n_groups {
+        let pick = rng.sample_weighted(&min_d2);
+        seeds.row_mut(s).copy_from_slice(centroids.row(pick));
+        for c in 0..k {
+            let d2 = crate::util::matrix::sq_dist(centroids.row(c), seeds.row(s)) as f64;
+            min_d2[c] = min_d2[c].min(d2);
+        }
+    }
+
+    let mut assign = vec![0usize; k];
+    for _ in 0..5 {
+        for c in 0..k {
+            let (g, _, _) = scan_all(centroids.row(c), &seeds);
+            assign[c] = g;
+        }
+        // Update seed positions.
+        let mut sums = vec![0.0f64; n_groups * centroids.cols()];
+        let mut counts = vec![0usize; n_groups];
+        for c in 0..k {
+            counts[assign[c]] += 1;
+            let acc = &mut sums[assign[c] * centroids.cols()..(assign[c] + 1) * centroids.cols()];
+            for (a, &v) in acc.iter_mut().zip(centroids.row(c)) {
+                *a += v as f64;
+            }
+        }
+        for g in 0..n_groups {
+            if counts[g] > 0 {
+                let inv = 1.0 / counts[g] as f64;
+                for j in 0..centroids.cols() {
+                    seeds.row_mut(g)[j] = (sums[g * centroids.cols() + j] * inv) as f32;
+                }
+            }
+        }
+    }
+
+    // Repair empty groups: steal one member from the largest group.
+    let mut grouping = Grouping::from_assignment(&assign, n_groups);
+    loop {
+        let empty = match (0..n_groups).find(|&g| grouping.members[g].is_empty()) {
+            Some(g) => g,
+            None => break,
+        };
+        let largest = (0..n_groups)
+            .max_by_key(|&g| grouping.members[g].len())
+            .expect("n_groups >= 1");
+        let moved = grouping.members[largest].pop().expect("largest group non-empty");
+        grouping.members[empty].push(moved);
+        grouping.members[empty].sort_unstable();
+        grouping.group_of[moved] = empty;
+    }
+    grouping
+}
+
+/// Per-point bound state for the multi-level filter.
+#[derive(Clone, Debug)]
+pub struct FilterState {
+    pub assignments: Vec<u32>,
+    /// Upper bound on d(x, assigned centroid); exact right after a scan.
+    pub ub: Vec<f32>,
+    /// Group lower bounds, row-major `n × n_groups`: min distance to any
+    /// member of the group *excluding the assigned centroid*.
+    pub lb: Vec<f32>,
+    pub n_groups: usize,
+}
+
+impl FilterState {
+    /// Initialise by full scan: exactly `n·k` distance computations — the
+    /// same first iteration the hardware performs with filters disabled.
+    pub fn init_full_scan(ds: &Dataset, centroids: &Matrix, grouping: &Grouping) -> (Self, u64) {
+        let n = ds.n();
+        let k = centroids.rows();
+        let g_count = grouping.n_groups();
+        let mut assignments = vec![0u32; n];
+        let mut ub = vec![0.0f32; n];
+        let mut lb = vec![f32::INFINITY; n * g_count];
+        let mut dists = vec![0.0f32; k];
+        for (i, row) in ds.points.rows_iter().enumerate() {
+            let mut best = f32::INFINITY;
+            let mut arg = 0usize;
+            for c in 0..k {
+                let d = dist(row, centroids.row(c));
+                dists[c] = d;
+                if d < best {
+                    best = d;
+                    arg = c;
+                }
+            }
+            assignments[i] = arg as u32;
+            ub[i] = best;
+            let lbrow = &mut lb[i * g_count..(i + 1) * g_count];
+            for (c, &d) in dists.iter().enumerate() {
+                if c == arg {
+                    continue;
+                }
+                let g = grouping.group_of[c];
+                if d < lbrow[g] {
+                    lbrow[g] = d;
+                }
+            }
+        }
+        (
+            FilterState { assignments, ub, lb, n_groups: g_count },
+            (n as u64) * (k as u64),
+        )
+    }
+
+    /// Apply post-update drifts to every bound (the host-side part of the
+    /// filter; on the FPGA this is a streaming add over the bound BRAM).
+    ///
+    /// Group bounds are deliberately NOT clamped at zero: `step_point`
+    /// reconstructs the pre-drift bound as `lb + Δ_g` for the point-level
+    /// filter, and a clamped value would overestimate it — making the
+    /// local filter unsound (it once skipped true winners; see the
+    /// `yinyang_equals_lloyd_on_random_instances` property test that
+    /// caught it). A negative lower bound is mathematically valid and
+    /// simply never filters.
+    pub fn apply_drifts(&mut self, drifts: &[f32], group_drifts: &[f32]) {
+        let n = self.assignments.len();
+        for i in 0..n {
+            self.ub[i] = inflate_ub(self.ub[i], drifts[self.assignments[i] as usize]);
+            let lbrow = &mut self.lb[i * self.n_groups..(i + 1) * self.n_groups];
+            for (g, lb) in lbrow.iter_mut().enumerate() {
+                *lb -= group_drifts[g];
+            }
+        }
+    }
+}
+
+/// Work performed for one point in one iteration (consumed by the cycle
+/// model in `hw::accelerator` as well as by the software stats).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepCounts {
+    /// Exact distance computations (tighten + group scans).
+    pub dists: u32,
+    /// Groups eliminated by the group-level filter.
+    pub groups_skipped: u32,
+    /// Groups that had to be scanned.
+    pub groups_scanned: u32,
+    /// Centroids eliminated by the point-level (local) filter.
+    pub points_skipped: u32,
+    /// True if the global filter resolved the point (possibly after the
+    /// one-distance tighten).
+    pub globally_filtered: bool,
+    /// True if the point's assignment changed.
+    pub reassigned: bool,
+}
+
+/// Advance one point through the multi-level filter.
+///
+/// `drifts` / `group_drifts` are the *previous* update's movements;
+/// `st.apply_drifts` must already have been called for this iteration.
+/// Decisions and bound updates are purely a function of the arguments, so
+/// any executor (software loop, accelerator model, coordinator tile) that
+/// feeds the same state gets the same result.
+#[allow(clippy::too_many_arguments)]
+pub fn step_point(
+    row: &[f32],
+    centroids: &Matrix,
+    grouping: &Grouping,
+    drifts: &[f32],
+    group_drifts: &[f32],
+    i: usize,
+    st: &mut FilterState,
+) -> StepCounts {
+    let g_count = grouping.n_groups();
+    let mut counts = StepCounts::default();
+    let a_orig = st.assignments[i] as usize;
+    let lbrow_start = i * g_count;
+
+    // ---- Level 0: global filter on the stale upper bound ----
+    let mut global_lb = f32::INFINITY;
+    for g in 0..g_count {
+        global_lb = global_lb.min(st.lb[lbrow_start + g]);
+    }
+    if filter_safe(global_lb, st.ub[i]) {
+        counts.globally_filtered = true;
+        return counts;
+    }
+
+    // ---- Tighten: one exact distance to the current assignment ----
+    let d_a_orig = dist(row, centroids.row(a_orig));
+    counts.dists += 1;
+    st.ub[i] = d_a_orig;
+    if filter_safe(global_lb, st.ub[i]) {
+        counts.globally_filtered = true;
+        return counts;
+    }
+
+    // ---- Levels 1+2: group scan with the point-level filter ----
+    let mut a_cur = a_orig;
+    let mut ub_cur = d_a_orig;
+    // Deferred per-group best/second (value, centroid) for lb finalisation.
+    let mut scanned: Vec<(usize, f32, usize, f32)> = Vec::new(); // (g, min1, min1_c, min2)
+
+    for g in 0..g_count {
+        let lb_g = st.lb[lbrow_start + g];
+        if filter_safe(lb_g, ub_cur) {
+            counts.groups_skipped += 1;
+            continue;
+        }
+        counts.groups_scanned += 1;
+        // Pre-drift old bound for the local (point-level) filter.
+        let lb_pre = lb_g + group_drifts[g];
+        let mut min1 = f32::INFINITY;
+        let mut min1_c = usize::MAX;
+        let mut min2 = f32::INFINITY;
+        for &c in &grouping.members[g] {
+            if c == a_orig {
+                continue; // its exact distance is ub (handled globally)
+            }
+            // Point-level filter: c's distance is at least lb_pre - drift[c].
+            let local_bound = lb_pre - drifts[c];
+            let value = if filter_safe(local_bound, ub_cur) {
+                counts.points_skipped += 1;
+                local_bound // a valid lower bound for the new lb_g
+            } else {
+                let d = dist(row, centroids.row(c));
+                counts.dists += 1;
+                if d < ub_cur {
+                    a_cur = c;
+                    ub_cur = d;
+                }
+                d
+            };
+            if value < min1 {
+                min2 = min1;
+                min1 = value;
+                min1_c = c;
+            } else if value < min2 {
+                min2 = value;
+            }
+        }
+        scanned.push((g, min1, min1_c, min2));
+    }
+
+    // ---- Finalise bounds ----
+    for &(g, min1, min1_c, min2) in &scanned {
+        st.lb[lbrow_start + g] = if min1_c == a_cur { min2 } else { min1 };
+    }
+    if a_cur != a_orig {
+        counts.reassigned = true;
+        st.assignments[i] = a_cur as u32;
+        // The old winner becomes a candidate for its own group's bound.
+        let g_old = grouping.group_of[a_orig];
+        let slot = lbrow_start + g_old;
+        if d_a_orig < st.lb[slot] {
+            st.lb[slot] = d_a_orig;
+        }
+    }
+    st.ub[i] = ub_cur;
+    counts
+}
+
+/// Fit with the multi-level filter from explicit initial centroids.
+pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> {
+    let n = ds.n();
+    let k = cfg.k;
+    let n_groups = cfg.effective_groups().clamp(1, k);
+    let mut centroids = init;
+    let grouping = group_centroids(&centroids, n_groups, cfg.seed);
+    debug_assert!(grouping.validate(k));
+
+    let mut stats = RunStats::default();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    // Iteration 1: full scan (bound init).
+    let (mut st, init_dists) = FilterState::init_full_scan(ds, &centroids, &grouping);
+    let mut drifts;
+    let mut group_drifts;
+    {
+        iterations += 1;
+        let mut it = IterStats::default();
+        it.dist_comps = init_dists;
+        it.survivors = n as u64;
+        it.reassigned = n as u64;
+        let (new_c, _) = recompute_centroids(ds, &st.assignments, &centroids);
+        let (dr, max_drift) = centroid_drifts(&centroids, &new_c);
+        centroids = new_c;
+        it.max_drift = max_drift;
+        stats.push(it);
+        group_drifts = group_max_drifts(&dr, &grouping.group_of, grouping.n_groups());
+        drifts = dr;
+        if (max_drift as f64) <= cfg.tol {
+            converged = true;
+        } else {
+            st.apply_drifts(&drifts, &group_drifts);
+        }
+    }
+
+    while !converged && iterations < cfg.max_iters {
+        iterations += 1;
+        let mut it = IterStats::default();
+        for (i, row) in ds.points.rows_iter().enumerate() {
+            let c = step_point(row, &centroids, &grouping, &drifts, &group_drifts, i, &mut st);
+            it.dist_comps += c.dists as u64;
+            it.filtered_group += c.groups_skipped as u64;
+            it.filtered_point += c.points_skipped as u64;
+            if c.globally_filtered {
+                it.filtered_global += 1;
+            } else {
+                it.survivors += 1;
+            }
+            if c.reassigned {
+                it.reassigned += 1;
+            }
+        }
+
+        let (new_c, _) = recompute_centroids(ds, &st.assignments, &centroids);
+        let (dr, max_drift) = centroid_drifts(&centroids, &new_c);
+        centroids = new_c;
+        it.max_drift = max_drift;
+        stats.push(it);
+        group_drifts = group_max_drifts(&dr, &grouping.group_of, grouping.n_groups());
+        drifts = dr;
+
+        if (max_drift as f64) <= cfg.tol {
+            converged = true;
+        } else {
+            st.apply_drifts(&drifts, &group_drifts);
+        }
+    }
+
+    let inertia = compute_inertia(ds, &centroids, &st.assignments);
+    Ok(FitResult {
+        centroids,
+        assignments: st.assignments,
+        inertia,
+        iterations,
+        converged,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{self, init, Algorithm, InitMethod};
+
+    fn cfg(k: usize, groups: usize, seed: u64) -> KMeansConfig {
+        KMeansConfig {
+            k,
+            groups,
+            seed,
+            init: InitMethod::KMeansPlusPlus,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grouping_shapes() {
+        let c = Matrix::from_vec((0..32).map(|x| x as f32).collect(), 16, 2).unwrap();
+        for g in [1, 2, 4, 15, 16] {
+            let gr = group_centroids(&c, g, 7);
+            assert_eq!(gr.n_groups(), g);
+            assert!(gr.validate(16), "invalid grouping for g={g}");
+            assert!(gr.members.iter().all(|m| !m.is_empty()), "empty group for g={g}");
+        }
+    }
+
+    #[test]
+    fn grouping_clusters_nearby_centroids() {
+        // Two far-apart bundles of centroids must not share a group (G=2).
+        let mut vals = Vec::new();
+        for i in 0..4 {
+            vals.extend_from_slice(&[i as f32 * 0.1, 0.0]);
+        }
+        for i in 0..4 {
+            vals.extend_from_slice(&[100.0 + i as f32 * 0.1, 0.0]);
+        }
+        let c = Matrix::from_vec(vals, 8, 2).unwrap();
+        let gr = group_centroids(&c, 2, 3);
+        let g0 = gr.group_of[0];
+        assert!((0..4).all(|i| gr.group_of[i] == g0));
+        assert!((4..8).all(|i| gr.group_of[i] != g0));
+    }
+
+    #[test]
+    fn matches_lloyd_on_blobs() {
+        let ds = synth::blobs(800, 12, 6, 17);
+        for groups in [1, 2, 3, 6] {
+            let cfg = cfg(6, groups, 5);
+            let c0 = init::initialize(&ds, &cfg).unwrap();
+            let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+            let y = fit(&ds, &cfg, c0).unwrap();
+            assert_eq!(l.assignments, y.assignments, "groups={groups}");
+            assert_eq!(l.centroids, y.centroids, "groups={groups}");
+            assert_eq!(l.iterations, y.iterations, "groups={groups}");
+        }
+    }
+
+    #[test]
+    fn beats_lloyd_on_work() {
+        let ds = synth::blobs(3000, 16, 8, 23);
+        let cfg = cfg(16, 2, 5);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let y = fit(&ds, &cfg, c0).unwrap();
+        assert!(
+            (y.stats.total_dist_comps() as f64) < 0.5 * l.stats.total_dist_comps() as f64,
+            "yinyang {} vs lloyd {}",
+            y.stats.total_dist_comps(),
+            l.stats.total_dist_comps()
+        );
+    }
+
+    #[test]
+    fn filter_counter_conservation() {
+        // For every point each iteration: globally filtered XOR survived;
+        // for survivors, skipped + scanned groups == G.
+        let ds = synth::blobs(500, 8, 4, 29);
+        let cfg = cfg(8, 3, 7);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let y = fit(&ds, &cfg, c0).unwrap();
+        for (t, it) in y.stats.iters.iter().enumerate().skip(1) {
+            assert_eq!(it.filtered_global + it.survivors, 500, "iter {t}");
+            // A survivor inspects each of the G=3 groups at most once, so
+            // group-filter eliminations are bounded by survivors × G.
+            assert!(it.filtered_group <= it.survivors * 3, "iter {t}");
+            // Point-level skips can only happen inside scanned groups.
+            assert!(it.filtered_point <= it.survivors * 8, "iter {t}");
+        }
+    }
+
+    #[test]
+    fn works_when_groups_equal_k() {
+        let ds = synth::blobs(300, 6, 4, 31);
+        let cfg = cfg(4, 4, 3);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let y = fit(&ds, &cfg, c0).unwrap();
+        assert_eq!(l.assignments, y.assignments);
+    }
+
+    #[test]
+    fn single_group_degenerates_to_hamerly_equivalence() {
+        let ds = synth::blobs(400, 5, 3, 37);
+        let cfg = cfg(3, 1, 9);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let y = fit(&ds, &cfg, c0).unwrap();
+        assert_eq!(l.assignments, y.assignments);
+    }
+}

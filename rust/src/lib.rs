@@ -1,0 +1,52 @@
+//! # KPynq — work-efficient triangle-inequality K-means, reproduced in full
+//!
+//! This crate reproduces *KPynq: A Work-Efficient Triangle-Inequality based
+//! K-means on FPGA* (Wang, Zeng, Feng, Deng, Ding — CS.DC 2019) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the KPynq *system*: the multi-level-filter
+//!   K-means algorithm family ([`kmeans`]), a cycle-approximate model of the
+//!   Pynq-Z1's Zynq XC7Z020 programmable logic ([`hw`]) including the DMA /
+//!   AXIS transport, BRAM banking, the pipelined distance calculator and the
+//!   point/group filter units, and the host-side coordinator ([`coordinator`])
+//!   that tiles datasets, drives double-buffered transfers and manages run
+//!   state.
+//! * **Layer 2** — JAX compute graphs (`python/compile/model.py`), AOT-lowered
+//!   to HLO text and executed from Rust through PJRT ([`runtime`]). Python is
+//!   never on the request path.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the distance
+//!   calculator hot-spot, re-thought for TPU (MXU matmul-form distances,
+//!   VMEM-resident centroid bank) per DESIGN.md §Hardware-Adaptation.
+//!
+//! The original evaluation ran on a Pynq-Z1 board; this environment has no
+//! FPGA, so the hardware is *simulated* — functionally bit-exact, with timing
+//! and energy derived from a calibrated cycle model (DESIGN.md §1 documents
+//! every substitution). The benches under `rust/benches/` regenerate each of
+//! the paper's reported results; `examples/uci_clustering.rs` is the
+//! end-to-end driver.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use kpynq::data::synth;
+//! use kpynq::kmeans::{self, KMeansConfig};
+//! use kpynq::coordinator::{KpynqSystem, SystemConfig};
+//!
+//! let ds = synth::blobs(10_000, 16, 8, 0xC0FFEE);
+//! let sys = KpynqSystem::new(SystemConfig::default()).unwrap();
+//! let out = sys.cluster(&ds, &KMeansConfig { k: 8, ..Default::default() }).unwrap();
+//! println!("inertia {:.3} in {} iters, {} cycles simulated",
+//!          out.fit.inertia, out.fit.iterations, out.report.total_cycles);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod harness;
+pub mod hw;
+pub mod kmeans;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};

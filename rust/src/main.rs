@@ -1,0 +1,269 @@
+//! `kpynq` — the KPynq launcher.
+//!
+//! Subcommands (hand-rolled parsing; `clap` is not in the offline crate
+//! universe):
+//!
+//! ```text
+//! kpynq run [--config FILE] [--dataset NAME] [--k K] [--backend B] [--software]
+//! kpynq datasets                      list the built-in dataset generators
+//! kpynq resources [--d D] [--k K]     lane-count frontier on both parts
+//! kpynq init-config                   print an example config file
+//! kpynq info                          artifact / environment summary
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use kpynq::config::{RunConfig, EXAMPLE};
+use kpynq::coordinator::{KpynqSystem, SystemConfig};
+use kpynq::data::synth;
+use kpynq::hw::filter_unit::FilterUnitConfig;
+use kpynq::hw::resource::{self, ProblemShape};
+use kpynq::hw::ZynqPart;
+use kpynq::kmeans;
+use kpynq::runtime::manifest::Manifest;
+use kpynq::util::bench::Table;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let result = match cmd {
+        "run" => cmd_run(rest),
+        "datasets" => cmd_datasets(),
+        "resources" => cmd_resources(rest),
+        "init-config" => {
+            print!("{EXAMPLE}");
+            Ok(())
+        }
+        "info" => cmd_info(rest),
+        "table" => cmd_table(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    eprintln!(
+        "kpynq — work-efficient triangle-inequality K-means (KPynq reproduction)\n\
+         \n\
+         usage: kpynq <command> [options]\n\
+         \n\
+         commands:\n\
+         \x20 run          cluster a dataset (simulated FPGA, native or XLA backend)\n\
+         \x20 datasets     list built-in dataset generators\n\
+         \x20 resources    print the lane-count frontier for the supported parts\n\
+         \x20 init-config  print an example TOML config\n\
+         \x20 info         artifact/environment summary\n\
+         \x20 table        run the T1/T2 evaluation (options: --points N, --json FILE)\n\
+         \n\
+         run options:\n\
+         \x20 --config FILE    load a TOML config (see `kpynq init-config`)\n\
+         \x20 --dataset NAME   override dataset (gassensor|kegg|roadnetwork|uscensus|covtype|mnist|blobs|uniform|file)\n\
+         \x20 --k K            override cluster count\n\
+         \x20 --max-points N   subsample cap\n\
+         \x20 --backend B      fpga-sim | native | xla\n\
+         \x20 --software       run the software algorithm (config [kmeans].algorithm) instead of a backend\n\
+         \x20 --verify         cross-check the result against a direct Lloyd run"
+    );
+}
+
+/// Pull `--flag value` out of an argument list.
+fn take_opt(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn has_flag(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+fn cmd_run(args: &[String]) -> kpynq::Result<()> {
+    let mut cfg = match take_opt(args, "--config") {
+        Some(path) => RunConfig::from_file(Path::new(&path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(ds) = take_opt(args, "--dataset") {
+        cfg.dataset = ds;
+    }
+    if let Some(k) = take_opt(args, "--k") {
+        cfg.kmeans.k = k
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --k '{k}'")))?;
+    }
+    if let Some(mp) = take_opt(args, "--max-points") {
+        cfg.max_points = mp
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --max-points '{mp}'")))?;
+    }
+    if let Some(b) = take_opt(args, "--backend") {
+        cfg.backend_name = b;
+        cfg.validate()?;
+    }
+
+    let ds = cfg.load_dataset()?;
+    println!(
+        "dataset {} — {} points × {} dims, k={}, seed={}",
+        ds.name,
+        ds.n(),
+        ds.d(),
+        cfg.kmeans.k,
+        cfg.kmeans.seed
+    );
+
+    if has_flag(args, "--software") {
+        let t0 = std::time::Instant::now();
+        let fit = kmeans::fit(cfg.algorithm, &ds, &cfg.kmeans)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "software {}: inertia {:.4}, {} iters ({}), {:.3}s wall, {} distance comps \
+             ({:.1}% of lloyd)",
+            cfg.algorithm.name(),
+            fit.inertia,
+            fit.iterations,
+            if fit.converged { "converged" } else { "max-iters" },
+            dt,
+            fit.stats.total_dist_comps(),
+            fit.stats.work_ratio(ds.n(), cfg.kmeans.k) * 100.0
+        );
+        return Ok(());
+    }
+
+    let sys = KpynqSystem::new(SystemConfig {
+        backend: cfg.backend(),
+        verify: has_flag(args, "--verify"),
+    })?;
+    let out = sys.cluster(&ds, &cfg.kmeans)?;
+    println!(
+        "backend {}: inertia {:.4}, {} iters ({})",
+        out.report.backend,
+        out.fit.inertia,
+        out.fit.iterations,
+        if out.fit.converged { "converged" } else { "max-iters" },
+    );
+    if out.report.total_cycles > 0 {
+        println!(
+            "simulated: {} PL cycles = {:.4}s at 100 MHz | pipeline busy {:.1}% | DMA {:.1} MB",
+            out.report.total_cycles,
+            out.report.sim_seconds,
+            out.report.pipeline_utilization * 100.0,
+            out.report.dma_bytes as f64 / 1e6
+        );
+    } else {
+        println!(
+            "measured: {:.3}s wall | {} tiles dispatched | {} points rescanned",
+            out.report.wall_seconds, out.report.tiles_dispatched, out.report.points_rescanned
+        );
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> kpynq::Result<()> {
+    let mut t = Table::new(&["name", "n", "d", "modes", "character"]);
+    for s in synth::uci_specs() {
+        t.row(vec![
+            s.name.to_string(),
+            s.n.to_string(),
+            s.d.to_string(),
+            s.modes.to_string(),
+            format!(
+                "imbalance {:.1}, noise {:.2}, active dims {:.0}%",
+                s.imbalance,
+                s.noise_frac,
+                s.active_dims_frac * 100.0
+            ),
+        ]);
+    }
+    t.print();
+    println!("plus: blobs (easy synthetic), uniform (adversarial), .kpm/.csv files");
+    Ok(())
+}
+
+fn cmd_resources(args: &[String]) -> kpynq::Result<()> {
+    let d: usize = take_opt(args, "--d").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let k: usize = take_opt(args, "--k").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let g = (k + 9) / 10;
+    let shape = ProblemShape::new(k, d, g.max(1), 256);
+    let filt = FilterUnitConfig::default();
+    for part in [ZynqPart::xc7z020(), ZynqPart::zu7ev()] {
+        println!("part {} (d={d}, k={k}):", part.name);
+        let mut t = Table::new(&["lanes", "mac_width", "DSP", "BRAM_18K", "LUT", "fits"]);
+        for &w in &[4u64, 8] {
+            for &lanes in &[1u64, 2, 4, 8, 16, 32] {
+                let pipe = kpynq::hw::pipeline::PipelineConfig { lanes, mac_width: w };
+                let est = resource::estimate(&pipe, &filt, &shape);
+                t.row(vec![
+                    lanes.to_string(),
+                    w.to_string(),
+                    format!("{}/{}", est.dsp, part.dsp),
+                    format!("{}/{}", est.bram_18k, part.bram_18k),
+                    format!("{}/{}", est.luts, part.luts),
+                    if est.fits(&part) { "yes".into() } else { "NO".into() },
+                ]);
+            }
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &[String]) -> kpynq::Result<()> {
+    use kpynq::harness;
+    let points: usize = take_opt(args, "--points")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12_000);
+    let k: usize = take_opt(args, "--k").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let suite = harness::bench_suite(2019, points);
+    let kcfg = kpynq::kmeans::KMeansConfig { k, seed: 7, max_iters: 100, ..Default::default() };
+    let acfg = kpynq::hw::AccelConfig::default();
+    let cpu = harness::default_cpu();
+    let mut rows = Vec::new();
+    for ds in &suite {
+        rows.push(harness::speedup_energy_row(ds, &kcfg, &acfg, &cpu)?);
+    }
+    print!("{}", harness::render_speedup_table(&rows));
+    if let Some(path) = take_opt(args, "--json") {
+        std::fs::write(&path, harness::speedup_rows_to_json(&rows).to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> kpynq::Result<()> {
+    let dir = take_opt(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    println!("kpynq {} — three-layer KPynq reproduction", env!("CARGO_PKG_VERSION"));
+    match Manifest::load(&PathBuf::from(&dir)) {
+        Ok(m) => {
+            println!("artifacts: {} modules in {dir} (tile_n = {})", m.artifacts.len(), m.tile_n);
+            let mut t = Table::new(&["name", "entry", "d", "k", "g"]);
+            for a in &m.artifacts {
+                t.row(vec![
+                    a.name.clone(),
+                    a.entry.clone(),
+                    a.d.to_string(),
+                    a.k.to_string(),
+                    a.g.to_string(),
+                ]);
+            }
+            t.print();
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! The AOT artifact manifest (`artifacts/manifest.json`).
+//!
+//! Written by `python/compile/aot.py` at build time; read here at run time.
+//! Each record describes one HLO-text module: its entry kind, the static
+//! tile geometry it was traced for, and its I/O signature. The
+//! [`Manifest::pick_assign`] selector implements the padding policy: a tile
+//! of geometry (d, k) runs on the smallest exported variant that dominates
+//! it, with the coordinator padding inputs and slicing outputs.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Tensor signature (shape + dtype string, e.g. "f32"/"s32").
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One exported module.
+#[derive(Clone, Debug)]
+pub struct ArtifactRecord {
+    pub name: String,
+    pub file: PathBuf,
+    pub entry: String,
+    pub tile_n: usize,
+    pub d: usize,
+    pub k: usize,
+    pub g: usize,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub sha256: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub tile_n: usize,
+    pub artifacts: Vec<ArtifactRecord>,
+    /// Directory the manifest was loaded from (files are relative to it).
+    pub dir: PathBuf,
+}
+
+fn sigs(j: &Json) -> Result<Vec<TensorSig>> {
+    j.as_arr()?
+        .iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSig { shape, dtype: t.get("dtype")?.as_str()?.to_string() })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let version = j.get("version")?.as_usize()?;
+        if version != 1 {
+            return Err(Error::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let tile_n = j.get("tile_n")?.as_usize()?;
+        let mut artifacts = Vec::new();
+        for rec in j.get("artifacts")?.as_arr()? {
+            let file = dir.join(rec.get("file")?.as_str()?);
+            if !file.exists() {
+                return Err(Error::Artifact(format!(
+                    "manifest names missing file {}",
+                    file.display()
+                )));
+            }
+            artifacts.push(ArtifactRecord {
+                name: rec.get("name")?.as_str()?.to_string(),
+                file,
+                entry: rec.get("entry")?.as_str()?.to_string(),
+                tile_n: rec.get("tile_n")?.as_usize()?,
+                d: rec.get("d")?.as_usize()?,
+                k: rec.get("k")?.as_usize()?,
+                g: rec.get("g")?.as_usize()?,
+                inputs: sigs(rec.get("inputs")?)?,
+                outputs: sigs(rec.get("outputs")?)?,
+                sha256: rec.get("sha256")?.as_str()?.to_string(),
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(Error::Artifact("manifest has no artifacts".into()));
+        }
+        Ok(Manifest { tile_n, artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Smallest `assign` variant that dominates (d, k), by padded waste.
+    pub fn pick_assign(&self, d: usize, k: usize) -> Result<&ArtifactRecord> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.entry == "assign" && a.d >= d && a.k >= k)
+            .min_by_key(|a| a.d * a.k)
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no assign variant dominates d={d}, k={k} \
+                     (exported: {:?})",
+                    self.artifacts
+                        .iter()
+                        .filter(|a| a.entry == "assign")
+                        .map(|a| (a.d, a.k))
+                        .collect::<Vec<_>>()
+                ))
+            })
+    }
+
+    /// All records of one entry kind.
+    pub fn by_entry(&self, entry: &str) -> Vec<&ArtifactRecord> {
+        self.artifacts.iter().filter(|a| a.entry == entry).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path, artifacts_json: &str) -> Result<Manifest> {
+        std::fs::create_dir_all(dir).unwrap();
+        let text = format!(
+            r#"{{"version": 1, "tile_n": 256, "artifacts": [{artifacts_json}]}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        Manifest::load(dir)
+    }
+
+    fn record(name: &str, entry: &str, d: usize, k: usize) -> String {
+        format!(
+            r#"{{"name": "{name}", "file": "{name}.hlo.txt", "entry": "{entry}",
+                "tile_n": 256, "d": {d}, "k": {k}, "g": 8,
+                "inputs": [{{"shape": [256, {d}], "dtype": "f32"}}],
+                "outputs": [{{"shape": [256], "dtype": "s32"}}],
+                "sha256": "x"}}"#
+        )
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kpynq-manifest-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn loads_and_selects() {
+        let dir = tmp("sel");
+        std::fs::create_dir_all(&dir).unwrap();
+        for n in ["a4", "a64", "a128"] {
+            std::fs::write(dir.join(format!("{n}.hlo.txt")), "HloModule x").unwrap();
+        }
+        let arts = [
+            record("a4", "assign", 4, 16),
+            record("a64", "assign", 64, 16),
+            record("a128", "assign", 128, 16),
+        ]
+        .join(",");
+        let m = write_fake_manifest(&dir, &arts).unwrap();
+        assert_eq!(m.tile_n, 256);
+        assert_eq!(m.pick_assign(3, 8).unwrap().name, "a4");
+        assert_eq!(m.pick_assign(5, 16).unwrap().name, "a64");
+        assert_eq!(m.pick_assign(128, 16).unwrap().name, "a128");
+        assert!(m.pick_assign(200, 16).is_err());
+        assert!(m.pick_assign(4, 17).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let dir = tmp("missing");
+        let err = write_fake_manifest(&dir, &record("ghost", "assign", 4, 16));
+        assert!(matches!(err, Err(Error::Artifact(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let dir = tmp("none");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,52 @@
+//! Execution engines for the distance/assign hot tile.
+//!
+//! The coordinator dispatches dense survivor tiles to an [`Engine`]:
+//!
+//! * [`native::NativeEngine`] — the in-process Rust implementation (also
+//!   the functional core of the hardware simulator).
+//! * [`xla::XlaEngine`] — the AOT path: loads the HLO text modules that
+//!   `python/compile/aot.py` lowered from the Layer-1 Pallas kernels,
+//!   compiles them once on the PJRT CPU client, and executes them from the
+//!   Rust request path. Python is never involved at run time.
+//!
+//! Both engines return *squared* distances with ties broken to the lowest
+//! centroid index, so they are interchangeable; `engine_parity` integration
+//! tests assert the XLA engine matches the native one on random tiles.
+
+pub mod manifest;
+pub mod native;
+pub mod xla;
+
+use crate::error::Result;
+use crate::util::matrix::Matrix;
+
+/// Output of an assign-tile dispatch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AssignOut {
+    /// Nearest-centroid index per point.
+    pub idx: Vec<u32>,
+    /// Squared distance to the winner.
+    pub best: Vec<f32>,
+    /// Squared distance to the runner-up (`inf` when k == 1).
+    pub second: Vec<f32>,
+}
+
+/// A tile executor.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+
+    /// Assign every row of `points` to its nearest row of `centroids`.
+    fn assign_tile(&mut self, points: &Matrix, centroids: &Matrix) -> Result<AssignOut>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_out_equality_semantics() {
+        let a = AssignOut { idx: vec![0], best: vec![1.0], second: vec![2.0] };
+        let b = a.clone();
+        assert_eq!(a, b);
+    }
+}

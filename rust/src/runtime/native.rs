@@ -1,0 +1,68 @@
+//! The native (pure-Rust) tile engine.
+//!
+//! Shares its scan kernel with the software algorithms (`lloyd::scan_all`),
+//! so a coordinator run through the native engine is numerically identical
+//! to a direct `kmeans::fit` — the anchor for all cross-engine parity
+//! tests.
+
+use crate::error::Result;
+use crate::kmeans::lloyd::scan_all;
+use crate::util::matrix::Matrix;
+
+use super::{AssignOut, Engine};
+
+/// Zero-configuration native engine.
+#[derive(Clone, Debug, Default)]
+pub struct NativeEngine;
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn assign_tile(&mut self, points: &Matrix, centroids: &Matrix) -> Result<AssignOut> {
+        let n = points.rows();
+        let mut idx = Vec::with_capacity(n);
+        let mut best = Vec::with_capacity(n);
+        let mut second = Vec::with_capacity(n);
+        for row in points.rows_iter() {
+            let (a, b, s) = scan_all(row, centroids);
+            idx.push(a as u32);
+            best.push(b);
+            second.push(s);
+        }
+        Ok(AssignOut { idx, best, second })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn matches_scan_all_semantics() {
+        let ds = synth::blobs(100, 6, 3, 1);
+        let cents = ds.points.gather_rows(&[0, 10, 20]);
+        let out = NativeEngine.assign_tile(&ds.points, &cents).unwrap();
+        assert_eq!(out.idx.len(), 100);
+        // Points 0/10/20 sit exactly on centroids.
+        assert_eq!(out.idx[0], 0);
+        assert_eq!(out.idx[10], 1);
+        assert_eq!(out.idx[20], 2);
+        assert!(out.best[0] <= 1e-12);
+        // best <= second everywhere.
+        for i in 0..100 {
+            assert!(out.best[i] <= out.second[i]);
+        }
+    }
+
+    #[test]
+    fn k1_second_is_infinite() {
+        let ds = synth::blobs(10, 3, 1, 2);
+        let cents = ds.points.gather_rows(&[0]);
+        let out = NativeEngine.assign_tile(&ds.points, &cents).unwrap();
+        assert!(out.second.iter().all(|s| s.is_infinite()));
+        assert!(out.idx.iter().all(|&i| i == 0));
+    }
+}

@@ -1,0 +1,213 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use [`Bencher`]: warmup, then repeated timed runs
+//! until both a minimum iteration count and a minimum wall-clock budget are
+//! met, reporting median / mean / min over per-iteration times. A
+//! [`black_box`] re-export prevents the optimiser from deleting measured
+//! work. The output format is stable and table-like so bench logs are
+//! directly pasteable into EXPERIMENTS.md.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Re-exported optimisation barrier.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with a wall-clock budget.
+pub struct Bencher {
+    /// Minimum number of timed iterations.
+    pub min_iters: usize,
+    /// Minimum total time spent in timed iterations.
+    pub min_time: Duration,
+    /// Hard cap on iterations (slow end-to-end benches).
+    pub max_iters: usize,
+    /// Warmup iterations (untimed).
+    pub warmup_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            min_iters: 10,
+            min_time: Duration::from_millis(300),
+            max_iters: 10_000_000,
+            warmup_iters: 2,
+        }
+    }
+}
+
+impl Bencher {
+    /// A bencher sized for expensive end-to-end runs (seconds each).
+    pub fn end_to_end() -> Self {
+        Self {
+            min_iters: 3,
+            min_time: Duration::from_millis(200),
+            max_iters: 10,
+            warmup_iters: 1,
+        }
+    }
+
+    /// Time `f`, printing and returning the measurement.
+    pub fn bench<F, R>(&self, name: &str, mut f: F) -> Measurement
+    where
+        F: FnMut() -> R,
+    {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut times = Vec::new();
+        let budget_start = Instant::now();
+        while (times.len() < self.min_iters
+            || budget_start.elapsed() < self.min_time)
+            && times.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let med = stats::median(&times);
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = times.iter().cloned().fold(0.0f64, f64::max);
+        let m = Measurement {
+            name: name.to_string(),
+            iters: times.len(),
+            median: Duration::from_secs_f64(med),
+            mean: Duration::from_secs_f64(mean),
+            min: Duration::from_secs_f64(min),
+            max: Duration::from_secs_f64(max),
+        };
+        println!(
+            "bench {:<44} iters {:>5}  median {:>12}  mean {:>12}  min {:>12}",
+            m.name,
+            m.iters,
+            fmt_duration(m.median),
+            fmt_duration(m.mean),
+            fmt_duration(m.min),
+        );
+        m
+    }
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher {
+            min_iters: 5,
+            min_time: Duration::from_millis(1),
+            max_iters: 50,
+            warmup_iters: 1,
+        };
+        let m = b.bench("noop-sum", || (0..100u64).sum::<u64>());
+        assert!(m.iters >= 5);
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["dataset", "speedup"]);
+        t.row(vec!["kegg".into(), "3.10x".into()]);
+        t.row(vec!["roadnetwork".into(), "1.95x".into()]);
+        let r = t.render();
+        assert!(r.contains("| roadnetwork |"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

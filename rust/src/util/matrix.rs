@@ -1,0 +1,172 @@
+//! Dense row-major `f32` matrix — the storage type for points and centroids.
+//!
+//! Deliberately minimal: K-means needs contiguous row access, squared
+//! distances and a handful of row-wise updates. Everything hot lives in
+//! `kmeans::*` as free functions over `&[f32]` slices so the compiler can
+//! vectorise without abstraction in the way.
+
+use crate::error::{Error, Result};
+
+/// Row-major matrix of `rows × cols` f32 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Wrap an existing buffer; fails if the length is not `rows * cols`.
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Data(format!(
+                "buffer of {} values cannot be a {}x{} matrix",
+                data.len(), rows, cols
+            )));
+        }
+        Ok(Self { data, rows, cols })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Copy a set of rows into a new matrix (used by tile compaction).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Iterate over rows.
+    pub fn rows_iter(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.cols)
+    }
+}
+
+/// Squared Euclidean distance between two equal-length slices.
+///
+/// Eight independent accumulator lanes over `chunks_exact(8)`: the fixed-
+/// size chunk arrays eliminate bounds checks and give LLVM a clean 8-wide
+/// reduction to vectorise without `-ffast-math` reassociation permission —
+/// the same shape as the FPGA's MAC tree (DESIGN.md §Perf, L3 hot path).
+/// Deliberately `d * d + acc`, NOT `f32::mul_add`: without `-C
+/// target-feature=+fma` the latter lowers to a libm `fmaf` call and is ~6×
+/// slower (measured in the hotpath bench).
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        // Fixed-size views: no bounds checks inside the loop body.
+        let xa: &[f32; 8] = xa.try_into().unwrap();
+        let xb: &[f32; 8] = xb.try_into().unwrap();
+        for l in 0..8 {
+            let d = xa[l] - xb[l];
+            lanes[l] += d * d;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ra.iter().zip(rb) {
+        let d = x - y;
+        tail += d * d;
+    }
+    let s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    s + tail
+}
+
+/// Euclidean distance.
+#[inline]
+pub fn dist(a: &[f32], b: &[f32]) -> f32 {
+    sq_dist(a, b).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_access() {
+        let mut m = Matrix::zeros(3, 4);
+        m.row_mut(1)[2] = 5.0;
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 4);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0, 0.0]);
+        assert_eq!(m.as_slice()[6], 5.0);
+    }
+
+    #[test]
+    fn from_vec_validates_shape() {
+        assert!(Matrix::from_vec(vec![1.0; 6], 2, 3).is_ok());
+        assert!(Matrix::from_vec(vec![1.0; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn gather_rows_copies() {
+        let m = Matrix::from_vec((0..12).map(|x| x as f32).collect(), 4, 3).unwrap();
+        let g = m.gather_rows(&[3, 0]);
+        assert_eq!(g.row(0), &[9.0, 10.0, 11.0]);
+        assert_eq!(g.row(1), &[0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn sq_dist_matches_naive_for_all_lengths() {
+        for n in 0..33 {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+            let b: Vec<f32> = (0..n).map(|i| (n - i) as f32 * 0.25).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            let got = sq_dist(&a, &b);
+            assert!((got - naive).abs() <= 1e-4 * naive.max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dist_is_sqrt_of_sq_dist() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 6.0, 3.0];
+        assert!((dist(&a, &b) - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained utilities.
+//!
+//! The offline crate universe for this build contains only the `xla`
+//! dependency closure, so several things that would normally be external
+//! crates live here instead: a deterministic RNG ([`rng`]), a JSON reader /
+//! writer ([`json`]), a TOML-subset reader ([`toml`]), a benchmark timer
+//! ([`bench`]) and a property-test driver ([`proptest`]).
+
+pub mod bench;
+pub mod json;
+pub mod matrix;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod toml;

@@ -1,0 +1,98 @@
+//! Tiny property-test driver (the `proptest` crate is unavailable offline).
+//!
+//! [`run_cases`] feeds a closure `CASES` independent deterministic RNG
+//! streams; the closure generates its own random instance and asserts its
+//! invariant, returning `Err(description)` on violation. On failure the
+//! driver reports the failing case index and seed so the case can be
+//! replayed exactly — no shrinking, but instances are kept small by
+//! construction so raw counterexamples stay readable.
+
+use super::rng::Rng;
+
+/// Number of random cases per property (tuned so the whole L3 property
+/// suite stays under a few seconds in `cargo test`).
+pub const CASES: usize = 100;
+
+/// Run `cases` random trials of `prop`, panicking with context on failure.
+pub fn run_cases_n<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' violated on case {case}/{cases} \
+                 (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// [`run_cases_n`] with the default case count.
+pub fn run_cases<F>(name: &str, seed: u64, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    run_cases_n(name, seed, CASES, prop)
+}
+
+/// Helper: random small clustering instance (points, n, d, k) for
+/// algorithm-equivalence properties.
+pub fn small_instance(rng: &mut Rng) -> (Vec<f32>, usize, usize, usize) {
+    let n = 8 + rng.next_below(120);
+    let d = 1 + rng.next_below(12);
+    let k = 1 + rng.next_below(8.min(n));
+    // A mixture of a few loose blobs — representative geometry, and with
+    // enough spread that near-ties are rare but possible.
+    let centers: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+    let mut pts = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let c = rng.next_below(k);
+        for j in 0..d {
+            pts.push(centers[c * d + j] + rng.normal_f32(0.0, 0.7));
+        }
+    }
+    (pts, n, d, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_cases_n("counts", 1, 25, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' violated")]
+    fn failing_property_panics_with_context() {
+        run_cases_n("always-fails", 2, 10, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn small_instance_is_well_formed() {
+        run_cases("instance-shape", 3, |rng| {
+            let (pts, n, d, k) = small_instance(rng);
+            if pts.len() != n * d {
+                return Err(format!("len {} != {}*{}", pts.len(), n, d));
+            }
+            if k == 0 || k > n {
+                return Err(format!("bad k={k} for n={n}"));
+            }
+            if !pts.iter().all(|x| x.is_finite()) {
+                return Err("non-finite point".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,216 @@
+//! TOML-subset reader for run configuration files.
+//!
+//! Supports the subset the KPynq config surface needs: `[section]` headers,
+//! `key = value` pairs with string / integer / float / boolean / homogeneous
+//! array values, `#` comments and blank lines. No nested tables-in-arrays,
+//! no multi-line strings, no datetimes — the config schema (`config.rs`)
+//! never produces them.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(Error::Parse(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => Err(Error::Parse(format!("expected integer, got {other:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        usize::try_from(i).map_err(|_| Error::Parse(format!("expected usize, got {i}")))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => Err(Error::Parse(format!("expected float, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Err(Error::Parse(format!("expected bool, got {other:?}"))),
+        }
+    }
+}
+
+/// `section -> key -> value`. Top-level keys live in the `""` section.
+pub type Document = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document> {
+    let mut doc: Document = BTreeMap::new();
+    doc.insert(String::new(), BTreeMap::new());
+    let mut section = String::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Parse(format!("line {}: unterminated section", lineno + 1)))?
+                .trim();
+            if name.is_empty() {
+                return Err(Error::Parse(format!("line {}: empty section name", lineno + 1)));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| Error::Parse(format!("line {}: expected key = value", lineno + 1)))?;
+        let key = line[..eq].trim();
+        let val_text = line[eq + 1..].trim();
+        if key.is_empty() || val_text.is_empty() {
+            return Err(Error::Parse(format!("line {}: empty key or value", lineno + 1)));
+        }
+        let value = parse_value(val_text)
+            .map_err(|e| Error::Parse(format!("line {}: {e}", lineno + 1)))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> std::result::Result<Value, String> {
+    let text = text.trim();
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: std::result::Result<Vec<Value>, String> =
+            inner.split(',').map(|s| parse_value(s.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    // Numbers: integer if it parses as i64 and has no '.', 'e' markers.
+    let looks_float = text.contains('.') || text.contains('e') || text.contains('E');
+    if !looks_float {
+        if let Ok(i) = text.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{text}'"))
+}
+
+/// Convenience: look up `section.key`, with a default.
+pub fn get<'d>(doc: &'d Document, section: &str, key: &str) -> Option<&'d Value> {
+    doc.get(section).and_then(|s| s.get(key))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let text = r#"
+# KPynq run config
+name = "demo"
+
+[algorithm]
+k = 16
+groups = 8          # yinyang groups
+tolerance = 1e-4
+use_filters = true
+
+[hardware]
+lanes = 8
+clock_mhz = 100.0
+sweep = [1, 2, 4, 8]
+"#;
+        let doc = parse(text).unwrap();
+        assert_eq!(get(&doc, "", "name").unwrap().as_str().unwrap(), "demo");
+        assert_eq!(get(&doc, "algorithm", "k").unwrap().as_usize().unwrap(), 16);
+        assert_eq!(get(&doc, "algorithm", "tolerance").unwrap().as_f64().unwrap(), 1e-4);
+        assert!(get(&doc, "algorithm", "use_filters").unwrap().as_bool().unwrap());
+        assert_eq!(get(&doc, "hardware", "clock_mhz").unwrap().as_f64().unwrap(), 100.0);
+        let arr = match get(&doc, "hardware", "sweep").unwrap() {
+            Value::Arr(v) => v,
+            _ => panic!(),
+        };
+        assert_eq!(arr.len(), 4);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse("s = \"a # b\"").unwrap();
+        assert_eq!(get(&doc, "", "s").unwrap().as_str().unwrap(), "a # b");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("keyonly").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("x = \"open").is_err());
+        assert!(parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn integer_vs_float() {
+        let doc = parse("a = 5\nb = 5.0\nc = 1_000").unwrap();
+        assert_eq!(get(&doc, "", "a").unwrap(), &Value::Int(5));
+        assert_eq!(get(&doc, "", "b").unwrap(), &Value::Float(5.0));
+        assert_eq!(get(&doc, "", "c").unwrap(), &Value::Int(1000));
+    }
+}

@@ -1,0 +1,101 @@
+//! XLA-engine parity: the AOT-compiled Pallas kernel (through PJRT) must
+//! agree with the native Rust engine on random tiles, and a whole
+//! coordinator run on the XLA backend must agree with Lloyd.
+//!
+//! Requires `make artifacts` (the Makefile runs tests after artifacts, so
+//! this is an error — not a skip — when the manifest is missing).
+
+use std::path::PathBuf;
+
+use kpynq::coordinator::driver::run_with_engine;
+use kpynq::data::synth;
+use kpynq::kmeans::{self, Algorithm, KMeansConfig};
+use kpynq::runtime::native::NativeEngine;
+use kpynq::runtime::xla::XlaEngine;
+use kpynq::runtime::Engine;
+use kpynq::util::matrix::Matrix;
+use kpynq::util::rng::Rng;
+
+fn artifact_dir() -> PathBuf {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    root.join("artifacts")
+}
+
+fn require_engine() -> XlaEngine {
+    XlaEngine::new(&artifact_dir()).expect(
+        "artifacts/manifest.json missing or invalid — run `make artifacts` before `cargo test`",
+    )
+}
+
+fn random_tile(rng: &mut Rng, n: usize, d: usize, k: usize) -> (Matrix, Matrix) {
+    let pts: Vec<f32> = (0..n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let cents: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    (
+        Matrix::from_vec(pts, n, d).unwrap(),
+        Matrix::from_vec(cents, k, d).unwrap(),
+    )
+}
+
+#[test]
+fn xla_matches_native_on_random_tiles() {
+    let mut xla = require_engine();
+    let mut native = NativeEngine;
+    let mut rng = Rng::new(0x7E57);
+    // Sweep geometries that exercise every exported variant + padding.
+    for &(n, d, k) in &[
+        (256usize, 4usize, 16usize), // exact variant fit
+        (256, 32, 16),
+        (256, 64, 16),
+        (256, 128, 16),
+        (256, 64, 64),
+        (100, 3, 5),   // padded rows, dims and centroids
+        (300, 20, 16), // split across two tiles
+        (512, 33, 17), // padded into the 64/64 variant
+        (64, 1, 1),    // degenerate k=1
+    ] {
+        let (pts, cents) = random_tile(&mut rng, n, d, k);
+        let a = native.assign_tile(&pts, &cents).unwrap();
+        let b = xla.assign_tile(&pts, &cents).unwrap();
+        assert_eq!(a.idx.len(), b.idx.len(), "({n},{d},{k}) length");
+        for i in 0..n {
+            assert_eq!(
+                a.idx[i], b.idx[i],
+                "({n},{d},{k}) point {i}: native {} vs xla {}",
+                a.idx[i], b.idx[i]
+            );
+            let rel = |x: f32, y: f32| (x - y).abs() <= 1e-4 * x.abs().max(y.abs()).max(1e-3);
+            assert!(rel(a.best[i], b.best[i]), "({n},{d},{k}) best[{i}]");
+            if a.second[i].is_finite() || b.second[i].is_finite() {
+                assert!(
+                    rel(a.second[i], b.second[i]),
+                    "({n},{d},{k}) second[{i}]: {} vs {}",
+                    a.second[i],
+                    b.second[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_backend_coordinator_matches_lloyd() {
+    let ds = synth::blobs(2000, 16, 6, 21);
+    let kcfg = KMeansConfig { k: 6, seed: 9, ..Default::default() };
+    let direct = kmeans::fit(Algorithm::Lloyd, &ds, &kcfg).unwrap();
+    let mut eng = require_engine();
+    let out = run_with_engine(&mut eng, &ds, &kcfg).unwrap();
+    assert_eq!(direct.assignments, out.fit.assignments);
+    assert_eq!(direct.iterations, out.fit.iterations);
+    assert!(out.report.tiles_dispatched > 0);
+    assert!(eng.tiles_executed > 0);
+}
+
+#[test]
+fn xla_engine_reports_unsupported_geometry() {
+    let mut xla = require_engine();
+    let mut rng = Rng::new(3);
+    // d=200 exceeds every exported variant.
+    let (pts, cents) = random_tile(&mut rng, 256, 200, 8);
+    let err = xla.assign_tile(&pts, &cents).unwrap_err();
+    assert!(err.to_string().contains("no assign variant"), "{err}");
+}

@@ -1,0 +1,144 @@
+//! Cross-algorithm exactness: the core correctness property of the paper's
+//! filter family. Every triangle-inequality algorithm must reproduce
+//! Lloyd's trajectory exactly — same assignments, same centroids, same
+//! iteration count — on arbitrary data, differing only in how much work it
+//! skipped. Random-instance property tests via the in-crate driver.
+
+use kpynq::data::Dataset;
+use kpynq::hw::{AccelConfig, Accelerator};
+use kpynq::kmeans::{self, init, Algorithm, InitMethod, KMeansConfig};
+use kpynq::util::matrix::Matrix;
+use kpynq::util::proptest::{run_cases, run_cases_n, small_instance};
+use kpynq::util::rng::Rng;
+
+fn make_dataset(rng: &mut Rng) -> (Dataset, KMeansConfig) {
+    let (pts, n, d, k) = small_instance(rng);
+    let ds = Dataset::new("prop", Matrix::from_vec(pts, n, d).unwrap());
+    let groups = 1 + rng.next_below(k);
+    let cfg = KMeansConfig {
+        k,
+        groups,
+        max_iters: 25,
+        tol: 1e-5,
+        seed: rng.next_u64(),
+        init: if rng.next_below(2) == 0 {
+            InitMethod::KMeansPlusPlus
+        } else {
+            InitMethod::RandomPoints
+        },
+    };
+    (ds, cfg)
+}
+
+/// Compare two fits allowing only genuine float near-ties to differ.
+fn assert_equivalent(name: &str, a: &kmeans::FitResult, b: &kmeans::FitResult) -> Result<(), String> {
+    if a.iterations != b.iterations {
+        return Err(format!("{name}: iterations {} vs {}", a.iterations, b.iterations));
+    }
+    if a.assignments != b.assignments {
+        let diff = a
+            .assignments
+            .iter()
+            .zip(&b.assignments)
+            .filter(|(x, y)| x != y)
+            .count();
+        return Err(format!("{name}: {diff} assignment mismatches"));
+    }
+    if a.centroids != b.centroids {
+        return Err(format!("{name}: centroid mismatch"));
+    }
+    Ok(())
+}
+
+#[test]
+fn hamerly_equals_lloyd_on_random_instances() {
+    run_cases("hamerly == lloyd", 0xA11CE, |rng| {
+        let (ds, cfg) = make_dataset(rng);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let h = kmeans::fit_from(Algorithm::Hamerly, &ds, &cfg, c0).unwrap();
+        assert_equivalent("hamerly", &l, &h)
+    });
+}
+
+#[test]
+fn elkan_equals_lloyd_on_random_instances() {
+    run_cases("elkan == lloyd", 0xB0B, |rng| {
+        let (ds, cfg) = make_dataset(rng);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let e = kmeans::fit_from(Algorithm::Elkan, &ds, &cfg, c0).unwrap();
+        assert_equivalent("elkan", &l, &e)
+    });
+}
+
+#[test]
+fn yinyang_equals_lloyd_on_random_instances() {
+    run_cases("yinyang == lloyd", 0xCAFE, |rng| {
+        let (ds, cfg) = make_dataset(rng);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let y = kmeans::fit_from(Algorithm::Yinyang, &ds, &cfg, c0).unwrap();
+        assert_equivalent("yinyang", &l, &y)
+    });
+}
+
+#[test]
+fn accelerator_equals_software_yinyang_on_random_instances() {
+    // Fewer cases: each runs a full simulated fit.
+    run_cases_n("accel == yinyang", 0xD00D, 40, |rng| {
+        let (ds, cfg) = make_dataset(rng);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let sw = kmeans::fit_from(Algorithm::Yinyang, &ds, &cfg, c0.clone()).unwrap();
+        let hw = Accelerator::new(AccelConfig::default())
+            .run_fit(&ds, &cfg, c0)
+            .map_err(|e| e.to_string())?;
+        assert_equivalent("accelerator", &sw, &hw.fit)?;
+        if sw.stats.total_dist_comps() != hw.fit.stats.total_dist_comps() {
+            return Err(format!(
+                "work mismatch: sw {} vs hw {}",
+                sw.stats.total_dist_comps(),
+                hw.fit.stats.total_dist_comps()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn coordinator_native_equals_lloyd_on_random_instances() {
+    use kpynq::coordinator::driver::run_with_engine;
+    use kpynq::runtime::native::NativeEngine;
+    run_cases_n("coordinator == lloyd", 0xFEED, 40, |rng| {
+        let (ds, cfg) = make_dataset(rng);
+        let l = kmeans::fit(Algorithm::Lloyd, &ds, &cfg).unwrap();
+        let out = run_with_engine(&mut NativeEngine, &ds, &cfg).map_err(|e| e.to_string())?;
+        assert_equivalent("coordinator", &l, &out.fit)
+    });
+}
+
+#[test]
+fn filtered_algorithms_never_do_more_work_than_lloyd() {
+    run_cases("work <= lloyd", 0x57A7, |rng| {
+        let (ds, cfg) = make_dataset(rng);
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let lloyd_work = l.stats.total_dist_comps();
+        for algo in [Algorithm::Hamerly, Algorithm::Yinyang] {
+            let f = kmeans::fit_from(algo, &ds, &cfg, c0.clone()).unwrap();
+            // The k² inter-centroid distances are extra bookkeeping; allow
+            // that overhead but no more.
+            let overhead = (cfg.k * cfg.k * f.iterations) as u64;
+            if f.stats.total_dist_comps() > lloyd_work + overhead {
+                return Err(format!(
+                    "{}: {} > lloyd {} + overhead {}",
+                    algo.name(),
+                    f.stats.total_dist_comps(),
+                    lloyd_work,
+                    overhead
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,210 @@
+//! Property tests on coordinator and hardware-model invariants
+//! (DESIGN.md §6): tile scheduling conserves points, the DMA model
+//! conserves bytes against physical link limits, resource estimates are
+//! monotone, bound arithmetic stays conservative under drift.
+
+use kpynq::coordinator::scheduler;
+use kpynq::hw::dma::{Dir, DmaModel, Transfer};
+use kpynq::hw::filter_unit::FilterUnitConfig;
+use kpynq::hw::pipeline::PipelineConfig;
+use kpynq::hw::resource::{estimate, ProblemShape};
+use kpynq::hw::ZynqPart;
+use kpynq::kmeans::bounds::{deflate_lb, filter_safe, group_max_drifts, inflate_ub};
+use kpynq::util::proptest::run_cases;
+
+#[test]
+fn partition_is_exact_cover() {
+    run_cases("partition covers 0..n once", 1, |rng| {
+        let n = rng.next_below(5000);
+        let tile = 1 + rng.next_below(512);
+        let tiles = scheduler::partition(n, tile);
+        let mut seen = vec![false; n];
+        for t in &tiles {
+            if t.indices.len() > tile {
+                return Err(format!("tile of {} > {}", t.indices.len(), tile));
+            }
+            for &i in &t.indices {
+                if i >= n || seen[i] {
+                    return Err(format!("index {i} duplicated or out of range"));
+                }
+                seen[i] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("not all points covered".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn compact_preserves_survivor_set() {
+    run_cases("compact = sorted survivor multiset", 2, |rng| {
+        let n = 1 + rng.next_below(3000);
+        let tile = 1 + rng.next_below(300);
+        // Random subset, shuffled order.
+        let mut survivors: Vec<usize> = (0..n).filter(|_| rng.next_below(3) == 0).collect();
+        rng.shuffle(&mut survivors);
+        let expect: std::collections::BTreeSet<usize> = survivors.iter().copied().collect();
+        let tiles = scheduler::compact(survivors, tile);
+        let mut got = Vec::new();
+        for t in &tiles {
+            // Dense ascending within a tile.
+            for w in t.indices.windows(2) {
+                if w[0] >= w[1] {
+                    return Err("tile not ascending".into());
+                }
+            }
+            got.extend_from_slice(&t.indices);
+        }
+        let got_set: std::collections::BTreeSet<usize> = got.iter().copied().collect();
+        if got.len() != got_set.len() || got_set != expect {
+            return Err("survivor set changed".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dma_never_beats_physics() {
+    run_cases("dma >= bytes/width and >= ddr floor", 3, |rng| {
+        let part = ZynqPart::xc7z020();
+        let m = DmaModel::for_part(&part);
+        let bytes = 1 + rng.next_below(1 << 24) as u64;
+        let c = m.transfer_cycles(Transfer { bytes, dir: Dir::ToPl });
+        if c < bytes.div_ceil(m.port_bytes_per_cycle) {
+            return Err(format!("{bytes} B in {c} cycles beats the port"));
+        }
+        // Concurrent makespan ≥ any member, ≥ DDR floor.
+        let t1 = Transfer { bytes, dir: Dir::ToPl };
+        let t2 = Transfer { bytes: 1 + rng.next_below(1 << 22) as u64, dir: Dir::FromPl };
+        let mk = m.concurrent(&[t1, t2]);
+        if mk < m.transfer_cycles(t1).max(0) || mk + m.setup_cycles < m.transfer_cycles(t2) {
+            return Err("concurrent makespan below a member".into());
+        }
+        let ddr_per_cycle = m.ddr_bandwidth / m.pl_clock_hz;
+        let floor = ((t1.bytes + t2.bytes) as f64 / ddr_per_cycle) as u64;
+        if mk < floor {
+            return Err(format!("makespan {mk} under DDR floor {floor}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pipeline_cycles_scale_and_never_undercount() {
+    run_cases("pipeline work conservation", 4, |rng| {
+        let lanes = 1 + rng.next_below(32) as u64;
+        let w = 1 + rng.next_below(16) as u64;
+        let p = PipelineConfig { lanes, mac_width: w };
+        let d = 1 + rng.next_below(256);
+        let n = rng.next_below(100_000) as u64;
+        let c = p.cycles(n, d);
+        // Work conservation: lanes × cycles ≥ total issue slots.
+        let slots = n * (d as u64).div_ceil(w);
+        if n > 0 && c * lanes < slots {
+            return Err(format!("{c} cycles × {lanes} lanes < {slots} slots"));
+        }
+        if n == 0 && c != 0 {
+            return Err("zero work must cost zero cycles".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn resource_estimates_monotone_in_every_axis() {
+    run_cases("resources monotone", 5, |rng| {
+        let filt = FilterUnitConfig::default();
+        let lanes = 1 + rng.next_below(16) as u64;
+        let w = 1 + rng.next_below(8) as u64;
+        let k = 2 + rng.next_below(63);
+        let d = 1 + rng.next_below(256);
+        let g = 1 + rng.next_below(16);
+        let tile = 64 + rng.next_below(512);
+        let base = estimate(&PipelineConfig { lanes, mac_width: w }, &filt,
+                            &ProblemShape::new(k, d, g, tile));
+        // Doubling lanes: DSP/LUT strictly grow.
+        let more = estimate(&PipelineConfig { lanes: lanes * 2, mac_width: w }, &filt,
+                            &ProblemShape::new(k, d, g, tile));
+        if more.dsp <= base.dsp || more.luts <= base.luts {
+            return Err("lanes x2 did not grow DSP/LUT".into());
+        }
+        // 4x dimensionality: BRAM never shrinks below base (bank floors).
+        let wide = estimate(&PipelineConfig { lanes, mac_width: w }, &filt,
+                            &ProblemShape::new(k, d * 4, g, tile));
+        if wide.bram_18k < base.bram_18k {
+            return Err("d x4 shrank BRAM".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bound_updates_remain_conservative() {
+    // Simulate bound drift arithmetic against explicitly-moved points and
+    // verify filter_safe never lies: if it says "skip", the true nearest
+    // centroid must still be the assigned one.
+    use kpynq::util::matrix::{dist, Matrix};
+    run_cases("drifted bounds stay safe", 6, |rng| {
+        let d = 1 + rng.next_below(8);
+        let k = 2 + rng.next_below(6);
+        // A point, k centroids, then all centroids move by random drifts.
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let mut cents = vec![0.0f32; k * d];
+        for v in cents.iter_mut() {
+            *v = rng.normal_f32(0.0, 2.0);
+        }
+        let c0 = Matrix::from_vec(cents.clone(), k, d).unwrap();
+        // Exact bounds at time 0.
+        let mut best = f32::INFINITY;
+        let mut second = f32::INFINITY;
+        let mut a = 0usize;
+        for c in 0..k {
+            let dd = dist(&x, c0.row(c));
+            if dd < best {
+                second = best;
+                best = dd;
+                a = c;
+            } else if dd < second {
+                second = dd;
+            }
+        }
+        // Move centroids.
+        let mut moved = cents;
+        for v in moved.iter_mut() {
+            *v += rng.normal_f32(0.0, 0.3);
+        }
+        let c1 = Matrix::from_vec(moved, k, d).unwrap();
+        let drifts: Vec<f32> = (0..k).map(|c| dist(c0.row(c), c1.row(c))).collect();
+        let max_drift = drifts.iter().cloned().fold(0.0, f32::max);
+        let ub = inflate_ub(best, drifts[a]);
+        let lb = deflate_lb(second, max_drift);
+        if filter_safe(lb, ub) {
+            // The filter claims assignment cannot change: verify exactly.
+            let mut true_best = f32::INFINITY;
+            let mut true_a = 0usize;
+            for c in 0..k {
+                let dd = dist(&x, c1.row(c));
+                if dd < true_best {
+                    true_best = dd;
+                    true_a = c;
+                }
+            }
+            if true_a != a {
+                return Err(format!(
+                    "filter lied: said keep {a}, truth is {true_a} (ub {ub}, lb {lb})"
+                ));
+            }
+        }
+        // Group drift helper must dominate each member's drift.
+        let groups: Vec<usize> = (0..k).map(|_| rng.next_below(3)).collect();
+        let gd = group_max_drifts(&drifts, &groups, 3);
+        for c in 0..k {
+            if gd[groups[c]] < drifts[c] {
+                return Err("group drift below member drift".into());
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,176 @@
+//! End-to-end system tests: the full KPynq stack on realistic (small)
+//! workloads, config-file driving, fixed-point fidelity and cross-backend
+//! agreement.
+
+use kpynq::config::RunConfig;
+use kpynq::coordinator::{Backend, KpynqSystem, SystemConfig};
+use kpynq::data::{normalize, synth};
+use kpynq::hw::fixed_point::QFormat;
+use kpynq::hw::{AccelConfig, Accelerator};
+use kpynq::kmeans::{self, init, Algorithm, KMeansConfig};
+
+#[test]
+fn all_backends_agree_on_a_uci_equivalent() {
+    // kegg, subsampled for test speed; min-max normalised like the
+    // fixed-point datapath expects.
+    let mut ds = synth::uci("kegg", 1).unwrap().subsample(3000, 1);
+    normalize::min_max(&mut ds);
+    let kcfg = KMeansConfig { k: 8, seed: 5, ..Default::default() };
+
+    let fpga = KpynqSystem::new(SystemConfig::default())
+        .unwrap()
+        .cluster(&ds, &kcfg)
+        .unwrap();
+    let native = KpynqSystem::new(SystemConfig { backend: Backend::Native, verify: false })
+        .unwrap()
+        .cluster(&ds, &kcfg)
+        .unwrap();
+    let direct = kmeans::fit(Algorithm::Lloyd, &ds, &kcfg).unwrap();
+
+    assert_eq!(fpga.fit.assignments, direct.assignments, "fpga-sim vs lloyd");
+    assert_eq!(native.fit.assignments, direct.assignments, "native vs lloyd");
+    assert!(fpga.report.total_cycles > 0);
+    assert!(native.report.wall_seconds > 0.0);
+}
+
+#[test]
+fn simulated_speedup_shape_holds_on_suite() {
+    // The headline shape at test scale: the multi-level filter wins
+    // simulated cycles on every dataset where distance compute matters
+    // (d >= 8). On d=3 roadnetwork the AXIS stream dominates and the extra
+    // bounds traffic can cancel the savings — the filter must then cost at
+    // most a bounded overhead (the full-size F2 table shows 0.99x there,
+    // while the system still beats the CPU 2.3x via the pipeline).
+    let suite = kpynq::harness::bench_suite(7, 1500);
+    let kcfg = KMeansConfig { k: 16, seed: 3, max_iters: 40, ..Default::default() };
+    for ds in &suite {
+        let init_c = init::initialize(ds, &kcfg).unwrap();
+        let on = Accelerator::new(AccelConfig::default())
+            .run_fit(ds, &kcfg, init_c.clone())
+            .unwrap();
+        let off = Accelerator::new(AccelConfig { enable_filters: false, ..Default::default() })
+            .run_fit(ds, &kcfg, init_c)
+            .unwrap();
+        if ds.d() >= 8 {
+            assert!(
+                on.total_cycles < off.total_cycles,
+                "{}: filters must win ({} vs {})",
+                ds.name,
+                on.total_cycles,
+                off.total_cycles
+            );
+        } else {
+            assert!(
+                (on.total_cycles as f64) < 1.10 * off.total_cycles as f64,
+                "{}: filter overhead must stay bounded on low-d ({} vs {})",
+                ds.name,
+                on.total_cycles,
+                off.total_cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn config_file_drives_the_system() {
+    let dir = std::env::temp_dir().join(format!("kpynq-cfg-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(
+        &path,
+        r#"
+dataset = "blobs"
+max_points = 800
+normalize = "minmax"
+
+[kmeans]
+k = 5
+seed = 77
+algorithm = "yinyang"
+
+[accelerator]
+lanes = 2
+mac_width = 4
+"#,
+    )
+    .unwrap();
+    let cfg = RunConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.kmeans.k, 5);
+    assert_eq!(cfg.lanes, 2);
+    let ds = cfg.load_dataset().unwrap();
+    assert_eq!(ds.n(), 800);
+    let sys = KpynqSystem::new(SystemConfig { backend: cfg.backend(), verify: true }).unwrap();
+    let out = sys.cluster(&ds, &cfg.kmeans).unwrap();
+    assert!(out.fit.iterations >= 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fixed_point_fidelity_on_normalized_data() {
+    // Quantise a normalised dataset + centroids to Q1.15 and verify the
+    // resulting assignments agree with f32 for (nearly) all points —
+    // the justification for simulating the datapath in f32 (DESIGN.md §1).
+    let mut ds = synth::uci("mnist", 3).unwrap().subsample(2000, 3);
+    normalize::min_max(&mut ds);
+    let kcfg = KMeansConfig { k: 10, seed: 11, ..Default::default() };
+    let fit = kmeans::fit(Algorithm::Lloyd, &ds, &kcfg).unwrap();
+
+    let q = QFormat::Q1_15;
+    let qpoints = q.quantize_slice(ds.points.as_slice());
+    let qcents = q.quantize_slice(fit.centroids.as_slice());
+    let qp = kpynq::util::matrix::Matrix::from_vec(qpoints, ds.n(), ds.d()).unwrap();
+    let qc = kpynq::util::matrix::Matrix::from_vec(qcents, kcfg.k, ds.d()).unwrap();
+
+    let mut mismatches = 0usize;
+    for i in 0..ds.n() {
+        let (qa, _, _) = kpynq::kmeans::lloyd::scan_all(qp.row(i), &qc);
+        if qa as u32 != fit.assignments[i] {
+            mismatches += 1;
+        }
+    }
+    let rate = mismatches as f64 / ds.n() as f64;
+    assert!(rate < 1e-3, "fixed-point flipped {:.4}% of assignments", rate * 100.0);
+}
+
+#[test]
+fn resource_gate_blocks_impossible_runs_end_to_end() {
+    let ds = synth::blobs(500, 700, 4, 9); // d=700 blows the BRAM budget
+    let kcfg = KMeansConfig { k: 4, seed: 1, ..Default::default() };
+    let sys = KpynqSystem::new(SystemConfig::default()).unwrap();
+    let err = sys.cluster(&ds, &kcfg).unwrap_err();
+    assert!(matches!(err, kpynq::Error::Resource { .. }), "got {err}");
+}
+
+#[test]
+fn streaming_double_buffer_composes_with_engine() {
+    // The buffer::pipelined overlap helper must deliver identical results
+    // to the serial path when used for tile prep + assign.
+    use kpynq::coordinator::buffer::pipelined;
+    use kpynq::coordinator::scheduler;
+    use kpynq::runtime::{native::NativeEngine, Engine};
+
+    let mut ds = synth::uci("gassensor", 5).unwrap().subsample(1024, 5);
+    normalize::min_max(&mut ds);
+    let cents = ds.points.gather_rows(&(0..8).collect::<Vec<_>>());
+
+    let tiles = scheduler::partition(ds.n(), 256);
+    let serial: Vec<u32> = tiles
+        .iter()
+        .flat_map(|t| {
+            NativeEngine
+                .assign_tile(&ds.points.gather_rows(&t.indices), &cents)
+                .unwrap()
+                .idx
+        })
+        .collect();
+
+    let points = &ds.points;
+    let cents_ref = &cents;
+    let (chunks, _timing) = pipelined(
+        tiles,
+        move |t| points.gather_rows(&t.indices),
+        |tile_pts| NativeEngine.assign_tile(&tile_pts, cents_ref).unwrap().idx,
+    );
+    let overlapped: Vec<u32> = chunks.into_iter().flatten().collect();
+    assert_eq!(serial, overlapped);
+}
