@@ -88,6 +88,9 @@ fn main() {
                 run_with_engine(&mut eng, &ds, &kcfg).unwrap().fit.iterations
             });
         }
-        Err(e) => println!("xla benches skipped: {e}"),
+        Err(e) => println!(
+            "xla benches skipped ({e}); vendor the `xla` crate and enable the `xla` \
+             feature (see Cargo.toml), then run `make artifacts` first"
+        ),
     }
 }

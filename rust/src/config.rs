@@ -11,7 +11,7 @@ use crate::coordinator::Backend;
 use crate::error::{Error, Result};
 use crate::hw::{AccelConfig, ZynqPart};
 use crate::kmeans::{Algorithm, InitMethod, KMeansConfig};
-use crate::util::toml::{self, Value};
+use crate::util::toml;
 
 /// A complete run description.
 #[derive(Clone, Debug)]
@@ -101,37 +101,35 @@ impl RunConfig {
         let doc = toml::parse(text)?;
         let mut cfg = RunConfig::default();
 
-        let get = |sec: &str, key: &str| -> Option<&Value> { toml::get(&doc, sec, key) };
-
-        if let Some(v) = get("", "dataset") {
+        if let Some(v) = toml::get(&doc, "", "dataset") {
             cfg.dataset = v.as_str()?.to_string();
         }
-        if let Some(v) = get("", "data_seed") {
+        if let Some(v) = toml::get(&doc, "", "data_seed") {
             cfg.data_seed = v.as_i64()? as u64;
         }
-        if let Some(v) = get("", "max_points") {
+        if let Some(v) = toml::get(&doc, "", "max_points") {
             cfg.max_points = v.as_usize()?;
         }
-        if let Some(v) = get("", "normalize") {
+        if let Some(v) = toml::get(&doc, "", "normalize") {
             cfg.normalize = v.as_str()?.to_string();
         }
 
-        if let Some(v) = get("kmeans", "k") {
+        if let Some(v) = toml::get(&doc, "kmeans", "k") {
             cfg.kmeans.k = v.as_usize()?;
         }
-        if let Some(v) = get("kmeans", "groups") {
+        if let Some(v) = toml::get(&doc, "kmeans", "groups") {
             cfg.kmeans.groups = v.as_usize()?;
         }
-        if let Some(v) = get("kmeans", "max_iters") {
+        if let Some(v) = toml::get(&doc, "kmeans", "max_iters") {
             cfg.kmeans.max_iters = v.as_usize()?;
         }
-        if let Some(v) = get("kmeans", "tol") {
+        if let Some(v) = toml::get(&doc, "kmeans", "tol") {
             cfg.kmeans.tol = v.as_f64()?;
         }
-        if let Some(v) = get("kmeans", "seed") {
+        if let Some(v) = toml::get(&doc, "kmeans", "seed") {
             cfg.kmeans.seed = v.as_i64()? as u64;
         }
-        if let Some(v) = get("kmeans", "init") {
+        if let Some(v) = toml::get(&doc, "kmeans", "init") {
             cfg.kmeans.init = match v.as_str()? {
                 "kmeans++" => InitMethod::KMeansPlusPlus,
                 "random" => InitMethod::RandomPoints,
@@ -140,30 +138,30 @@ impl RunConfig {
                 }
             };
         }
-        if let Some(v) = get("kmeans", "algorithm") {
+        if let Some(v) = toml::get(&doc, "kmeans", "algorithm") {
             cfg.algorithm = Algorithm::from_name(v.as_str()?)?;
         }
 
-        if let Some(v) = get("backend", "name") {
+        if let Some(v) = toml::get(&doc, "backend", "name") {
             cfg.backend_name = v.as_str()?.to_string();
         }
-        if let Some(v) = get("backend", "artifact_dir") {
+        if let Some(v) = toml::get(&doc, "backend", "artifact_dir") {
             cfg.artifact_dir = PathBuf::from(v.as_str()?);
         }
 
-        if let Some(v) = get("accelerator", "lanes") {
+        if let Some(v) = toml::get(&doc, "accelerator", "lanes") {
             cfg.lanes = v.as_i64()? as u64;
         }
-        if let Some(v) = get("accelerator", "mac_width") {
+        if let Some(v) = toml::get(&doc, "accelerator", "mac_width") {
             cfg.mac_width = v.as_i64()? as u64;
         }
-        if let Some(v) = get("accelerator", "tile_points") {
+        if let Some(v) = toml::get(&doc, "accelerator", "tile_points") {
             cfg.tile_points = v.as_usize()?;
         }
-        if let Some(v) = get("accelerator", "enable_filters") {
+        if let Some(v) = toml::get(&doc, "accelerator", "enable_filters") {
             cfg.enable_filters = v.as_bool()?;
         }
-        if let Some(v) = get("accelerator", "part") {
+        if let Some(v) = toml::get(&doc, "accelerator", "part") {
             cfg.part = v.as_str()?.to_string();
         }
         cfg.validate()?;

@@ -45,6 +45,10 @@ use super::{Backend, SystemConfig, SystemOutput};
 pub const ENGINE_TILE: usize = 256;
 
 /// Run one clustering job on the configured backend.
+///
+/// `Backend::Xla` constructs the PJRT engine first and therefore fails
+/// fast (with a descriptive error) when the `xla` feature is off or the
+/// artifacts are missing — before any clustering work starts.
 pub fn run(sys: &SystemConfig, ds: &Dataset, kcfg: &KMeansConfig) -> Result<SystemOutput> {
     match &sys.backend {
         Backend::SimulatedFpga(acfg) => run_fpga(acfg, ds, kcfg),

@@ -40,6 +40,9 @@ pub enum Backend {
     /// Host filtering + native Rust tile engine (measured wall-clock).
     Native,
     /// Host filtering + AOT Pallas/XLA tile engine (measured wall-clock).
+    /// Needs the `xla` cargo feature and built artifacts (`make
+    /// artifacts`); without the feature, selecting this backend fails with
+    /// a descriptive `Error::Xla` at engine construction.
     Xla { artifact_dir: PathBuf },
 }
 

@@ -1,6 +1,6 @@
 //! Datasets: the workload substrate.
 //!
-//! The paper evaluates on "six real-life datasets from [the UCI repository]
+//! The paper evaluates on "six real-life datasets from the UCI repository
 //! … covering a wide range of size and dimensionality". UCI downloads are
 //! unavailable in this environment, so [`synth`] provides deterministic
 //! generators shaped to the six sets canonically used in triangle-inequality

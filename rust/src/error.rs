@@ -3,41 +3,71 @@
 //! One flat enum rather than per-module errors: the coordinator surfaces
 //! every failure to the CLI/examples anyway, and the variants carry enough
 //! context (`String` payloads built at the failure site) to act on.
+//!
+//! `Display` and `std::error::Error` are implemented by hand — the offline
+//! crate universe has no `thiserror`, and a 40-line match is not worth a
+//! proc-macro dependency on the build path.
 
-use thiserror::Error;
+use std::fmt;
 
 /// All errors the KPynq library can produce.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration rejected before any work started.
-    #[error("invalid config: {0}")]
     Config(String),
 
     /// Dataset loading / generation / validation failure.
-    #[error("dataset error: {0}")]
     Data(String),
 
     /// An accelerator configuration that does not fit the selected part.
-    #[error("resource overflow on {part}: {detail}")]
     Resource { part: String, detail: String },
 
     /// The AOT artifact directory is missing or inconsistent.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// PJRT/XLA runtime failure (compile or execute).
-    #[error("xla runtime error: {0}")]
+    /// PJRT/XLA runtime failure (compile or execute), or the `xla` feature
+    /// being unavailable in this build.
     Xla(String),
 
     /// JSON/TOML parse errors from the in-crate readers.
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// I/O wrapper.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(msg) => write!(f, "invalid config: {msg}"),
+            Error::Data(msg) => write!(f, "dataset error: {msg}"),
+            Error::Resource { part, detail } => {
+                write!(f, "resource overflow on {part}: {detail}")
+            }
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
+            Error::Parse(msg) => write!(f, "parse error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -46,3 +76,26 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_context() {
+        assert_eq!(
+            Error::Config("k must be >= 1".into()).to_string(),
+            "invalid config: k must be >= 1"
+        );
+        let r = Error::Resource { part: "XC7Z020".into(), detail: "DSP 300/220".into() };
+        assert_eq!(r.to_string(), "resource overflow on XC7Z020: DSP 300/220");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -242,11 +242,13 @@ pub fn dma_breakdown_row(
 pub fn bench_suite(seed: u64, cap: usize) -> Vec<Dataset> {
     crate::data::synth::uci_all(seed)
         .into_iter()
-        .map(|mut ds| {
-            let mut out = if cap > 0 { ds.subsample(cap, seed) } else { ds.clone() };
+        .map(|ds| {
+            let mut out = if cap > 0 { ds.subsample(cap, seed) } else { ds };
             // Normalised features, as the fixed-point datapath requires.
             crate::data::normalize::min_max(&mut out);
-            ds.labels = None;
+            // Benchmarks never consult ground truth; drop it so the suite's
+            // memory footprint is just the points.
+            out.labels = None;
             out
         })
         .collect()

@@ -12,7 +12,6 @@ use crate::data::Dataset;
 use crate::error::Result;
 use crate::kmeans::bounds::{deflate_lb, filter_safe, inflate_ub};
 use crate::kmeans::hamerly::half_nearest_other;
-use crate::kmeans::lloyd::scan_all;
 use crate::kmeans::{
     centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
     KMeansConfig, RunStats,
@@ -153,7 +152,6 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
     }
 
     let inertia = compute_inertia(ds, &centroids, &assignments);
-    let _ = scan_all; // (kept linked for doc cross-reference)
     Ok(FitResult { centroids, assignments, inertia, iterations, converged, stats })
 }
 

@@ -29,7 +29,7 @@
 //!
 //! ```no_run
 //! use kpynq::data::synth;
-//! use kpynq::kmeans::{self, KMeansConfig};
+//! use kpynq::kmeans::KMeansConfig;
 //! use kpynq::coordinator::{KpynqSystem, SystemConfig};
 //!
 //! let ds = synth::blobs(10_000, 16, 8, 0xC0FFEE);

@@ -76,7 +76,7 @@ fn print_help() {
          \x20 --dataset NAME   override dataset (gassensor|kegg|roadnetwork|uscensus|covtype|mnist|blobs|uniform|file)\n\
          \x20 --k K            override cluster count\n\
          \x20 --max-points N   subsample cap\n\
-         \x20 --backend B      fpga-sim | native | xla\n\
+         \x20 --backend B      fpga-sim | native | xla (xla needs the `xla` cargo feature + `make artifacts`)\n\
          \x20 --software       run the software algorithm (config [kmeans].algorithm) instead of a backend\n\
          \x20 --verify         cross-check the result against a direct Lloyd run"
     );

@@ -7,7 +7,9 @@
 //! * [`xla::XlaEngine`] — the AOT path: loads the HLO text modules that
 //!   `python/compile/aot.py` lowered from the Layer-1 Pallas kernels,
 //!   compiles them once on the PJRT CPU client, and executes them from the
-//!   Rust request path. Python is never involved at run time.
+//!   Rust request path. Python is never involved at run time. Requires the
+//!   `xla` cargo feature; the default offline build ships a stub whose
+//!   constructor reports the feature as unavailable.
 //!
 //! Both engines return *squared* distances with ties broken to the lowest
 //! centroid index, so they are interchangeable; `engine_parity` integration

@@ -1,6 +1,6 @@
 //! The PJRT/XLA engine: AOT-compiled Pallas kernels on the Rust hot path.
 //!
-//! Load path (see /opt/xla-example/load_hlo and aot.py): HLO **text** →
+//! Load path (see `python/compile/aot.py`): HLO **text** →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `PjRtClient::compile`, once per variant, cached for the life of the
 //! engine. Execution builds `Literal`s from the tile, runs the executable
@@ -10,195 +10,262 @@
 //! `python/compile/aot.py`); a (d, k) problem runs on the smallest
 //! dominating variant. Points/centroids are zero-padded in `d` — zero
 //! padding is exact for squared distances when both sides pad with the
-//! same constant. `k` is padded with sentinel centroids at `SENTINEL`
+//! same constant. `k` is padded with sentinel centroids at [`SENTINEL`]
 //! coordinates, far enough that they can never win or place second on
 //! normalised data; rows are padded to the tile and sliced off on return.
+//!
+//! Feature gating: the PJRT client lives in the external `xla` crate, which
+//! is not part of the offline crate universe. With the `xla` cargo feature
+//! disabled (the default), this module compiles a stub [`XlaEngine`] whose
+//! constructor returns [`Error::Xla`](crate::error::Error::Xla) — the
+//! coordinator's `Backend::Xla`, the benches and the examples all handle
+//! that cleanly and fall back to skipping the XLA path. The padding policy
+//! itself is pure and always compiled (and unit-tested) so the AOT contract
+//! stays pinned even in stub builds.
 
-use std::collections::HashMap;
-use std::path::Path;
-
-use crate::error::{Error, Result};
 use crate::util::matrix::Matrix;
-
-use super::manifest::{ArtifactRecord, Manifest};
-use super::{AssignOut, Engine};
 
 /// Coordinate of sentinel padding centroids. Distances to these are
 /// ~`d · (SENTINEL)²` ≈ 1e12 — orders of magnitude beyond any real
 /// squared distance on normalised (or even raw UCI-ranged) data.
 pub const SENTINEL: f32 = 1.0e6;
 
-/// PJRT-backed engine.
-pub struct XlaEngine {
-    manifest: Manifest,
-    client: xla::PjRtClient,
-    /// Compiled executables keyed by artifact name.
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Executed-tile counter (telemetry).
-    pub tiles_executed: u64,
+/// Pad centroids to (k_pad, d): zero-pad dims, sentinel-pad rows. Pure —
+/// compiled in every build so the unit tests pin the padding policy even
+/// when the PJRT engine itself is stubbed out.
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
+fn pad_centroids_buf(centroids: &Matrix, k_pad: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k_pad * d];
+    for (c, row) in centroids.rows_iter().enumerate() {
+        out[c * d..c * d + row.len()].copy_from_slice(row);
+    }
+    for c in centroids.rows()..k_pad {
+        for j in 0..d {
+            out[c * d + j] = SENTINEL;
+        }
+    }
+    out
 }
 
-impl XlaEngine {
-    /// Create from an artifact directory (compiles lazily per variant).
-    pub fn new(artifact_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { manifest, client, cache: HashMap::new(), tiles_executed: 0 })
+/// Pad rows `start..end` of `points` into the reusable tile buffer
+/// (zero-filled tail). Single copy: rows go straight from the source
+/// matrix into the buffer the literal is built from — §Perf shaved the
+/// gather-then-pad double copy off the request path.
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
+fn fill_tile_buf(buf: &mut [f32], points: &Matrix, start: usize, end: usize, d: usize) {
+    let d_real = points.cols();
+    buf.fill(0.0);
+    for (i, r) in (start..end).enumerate() {
+        buf[i * d..i * d + d_real].copy_from_slice(points.row(r));
+    }
+}
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use crate::error::{Error, Result};
+    use crate::util::matrix::Matrix;
+
+    use super::super::manifest::{ArtifactRecord, Manifest};
+    use super::super::{AssignOut, Engine};
+    use super::{fill_tile_buf, pad_centroids_buf};
+
+    /// PJRT-backed engine.
+    pub struct XlaEngine {
+        manifest: Manifest,
+        client: xla::PjRtClient,
+        /// Compiled executables keyed by artifact name.
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+        /// Executed-tile counter (telemetry).
+        pub tiles_executed: u64,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    fn executable(&mut self, rec: &ArtifactRecord) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(&rec.name) {
-            let proto = xla::HloModuleProto::from_text_file(
-                rec.file
-                    .to_str()
-                    .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.cache.insert(rec.name.clone(), exe);
+    impl XlaEngine {
+        /// Create from an artifact directory (compiles lazily per variant).
+        pub fn new(artifact_dir: &Path) -> Result<Self> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Self { manifest, client, cache: HashMap::new(), tiles_executed: 0 })
         }
-        Ok(&self.cache[&rec.name])
-    }
 
-    /// Pad a tile to the variant's (tile_n, d) with zeros.
-    fn pad_points(points: &Matrix, tile_n: usize, d: usize) -> Vec<f32> {
-        let mut out = vec![0.0f32; tile_n * d];
-        for (i, row) in points.rows_iter().enumerate() {
-            out[i * d..i * d + row.len()].copy_from_slice(row);
+        /// The loaded artifact manifest. Only exists on the real engine —
+        /// callers outside `cfg(feature = "xla")` code must not rely on it.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        out
-    }
 
-    /// Pad rows `start..end` of `points` into the reusable tile buffer
-    /// (zero-filled tail). Single copy: rows go straight from the source
-    /// matrix into the buffer the literal is built from — §Perf shaved the
-    /// gather-then-pad double copy off the request path.
-    fn fill_tile(buf: &mut [f32], points: &Matrix, start: usize, end: usize, d: usize) {
-        let d_real = points.cols();
-        buf.fill(0.0);
-        for (i, r) in (start..end).enumerate() {
-            buf[i * d..i * d + d_real].copy_from_slice(points.row(r));
-        }
-    }
-
-    /// Build an f32 literal from a slice without the vec1+reshape double
-    /// copy (`create_from_shape_and_untyped_data` copies once).
-    fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-        let bytes = unsafe {
-            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-        };
-        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
-            .map_err(|e| Error::Xla(e.to_string()))
-    }
-
-    /// Pad centroids to (k_pad, d): zero-pad dims, sentinel-pad rows.
-    fn pad_centroids(centroids: &Matrix, k_pad: usize, d: usize) -> Vec<f32> {
-        let mut out = vec![0.0f32; k_pad * d];
-        for (c, row) in centroids.rows_iter().enumerate() {
-            out[c * d..c * d + row.len()].copy_from_slice(row);
-        }
-        for c in centroids.rows()..k_pad {
-            for j in 0..d {
-                out[c * d + j] = SENTINEL;
+        fn executable(&mut self, rec: &ArtifactRecord) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(&rec.name) {
+                let proto = xla::HloModuleProto::from_text_file(
+                    rec.file
+                        .to_str()
+                        .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp)?;
+                self.cache.insert(rec.name.clone(), exe);
             }
+            Ok(&self.cache[&rec.name])
         }
-        out
-    }
 
-    /// Execute one padded sub-tile of exactly `tile_n` rows. The centroid
-    /// literal is built once per `assign_tile` call and borrowed here —
-    /// `execute` accepts `Borrow<Literal>`, so nothing is re-copied per
-    /// tile (§Perf).
-    fn run_tile(
-        &self,
-        rec_name: &str,
-        x: &xla::Literal,
-        c: &xla::Literal,
-    ) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
-        let exe = self
-            .cache
-            .get(rec_name)
-            .ok_or_else(|| Error::Artifact(format!("uncompiled artifact {rec_name}")))?;
-        let result = exe.execute::<&xla::Literal>(&[x, c])?[0][0].to_literal_sync()?;
-        let (idx, best, second) = result.to_tuple3()?;
-        Ok((idx.to_vec::<i32>()?, best.to_vec::<f32>()?, second.to_vec::<f32>()?))
-    }
-}
-
-impl Engine for XlaEngine {
-    fn name(&self) -> &'static str {
-        "xla-pjrt"
-    }
-
-    fn assign_tile(&mut self, points: &Matrix, centroids: &Matrix) -> Result<AssignOut> {
-        let (n, d_real) = (points.rows(), points.cols());
-        let k_real = centroids.rows();
-        if centroids.cols() != d_real {
-            return Err(Error::Config(format!(
-                "points d={} vs centroids d={}",
-                d_real,
-                centroids.cols()
-            )));
+        /// Build an f32 literal from a slice without the vec1+reshape double
+        /// copy (`create_from_shape_and_untyped_data` copies once).
+        fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+                .map_err(|e| Error::Xla(e.to_string()))
         }
-        let rec = self.manifest.pick_assign(d_real, k_real)?.clone();
-        let (tile_n, d, k_pad) = (rec.tile_n, rec.d, rec.k);
-        self.executable(&rec)?;
-        let cents = Self::pad_centroids(centroids, k_pad, d);
-        let c_lit = Self::f32_literal(&cents, &[k_pad, d])?;
-        let mut tile_buf = vec![0.0f32; tile_n * d];
 
-        let mut idx = Vec::with_capacity(n);
-        let mut best = Vec::with_capacity(n);
-        let mut second = Vec::with_capacity(n);
-        let mut start = 0usize;
-        while start < n {
-            let end = (start + tile_n).min(n);
-            Self::fill_tile(&mut tile_buf, points, start, end, d);
-            let x_lit = Self::f32_literal(&tile_buf, &[tile_n, d])?;
-            let (ti, tb, ts) = self.run_tile(&rec.name, &x_lit, &c_lit)?;
-            let rows = end - start;
-            idx.extend(ti[..rows].iter().map(|&v| v as u32));
-            best.extend_from_slice(&tb[..rows]);
-            // If k was padded, a sentinel can only appear as runner-up for
-            // k_real == 1; restore the exact semantics (inf).
-            if k_real == 1 {
-                second.extend(std::iter::repeat(f32::INFINITY).take(rows));
-            } else {
-                second.extend_from_slice(&ts[..rows]);
+        /// Execute one padded sub-tile of exactly `tile_n` rows. The centroid
+        /// literal is built once per `assign_tile` call and borrowed here —
+        /// `execute` accepts `Borrow<Literal>`, so nothing is re-copied per
+        /// tile (§Perf).
+        fn run_tile(
+            &self,
+            rec_name: &str,
+            x: &xla::Literal,
+            c: &xla::Literal,
+        ) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
+            let exe = self
+                .cache
+                .get(rec_name)
+                .ok_or_else(|| Error::Artifact(format!("uncompiled artifact {rec_name}")))?;
+            let result = exe.execute::<&xla::Literal>(&[x, c])?[0][0].to_literal_sync()?;
+            let (idx, best, second) = result.to_tuple3()?;
+            Ok((idx.to_vec::<i32>()?, best.to_vec::<f32>()?, second.to_vec::<f32>()?))
+        }
+    }
+
+    impl Engine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla-pjrt"
+        }
+
+        fn assign_tile(&mut self, points: &Matrix, centroids: &Matrix) -> Result<AssignOut> {
+            let (n, d_real) = (points.rows(), points.cols());
+            let k_real = centroids.rows();
+            if centroids.cols() != d_real {
+                return Err(Error::Config(format!(
+                    "points d={} vs centroids d={}",
+                    d_real,
+                    centroids.cols()
+                )));
             }
-            self.tiles_executed += 1;
-            start = end;
+            let rec = self.manifest.pick_assign(d_real, k_real)?.clone();
+            let (tile_n, d, k_pad) = (rec.tile_n, rec.d, rec.k);
+            self.executable(&rec)?;
+            let cents = pad_centroids_buf(centroids, k_pad, d);
+            let c_lit = Self::f32_literal(&cents, &[k_pad, d])?;
+            let mut tile_buf = vec![0.0f32; tile_n * d];
+
+            let mut idx = Vec::with_capacity(n);
+            let mut best = Vec::with_capacity(n);
+            let mut second = Vec::with_capacity(n);
+            let mut start = 0usize;
+            while start < n {
+                let end = (start + tile_n).min(n);
+                fill_tile_buf(&mut tile_buf, points, start, end, d);
+                let x_lit = Self::f32_literal(&tile_buf, &[tile_n, d])?;
+                let (ti, tb, ts) = self.run_tile(&rec.name, &x_lit, &c_lit)?;
+                let rows = end - start;
+                idx.extend(ti[..rows].iter().map(|&v| v as u32));
+                best.extend_from_slice(&tb[..rows]);
+                // If k was padded, a sentinel can only appear as runner-up
+                // for k_real == 1; restore the exact semantics (inf).
+                if k_real == 1 {
+                    second.extend(std::iter::repeat(f32::INFINITY).take(rows));
+                } else {
+                    second.extend_from_slice(&ts[..rows]);
+                }
+                self.tiles_executed += 1;
+                start = end;
+            }
+            Ok(AssignOut { idx, best, second })
         }
-        Ok(AssignOut { idx, best, second })
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::path::Path;
+
+    use crate::error::{Error, Result};
+    use crate::util::matrix::Matrix;
+
+    use super::super::{AssignOut, Engine};
+
+    /// Stub engine compiled when the `xla` feature is off: the constructor
+    /// fails with a descriptive error, so every caller (coordinator,
+    /// benches, examples) takes its "XLA unavailable" branch. It mirrors
+    /// the surface those callers use — `new`, `tiles_executed` and the
+    /// [`Engine`] impl (`manifest()` is xla-only) — so no caller needs its
+    /// own cfg.
+    pub struct XlaEngine {
+        /// Executed-tile counter (always 0 in the stub).
+        pub tiles_executed: u64,
+    }
+
+    impl XlaEngine {
+        /// Always fails: this build has no PJRT client.
+        pub fn new(_artifact_dir: &Path) -> Result<Self> {
+            Err(Error::Xla(
+                "built without the `xla` cargo feature (PJRT client unavailable in the \
+                 offline crate universe); use the fpga-sim or native backend"
+                    .into(),
+            ))
+        }
+    }
+
+    impl Engine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla-pjrt"
+        }
+
+        fn assign_tile(&mut self, _points: &Matrix, _centroids: &Matrix) -> Result<AssignOut> {
+            Err(Error::Xla("xla feature not enabled".into()))
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use pjrt::XlaEngine;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaEngine;
 
 #[cfg(test)]
 mod tests {
-    // The XLA engine needs built artifacts; its behaviour is covered by the
-    // `engine_parity` integration test (rust/tests/), which `make test`
-    // runs after `make artifacts`. Unit tests here cover the pure helpers.
+    // The full XLA engine needs built artifacts + the `xla` feature; its
+    // behaviour is covered by the `engine_parity` integration test. Unit
+    // tests here cover the pure padding helpers, which both engine builds
+    // share, and the stub's error contract.
     use super::*;
 
     #[test]
-    fn pad_points_zero_fills() {
-        let m = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
-        let p = XlaEngine::pad_points(&m, 4, 3);
-        assert_eq!(p.len(), 12);
-        assert_eq!(&p[0..3], &[1.0, 2.0, 0.0]);
-        assert_eq!(&p[3..6], &[3.0, 4.0, 0.0]);
-        assert!(p[6..].iter().all(|&v| v == 0.0));
+    fn pad_centroids_sentinel_rows_and_zero_dims() {
+        let m = Matrix::from_vec(vec![1.0, 2.0], 1, 2).unwrap();
+        let c = pad_centroids_buf(&m, 3, 3);
+        assert_eq!(&c[0..3], &[1.0, 2.0, 0.0], "real rows zero-pad in d");
+        assert!(c[3..].iter().all(|&v| v == SENTINEL), "padded rows are sentinels");
     }
 
     #[test]
-    fn pad_centroids_sentinel_rows() {
-        let m = Matrix::from_vec(vec![1.0, 2.0], 1, 2).unwrap();
-        let c = XlaEngine::pad_centroids(&m, 3, 2);
-        assert_eq!(&c[0..2], &[1.0, 2.0]);
-        assert!(c[2..].iter().all(|&v| v == SENTINEL));
+    fn fill_tile_reuses_buffer_and_zero_fills() {
+        let m = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3, 2).unwrap();
+        let mut buf = vec![9.0f32; 4 * 3]; // stale contents must be cleared
+        fill_tile_buf(&mut buf, &m, 1, 3, 3);
+        assert_eq!(&buf[0..3], &[3.0, 4.0, 0.0]);
+        assert_eq!(&buf[3..6], &[5.0, 6.0, 0.0]);
+        assert!(buf[6..].iter().all(|&v| v == 0.0));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_constructor_reports_missing_feature() {
+        let err = XlaEngine::new(std::path::Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
     }
 }

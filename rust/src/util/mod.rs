@@ -1,10 +1,11 @@
 //! Small self-contained utilities.
 //!
-//! The offline crate universe for this build contains only the `xla`
-//! dependency closure, so several things that would normally be external
-//! crates live here instead: a deterministic RNG ([`rng`]), a JSON reader /
-//! writer ([`json`]), a TOML-subset reader ([`toml`]), a benchmark timer
-//! ([`bench`]) and a property-test driver ([`proptest`]).
+//! The default build has **zero external dependencies** (the optional `xla`
+//! feature is the one exception, and it is off unless the PJRT crate is
+//! vendored — see `Cargo.toml`), so several things that would normally be
+//! external crates live here instead: a deterministic RNG ([`rng`]), a JSON
+//! reader / writer ([`json`]), a TOML-subset reader ([`toml`]), a benchmark
+//! timer ([`bench`]) and a property-test driver ([`proptest`]).
 
 pub mod bench;
 pub mod json;

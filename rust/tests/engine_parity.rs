@@ -2,8 +2,13 @@
 //! agree with the native Rust engine on random tiles, and a whole
 //! coordinator run on the XLA backend must agree with Lloyd.
 //!
-//! Requires `make artifacts` (the Makefile runs tests after artifacts, so
-//! this is an error — not a skip — when the manifest is missing).
+//! Requires the `xla` cargo feature: without it the whole file compiles to
+//! nothing, because the default offline build has no PJRT client to test
+//! against. With the feature on, run `make artifacts` first and then
+//! `cargo test --features xla` — a missing manifest is an error here, not
+//! a skip, so a broken artifact pipeline cannot silently pass.
+
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 

@@ -1,0 +1,51 @@
+//! Smoke test: the crate's headline contract on one small, fast instance.
+//!
+//! `kmeans/mod.rs` promises that every filtered algorithm is *exact*: given
+//! the same initialisation it produces the same assignments and centroids
+//! as Lloyd's algorithm at every iteration. This file checks that contract
+//! for the paper's algorithm (yinyang) on a small synthetic blob dataset —
+//! deliberately minimal so it runs in well under a second and fails first
+//! (and loudest) if the workspace is miswired. The exhaustive
+//! random-instance versions live in `equivalence.rs`.
+
+use kpynq::data::synth;
+use kpynq::kmeans::{self, init, Algorithm, KMeansConfig};
+
+#[test]
+fn yinyang_matches_lloyd_on_small_blobs() {
+    let ds = synth::blobs(400, 8, 4, 0xBEEF);
+    let cfg = KMeansConfig { k: 4, seed: 7, ..Default::default() };
+
+    let c0 = init::initialize(&ds, &cfg).unwrap();
+    let lloyd = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+    let yinyang = kmeans::fit_from(Algorithm::Yinyang, &ds, &cfg, c0).unwrap();
+
+    // The exactness contract: identical trajectory, not merely similar
+    // quality.
+    assert_eq!(lloyd.assignments, yinyang.assignments, "assignments must be identical");
+    assert_eq!(lloyd.centroids, yinyang.centroids, "centroids must be identical");
+    assert_eq!(lloyd.iterations, yinyang.iterations, "iteration counts must match");
+    assert!(lloyd.converged && yinyang.converged, "easy blobs must converge");
+
+    // And the whole point of the filter: strictly less distance work than
+    // the n·k·iters yardstick (the first full-scan iteration is shared).
+    assert!(
+        yinyang.stats.total_dist_comps() < lloyd.stats.total_dist_comps(),
+        "yinyang did {} distance comps, lloyd {}",
+        yinyang.stats.total_dist_comps(),
+        lloyd.stats.total_dist_comps()
+    );
+}
+
+#[test]
+fn smoke_covers_both_init_methods() {
+    use kpynq::kmeans::InitMethod;
+    let ds = synth::blobs(200, 5, 3, 0xF00D);
+    for init_method in [InitMethod::KMeansPlusPlus, InitMethod::RandomPoints] {
+        let cfg = KMeansConfig { k: 3, seed: 11, init: init_method, ..Default::default() };
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let l = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        let y = kmeans::fit_from(Algorithm::Yinyang, &ds, &cfg, c0).unwrap();
+        assert_eq!(l.assignments, y.assignments, "{init_method:?}");
+    }
+}
