@@ -9,7 +9,7 @@ PYTHON      ?= python3
 ARTIFACTS   := artifacts
 PY_SOURCES  := $(wildcard python/compile/*.py python/compile/kernels/*.py)
 
-.PHONY: all build test bench-compile examples doc artifacts artifacts-quick pytest clean
+.PHONY: all build test serve-test bench-compile examples doc artifacts artifacts-quick pytest clean
 
 all: build
 
@@ -19,6 +19,14 @@ build:
 test: build
 	cargo test -q
 
+# The serve subsystem's end-to-end acceptance test on its own — for
+# iterating on the serving layer without the full suite. `make test`
+# already covers it (serve_integration is a registered test target), so
+# it is deliberately NOT a dependency of `test`.
+serve-test:
+	cargo test -q --test serve_integration
+
+# Compiles every registered bench, serve_throughput included.
 bench-compile:
 	cargo bench --no-run
 

@@ -1,0 +1,72 @@
+//! Serving quickstart: a multi-tenant job mix through the sharded pool.
+//!
+//! ```bash
+//! cargo run --release --example serve_demo
+//! ```
+//!
+//! Builds the same stream a `kpynq serve` NDJSON file would describe —
+//! coalescable native jobs, an incompatible-dimension tenant, a simulated
+//! FPGA tenant, priorities and one already-expired deadline — serves it on
+//! two worker shards, and prints the NDJSON responses plus the
+//! `ServeReport`. The equivalent CLI session is printed at the end.
+
+use kpynq::kmeans::KMeansConfig;
+use kpynq::serve::{FitRequest, JobStatus, Priority, ServeConfig, Server};
+
+fn main() -> kpynq::Result<()> {
+    let mut jobs = Vec::new();
+    // Four native blobs tenants (same d=16 → coalesce into micro-batches).
+    for id in 1..=4u64 {
+        jobs.push(FitRequest {
+            id,
+            max_points: 2_000,
+            data_seed: 100 + id,
+            kmeans: KMeansConfig { k: 4 + id as usize, seed: id, ..Default::default() },
+            ..Default::default()
+        });
+    }
+    // A kegg tenant (d=20): compatible with nobody above, runs solo.
+    jobs.push(FitRequest {
+        id: 5,
+        dataset: "kegg".into(),
+        max_points: 3_000,
+        kmeans: KMeansConfig { k: 8, seed: 5, ..Default::default() },
+        priority: Priority::High,
+        ..Default::default()
+    });
+    // A simulated-FPGA tenant: always solo, reports cycles not wall-clock.
+    jobs.push(FitRequest {
+        id: 6,
+        backend_name: "fpga-sim".into(),
+        max_points: 1_500,
+        kmeans: KMeansConfig { k: 4, seed: 6, ..Default::default() },
+        ..Default::default()
+    });
+    // A tenant that stopped waiting before we even started.
+    jobs.push(FitRequest {
+        id: 7,
+        max_points: 2_000,
+        deadline_ms: Some(0),
+        priority: Priority::Low,
+        ..Default::default()
+    });
+
+    let server = Server::new(ServeConfig { workers: 2, ..Default::default() })?;
+    let outcome = server.run(jobs)?;
+
+    println!("-- responses (NDJSON, what `kpynq serve` writes to stdout) --");
+    for resp in &outcome.responses {
+        println!("{}", resp.to_json().to_string());
+    }
+    println!("\n-- report --\n{}", outcome.report.render());
+
+    let ok = outcome.responses.iter().filter(|r| r.status == JobStatus::Ok).count();
+    let shed = outcome.responses.iter().filter(|r| r.status == JobStatus::Shed).count();
+    assert_eq!(ok, 6, "six live tenants must complete");
+    assert_eq!(shed, 1, "the expired-deadline tenant must be shed, not run");
+
+    println!("equivalent CLI session:");
+    println!("  kpynq serve --jobs jobs.ndjson --workers 2 --batch 8");
+    println!("  (jobs.ndjson: one {{\"id\":…}} object per line; `kpynq serve --help` lists keys)");
+    Ok(())
+}

@@ -7,6 +7,8 @@ sweeps the kernel's shape space and asserts allclose against ``ref.py``.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import distance, ref

@@ -1,0 +1,80 @@
+//! Serving throughput — the `kpynq::serve` pool across shapes (§Perf).
+//!
+//! Sweeps worker shards × micro-batch cap over a fixed multi-tenant job
+//! stream and reports jobs/sec, tail latency and pool utilization straight
+//! from the `ServeReport` (the session's own wall-clock — a serving bench
+//! measures the system, not one hot loop). Knobs:
+//!
+//! * `KPYNQ_SERVE_JOBS`   — job count per session (default 24)
+//! * `KPYNQ_BENCH_POINTS` — points per job dataset (default 2 000)
+//!
+//! Rows to watch: batch=8 vs batch=1 at the same worker count isolates the
+//! coalescing win; workers 1→2→4 at batch=8 isolates sharding scalability.
+
+use kpynq::kmeans::KMeansConfig;
+use kpynq::serve::{FitRequest, Priority, ServeConfig, Server, ShedPolicy};
+use kpynq::util::bench::Table;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// A multi-tenant stream: every job is a distinct (seed, k) tenant on the
+/// same d=16 generator family, so compatible jobs can coalesce while no
+/// two jobs share a clustering.
+fn job_stream(n: usize, points: usize) -> Vec<FitRequest> {
+    (0..n)
+        .map(|i| FitRequest {
+            id: i as u64,
+            max_points: points,
+            data_seed: 1000 + i as u64,
+            kmeans: KMeansConfig {
+                k: 4 + (i % 3) * 2,
+                seed: 7 + i as u64,
+                max_iters: 40,
+                ..Default::default()
+            },
+            priority: match i % 3 {
+                0 => Priority::High,
+                1 => Priority::Normal,
+                _ => Priority::Low,
+            },
+            ..Default::default()
+        })
+        .collect()
+}
+
+fn main() {
+    let jobs = env_usize("KPYNQ_SERVE_JOBS", 24);
+    let points = env_usize("KPYNQ_BENCH_POINTS", 2_000);
+    println!("serve_throughput: {jobs} jobs x {points} points, native engine shards");
+
+    let mut t = Table::new(&[
+        "workers", "batch", "ok", "jobs/s", "p50 ms", "p95 ms", "busy %", "coalesced",
+    ]);
+    for (workers, max_batch) in [(1, 1), (1, 8), (2, 1), (2, 8), (4, 8)] {
+        let cfg = ServeConfig {
+            workers,
+            queue_capacity: 64,
+            max_batch,
+            shed_policy: ShedPolicy::Block,
+        };
+        let server = Server::new(cfg).expect("valid config");
+        // Warm run (page cache, allocator) then the measured session.
+        server.run(job_stream(jobs.min(4), points)).expect("warmup serve");
+        let outcome = server.run(job_stream(jobs, points)).expect("serve");
+        let r = &outcome.report;
+        assert_eq!(r.completed, jobs as u64, "bench stream must fully complete");
+        t.row(vec![
+            workers.to_string(),
+            max_batch.to_string(),
+            r.completed.to_string(),
+            format!("{:.2}", r.throughput_jobs_per_sec()),
+            format!("{:.1}", r.p50_latency_ms),
+            format!("{:.1}", r.p95_latency_ms),
+            format!("{:.1}", r.pool_utilization() * 100.0),
+            r.batched_jobs.to_string(),
+        ]);
+    }
+    t.print();
+}

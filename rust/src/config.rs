@@ -11,7 +11,13 @@ use crate::coordinator::Backend;
 use crate::error::{Error, Result};
 use crate::hw::{AccelConfig, ZynqPart};
 use crate::kmeans::{Algorithm, InitMethod, KMeansConfig};
+use crate::serve::{ServeConfig, ShedPolicy};
 use crate::util::toml;
+
+/// Dimensionality of the `blobs`/`uniform` generator datasets
+/// ([`RunConfig::load_dataset`]). `serve::batch::dataset_dim` keys batch
+/// compatibility on this same constant — change it in one place only.
+pub const SYNTH_DEFAULT_DIM: usize = 16;
 
 /// A complete run description.
 #[derive(Clone, Debug)]
@@ -38,6 +44,14 @@ pub struct RunConfig {
     pub enable_filters: bool,
     /// Part: "xc7z020" or "zu7ev".
     pub part: String,
+    /// Serving pool: worker shard count (`kpynq serve`).
+    pub serve_workers: usize,
+    /// Serving pool: admission queue capacity.
+    pub serve_queue_capacity: usize,
+    /// Serving pool: micro-batch cap (1 = no coalescing).
+    pub serve_max_batch: usize,
+    /// Serving pool: full-queue policy, "block" or "shed".
+    pub serve_shed: String,
 }
 
 impl Default for RunConfig {
@@ -57,6 +71,10 @@ impl Default for RunConfig {
             tile_points: accel.tile_points,
             enable_filters: true,
             part: "xc7z020".into(),
+            serve_workers: 2,
+            serve_queue_capacity: 64,
+            serve_max_batch: 8,
+            serve_shed: "block".into(),
         }
     }
 }
@@ -87,6 +105,12 @@ mac_width = 4
 tile_points = 256
 enable_filters = true
 part = "xc7z020"         # xc7z020|zu7ev
+
+[serve]
+workers = 2              # worker shards (kpynq serve)
+queue_capacity = 64      # bounded admission queue
+max_batch = 8            # micro-batch cap (1 = no coalescing)
+shed = "block"           # block|shed (full-queue policy)
 "#;
 
 impl RunConfig {
@@ -164,6 +188,19 @@ impl RunConfig {
         if let Some(v) = toml::get(&doc, "accelerator", "part") {
             cfg.part = v.as_str()?.to_string();
         }
+
+        if let Some(v) = toml::get(&doc, "serve", "workers") {
+            cfg.serve_workers = v.as_usize()?;
+        }
+        if let Some(v) = toml::get(&doc, "serve", "queue_capacity") {
+            cfg.serve_queue_capacity = v.as_usize()?;
+        }
+        if let Some(v) = toml::get(&doc, "serve", "max_batch") {
+            cfg.serve_max_batch = v.as_usize()?;
+        }
+        if let Some(v) = toml::get(&doc, "serve", "shed") {
+            cfg.serve_shed = v.as_str()?.to_string();
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -184,7 +221,20 @@ impl RunConfig {
         if self.lanes == 0 || self.mac_width == 0 || self.tile_points == 0 {
             return Err(Error::Config("lanes/mac_width/tile_points must be positive".into()));
         }
+        self.serve_config()?;
         Ok(())
+    }
+
+    /// Build the serving-pool config described by the `[serve]` section.
+    pub fn serve_config(&self) -> Result<ServeConfig> {
+        let cfg = ServeConfig {
+            workers: self.serve_workers,
+            queue_capacity: self.serve_queue_capacity,
+            max_batch: self.serve_max_batch,
+            shed_policy: ShedPolicy::from_name(&self.serve_shed)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
     }
 
     pub fn part(&self) -> ZynqPart {
@@ -223,9 +273,9 @@ impl RunConfig {
         let mut ds: Dataset = if let Some(d) = synth::uci(&self.dataset, self.data_seed) {
             d
         } else if self.dataset == "blobs" {
-            synth::blobs(20_000, 16, self.kmeans.k.max(2), self.data_seed)
+            synth::blobs(20_000, SYNTH_DEFAULT_DIM, self.kmeans.k.max(2), self.data_seed)
         } else if self.dataset == "uniform" {
-            synth::uniform(20_000, 16, self.data_seed)
+            synth::uniform(20_000, SYNTH_DEFAULT_DIM, self.data_seed)
         } else {
             let path = Path::new(&self.dataset);
             match path.extension().and_then(|e| e.to_str()) {
@@ -265,6 +315,11 @@ mod tests {
         assert_eq!(cfg.backend_name, "fpga-sim");
         assert_eq!(cfg.lanes, 4);
         assert!(cfg.enable_filters);
+        let serve = cfg.serve_config().unwrap();
+        assert_eq!(serve.workers, 2);
+        assert_eq!(serve.queue_capacity, 64);
+        assert_eq!(serve.max_batch, 8);
+        assert_eq!(serve.shed_policy, crate::serve::ShedPolicy::Block);
     }
 
     #[test]
@@ -278,6 +333,21 @@ mod tests {
         assert!(RunConfig::from_toml("[backend]\nname = \"gpu\"").is_err());
         assert!(RunConfig::from_toml("[kmeans]\ninit = \"fancy\"").is_err());
         assert!(RunConfig::from_toml("[accelerator]\nlanes = 0").is_err());
+        assert!(RunConfig::from_toml("[serve]\nshed = \"drop\"").is_err());
+        assert!(RunConfig::from_toml("[serve]\nworkers = 0").is_err());
+    }
+
+    #[test]
+    fn serve_section_overrides_pool_shape() {
+        let cfg = RunConfig::from_toml(
+            "[serve]\nworkers = 4\nqueue_capacity = 16\nmax_batch = 2\nshed = \"shed\"",
+        )
+        .unwrap();
+        let serve = cfg.serve_config().unwrap();
+        assert_eq!(serve.workers, 4);
+        assert_eq!(serve.queue_capacity, 16);
+        assert_eq!(serve.max_batch, 2);
+        assert_eq!(serve.shed_policy, crate::serve::ShedPolicy::ShedArrivals);
     }
 
     #[test]

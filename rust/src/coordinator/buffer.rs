@@ -23,9 +23,9 @@ pub struct PipelineTiming {
 /// Stream `items` through `produce` (worker thread) and `consume` (caller
 /// thread) with double buffering. Returns consumer outputs in order.
 ///
-/// `produce` failures poison the stream and surface as `None` results —
-/// the KPynq driver treats any `None` as fatal, matching DMA-error
-/// semantics on the board.
+/// `produce` here is infallible; for producers that can fail (file reads,
+/// DMA-style transfers) use [`try_pipelined`], which gives the failure an
+/// explicit poisoned-stream error path instead of a silent truncation.
 pub fn pipelined<I, T, R, P, C>(
     items: Vec<I>,
     produce: P,
@@ -74,6 +74,80 @@ where
     (results, timing)
 }
 
+/// Fallible-producer variant of [`pipelined`]: the first `produce` error
+/// **poisons the stream** — production stops, the consumer drains what was
+/// already in flight (so side effects stay prefix-consistent), and the
+/// error comes back to the caller in place of the results.
+///
+/// This is the DMA-fault contract on the board made explicit in the types:
+/// a shut-down stream ends with `Ok` (every produced item consumed), a
+/// faulted stream — including a *panicking* producer — ends with `Err`
+/// (nothing partial returned), so callers can distinguish "clean
+/// shutdown" from "transfer fault" without sentinel values.
+pub fn try_pipelined<I, T, R, P, C>(
+    items: Vec<I>,
+    produce: P,
+    mut consume: C,
+) -> (crate::error::Result<Vec<R>>, PipelineTiming)
+where
+    I: Send,
+    T: Send,
+    P: Fn(I) -> crate::error::Result<T> + Send,
+    C: FnMut(T) -> R,
+{
+    let started = Instant::now();
+    let mut timing = PipelineTiming::default();
+    // Capacity 1: one tile in flight + one being consumed = two buffers.
+    let (tx, rx) = mpsc::sync_channel::<T>(1);
+    let mut results = Vec::with_capacity(items.len());
+
+    let poison = std::thread::scope(|scope| {
+        let producer = scope.spawn(move || {
+            let mut blocked = Duration::ZERO;
+            for item in items {
+                let value = match produce(item) {
+                    Ok(v) => v,
+                    Err(e) => return (blocked, Some(e)), // poison: stop producing
+                };
+                let t0 = Instant::now();
+                if tx.send(value).is_err() {
+                    break; // consumer dropped — shutting down
+                }
+                blocked += t0.elapsed();
+            }
+            (blocked, None)
+        });
+
+        loop {
+            let t0 = Instant::now();
+            match rx.recv() {
+                Ok(v) => {
+                    timing.consumer_blocked += t0.elapsed();
+                    results.push(consume(v));
+                }
+                Err(_) => break, // producer finished or poisoned
+            }
+        }
+        let (blocked, poison) = match producer.join() {
+            Ok(result) => result,
+            // A panicking producer is a fault, not a clean shutdown — do
+            // not let a truncated prefix masquerade as a complete stream.
+            Err(_) => (
+                Duration::ZERO,
+                Some(crate::error::Error::Data("pipeline producer panicked".into())),
+            ),
+        };
+        timing.producer_blocked = blocked;
+        poison
+    });
+
+    timing.total = started.elapsed();
+    match poison {
+        Some(e) => (Err(e), timing),
+        None => (Ok(results), timing),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +191,62 @@ mod tests {
             t.total,
             serial_estimate
         );
+    }
+
+    #[test]
+    fn try_pipelined_ok_path_matches_pipelined() {
+        let (out, _t) = try_pipelined(
+            (0..100).collect::<Vec<i32>>(),
+            |x| Ok(x * 2),
+            |x| x + 1,
+        );
+        assert_eq!(out.unwrap(), (0..100).map(|x| x * 2 + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_pipelined_producer_fault_poisons_the_stream() {
+        let mut consumed = 0usize;
+        let (out, t) = try_pipelined(
+            (0..100).collect::<Vec<i32>>(),
+            |x| {
+                if x == 5 {
+                    Err(crate::error::Error::Data("simulated DMA fault".into()))
+                } else {
+                    Ok(x)
+                }
+            },
+            |x| {
+                consumed += 1;
+                x
+            },
+        );
+        let err = out.unwrap_err();
+        assert!(err.to_string().contains("simulated DMA fault"), "{err}");
+        // The consumer drained only what was produced before the fault —
+        // a prefix, never items past the poison point.
+        assert!(consumed <= 5, "consumed {consumed} items past the fault");
+        assert!(t.total > Duration::ZERO);
+    }
+
+    #[test]
+    fn try_pipelined_empty_input_is_ok() {
+        let (out, _t) = try_pipelined(Vec::<i32>::new(), Ok, |x| x);
+        assert!(out.unwrap().is_empty());
+    }
+
+    #[test]
+    fn try_pipelined_producer_panic_is_a_fault_not_a_shutdown() {
+        let (out, _t) = try_pipelined(
+            (0..10).collect::<Vec<i32>>(),
+            |x| {
+                if x == 3 {
+                    panic!("producer bug");
+                }
+                Ok(x)
+            },
+            |x| x,
+        );
+        let err = out.unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
     }
 }

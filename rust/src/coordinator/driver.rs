@@ -21,11 +21,20 @@
 //! gets the same full scan Lloyd would do. Centroid recomputation is the
 //! shared `kmeans::recompute_centroids`. Hence assignments equal Lloyd's
 //! at every iteration — the `coordinator_equivalence` integration test.
+//!
+//! The loop is factored as a resumable state machine ([`FitState`]): each
+//! iteration is a `begin_iteration` (host-side filtering, survivor
+//! compaction — produces a [`Dispatch`]) followed by a
+//! `complete_iteration` (absorb engine results, recompute centroids,
+//! update bounds). `run_engine` drives one state to completion;
+//! `serve::batch` drives several states in lockstep so compatible
+//! requests share one engine dispatch per iteration (`Engine::assign_batch`)
+//! while every state's trajectory stays bit-identical to a solo run.
 
 use std::time::Instant;
 
 use crate::data::Dataset;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::hw::{AccelConfig, Accelerator};
 use crate::kmeans::bounds::{deflate_lb, filter_safe, inflate_ub};
 use crate::kmeans::hamerly::half_nearest_other;
@@ -34,7 +43,8 @@ use crate::kmeans::{
     centroid_drifts, compute_inertia, init, recompute_centroids, FitResult, KMeansConfig,
     RunStats,
 };
-use crate::runtime::{native::NativeEngine, xla::XlaEngine, Engine};
+use crate::runtime::{native::NativeEngine, xla::XlaEngine, AssignOut, Engine};
+use crate::util::matrix::Matrix;
 
 use super::scheduler;
 use super::telemetry::RunReport;
@@ -79,6 +89,268 @@ fn run_fpga(acfg: &AccelConfig, ds: &Dataset, kcfg: &KMeansConfig) -> Result<Sys
     Ok(SystemOutput { fit: run.fit, report })
 }
 
+/// What [`FitState::begin_iteration`] wants executed on the engine.
+#[derive(Debug)]
+pub enum Dispatch {
+    /// Iteration 1: scan the whole dataset densely (use
+    /// [`FitState::points`] as the tile source — no gather copy).
+    Dense,
+    /// Filtered iteration: the survivors, already compacted into dense
+    /// ascending tiles and gathered into one matrix.
+    Survivors(Matrix),
+    /// Every point was filtered this iteration — no engine work at all.
+    Skip,
+}
+
+/// Bookkeeping carried between `begin_iteration` and `complete_iteration`.
+struct PendingIter {
+    it: IterStats,
+    /// Original point index per dispatched row; `None` marks the dense
+    /// iteration-1 dispatch (identity order over the whole dataset).
+    order: Option<Vec<usize>>,
+}
+
+/// The engine-backed coordinator loop as a resumable state machine.
+///
+/// Invariant: the sequence `begin_iteration` → engine dispatch →
+/// `complete_iteration`, repeated until [`done`](FitState::done), performs
+/// exactly the operations of a monolithic run — same floats, same order —
+/// so interleaving several states (as `serve::batch::fit_lockstep` does)
+/// cannot change any individual result.
+pub struct FitState<'a> {
+    ds: &'a Dataset,
+    kcfg: &'a KMeansConfig,
+    centroids: Matrix,
+    assignments: Vec<u32>,
+    ub: Vec<f32>,
+    lb: Vec<f32>,
+    stats: RunStats,
+    tiles_dispatched: u64,
+    points_rescanned: u64,
+    converged: bool,
+    iterations: usize,
+    started: Instant,
+    pending: Option<PendingIter>,
+}
+
+impl<'a> FitState<'a> {
+    /// Validate the job and run the (deterministic, seed-driven)
+    /// initialisation. The wall-clock in the final report starts here.
+    pub fn new(ds: &'a Dataset, kcfg: &'a KMeansConfig) -> Result<Self> {
+        kcfg.validate(ds.n())?;
+        ds.validate()?;
+        let started = Instant::now();
+        let n = ds.n();
+        let centroids = init::initialize(ds, kcfg)?;
+        Ok(Self {
+            ds,
+            kcfg,
+            centroids,
+            assignments: vec![0u32; n],
+            ub: vec![0.0f32; n],
+            lb: vec![0.0f32; n],
+            stats: RunStats::default(),
+            tiles_dispatched: 0,
+            points_rescanned: 0,
+            converged: false,
+            iterations: 0,
+            started,
+            pending: None,
+        })
+    }
+
+    /// True once the fit converged or hit the iteration cap.
+    pub fn done(&self) -> bool {
+        self.converged || self.iterations >= self.kcfg.max_iters
+    }
+
+    /// The dataset's point matrix (the tile source for [`Dispatch::Dense`]).
+    pub fn points(&self) -> &Matrix {
+        &self.ds.points
+    }
+
+    /// Current centroids — the second argument of the engine dispatch.
+    pub fn centroids(&self) -> &Matrix {
+        &self.centroids
+    }
+
+    /// Iterations completed (plus the one in flight, if any).
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+
+    /// Start the next iteration: apply the global triangle-inequality
+    /// filter on the host and compact the survivors. The caller must
+    /// execute the returned [`Dispatch`] against
+    /// [`centroids`](FitState::centroids) and feed the output to
+    /// [`complete_iteration`](FitState::complete_iteration).
+    ///
+    /// Panics when called on a finished fit or with an iteration pending.
+    pub fn begin_iteration(&mut self) -> Dispatch {
+        assert!(self.pending.is_none(), "iteration already in flight");
+        assert!(!self.done(), "begin_iteration on a finished fit");
+        self.iterations += 1;
+        let n = self.ds.n();
+        let k = self.kcfg.k;
+        let mut it = IterStats::default();
+
+        // ---- Iteration 1: dense dispatch of the whole dataset ----
+        // One engine call: the engine splits into kernel tiles internally,
+        // so per-call setup (centroid padding + literal upload on the XLA
+        // path) is paid once per iteration, not once per tile (§Perf).
+        if self.iterations == 1 {
+            self.tiles_dispatched += n.div_ceil(ENGINE_TILE) as u64;
+            self.points_rescanned += n as u64;
+            it.dist_comps = (n as u64) * (k as u64);
+            it.survivors = n as u64;
+            it.reassigned = n as u64;
+            self.pending = Some(PendingIter { it, order: None });
+            return Dispatch::Dense;
+        }
+
+        // ---- Filtered iteration: compacted survivor tiles ----
+        // Inter-centroid guard (k² on the host — cheap next to n·k).
+        let (s_half, pair_comps) = half_nearest_other(&self.centroids);
+        it.dist_comps += pair_comps;
+
+        let mut survivors = Vec::new();
+        for i in 0..n {
+            let guard = self.lb[i].max(s_half[self.assignments[i] as usize]);
+            if filter_safe(guard, self.ub[i]) {
+                it.filtered_global += 1;
+            } else {
+                survivors.push(i);
+            }
+        }
+        it.survivors = survivors.len() as u64;
+        self.points_rescanned += survivors.len() as u64;
+
+        // Compact all survivors into one dense matrix to dispatch once;
+        // scheduler::compact documents the tiling invariants the engines
+        // rely on (ascending order ⇒ cache-friendly gather).
+        let tiles = scheduler::compact(survivors, ENGINE_TILE);
+        if tiles.is_empty() {
+            self.pending = Some(PendingIter { it, order: Some(Vec::new()) });
+            return Dispatch::Skip;
+        }
+        let order: Vec<usize> =
+            tiles.iter().flat_map(|t| t.indices.iter().copied()).collect();
+        let pts = self.ds.points.gather_rows(&order);
+        self.tiles_dispatched += tiles.len() as u64;
+        it.dist_comps += (order.len() * k) as u64;
+        self.pending = Some(PendingIter { it, order: Some(order) });
+        Dispatch::Survivors(pts)
+    }
+
+    /// Absorb the engine output for the in-flight iteration, recompute
+    /// centroids and update the bounds. Pass `None` if (and only if) the
+    /// dispatch was [`Dispatch::Skip`].
+    pub fn complete_iteration(&mut self, out: Option<&AssignOut>) -> Result<()> {
+        let PendingIter { mut it, order } = self
+            .pending
+            .take()
+            .ok_or_else(|| Error::Config("complete_iteration without begin_iteration".into()))?;
+
+        match &order {
+            // Dense iteration 1: seed assignments and both bounds.
+            None => {
+                let out = out.ok_or_else(|| {
+                    Error::Config("dense dispatch requires an engine output".into())
+                })?;
+                let n = self.ds.n();
+                if out.idx.len() != n {
+                    return Err(Error::Config(format!(
+                        "engine returned {} results for {} points",
+                        out.idx.len(),
+                        n
+                    )));
+                }
+                for i in 0..n {
+                    self.assignments[i] = out.idx[i];
+                    self.ub[i] = out.best[i].max(0.0).sqrt();
+                    self.lb[i] = if out.second[i].is_finite() {
+                        out.second[i].max(0.0).sqrt()
+                    } else {
+                        f32::INFINITY
+                    };
+                }
+            }
+            // Filtered iteration with no survivors: nothing to absorb.
+            Some(order) if order.is_empty() => {
+                if out.is_some() {
+                    return Err(Error::Config(
+                        "unexpected engine output for a skipped dispatch".into(),
+                    ));
+                }
+            }
+            // Filtered iteration: survivors rescanned, bounds refreshed.
+            Some(order) => {
+                let out = out.ok_or_else(|| {
+                    Error::Config("survivor dispatch requires an engine output".into())
+                })?;
+                if out.idx.len() != order.len() {
+                    return Err(Error::Config(format!(
+                        "engine returned {} results for {} survivors",
+                        out.idx.len(),
+                        order.len()
+                    )));
+                }
+                for (j, &i) in order.iter().enumerate() {
+                    if self.assignments[i] != out.idx[j] {
+                        it.reassigned += 1;
+                        self.assignments[i] = out.idx[j];
+                    }
+                    self.ub[i] = out.best[j].max(0.0).sqrt();
+                    self.lb[i] = if out.second[j].is_finite() {
+                        out.second[j].max(0.0).sqrt()
+                    } else {
+                        f32::INFINITY
+                    };
+                }
+            }
+        }
+
+        let (new_c, _) = recompute_centroids(self.ds, &self.assignments, &self.centroids);
+        let (drifts, max_drift) = centroid_drifts(&self.centroids, &new_c);
+        self.centroids = new_c;
+        it.max_drift = max_drift;
+        self.stats.push(it);
+
+        if (max_drift as f64) <= self.kcfg.tol {
+            self.converged = true;
+        } else {
+            for i in 0..self.ds.n() {
+                self.ub[i] = inflate_ub(self.ub[i], drifts[self.assignments[i] as usize]);
+                self.lb[i] = deflate_lb(self.lb[i], max_drift);
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal the fit into a [`SystemOutput`] with the final inertia and the
+    /// wall-clock measured since [`new`](FitState::new).
+    pub fn finish(self, backend_name: &str) -> SystemOutput {
+        debug_assert!(self.pending.is_none(), "finish with an iteration in flight");
+        let inertia = compute_inertia(self.ds, &self.centroids, &self.assignments);
+        let fit = FitResult {
+            centroids: self.centroids,
+            assignments: self.assignments,
+            inertia,
+            iterations: self.iterations,
+            converged: self.converged,
+            stats: self.stats,
+        };
+        let report = RunReport {
+            backend: backend_name.into(),
+            wall_seconds: self.started.elapsed().as_secs_f64(),
+            tiles_dispatched: self.tiles_dispatched,
+            points_rescanned: self.points_rescanned,
+            ..Default::default()
+        };
+        SystemOutput { fit, report }
+    }
+}
+
 /// The engine-backed coordinator loop (host filtering + dense tiles).
 fn run_engine(
     engine: &mut dyn Engine,
@@ -86,131 +358,16 @@ fn run_engine(
     ds: &Dataset,
     kcfg: &KMeansConfig,
 ) -> Result<SystemOutput> {
-    kcfg.validate(ds.n())?;
-    ds.validate()?;
-    let t0 = Instant::now();
-    let n = ds.n();
-    let k = kcfg.k;
-    let mut centroids = init::initialize(ds, kcfg)?;
-
-    let mut assignments = vec![0u32; n];
-    let mut ub = vec![0.0f32; n];
-    let mut lb = vec![0.0f32; n];
-    let mut stats = RunStats::default();
-    let mut tiles_dispatched = 0u64;
-    let mut points_rescanned = 0u64;
-    let mut converged = false;
-    let mut iterations = 0usize;
-
-    // ---- Iteration 1: dense dispatch of the whole dataset ----
-    // One engine call: the engine splits into kernel tiles internally, so
-    // per-call setup (centroid padding + literal upload on the XLA path)
-    // is paid once per iteration, not once per tile (§Perf).
-    {
-        iterations += 1;
-        let mut it = IterStats::default();
-        let out = engine.assign_tile(&ds.points, &centroids)?;
-        tiles_dispatched += n.div_ceil(ENGINE_TILE) as u64;
-        for i in 0..n {
-            assignments[i] = out.idx[i];
-            ub[i] = out.best[i].max(0.0).sqrt();
-            lb[i] = if out.second[i].is_finite() {
-                out.second[i].max(0.0).sqrt()
-            } else {
-                f32::INFINITY
-            };
-        }
-        points_rescanned += n as u64;
-        it.dist_comps = (n as u64) * (k as u64);
-        it.survivors = n as u64;
-        it.reassigned = n as u64;
-        let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
-        let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
-        centroids = new_c;
-        it.max_drift = max_drift;
-        stats.push(it);
-        if (max_drift as f64) <= kcfg.tol {
-            converged = true;
-        } else {
-            for i in 0..n {
-                ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
-                lb[i] = deflate_lb(lb[i], max_drift);
-            }
-        }
+    let mut st = FitState::new(ds, kcfg)?;
+    while !st.done() {
+        let out = match st.begin_iteration() {
+            Dispatch::Dense => Some(engine.assign_tile(st.points(), st.centroids())?),
+            Dispatch::Survivors(pts) => Some(engine.assign_tile(&pts, st.centroids())?),
+            Dispatch::Skip => None,
+        };
+        st.complete_iteration(out.as_ref())?;
     }
-
-    // ---- Filtered iterations: compacted survivor tiles ----
-    while !converged && iterations < kcfg.max_iters {
-        iterations += 1;
-        let mut it = IterStats::default();
-
-        // Inter-centroid guard (k² on the host — cheap next to n·k).
-        let (s_half, pair_comps) = half_nearest_other(&centroids);
-        it.dist_comps += pair_comps;
-
-        let mut survivors = Vec::new();
-        for i in 0..n {
-            let guard = lb[i].max(s_half[assignments[i] as usize]);
-            if filter_safe(guard, ub[i]) {
-                it.filtered_global += 1;
-            } else {
-                survivors.push(i);
-            }
-        }
-        it.survivors = survivors.len() as u64;
-        points_rescanned += survivors.len() as u64;
-
-        // Compact all survivors into one dense matrix and dispatch once;
-        // scheduler::compact documents the tiling invariants the engines
-        // rely on (ascending order ⇒ cache-friendly gather).
-        let tiles = scheduler::compact(survivors, ENGINE_TILE);
-        if !tiles.is_empty() {
-            let order: Vec<usize> =
-                tiles.iter().flat_map(|t| t.indices.iter().copied()).collect();
-            let pts = ds.points.gather_rows(&order);
-            let out = engine.assign_tile(&pts, &centroids)?;
-            tiles_dispatched += tiles.len() as u64;
-            it.dist_comps += (order.len() * k) as u64;
-            for (j, &i) in order.iter().enumerate() {
-                if assignments[i] != out.idx[j] {
-                    it.reassigned += 1;
-                    assignments[i] = out.idx[j];
-                }
-                ub[i] = out.best[j].max(0.0).sqrt();
-                lb[i] = if out.second[j].is_finite() {
-                    out.second[j].max(0.0).sqrt()
-                } else {
-                    f32::INFINITY
-                };
-            }
-        }
-
-        let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
-        let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
-        centroids = new_c;
-        it.max_drift = max_drift;
-        stats.push(it);
-
-        if (max_drift as f64) <= kcfg.tol {
-            converged = true;
-        } else {
-            for i in 0..n {
-                ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
-                lb[i] = deflate_lb(lb[i], max_drift);
-            }
-        }
-    }
-
-    let inertia = compute_inertia(ds, &centroids, &assignments);
-    let fit = FitResult { centroids, assignments, inertia, iterations, converged, stats };
-    let report = RunReport {
-        backend: backend_name.into(),
-        wall_seconds: t0.elapsed().as_secs_f64(),
-        tiles_dispatched,
-        points_rescanned,
-        ..Default::default()
-    };
-    Ok(SystemOutput { fit, report })
+    Ok(st.finish(backend_name))
 }
 
 /// Convenience for tests/benches: run the engine loop with an explicit
@@ -261,5 +418,50 @@ mod tests {
         // The scheduler tile must equal the AOT kernel tile so the XLA
         // engine never pads mid-run (checked against the python constant).
         assert_eq!(ENGINE_TILE, 256);
+    }
+
+    #[test]
+    fn stepwise_state_matches_monolithic_run() {
+        // Driving FitState by hand must reproduce run_with_engine exactly
+        // — the contract serve's lockstep batch executor relies on.
+        let ds = synth::blobs(900, 7, 5, 21);
+        let kcfg = KMeansConfig { k: 5, seed: 2, ..Default::default() };
+        let reference = run_with_engine(&mut NativeEngine, &ds, &kcfg).unwrap();
+
+        let mut eng = NativeEngine;
+        let mut st = FitState::new(&ds, &kcfg).unwrap();
+        while !st.done() {
+            let out = match st.begin_iteration() {
+                Dispatch::Dense => Some(eng.assign_tile(st.points(), st.centroids()).unwrap()),
+                Dispatch::Survivors(pts) => {
+                    Some(eng.assign_tile(&pts, st.centroids()).unwrap())
+                }
+                Dispatch::Skip => None,
+            };
+            st.complete_iteration(out.as_ref()).unwrap();
+        }
+        let stepped = st.finish("native");
+        assert_eq!(reference.fit.assignments, stepped.fit.assignments);
+        assert_eq!(reference.fit.centroids, stepped.fit.centroids);
+        assert_eq!(reference.fit.iterations, stepped.fit.iterations);
+        assert_eq!(reference.report.tiles_dispatched, stepped.report.tiles_dispatched);
+        assert_eq!(reference.report.points_rescanned, stepped.report.points_rescanned);
+    }
+
+    #[test]
+    fn complete_without_begin_is_an_error() {
+        let ds = synth::blobs(50, 4, 2, 1);
+        let kcfg = KMeansConfig { k: 2, seed: 1, ..Default::default() };
+        let mut st = FitState::new(&ds, &kcfg).unwrap();
+        assert!(st.complete_iteration(None).is_err());
+    }
+
+    #[test]
+    fn dense_dispatch_requires_output() {
+        let ds = synth::blobs(50, 4, 2, 1);
+        let kcfg = KMeansConfig { k: 2, seed: 1, ..Default::default() };
+        let mut st = FitState::new(&ds, &kcfg).unwrap();
+        assert!(matches!(st.begin_iteration(), Dispatch::Dense));
+        assert!(st.complete_iteration(None).is_err());
     }
 }

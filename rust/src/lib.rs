@@ -8,9 +8,10 @@
 //!   K-means algorithm family ([`kmeans`]), a cycle-approximate model of the
 //!   Pynq-Z1's Zynq XC7Z020 programmable logic ([`hw`]) including the DMA /
 //!   AXIS transport, BRAM banking, the pipelined distance calculator and the
-//!   point/group filter units, and the host-side coordinator ([`coordinator`])
+//!   point/group filter units, the host-side coordinator ([`coordinator`])
 //!   that tiles datasets, drives double-buffered transfers and manages run
-//!   state.
+//!   state, and the multi-tenant serving layer ([`serve`]) that queues,
+//!   shards and micro-batches concurrent fit requests over the coordinator.
 //! * **Layer 2** — JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text and executed from Rust through PJRT ([`runtime`]). Python is
 //!   never on the request path.
@@ -47,6 +48,7 @@ pub mod harness;
 pub mod hw;
 pub mod kmeans;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -5,6 +5,7 @@
 //!
 //! ```text
 //! kpynq run [--config FILE] [--dataset NAME] [--k K] [--backend B] [--software]
+//! kpynq serve [--jobs FILE] [--workers N] [--batch N]   NDJSON fit jobs → pool
 //! kpynq datasets                      list the built-in dataset generators
 //! kpynq resources [--d D] [--k K]     lane-count frontier on both parts
 //! kpynq init-config                   print an example config file
@@ -30,6 +31,7 @@ fn main() -> ExitCode {
     let rest = &args[1.min(args.len())..];
     let result = match cmd {
         "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
         "datasets" => cmd_datasets(),
         "resources" => cmd_resources(rest),
         "init-config" => {
@@ -65,6 +67,7 @@ fn print_help() {
          \n\
          commands:\n\
          \x20 run          cluster a dataset (simulated FPGA, native or XLA backend)\n\
+         \x20 serve        serve line-delimited JSON fit jobs on a sharded worker pool\n\
          \x20 datasets     list built-in dataset generators\n\
          \x20 resources    print the lane-count frontier for the supported parts\n\
          \x20 init-config  print an example TOML config\n\
@@ -78,7 +81,18 @@ fn print_help() {
          \x20 --max-points N   subsample cap\n\
          \x20 --backend B      fpga-sim | native | xla (xla needs the `xla` cargo feature + `make artifacts`)\n\
          \x20 --software       run the software algorithm (config [kmeans].algorithm) instead of a backend\n\
-         \x20 --verify         cross-check the result against a direct Lloyd run"
+         \x20 --verify         cross-check the result against a direct Lloyd run\n\
+         \n\
+         serve options (jobs: one JSON object per line, `#` comments allowed;\n\
+         e.g. {{\"id\":1,\"dataset\":\"kegg\",\"k\":16,\"backend\":\"native\",\"priority\":\"high\"}}):\n\
+         \x20 --jobs FILE      read NDJSON jobs from FILE (default: stdin)\n\
+         \x20 --config FILE    load the [serve] pool shape from a TOML config\n\
+         \x20 --workers N      worker shards (default 2)\n\
+         \x20 --queue N        admission queue capacity (default 64)\n\
+         \x20 --batch N        micro-batch cap, 1 disables coalescing (default 8)\n\
+         \x20 --shed POLICY    block | shed (full-queue policy, default block)\n\
+         \x20 --out FILE       write NDJSON responses to FILE (default: stdout)\n\
+         \x20                  the ServeReport summary always goes to stderr"
     );
 }
 
@@ -171,6 +185,90 @@ fn cmd_run(args: &[String]) -> kpynq::Result<()> {
             out.report.wall_seconds, out.report.tiles_dispatched, out.report.points_rescanned
         );
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> kpynq::Result<()> {
+    use kpynq::serve::{FitRequest, Server, ShedPolicy};
+
+    let cfg = match take_opt(args, "--config") {
+        Some(path) => RunConfig::from_file(Path::new(&path))?,
+        None => RunConfig::default(),
+    };
+    let mut scfg = cfg.serve_config()?;
+    if let Some(w) = take_opt(args, "--workers") {
+        scfg.workers = w
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --workers '{w}'")))?;
+    }
+    if let Some(q) = take_opt(args, "--queue") {
+        scfg.queue_capacity = q
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --queue '{q}'")))?;
+    }
+    if let Some(b) = take_opt(args, "--batch") {
+        scfg.max_batch = b
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --batch '{b}'")))?;
+    }
+    if let Some(s) = take_opt(args, "--shed") {
+        scfg.shed_policy = ShedPolicy::from_name(&s)?;
+    }
+    scfg.validate()?;
+
+    // Fail fast on an unwritable --out: a bad path must surface before the
+    // serving session runs, not after it — results would be lost.
+    let out_path = take_opt(args, "--out");
+    if let Some(path) = &out_path {
+        std::fs::write(path, "")?;
+    }
+
+    let text = match take_opt(args, "--jobs") {
+        Some(path) => std::fs::read_to_string(&path)?,
+        None => {
+            use std::io::Read;
+            eprintln!("reading NDJSON jobs from stdin (one object per line, EOF ends)...");
+            let mut s = String::new();
+            std::io::stdin().read_to_string(&mut s)?;
+            s
+        }
+    };
+    let mut jobs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let req = FitRequest::from_json_line(line)
+            .map_err(|e| kpynq::Error::Parse(format!("jobs line {}: {e}", lineno + 1)))?;
+        jobs.push(req);
+    }
+    eprintln!(
+        "serving {} jobs on {} workers (queue {}, batch {}, {} policy)",
+        jobs.len(),
+        scfg.workers,
+        scfg.queue_capacity,
+        scfg.max_batch,
+        scfg.shed_policy.name()
+    );
+
+    let outcome = Server::new(scfg)?.run(jobs)?;
+
+    // Responses as NDJSON (stdout or --out) — the report goes to stderr so
+    // stdout stays machine-parseable.
+    let mut ndjson = String::new();
+    for resp in &outcome.responses {
+        ndjson.push_str(&resp.to_json().to_string());
+        ndjson.push('\n');
+    }
+    match &out_path {
+        Some(path) => {
+            std::fs::write(path, &ndjson)?;
+            eprintln!("wrote {} responses to {path}", outcome.responses.len());
+        }
+        None => print!("{ndjson}"),
+    }
+    eprint!("{}", outcome.report.render());
     Ok(())
 }
 

@@ -39,6 +39,21 @@ pub trait Engine {
 
     /// Assign every row of `points` to its nearest row of `centroids`.
     fn assign_tile(&mut self, points: &Matrix, centroids: &Matrix) -> Result<AssignOut>;
+
+    /// Execute several independent `(points, centroids)` groups in one
+    /// dispatch — the entry point `serve`'s micro-batching scheduler
+    /// coalesces compatible requests into, so the engine boundary is
+    /// crossed once per iteration for a whole batch instead of once per
+    /// request.
+    ///
+    /// Contract: group `i` of the output is exactly
+    /// `assign_tile(groups[i].0, groups[i].1)` — same floats, same
+    /// tie-breaks — so batching can never change a clustering. The default
+    /// implementation is that loop; engines may override to amortize
+    /// per-dispatch setup further, but must preserve per-group numerics.
+    fn assign_batch(&mut self, groups: &[(&Matrix, &Matrix)]) -> Result<Vec<AssignOut>> {
+        groups.iter().map(|(pts, cents)| self.assign_tile(pts, cents)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -50,5 +65,23 @@ mod tests {
         let a = AssignOut { idx: vec![0], best: vec![1.0], second: vec![2.0] };
         let b = a.clone();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn default_assign_batch_matches_per_tile_calls() {
+        use crate::data::synth;
+        let a = synth::blobs(64, 5, 2, 1);
+        let b = synth::blobs(48, 5, 3, 2);
+        let ca = a.points.gather_rows(&[0, 7]);
+        let cb = b.points.gather_rows(&[1, 5, 9]);
+        let mut eng = native::NativeEngine;
+        let batched = eng
+            .assign_batch(&[(&a.points, &ca), (&b.points, &cb)])
+            .unwrap();
+        assert_eq!(batched.len(), 2);
+        assert_eq!(batched[0], eng.assign_tile(&a.points, &ca).unwrap());
+        assert_eq!(batched[1], eng.assign_tile(&b.points, &cb).unwrap());
+        let empty = eng.assign_batch(&[]).unwrap();
+        assert!(empty.is_empty());
     }
 }

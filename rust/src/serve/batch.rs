@@ -1,0 +1,240 @@
+//! Micro-batch coalescing: compatible requests share one engine dispatch.
+//!
+//! Two requests are *compatible* when they target the same engine backend
+//! and their datasets have the same dimensionality ([`BatchKey`]) — the
+//! two properties that decide which AOT kernel variant (and therefore
+//! which padded tile geometry) a dispatch compiles against. The queue
+//! coalesces compatible jobs at pop time; [`fit_lockstep`] then drives
+//! their [`FitState`]s iteration-by-iteration, collecting every state's
+//! survivor tile into **one** [`Engine::assign_batch`] call per round.
+//!
+//! Exactness: `assign_batch` guarantees group-by-group numerics identical
+//! to solo `assign_tile` calls, and `FitState` guarantees the stepwise
+//! trajectory equals the monolithic loop — so a batched fit is
+//! bit-identical to the same request served alone (asserted by
+//! `rust/tests/serve_integration.rs`). Batching changes *when* work runs,
+//! never *what* it computes.
+
+use crate::coordinator::driver::{Dispatch, FitState};
+use crate::coordinator::SystemOutput;
+use crate::data::{synth, Dataset};
+use crate::error::Result;
+use crate::kmeans::KMeansConfig;
+use crate::runtime::Engine;
+use crate::util::matrix::Matrix;
+
+use super::job::FitRequest;
+
+/// Which execution backend a request targets (the serve-side mirror of
+/// `coordinator::Backend`, comparable and hashable for batching).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    FpgaSim,
+    Native,
+    Xla,
+}
+
+impl BackendKind {
+    pub fn from_name(name: &str) -> Option<BackendKind> {
+        match name {
+            "fpga-sim" => Some(BackendKind::FpgaSim),
+            "native" => Some(BackendKind::Native),
+            "xla" => Some(BackendKind::Xla),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::FpgaSim => "fpga-sim",
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Batching compatibility key: same `d`, same backend — and, for the XLA
+/// backend, the same artifact directory (different artifact dirs mean
+/// different compiled programs; coalescing across them would execute a
+/// tenant against kernels it never asked for).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchKey {
+    pub d: usize,
+    pub backend: BackendKind,
+    /// `Some` only for xla jobs (the engine is per-artifact-dir).
+    pub artifact_dir: Option<String>,
+}
+
+impl BatchKey {
+    /// The request's key, when it is batchable at all: engine backends
+    /// with a generator dataset (whose `d` is known without materialising
+    /// anything). `None` marks a job that must run solo — fpga-sim (its
+    /// whole iteration structure lives inside the cycle simulator) and
+    /// file datasets (unknown `d` until loaded).
+    pub fn of(req: &FitRequest) -> Option<BatchKey> {
+        let backend = BackendKind::from_name(&req.backend_name)?;
+        if backend == BackendKind::FpgaSim {
+            return None;
+        }
+        let d = dataset_dim(&req.dataset)?;
+        let artifact_dir =
+            (backend == BackendKind::Xla).then(|| req.artifact_dir.clone());
+        Some(BatchKey { d, backend, artifact_dir })
+    }
+}
+
+/// Dimensionality of a named generator dataset; `None` for file paths.
+pub fn dataset_dim(name: &str) -> Option<usize> {
+    if name == "blobs" || name == "uniform" {
+        return Some(crate::config::SYNTH_DEFAULT_DIM);
+    }
+    synth::uci_specs().into_iter().find(|s| s.name == name).map(|s| s.d)
+}
+
+/// Run several jobs to completion in lockstep on one engine: each round
+/// advances every unfinished fit by one iteration, and all their dispatches
+/// cross the engine boundary as a single [`Engine::assign_batch`] call.
+/// Jobs converge independently and drop out of the round as they finish.
+pub fn fit_lockstep(
+    engine: &mut dyn Engine,
+    backend_name: &str,
+    jobs: &[(&Dataset, &KMeansConfig)],
+) -> Result<Vec<SystemOutput>> {
+    let mut states = jobs
+        .iter()
+        .map(|&(ds, kcfg)| FitState::new(ds, kcfg))
+        .collect::<Result<Vec<_>>>()?;
+    loop {
+        let live: Vec<usize> = (0..states.len()).filter(|&i| !states[i].done()).collect();
+        if live.is_empty() {
+            break;
+        }
+        let mut disps: Vec<(usize, Dispatch)> = Vec::with_capacity(live.len());
+        for &i in &live {
+            disps.push((i, states[i].begin_iteration()));
+        }
+        // One engine crossing for the whole round.
+        let mut groups: Vec<(&Matrix, &Matrix)> = Vec::new();
+        for (i, d) in &disps {
+            match d {
+                Dispatch::Dense => groups.push((states[*i].points(), states[*i].centroids())),
+                Dispatch::Survivors(pts) => groups.push((pts, states[*i].centroids())),
+                Dispatch::Skip => {}
+            }
+        }
+        let outs = if groups.is_empty() { Vec::new() } else { engine.assign_batch(&groups)? };
+        drop(groups);
+        let mut next_out = outs.iter();
+        for (i, d) in &disps {
+            let out = match d {
+                Dispatch::Skip => None,
+                _ => next_out.next(),
+            };
+            states[*i].complete_iteration(out)?;
+        }
+    }
+    Ok(states.into_iter().map(|s| s.finish(backend_name)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::driver::run_with_engine;
+    use crate::data::synth;
+    use crate::runtime::native::NativeEngine;
+
+    #[test]
+    fn generator_dims_are_known() {
+        assert_eq!(dataset_dim("blobs"), Some(16));
+        assert_eq!(dataset_dim("uniform"), Some(16));
+        assert_eq!(dataset_dim("kegg"), Some(20));
+        assert_eq!(dataset_dim("gassensor"), Some(128));
+        assert_eq!(dataset_dim("data/points.csv"), None);
+    }
+
+    #[test]
+    fn batch_key_separates_backend_and_dim() {
+        let blobs = FitRequest::default();
+        let key = BatchKey::of(&blobs).unwrap();
+        assert_eq!(
+            key,
+            BatchKey { d: 16, backend: BackendKind::Native, artifact_dir: None }
+        );
+
+        let mut kegg = FitRequest::default();
+        kegg.dataset = "kegg".into();
+        assert_ne!(BatchKey::of(&kegg).unwrap(), key);
+
+        let mut sim = FitRequest::default();
+        sim.backend_name = "fpga-sim".into();
+        assert_eq!(BatchKey::of(&sim), None);
+
+        let mut file = FitRequest::default();
+        file.dataset = "points.csv".into();
+        assert_eq!(BatchKey::of(&file), None);
+    }
+
+    #[test]
+    fn xla_keys_separate_artifact_dirs() {
+        let mut a = FitRequest::default();
+        a.backend_name = "xla".into();
+        let mut b = a.clone();
+        b.artifact_dir = "other-artifacts".into();
+        let (ka, kb) = (BatchKey::of(&a).unwrap(), BatchKey::of(&b).unwrap());
+        assert_eq!(ka.artifact_dir.as_deref(), Some("artifacts"));
+        assert_ne!(ka, kb, "different compiled programs must not coalesce");
+        // Same dir → compatible again.
+        let c = a.clone();
+        assert_eq!(BatchKey::of(&c).unwrap(), ka);
+    }
+
+    #[test]
+    fn lockstep_batch_is_bit_identical_to_solo_runs() {
+        // Three jobs, same d, different k / seeds / sizes — they converge
+        // at different iterations, exercising the drop-out path.
+        let a = synth::blobs(900, 12, 4, 1);
+        let b = synth::blobs(600, 12, 3, 2);
+        let c = synth::blobs(1200, 12, 6, 3);
+        let ka = KMeansConfig { k: 4, seed: 11, ..Default::default() };
+        let kb = KMeansConfig { k: 3, seed: 22, ..Default::default() };
+        let kc = KMeansConfig { k: 6, seed: 33, max_iters: 7, ..Default::default() };
+
+        let solo: Vec<_> = [(&a, &ka), (&b, &kb), (&c, &kc)]
+            .iter()
+            .map(|&(ds, kcfg)| run_with_engine(&mut NativeEngine, ds, kcfg).unwrap())
+            .collect();
+
+        let batched = fit_lockstep(
+            &mut NativeEngine,
+            "native",
+            &[(&a, &ka), (&b, &kb), (&c, &kc)],
+        )
+        .unwrap();
+
+        assert_eq!(batched.len(), 3);
+        for (s, g) in solo.iter().zip(&batched) {
+            assert_eq!(s.fit.assignments, g.fit.assignments);
+            assert_eq!(s.fit.centroids, g.fit.centroids);
+            assert_eq!(s.fit.iterations, g.fit.iterations);
+            assert_eq!(s.fit.inertia, g.fit.inertia);
+            assert_eq!(s.report.tiles_dispatched, g.report.tiles_dispatched);
+            assert_eq!(s.report.points_rescanned, g.report.points_rescanned);
+        }
+    }
+
+    #[test]
+    fn lockstep_of_one_job_degenerates_to_solo() {
+        let ds = synth::blobs(500, 8, 3, 9);
+        let kcfg = KMeansConfig { k: 3, seed: 4, ..Default::default() };
+        let solo = run_with_engine(&mut NativeEngine, &ds, &kcfg).unwrap();
+        let batched = fit_lockstep(&mut NativeEngine, "native", &[(&ds, &kcfg)]).unwrap();
+        assert_eq!(solo.fit.assignments, batched[0].fit.assignments);
+        assert_eq!(solo.fit.iterations, batched[0].fit.iterations);
+    }
+
+    #[test]
+    fn lockstep_of_nothing_is_empty() {
+        let out = fit_lockstep(&mut NativeEngine, "native", &[]).unwrap();
+        assert!(out.is_empty());
+    }
+}

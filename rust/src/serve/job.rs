@@ -1,0 +1,427 @@
+//! The serve job model: what a tenant submits and what comes back.
+//!
+//! A [`FitRequest`] is one clustering job — dataset reference, K-means
+//! parameters, backend, priority and an optional start deadline. Requests
+//! arrive as line-delimited JSON (one object per line, the `kpynq serve`
+//! wire format, parsed by the in-crate `util::json` reader) or are built
+//! programmatically. A [`FitResponse`] carries the outcome: the full
+//! [`FitResult`] + [`RunReport`] for completed jobs (so callers can assert
+//! bit-identity with a direct `coordinator` run), or a shed/failure reason.
+//!
+//! Dataset loading reuses `config::RunConfig` wholesale — a served job
+//! names datasets exactly like `kpynq run --dataset` does, so a request is
+//! trivially replayable as a one-shot CLI run when debugging.
+
+use crate::config::RunConfig;
+use crate::coordinator::RunReport;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::kmeans::{FitResult, KMeansConfig};
+use crate::util::json::Json;
+
+/// Scheduling priority. Lower index pops first; FIFO within a level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    High,
+    Normal,
+    Low,
+}
+
+impl Priority {
+    /// Number of priority levels (queue lane count).
+    pub const LEVELS: usize = 3;
+
+    /// Lane index: 0 (High) pops before 2 (Low).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Priority> {
+        match name {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            other => Err(Error::Parse(format!("unknown priority '{other}'"))),
+        }
+    }
+}
+
+/// One clustering job.
+#[derive(Clone, Debug)]
+pub struct FitRequest {
+    /// Caller-chosen identifier, echoed in the response.
+    pub id: u64,
+    /// Dataset name, exactly as `config::RunConfig` accepts it (generator
+    /// name, `.kpm` or `.csv` path).
+    pub dataset: String,
+    /// Generator seed (synthetic datasets).
+    pub data_seed: u64,
+    /// Subsample cap (0 = full dataset).
+    pub max_points: usize,
+    /// Normalisation: "minmax", "zscore" or "none".
+    pub normalize: String,
+    pub kmeans: KMeansConfig,
+    /// Backend: "fpga-sim", "native" or "xla".
+    pub backend_name: String,
+    /// AOT artifact directory (xla backend only).
+    pub artifact_dir: String,
+    pub priority: Priority,
+    /// Start deadline, relative to admission: if the job has not begun
+    /// executing within this many milliseconds it is shed instead of run.
+    /// The comparison is `elapsed >= deadline`, so `0` *always* sheds —
+    /// a deliberate escape hatch for probing the shed path. `None` = no
+    /// deadline.
+    pub deadline_ms: Option<u64>,
+}
+
+impl Default for FitRequest {
+    fn default() -> Self {
+        Self {
+            id: 0,
+            dataset: "blobs".into(),
+            data_seed: 0xC0FFEE,
+            max_points: 0,
+            normalize: "minmax".into(),
+            kmeans: KMeansConfig::default(),
+            backend_name: "native".into(),
+            artifact_dir: "artifacts".into(),
+            priority: Priority::Normal,
+            deadline_ms: None,
+        }
+    }
+}
+
+impl FitRequest {
+    /// Parse one line of the NDJSON wire format. Only `"id"` is required;
+    /// every other key falls back to the [`Default`] value. Unknown keys
+    /// are rejected so typos fail loudly at admission, not silently at
+    /// fit time.
+    ///
+    /// ```text
+    /// {"id":1,"dataset":"kegg","k":16,"backend":"native","priority":"high"}
+    /// ```
+    pub fn from_json_line(line: &str) -> Result<FitRequest> {
+        Self::from_json(&Json::parse(line)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<FitRequest> {
+        let map = match j {
+            Json::Obj(m) => m,
+            other => {
+                return Err(Error::Parse(format!("job must be a JSON object, got {other:?}")))
+            }
+        };
+        const KNOWN: &[&str] = &[
+            "id",
+            "dataset",
+            "data_seed",
+            "max_points",
+            "normalize",
+            "k",
+            "groups",
+            "max_iters",
+            "tol",
+            "seed",
+            "backend",
+            "artifact_dir",
+            "priority",
+            "deadline_ms",
+        ];
+        if let Some(unknown) = map.keys().find(|k| !KNOWN.contains(&k.as_str())) {
+            return Err(Error::Parse(format!("unknown job key '{unknown}'")));
+        }
+        let mut req = FitRequest { id: j.get("id")?.as_usize()? as u64, ..Default::default() };
+        if let Some(v) = map.get("dataset") {
+            req.dataset = v.as_str()?.to_string();
+        }
+        if let Some(v) = map.get("data_seed") {
+            req.data_seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = map.get("max_points") {
+            req.max_points = v.as_usize()?;
+        }
+        if let Some(v) = map.get("normalize") {
+            req.normalize = v.as_str()?.to_string();
+        }
+        if let Some(v) = map.get("k") {
+            req.kmeans.k = v.as_usize()?;
+        }
+        if let Some(v) = map.get("groups") {
+            req.kmeans.groups = v.as_usize()?;
+        }
+        if let Some(v) = map.get("max_iters") {
+            req.kmeans.max_iters = v.as_usize()?;
+        }
+        if let Some(v) = map.get("tol") {
+            req.kmeans.tol = v.as_f64()?;
+        }
+        if let Some(v) = map.get("seed") {
+            req.kmeans.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = map.get("backend") {
+            req.backend_name = v.as_str()?.to_string();
+        }
+        if let Some(v) = map.get("artifact_dir") {
+            req.artifact_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = map.get("priority") {
+            req.priority = Priority::from_name(v.as_str()?)?;
+        }
+        if let Some(v) = map.get("deadline_ms") {
+            req.deadline_ms = Some(v.as_usize()? as u64);
+        }
+        // Fail malformed names (backend / normalize) at parse time.
+        req.to_run_config()?;
+        Ok(req)
+    }
+
+    /// The equivalent one-shot run configuration — served jobs reuse the
+    /// `RunConfig` dataset/backend machinery verbatim, so a served fit and
+    /// `kpynq run` with the same parameters see the same bytes.
+    pub fn to_run_config(&self) -> Result<RunConfig> {
+        let cfg = RunConfig {
+            dataset: self.dataset.clone(),
+            data_seed: self.data_seed,
+            max_points: self.max_points,
+            normalize: self.normalize.clone(),
+            kmeans: self.kmeans.clone(),
+            backend_name: self.backend_name.clone(),
+            artifact_dir: std::path::PathBuf::from(&self.artifact_dir),
+            ..RunConfig::default()
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Materialise (and normalise) the dataset this request names.
+    pub fn load_dataset(&self) -> Result<Dataset> {
+        self.to_run_config()?.load_dataset()
+    }
+}
+
+/// Terminal state of a served job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Fit completed; `fit`/`report` are populated.
+    Ok,
+    /// Dropped by the admission queue (full, closed, or deadline expired)
+    /// without executing; `detail` names the reason.
+    Shed,
+    /// Admitted but execution failed; `detail` carries the error.
+    Failed,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Ok => "ok",
+            JobStatus::Shed => "shed",
+            JobStatus::Failed => "failed",
+        }
+    }
+}
+
+/// Outcome of one served job.
+#[derive(Clone, Debug)]
+pub struct FitResponse {
+    pub id: u64,
+    pub status: JobStatus,
+    /// Shed reason or error text; empty for [`JobStatus::Ok`].
+    pub detail: String,
+    /// Backend that ran (or would have run) the job.
+    pub backend: String,
+    /// Worker shard that executed the job (0 for jobs shed at admission).
+    pub worker: usize,
+    /// Size of the micro-batch this job rode in (1 = solo, 0 = never ran).
+    pub batch_size: usize,
+    /// Seconds spent queued before execution (or before being shed).
+    pub queue_seconds: f64,
+    /// Execution seconds. For coalesced jobs this is the whole batch
+    /// dispatch — the latency the tenant observed, not a per-job share.
+    pub service_seconds: f64,
+    /// The clustering, bit-identical to a direct `coordinator` run with
+    /// the same request parameters.
+    pub fit: Option<FitResult>,
+    pub report: Option<RunReport>,
+}
+
+impl FitResponse {
+    pub(crate) fn shed(id: u64, reason: &str, queue_seconds: f64) -> Self {
+        Self {
+            id,
+            status: JobStatus::Shed,
+            detail: reason.to_string(),
+            backend: String::new(),
+            worker: 0,
+            batch_size: 0,
+            queue_seconds,
+            service_seconds: 0.0,
+            fit: None,
+            report: None,
+        }
+    }
+
+    pub(crate) fn failed(
+        id: u64,
+        backend: &str,
+        worker: usize,
+        batch_size: usize,
+        queue_seconds: f64,
+        err: &Error,
+    ) -> Self {
+        Self {
+            id,
+            status: JobStatus::Failed,
+            detail: err.to_string(),
+            backend: backend.to_string(),
+            worker,
+            batch_size,
+            queue_seconds,
+            service_seconds: 0.0,
+            fit: None,
+            report: None,
+        }
+    }
+
+    /// Total tenant-observed latency (queue + service).
+    pub fn latency_seconds(&self) -> f64 {
+        self.queue_seconds + self.service_seconds
+    }
+
+    /// NDJSON summary line: scalars only (the assignment vector is
+    /// replaced by a checksum so responses stay one short line each;
+    /// callers needing the clustering use the library API).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("id".into(), Json::Num(self.id as f64));
+        m.insert("status".into(), Json::Str(self.status.name().into()));
+        if !self.detail.is_empty() {
+            m.insert("detail".into(), Json::Str(self.detail.clone()));
+        }
+        if !self.backend.is_empty() {
+            m.insert("backend".into(), Json::Str(self.backend.clone()));
+        }
+        m.insert("worker".into(), Json::Num(self.worker as f64));
+        m.insert("batch_size".into(), Json::Num(self.batch_size as f64));
+        m.insert("queue_ms".into(), Json::Num(self.queue_seconds * 1e3));
+        m.insert("service_ms".into(), Json::Num(self.service_seconds * 1e3));
+        if let Some(fit) = &self.fit {
+            m.insert("inertia".into(), Json::Num(fit.inertia));
+            m.insert("iterations".into(), Json::Num(fit.iterations as f64));
+            m.insert("converged".into(), Json::Bool(fit.converged));
+            m.insert(
+                "assignments_fnv".into(),
+                Json::Str(format!("{:016x}", assignments_checksum(&fit.assignments))),
+            );
+        }
+        Json::Obj(m)
+    }
+}
+
+/// FNV-1a over the little-endian assignment words — a stable fingerprint
+/// for cross-process "same clustering?" checks on the NDJSON surface.
+pub fn assignments_checksum(assignments: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &a in assignments {
+        for b in a.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_job_line() {
+        let req = FitRequest::from_json_line(
+            r#"{"id": 7, "dataset": "kegg", "data_seed": 3, "max_points": 2000,
+                "k": 12, "seed": 9, "max_iters": 30, "tol": 0.001,
+                "backend": "native", "priority": "high", "deadline_ms": 250}"#,
+        )
+        .unwrap();
+        assert_eq!(req.id, 7);
+        assert_eq!(req.dataset, "kegg");
+        assert_eq!(req.max_points, 2000);
+        assert_eq!(req.kmeans.k, 12);
+        assert_eq!(req.kmeans.seed, 9);
+        assert_eq!(req.kmeans.max_iters, 30);
+        assert_eq!(req.backend_name, "native");
+        assert_eq!(req.priority, Priority::High);
+        assert_eq!(req.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn minimal_line_uses_defaults() {
+        let req = FitRequest::from_json_line(r#"{"id": 1}"#).unwrap();
+        assert_eq!(req.dataset, "blobs");
+        assert_eq!(req.backend_name, "native");
+        assert_eq!(req.priority, Priority::Normal);
+        assert_eq!(req.deadline_ms, None);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(FitRequest::from_json_line(r#"{"id": 1, "kay": 8}"#).is_err());
+        assert!(FitRequest::from_json_line(r#"{"dataset": "blobs"}"#).is_err(), "id required");
+        assert!(FitRequest::from_json_line(r#"{"id": 1, "backend": "gpu"}"#).is_err());
+        assert!(FitRequest::from_json_line(r#"{"id": 1, "priority": "urgent"}"#).is_err());
+        assert!(FitRequest::from_json_line(r#"[1, 2]"#).is_err());
+    }
+
+    #[test]
+    fn priorities_roundtrip_and_order() {
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert_eq!(Priority::from_name(p.name()).unwrap(), p);
+        }
+        assert!(Priority::High.index() < Priority::Normal.index());
+        assert!(Priority::Normal.index() < Priority::Low.index());
+    }
+
+    #[test]
+    fn response_json_is_parseable_and_compact() {
+        let resp = FitResponse::shed(42, "queue full", 0.004);
+        let j = resp.to_json().to_string();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.get("id").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(back.get("status").unwrap().as_str().unwrap(), "shed");
+        assert_eq!(back.get("detail").unwrap().as_str().unwrap(), "queue full");
+    }
+
+    #[test]
+    fn checksum_is_order_sensitive_and_stable() {
+        let a = assignments_checksum(&[0, 1, 2]);
+        let b = assignments_checksum(&[2, 1, 0]);
+        assert_ne!(a, b);
+        assert_eq!(a, assignments_checksum(&[0, 1, 2]));
+        assert_ne!(assignments_checksum(&[]), 0);
+    }
+
+    #[test]
+    fn run_config_bridge_loads_the_named_dataset() {
+        let req = FitRequest {
+            id: 1,
+            dataset: "blobs".into(),
+            max_points: 300,
+            ..Default::default()
+        };
+        let ds = req.load_dataset().unwrap();
+        assert_eq!(ds.n(), 300);
+        assert_eq!(ds.d(), 16);
+    }
+}

@@ -1,0 +1,222 @@
+//! `kpynq::serve` — the sharded, batching, multi-tenant serving layer.
+//!
+//! The coordinator ([`crate::coordinator`]) runs *one* fit for *one*
+//! caller; this module turns it into a request-serving system, the shape
+//! every later scaling step (more shards, remote shards, new backends)
+//! plugs into:
+//!
+//! * **Job model** ([`job`]) — [`FitRequest`]/[`FitResponse`] with
+//!   priorities and start deadlines; line-delimited JSON on the wire
+//!   (`kpynq serve`).
+//! * **Admission** ([`queue`]) — a bounded queue with per-priority FIFO
+//!   lanes, backpressure ([`ShedPolicy::Block`]) or load-shedding
+//!   ([`ShedPolicy::ShedArrivals`]), and deadline shedding at pop time.
+//! * **Micro-batching** ([`batch`]) — compatible requests (same `d`, same
+//!   engine backend) coalesce at pop time and execute in lockstep, one
+//!   `Engine::assign_batch` crossing per iteration for the whole batch.
+//! * **Sharded workers** (`worker`, private) — one thread per shard, each
+//!   owning a long-lived engine bank, so engine construction / AOT
+//!   compilation amortizes across requests instead of being paid per fit.
+//! * **Telemetry** ([`report`]) — [`ServeReport`]: p50/p95 latency, shed
+//!   counts, queue depth, batch sizes and per-backend rollups of
+//!   `coordinator::telemetry::RunReport`.
+//!
+//! The contract tenants rely on: **serving never changes a clustering**.
+//! A served fit is bit-identical to `coordinator::KpynqSystem::cluster`
+//! with the same request parameters, whether it ran solo or coalesced —
+//! asserted end to end by `rust/tests/serve_integration.rs`.
+//!
+//! ```no_run
+//! use kpynq::serve::{FitRequest, ServeConfig, Server};
+//!
+//! let jobs: Vec<FitRequest> = (0..8)
+//!     .map(|i| FitRequest { id: i, max_points: 2_000, ..Default::default() })
+//!     .collect();
+//! let outcome = Server::new(ServeConfig::default()).unwrap().run(jobs).unwrap();
+//! println!("{}", outcome.report.render());
+//! ```
+
+pub mod batch;
+pub mod job;
+pub mod queue;
+pub mod report;
+mod worker;
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+pub use job::{FitRequest, FitResponse, JobStatus, Priority};
+pub use queue::ShedPolicy;
+pub use report::ServeReport;
+
+use queue::{SharedQueue, Submission};
+
+/// Pool configuration (the `[serve]` section of the run config).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker shards (threads), each with its own long-lived engines.
+    pub workers: usize,
+    /// Admission queue capacity (jobs queued, not executing).
+    pub queue_capacity: usize,
+    /// Micro-batch cap: up to this many compatible jobs coalesce into one
+    /// dispatch. 1 disables coalescing.
+    pub max_batch: usize,
+    /// What happens to arrivals when the queue is full.
+    pub shed_policy: ShedPolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_capacity: 64,
+            max_batch: 8,
+            shed_policy: ShedPolicy::Block,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 || self.queue_capacity == 0 || self.max_batch == 0 {
+            return Err(Error::Config(
+                "serve workers/queue_capacity/max_batch must be positive".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Everything one serving session produced.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    /// One response per submitted job, ordered by job id.
+    pub responses: Vec<FitResponse>,
+    pub report: ServeReport,
+}
+
+/// The serving system: admission queue + sharded worker pool.
+pub struct Server {
+    cfg: ServeConfig,
+}
+
+impl Server {
+    pub fn new(cfg: ServeConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self { cfg })
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Serve a stream of jobs to completion: spin up the worker shards,
+    /// feed the admission queue (applying backpressure or shedding per
+    /// policy), drain, and aggregate. Jobs are admitted in order; they
+    /// complete in whatever order the shards and priorities dictate —
+    /// responses are re-sorted by job id.
+    pub fn run(&self, jobs: Vec<FitRequest>) -> Result<ServeOutcome> {
+        let started = Instant::now();
+        let submitted = jobs.len() as u64;
+        let shared = SharedQueue::new(self.cfg.queue_capacity);
+        let (tx, rx) = mpsc::channel::<FitResponse>();
+        let mut worker_stats = Vec::with_capacity(self.cfg.workers);
+
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.cfg.workers)
+                .map(|w| {
+                    let tx = tx.clone();
+                    let shared = &shared;
+                    let cfg = &self.cfg;
+                    scope.spawn(move || worker::run_worker(w, cfg, shared, &tx))
+                })
+                .collect();
+
+            for req in jobs {
+                match shared.submit(req, self.cfg.shed_policy) {
+                    Submission::Admitted => {}
+                    Submission::Shed { req, reason } => {
+                        let _ = tx.send(FitResponse::shed(req.id, reason, 0.0));
+                    }
+                }
+            }
+            shared.close();
+
+            for h in handles {
+                worker_stats.push(h.join().expect("serve worker panicked"));
+            }
+        });
+        drop(tx);
+
+        let mut responses: Vec<FitResponse> = rx.iter().collect();
+        responses.sort_by_key(|r| r.id);
+        let report = ServeReport::build(
+            submitted,
+            &responses,
+            &worker_stats,
+            shared.stats(),
+            started.elapsed().as_secs_f64(),
+        );
+        Ok(ServeOutcome { responses, report })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::KMeansConfig;
+
+    fn job(id: u64, k: usize) -> FitRequest {
+        FitRequest {
+            id,
+            max_points: 400,
+            kmeans: KMeansConfig { k, seed: id, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        ServeConfig::default().validate().unwrap();
+        assert!(ServeConfig { workers: 0, ..Default::default() }.validate().is_err());
+        assert!(ServeConfig { max_batch: 0, ..Default::default() }.validate().is_err());
+        assert!(Server::new(ServeConfig { queue_capacity: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn serves_a_small_stream_end_to_end() {
+        let server = Server::new(ServeConfig::default()).unwrap();
+        let outcome = server.run((1..=5).map(|i| job(i, 3)).collect()).unwrap();
+        assert_eq!(outcome.responses.len(), 5);
+        assert!(outcome.responses.iter().all(|r| r.status == JobStatus::Ok));
+        // Sorted by id.
+        let ids: Vec<u64> = outcome.responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4, 5]);
+        assert_eq!(outcome.report.completed, 5);
+        assert_eq!(outcome.report.submitted, 5);
+        assert!(outcome.report.wall_seconds > 0.0);
+    }
+
+    #[test]
+    fn empty_job_stream_is_fine() {
+        let outcome = Server::new(ServeConfig::default()).unwrap().run(Vec::new()).unwrap();
+        assert!(outcome.responses.is_empty());
+        assert_eq!(outcome.report.completed, 0);
+    }
+
+    #[test]
+    fn zero_deadline_jobs_are_shed_not_run() {
+        let mut late = job(1, 3);
+        late.deadline_ms = Some(0);
+        let outcome = Server::new(ServeConfig::default())
+            .unwrap()
+            .run(vec![late, job(2, 3)])
+            .unwrap();
+        assert_eq!(outcome.responses[0].status, JobStatus::Shed);
+        assert_eq!(outcome.responses[1].status, JobStatus::Ok);
+        assert_eq!(outcome.report.shed, 1);
+        assert_eq!(outcome.report.completed, 1);
+    }
+}

@@ -1,0 +1,460 @@
+//! Bounded admission with priorities, deadlines and shedding.
+//!
+//! [`AdmissionQueue`] is the pure (single-threaded, deterministic) core:
+//! one FIFO lane per [`Priority`] level, a hard capacity, and a pop that
+//! both enforces deadline shedding and performs micro-batch coalescing
+//! (see `serve::batch` for the compatibility key). [`SharedQueue`] wraps
+//! it in a mutex + two condvars for the worker pool:
+//!
+//! * **Backpressure** — under [`ShedPolicy::Block`] a submitter sleeps
+//!   until a worker frees a slot (the `space` condvar); under
+//!   [`ShedPolicy::ShedArrivals`] a full queue rejects the newcomer
+//!   immediately (load-shedding, the "fail fast under overload" contract).
+//! * **Start deadlines** — a job that has not begun executing within its
+//!   `deadline_ms` is shed at pop time, never executed: a tenant that has
+//!   stopped waiting should not consume engine time.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+use super::batch::BatchKey;
+use super::job::{FitRequest, Priority};
+
+/// What happens to an arrival when the queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Block the submitter until a slot frees (backpressure).
+    Block,
+    /// Reject the newcomer immediately with a shed response.
+    ShedArrivals,
+}
+
+impl ShedPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedPolicy::Block => "block",
+            ShedPolicy::ShedArrivals => "shed",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<ShedPolicy> {
+        match name {
+            "block" => Ok(ShedPolicy::Block),
+            "shed" => Ok(ShedPolicy::ShedArrivals),
+            other => Err(Error::Config(format!("unknown shed policy '{other}'"))),
+        }
+    }
+}
+
+/// A job waiting in the queue.
+#[derive(Debug)]
+pub struct Pending {
+    pub req: FitRequest,
+    pub admitted_at: Instant,
+}
+
+impl Pending {
+    /// True once the job's start deadline has passed.
+    pub fn expired(&self) -> bool {
+        match self.req.deadline_ms {
+            Some(ms) => self.admitted_at.elapsed() >= Duration::from_millis(ms),
+            None => false,
+        }
+    }
+
+    /// Seconds this job has been queued so far.
+    pub fn queue_seconds(&self) -> f64 {
+        self.admitted_at.elapsed().as_secs_f64()
+    }
+}
+
+/// Result of [`AdmissionQueue::try_admit`].
+#[derive(Debug)]
+pub enum Admission {
+    Admitted,
+    /// At capacity — the request is handed back for the policy to decide.
+    Full(FitRequest),
+    /// Queue closed — no further admissions.
+    Closed(FitRequest),
+}
+
+/// Result of [`AdmissionQueue::pop_batch`]: the coalesced batch plus any
+/// expired jobs encountered (and removed) along the way. `batch` can be
+/// empty when everything reachable had expired.
+#[derive(Debug, Default)]
+pub struct PopOutcome {
+    pub batch: Vec<Pending>,
+    pub shed: Vec<Pending>,
+}
+
+/// Counters the queue accumulates over its lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueStats {
+    /// Arrivals rejected because the queue was full (ShedArrivals only).
+    pub shed_full: u64,
+    /// Jobs shed at pop time because their start deadline had passed.
+    pub shed_deadline: u64,
+    /// Highest simultaneous queue depth observed.
+    pub peak_depth: usize,
+}
+
+/// The pure bounded priority queue. Not thread-safe — see [`SharedQueue`].
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    capacity: usize,
+    lanes: [VecDeque<Pending>; Priority::LEVELS],
+    closed: bool,
+    stats: QueueStats,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "queue capacity must be positive");
+        Self {
+            capacity,
+            lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            closed: false,
+            stats: QueueStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(VecDeque::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(VecDeque::is_empty)
+    }
+
+    /// Stop admitting; queued jobs still drain.
+    pub fn close(&mut self) {
+        self.closed = true;
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.stats
+    }
+
+    pub(crate) fn count_shed_full(&mut self) {
+        self.stats.shed_full += 1;
+    }
+
+    /// Admit one job, or hand it back if the queue is full/closed.
+    pub fn try_admit(&mut self, req: FitRequest) -> Admission {
+        if self.closed {
+            return Admission::Closed(req);
+        }
+        if self.len() >= self.capacity {
+            return Admission::Full(req);
+        }
+        let lane = req.priority.index();
+        self.lanes[lane].push_back(Pending { req, admitted_at: Instant::now() });
+        let depth = self.len();
+        if depth > self.stats.peak_depth {
+            self.stats.peak_depth = depth;
+        }
+        Admission::Admitted
+    }
+
+    /// Pop the oldest highest-priority live job plus up to `max_batch - 1`
+    /// queued jobs sharing its [`BatchKey`], scanned in pop order (so a
+    /// high-priority head coalesces compatible lower-priority riders —
+    /// they get a free upgrade, never the reverse). Jobs whose key is
+    /// unknown (file datasets) or unbatchable (fpga-sim) always pop solo.
+    /// Expired jobs encountered during the scan are removed and returned
+    /// in `shed`.
+    pub fn pop_batch(&mut self, max_batch: usize) -> PopOutcome {
+        assert!(max_batch >= 1, "max_batch must be positive");
+        let mut out = PopOutcome::default();
+        let mut shed_deadline = 0u64;
+        let mut key: Option<BatchKey> = None;
+        'lanes: for lane in self.lanes.iter_mut() {
+            let mut i = 0;
+            while i < lane.len() {
+                if out.batch.len() >= max_batch {
+                    break 'lanes;
+                }
+                if lane[i].expired() {
+                    out.shed.push(lane.remove(i).expect("index checked"));
+                    shed_deadline += 1;
+                    continue; // `i` now addresses the next element
+                }
+                if out.batch.is_empty() {
+                    let head = lane.remove(i).expect("index checked");
+                    key = BatchKey::of(&head.req);
+                    out.batch.push(head);
+                    if key.is_none() || max_batch == 1 {
+                        break 'lanes; // unbatchable head pops solo
+                    }
+                    continue;
+                }
+                if BatchKey::of(&lane[i].req) == key {
+                    out.batch.push(lane.remove(i).expect("index checked"));
+                    continue;
+                }
+                i += 1;
+            }
+        }
+        self.stats.shed_deadline += shed_deadline;
+        out
+    }
+}
+
+/// Outcome of a [`SharedQueue::submit`].
+#[derive(Debug)]
+pub enum Submission {
+    Admitted,
+    /// Rejected; the reason is queue-full (ShedArrivals) or queue-closed.
+    Shed { req: FitRequest, reason: &'static str },
+}
+
+/// Thread-safe wrapper: the admission side of the serve subsystem.
+#[derive(Debug)]
+pub struct SharedQueue {
+    inner: Mutex<AdmissionQueue>,
+    /// Signalled when a slot frees (wakes blocked submitters).
+    space: Condvar,
+    /// Signalled when work arrives or the queue closes (wakes workers).
+    work: Condvar,
+}
+
+impl SharedQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(AdmissionQueue::new(capacity)),
+            space: Condvar::new(),
+            work: Condvar::new(),
+        }
+    }
+
+    /// Submit one job under the given policy. Blocks only under
+    /// [`ShedPolicy::Block`] with a full queue.
+    pub fn submit(&self, req: FitRequest, policy: ShedPolicy) -> Submission {
+        let mut q = self.inner.lock().expect("queue mutex poisoned");
+        let mut req = req;
+        loop {
+            match q.try_admit(req) {
+                Admission::Admitted => {
+                    self.work.notify_one();
+                    return Submission::Admitted;
+                }
+                Admission::Closed(r) => {
+                    return Submission::Shed { req: r, reason: "queue closed" };
+                }
+                Admission::Full(r) => match policy {
+                    ShedPolicy::ShedArrivals => {
+                        q.count_shed_full();
+                        return Submission::Shed { req: r, reason: "queue full" };
+                    }
+                    ShedPolicy::Block => {
+                        req = r;
+                        q = self.space.wait(q).expect("queue mutex poisoned");
+                    }
+                },
+            }
+        }
+    }
+
+    /// Take the next micro-batch, blocking while the queue is empty.
+    /// Returns `None` once the queue is closed *and* drained — the worker
+    /// shutdown signal.
+    pub fn take_batch(&self, max_batch: usize) -> Option<PopOutcome> {
+        let mut q = self.inner.lock().expect("queue mutex poisoned");
+        loop {
+            if !q.is_empty() {
+                let out = q.pop_batch(max_batch);
+                self.space.notify_all();
+                return Some(out);
+            }
+            if q.is_closed() {
+                return None;
+            }
+            q = self.work.wait(q).expect("queue mutex poisoned");
+        }
+    }
+
+    /// Close the queue and wake everyone (submitters shed, workers drain
+    /// and exit).
+    pub fn close(&self) {
+        let mut q = self.inner.lock().expect("queue mutex poisoned");
+        q.close();
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.inner.lock().expect("queue mutex poisoned").stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, priority: Priority) -> FitRequest {
+        FitRequest { id, priority, ..Default::default() }
+    }
+
+    #[test]
+    fn capacity_is_enforced() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(matches!(q.try_admit(req(1, Priority::Normal)), Admission::Admitted));
+        assert!(matches!(q.try_admit(req(2, Priority::Normal)), Admission::Admitted));
+        match q.try_admit(req(3, Priority::Normal)) {
+            Admission::Full(r) => assert_eq!(r.id, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.stats().peak_depth, 2);
+    }
+
+    #[test]
+    fn pops_by_priority_then_fifo() {
+        let mut q = AdmissionQueue::new(8);
+        q.try_admit(req(1, Priority::Low));
+        q.try_admit(req(2, Priority::Normal));
+        q.try_admit(req(3, Priority::High));
+        q.try_admit(req(4, Priority::High));
+        let order: Vec<u64> = (0..4)
+            .map(|_| q.pop_batch(1).batch.remove(0).req.id)
+            .collect();
+        assert_eq!(order, vec![3, 4, 2, 1]);
+    }
+
+    #[test]
+    fn coalesces_compatible_jobs_up_to_max_batch() {
+        let mut q = AdmissionQueue::new(8);
+        for id in 1..=5 {
+            q.try_admit(req(id, Priority::Normal)); // all blobs/native: same key
+        }
+        let out = q.pop_batch(3);
+        assert_eq!(out.batch.len(), 3);
+        assert_eq!(
+            out.batch.iter().map(|p| p.req.id).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn incompatible_jobs_do_not_ride_along() {
+        let mut q = AdmissionQueue::new(8);
+        q.try_admit(req(1, Priority::Normal)); // blobs (d=16)
+        let mut kegg = req(2, Priority::Normal);
+        kegg.dataset = "kegg".into(); // d=20 — different key
+        q.try_admit(kegg);
+        q.try_admit(req(3, Priority::Normal));
+        let out = q.pop_batch(8);
+        assert_eq!(
+            out.batch.iter().map(|p| p.req.id).collect::<Vec<_>>(),
+            vec![1, 3],
+            "the d=20 job must be skipped, not coalesced"
+        );
+        assert_eq!(q.pop_batch(8).batch[0].req.id, 2);
+    }
+
+    #[test]
+    fn fpga_sim_jobs_pop_solo() {
+        let mut q = AdmissionQueue::new(8);
+        let mut sim = req(1, Priority::Normal);
+        sim.backend_name = "fpga-sim".into();
+        q.try_admit(sim);
+        q.try_admit(req(2, Priority::Normal));
+        let out = q.pop_batch(8);
+        assert_eq!(out.batch.len(), 1);
+        assert_eq!(out.batch[0].req.id, 1);
+    }
+
+    #[test]
+    fn high_priority_head_coalesces_lower_priority_riders() {
+        let mut q = AdmissionQueue::new(8);
+        q.try_admit(req(1, Priority::Low));
+        q.try_admit(req(2, Priority::High));
+        let out = q.pop_batch(4);
+        assert_eq!(
+            out.batch.iter().map(|p| p.req.id).collect::<Vec<_>>(),
+            vec![2, 1],
+            "the high-priority job leads; the low-priority one rides"
+        );
+    }
+
+    #[test]
+    fn expired_jobs_are_shed_at_pop() {
+        let mut q = AdmissionQueue::new(8);
+        let mut dead = req(1, Priority::High);
+        dead.deadline_ms = Some(0); // expires immediately on admission
+        q.try_admit(dead);
+        q.try_admit(req(2, Priority::Normal));
+        let out = q.pop_batch(4);
+        assert_eq!(out.shed.len(), 1);
+        assert_eq!(out.shed[0].req.id, 1);
+        assert_eq!(out.batch.len(), 1);
+        assert_eq!(out.batch[0].req.id, 2);
+        assert_eq!(q.stats().shed_deadline, 1);
+    }
+
+    #[test]
+    fn closed_queue_rejects_and_reports() {
+        let mut q = AdmissionQueue::new(2);
+        q.try_admit(req(1, Priority::Normal));
+        q.close();
+        assert!(matches!(q.try_admit(req(2, Priority::Normal)), Admission::Closed(_)));
+        assert!(q.is_closed());
+        assert_eq!(q.len(), 1, "queued work still drains after close");
+    }
+
+    #[test]
+    fn shared_queue_hands_work_across_threads() {
+        let q = SharedQueue::new(4);
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                for id in 1..=3 {
+                    assert!(matches!(
+                        q.submit(req(id, Priority::Normal), ShedPolicy::Block),
+                        Submission::Admitted
+                    ));
+                }
+                q.close();
+            });
+            let mut seen = Vec::new();
+            while let Some(out) = q.take_batch(1) {
+                for p in out.batch {
+                    seen.push(p.req.id);
+                }
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, vec![1, 2, 3]);
+        });
+    }
+
+    #[test]
+    fn shed_arrivals_policy_rejects_when_full() {
+        let q = SharedQueue::new(1);
+        assert!(matches!(
+            q.submit(req(1, Priority::Normal), ShedPolicy::ShedArrivals),
+            Submission::Admitted
+        ));
+        match q.submit(req(2, Priority::Normal), ShedPolicy::ShedArrivals) {
+            Submission::Shed { req, reason } => {
+                assert_eq!(req.id, 2);
+                assert_eq!(reason, "queue full");
+            }
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert_eq!(q.stats().shed_full, 1);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [ShedPolicy::Block, ShedPolicy::ShedArrivals] {
+            assert_eq!(ShedPolicy::from_name(p.name()).unwrap(), p);
+        }
+        assert!(ShedPolicy::from_name("drop").is_err());
+    }
+}

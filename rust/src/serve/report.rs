@@ -1,0 +1,267 @@
+//! Aggregated serving telemetry: what the pool did, how long tenants
+//! waited, and where the engine time went.
+//!
+//! A [`ServeReport`] is built once per `Server::run` from three sources:
+//! the per-job [`FitResponse`]s (latency distribution, per-backend
+//! `coordinator::telemetry::RunReport` aggregation), the per-worker
+//! counters (busy time, batch sizes) and the admission queue's shed/depth
+//! counters. It renders as a paste-ready table (`util::bench::Table`),
+//! the same surface the paper-figure benches use.
+
+use std::collections::BTreeMap;
+
+use crate::util::bench::Table;
+use crate::util::stats::percentile;
+
+use super::job::{FitResponse, JobStatus};
+use super::queue::QueueStats;
+use super::worker::WorkerStats;
+
+/// Engine-time accounting for one backend, summed over completed jobs
+/// (the serve-level rollup of `coordinator::telemetry::RunReport`).
+#[derive(Clone, Debug, Default)]
+pub struct BackendUtilization {
+    pub backend: String,
+    pub jobs: u64,
+    /// Sum of per-fit wall-clock (engine backends) — the busy currency.
+    pub fit_seconds: f64,
+    /// Sum of simulated PL cycles (fpga-sim jobs; 0 otherwise).
+    pub total_cycles: u64,
+    pub tiles_dispatched: u64,
+    pub points_rescanned: u64,
+}
+
+/// What one serving session cost and delivered.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// All shed jobs (queue-full + deadline + closed).
+    pub shed: u64,
+    pub shed_full: u64,
+    pub shed_deadline: u64,
+    pub peak_queue_depth: usize,
+    pub workers: usize,
+    /// Micro-batches executed (solo jobs count as batches of one).
+    pub batches: u64,
+    pub max_batch: usize,
+    /// Jobs that rode in a coalesced batch (size ≥ 2).
+    pub batched_jobs: u64,
+    /// Summed worker busy time (execution, not queue waits).
+    pub busy_seconds: f64,
+    /// End-to-end session wall-clock.
+    pub wall_seconds: f64,
+    /// Tenant-observed latency (queue + service) over completed jobs.
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub max_latency_ms: f64,
+    pub per_backend: Vec<BackendUtilization>,
+}
+
+impl ServeReport {
+    pub(crate) fn build(
+        submitted: u64,
+        responses: &[FitResponse],
+        workers: &[WorkerStats],
+        queue: QueueStats,
+        wall_seconds: f64,
+    ) -> ServeReport {
+        let mut r = ServeReport {
+            submitted,
+            wall_seconds,
+            workers: workers.len(),
+            shed_full: queue.shed_full,
+            shed_deadline: queue.shed_deadline,
+            peak_queue_depth: queue.peak_depth,
+            ..Default::default()
+        };
+        let mut latencies = Vec::new();
+        let mut by_backend: BTreeMap<String, BackendUtilization> = BTreeMap::new();
+        for resp in responses {
+            match resp.status {
+                JobStatus::Ok => {
+                    r.completed += 1;
+                    latencies.push(resp.latency_seconds() * 1e3);
+                    if let Some(rep) = &resp.report {
+                        let u = by_backend.entry(rep.backend.clone()).or_insert_with(|| {
+                            BackendUtilization { backend: rep.backend.clone(), ..Default::default() }
+                        });
+                        u.jobs += 1;
+                        u.fit_seconds += rep.wall_seconds;
+                        u.total_cycles += rep.total_cycles;
+                        u.tiles_dispatched += rep.tiles_dispatched;
+                        u.points_rescanned += rep.points_rescanned;
+                    }
+                }
+                JobStatus::Shed => r.shed += 1,
+                JobStatus::Failed => r.failed += 1,
+            }
+        }
+        for w in workers {
+            r.batches += w.batches;
+            r.max_batch = r.max_batch.max(w.max_batch);
+            r.batched_jobs += w.batched_jobs;
+            r.busy_seconds += w.busy_seconds;
+        }
+        if !latencies.is_empty() {
+            r.p50_latency_ms = percentile(&latencies, 50.0);
+            r.p95_latency_ms = percentile(&latencies, 95.0);
+            r.max_latency_ms = latencies.iter().cloned().fold(0.0f64, f64::max);
+        }
+        r.per_backend = by_backend.into_values().collect();
+        r
+    }
+
+    /// Completed jobs per wall-clock second.
+    pub fn throughput_jobs_per_sec(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.completed as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of pool capacity spent executing (1.0 = every worker busy
+    /// the whole session).
+    pub fn pool_utilization(&self) -> f64 {
+        let capacity = self.wall_seconds * self.workers as f64;
+        if capacity > 0.0 {
+            self.busy_seconds / capacity
+        } else {
+            0.0
+        }
+    }
+
+    /// Paste-ready summary (headline + per-backend table).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "serve: {} submitted | {} ok, {} failed, {} shed ({} full, {} deadline) | \
+             {:.2} jobs/s over {:.3}s wall\n\
+             pool: {} workers, {:.1}% busy | {} batches, max batch {}, {} coalesced jobs | \
+             peak queue depth {}\n\
+             latency: p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms\n",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.shed,
+            self.shed_full,
+            self.shed_deadline,
+            self.throughput_jobs_per_sec(),
+            self.wall_seconds,
+            self.workers,
+            self.pool_utilization() * 100.0,
+            self.batches,
+            self.max_batch,
+            self.batched_jobs,
+            self.peak_queue_depth,
+            self.p50_latency_ms,
+            self.p95_latency_ms,
+            self.max_latency_ms,
+        );
+        if !self.per_backend.is_empty() {
+            let mut t = Table::new(&[
+                "backend",
+                "jobs",
+                "fit_s",
+                "tiles",
+                "rescanned",
+                "sim_cycles",
+            ]);
+            for u in &self.per_backend {
+                t.row(vec![
+                    u.backend.clone(),
+                    u.jobs.to_string(),
+                    format!("{:.3}", u.fit_seconds),
+                    u.tiles_dispatched.to_string(),
+                    u.points_rescanned.to_string(),
+                    u.total_cycles.to_string(),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RunReport;
+    use crate::serve::job::FitResponse;
+
+    fn ok_response(id: u64, backend: &str, queue_s: f64, service_s: f64) -> FitResponse {
+        FitResponse {
+            id,
+            status: JobStatus::Ok,
+            detail: String::new(),
+            backend: backend.into(),
+            worker: 0,
+            batch_size: 1,
+            queue_seconds: queue_s,
+            service_seconds: service_s,
+            fit: None,
+            report: Some(RunReport {
+                backend: backend.into(),
+                wall_seconds: service_s,
+                tiles_dispatched: 4,
+                points_rescanned: 100,
+                ..Default::default()
+            }),
+        }
+    }
+
+    #[test]
+    fn build_aggregates_statuses_latency_and_backends() {
+        let responses = vec![
+            ok_response(1, "native", 0.010, 0.090),
+            ok_response(2, "native", 0.020, 0.080),
+            ok_response(3, "fpga-sim", 0.000, 0.200),
+            FitResponse::shed(4, "queue full", 0.001),
+        ];
+        let workers = vec![
+            WorkerStats { worker: 0, jobs: 2, batches: 2, max_batch: 2, batched_jobs: 2, busy_seconds: 0.2 },
+            WorkerStats { worker: 1, jobs: 1, batches: 1, max_batch: 1, batched_jobs: 0, busy_seconds: 0.2 },
+        ];
+        let q = QueueStats { shed_full: 1, shed_deadline: 0, peak_depth: 3 };
+        let r = ServeReport::build(4, &responses, &workers, q, 0.4);
+        assert_eq!(r.submitted, 4);
+        assert_eq!(r.completed, 3);
+        assert_eq!(r.shed, 1);
+        assert_eq!(r.failed, 0);
+        assert_eq!(r.workers, 2);
+        assert_eq!(r.max_batch, 2);
+        assert_eq!(r.batched_jobs, 2);
+        assert_eq!(r.peak_queue_depth, 3);
+        // Latencies: 100, 100, 200 ms.
+        assert!((r.p50_latency_ms - 100.0).abs() < 1e-9);
+        assert!((r.max_latency_ms - 200.0).abs() < 1e-9);
+        assert_eq!(r.per_backend.len(), 2);
+        let native = r.per_backend.iter().find(|u| u.backend == "native").unwrap();
+        assert_eq!(native.jobs, 2);
+        assert_eq!(native.tiles_dispatched, 8);
+        // 3 jobs / 0.4 s.
+        assert!((r.throughput_jobs_per_sec() - 7.5).abs() < 1e-9);
+        // 0.4 busy over 0.8 capacity.
+        assert!((r.pool_utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_contains_the_headline_and_table() {
+        let responses = vec![ok_response(1, "native", 0.0, 0.1)];
+        let workers = vec![WorkerStats { worker: 0, jobs: 1, batches: 1, max_batch: 1, ..Default::default() }];
+        let r = ServeReport::build(1, &responses, &workers, QueueStats::default(), 0.1);
+        let text = r.render();
+        assert!(text.contains("1 ok"), "{text}");
+        assert!(text.contains("| native |") || text.contains("|  native |"), "{text}");
+    }
+
+    #[test]
+    fn empty_session_reports_zeros() {
+        let r = ServeReport::build(0, &[], &[], QueueStats::default(), 0.0);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.throughput_jobs_per_sec(), 0.0);
+        assert_eq!(r.pool_utilization(), 0.0);
+        assert_eq!(r.p50_latency_ms, 0.0);
+    }
+}

@@ -1,0 +1,339 @@
+//! The sharded worker pool: one thread per shard, one long-lived engine
+//! bank per thread.
+//!
+//! Engine construction is the expensive part of a request on the XLA path
+//! (PJRT client + per-variant AOT compilation) — so each worker owns its
+//! engines for the life of the pool and every job it executes reuses them,
+//! amortizing setup across requests instead of paying it per fit (the
+//! serving analogue of "compile once, execute per tile"). Workers pull
+//! micro-batches from the shared admission queue, execute them (lockstep
+//! for coalesced batches, solo otherwise) and push [`FitResponse`]s to the
+//! collector channel.
+
+use std::path::Path;
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::coordinator::{driver, SystemConfig, SystemOutput};
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::runtime::{native::NativeEngine, xla::XlaEngine, Engine};
+
+use super::batch::{fit_lockstep, BackendKind};
+use super::job::{FitResponse, JobStatus};
+use super::queue::{Pending, SharedQueue};
+use super::ServeConfig;
+
+/// Per-worker counters, merged into the `ServeReport` after the pool
+/// drains.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct WorkerStats {
+    pub worker: usize,
+    /// Jobs executed (ok or failed; shed jobs never reach a worker's
+    /// engines).
+    pub jobs: u64,
+    /// Micro-batches pulled (a solo job counts as a batch of one).
+    pub batches: u64,
+    /// Largest micro-batch executed.
+    pub max_batch: usize,
+    /// Jobs that rode in a coalesced batch (size ≥ 2).
+    pub batched_jobs: u64,
+    /// Seconds spent executing (busy, not waiting on the queue).
+    pub busy_seconds: f64,
+}
+
+/// The engines a worker keeps alive across requests.
+#[derive(Default)]
+struct EngineBank {
+    native: NativeEngine,
+    /// One engine per artifact dir, constructed on first use and kept for
+    /// the worker's lifetime — tenants alternating artifact dirs must not
+    /// re-pay PJRT construction + AOT compilation per batch.
+    xla: std::collections::BTreeMap<String, XlaEngine>,
+}
+
+impl EngineBank {
+    fn xla(&mut self, artifact_dir: &str) -> Result<&mut XlaEngine> {
+        if !self.xla.contains_key(artifact_dir) {
+            let engine = XlaEngine::new(Path::new(artifact_dir))?;
+            self.xla.insert(artifact_dir.to_string(), engine);
+        }
+        Ok(self.xla.get_mut(artifact_dir).expect("just inserted"))
+    }
+}
+
+/// Worker main loop: runs until the queue closes and drains.
+pub(crate) fn run_worker(
+    worker: usize,
+    cfg: &ServeConfig,
+    queue: &SharedQueue,
+    tx: &Sender<FitResponse>,
+) -> WorkerStats {
+    let mut stats = WorkerStats { worker, ..Default::default() };
+    let mut engines = EngineBank::default();
+    while let Some(outcome) = queue.take_batch(cfg.max_batch) {
+        for p in outcome.shed {
+            let _ = tx.send(FitResponse::shed(
+                p.req.id,
+                "start deadline expired in queue",
+                p.queue_seconds(),
+            ));
+        }
+        if outcome.batch.is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        execute_batch(worker, &mut engines, outcome.batch, tx, &mut stats);
+        stats.busy_seconds += t0.elapsed().as_secs_f64();
+    }
+    stats
+}
+
+/// Execute one popped micro-batch. All jobs in a batch of size ≥ 2 share a
+/// `BatchKey` (queue invariant), so they target one engine and coalesce
+/// into lockstep; solo batches run whichever backend they name.
+fn execute_batch(
+    worker: usize,
+    engines: &mut EngineBank,
+    batch: Vec<Pending>,
+    tx: &Sender<FitResponse>,
+    stats: &mut WorkerStats,
+) {
+    stats.batches += 1;
+    stats.max_batch = stats.max_batch.max(batch.len());
+
+    // Materialise datasets and validate each job up front; a job whose
+    // dataset fails to load (or whose k/n combination is invalid) answers
+    // Failed without sinking the rest of the batch.
+    let mut jobs: Vec<(Pending, Dataset, f64)> = Vec::with_capacity(batch.len());
+    for p in batch {
+        let queue_s = p.queue_seconds();
+        let loaded = p.req.load_dataset().and_then(|ds| {
+            p.req.kmeans.validate(ds.n())?;
+            Ok(ds)
+        });
+        match loaded {
+            Ok(ds) => jobs.push((p, ds, queue_s)),
+            Err(e) => {
+                stats.jobs += 1;
+                let _ = tx.send(FitResponse::failed(
+                    p.req.id,
+                    &p.req.backend_name,
+                    worker,
+                    1,
+                    queue_s,
+                    &e,
+                ));
+            }
+        }
+    }
+    if jobs.is_empty() {
+        return;
+    }
+
+    let kind = BackendKind::from_name(&jobs[0].0.req.backend_name);
+    match kind {
+        // Simulated-FPGA jobs pop solo (queue invariant) and carry their
+        // own iteration structure inside the cycle simulator.
+        Some(BackendKind::FpgaSim) | None => {
+            for (p, ds, queue_s) in &jobs {
+                let t0 = Instant::now();
+                let res = p.req.to_run_config().and_then(|rc| {
+                    driver::run(
+                        &SystemConfig { backend: rc.backend(), verify: false },
+                        ds,
+                        &p.req.kmeans,
+                    )
+                });
+                send_result(tx, stats, worker, p, *queue_s, t0.elapsed().as_secs_f64(), 1, res);
+            }
+        }
+        Some(BackendKind::Native) | Some(BackendKind::Xla) => {
+            let engine: &mut dyn Engine = match kind {
+                Some(BackendKind::Xla) => {
+                    match engines.xla(&jobs[0].0.req.artifact_dir) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            // No engine: every job in the batch fails with
+                            // the construction error (e.g. feature off).
+                            for (p, _, queue_s) in &jobs {
+                                stats.jobs += 1;
+                                let _ = tx.send(FitResponse::failed(
+                                    p.req.id,
+                                    &p.req.backend_name,
+                                    worker,
+                                    jobs.len(),
+                                    *queue_s,
+                                    &e,
+                                ));
+                            }
+                            return;
+                        }
+                    }
+                }
+                _ => &mut engines.native,
+            };
+            let name = engine.name();
+            if jobs.len() >= 2 {
+                let refs: Vec<(&Dataset, &crate::kmeans::KMeansConfig)> =
+                    jobs.iter().map(|(p, ds, _)| (ds, &p.req.kmeans)).collect();
+                let t0 = Instant::now();
+                match fit_lockstep(engine, name, &refs) {
+                    Ok(outs) => {
+                        let service_s = t0.elapsed().as_secs_f64();
+                        stats.batched_jobs += jobs.len() as u64;
+                        for ((p, _, queue_s), out) in jobs.iter().zip(outs) {
+                            send_result(
+                                tx,
+                                stats,
+                                worker,
+                                p,
+                                *queue_s,
+                                service_s,
+                                jobs.len(),
+                                Ok(out),
+                            );
+                        }
+                    }
+                    Err(e) => {
+                        // Jobs were validated above, so a lockstep error is
+                        // an engine fault — not attributable to one job;
+                        // fail the batch.
+                        for (p, _, queue_s) in &jobs {
+                            stats.jobs += 1;
+                            let _ = tx.send(FitResponse::failed(
+                                p.req.id,
+                                &p.req.backend_name,
+                                worker,
+                                jobs.len(),
+                                *queue_s,
+                                &e,
+                            ));
+                        }
+                    }
+                }
+            } else {
+                let (p, ds, queue_s) = &jobs[0];
+                let t0 = Instant::now();
+                let res = driver::run_with_engine(engine, ds, &p.req.kmeans);
+                send_result(tx, stats, worker, p, *queue_s, t0.elapsed().as_secs_f64(), 1, res);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn send_result(
+    tx: &Sender<FitResponse>,
+    stats: &mut WorkerStats,
+    worker: usize,
+    p: &Pending,
+    queue_seconds: f64,
+    service_seconds: f64,
+    batch_size: usize,
+    res: Result<SystemOutput>,
+) {
+    stats.jobs += 1;
+    let resp = match res {
+        Ok(out) => FitResponse {
+            id: p.req.id,
+            status: JobStatus::Ok,
+            detail: String::new(),
+            backend: out.report.backend.clone(),
+            worker,
+            batch_size,
+            queue_seconds,
+            service_seconds,
+            fit: Some(out.fit),
+            report: Some(out.report),
+        },
+        Err(e) => {
+            let mut r =
+                FitResponse::failed(p.req.id, &p.req.backend_name, worker, batch_size, queue_seconds, &e);
+            r.service_seconds = service_seconds;
+            r
+        }
+    };
+    let _ = tx.send(resp);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::job::FitRequest;
+    use crate::serve::queue::ShedPolicy;
+    use std::sync::mpsc;
+
+    fn small_req(id: u64, k: usize, seed: u64) -> FitRequest {
+        FitRequest {
+            id,
+            max_points: 400,
+            kmeans: crate::kmeans::KMeansConfig { k, seed, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn worker_drains_queue_and_reports() {
+        let cfg = ServeConfig { workers: 1, ..Default::default() };
+        let queue = SharedQueue::new(8);
+        for id in 1..=3 {
+            assert!(matches!(
+                queue.submit(small_req(id, 3, id), ShedPolicy::Block),
+                crate::serve::queue::Submission::Admitted
+            ));
+        }
+        queue.close();
+        let (tx, rx) = mpsc::channel();
+        let stats = run_worker(0, &cfg, &queue, &tx);
+        drop(tx);
+        let responses: Vec<FitResponse> = rx.iter().collect();
+        assert_eq!(responses.len(), 3);
+        assert!(responses.iter().all(|r| r.status == JobStatus::Ok));
+        assert_eq!(stats.jobs, 3);
+        assert!(stats.batches >= 1);
+        // All three share a key and one worker pulled them together.
+        assert_eq!(stats.max_batch, 3);
+        assert_eq!(stats.batched_jobs, 3);
+    }
+
+    #[test]
+    fn bad_job_fails_without_sinking_the_batch() {
+        let cfg = ServeConfig { workers: 1, ..Default::default() };
+        let queue = SharedQueue::new(8);
+        // k larger than the subsampled n: fails validation inside the fit.
+        let mut bad = small_req(1, 3, 1);
+        bad.kmeans.k = 1000;
+        bad.max_points = 100;
+        queue.submit(bad, ShedPolicy::Block);
+        queue.submit(small_req(2, 3, 2), ShedPolicy::Block);
+        queue.close();
+        let (tx, rx) = mpsc::channel();
+        run_worker(0, &cfg, &queue, &tx);
+        drop(tx);
+        let mut responses: Vec<FitResponse> = rx.iter().collect();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 2);
+        assert_eq!(responses[0].status, JobStatus::Failed);
+        assert!(responses[0].detail.contains("exceeds"), "{}", responses[0].detail);
+        assert_eq!(responses[1].status, JobStatus::Ok);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_jobs_fail_cleanly_without_the_feature() {
+        let cfg = ServeConfig { workers: 1, ..Default::default() };
+        let queue = SharedQueue::new(4);
+        let mut req = small_req(1, 3, 1);
+        req.backend_name = "xla".into();
+        queue.submit(req, ShedPolicy::Block);
+        queue.close();
+        let (tx, rx) = mpsc::channel();
+        run_worker(0, &cfg, &queue, &tx);
+        drop(tx);
+        let responses: Vec<FitResponse> = rx.iter().collect();
+        assert_eq!(responses.len(), 1);
+        assert_eq!(responses[0].status, JobStatus::Failed);
+        assert!(responses[0].detail.contains("xla"), "{}", responses[0].detail);
+    }
+}

@@ -63,6 +63,21 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (log_sum / xs.len() as f64).exp()
 }
 
+/// Nearest-rank percentile (`p` in 0..=100; copies + sorts — fine for
+/// report-sized inputs). Nearest-rank returns an element of `xs`, so for
+/// even-length input `percentile(xs, 50.0)` is the lower-middle element,
+/// not [`median`]'s interpolated value. Serving latency reports use
+/// p50/p95.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
 /// Median (copies + sorts; fine for report-sized inputs).
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -106,5 +121,16 @@ mod tests {
     fn median_even_odd() {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 95.0), 95.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[7.0], 95.0), 7.0);
+        assert!(percentile(&[], 50.0).is_nan());
     }
 }
