@@ -9,7 +9,7 @@ PYTHON      ?= python3
 ARTIFACTS   := artifacts
 PY_SOURCES  := $(wildcard python/compile/*.py python/compile/kernels/*.py)
 
-.PHONY: all build test serve-test bench-compile examples doc artifacts artifacts-quick pytest clean
+.PHONY: all build test serve-test serve-net-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
 
 all: build
 
@@ -26,7 +26,18 @@ test: build
 serve-test:
 	cargo test -q --test serve_integration
 
-# Compiles every registered bench, serve_throughput included.
+# The daemon front-end's loopback acceptance test (bit-identity over the
+# wire, concurrent clients, protocol edges) — see PROTOCOL.md.
+serve-net-test:
+	cargo test -q --test serve_net
+
+# Docs consistency: DESIGN.md/PROTOCOL.md/EXPERIMENTS.md §-citations in the
+# source must resolve, and every serve::job wire field must be documented
+# in PROTOCOL.md. Pure grep — needs no Rust toolchain.
+check-docs:
+	sh tools/check-docs.sh
+
+# Compiles every registered bench, serve_throughput + serve_net included.
 bench-compile:
 	cargo bench --no-run
 

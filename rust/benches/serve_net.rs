@@ -1,0 +1,96 @@
+//! Daemon throughput — the socket front-end across client counts
+//! (EXPERIMENTS.md §Serving).
+//!
+//! Spins one loopback daemon per row, fans out N concurrent NDJSON
+//! clients, and measures end-to-end jobs/sec as seen from the *client*
+//! side of the socket (connect + submit + read every response), then
+//! cross-checks against the daemon's own `ServeReport`. The interesting
+//! comparison is against `serve_throughput` (the in-process pool): the
+//! delta is the wire + framing cost, and the client-count sweep shows
+//! whether one shared session really amortizes engines across
+//! connections. Knobs:
+//!
+//! * `KPYNQ_NET_JOBS`     — jobs per client (default 8)
+//! * `KPYNQ_BENCH_POINTS` — points per job dataset (default 2 000)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use kpynq::serve::net::{Daemon, NetConfig};
+use kpynq::serve::ServeConfig;
+use kpynq::util::bench::Table;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One client session: submit `jobs` requests, read `jobs` responses.
+fn run_client(addr: &str, tenant: usize, jobs: usize, points: usize) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = stream;
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("greeting");
+    for i in 0..jobs {
+        let line = format!(
+            r#"{{"id": {i}, "data_seed": {}, "max_points": {points}, "k": {}, "seed": {}, "max_iters": 40}}"#,
+            1000 + 100 * tenant + i,
+            4 + (i % 3) * 2,
+            7 + tenant + i,
+        );
+        writer.write_all(line.as_bytes()).expect("send");
+        writer.write_all(b"\n").expect("send");
+    }
+    for _ in 0..jobs {
+        line.clear();
+        assert!(reader.read_line(&mut line).expect("response") > 0, "daemon hung up");
+        assert!(line.contains("\"status\":\"ok\""), "unexpected response: {line}");
+    }
+}
+
+fn main() {
+    let jobs = env_usize("KPYNQ_NET_JOBS", 8);
+    let points = env_usize("KPYNQ_BENCH_POINTS", 2_000);
+    println!("serve_net: {jobs} jobs/client x {points} points, loopback TCP, native shards");
+
+    let mut t = Table::new(&[
+        "clients", "workers", "ok", "jobs/s", "p50 ms", "p95 ms", "peak conns",
+    ]);
+    for clients in [1usize, 2, 4, 8] {
+        let serve = ServeConfig { workers: 4, queue_capacity: 64, ..Default::default() };
+        let daemon = Daemon::bind("127.0.0.1:0", NetConfig::default(), serve).expect("bind");
+        let addr = daemon.local_addr();
+        let handle = daemon.handle();
+        let daemon_thread = std::thread::spawn(move || daemon.run().expect("daemon"));
+
+        // Warm the engine banks (and the page cache) outside the clock.
+        let warm = 2.min(jobs);
+        run_client(&addr, 99, warm, points);
+
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for tenant in 0..clients {
+                let addr = &addr;
+                scope.spawn(move || run_client(addr, tenant, jobs, points));
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+
+        handle.shutdown();
+        let report = daemon_thread.join().expect("daemon join");
+        let total = (clients * jobs) as f64;
+        t.row(vec![
+            clients.to_string(),
+            report.workers.to_string(),
+            // Exclude the warmup client's jobs from the displayed count so
+            // the column matches the jobs/s denominator.
+            (report.completed - warm as u64).to_string(),
+            format!("{:.2}", total / wall),
+            format!("{:.1}", report.p50_latency_ms),
+            format!("{:.1}", report.p95_latency_ms),
+            report.peak_connections.to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -11,7 +11,7 @@ use crate::coordinator::Backend;
 use crate::error::{Error, Result};
 use crate::hw::{AccelConfig, ZynqPart};
 use crate::kmeans::{Algorithm, InitMethod, KMeansConfig};
-use crate::serve::{ServeConfig, ShedPolicy};
+use crate::serve::{NetConfig, ServeConfig, ShedPolicy};
 use crate::util::toml;
 
 /// Dimensionality of the `blobs`/`uniform` generator datasets
@@ -52,6 +52,13 @@ pub struct RunConfig {
     pub serve_max_batch: usize,
     /// Serving pool: full-queue policy, "block" or "shed".
     pub serve_shed: String,
+    /// Daemon listener: `host:port`, `unix:<path>`, or "" for one-shot
+    /// stdin mode (`kpynq serve --listen` overrides).
+    pub serve_listen: String,
+    /// Daemon: simultaneous-connection cap.
+    pub serve_max_conns: usize,
+    /// Daemon: idle-connection timeout in milliseconds (0 = never).
+    pub serve_idle_timeout_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -75,6 +82,9 @@ impl Default for RunConfig {
             serve_queue_capacity: 64,
             serve_max_batch: 8,
             serve_shed: "block".into(),
+            serve_listen: String::new(),
+            serve_max_conns: 32,
+            serve_idle_timeout_ms: 0,
         }
     }
 }
@@ -111,6 +121,11 @@ workers = 2              # worker shards (kpynq serve)
 queue_capacity = 64      # bounded admission queue
 max_batch = 8            # micro-batch cap (1 = no coalescing)
 shed = "block"           # block|shed (full-queue policy)
+
+[serve.net]
+listen = ""              # daemon: "host:port" or "unix:/path.sock"; "" = one-shot stdin mode
+max_conns = 32           # simultaneous client connections (extras refused)
+idle_timeout_ms = 0      # close idle connections after this long (0 = never)
 "#;
 
 impl RunConfig {
@@ -201,6 +216,18 @@ impl RunConfig {
         if let Some(v) = toml::get(&doc, "serve", "shed") {
             cfg.serve_shed = v.as_str()?.to_string();
         }
+
+        if let Some(v) = toml::get(&doc, "serve.net", "listen") {
+            cfg.serve_listen = v.as_str()?.to_string();
+        }
+        if let Some(v) = toml::get(&doc, "serve.net", "max_conns") {
+            cfg.serve_max_conns = v.as_usize()?;
+        }
+        if let Some(v) = toml::get(&doc, "serve.net", "idle_timeout_ms") {
+            // as_usize rejects negatives; `-500` must error, not wrap to
+            // a ~584-million-year timeout.
+            cfg.serve_idle_timeout_ms = v.as_usize()? as u64;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -222,6 +249,7 @@ impl RunConfig {
             return Err(Error::Config("lanes/mac_width/tile_points must be positive".into()));
         }
         self.serve_config()?;
+        self.net_config()?;
         Ok(())
     }
 
@@ -232,6 +260,17 @@ impl RunConfig {
             queue_capacity: self.serve_queue_capacity,
             max_batch: self.serve_max_batch,
             shed_policy: ShedPolicy::from_name(&self.serve_shed)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Build the daemon listener config described by the `[serve.net]`
+    /// section (the address itself lives in `serve_listen`).
+    pub fn net_config(&self) -> Result<NetConfig> {
+        let cfg = NetConfig {
+            max_conns: self.serve_max_conns,
+            idle_timeout_ms: self.serve_idle_timeout_ms,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -335,6 +374,24 @@ mod tests {
         assert!(RunConfig::from_toml("[accelerator]\nlanes = 0").is_err());
         assert!(RunConfig::from_toml("[serve]\nshed = \"drop\"").is_err());
         assert!(RunConfig::from_toml("[serve]\nworkers = 0").is_err());
+        assert!(RunConfig::from_toml("[serve.net]\nmax_conns = 0").is_err());
+        assert!(RunConfig::from_toml("[serve.net]\nidle_timeout_ms = -500").is_err());
+    }
+
+    #[test]
+    fn serve_net_section_configures_the_daemon() {
+        let cfg = RunConfig::from_toml(
+            "[serve.net]\nlisten = \"127.0.0.1:7071\"\nmax_conns = 4\nidle_timeout_ms = 1500",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve_listen, "127.0.0.1:7071");
+        let net = cfg.net_config().unwrap();
+        assert_eq!(net.max_conns, 4);
+        assert_eq!(net.idle_timeout_ms, 1500);
+        // Defaults: no listener (one-shot mode), idle timeout off.
+        let d = RunConfig::default();
+        assert!(d.serve_listen.is_empty());
+        assert_eq!(d.net_config().unwrap().idle_timeout_ms, 0);
     }
 
     #[test]

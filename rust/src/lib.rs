@@ -11,7 +11,9 @@
 //!   point/group filter units, the host-side coordinator ([`coordinator`])
 //!   that tiles datasets, drives double-buffered transfers and manages run
 //!   state, and the multi-tenant serving layer ([`serve`]) that queues,
-//!   shards and micro-batches concurrent fit requests over the coordinator.
+//!   shards and micro-batches concurrent fit requests over the coordinator —
+//!   one-shot from NDJSON streams, or as a persistent socket daemon
+//!   (`kpynq serve --listen`, wire protocol normative in PROTOCOL.md).
 //! * **Layer 2** — JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text and executed from Rust through PJRT ([`runtime`]). Python is
 //!   never on the request path.

@@ -6,6 +6,7 @@
 //! ```text
 //! kpynq run [--config FILE] [--dataset NAME] [--k K] [--backend B] [--software]
 //! kpynq serve [--jobs FILE] [--workers N] [--batch N]   NDJSON fit jobs → pool
+//! kpynq serve --listen ADDR [--max-conns N]             persistent daemon (PROTOCOL.md)
 //! kpynq datasets                      list the built-in dataset generators
 //! kpynq resources [--d D] [--k K]     lane-count frontier on both parts
 //! kpynq init-config                   print an example config file
@@ -92,7 +93,13 @@ fn print_help() {
          \x20 --batch N        micro-batch cap, 1 disables coalescing (default 8)\n\
          \x20 --shed POLICY    block | shed (full-queue policy, default block)\n\
          \x20 --out FILE       write NDJSON responses to FILE (default: stdout)\n\
-         \x20                  the ServeReport summary always goes to stderr"
+         \x20                  the ServeReport summary always goes to stderr\n\
+         \n\
+         serve daemon options (persistent socket front-end, wire format in PROTOCOL.md;\n\
+         drain with {{\"op\":\"shutdown\"}} on any connection):\n\
+         \x20 --listen ADDR         host:port (0 = ephemeral) or unix:/path.sock\n\
+         \x20 --max-conns N         simultaneous client connections (default 32)\n\
+         \x20 --idle-timeout-ms N   close idle connections after N ms (default 0 = never)"
     );
 }
 
@@ -216,6 +223,24 @@ fn cmd_serve(args: &[String]) -> kpynq::Result<()> {
     }
     scfg.validate()?;
 
+    // Daemon mode: `--listen` (or a `[serve.net] listen` config entry)
+    // turns the one-shot filter into the persistent socket front-end.
+    let listen = take_opt(args, "--listen")
+        .or_else(|| (!cfg.serve_listen.is_empty()).then(|| cfg.serve_listen.clone()));
+    if let Some(addr) = listen {
+        // One-shot-only flags must fail loudly here, not be silently
+        // ignored — a daemon reads jobs from its socket, not from files.
+        for flag in ["--jobs", "--out"] {
+            if has_flag(args, flag) {
+                return Err(kpynq::Error::Config(format!(
+                    "{flag} is a one-shot serve option; the daemon (--listen {addr}) \
+                     exchanges NDJSON over the socket (see PROTOCOL.md)"
+                )));
+            }
+        }
+        return cmd_serve_daemon(args, &cfg, scfg, &addr);
+    }
+
     // Fail fast on an unwritable --out: a bad path must surface before the
     // serving session runs, not after it — results would be lost.
     let out_path = take_opt(args, "--out");
@@ -269,6 +294,43 @@ fn cmd_serve(args: &[String]) -> kpynq::Result<()> {
         None => print!("{ndjson}"),
     }
     eprint!("{}", outcome.report.render());
+    Ok(())
+}
+
+/// `kpynq serve --listen`: run the persistent daemon until a client sends
+/// `{"op":"shutdown"}` (PROTOCOL.md §6), then print the session report.
+fn cmd_serve_daemon(
+    args: &[String],
+    cfg: &RunConfig,
+    scfg: kpynq::serve::ServeConfig,
+    addr: &str,
+) -> kpynq::Result<()> {
+    use kpynq::serve::net::{Daemon, PROTO_VERSION};
+
+    let mut net = cfg.net_config()?;
+    if let Some(n) = take_opt(args, "--max-conns") {
+        net.max_conns = n
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --max-conns '{n}'")))?;
+    }
+    if let Some(t) = take_opt(args, "--idle-timeout-ms") {
+        net.idle_timeout_ms = t
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --idle-timeout-ms '{t}'")))?;
+    }
+    net.validate()?;
+
+    let daemon = Daemon::bind(addr, net, scfg)?;
+    eprintln!(
+        "kpynq serve: listening on {} (proto {PROTO_VERSION}, {} workers, batch {}, {} policy; \
+         NDJSON jobs per PROTOCOL.md, drain with {{\"op\":\"shutdown\"}})",
+        daemon.local_addr(),
+        daemon.serve_config().workers,
+        daemon.serve_config().max_batch,
+        daemon.serve_config().shed_policy.name(),
+    );
+    let report = daemon.run()?;
+    eprint!("{}", report.render());
     Ok(())
 }
 

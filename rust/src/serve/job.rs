@@ -2,11 +2,19 @@
 //!
 //! A [`FitRequest`] is one clustering job — dataset reference, K-means
 //! parameters, backend, priority and an optional start deadline. Requests
-//! arrive as line-delimited JSON (one object per line, the `kpynq serve`
-//! wire format, parsed by the in-crate `util::json` reader) or are built
-//! programmatically. A [`FitResponse`] carries the outcome: the full
-//! [`FitResult`] + [`RunReport`] for completed jobs (so callers can assert
-//! bit-identity with a direct `coordinator` run), or a shed/failure reason.
+//! arrive as line-delimited JSON (parsed by the in-crate `util::json`
+//! reader) or are built programmatically. A [`FitResponse`] carries the
+//! outcome: the full [`FitResult`] + [`RunReport`] for completed jobs (so
+//! callers can assert bit-identity with a direct `coordinator` run), or a
+//! shed/failure reason.
+//!
+//! This module is the *implementation* of the NDJSON wire surface; the
+//! **normative spec** — every field with types, defaults and units, the
+//! shed/error reply shapes, the priority/deadline semantics and the
+//! versioning policy — is PROTOCOL.md (§3 requests, §4 responses). When
+//! this module and that document disagree, the document wins and the code
+//! is the bug; `make check-docs` keeps the field lists aligned in both
+//! directions.
 //!
 //! Dataset loading reuses `config::RunConfig` wholesale — a served job
 //! names datasets exactly like `kpynq run --dataset` does, so a request is
@@ -19,7 +27,9 @@ use crate::error::{Error, Result};
 use crate::kmeans::{FitResult, KMeansConfig};
 use crate::util::json::Json;
 
-/// Scheduling priority. Lower index pops first; FIFO within a level.
+/// Scheduling priority (PROTOCOL.md §7). Lower index pops first; FIFO
+/// within a level. Priority affects *when* a job starts, never its
+/// result.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Priority {
     High,
@@ -79,10 +89,10 @@ pub struct FitRequest {
     pub artifact_dir: String,
     pub priority: Priority,
     /// Start deadline, relative to admission: if the job has not begun
-    /// executing within this many milliseconds it is shed instead of run.
-    /// The comparison is `elapsed >= deadline`, so `0` *always* sheds —
-    /// a deliberate escape hatch for probing the shed path. `None` = no
-    /// deadline.
+    /// executing within this many milliseconds it is shed instead of run
+    /// (semantics are normative in PROTOCOL.md §7). The comparison is
+    /// `elapsed >= deadline`, so `0` *always* sheds — a deliberate escape
+    /// hatch for probing the shed path. `None` = no deadline.
     pub deadline_ms: Option<u64>,
 }
 
@@ -104,10 +114,10 @@ impl Default for FitRequest {
 }
 
 impl FitRequest {
-    /// Parse one line of the NDJSON wire format. Only `"id"` is required;
-    /// every other key falls back to the [`Default`] value. Unknown keys
-    /// are rejected so typos fail loudly at admission, not silently at
-    /// fit time.
+    /// Parse one line of the NDJSON wire format (PROTOCOL.md §3). Only
+    /// `"id"` is required; every other key falls back to the [`Default`]
+    /// value. Unknown keys are rejected so typos fail loudly at
+    /// admission, not silently at fit time.
     ///
     /// ```text
     /// {"id":1,"dataset":"kegg","k":16,"backend":"native","priority":"high"}
@@ -300,9 +310,10 @@ impl FitResponse {
         self.queue_seconds + self.service_seconds
     }
 
-    /// NDJSON summary line: scalars only (the assignment vector is
-    /// replaced by a checksum so responses stay one short line each;
-    /// callers needing the clustering use the library API).
+    /// NDJSON summary line (PROTOCOL.md §4): scalars only — the
+    /// assignment vector is replaced by the §8 fingerprint so responses
+    /// stay one short line each; callers needing the clustering use the
+    /// library API.
     pub fn to_json(&self) -> Json {
         let mut m = std::collections::BTreeMap::new();
         m.insert("id".into(), Json::Num(self.id as f64));
@@ -330,8 +341,10 @@ impl FitResponse {
     }
 }
 
-/// FNV-1a over the little-endian assignment words — a stable fingerprint
-/// for cross-process "same clustering?" checks on the NDJSON surface.
+/// FNV-1a (64-bit) over the little-endian assignment words — the stable
+/// fingerprint for cross-process "same clustering?" checks on the NDJSON
+/// surface. This is the reference implementation of PROTOCOL.md §8; the
+/// constants and byte order there are normative.
 pub fn assignments_checksum(assignments: &[u32]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &a in assignments {

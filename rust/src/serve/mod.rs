@@ -17,14 +17,22 @@
 //! * **Sharded workers** (`worker`, private) — one thread per shard, each
 //!   owning a long-lived engine bank, so engine construction / AOT
 //!   compilation amortizes across requests instead of being paid per fit.
+//! * **Session core** ([`session`]) — the long-lived pool every front-end
+//!   drives: queue + workers + a response router that restores
+//!   client-chosen job ids, so id spaces from different submitters can
+//!   collide safely.
+//! * **Socket front-end** ([`net`]) — `kpynq serve --listen`: a persistent
+//!   daemon multiplexing concurrent TCP / Unix-domain connections into one
+//!   shared session, speaking the wire protocol specified in PROTOCOL.md.
 //! * **Telemetry** ([`report`]) — [`ServeReport`]: p50/p95 latency, shed
-//!   counts, queue depth, batch sizes and per-backend rollups of
-//!   `coordinator::telemetry::RunReport`.
+//!   counts, queue depth, batch sizes, connection counters and per-backend
+//!   rollups of `coordinator::telemetry::RunReport`.
 //!
 //! The contract tenants rely on: **serving never changes a clustering**.
 //! A served fit is bit-identical to `coordinator::KpynqSystem::cluster`
-//! with the same request parameters, whether it ran solo or coalesced —
-//! asserted end to end by `rust/tests/serve_integration.rs`.
+//! with the same request parameters, whether it ran solo or coalesced,
+//! from a job vector or over a socket — asserted end to end by
+//! `rust/tests/serve_integration.rs` and `rust/tests/serve_net.rs`.
 //!
 //! ```no_run
 //! use kpynq::serve::{FitRequest, ServeConfig, Server};
@@ -38,20 +46,21 @@
 
 pub mod batch;
 pub mod job;
+pub mod net;
 pub mod queue;
 pub mod report;
+pub mod session;
 mod worker;
 
 use std::sync::mpsc;
-use std::time::Instant;
 
 use crate::error::{Error, Result};
 
 pub use job::{FitRequest, FitResponse, JobStatus, Priority};
+pub use net::{Daemon, NetConfig};
 pub use queue::ShedPolicy;
 pub use report::ServeReport;
-
-use queue::{SharedQueue, Submission};
+pub use session::ServeSession;
 
 /// Pool configuration (the `[serve]` section of the run config).
 #[derive(Clone, Debug)]
@@ -112,53 +121,31 @@ impl Server {
         &self.cfg
     }
 
-    /// Serve a stream of jobs to completion: spin up the worker shards,
-    /// feed the admission queue (applying backpressure or shedding per
-    /// policy), drain, and aggregate. Jobs are admitted in order; they
-    /// complete in whatever order the shards and priorities dictate —
-    /// responses are re-sorted by job id.
+    /// Start a long-lived [`ServeSession`] with this pool shape — the
+    /// entry point for front-ends that submit over time instead of all at
+    /// once (the socket daemon, [`net::Daemon`], uses this).
+    pub fn session(&self) -> Result<ServeSession> {
+        ServeSession::start(self.cfg.clone())
+    }
+
+    /// Serve a finite stream of jobs to completion: start a session, feed
+    /// the admission queue (applying backpressure or shedding per policy),
+    /// drain, and aggregate. Jobs are admitted in order; they complete in
+    /// whatever order the shards and priorities dictate — responses are
+    /// re-sorted by job id.
     pub fn run(&self, jobs: Vec<FitRequest>) -> Result<ServeOutcome> {
-        let started = Instant::now();
-        let submitted = jobs.len() as u64;
-        let shared = SharedQueue::new(self.cfg.queue_capacity);
+        let session = self.session()?;
         let (tx, rx) = mpsc::channel::<FitResponse>();
-        let mut worker_stats = Vec::with_capacity(self.cfg.workers);
-
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..self.cfg.workers)
-                .map(|w| {
-                    let tx = tx.clone();
-                    let shared = &shared;
-                    let cfg = &self.cfg;
-                    scope.spawn(move || worker::run_worker(w, cfg, shared, &tx))
-                })
-                .collect();
-
-            for req in jobs {
-                match shared.submit(req, self.cfg.shed_policy) {
-                    Submission::Admitted => {}
-                    Submission::Shed { req, reason } => {
-                        let _ = tx.send(FitResponse::shed(req.id, reason, 0.0));
-                    }
-                }
-            }
-            shared.close();
-
-            for h in handles {
-                worker_stats.push(h.join().expect("serve worker panicked"));
-            }
-        });
+        for req in jobs {
+            session.submit(req, &tx);
+        }
         drop(tx);
-
+        // Every submitted job yields exactly one routed response; the
+        // channel disconnects once the last reply-sender clone leaves the
+        // route map, so this drains without knowing the count up front.
         let mut responses: Vec<FitResponse> = rx.iter().collect();
         responses.sort_by_key(|r| r.id);
-        let report = ServeReport::build(
-            submitted,
-            &responses,
-            &worker_stats,
-            shared.stats(),
-            started.elapsed().as_secs_f64(),
-        );
+        let report = session.shutdown();
         Ok(ServeOutcome { responses, report })
     }
 }

@@ -1,0 +1,804 @@
+//! The persistent socket front-end: `kpynq serve --listen`.
+//!
+//! PR 2's `kpynq serve` was a batch filter — drain stdin, answer, exit —
+//! so every client paid engine construction (and, on the XLA path, AOT
+//! compilation) per invocation. [`Daemon`] keeps one [`ServeSession`]
+//! alive behind a listener instead: concurrent TCP (and, on Unix,
+//! `unix:<path>` Unix-domain) connections all multiplex into the same
+//! admission queue and the same per-worker engine banks, so warm engines
+//! finally span *clients*, not just the requests of one stream.
+//!
+//! The wire format is the NDJSON job model `serve::job` already speaks —
+//! one `FitRequest` object per line in, one response line per job out —
+//! prefixed by a single server greeting line and with a handful of
+//! control frames (`ping`, `stats`, `bye`, `shutdown`). The protocol is
+//! specified normatively in PROTOCOL.md; this module implements it and
+//! cites it rather than restating it. Connection lifecycle and
+//! backpressure contracts live in DESIGN.md §2.
+//!
+//! Malformed lines never kill a connection, let alone the daemon: every
+//! frame the server cannot accept is answered with a structured error
+//! reply (PROTOCOL.md §5) and the session keeps reading. A client that
+//! disconnects mid-stream forfeits its undelivered responses (counted in
+//! the report) but leaves the pool untouched.
+//!
+//! ```no_run
+//! use kpynq::serve::net::{Daemon, NetConfig};
+//! use kpynq::serve::ServeConfig;
+//!
+//! let daemon = Daemon::bind("127.0.0.1:7071", NetConfig::default(),
+//!                           ServeConfig::default()).unwrap();
+//! println!("listening on {}", daemon.local_addr());
+//! let report = daemon.run().unwrap(); // blocks until {"op":"shutdown"}
+//! println!("{}", report.render());
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+use super::job::{FitRequest, FitResponse};
+use super::session::ServeSession;
+use super::{ServeConfig, ServeReport};
+
+/// Wire protocol revision this build speaks (PROTOCOL.md §1).
+pub const PROTO_VERSION: u64 = 1;
+
+/// Hard cap on one request line (PROTOCOL.md §2). Longer lines are
+/// answered with a structured error and discarded up to the next newline.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Read-timeout tick: how often a blocked connection reader wakes to check
+/// the shutdown flag and its idle budget.
+const READ_TICK: Duration = Duration::from_millis(50);
+/// Accept-poll tick for the (non-blocking) listener loop.
+const ACCEPT_TICK: Duration = Duration::from_millis(20);
+/// Writer-side timeout: a client that stops reading for this long has its
+/// responses dropped instead of wedging a worker-fed writer thread.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Listener configuration (the `[serve.net]` config section).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Simultaneous-connection cap; extras are refused with an error line.
+    pub max_conns: usize,
+    /// Close a connection that has sent no traffic and has no pending
+    /// responses for this many milliseconds. 0 disables the idle timeout.
+    pub idle_timeout_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self { max_conns: 32, idle_timeout_ms: 0 }
+    }
+}
+
+impl NetConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_conns == 0 {
+            return Err(Error::Config("serve.net max_conns must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+/// A bound listener: TCP (`host:port`) or, on Unix, `unix:<path>`.
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixListener, std::path::PathBuf),
+}
+
+/// One accept-poll outcome.
+enum Accepted {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+    Pending,
+}
+
+impl Listener {
+    fn set_nonblocking(&self) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(true),
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.set_nonblocking(true),
+        }
+    }
+
+    fn poll_accept(&self) -> io::Result<Accepted> {
+        let accepted = match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Accepted::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.accept().map(|(s, _)| Accepted::Unix(s)),
+        };
+        match accepted {
+            Ok(a) => Ok(a),
+            Err(e)
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::Interrupted) =>
+            {
+                Ok(Accepted::Pending)
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// The minimal stream surface both TCP and Unix-domain sockets provide;
+/// connection handling is generic over it.
+trait WireStream: Read + Write + Send + Sized + 'static {
+    fn try_clone_stream(&self) -> io::Result<Self>;
+    /// Force blocking mode: whether an accepted socket inherits the
+    /// listener's non-blocking flag is platform-dependent, and the read
+    /// loop's timeout ticks assume a blocking socket (a non-blocking one
+    /// would spin hot instead of sleeping up to `READ_TICK`).
+    fn set_blocking(&self) -> io::Result<()>;
+    fn set_read_timeout_dur(&self, d: Option<Duration>) -> io::Result<()>;
+    fn set_write_timeout_dur(&self, d: Option<Duration>) -> io::Result<()>;
+    fn shutdown_stream(&self);
+}
+
+impl WireStream for TcpStream {
+    fn try_clone_stream(&self) -> io::Result<Self> {
+        self.try_clone()
+    }
+    fn set_blocking(&self) -> io::Result<()> {
+        self.set_nonblocking(false)
+    }
+    fn set_read_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+    fn set_write_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_write_timeout(d)
+    }
+    fn shutdown_stream(&self) {
+        let _ = self.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+#[cfg(unix)]
+impl WireStream for std::os::unix::net::UnixStream {
+    fn try_clone_stream(&self) -> io::Result<Self> {
+        self.try_clone()
+    }
+    fn set_blocking(&self) -> io::Result<()> {
+        self.set_nonblocking(false)
+    }
+    fn set_read_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+    fn set_write_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_write_timeout(d)
+    }
+    fn shutdown_stream(&self) {
+        let _ = self.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Daemon-wide connection counters, folded into the final [`ServeReport`].
+#[derive(Debug, Default)]
+struct NetCounters {
+    accepted: AtomicU64,
+    active: AtomicUsize,
+    peak: AtomicUsize,
+    refused: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+/// Everything a connection handler needs a handle on.
+struct ConnCtx {
+    session: Arc<ServeSession>,
+    counters: Arc<NetCounters>,
+    shutdown: Arc<AtomicBool>,
+    net: NetConfig,
+}
+
+/// A bound-but-not-yet-running daemon. [`Daemon::run`] drives the accept
+/// loop to completion: it returns after a graceful drain — triggered by a
+/// client's `{"op":"shutdown"}` frame (PROTOCOL.md §6) or by
+/// [`DaemonHandle::shutdown`] — with the session's [`ServeReport`].
+pub struct Daemon {
+    listener: Listener,
+    net: NetConfig,
+    serve: ServeConfig,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// A cloneable remote control for a running daemon (the embedding test /
+/// bench equivalent of the on-wire `shutdown` frame).
+#[derive(Clone)]
+pub struct DaemonHandle {
+    shutdown: Arc<AtomicBool>,
+}
+
+impl DaemonHandle {
+    /// Begin a graceful drain: stop accepting, let connections finish
+    /// their pending replies, then shut the session down.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Daemon {
+    /// Bind the listener (`host:port`, or `unix:<path>` on Unix) and
+    /// validate both configs. Port 0 binds an ephemeral port — read it
+    /// back with [`Daemon::local_addr`]. A stale Unix socket *file* left
+    /// by a dead daemon is removed before binding; any other file type at
+    /// that path makes the bind fail rather than be deleted.
+    pub fn bind(addr: &str, net: NetConfig, serve: ServeConfig) -> Result<Daemon> {
+        net.validate()?;
+        serve.validate()?;
+        let listener = match addr.strip_prefix("unix:") {
+            Some(path) => bind_unix(path)?,
+            None => Listener::Tcp(TcpListener::bind(addr).map_err(|e| {
+                Error::Config(format!("cannot listen on '{addr}': {e}"))
+            })?),
+        };
+        Ok(Daemon { listener, net, serve, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The bound address, in the same notation `bind` accepts.
+    pub fn local_addr(&self) -> String {
+        match &self.listener {
+            Listener::Tcp(l) => l
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "<unknown>".into()),
+            #[cfg(unix)]
+            Listener::Unix(_, path) => format!("unix:{}", path.display()),
+        }
+    }
+
+    /// A handle that can trigger a graceful drain from another thread.
+    pub fn handle(&self) -> DaemonHandle {
+        DaemonHandle { shutdown: Arc::clone(&self.shutdown) }
+    }
+
+    /// The pool shape this daemon will serve with.
+    pub fn serve_config(&self) -> &ServeConfig {
+        &self.serve
+    }
+
+    /// Serve until shutdown: accept connections (refusing extras beyond
+    /// `max_conns`), multiplex them all into one shared [`ServeSession`],
+    /// and on the shutdown signal stop accepting, join every connection
+    /// (each drains its pending replies first), drain the pool and return
+    /// the session report with the connection counters folded in.
+    pub fn run(self) -> Result<ServeReport> {
+        let Daemon { listener, net, serve, shutdown } = self;
+        let session = Arc::new(ServeSession::start(serve)?);
+        let counters = Arc::new(NetCounters::default());
+        listener.set_nonblocking()?;
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+
+        while !shutdown.load(Ordering::SeqCst) {
+            match listener.poll_accept() {
+                // Transient accept failures — ECONNABORTED from a client
+                // that reset mid-handshake, EMFILE under fd pressure —
+                // must not kill a daemon holding live connections; back
+                // off one tick and keep serving.
+                Err(_) | Ok(Accepted::Pending) => std::thread::sleep(ACCEPT_TICK),
+                Ok(Accepted::Tcp(stream)) => {
+                    let _ = stream.set_nodelay(true);
+                    if let Some(h) = spawn_conn(stream, &session, &counters, &shutdown, &net) {
+                        conns.push(h);
+                    }
+                }
+                #[cfg(unix)]
+                Ok(Accepted::Unix(stream)) => {
+                    if let Some(h) = spawn_conn(stream, &session, &counters, &shutdown, &net) {
+                        conns.push(h);
+                    }
+                }
+            }
+            // Bound the handle list on long uptimes; finished threads are
+            // already joined-equivalent (dropping a finished handle is
+            // detach-after-exit).
+            if conns.len() > 64 {
+                conns.retain(|h| !h.is_finished());
+            }
+        }
+
+        for h in conns {
+            let _ = h.join();
+        }
+        match &listener {
+            #[cfg(unix)]
+            Listener::Unix(_, path) => {
+                let _ = std::fs::remove_file(path);
+            }
+            _ => {}
+        }
+        drop(listener);
+
+        let session = Arc::into_inner(session).expect("all connections joined");
+        let mut report = session.shutdown();
+        report.connections = counters.accepted.load(Ordering::SeqCst);
+        report.peak_connections = counters.peak.load(Ordering::SeqCst);
+        report.refused_connections = counters.refused.load(Ordering::SeqCst);
+        report.protocol_errors = counters.protocol_errors.load(Ordering::SeqCst);
+        Ok(report)
+    }
+}
+
+#[cfg(unix)]
+fn bind_unix(path: &str) -> Result<Listener> {
+    use std::os::unix::fs::FileTypeExt;
+    let path = std::path::PathBuf::from(path);
+    // Remove only a stale *socket* at the target path; a regular file or
+    // directory there is someone else's data and must fail the bind.
+    if let Ok(meta) = std::fs::metadata(&path) {
+        if meta.file_type().is_socket() {
+            std::fs::remove_file(&path)?;
+        }
+    }
+    let listener = std::os::unix::net::UnixListener::bind(&path)
+        .map_err(|e| Error::Config(format!("cannot listen on 'unix:{}': {e}", path.display())))?;
+    Ok(Listener::Unix(listener, path))
+}
+
+#[cfg(not(unix))]
+fn bind_unix(_path: &str) -> Result<Listener> {
+    Err(Error::Config("unix-domain listeners are only available on Unix platforms".into()))
+}
+
+/// Admit-or-refuse one accepted stream; on admit, spawn its handler.
+fn spawn_conn<S: WireStream>(
+    stream: S,
+    session: &Arc<ServeSession>,
+    counters: &Arc<NetCounters>,
+    shutdown: &Arc<AtomicBool>,
+    net: &NetConfig,
+) -> Option<std::thread::JoinHandle<()>> {
+    if counters.active.load(Ordering::SeqCst) >= net.max_conns {
+        counters.refused.fetch_add(1, Ordering::SeqCst);
+        let mut stream = stream;
+        let _ = stream.set_write_timeout_dur(Some(WRITE_TIMEOUT));
+        let _ = stream.write_all(
+            format!(
+                "{}\n",
+                error_reply(0, &format!("server at max connections ({})", net.max_conns))
+            )
+            .as_bytes(),
+        );
+        stream.shutdown_stream();
+        return None;
+    }
+    counters.accepted.fetch_add(1, Ordering::SeqCst);
+    let active = counters.active.fetch_add(1, Ordering::SeqCst) + 1;
+    counters.peak.fetch_max(active, Ordering::SeqCst);
+    let ctx = ConnCtx {
+        session: Arc::clone(session),
+        counters: Arc::clone(counters),
+        shutdown: Arc::clone(shutdown),
+        net: net.clone(),
+    };
+    Some(std::thread::spawn(move || {
+        handle_conn(stream, &ctx);
+        ctx.counters.active.fetch_sub(1, Ordering::SeqCst);
+    }))
+}
+
+/// Per-connection protocol loop. The reader (this thread) parses frames
+/// and submits jobs; a paired writer thread serializes routed responses
+/// back. Both write whole lines under one lock, so control replies and
+/// job responses interleave without tearing. Teardown — EOF, `bye`,
+/// idle timeout, read error or daemon shutdown — always drains pending
+/// responses before closing (PROTOCOL.md §2).
+fn handle_conn<S: WireStream>(stream: S, ctx: &ConnCtx) {
+    let _ = stream.set_blocking();
+    let _ = stream.set_read_timeout_dur(Some(READ_TICK));
+    let writer = match stream.try_clone_stream() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let _ = writer.set_write_timeout_dur(Some(WRITE_TIMEOUT));
+    let out = Arc::new(Mutex::new(writer));
+    let pending = Arc::new(AtomicUsize::new(0));
+
+    let _ = write_line(&out, &greeting(ctx));
+
+    let (resp_tx, resp_rx) = mpsc::channel::<FitResponse>();
+    let writer_thread = {
+        let out = Arc::clone(&out);
+        let pending = Arc::clone(&pending);
+        std::thread::spawn(move || {
+            for resp in resp_rx {
+                let _ = write_line(&out, &resp.to_json().to_string());
+                // Decrement even on write failure: the job is answered as
+                // far as the session is concerned, and the reader's drain
+                // must not wait on a dead peer.
+                pending.fetch_sub(1, Ordering::SeqCst);
+            }
+        })
+    };
+
+    let idle_limit =
+        (ctx.net.idle_timeout_ms > 0).then(|| Duration::from_millis(ctx.net.idle_timeout_ms));
+    let mut reader = LineReader::new(stream);
+    let mut last_activity = Instant::now();
+    let mut lineno = 0u64;
+    loop {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            break; // daemon draining: stop reading, deliver what's pending
+        }
+        match reader.next_event() {
+            LineEvent::Line(bytes) => {
+                lineno += 1;
+                last_activity = Instant::now();
+                if !handle_frame(&bytes, lineno, ctx, &out, &resp_tx, &pending) {
+                    break;
+                }
+            }
+            LineEvent::Oversized => {
+                lineno += 1;
+                last_activity = Instant::now();
+                proto_error(
+                    ctx,
+                    &out,
+                    lineno,
+                    &format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+                );
+            }
+            LineEvent::Tick => {
+                if let Some(limit) = idle_limit {
+                    if pending.load(Ordering::SeqCst) == 0 && last_activity.elapsed() >= limit {
+                        let mut m = BTreeMap::new();
+                        m.insert("op".to_string(), Json::Str("idle-timeout".into()));
+                        m.insert("idle_ms".to_string(), Json::Num(ctx.net.idle_timeout_ms as f64));
+                        let _ = write_line(&out, &Json::Obj(m).to_string());
+                        break;
+                    }
+                }
+            }
+            LineEvent::Eof | LineEvent::Error(_) => break,
+        }
+    }
+
+    // Drain: every submitted job produces exactly one routed response, so
+    // `pending` reaches zero once the session has answered them all (the
+    // writer decrements even when the peer is gone).
+    while pending.load(Ordering::SeqCst) > 0 {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    drop(resp_tx);
+    let _ = writer_thread.join();
+    reader.into_inner().shutdown_stream();
+}
+
+/// Dispatch one parsed-or-not frame; returns `false` when the connection
+/// should stop reading (`bye`, `shutdown`, handshake mismatch).
+fn handle_frame<S: WireStream>(
+    bytes: &[u8],
+    lineno: u64,
+    ctx: &ConnCtx,
+    out: &Mutex<S>,
+    resp_tx: &mpsc::Sender<FitResponse>,
+    pending: &AtomicUsize,
+) -> bool {
+    let text = match std::str::from_utf8(bytes) {
+        Ok(t) => t,
+        Err(_) => {
+            proto_error(ctx, out, lineno, "request line is not valid UTF-8");
+            return true;
+        }
+    };
+    let line = text.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return true; // blank lines and comments, as in the --jobs file format
+    }
+    let parsed = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            proto_error(ctx, out, lineno, &format!("malformed JSON: {e}"));
+            return true;
+        }
+    };
+    if let Json::Obj(map) = &parsed {
+        if map.contains_key("op") {
+            return control_frame(map, lineno, ctx, out, pending);
+        }
+        if map.contains_key("proto") && !map.contains_key("id") {
+            // Client handshake (PROTOCOL.md §2): optional, but if sent it
+            // must name a protocol revision this server speaks.
+            return match map.get("proto").map(|v| v.as_usize()) {
+                Some(Ok(v)) if v as u64 == PROTO_VERSION => true,
+                _ => {
+                    proto_error(
+                        ctx,
+                        out,
+                        lineno,
+                        &format!("unsupported protocol revision (server speaks {PROTO_VERSION})"),
+                    );
+                    false
+                }
+            };
+        }
+    }
+    match FitRequest::from_json(&parsed) {
+        Ok(req) => {
+            pending.fetch_add(1, Ordering::SeqCst);
+            ctx.session.submit(req, resp_tx);
+            true
+        }
+        Err(e) => {
+            proto_error(ctx, out, lineno, &e.to_string());
+            true
+        }
+    }
+}
+
+/// Handle a `{"op": ...}` control frame (PROTOCOL.md §6); returns `false`
+/// when the connection should stop reading.
+fn control_frame<S: WireStream>(
+    map: &BTreeMap<String, Json>,
+    lineno: u64,
+    ctx: &ConnCtx,
+    out: &Mutex<S>,
+    pending: &AtomicUsize,
+) -> bool {
+    let op = match map.get("op").map(|v| v.as_str()) {
+        Some(Ok(op)) => op,
+        _ => {
+            proto_error(ctx, out, lineno, "control frame 'op' must be a string");
+            return true;
+        }
+    };
+    match op {
+        "ping" => {
+            let mut m = BTreeMap::new();
+            m.insert("op".to_string(), Json::Str("pong".into()));
+            m.insert("proto".to_string(), Json::Num(PROTO_VERSION as f64));
+            let _ = write_line(out, &Json::Obj(m).to_string());
+            true
+        }
+        "stats" => {
+            let q = ctx.session.queue_stats();
+            let mut m = BTreeMap::new();
+            m.insert("op".to_string(), Json::Str("stats".into()));
+            m.insert("submitted".to_string(), Json::Num(ctx.session.submitted() as f64));
+            m.insert(
+                "connections".to_string(),
+                Json::Num(ctx.counters.accepted.load(Ordering::SeqCst) as f64),
+            );
+            m.insert(
+                "active_conns".to_string(),
+                Json::Num(ctx.counters.active.load(Ordering::SeqCst) as f64),
+            );
+            m.insert("pending_here".to_string(), Json::Num(pending.load(Ordering::SeqCst) as f64));
+            m.insert("shed_full".to_string(), Json::Num(q.shed_full as f64));
+            m.insert("shed_deadline".to_string(), Json::Num(q.shed_deadline as f64));
+            m.insert("peak_queue_depth".to_string(), Json::Num(q.peak_depth as f64));
+            let _ = write_line(out, &Json::Obj(m).to_string());
+            true
+        }
+        "bye" => false, // drain pending replies, then close this connection
+        "shutdown" => {
+            let mut m = BTreeMap::new();
+            m.insert("op".to_string(), Json::Str("shutdown-ack".into()));
+            let _ = write_line(out, &Json::Obj(m).to_string());
+            ctx.shutdown.store(true, Ordering::SeqCst);
+            false
+        }
+        other => {
+            proto_error(ctx, out, lineno, &format!("unknown op '{other}'"));
+            true
+        }
+    }
+}
+
+/// The server greeting (PROTOCOL.md §2): the first line on every
+/// connection, announcing the protocol revision and pool capabilities.
+fn greeting(ctx: &ConnCtx) -> String {
+    let cfg = ctx.session.config();
+    let mut m = BTreeMap::new();
+    m.insert("kpynq".to_string(), Json::Str("serve".into()));
+    m.insert("proto".to_string(), Json::Num(PROTO_VERSION as f64));
+    m.insert("version".to_string(), Json::Str(env!("CARGO_PKG_VERSION").into()));
+    m.insert("workers".to_string(), Json::Num(cfg.workers as f64));
+    m.insert("max_batch".to_string(), Json::Num(cfg.max_batch as f64));
+    m.insert("max_line_bytes".to_string(), Json::Num(MAX_LINE_BYTES as f64));
+    // Only backends this *build* can actually execute (PROTOCOL.md §2):
+    // without the `xla` cargo feature the engine is a stub whose
+    // construction errors, so advertising it would invite guaranteed-to-
+    // fail jobs.
+    let mut backends = vec![Json::Str("fpga-sim".into()), Json::Str("native".into())];
+    if cfg!(feature = "xla") {
+        backends.push(Json::Str("xla".into()));
+    }
+    m.insert("backends".to_string(), Json::Arr(backends));
+    Json::Obj(m).to_string()
+}
+
+/// Structured protocol-error reply (PROTOCOL.md §5).
+fn error_reply(lineno: u64, msg: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("status".to_string(), Json::Str("error".into()));
+    m.insert("error".to_string(), Json::Str(msg.into()));
+    if lineno > 0 {
+        m.insert("line".to_string(), Json::Num(lineno as f64));
+    }
+    Json::Obj(m).to_string()
+}
+
+fn proto_error<S: WireStream>(ctx: &ConnCtx, out: &Mutex<S>, lineno: u64, msg: &str) {
+    ctx.counters.protocol_errors.fetch_add(1, Ordering::SeqCst);
+    let _ = write_line(out, &error_reply(lineno, msg));
+}
+
+/// Write one full protocol line under the connection's writer lock.
+fn write_line<S: Write>(out: &Mutex<S>, line: &str) -> io::Result<()> {
+    let mut w = out.lock().expect("connection writer lock poisoned");
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// One step of the connection read loop.
+enum LineEvent {
+    /// A complete line (without its terminator).
+    Line(Vec<u8>),
+    /// A line exceeded [`MAX_LINE_BYTES`]; its bytes are being discarded
+    /// up to the next newline.
+    Oversized,
+    /// The read timeout elapsed with no data — time to check the shutdown
+    /// flag and the idle budget.
+    Tick,
+    Eof,
+    Error(io::Error),
+}
+
+/// Incremental, bounded line reader over a timeout-ticking stream.
+/// `BufReader::read_line` can neither bound a hostile line's memory nor
+/// surface timeout ticks mid-line, so the accumulation is explicit here.
+struct LineReader<S: Read> {
+    stream: S,
+    acc: Vec<u8>,
+    discarding: bool,
+}
+
+impl<S: Read> LineReader<S> {
+    fn new(stream: S) -> Self {
+        Self { stream, acc: Vec::new(), discarding: false }
+    }
+
+    fn into_inner(self) -> S {
+        self.stream
+    }
+
+    fn next_event(&mut self) -> LineEvent {
+        loop {
+            if let Some(i) = self.acc.iter().position(|&b| b == b'\n') {
+                let rest = self.acc.split_off(i + 1);
+                let mut line = std::mem::replace(&mut self.acc, rest);
+                line.pop(); // the newline
+                if self.discarding {
+                    // Tail of an oversized line: drop it and resume normal
+                    // framing from the next line.
+                    self.discarding = false;
+                    continue;
+                }
+                if line.len() > MAX_LINE_BYTES {
+                    return LineEvent::Oversized; // complete, but too long
+                }
+                return LineEvent::Line(line);
+            }
+            if self.discarding {
+                self.acc.clear(); // bound memory while hunting the newline
+            } else if self.acc.len() > MAX_LINE_BYTES {
+                self.discarding = true;
+                self.acc.clear();
+                return LineEvent::Oversized;
+            }
+            let mut buf = [0u8; 4096];
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    // A final line without its terminator still counts (a
+                    // `printf` without `\n` followed by EOF); discarded
+                    // oversize tails do not.
+                    if self.acc.is_empty() || self.discarding {
+                        return LineEvent::Eof;
+                    }
+                    return LineEvent::Line(std::mem::take(&mut self.acc));
+                }
+                Ok(n) => self.acc.extend_from_slice(&buf[..n]),
+                Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                    return LineEvent::Tick
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return LineEvent::Error(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A scripted reader: each entry is either bytes to deliver or a
+    /// would-block tick.
+    struct Script(Vec<Option<Vec<u8>>>);
+
+    impl Read for Script {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            match self.0.pop() {
+                None => Ok(0), // EOF
+                Some(None) => Err(io::Error::new(io::ErrorKind::WouldBlock, "tick")),
+                Some(Some(mut bytes)) => {
+                    let n = bytes.len().min(buf.len());
+                    buf[..n].copy_from_slice(&bytes[..n]);
+                    if n < bytes.len() {
+                        // Hand the remainder back as the next read.
+                        self.0.push(Some(bytes.split_off(n)));
+                    }
+                    Ok(n)
+                }
+            }
+        }
+    }
+
+    fn reader(script: Vec<Option<&[u8]>>) -> LineReader<Script> {
+        LineReader::new(Script(
+            script.into_iter().rev().map(|e| e.map(|b| b.to_vec())).collect(),
+        ))
+    }
+
+    #[test]
+    fn line_reader_splits_and_reassembles_partial_lines() {
+        let mut r = reader(vec![Some(&b"{\"id\""[..]), Some(&b":1}\n{\"id\":2}\n"[..])]);
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"{\"id\":1}"));
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"{\"id\":2}"));
+        assert!(matches!(r.next_event(), LineEvent::Eof));
+    }
+
+    #[test]
+    fn line_reader_surfaces_ticks_between_chunks() {
+        let mut r = reader(vec![None, Some(&b"x\n"[..]), None]);
+        assert!(matches!(r.next_event(), LineEvent::Tick));
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"x"));
+        assert!(matches!(r.next_event(), LineEvent::Tick));
+        assert!(matches!(r.next_event(), LineEvent::Eof));
+    }
+
+    #[test]
+    fn line_reader_discards_oversized_lines_and_recovers() {
+        let big = vec![b'a'; MAX_LINE_BYTES + 4096];
+        let mut r = reader(vec![Some(&big[..]), Some(&b"bbb\nok\n"[..])]);
+        assert!(matches!(r.next_event(), LineEvent::Oversized));
+        // The giant line's tail ("bbb\n") is swallowed; framing resumes at
+        // the next line.
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"ok"));
+        assert!(matches!(r.next_event(), LineEvent::Eof));
+    }
+
+    #[test]
+    fn line_reader_yields_an_unterminated_final_line() {
+        let mut r = reader(vec![Some(&b"a\nb"[..])]);
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"a"));
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"b"));
+        assert!(matches!(r.next_event(), LineEvent::Eof));
+    }
+
+    #[test]
+    fn net_config_validates() {
+        NetConfig::default().validate().unwrap();
+        assert!(NetConfig { max_conns: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn error_reply_shape_is_parseable() {
+        let j = Json::parse(&error_reply(3, "malformed JSON: oops")).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str().unwrap(), "error");
+        assert_eq!(j.get("line").unwrap().as_usize().unwrap(), 3);
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("oops"));
+        // Line 0 (pre-session refusals) omits the line key.
+        assert!(Json::parse(&error_reply(0, "busy")).unwrap().get("line").is_err());
+    }
+}

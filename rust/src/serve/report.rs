@@ -1,12 +1,18 @@
 //! Aggregated serving telemetry: what the pool did, how long tenants
 //! waited, and where the engine time went.
 //!
-//! A [`ServeReport`] is built once per `Server::run` from three sources:
+//! A [`ServeReport`] is built once per serving session from three sources:
 //! the per-job [`FitResponse`]s (latency distribution, per-backend
 //! `coordinator::telemetry::RunReport` aggregation), the per-worker
 //! counters (busy time, batch sizes) and the admission queue's shed/depth
-//! counters. It renders as a paste-ready table (`util::bench::Table`),
-//! the same surface the paper-figure benches use.
+//! counters. Responses are folded in *streaming* by a
+//! `ResponseAccumulator` (crate-private) — the session router observes
+//! each response as it is delivered, so a long-lived daemon (`serve::net`)
+//! never has to
+//! retain the full response history to report on it. The daemon folds its
+//! connection counters ([`ServeReport::connections`] and friends) in on
+//! top. It renders as a paste-ready table (`util::bench::Table`), the
+//! same surface the paper-figure benches use.
 
 use std::collections::BTreeMap;
 
@@ -53,10 +59,103 @@ pub struct ServeReport {
     /// End-to-end session wall-clock.
     pub wall_seconds: f64,
     /// Tenant-observed latency (queue + service) over completed jobs.
+    /// All three are 0.0 (not NaN) for a session that completed nothing —
+    /// daemon sessions can drain with every job shed or no traffic at all.
     pub p50_latency_ms: f64,
     pub p95_latency_ms: f64,
     pub max_latency_ms: f64,
     pub per_backend: Vec<BackendUtilization>,
+    /// Client connections accepted over a daemon's lifetime (`serve::net`;
+    /// 0 in batch mode).
+    pub connections: u64,
+    /// Highest simultaneous connection count (daemon mode).
+    pub peak_connections: usize,
+    /// Connections refused at the `max_conns` cap (daemon mode).
+    pub refused_connections: u64,
+    /// Wire frames answered with a protocol-error reply (malformed JSON,
+    /// unknown keys, oversized lines, bad handshakes — PROTOCOL.md §5).
+    pub protocol_errors: u64,
+    /// Responses whose submitter had disconnected before delivery.
+    pub dropped_replies: u64,
+}
+
+/// Streaming fold of [`FitResponse`]s into report form. The session's
+/// response router observes every response exactly once on its way to the
+/// submitter; [`ResponseAccumulator::into_report`] then joins the fold
+/// with the worker/queue counters.
+#[derive(Debug, Default)]
+pub(crate) struct ResponseAccumulator {
+    completed: u64,
+    failed: u64,
+    shed: u64,
+    latencies_ms: Vec<f64>,
+    by_backend: BTreeMap<String, BackendUtilization>,
+    dropped_replies: u64,
+}
+
+impl ResponseAccumulator {
+    pub(crate) fn observe(&mut self, resp: &FitResponse) {
+        match resp.status {
+            JobStatus::Ok => {
+                self.completed += 1;
+                self.latencies_ms.push(resp.latency_seconds() * 1e3);
+                if let Some(rep) = &resp.report {
+                    let u = self.by_backend.entry(rep.backend.clone()).or_insert_with(|| {
+                        BackendUtilization { backend: rep.backend.clone(), ..Default::default() }
+                    });
+                    u.jobs += 1;
+                    u.fit_seconds += rep.wall_seconds;
+                    u.total_cycles += rep.total_cycles;
+                    u.tiles_dispatched += rep.tiles_dispatched;
+                    u.points_rescanned += rep.points_rescanned;
+                }
+            }
+            JobStatus::Shed => self.shed += 1,
+            JobStatus::Failed => self.failed += 1,
+        }
+    }
+
+    pub(crate) fn count_dropped_reply(&mut self) {
+        self.dropped_replies += 1;
+    }
+
+    pub(crate) fn into_report(
+        self,
+        submitted: u64,
+        workers: &[WorkerStats],
+        queue: QueueStats,
+        wall_seconds: f64,
+    ) -> ServeReport {
+        let mut r = ServeReport {
+            submitted,
+            wall_seconds,
+            workers: workers.len(),
+            completed: self.completed,
+            failed: self.failed,
+            shed: self.shed,
+            shed_full: queue.shed_full,
+            shed_deadline: queue.shed_deadline,
+            peak_queue_depth: queue.peak_depth,
+            dropped_replies: self.dropped_replies,
+            per_backend: self.by_backend.into_values().collect(),
+            ..Default::default()
+        };
+        for w in workers {
+            r.batches += w.batches;
+            r.max_batch = r.max_batch.max(w.max_batch);
+            r.batched_jobs += w.batched_jobs;
+            r.busy_seconds += w.busy_seconds;
+        }
+        // An idle daemon window completes nothing; `util::stats::percentile`
+        // returns NaN on empty input, so the empty window must short-circuit
+        // to the 0.0 defaults (pinned by `empty_accumulator_reports_zeros`).
+        if !self.latencies_ms.is_empty() {
+            r.p50_latency_ms = percentile(&self.latencies_ms, 50.0);
+            r.p95_latency_ms = percentile(&self.latencies_ms, 95.0);
+            r.max_latency_ms = self.latencies_ms.iter().cloned().fold(0.0f64, f64::max);
+        }
+        r
+    }
 }
 
 impl ServeReport {
@@ -67,50 +166,11 @@ impl ServeReport {
         queue: QueueStats,
         wall_seconds: f64,
     ) -> ServeReport {
-        let mut r = ServeReport {
-            submitted,
-            wall_seconds,
-            workers: workers.len(),
-            shed_full: queue.shed_full,
-            shed_deadline: queue.shed_deadline,
-            peak_queue_depth: queue.peak_depth,
-            ..Default::default()
-        };
-        let mut latencies = Vec::new();
-        let mut by_backend: BTreeMap<String, BackendUtilization> = BTreeMap::new();
+        let mut acc = ResponseAccumulator::default();
         for resp in responses {
-            match resp.status {
-                JobStatus::Ok => {
-                    r.completed += 1;
-                    latencies.push(resp.latency_seconds() * 1e3);
-                    if let Some(rep) = &resp.report {
-                        let u = by_backend.entry(rep.backend.clone()).or_insert_with(|| {
-                            BackendUtilization { backend: rep.backend.clone(), ..Default::default() }
-                        });
-                        u.jobs += 1;
-                        u.fit_seconds += rep.wall_seconds;
-                        u.total_cycles += rep.total_cycles;
-                        u.tiles_dispatched += rep.tiles_dispatched;
-                        u.points_rescanned += rep.points_rescanned;
-                    }
-                }
-                JobStatus::Shed => r.shed += 1,
-                JobStatus::Failed => r.failed += 1,
-            }
+            acc.observe(resp);
         }
-        for w in workers {
-            r.batches += w.batches;
-            r.max_batch = r.max_batch.max(w.max_batch);
-            r.batched_jobs += w.batched_jobs;
-            r.busy_seconds += w.busy_seconds;
-        }
-        if !latencies.is_empty() {
-            r.p50_latency_ms = percentile(&latencies, 50.0);
-            r.p95_latency_ms = percentile(&latencies, 95.0);
-            r.max_latency_ms = latencies.iter().cloned().fold(0.0f64, f64::max);
-        }
-        r.per_backend = by_backend.into_values().collect();
-        r
+        acc.into_report(submitted, workers, queue, wall_seconds)
     }
 
     /// Completed jobs per wall-clock second.
@@ -159,6 +219,17 @@ impl ServeReport {
             self.p95_latency_ms,
             self.max_latency_ms,
         );
+        if self.connections > 0 || self.refused_connections > 0 || self.protocol_errors > 0 {
+            out.push_str(&format!(
+                "net: {} connections (peak {}, {} refused) | {} protocol errors | \
+                 {} undeliverable replies\n",
+                self.connections,
+                self.peak_connections,
+                self.refused_connections,
+                self.protocol_errors,
+                self.dropped_replies,
+            ));
+        }
         if !self.per_backend.is_empty() {
             let mut t = Table::new(&[
                 "backend",
@@ -263,5 +334,61 @@ mod tests {
         assert_eq!(r.throughput_jobs_per_sec(), 0.0);
         assert_eq!(r.pool_utilization(), 0.0);
         assert_eq!(r.p50_latency_ms, 0.0);
+    }
+
+    #[test]
+    fn empty_accumulator_reports_zeros() {
+        // An idle daemon window: responses observed = 0. The percentile
+        // helper returns NaN on empty input; the report must not leak it.
+        let acc = ResponseAccumulator::default();
+        let r = acc.into_report(0, &[], QueueStats::default(), 1.0);
+        assert_eq!(r.p50_latency_ms, 0.0);
+        assert_eq!(r.p95_latency_ms, 0.0);
+        assert_eq!(r.max_latency_ms, 0.0);
+        assert!(!r.p50_latency_ms.is_nan());
+    }
+
+    #[test]
+    fn single_sample_window_reports_that_sample() {
+        // A daemon window with exactly one completed job: every percentile
+        // is that one latency (nearest-rank on a singleton).
+        let mut acc = ResponseAccumulator::default();
+        acc.observe(&ok_response(1, "native", 0.010, 0.090));
+        let r = acc.into_report(1, &[], QueueStats::default(), 0.1);
+        assert!((r.p50_latency_ms - 100.0).abs() < 1e-9);
+        assert!((r.p95_latency_ms - 100.0).abs() < 1e-9);
+        assert!((r.max_latency_ms - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn streaming_accumulator_matches_batch_build() {
+        let responses = vec![
+            ok_response(1, "native", 0.010, 0.090),
+            ok_response(2, "fpga-sim", 0.0, 0.2),
+            FitResponse::shed(3, "queue full", 0.001),
+        ];
+        let batch = ServeReport::build(3, &responses, &[], QueueStats::default(), 0.5);
+        let mut acc = ResponseAccumulator::default();
+        for resp in &responses {
+            acc.observe(resp);
+        }
+        let streamed = acc.into_report(3, &[], QueueStats::default(), 0.5);
+        assert_eq!(batch.completed, streamed.completed);
+        assert_eq!(batch.shed, streamed.shed);
+        assert_eq!(batch.p50_latency_ms, streamed.p50_latency_ms);
+        assert_eq!(batch.p95_latency_ms, streamed.p95_latency_ms);
+        assert_eq!(batch.per_backend.len(), streamed.per_backend.len());
+    }
+
+    #[test]
+    fn net_counters_render_only_for_daemon_sessions() {
+        let mut r = ServeReport::build(0, &[], &[], QueueStats::default(), 0.0);
+        assert!(!r.render().contains("net:"), "batch sessions have no net line");
+        r.connections = 3;
+        r.peak_connections = 2;
+        r.protocol_errors = 1;
+        let text = r.render();
+        assert!(text.contains("net: 3 connections (peak 2, 0 refused)"), "{text}");
+        assert!(text.contains("1 protocol errors"), "{text}");
     }
 }

@@ -1,0 +1,305 @@
+//! The long-lived serving session: the shared core every front-end drives.
+//!
+//! PR 2's `Server::run` was batch-shaped — submit a finite job vector,
+//! close, drain, report. A persistent daemon cannot work that way: jobs
+//! arrive from many connections over an unbounded lifetime, and each
+//! response must find its way back to the connection that submitted it.
+//! [`ServeSession`] is the refactor that serves both shapes:
+//!
+//! * **One shared pool.** The session owns the admission queue and the
+//!   sharded, engine-bank-owning worker pool for its whole lifetime, so
+//!   engine construction / AOT compilation amortizes across *every*
+//!   submitter — concurrent socket clients included — not just across the
+//!   requests of one stdin stream (DESIGN.md §2).
+//! * **Ticket-based response routing.** Client-chosen job ids are only
+//!   unique per submitter (two socket clients may both send `id: 1`), so
+//!   [`ServeSession::submit`] remaps each request onto a session-unique
+//!   ticket, remembers `(ticket → client id, reply channel)`, and a router
+//!   thread rewrites ids back as it delivers responses. Workers never see
+//!   client ids.
+//! * **Streaming accounting.** The router folds every response into a
+//!   `report::ResponseAccumulator` as it passes through, so the session
+//!   can report p50/p95 latency and per-backend utilization without
+//!   retaining response history — a daemon may serve millions of jobs
+//!   before [`ServeSession::shutdown`] builds the final [`ServeReport`].
+//!
+//! `Server::run` (batch mode) and `serve::net::Daemon` (socket mode) are
+//! both thin front-ends over this type.
+//!
+//! ```no_run
+//! use std::sync::mpsc;
+//! use kpynq::serve::session::ServeSession;
+//! use kpynq::serve::{FitRequest, ServeConfig};
+//!
+//! let session = ServeSession::start(ServeConfig::default()).unwrap();
+//! let (tx, rx) = mpsc::channel();
+//! session.submit(FitRequest { id: 7, max_points: 1_000, ..Default::default() }, &tx);
+//! let resp = rx.recv().unwrap();
+//! println!("job {} -> {}", resp.id, resp.status.name());
+//! println!("{}", session.shutdown().render());
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::error::Result;
+
+use super::job::{FitRequest, FitResponse};
+use super::queue::{QueueStats, SharedQueue, Submission};
+use super::report::{ResponseAccumulator, ServeReport};
+use super::worker::{self, WorkerStats};
+use super::ServeConfig;
+
+/// Where one in-flight job's response must be delivered.
+struct Route {
+    /// The id the submitter chose (restored onto the response).
+    client_id: u64,
+    reply: mpsc::Sender<FitResponse>,
+}
+
+/// A running serving pool: admission queue + sharded workers + response
+/// router. Construct with [`ServeSession::start`], feed with
+/// [`ServeSession::submit`], and finish with [`ServeSession::shutdown`]
+/// (which drains queued work and returns the session [`ServeReport`]).
+///
+/// Dropping a session without calling `shutdown` closes the queue so the
+/// worker threads exit on their own, but detaches them and loses the
+/// report — front-ends should always shut down explicitly.
+pub struct ServeSession {
+    cfg: ServeConfig,
+    queue: Arc<SharedQueue>,
+    routes: Arc<Mutex<HashMap<u64, Route>>>,
+    next_ticket: AtomicU64,
+    submitted: AtomicU64,
+    /// Feeds shed-at-admission responses through the router so they get
+    /// the same id-restoration and accounting as worker responses.
+    tx: Option<mpsc::Sender<FitResponse>>,
+    workers: Vec<JoinHandle<WorkerStats>>,
+    router: Option<JoinHandle<ResponseAccumulator>>,
+    started: Instant,
+}
+
+impl ServeSession {
+    /// Validate the config, spin up the worker shards and the response
+    /// router, and return the live session.
+    pub fn start(cfg: ServeConfig) -> Result<ServeSession> {
+        cfg.validate()?;
+        let queue = Arc::new(SharedQueue::new(cfg.queue_capacity));
+        let routes: Arc<Mutex<HashMap<u64, Route>>> = Arc::new(Mutex::new(HashMap::new()));
+        let (tx, rx) = mpsc::channel::<FitResponse>();
+        let workers = (0..cfg.workers)
+            .map(|w| {
+                let cfg = cfg.clone();
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                std::thread::spawn(move || worker::run_worker(w, &cfg, &queue, &tx))
+            })
+            .collect();
+        let router = {
+            let routes = Arc::clone(&routes);
+            std::thread::spawn(move || route_responses(rx, &routes))
+        };
+        Ok(ServeSession {
+            cfg,
+            queue,
+            routes,
+            next_ticket: AtomicU64::new(1),
+            submitted: AtomicU64::new(0),
+            tx: Some(tx),
+            workers,
+            router: Some(router),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Jobs submitted so far (admitted or shed — every one gets exactly
+    /// one response).
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// Live snapshot of the admission queue's counters (the `stats`
+    /// control frame surfaces this on the wire — PROTOCOL.md §6).
+    pub fn queue_stats(&self) -> QueueStats {
+        self.queue.stats()
+    }
+
+    /// Submit one job. The response — `ok`, `failed` or `shed` — arrives
+    /// on `reply` with the request's own id restored; returns `false` when
+    /// the job was shed at admission (the shed response is still
+    /// delivered). Blocks only under `ShedPolicy::Block` with a full
+    /// queue — this is the backpressure a socket connection propagates to
+    /// its client (DESIGN.md §2).
+    pub fn submit(&self, req: FitRequest, reply: &mpsc::Sender<FitResponse>) -> bool {
+        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        let client_id = req.id;
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.routes
+            .lock()
+            .expect("route map poisoned")
+            .insert(ticket, Route { client_id, reply: reply.clone() });
+        let mut req = req;
+        req.id = ticket;
+        match self.queue.submit(req, self.cfg.shed_policy) {
+            Submission::Admitted => true,
+            Submission::Shed { req, reason } => {
+                // Route the shed response like any other so the submitter
+                // sees its own id and the accumulator counts the shed.
+                let tx = self.tx.as_ref().expect("session is live until shutdown");
+                let _ = tx.send(FitResponse::shed(req.id, reason, 0.0));
+                false
+            }
+        }
+    }
+
+    /// Stop admitting, drain queued work, join the pool and the router,
+    /// and aggregate the session's [`ServeReport`]. In-flight jobs still
+    /// deliver their responses before this returns.
+    pub fn shutdown(mut self) -> ServeReport {
+        self.queue.close();
+        let mut worker_stats = Vec::with_capacity(self.workers.len());
+        for h in self.workers.drain(..) {
+            worker_stats.push(h.join().expect("serve worker panicked"));
+        }
+        // Workers are done sending; dropping our feeder disconnects the
+        // router's channel once the last queued response is delivered.
+        drop(self.tx.take());
+        let acc = self
+            .router
+            .take()
+            .expect("shutdown is called at most once")
+            .join()
+            .expect("serve router panicked");
+        acc.into_report(
+            self.submitted.load(Ordering::Relaxed),
+            &worker_stats,
+            self.queue.stats(),
+            self.started.elapsed().as_secs_f64(),
+        )
+    }
+}
+
+impl Drop for ServeSession {
+    fn drop(&mut self) {
+        // `shutdown` drains `workers` and takes `router`; if the session
+        // is dropped without it, closing the queue lets the (now detached)
+        // worker threads exit instead of blocking forever on the condvar.
+        self.queue.close();
+    }
+}
+
+/// Router main loop: restore client ids, deliver, accumulate. Responses
+/// whose submitter has gone (a disconnected socket client) are counted,
+/// not delivered — the job's engine time was already spent.
+fn route_responses(
+    rx: mpsc::Receiver<FitResponse>,
+    routes: &Mutex<HashMap<u64, Route>>,
+) -> ResponseAccumulator {
+    let mut acc = ResponseAccumulator::default();
+    for mut resp in rx {
+        acc.observe(&resp);
+        let route = routes.lock().expect("route map poisoned").remove(&resp.id);
+        match route {
+            Some(Route { client_id, reply }) => {
+                resp.id = client_id;
+                if reply.send(resp).is_err() {
+                    acc.count_dropped_reply();
+                }
+            }
+            // Unroutable: every submission registers its route before the
+            // queue can pop it, so this indicates a front-end bug.
+            None => acc.count_dropped_reply(),
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::KMeansConfig;
+    use crate::serve::JobStatus;
+
+    fn job(id: u64, seed: u64) -> FitRequest {
+        FitRequest {
+            id,
+            max_points: 400,
+            kmeans: KMeansConfig { k: 3, seed, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn colliding_client_ids_route_to_their_own_submitters() {
+        // Two "connections" both submit id 5 — the daemon's routing
+        // problem in miniature. Each reply channel must get exactly one
+        // response, with id 5 restored, carrying its own clustering.
+        let session = ServeSession::start(ServeConfig { workers: 2, ..Default::default() })
+            .unwrap();
+        let (tx_a, rx_a) = mpsc::channel();
+        let (tx_b, rx_b) = mpsc::channel();
+        session.submit(job(5, 111), &tx_a);
+        session.submit(job(5, 222), &tx_b);
+        let a = rx_a.recv().unwrap();
+        let b = rx_b.recv().unwrap();
+        assert_eq!(a.id, 5);
+        assert_eq!(b.id, 5);
+        assert_eq!(a.status, JobStatus::Ok, "{}", a.detail);
+        assert_eq!(b.status, JobStatus::Ok, "{}", b.detail);
+        // Different seeds → different clusterings: proof the responses
+        // were not cross-delivered.
+        assert_ne!(
+            a.fit.as_ref().unwrap().assignments,
+            b.fit.as_ref().unwrap().assignments
+        );
+        assert!(rx_a.try_recv().is_err(), "exactly one response per submitter");
+        let report = session.shutdown();
+        assert_eq!(report.submitted, 2);
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.dropped_replies, 0);
+    }
+
+    #[test]
+    fn responses_to_departed_submitters_are_counted_not_lost() {
+        let session = ServeSession::start(ServeConfig { workers: 1, ..Default::default() })
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        drop(rx); // the "connection" goes away before its job completes
+        session.submit(job(1, 7), &tx);
+        let report = session.shutdown();
+        assert_eq!(report.completed, 1, "the job still ran");
+        assert_eq!(report.dropped_replies, 1, "...but had nowhere to go");
+    }
+
+    #[test]
+    fn shed_at_admission_is_routed_with_the_client_id() {
+        let session = ServeSession::start(ServeConfig { workers: 1, ..Default::default() })
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let mut dead = job(42, 1);
+        dead.deadline_ms = Some(0); // sheds at pop, inside the session
+        session.submit(dead, &tx);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 42);
+        assert_eq!(resp.status, JobStatus::Shed);
+        let report = session.shutdown();
+        assert_eq!(report.shed, 1);
+    }
+
+    #[test]
+    fn idle_session_reports_cleanly() {
+        let session = ServeSession::start(ServeConfig::default()).unwrap();
+        let report = session.shutdown();
+        assert_eq!(report.submitted, 0);
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.p50_latency_ms, 0.0, "idle window must not leak NaN");
+        assert_eq!(report.workers, 2);
+    }
+}

@@ -68,23 +68,36 @@ pub fn geomean(xs: &[f64]) -> f64 {
 /// even-length input `percentile(xs, 50.0)` is the lower-middle element,
 /// not [`median`]'s interpolated value. Serving latency reports use
 /// p50/p95.
+///
+/// Edge behavior, pinned by `percentile_window_edges` (these windows are
+/// routine for an idle `serve::net` daemon, not corner cases):
+///
+/// * **empty input** → NaN — there is no latency to report; aggregators
+///   like `serve::ServeReport` must guard and substitute their zero
+///   default rather than propagate NaN onto a wire surface;
+/// * **single sample** → that sample, for every `p` (including 0 and 100);
+/// * `p` outside 0..=100 clamps to the extreme elements;
+/// * NaN *elements* sort last (`f64::total_cmp`) instead of panicking —
+///   a poisoned sample can skew a tail percentile but never abort a
+///   report build mid-session.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
     v[rank.clamp(1, v.len()) - 1]
 }
 
-/// Median (copies + sorts; fine for report-sized inputs).
+/// Median (copies + sorts; fine for report-sized inputs). Empty input →
+/// NaN; NaN elements sort last rather than panicking (see [`percentile`]).
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let mid = v.len() / 2;
     if v.len() % 2 == 0 {
         (v[mid - 1] + v[mid]) / 2.0
@@ -132,5 +145,35 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&[7.0], 95.0), 7.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_window_edges() {
+        // Empty window (an idle daemon reporting period): NaN, for every p.
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            assert!(percentile(&[], p).is_nan());
+        }
+        // Single-sample window: that sample, for every p.
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile(&[3.25], p), 3.25);
+        }
+        // Two samples: p50 is the lower element (nearest rank, not the
+        // interpolated median), p95 the upper.
+        assert_eq!(percentile(&[10.0, 20.0], 50.0), 10.0);
+        assert_eq!(percentile(&[10.0, 20.0], 95.0), 20.0);
+        assert_eq!(median(&[10.0, 20.0]), 15.0);
+        // Out-of-range p clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], -10.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], 150.0), 3.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_the_sort() {
+        // total_cmp sorts NaN after every number: the finite percentiles
+        // stay sane and nothing aborts mid-report.
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert_eq!(median(&[1.0, f64::NAN, 2.0]), 2.0);
     }
 }

@@ -123,6 +123,38 @@ fn expired_deadlines_shed_instead_of_executing() {
 }
 
 #[test]
+fn protocol_edge_lines_fail_loudly_without_panicking() {
+    // Table of malformed NDJSON job lines (the parser half of PROTOCOL.md
+    // §5's error-reply contract; the wire half lives in serve_net.rs).
+    // Every entry must produce an Err — never a panic, never a silently
+    // defaulted job — and mention the offending fragment.
+    let cases: Vec<(&str, &str)> = vec![
+        ("", "unexpected character"),
+        ("not json at all", "invalid literal"),
+        (r#"{"id": 1,}"#, "expected"),
+        (r#"{"id": 1"#, "expected"),
+        (r#"[{"id": 1}]"#, "must be a JSON object"),
+        (r#""just a string""#, "must be a JSON object"),
+        (r#"{"dataset": "blobs"}"#, "missing key 'id'"),
+        (r#"{"id": -3}"#, "expected non-negative integer"),
+        (r#"{"id": 1.5}"#, "expected non-negative integer"),
+        (r#"{"id": 1, "k": "many"}"#, "expected number"),
+        (r#"{"id": 1, "deadline_ms": -20}"#, "expected non-negative integer"),
+        (r#"{"id": 1, "unknown_field": true}"#, "unknown job key"),
+        (r#"{"id": 1, "backend": "tpu"}"#, "unknown backend"),
+        (r#"{"id": 1, "normalize": "sigmoid"}"#, "unknown normalize"),
+        (r#"{"id": 1, "priority": "asap"}"#, "unknown priority"),
+        (r#"{"id": 1} {"id": 2}"#, "trailing characters"),
+    ];
+    for (line, expect) in cases {
+        let err = FitRequest::from_json_line(line)
+            .expect_err(&format!("line {line:?} must be rejected"));
+        let msg = err.to_string();
+        assert!(msg.contains(expect), "line {line:?}: got {msg:?}, wanted {expect:?}");
+    }
+}
+
+#[test]
 fn response_ndjson_surface_round_trips() {
     let jobs = vec![FitRequest {
         id: 9,

@@ -1,0 +1,375 @@
+//! Loopback tests for the `kpynq serve --listen` daemon front-end.
+//!
+//! The acceptance claims (ISSUE 3 / PROTOCOL.md):
+//!
+//! * a daemon-served fit is **bit-identical** to a direct `Engine` run of
+//!   the same request — proven via the wire-level FNV assignment
+//!   fingerprint plus inertia/iteration equality;
+//! * ≥ 2 concurrent clients share one worker pool, and responses route to
+//!   the connection that submitted them even when client-chosen job ids
+//!   collide across connections;
+//! * protocol edges — malformed NDJSON, unknown fields, oversized lines,
+//!   bad handshakes, mid-stream disconnects — produce structured error
+//!   replies or clean session teardown, never a dead daemon.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use kpynq::coordinator::{KpynqSystem, SystemConfig, SystemOutput};
+use kpynq::serve::job::assignments_checksum;
+use kpynq::serve::net::{Daemon, DaemonHandle, NetConfig, MAX_LINE_BYTES, PROTO_VERSION};
+use kpynq::serve::{FitRequest, ServeConfig, ServeReport};
+use kpynq::util::json::Json;
+
+/// Bind a daemon on an ephemeral loopback port and run it on its own
+/// thread; the returned join handle yields the session report.
+fn start_daemon(
+    serve: ServeConfig,
+    net: NetConfig,
+) -> (String, DaemonHandle, std::thread::JoinHandle<ServeReport>) {
+    let daemon = Daemon::bind("127.0.0.1:0", net, serve).expect("bind loopback");
+    let addr = daemon.local_addr();
+    let handle = daemon.handle();
+    let thread = std::thread::spawn(move || daemon.run().expect("daemon run"));
+    (addr, handle, thread)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        Client { reader, writer: stream }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).expect("send");
+        self.writer.write_all(b"\n").expect("send nl");
+    }
+
+    /// Read one protocol line; panics on EOF (use `read_raw` for that).
+    fn read_json(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("read line");
+        assert!(n > 0, "unexpected EOF from daemon");
+        Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"))
+    }
+
+    /// Read a line, returning `None` on EOF.
+    fn read_opt(&mut self) -> Option<Json> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line).expect("read line") == 0 {
+            return None;
+        }
+        Some(Json::parse(line.trim()).expect("parseable line"))
+    }
+
+    /// Consume and sanity-check the server greeting (PROTOCOL.md §2).
+    fn expect_greeting(&mut self) -> Json {
+        let g = self.read_json();
+        assert_eq!(g.get("kpynq").unwrap().as_str().unwrap(), "serve");
+        assert_eq!(g.get("proto").unwrap().as_usize().unwrap() as u64, PROTO_VERSION);
+        assert!(g.get("max_line_bytes").unwrap().as_usize().unwrap() >= 1024);
+        g
+    }
+}
+
+fn job_line(id: u64, data_seed: u64, k: usize, seed: u64) -> String {
+    format!(
+        r#"{{"id": {id}, "dataset": "blobs", "data_seed": {data_seed}, "max_points": 800, "k": {k}, "seed": {seed}}}"#
+    )
+}
+
+/// The reference: the same request through the coordinator, no serving or
+/// socket layer involved.
+fn direct(line: &str) -> SystemOutput {
+    let req = FitRequest::from_json_line(line).expect("valid job line");
+    let rc = req.to_run_config().unwrap();
+    let ds = rc.load_dataset().unwrap();
+    KpynqSystem::new(SystemConfig { backend: rc.backend(), verify: false })
+        .unwrap()
+        .cluster(&ds, &req.kmeans)
+        .unwrap()
+}
+
+/// Assert one wire response matches the direct run bit-for-bit, via the
+/// FNV fingerprint (PROTOCOL.md §8) + inertia + iteration count.
+fn assert_matches_direct(resp: &Json, line: &str) {
+    let want = direct(line);
+    assert_eq!(resp.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(
+        resp.get("assignments_fnv").unwrap().as_str().unwrap(),
+        format!("{:016x}", assignments_checksum(&want.fit.assignments)),
+    );
+    assert_eq!(resp.get("inertia").unwrap().as_f64().unwrap(), want.fit.inertia);
+    assert_eq!(
+        resp.get("iterations").unwrap().as_usize().unwrap(),
+        want.fit.iterations
+    );
+}
+
+#[test]
+fn daemon_served_jobs_are_bit_identical_to_direct_runs() {
+    let (addr, _handle, thread) = start_daemon(
+        ServeConfig { workers: 2, ..Default::default() },
+        NetConfig::default(),
+    );
+    let mut c = Client::connect(&addr);
+    c.expect_greeting();
+    c.send(&format!(r#"{{"proto": {PROTO_VERSION}}}"#)); // explicit handshake
+
+    let lines: Vec<String> = (0..3)
+        .map(|i| job_line(i + 1, 100 + i, 3 + i as usize, 40 + i))
+        .collect();
+    for line in &lines {
+        c.send(line);
+    }
+    // Responses may arrive in any completion order; collect by id.
+    let mut by_id = std::collections::BTreeMap::new();
+    for _ in 0..lines.len() {
+        let r = c.read_json();
+        by_id.insert(r.get("id").unwrap().as_usize().unwrap() as u64, r);
+    }
+    for (i, line) in lines.iter().enumerate() {
+        assert_matches_direct(&by_id[&(i as u64 + 1)], line);
+    }
+
+    c.send(r#"{"op":"shutdown"}"#);
+    assert_eq!(c.read_json().get("op").unwrap().as_str().unwrap(), "shutdown-ack");
+    let report = thread.join().unwrap();
+    assert_eq!(report.connections, 1);
+    assert_eq!(report.completed, 3);
+    assert_eq!(report.protocol_errors, 0);
+}
+
+#[test]
+fn concurrent_clients_with_colliding_ids_share_one_pool() {
+    let (addr, handle, thread) = start_daemon(
+        ServeConfig { workers: 2, ..Default::default() },
+        NetConfig::default(),
+    );
+    // Two clients connect before either submits, so the daemon observably
+    // holds both at once; each uses the SAME job ids 1..=3 with different
+    // tenant parameters — responses must route home, not leak across.
+    let barrier = std::sync::Barrier::new(2);
+    std::thread::scope(|scope| {
+        for tenant in 0u64..2 {
+            let addr = &addr;
+            let barrier = &barrier;
+            scope.spawn(move || {
+                let mut c = Client::connect(addr);
+                c.expect_greeting();
+                barrier.wait();
+                let lines: Vec<String> = (1..=3u64)
+                    .map(|id| job_line(id, 500 + 10 * tenant + id, 4, 7 + 100 * tenant + id))
+                    .collect();
+                for line in &lines {
+                    c.send(line);
+                }
+                let mut by_id = std::collections::BTreeMap::new();
+                for _ in 0..lines.len() {
+                    let r = c.read_json();
+                    by_id.insert(r.get("id").unwrap().as_usize().unwrap() as u64, r);
+                }
+                // Fairness: this client got exactly its three ids back...
+                assert_eq!(by_id.len(), 3, "tenant {tenant} got all its responses");
+                // ...and each response is ITS clustering (bit-identity
+                // against the direct run of its own parameters — a swap
+                // with the other tenant's same-id job would fail here).
+                for (id, line) in (1..=3u64).zip(&lines) {
+                    assert_matches_direct(&by_id[&id], line);
+                }
+                c.send(r#"{"op":"bye"}"#);
+                assert!(c.read_opt().is_none(), "bye drains then closes");
+            });
+        }
+    });
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.connections, 2);
+    assert_eq!(report.peak_connections, 2, "both clients were live at once");
+    assert_eq!(report.completed, 6, "one shared session served both tenants");
+    assert_eq!(report.dropped_replies, 0);
+}
+
+#[test]
+fn protocol_edges_answer_structured_errors_without_killing_the_session() {
+    let (addr, _handle, thread) = start_daemon(
+        ServeConfig { workers: 1, ..Default::default() },
+        NetConfig::default(),
+    );
+    let mut c = Client::connect(&addr);
+    c.expect_greeting();
+
+    // Table of bad frames → a fragment the error reply must mention.
+    let oversized = format!(r#"{{"id": 1, "dataset": "{}"}}"#, "x".repeat(MAX_LINE_BYTES + 10));
+    let cases: Vec<(&str, &str)> = vec![
+        ("this is not json", "malformed JSON"),
+        (r#"{"id": 1, "kay": 8}"#, "unknown job key"),
+        (r#"{"id": "seven"}"#, "expected number"),
+        (r#"{"id": 1, "backend": "gpu"}"#, "unknown backend"),
+        (r#"{"id": 1, "priority": "urgent"}"#, "unknown priority"),
+        (r#"[1, 2, 3]"#, "must be a JSON object"),
+        (r#"{"op": "reboot"}"#, "unknown op"),
+        (oversized.as_str(), "exceeds"),
+    ];
+    for (frame, expect) in &cases {
+        c.send(frame);
+        let r = c.read_json();
+        assert_eq!(r.get("status").unwrap().as_str().unwrap(), "error", "frame {frame:.60}");
+        let msg = r.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(msg.contains(expect), "frame {frame:.60}: got {msg:?}");
+    }
+
+    // The connection survived all of it: a valid job still serves, and
+    // control frames still answer.
+    c.send(r#"{"op":"ping"}"#);
+    assert_eq!(c.read_json().get("op").unwrap().as_str().unwrap(), "pong");
+    let good = job_line(9, 1, 3, 2);
+    c.send(&good);
+    let r = c.read_json();
+    assert_eq!(r.get("id").unwrap().as_usize().unwrap(), 9);
+    assert_matches_direct(&r, &good);
+    c.send(r#"{"op":"stats"}"#);
+    let stats = c.read_json();
+    assert_eq!(stats.get("submitted").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(stats.get("active_conns").unwrap().as_usize().unwrap(), 1);
+
+    c.send(r#"{"op":"shutdown"}"#);
+    let report = thread.join().unwrap();
+    assert_eq!(report.protocol_errors as usize, cases.len());
+    assert_eq!(report.completed, 1);
+}
+
+#[test]
+fn mid_stream_disconnect_tears_down_cleanly() {
+    let (addr, _handle, thread) = start_daemon(
+        ServeConfig { workers: 1, ..Default::default() },
+        NetConfig::default(),
+    );
+    {
+        // Submit a job, then vanish without reading the response.
+        let mut c = Client::connect(&addr);
+        c.expect_greeting();
+        c.send(&job_line(1, 9, 3, 9));
+        // Dropping both halves closes the socket mid-stream.
+    }
+    // The daemon must still be fully serviceable afterwards.
+    let mut c = Client::connect(&addr);
+    c.expect_greeting();
+    let good = job_line(2, 10, 3, 10);
+    c.send(&good);
+    assert_matches_direct(&c.read_json(), &good);
+    c.send(r#"{"op":"shutdown"}"#);
+    let report = thread.join().unwrap();
+    assert_eq!(report.connections, 2);
+    assert_eq!(report.completed, 2, "the abandoned job still executed");
+}
+
+#[test]
+fn bad_handshake_is_refused() {
+    let (addr, handle, thread) = start_daemon(
+        ServeConfig { workers: 1, ..Default::default() },
+        NetConfig::default(),
+    );
+    let mut c = Client::connect(&addr);
+    c.expect_greeting();
+    c.send(r#"{"proto": 99}"#);
+    let r = c.read_json();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "error");
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("protocol revision"));
+    assert!(c.read_opt().is_none(), "connection closes after handshake refusal");
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.protocol_errors, 1);
+}
+
+#[test]
+fn idle_connections_time_out() {
+    let (addr, handle, thread) = start_daemon(
+        ServeConfig { workers: 1, ..Default::default() },
+        NetConfig { idle_timeout_ms: 250, ..Default::default() },
+    );
+    let mut c = Client::connect(&addr);
+    c.expect_greeting();
+    // Send nothing: the daemon must notice and close the connection.
+    let notice = c.read_json();
+    assert_eq!(notice.get("op").unwrap().as_str().unwrap(), "idle-timeout");
+    assert!(c.read_opt().is_none(), "socket closed after the notice");
+    handle.shutdown();
+    thread.join().unwrap();
+}
+
+#[test]
+fn connections_beyond_max_conns_are_refused() {
+    let (addr, handle, thread) = start_daemon(
+        ServeConfig { workers: 1, ..Default::default() },
+        NetConfig { max_conns: 1, ..Default::default() },
+    );
+    let mut first = Client::connect(&addr);
+    first.expect_greeting(); // greeting read ⇒ the slot is held
+    let mut second = Client::connect(&addr);
+    let refusal = second.read_json();
+    assert_eq!(refusal.get("status").unwrap().as_str().unwrap(), "error");
+    assert!(refusal.get("error").unwrap().as_str().unwrap().contains("max connections"));
+    assert!(second.read_opt().is_none(), "refused connection is closed");
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.connections, 1);
+    assert_eq!(report.refused_connections, 1);
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_domain_listener_serves_the_same_protocol() {
+    use std::os::unix::net::UnixStream;
+
+    let path = std::env::temp_dir().join(format!("kpynq-serve-test-{}.sock", std::process::id()));
+    let addr = format!("unix:{}", path.display());
+    let daemon = Daemon::bind(&addr, NetConfig::default(), ServeConfig::default()).unwrap();
+    assert_eq!(daemon.local_addr(), addr);
+    let thread = std::thread::spawn(move || daemon.run().expect("daemon run"));
+
+    let stream = UnixStream::connect(&path).expect("connect unix socket");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let greeting = Json::parse(line.trim()).unwrap();
+    assert_eq!(greeting.get("kpynq").unwrap().as_str().unwrap(), "serve");
+
+    let good = job_line(1, 77, 3, 77);
+    writer.write_all(format!("{good}\n").as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_matches_direct(&Json::parse(line.trim()).unwrap(), &good);
+
+    writer.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    let report = thread.join().unwrap();
+    assert_eq!(report.completed, 1);
+    assert!(!path.exists(), "socket file removed on drain");
+}
+
+#[test]
+fn served_deadline_and_shed_semantics_hold_over_the_wire() {
+    // A deadline_ms of 0 always sheds (PROTOCOL.md §7's escape hatch) —
+    // the wire reply must say so rather than fabricate a clustering.
+    let (addr, _handle, thread) = start_daemon(
+        ServeConfig { workers: 1, ..Default::default() },
+        NetConfig::default(),
+    );
+    let mut c = Client::connect(&addr);
+    c.expect_greeting();
+    c.send(r#"{"id": 1, "max_points": 400, "deadline_ms": 0}"#);
+    let r = c.read_json();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "shed");
+    assert!(r.get("detail").unwrap().as_str().unwrap().contains("deadline"));
+    assert!(r.get("assignments_fnv").is_err(), "shed replies carry no fingerprint");
+    c.send(r#"{"op":"shutdown"}"#);
+    let report = thread.join().unwrap();
+    assert_eq!(report.shed, 1);
+}

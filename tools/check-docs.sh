@@ -1,0 +1,71 @@
+#!/bin/sh
+# Docs-consistency check (run by `make check-docs` and CI; pure grep/sed,
+# no toolchain needed):
+#
+#   1. Every `DESIGN.md §X` / `PROTOCOL.md §X` / `EXPERIMENTS.md §X`
+#      citation anywhere in the source tree resolves to a heading in that
+#      document — so code can cite the spec instead of restating it
+#      without the references rotting.
+#   2. Every wire field `rust/src/serve/job.rs` actually serializes — the
+#      request-side KNOWN key list and the response-side `to_json` inserts
+#      — is documented in PROTOCOL.md (as `` `field` ``). No undocumented
+#      wire fields, in either direction.
+set -eu
+cd "$(dirname "$0")/.."
+fail=0
+
+# ---- 1. section citations resolve --------------------------------------
+for doc in DESIGN.md PROTOCOL.md EXPERIMENTS.md; do
+    if [ ! -f "$doc" ]; then
+        echo "FAIL: cited document $doc does not exist"
+        fail=1
+        continue
+    fi
+    # Pass 1: the canonical `DOC §X` form. Pass 2: bare `§X` tokens on any
+    # line that names exactly one of the three documents — catches forms
+    # like "PROTOCOL.md (§3 requests, §4 responses)" that pass 1 misses.
+    refs=$( {
+        grep -rhoE "$doc §[A-Za-z0-9][A-Za-z0-9.-]*" \
+            rust examples python README.md Makefile 2>/dev/null \
+        | sed "s/^$doc §//"
+        grep -rhE "$doc" rust examples python README.md Makefile 2>/dev/null \
+        | while IFS= read -r line; do
+            ndocs=$(printf '%s\n' "$line" \
+                    | grep -oE '(DESIGN|PROTOCOL|EXPERIMENTS)\.md' | sort -u | wc -l)
+            [ "$ndocs" -eq 1 ] || continue
+            printf '%s\n' "$line" | grep -oE '§[A-Za-z0-9][A-Za-z0-9.-]*' | sed 's/^§//'
+        done
+    } | sed 's/\.$//' | sort -u)
+    for ref in $refs; do
+        case "$ref" in
+            *[!0-9]*) pat="^##* .*$ref" ;;        # named section (e.g. §Perf)
+            *)        pat="^##* *$ref\." ;;       # numbered section (e.g. §2 -> "## 2.")
+        esac
+        if ! grep -Eq "$pat" "$doc"; then
+            echo "FAIL: citation '$doc §$ref' does not resolve to a heading in $doc"
+            fail=1
+        fi
+    done
+done
+
+# ---- 2. serve wire fields are documented in PROTOCOL.md -----------------
+job_rs=rust/src/serve/job.rs
+req_keys=$(sed -n '/const KNOWN/,/];/p' "$job_rs" | grep -oE '"[a-z_]+"' | tr -d '"' | sort -u)
+# Response keys are uniformly inserted as `"key".into()` map keys.
+resp_keys=$(sed -n '/fn to_json/,/^    }$/p' "$job_rs" \
+            | grep -oE '"[a-z_]+"\.into\(\)' | sed 's/"\.into()$//;s/^"//' | sort -u)
+if [ -z "$req_keys" ] || [ -z "$resp_keys" ]; then
+    echo "FAIL: could not extract wire fields from $job_rs (layout changed?)"
+    fail=1
+fi
+for key in $req_keys $resp_keys; do
+    if ! grep -q "\`$key\`" PROTOCOL.md; then
+        echo "FAIL: wire field \`$key\` (serialized by serve::job) is undocumented in PROTOCOL.md"
+        fail=1
+    fi
+done
+
+if [ "$fail" -eq 0 ]; then
+    echo "docs-consistency: OK (citations resolve; all serve wire fields documented)"
+fi
+exit "$fail"
