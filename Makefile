@@ -9,7 +9,7 @@ PYTHON      ?= python3
 ARTIFACTS   := artifacts
 PY_SOURCES  := $(wildcard python/compile/*.py python/compile/kernels/*.py)
 
-.PHONY: all build test serve-test serve-net-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
+.PHONY: all build test serve-test serve-net-test cluster-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
 
 all: build
 
@@ -30,6 +30,12 @@ serve-test:
 # wire, concurrent clients, protocol edges) — see PROTOCOL.md.
 serve-net-test:
 	cargo test -q --test serve_net
+
+# The cross-process cluster's acceptance test: 2-shard bit-identity vs a
+# single daemon, shard-kill recovery with exactly-once replies, router
+# policy pins. Spawns real `kpynq serve --listen unix:` child processes.
+cluster-test:
+	cargo test -q --test cluster
 
 # Docs consistency: DESIGN.md/PROTOCOL.md/EXPERIMENTS.md §-citations in the
 # source must resolve, and every serve::job wire field must be documented

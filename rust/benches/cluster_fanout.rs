@@ -1,0 +1,111 @@
+//! Cluster fan-out — shard-count sweep through one front door
+//! (EXPERIMENTS.md §Serving).
+//!
+//! Spins a `kpynq cluster` per row (real shard child processes exec'd
+//! from this build's `kpynq` binary), fans a fixed client load through
+//! the single front endpoint, and measures end-to-end jobs/sec as the
+//! clients see them. Read against the `serve_net` rows: a 1-shard
+//! cluster vs the plain daemon is the forwarding overhead (one extra
+//! socket hop per job), and rising shard counts show whether whole-
+//! process shards scale warm-engine capacity the way in-process workers
+//! do. The job mix alternates two BatchKeys so the router's affinity
+//! actually partitions work instead of round-robining it. Knobs:
+//!
+//! * `KPYNQ_CLUSTER_JOBS`  — jobs per client (default 8)
+//! * `KPYNQ_BENCH_POINTS`  — points per job dataset (default 2 000)
+//!
+//! Requires running via cargo (`cargo bench --bench cluster_fanout`):
+//! the shard binary is located through `CARGO_BIN_EXE_kpynq`.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use kpynq::cluster::{ClientConn, Cluster, ClusterConfig};
+use kpynq::serve::{FitRequest, JobStatus, NetConfig, ServeConfig};
+use kpynq::util::bench::Table;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One client session over the front door: submit, then drain.
+fn run_client(addr: &str, tenant: usize, jobs: usize, points: usize) {
+    let mut c = ClientConn::connect(addr).expect("connect front");
+    for i in 0..jobs {
+        let req = FitRequest {
+            id: i as u64,
+            // Alternate keys (blobs d=16 / kegg d=20): two affinity pins.
+            dataset: if i % 2 == 0 { "blobs".into() } else { "kegg".into() },
+            data_seed: (1000 + 100 * tenant + i) as u64,
+            max_points: points,
+            kmeans: kpynq::kmeans::KMeansConfig {
+                k: 4 + (i % 3) * 2,
+                seed: (7 + tenant + i) as u64,
+                max_iters: 40,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        c.submit(&req).expect("submit");
+    }
+    for _ in 0..jobs {
+        let r = c.recv_response().expect("response");
+        assert_eq!(r.status, JobStatus::Ok, "unexpected response: {}", r.detail);
+    }
+}
+
+fn main() {
+    let jobs = env_usize("KPYNQ_CLUSTER_JOBS", 8);
+    let points = env_usize("KPYNQ_BENCH_POINTS", 2_000);
+    let clients = 4usize;
+    println!(
+        "cluster_fanout: {clients} clients x {jobs} jobs x {points} points, \
+         loopback TCP front, unix-socket shards"
+    );
+
+    let mut t = Table::new(&[
+        "shards", "workers/shard", "ok", "jobs/s", "p50 ms", "p95 ms", "restarts",
+    ]);
+    for shards in [1usize, 2, 4] {
+        let cfg = ClusterConfig {
+            shards,
+            serve: ServeConfig { workers: 2, queue_capacity: 64, ..Default::default() },
+            socket_dir: std::env::temp_dir()
+                .join(format!("kpynq-fanout-{}-{shards}", std::process::id())),
+            program: PathBuf::from(env!("CARGO_BIN_EXE_kpynq")),
+            ..Default::default()
+        };
+        let workers = cfg.serve.workers;
+        let cluster =
+            Cluster::start("127.0.0.1:0", NetConfig::default(), cfg).expect("cluster start");
+        let addr = cluster.local_addr();
+        let handle = cluster.handle();
+        let cluster_thread = std::thread::spawn(move || cluster.run().expect("cluster run"));
+
+        // Warm the shard engine banks outside the clock.
+        run_client(&addr, 99, 2.min(jobs), points);
+
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for tenant in 0..clients {
+                let addr = &addr;
+                scope.spawn(move || run_client(addr, tenant, jobs, points));
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+
+        handle.shutdown();
+        let report = cluster_thread.join().expect("cluster join");
+        let total = (clients * jobs) as f64;
+        t.row(vec![
+            shards.to_string(),
+            workers.to_string(),
+            (report.completed - 2.min(jobs) as u64).to_string(),
+            format!("{:.2}", total / wall),
+            format!("{:.1}", report.p50_latency_ms),
+            format!("{:.1}", report.p95_latency_ms),
+            report.shard_restarts.to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,647 @@
+//! The client side of PROTOCOL.md: a blocking connection that speaks to a
+//! `kpynq serve --listen` daemon as a peer.
+//!
+//! Until now every implementation of the wire protocol lived on the
+//! server side; [`ClientConn`] is the first *client*, and the cluster
+//! front is built out of it — but it is equally usable on its own as a
+//! typed alternative to hand-rolled `nc`/python one-liners. It shares the
+//! framing implementation with the daemon (`serve::codec`), so there is
+//! exactly one reading of PROTOCOL.md §2 in the tree.
+//!
+//! What it does beyond moving lines:
+//!
+//! * **Handshake** — reads the greeting, checks `kpynq == "serve"` and
+//!   the protocol revision, and asserts `{"proto":1}` back (PROTOCOL.md
+//!   §2), so version skew fails at connect time, not mid-stream.
+//! * **Id remapping** — [`ClientConn::submit`] rewrites every outgoing
+//!   request onto a connection-unique wire id and restores the caller's
+//!   id on the way back. Callers can therefore forward requests from
+//!   many tenants whose ids collide — exactly what the cluster front
+//!   does — without bookkeeping of their own.
+//! * **Control frames** — typed `ping` / `stats` / `cancel` round-trips
+//!   (job responses arriving in between are buffered, not lost).
+//! * **Reconnect with backoff** — [`ClientConn::connect_with_backoff`]
+//!   bounds the doubling retry loop the supervisor leans on while a
+//!   freshly spawned shard binds its socket.
+//!
+//! ```no_run
+//! use kpynq::cluster::client::ClientConn;
+//! use kpynq::serve::FitRequest;
+//!
+//! let mut c = ClientConn::connect("127.0.0.1:7071").unwrap();
+//! c.submit(&FitRequest { id: 1, max_points: 1_000, ..Default::default() }).unwrap();
+//! let resp = c.recv_response().unwrap();
+//! println!("job {} -> {}", resp.id, resp.status.name());
+//! ```
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::serve::codec::{write_line, LineEvent, LineReader, Stream, WireStream};
+use crate::serve::job::{FitRequest, FitResponse};
+use crate::serve::net::PROTO_VERSION;
+use crate::util::json::Json;
+
+/// Parsed `{"op":"stats"}` reply (PROTOCOL.md §6) — the per-shard load
+/// snapshot the cluster router's least-loaded policy reads.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ShardStats {
+    /// Jobs the shard session has accepted over its lifetime.
+    pub submitted: u64,
+    /// Jobs sitting in the shard's admission queue right now.
+    pub queue_depth: usize,
+    pub shed_full: u64,
+    pub shed_deadline: u64,
+    pub peak_queue_depth: usize,
+    pub active_conns: usize,
+}
+
+impl ShardStats {
+    fn from_json(j: &Json) -> Result<ShardStats> {
+        let num = |key: &str| -> Result<u64> {
+            match j.get(key) {
+                Ok(v) => Ok(v.as_usize()? as u64),
+                Err(_) => Ok(0), // tolerate absent keys (older servers)
+            }
+        };
+        Ok(ShardStats {
+            submitted: num("submitted")?,
+            queue_depth: num("queue_depth")? as usize,
+            shed_full: num("shed_full")?,
+            shed_deadline: num("shed_deadline")?,
+            peak_queue_depth: num("peak_queue_depth")? as usize,
+            active_conns: num("active_conns")? as usize,
+        })
+    }
+}
+
+/// One frame from the server, classified (PROTOCOL.md §4–§6). Job ids are
+/// already restored to the submitter's ids.
+#[derive(Debug)]
+pub enum ClientEvent {
+    /// A job reply (`ok` / `shed` / `failed`).
+    Response(FitResponse),
+    /// `{"op":"pong"}` — the server's revision rides along.
+    Pong { proto: u64 },
+    /// `{"op":"stats"}` reply.
+    Stats(ShardStats),
+    /// `{"op":"cancelled"}` ack; `id` is the submitter's id.
+    Cancelled { id: u64, cancelled: bool },
+    /// A §5 protocol-error reply (carries no job id).
+    ProtocolError(Json),
+    /// Any other server notice (`idle-timeout`, `shutdown-ack`, …).
+    Notice(Json),
+    /// The read timeout elapsed (only with [`ClientConn::set_read_timeout`]).
+    Tick,
+    /// Server closed the connection.
+    Eof,
+}
+
+/// The shared half of a connection: locked writer + the wire-id remap
+/// table. Cloneable so a split sender and receiver stay consistent.
+#[derive(Clone)]
+struct Shared {
+    writer: Arc<Mutex<Stream>>,
+    /// wire id → the submitter's id, removed as responses arrive.
+    inflight: Arc<Mutex<HashMap<u64, u64>>>,
+    /// wire id → submitter's id for sent cancels. Kept separately from
+    /// `inflight` because the job's own reply may overtake the
+    /// `cancelled` ack and remove the inflight entry first — the ack
+    /// must still restore the right id.
+    cancels: Arc<Mutex<HashMap<u64, u64>>>,
+    next_wire_id: Arc<AtomicU64>,
+}
+
+impl Shared {
+    fn submit(&self, req: &FitRequest) -> Result<u64> {
+        let wire_id = self.next_wire_id.fetch_add(1, Ordering::Relaxed);
+        self.inflight.lock().expect("inflight map poisoned").insert(wire_id, req.id);
+        let mut wire_req = req.clone();
+        wire_req.id = wire_id;
+        write_line(&self.writer, &wire_req.to_json().to_string())?;
+        Ok(wire_id)
+    }
+
+    fn send_op(&self, op: &str) -> Result<()> {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("op".to_string(), Json::Str(op.into()));
+        write_line(&self.writer, &Json::Obj(m).to_string())?;
+        Ok(())
+    }
+
+    /// Send a cancel for the most recent in-flight submission carrying
+    /// the submitter id `id`; `Ok(None)` when nothing matches locally
+    /// (already answered, or never submitted) — no frame is sent then.
+    fn send_cancel(&self, id: u64) -> Result<Option<u64>> {
+        let wire_id = {
+            let inflight = self.inflight.lock().expect("inflight map poisoned");
+            inflight.iter().filter(|&(_, &orig)| orig == id).map(|(&w, _)| w).max()
+        };
+        let Some(wire_id) = wire_id else { return Ok(None) };
+        self.cancels.lock().expect("cancel map poisoned").insert(wire_id, id);
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("op".to_string(), Json::Str("cancel".into()));
+        m.insert("id".to_string(), Json::Num(wire_id as f64));
+        write_line(&self.writer, &Json::Obj(m).to_string())?;
+        Ok(Some(wire_id))
+    }
+
+    /// Count of submitted-but-unanswered jobs.
+    fn inflight_len(&self) -> usize {
+        self.inflight.lock().expect("inflight map poisoned").len()
+    }
+
+    fn classify(&self, j: Json) -> ClientEvent {
+        let op = j.get("op").and_then(|v| v.as_str().map(str::to_string)).ok();
+        if let Some(op) = op {
+            return match op.as_str() {
+                "pong" => ClientEvent::Pong {
+                    proto: j.get("proto").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
+                },
+                "stats" => match ShardStats::from_json(&j) {
+                    Ok(s) => ClientEvent::Stats(s),
+                    Err(_) => ClientEvent::Notice(j),
+                },
+                "cancelled" => {
+                    let wire_id = j.get("id").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+                    let cancelled = matches!(j.get("cancelled"), Ok(Json::Bool(true)));
+                    // Restore via the cancel map (immune to the job's own
+                    // reply racing ahead and clearing `inflight`).
+                    let id = self
+                        .cancels
+                        .lock()
+                        .expect("cancel map poisoned")
+                        .remove(&wire_id)
+                        .unwrap_or(wire_id);
+                    ClientEvent::Cancelled { id, cancelled }
+                }
+                _ => ClientEvent::Notice(j),
+            };
+        }
+        let status = j.get("status").and_then(|v| v.as_str().map(str::to_string)).ok();
+        if status.as_deref() == Some("error") {
+            return ClientEvent::ProtocolError(j);
+        }
+        match FitResponse::from_wire_json(&j) {
+            Ok(mut resp) => {
+                let orig = self
+                    .inflight
+                    .lock()
+                    .expect("inflight map poisoned")
+                    .remove(&resp.id);
+                match orig {
+                    Some(orig) => {
+                        resp.id = orig;
+                        ClientEvent::Response(resp)
+                    }
+                    // A reply we never asked for: surface it, don't guess.
+                    None => ClientEvent::Notice(j),
+                }
+            }
+            Err(_) => ClientEvent::Notice(j),
+        }
+    }
+}
+
+/// The receive half after [`ClientConn::split`]: the sole reader of the
+/// socket. See [`ClientConn`] for the blocking single-owner surface.
+pub struct ClientReceiver {
+    reader: LineReader<Stream>,
+    shared: Shared,
+}
+
+impl ClientReceiver {
+    /// Block for the next server frame. [`ClientEvent::Eof`] is terminal.
+    pub fn next_event(&mut self) -> Result<ClientEvent> {
+        match self.reader.next_event() {
+            LineEvent::Line(bytes) => {
+                let text = std::str::from_utf8(&bytes)
+                    .map_err(|_| Error::Parse("server sent non-UTF-8 line".into()))?;
+                Ok(self.shared.classify(Json::parse(text.trim())?))
+            }
+            LineEvent::Oversized => Err(Error::Parse("server sent an oversized line".into())),
+            LineEvent::Tick => Ok(ClientEvent::Tick),
+            LineEvent::Eof => Ok(ClientEvent::Eof),
+            LineEvent::Error(e) => Err(Error::Io(e)),
+        }
+    }
+}
+
+/// The send half after [`ClientConn::split`]; cloneable writes share one
+/// line lock, so frames never tear.
+pub struct ClientSender {
+    shared: Shared,
+}
+
+impl ClientSender {
+    /// Submit one job (remapped onto a connection-unique wire id); the
+    /// paired receiver yields its [`ClientEvent::Response`] later.
+    pub fn submit(&self, req: &FitRequest) -> Result<u64> {
+        self.shared.submit(req)
+    }
+
+    /// Request a `stats` reply (arrives as [`ClientEvent::Stats`]).
+    pub fn request_stats(&self) -> Result<()> {
+        self.shared.send_op("stats")
+    }
+
+    /// Request a `pong` (arrives as [`ClientEvent::Pong`]).
+    pub fn request_ping(&self) -> Result<()> {
+        self.shared.send_op("ping")
+    }
+
+    /// Forward a cancel for submitter id `id` (most recent submission
+    /// wins); `Ok(false)` when nothing was in flight locally and no frame
+    /// was sent. The ack arrives as [`ClientEvent::Cancelled`].
+    pub fn request_cancel(&self, id: u64) -> Result<bool> {
+        Ok(self.shared.send_cancel(id)?.is_some())
+    }
+
+    /// Ask the daemon to drain and exit (PROTOCOL.md §6 `shutdown`).
+    pub fn request_shutdown(&self) -> Result<()> {
+        self.shared.send_op("shutdown")
+    }
+
+    /// Announce a graceful connection close (PROTOCOL.md §6 `bye`).
+    pub fn send_bye(&self) -> Result<()> {
+        self.shared.send_op("bye")
+    }
+
+    /// Submitted-but-unanswered jobs on this connection.
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight_len()
+    }
+}
+
+/// A blocking protocol connection to one daemon. For concurrent use
+/// (separate submit and collect threads, as the cluster front needs),
+/// [`ClientConn::split`] divides it into a [`ClientSender`] and a
+/// [`ClientReceiver`] sharing one id-remap table.
+pub struct ClientConn {
+    receiver: ClientReceiver,
+    sender: ClientSender,
+    greeting: Json,
+    /// Frames read past while waiting for a specific control reply.
+    pending: VecDeque<ClientEvent>,
+}
+
+impl ClientConn {
+    /// Connect to `host:port` or `unix:<path>`, read and check the
+    /// greeting, and send the `{"proto":1}` handshake (PROTOCOL.md §2).
+    pub fn connect(addr: &str) -> Result<ClientConn> {
+        let stream = Stream::connect(addr)?;
+        stream.set_blocking().map_err(Error::Io)?;
+        let writer = stream.try_clone_stream().map_err(Error::Io)?;
+        let shared = Shared {
+            writer: Arc::new(Mutex::new(writer)),
+            inflight: Arc::new(Mutex::new(HashMap::new())),
+            cancels: Arc::new(Mutex::new(HashMap::new())),
+            next_wire_id: Arc::new(AtomicU64::new(1)),
+        };
+        let mut reader = LineReader::new(stream);
+        let greeting = match reader.next_event() {
+            LineEvent::Line(bytes) => {
+                let text = std::str::from_utf8(&bytes)
+                    .map_err(|_| Error::Parse("greeting is not valid UTF-8".into()))?;
+                Json::parse(text.trim())?
+            }
+            LineEvent::Eof => {
+                return Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    format!("{addr}: server closed before greeting"),
+                )))
+            }
+            _ => return Err(Error::Parse(format!("{addr}: no greeting line"))),
+        };
+        let kind = greeting.get("kpynq").and_then(|v| v.as_str().map(str::to_string)).ok();
+        if kind.as_deref() != Some("serve") {
+            return Err(Error::Parse(format!("{addr}: not a kpynq serve daemon")));
+        }
+        let proto = greeting.get("proto")?.as_usize()? as u64;
+        if proto != PROTO_VERSION {
+            return Err(Error::Config(format!(
+                "{addr}: server speaks protocol revision {proto}, this build speaks {PROTO_VERSION}"
+            )));
+        }
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("proto".to_string(), Json::Num(PROTO_VERSION as f64));
+        write_line(&shared.writer, &Json::Obj(m).to_string())?;
+        Ok(ClientConn {
+            receiver: ClientReceiver { reader, shared: shared.clone() },
+            sender: ClientSender { shared },
+            greeting,
+            pending: VecDeque::new(),
+        })
+    }
+
+    /// [`ClientConn::connect`] with a bounded doubling-backoff retry loop
+    /// (delays double from `initial_delay` up to `max_delay`; total
+    /// budget ≈ `attempts × max_delay` once the doubling saturates) — the
+    /// supervisor's readiness wait for a daemon that is still binding its
+    /// socket. `give_up` may veto further attempts early (e.g. when the
+    /// child process already exited).
+    pub fn connect_with_backoff(
+        addr: &str,
+        attempts: u32,
+        initial_delay: Duration,
+        max_delay: Duration,
+        mut give_up: impl FnMut() -> Option<String>,
+    ) -> Result<ClientConn> {
+        let mut delay = initial_delay;
+        let mut last_err = None;
+        for attempt in 0..attempts.max(1) {
+            if let Some(reason) = give_up() {
+                return Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionRefused,
+                    format!("{addr}: giving up reconnect: {reason}"),
+                )));
+            }
+            match ClientConn::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => last_err = Some(e),
+            }
+            if attempt + 1 < attempts {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(max_delay);
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            Error::Config(format!("{addr}: connect_with_backoff needs at least one attempt"))
+        }))
+    }
+
+    /// The server's greeting line (PROTOCOL.md §2), as parsed JSON.
+    pub fn greeting(&self) -> &Json {
+        &self.greeting
+    }
+
+    /// Set (or clear) the socket read timeout. With a timeout, blocking
+    /// calls return an error instead of waiting forever — the safety net
+    /// tests and health checks use.
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        self.receiver.reader.get_ref().set_read_timeout_dur(d).map_err(Error::Io)
+    }
+
+    /// Split into independently owned send/receive halves (one id-remap
+    /// table between them) — the shape the cluster front threads need.
+    pub fn split(self) -> (ClientSender, ClientReceiver) {
+        // `pending` only fills through the blocking helpers below, which
+        // consume `&mut self`; a conn that is split immediately after
+        // connect has nothing buffered to lose.
+        debug_assert!(self.pending.is_empty(), "split after blocking reads loses frames");
+        (self.sender, self.receiver)
+    }
+
+    /// Submit one job; returns the wire id it travels under.
+    pub fn submit(&mut self, req: &FitRequest) -> Result<u64> {
+        self.sender.submit(req)
+    }
+
+    /// Submitted-but-unanswered jobs on this connection.
+    pub fn inflight(&self) -> usize {
+        self.sender.inflight()
+    }
+
+    /// Block for the next frame (buffered frames first).
+    pub fn next_event(&mut self) -> Result<ClientEvent> {
+        if let Some(ev) = self.pending.pop_front() {
+            return Ok(ev);
+        }
+        self.receiver.next_event()
+    }
+
+    /// Block until the next job response; control replies and notices
+    /// read along the way are buffered for [`ClientConn::next_event`].
+    pub fn recv_response(&mut self) -> Result<FitResponse> {
+        // Scan anything already buffered first.
+        if let Some(i) = self
+            .pending
+            .iter()
+            .position(|ev| matches!(ev, ClientEvent::Response(_)))
+        {
+            match self.pending.remove(i) {
+                Some(ClientEvent::Response(r)) => return Ok(r),
+                _ => unreachable!("position() found a response"),
+            }
+        }
+        loop {
+            match self.receiver.next_event()? {
+                ClientEvent::Response(r) => return Ok(r),
+                ClientEvent::Eof => {
+                    return Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "server closed while responses were outstanding",
+                    )))
+                }
+                ClientEvent::Tick => {
+                    return Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "read timeout while waiting for a response",
+                    )))
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Liveness round-trip: send `ping`, block for the `pong`, return the
+    /// server's protocol revision.
+    pub fn ping(&mut self) -> Result<u64> {
+        self.sender.request_ping()?;
+        self.wait_for(|ev| match ev {
+            ClientEvent::Pong { proto } => Some(*proto),
+            _ => None,
+        })
+    }
+
+    /// `stats` round-trip (PROTOCOL.md §6).
+    pub fn stats(&mut self) -> Result<ShardStats> {
+        self.sender.request_stats()?;
+        self.wait_for(|ev| match ev {
+            ClientEvent::Stats(s) => Some(*s),
+            _ => None,
+        })
+    }
+
+    /// Cancel the most recent in-flight job submitted with id `id` and
+    /// block for the ack: `Ok(true)` means the server pulled it from its
+    /// queue (the job's own reply then arrives as shed, "cancelled by
+    /// client"); `Ok(false)` means it was too late — or nothing by that
+    /// id was in flight, in which case no frame is even sent.
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        if self.sender.shared.send_cancel(id)?.is_none() {
+            return Ok(false);
+        }
+        self.wait_for(|ev| match ev {
+            ClientEvent::Cancelled { cancelled, .. } => Some(*cancelled),
+            _ => None,
+        })
+    }
+
+    /// Ask the daemon to drain and exit (PROTOCOL.md §6 `shutdown`).
+    pub fn request_shutdown(&mut self) -> Result<()> {
+        self.sender.request_shutdown()
+    }
+
+    /// Graceful close: send `bye`, then drain to EOF, returning any job
+    /// responses that were still in flight.
+    pub fn bye(mut self) -> Result<Vec<FitResponse>> {
+        self.sender.send_bye()?;
+        let mut responses: Vec<FitResponse> = self
+            .pending
+            .drain(..)
+            .filter_map(|ev| match ev {
+                ClientEvent::Response(r) => Some(r),
+                _ => None,
+            })
+            .collect();
+        loop {
+            match self.receiver.next_event()? {
+                ClientEvent::Response(r) => responses.push(r),
+                ClientEvent::Eof => return Ok(responses),
+                ClientEvent::Tick => {
+                    return Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "read timeout while draining after bye",
+                    )))
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn wait_for<T>(&mut self, mut pick: impl FnMut(&ClientEvent) -> Option<T>) -> Result<T> {
+        loop {
+            let ev = self.receiver.next_event()?;
+            if let Some(v) = pick(&ev) {
+                return Ok(v);
+            }
+            match ev {
+                ClientEvent::Eof => {
+                    return Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "server closed while waiting for a control reply",
+                    )))
+                }
+                ClientEvent::Tick => {
+                    return Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "read timeout while waiting for a control reply",
+                    )))
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::net::{Daemon, DaemonHandle, NetConfig};
+    use crate::serve::{JobStatus, ServeConfig, ServeReport};
+
+    fn start_daemon(serve: ServeConfig) -> (String, DaemonHandle, std::thread::JoinHandle<ServeReport>) {
+        let daemon = Daemon::bind("127.0.0.1:0", NetConfig::default(), serve).expect("bind");
+        let addr = daemon.local_addr();
+        let handle = daemon.handle();
+        let thread = std::thread::spawn(move || daemon.run().expect("daemon run"));
+        (addr, handle, thread)
+    }
+
+    fn job(id: u64, seed: u64) -> FitRequest {
+        FitRequest {
+            id,
+            max_points: 400,
+            kmeans: crate::kmeans::KMeansConfig { k: 3, seed, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn client_remaps_colliding_ids_and_restores_them() {
+        let (addr, handle, thread) = start_daemon(ServeConfig { workers: 2, ..Default::default() });
+        let mut c = ClientConn::connect(&addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        assert_eq!(c.greeting().get("proto").unwrap().as_usize().unwrap() as u64, PROTO_VERSION);
+        // Two submissions with the SAME caller id — the remap must keep
+        // both alive on the wire and restore id 7 on both replies.
+        let w1 = c.submit(&job(7, 1)).unwrap();
+        let w2 = c.submit(&job(7, 2)).unwrap();
+        assert_ne!(w1, w2, "wire ids are connection-unique");
+        assert_eq!(c.inflight(), 2);
+        let a = c.recv_response().unwrap();
+        let b = c.recv_response().unwrap();
+        assert_eq!((a.id, b.id), (7, 7));
+        assert_eq!(a.status, JobStatus::Ok, "{}", a.detail);
+        assert_ne!(
+            a.summary.unwrap().assignments_fnv,
+            b.summary.unwrap().assignments_fnv,
+            "different seeds, different clusterings — replies were not conflated"
+        );
+        assert_eq!(c.inflight(), 0);
+        assert_eq!(c.ping().unwrap(), PROTO_VERSION);
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.submitted, 2);
+        handle.shutdown();
+        thread.join().unwrap();
+    }
+
+    #[test]
+    fn cancel_of_a_finished_or_unknown_job_is_false() {
+        let (addr, handle, thread) = start_daemon(ServeConfig { workers: 1, ..Default::default() });
+        let mut c = ClientConn::connect(&addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        assert!(!c.cancel(99).unwrap(), "nothing in flight: no wire traffic, false");
+        c.submit(&job(1, 3)).unwrap();
+        let r = c.recv_response().unwrap();
+        assert_eq!(r.status, JobStatus::Ok, "{}", r.detail);
+        assert!(!c.cancel(1).unwrap(), "already answered: false");
+        handle.shutdown();
+        thread.join().unwrap();
+    }
+
+    #[test]
+    fn bye_drains_inflight_responses() {
+        let (addr, handle, thread) = start_daemon(ServeConfig { workers: 1, ..Default::default() });
+        let mut c = ClientConn::connect(&addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        c.submit(&job(4, 4)).unwrap();
+        c.submit(&job(5, 5)).unwrap();
+        let mut responses = c.bye().unwrap();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 2, "bye delivers every owed reply before EOF");
+        assert_eq!(responses[0].id, 4);
+        assert_eq!(responses[1].id, 5);
+        handle.shutdown();
+        let report = thread.join().unwrap();
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.dropped_replies, 0);
+    }
+
+    #[test]
+    fn connect_with_backoff_gives_up_on_request() {
+        let err = ClientConn::connect_with_backoff(
+            "127.0.0.1:1",
+            10,
+            Duration::from_millis(1),
+            Duration::from_millis(4),
+            || Some("child exited".into()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("child exited"), "{err}");
+        // And without a veto it retries, then reports the connect error.
+        let err = ClientConn::connect_with_backoff(
+            "127.0.0.1:1",
+            2,
+            Duration::from_millis(1),
+            Duration::from_millis(4),
+            || None,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("127.0.0.1:1"), "{err}");
+    }
+}

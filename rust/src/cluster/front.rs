@@ -1,0 +1,760 @@
+//! The cluster front door: one listener, N shard daemons behind it.
+//!
+//! [`Cluster`] reuses `serve::net`'s accept loop and connection protocol
+//! wholesale — its (crate-private) `ClusterCore` is just another
+//! `net::FrontCore` — so an
+//! external client cannot tell a cluster from a single daemon: same
+//! greeting shape, same control frames, same error replies, one endpoint
+//! (PROTOCOL.md). What changes is what happens behind `submit`:
+//!
+//! * **Fan-out.** Every accepted request is remapped onto a
+//!   cluster-unique ticket and routed by [`Router`] policy — BatchKey
+//!   affinity first, least-queue-depth fallback — onto one shard's
+//!   forwarding link (a split [`ClientConn`]: a writer thread draining a
+//!   command channel, a reader thread pumping replies back).
+//! * **Fan-in.** Shard replies carry the ticket; the core restores the
+//!   external client's own id and delivers to the owning connection,
+//!   folding every response into the cluster's `ResponseAccumulator` on
+//!   the way — the same exactly-one-reply-per-job contract the session
+//!   gives in-process (DESIGN.md §2).
+//! * **Supervision.** A monitor thread owns the [`Supervisor`]: a shard
+//!   that crashes (link EOF, write error, or a reaped child) is
+//!   respawned within its restart budget and every ticket it had not
+//!   answered is requeued — onto the new incarnation or the survivors.
+//!   Requeueing re-*runs* jobs, which is safe precisely because of the
+//!   serving guarantee: a fit is a deterministic function of its request,
+//!   so the re-run's reply is bit-identical to the one the dead shard
+//!   would have sent, and each ticket still yields exactly one reply.
+//! * **Cancel forwarding.** `{"op":"cancel"}` resolves the ticket's
+//!   owning shard and round-trips the cancel there, so the ack keeps the
+//!   single-daemon meaning (PROTOCOL.md §6).
+//!
+//! ```no_run
+//! use kpynq::cluster::{Cluster, ClusterConfig};
+//! use kpynq::serve::NetConfig;
+//!
+//! let cluster = Cluster::start(
+//!     "127.0.0.1:7071",
+//!     NetConfig::default(),
+//!     ClusterConfig { shards: 4, ..Default::default() },
+//! ).unwrap();
+//! println!("cluster front on {}", cluster.local_addr());
+//! let report = cluster.run().unwrap(); // blocks until {"op":"shutdown"}
+//! println!("{}", report.render());
+//! ```
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::serve::job::{FitRequest, FitResponse};
+use crate::serve::net::{advertised_backends, Daemon, DaemonHandle, FrontCore, NetConfig};
+use crate::serve::queue::QueueStats;
+use crate::serve::report::ResponseAccumulator;
+use crate::serve::{ServeConfig, ServeReport};
+use crate::util::json::Json;
+
+use super::client::{ClientConn, ClientEvent};
+use super::router::{Router, DEAD};
+use super::supervisor::{Supervisor, SupervisorConfig};
+use super::ClusterConfig;
+
+/// Monitor poll period: health sweep + per-shard `stats` refresh.
+const POLL: Duration = Duration::from_millis(250);
+/// How long a forwarded cancel waits for the owning shard's ack.
+const CANCEL_WAIT: Duration = Duration::from_secs(2);
+/// How long the final per-shard stats sweep waits per shard.
+const FINAL_STATS_WAIT: Duration = Duration::from_secs(2);
+/// Grace for shard daemons to exit after their `shutdown` frame.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(10);
+/// A live shard whose link has answered nothing (not even the monitor's
+/// ~4/s stats polls) for this long is treated as wedged and killed so the
+/// normal crash recovery requeues its work. Generous on purpose: under
+/// sustained `block`-policy backpressure a healthy shard's connection
+/// reader can legitimately go quiet while its queue drains — a watchdog
+/// kill there wastes (re-run) work but never loses or duplicates a reply.
+const HEALTH_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// `ClusterRoute.shard` before dispatch has picked one.
+const UNROUTED: usize = usize::MAX;
+
+/// Commands a shard link's writer thread forwards onto the wire.
+enum ShardCmd {
+    /// A job whose id is already the cluster ticket.
+    Submit(FitRequest),
+    /// Cancel by cluster ticket.
+    Cancel(u64),
+    Stats,
+    Shutdown,
+}
+
+enum MonitorMsg {
+    /// A link observed its shard dead (EOF / write error), or the reaper
+    /// found an exited child. Stale generations are ignored.
+    ShardDown { shard: usize, generation: u64 },
+    /// Chaos hook: SIGKILL a shard (tests, `ClusterHandle::kill_shard`).
+    KillShard(usize),
+    /// Stop supervising and reap the (already shutdown-signalled) shards.
+    Finalize,
+}
+
+/// One shard's forwarding state: the command channel into its writer
+/// thread plus the shared bookkeeping its reader thread maintains.
+struct ShardLink {
+    generation: u64,
+    alive: bool,
+    tx: mpsc::Sender<ShardCmd>,
+    /// Tickets forwarded and not yet answered (exact, locally counted).
+    local_depth: Arc<AtomicUsize>,
+    /// Last `queue_depth` the shard reported (PROTOCOL.md §6 `stats`).
+    reported_depth: Arc<AtomicUsize>,
+    /// ticket → the (ticket-rewritten) request, for requeue on crash.
+    inflight: Arc<Mutex<HashMap<u64, FitRequest>>>,
+    last_stats: Arc<Mutex<super::client::ShardStats>>,
+    /// FIFO of synchronous stats requests (single link ⇒ replies ordered).
+    stats_waiters: Arc<Mutex<VecDeque<mpsc::Sender<super::client::ShardStats>>>>,
+    /// When the link last heard *anything* from the shard — the hung-shard
+    /// watchdog's signal (see [`HEALTH_TIMEOUT`]).
+    last_heard: Arc<Mutex<Instant>>,
+}
+
+impl ShardLink {
+    fn depth(&self) -> usize {
+        if !self.alive {
+            return DEAD;
+        }
+        self.local_depth
+            .load(Ordering::SeqCst)
+            .max(self.reported_depth.load(Ordering::SeqCst))
+    }
+}
+
+/// Where one in-flight ticket's reply must go.
+struct ClusterRoute {
+    client_id: u64,
+    reply: mpsc::Sender<FitResponse>,
+    shard: usize,
+}
+
+/// The fan-out/fan-in core behind the cluster's front door — the
+/// `net::FrontCore` the shared accept loop drives.
+///
+/// Lock order (to stay deadlock-free): `links` may be held while taking
+/// `router` or a link's leaf locks (`inflight`, `stats_waiters`), never
+/// while taking `routes` or `acc`; `routes` and `acc` are taken alone.
+pub(crate) struct ClusterCore {
+    serve: ServeConfig,
+    shard_count: usize,
+    links: Mutex<Vec<ShardLink>>,
+    routes: Mutex<HashMap<u64, ClusterRoute>>,
+    router: Mutex<Router>,
+    next_ticket: AtomicU64,
+    submitted: AtomicU64,
+    acc: Mutex<ResponseAccumulator>,
+    pending_cancels: Mutex<HashMap<u64, mpsc::Sender<bool>>>,
+    /// Outstanding (submitted, unanswered) jobs, bounded by
+    /// `admission_cap`: past the cap, `submit` blocks the submitting
+    /// connection's reader — the same TCP-backpressure shape the single
+    /// daemon's Block policy gives (DESIGN.md §2). Without this the
+    /// front would buffer unbounded requests in memory while the shard
+    /// queues are full.
+    admission: Mutex<usize>,
+    admission_free: Condvar,
+    admission_cap: usize,
+    started: Instant,
+}
+
+impl ClusterCore {
+    fn new(cfg: &ClusterConfig) -> ClusterCore {
+        // Aggregate capacity of the fleet: what fits in the shard queues
+        // plus what the workers can be executing at once.
+        let per_shard = cfg.serve.queue_capacity + cfg.serve.workers * cfg.serve.max_batch;
+        ClusterCore {
+            serve: cfg.serve.clone(),
+            shard_count: cfg.shards,
+            links: Mutex::new(Vec::with_capacity(cfg.shards)),
+            routes: Mutex::new(HashMap::new()),
+            router: Mutex::new(Router::new()),
+            next_ticket: AtomicU64::new(1),
+            submitted: AtomicU64::new(0),
+            acc: Mutex::new(ResponseAccumulator::default()),
+            pending_cancels: Mutex::new(HashMap::new()),
+            admission: Mutex::new(0),
+            admission_free: Condvar::new(),
+            admission_cap: (cfg.shards * per_shard).max(1),
+            started: Instant::now(),
+        }
+    }
+
+    /// Route one ticketed request onto a live shard (recording it for
+    /// requeue) — or answer `failed` when no shard is routable.
+    fn dispatch(&self, ticket: u64, req: FitRequest) {
+        let target = {
+            let links = self.links.lock().expect("links poisoned");
+            let depths: Vec<usize> = links.iter().map(ShardLink::depth).collect();
+            match self.router.lock().expect("router poisoned").route(&req, &depths) {
+                Some(s) => {
+                    links[s]
+                        .inflight
+                        .lock()
+                        .expect("inflight poisoned")
+                        .insert(ticket, req.clone());
+                    links[s].local_depth.fetch_add(1, Ordering::SeqCst);
+                    Some((s, links[s].tx.clone()))
+                }
+                None => None,
+            }
+        };
+        match target {
+            Some((shard, tx)) => {
+                if let Some(route) =
+                    self.routes.lock().expect("routes poisoned").get_mut(&ticket)
+                {
+                    route.shard = shard;
+                }
+                // A send failure means the writer just died; the request
+                // is already in `inflight`, so crash recovery requeues it.
+                let _ = tx.send(ShardCmd::Submit(req));
+            }
+            None => {
+                let err = Error::Config("no live shards to route to".into());
+                let resp = FitResponse::failed(ticket, &req.backend_name, 0, 0, 0.0, &err);
+                self.deliver(resp);
+            }
+        }
+    }
+
+    /// Fan-in: restore the external client's id, deliver, account. The
+    /// route is taken *first* and only routed replies are observed: a
+    /// crashed shard's reply can race its own requeue (the re-run already
+    /// answered and removed the route), and counting that duplicate would
+    /// inflate `completed` past `submitted`. A routeless reply is simply
+    /// ignored — the ticket's one real answer was already delivered.
+    fn deliver(&self, mut resp: FitResponse) {
+        let route = self.routes.lock().expect("routes poisoned").remove(&resp.id);
+        if let Some(ClusterRoute { client_id, reply, .. }) = route {
+            self.acc.lock().expect("accumulator poisoned").observe(&resp);
+            resp.id = client_id;
+            if reply.send(resp).is_err() {
+                self.acc.lock().expect("accumulator poisoned").count_dropped_reply();
+            }
+            // Exactly one admission slot per ticket frees here (the route
+            // existing proves this is the ticket's first and only answer).
+            let mut n = self.admission.lock().expect("admission poisoned");
+            *n = n.saturating_sub(1);
+            self.admission_free.notify_one();
+        }
+    }
+
+    fn finish_cancel(&self, ticket: u64, cancelled: bool) {
+        if let Some(w) = self.pending_cancels.lock().expect("cancels poisoned").remove(&ticket) {
+            let _ = w.send(cancelled);
+        }
+    }
+
+    /// Mark a shard dead if `generation` is current; `false` means the
+    /// report is stale (a newer incarnation is already installed).
+    fn mark_dead(&self, shard: usize, generation: u64) -> bool {
+        let mut links = self.links.lock().expect("links poisoned");
+        let link = &mut links[shard];
+        if link.generation != generation || !link.alive {
+            return false;
+        }
+        link.alive = false;
+        true
+    }
+
+    /// Install a fresh link for `shard`, returning the dead incarnation's
+    /// unanswered work for requeueing.
+    fn install_link(&self, shard: usize, link: ShardLink) -> Vec<(u64, FitRequest)> {
+        let old = {
+            let mut links = self.links.lock().expect("links poisoned");
+            std::mem::replace(&mut links[shard], link)
+        };
+        old.inflight.lock().expect("inflight poisoned").drain().collect()
+    }
+
+    /// Drain a permanently dead shard's unanswered work.
+    fn take_inflight(&self, shard: usize) -> Vec<(u64, FitRequest)> {
+        let links = self.links.lock().expect("links poisoned");
+        links[shard].local_depth.store(0, Ordering::SeqCst);
+        links[shard].inflight.lock().expect("inflight poisoned").drain().collect()
+    }
+
+    fn requeue(&self, orphans: Vec<(u64, FitRequest)>) {
+        for (ticket, req) in orphans {
+            self.dispatch(ticket, req);
+        }
+    }
+
+    /// Ask every live shard for a `stats` refresh (fire-and-forget; the
+    /// reader threads update the depth gauges as replies arrive).
+    fn poll_stats(&self) {
+        let links = self.links.lock().expect("links poisoned");
+        for l in links.iter().filter(|l| l.alive) {
+            let _ = l.tx.send(ShardCmd::Stats);
+        }
+    }
+
+    /// Send every live shard its `{"op":"shutdown"}` frame (monitor-side
+    /// teardown — recovery is already off when this runs).
+    fn send_shutdowns(&self) {
+        let links = self.links.lock().expect("links poisoned");
+        for l in links.iter().filter(|l| l.alive) {
+            let _ = l.tx.send(ShardCmd::Shutdown);
+        }
+    }
+
+    /// The wire-facing `queue_depth` (PROTOCOL.md §6): per shard, the
+    /// last *reported* queued count clamped by the exact local count of
+    /// unanswered forwards. The clamp keeps the ~4 Hz poll's staleness
+    /// honest in both directions: a drained shard reads 0 immediately
+    /// (local is exact), and executing-but-not-queued forwards never
+    /// inflate the figure the way the raw placement signal
+    /// ([`ShardLink::depth`], a max) deliberately does.
+    fn queue_depth_total(&self) -> usize {
+        let links = self.links.lock().expect("links poisoned");
+        links
+            .iter()
+            .filter(|l| l.alive)
+            .map(|l| {
+                l.reported_depth
+                    .load(Ordering::SeqCst)
+                    .min(l.local_depth.load(Ordering::SeqCst))
+            })
+            .sum()
+    }
+
+    /// Alive shards whose link has heard nothing for longer than
+    /// `timeout` despite the monitor's ongoing stats polling — the
+    /// wedged-but-not-dead case EOF detection cannot see.
+    fn stalled_shards(&self, timeout: Duration) -> Vec<usize> {
+        let links = self.links.lock().expect("links poisoned");
+        links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| {
+                l.alive
+                    && l.last_heard.lock().expect("last_heard poisoned").elapsed() > timeout
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    fn shards_alive(&self) -> usize {
+        self.links.lock().expect("links poisoned").iter().filter(|l| l.alive).count()
+    }
+
+    /// Post-drain teardown: final per-shard stats sweep, shard shutdown
+    /// frames, monitor join, report assembly. Runs after the accept loop
+    /// has joined every connection — all tickets are answered by now.
+    fn finalize(
+        &self,
+        monitor_tx: mpsc::Sender<MonitorMsg>,
+        monitor: std::thread::JoinHandle<u64>,
+    ) -> ServeReport {
+        // Final stats sweep (cause-level shed counters live shard-side).
+        let mut sweeps = Vec::new();
+        {
+            let links = self.links.lock().expect("links poisoned");
+            for l in links.iter().filter(|l| l.alive) {
+                let (tx, rx) = mpsc::channel();
+                l.stats_waiters.lock().expect("waiters poisoned").push_back(tx);
+                let _ = l.tx.send(ShardCmd::Stats);
+                sweeps.push((rx, Arc::clone(&l.last_stats)));
+            }
+        }
+        let mut partials = Vec::with_capacity(sweeps.len());
+        for (rx, last) in sweeps {
+            let stats = rx
+                .recv_timeout(FINAL_STATS_WAIT)
+                .unwrap_or_else(|_| *last.lock().expect("stats poisoned"));
+            partials.push(stats);
+        }
+        // Hand teardown to the monitor: *it* must send the shard shutdown
+        // frames after it stops recovering, or the resulting link EOFs
+        // would look like crashes and resurrect the shards being drained.
+        let _ = monitor_tx.send(MonitorMsg::Finalize);
+        let restarts = monitor.join().unwrap_or(0);
+
+        let acc = std::mem::take(&mut *self.acc.lock().expect("accumulator poisoned"));
+        let mut report = acc.into_report(
+            self.submitted.load(Ordering::SeqCst),
+            &[],
+            QueueStats::default(),
+            self.started.elapsed().as_secs_f64(),
+        );
+        report.workers = self.shard_count * self.serve.workers;
+        report.shard_restarts = restarts;
+        for s in &partials {
+            report.shed_full += s.shed_full;
+            report.shed_deadline += s.shed_deadline;
+            report.peak_queue_depth = report.peak_queue_depth.max(s.peak_queue_depth);
+        }
+        report
+    }
+}
+
+impl FrontCore for ClusterCore {
+    fn submit(&self, req: FitRequest, reply: &mpsc::Sender<FitResponse>) -> u64 {
+        // Backpressure: block this submitter until the fleet has room
+        // (every answered ticket frees one slot in `deliver`).
+        {
+            let mut n = self.admission.lock().expect("admission poisoned");
+            while *n >= self.admission_cap {
+                n = self.admission_free.wait(n).expect("admission poisoned");
+            }
+            *n += 1;
+        }
+        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        let client_id = req.id;
+        self.routes.lock().expect("routes poisoned").insert(
+            ticket,
+            ClusterRoute { client_id, reply: reply.clone(), shard: UNROUTED },
+        );
+        let mut req = req;
+        req.id = ticket;
+        self.dispatch(ticket, req);
+        ticket
+    }
+
+    fn cancel(&self, ticket: u64) -> bool {
+        let shard = match self.routes.lock().expect("routes poisoned").get(&ticket) {
+            Some(r) if r.shard != UNROUTED => r.shard,
+            _ => return false, // answered already, or not yet dispatched
+        };
+        let (vtx, vrx) = mpsc::channel();
+        self.pending_cancels.lock().expect("cancels poisoned").insert(ticket, vtx);
+        let sent = {
+            let links = self.links.lock().expect("links poisoned");
+            links[shard].alive && links[shard].tx.send(ShardCmd::Cancel(ticket)).is_ok()
+        };
+        let verdict = if sent { vrx.recv_timeout(CANCEL_WAIT).unwrap_or(false) } else { false };
+        self.pending_cancels.lock().expect("cancels poisoned").remove(&ticket);
+        verdict
+    }
+
+    fn greeting_fields(&self, m: &mut BTreeMap<String, Json>) {
+        m.insert(
+            "workers".to_string(),
+            Json::Num((self.shard_count * self.serve.workers) as f64),
+        );
+        m.insert("max_batch".to_string(), Json::Num(self.serve.max_batch as f64));
+        m.insert("backends".to_string(), Json::Arr(advertised_backends()));
+        m.insert("shards".to_string(), Json::Num(self.shard_count as f64));
+    }
+
+    fn stats_fields(&self, m: &mut BTreeMap<String, Json>) {
+        m.insert("submitted".to_string(), Json::Num(self.submitted.load(Ordering::SeqCst) as f64));
+        m.insert("queue_depth".to_string(), Json::Num(self.queue_depth_total() as f64));
+        m.insert("shards".to_string(), Json::Num(self.shard_count as f64));
+        m.insert("shards_alive".to_string(), Json::Num(self.shards_alive() as f64));
+        let (mut shed_full, mut shed_deadline, mut peak) = (0u64, 0u64, 0usize);
+        {
+            let links = self.links.lock().expect("links poisoned");
+            for l in links.iter() {
+                let s = *l.last_stats.lock().expect("stats poisoned");
+                shed_full += s.shed_full;
+                shed_deadline += s.shed_deadline;
+                peak = peak.max(s.peak_queue_depth);
+            }
+        }
+        m.insert("shed_full".to_string(), Json::Num(shed_full as f64));
+        m.insert("shed_deadline".to_string(), Json::Num(shed_deadline as f64));
+        m.insert("peak_queue_depth".to_string(), Json::Num(peak as f64));
+    }
+}
+
+/// Split one ready [`ClientConn`] into a shard link: a writer thread
+/// draining the command channel and a reader thread pumping replies into
+/// the core. Both report shard death to the monitor and exit.
+fn spawn_link(
+    shard: usize,
+    generation: u64,
+    conn: ClientConn,
+    core: Arc<ClusterCore>,
+    monitor_tx: mpsc::Sender<MonitorMsg>,
+) -> ShardLink {
+    let (tx, rx) = mpsc::channel::<ShardCmd>();
+    let (sender, mut receiver) = conn.split();
+    let local_depth = Arc::new(AtomicUsize::new(0));
+    let reported_depth = Arc::new(AtomicUsize::new(0));
+    let inflight: Arc<Mutex<HashMap<u64, FitRequest>>> = Arc::new(Mutex::new(HashMap::new()));
+    let last_stats = Arc::new(Mutex::new(super::client::ShardStats::default()));
+    let stats_waiters: Arc<Mutex<VecDeque<mpsc::Sender<super::client::ShardStats>>>> =
+        Arc::new(Mutex::new(VecDeque::new()));
+    let last_heard = Arc::new(Mutex::new(Instant::now()));
+
+    {
+        let monitor_tx = monitor_tx.clone();
+        let core = Arc::clone(&core);
+        std::thread::spawn(move || {
+            for cmd in rx {
+                let sent = match cmd {
+                    ShardCmd::Submit(req) => sender.submit(&req).map(|_| ()),
+                    ShardCmd::Cancel(ticket) => match sender.request_cancel(ticket) {
+                        // The job's reply won the race and nothing was
+                        // sent — no ack will ever come back, so resolve
+                        // the waiter now instead of letting it time out
+                        // (which would stall the client's whole
+                        // connection for CANCEL_WAIT).
+                        Ok(false) => {
+                            core.finish_cancel(ticket, false);
+                            Ok(())
+                        }
+                        Ok(true) => Ok(()),
+                        Err(e) => Err(e),
+                    },
+                    ShardCmd::Stats => sender.request_stats(),
+                    ShardCmd::Shutdown => sender.request_shutdown(),
+                };
+                if sent.is_err() {
+                    let _ = monitor_tx.send(MonitorMsg::ShardDown { shard, generation });
+                    return;
+                }
+            }
+        });
+    }
+    {
+        let local_depth = Arc::clone(&local_depth);
+        let reported_depth = Arc::clone(&reported_depth);
+        let inflight = Arc::clone(&inflight);
+        let last_stats = Arc::clone(&last_stats);
+        let stats_waiters = Arc::clone(&stats_waiters);
+        let last_heard = Arc::clone(&last_heard);
+        std::thread::spawn(move || loop {
+            let event = match receiver.next_event() {
+                Ok(ev) => ev,
+                Err(_) => {
+                    let _ = monitor_tx.send(MonitorMsg::ShardDown { shard, generation });
+                    return;
+                }
+            };
+            *last_heard.lock().expect("last_heard poisoned") = Instant::now();
+            match event {
+                ClientEvent::Response(resp) => {
+                    if inflight.lock().expect("inflight poisoned").remove(&resp.id).is_some() {
+                        local_depth.fetch_sub(1, Ordering::SeqCst);
+                    }
+                    core.deliver(resp);
+                }
+                ClientEvent::Stats(s) => {
+                    reported_depth.store(s.queue_depth, Ordering::SeqCst);
+                    *last_stats.lock().expect("stats poisoned") = s;
+                    if let Some(w) = stats_waiters.lock().expect("waiters poisoned").pop_front() {
+                        let _ = w.send(s);
+                    }
+                }
+                ClientEvent::Cancelled { id, cancelled } => {
+                    if cancelled {
+                        // The shard removed the job from its queue; that
+                        // ack is a promise the job will never execute
+                        // (PROTOCOL.md §6). Make it crash-proof: answer
+                        // the ticket's single shed reply from here and
+                        // drop it from the requeue set, so a shard death
+                        // after the ack cannot re-run a job the client
+                        // was told is cancelled. The shard's own shed
+                        // reply then arrives routeless and is ignored.
+                        if inflight.lock().expect("inflight poisoned").remove(&id).is_some() {
+                            local_depth.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        core.deliver(FitResponse::shed(id, "cancelled by client", 0.0));
+                    }
+                    core.finish_cancel(id, cancelled);
+                }
+                ClientEvent::Eof => {
+                    let _ = monitor_tx.send(MonitorMsg::ShardDown { shard, generation });
+                    return;
+                }
+                _ => {} // pongs, notices, protocol errors: nothing owed
+            }
+        });
+    }
+    ShardLink {
+        generation,
+        alive: true,
+        tx,
+        local_depth,
+        reported_depth,
+        inflight,
+        last_stats,
+        stats_waiters,
+        last_heard,
+    }
+}
+
+/// Monitor main loop: owns the [`Supervisor`]; recovers crashed shards,
+/// executes chaos kills, polls health/stats, and finally reaps everything.
+/// Returns the total restart count.
+fn monitor_main(
+    mut supervisor: Supervisor,
+    core: Arc<ClusterCore>,
+    rx: mpsc::Receiver<MonitorMsg>,
+    monitor_tx: mpsc::Sender<MonitorMsg>,
+) -> u64 {
+    let mut last_poll = Instant::now();
+    loop {
+        match rx.recv_timeout(POLL) {
+            Ok(MonitorMsg::ShardDown { shard, generation }) => {
+                recover(&mut supervisor, &core, &monitor_tx, shard, generation);
+            }
+            Ok(MonitorMsg::KillShard(shard)) => {
+                // The kill is observed through the normal crash path: the
+                // link's reader sees EOF and files a ShardDown.
+                supervisor.kill(shard);
+            }
+            Ok(MonitorMsg::Finalize) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Recovery is off from here on: drain the shard daemons —
+                // their link EOFs must read as shutdown, not as crashes.
+                core.send_shutdowns();
+                break;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                for (shard, generation) in supervisor.reap_exited() {
+                    recover(&mut supervisor, &core, &monitor_tx, shard, generation);
+                }
+                core.poll_stats();
+                // Hung-shard watchdog: a shard that is alive as a process
+                // but has answered nothing (not even these stats polls)
+                // for HEALTH_TIMEOUT is killed so its EOF drives the
+                // normal recovery path. Repeat kills of an already-dead
+                // child are harmless; the generation guard deduplicates
+                // the recoveries. Staleness is only trusted while polling
+                // has been continuous — right after a long blocking
+                // recovery, shards get one tick to answer the resumed
+                // poll before being judged.
+                if last_poll.elapsed() <= 2 * POLL {
+                    for shard in core.stalled_shards(HEALTH_TIMEOUT) {
+                        supervisor.kill(shard);
+                    }
+                }
+                last_poll = Instant::now();
+            }
+        }
+    }
+    let restarts = supervisor.restarts_total();
+    supervisor.shutdown(SHUTDOWN_GRACE);
+    restarts
+}
+
+/// One shard-crash recovery: respawn within budget and requeue the dead
+/// incarnation's unanswered tickets; past budget, requeue to survivors
+/// and route around the abandoned shard from now on.
+fn recover(
+    supervisor: &mut Supervisor,
+    core: &Arc<ClusterCore>,
+    monitor_tx: &mpsc::Sender<MonitorMsg>,
+    shard: usize,
+    generation: u64,
+) {
+    if !core.mark_dead(shard, generation) {
+        return; // stale report: a newer incarnation is already up
+    }
+    core.router.lock().expect("router poisoned").forget_shard(shard);
+    let orphans = match supervisor.respawn(shard) {
+        Ok(conn) => {
+            let link = spawn_link(
+                shard,
+                supervisor.generation(shard),
+                conn,
+                Arc::clone(core),
+                monitor_tx.clone(),
+            );
+            core.install_link(shard, link)
+        }
+        Err(_) => {
+            supervisor.abandon(shard);
+            core.take_inflight(shard)
+        }
+    };
+    core.requeue(orphans);
+}
+
+/// A started-but-not-yet-serving cluster (the `Daemon` analogue one
+/// layer up): the shard fleet is up and linked, the front listener is
+/// bound; [`Cluster::run`] blocks until shutdown and returns the merged
+/// report.
+pub struct Cluster {
+    daemon: Daemon,
+    core: Arc<ClusterCore>,
+    monitor: std::thread::JoinHandle<u64>,
+    monitor_tx: mpsc::Sender<MonitorMsg>,
+}
+
+/// Remote control for a running cluster: graceful shutdown plus the
+/// shard-kill chaos hook the crash-recovery tests drive.
+#[derive(Clone)]
+pub struct ClusterHandle {
+    daemon: DaemonHandle,
+    monitor_tx: mpsc::Sender<MonitorMsg>,
+}
+
+impl ClusterHandle {
+    /// Begin a graceful drain of the whole cluster (front + shards).
+    pub fn shutdown(&self) {
+        self.daemon.shutdown();
+    }
+
+    /// SIGKILL one shard daemon (fault injection). The supervisor
+    /// restarts it and requeues its in-flight jobs — external clients
+    /// still receive every reply exactly once.
+    pub fn kill_shard(&self, shard: usize) {
+        let _ = self.monitor_tx.send(MonitorMsg::KillShard(shard));
+    }
+}
+
+impl Cluster {
+    /// Bind the front listener, spawn and link `cfg.shards` shard
+    /// daemons, and start the supervision monitor. Everything is torn
+    /// down if any step fails — no half-up cluster.
+    pub fn start(listen: &str, net: NetConfig, cfg: ClusterConfig) -> Result<Cluster> {
+        cfg.validate()?;
+        // Bind first: an unusable front address should fail before any
+        // child process exists.
+        let daemon = Daemon::bind(listen, net, cfg.serve.clone())?;
+        let sup_cfg = SupervisorConfig {
+            program: cfg.program.clone(),
+            socket_dir: cfg.socket_dir.clone(),
+            serve: cfg.serve.clone(),
+            max_restarts: cfg.max_restarts,
+        };
+        let (supervisor, conns) = Supervisor::spawn(sup_cfg, cfg.shards)?;
+        let (monitor_tx, monitor_rx) = mpsc::channel();
+        let core = Arc::new(ClusterCore::new(&cfg));
+        {
+            let mut links = core.links.lock().expect("links poisoned");
+            for (i, conn) in conns.into_iter().enumerate() {
+                links.push(spawn_link(i, 0, conn, Arc::clone(&core), monitor_tx.clone()));
+            }
+        }
+        let monitor = {
+            let core = Arc::clone(&core);
+            let monitor_tx = monitor_tx.clone();
+            std::thread::spawn(move || monitor_main(supervisor, core, monitor_rx, monitor_tx))
+        };
+        Ok(Cluster { daemon, core, monitor, monitor_tx })
+    }
+
+    /// The front door's bound address, in `Daemon::bind` notation.
+    pub fn local_addr(&self) -> String {
+        self.daemon.local_addr()
+    }
+
+    pub fn handle(&self) -> ClusterHandle {
+        ClusterHandle { daemon: self.daemon.handle(), monitor_tx: self.monitor_tx.clone() }
+    }
+
+    /// Serve until a `{"op":"shutdown"}` frame or a
+    /// [`ClusterHandle::shutdown`]: drain every front connection,
+    /// collect final shard stats, drain and reap the shard daemons, and
+    /// return the merged cluster [`ServeReport`] (front counters +
+    /// fan-in accounting + shard shed counters + restart count).
+    pub fn run(self) -> Result<ServeReport> {
+        let Cluster { daemon, core, monitor, monitor_tx } = self;
+        let fin = Arc::clone(&core);
+        daemon.run_with(core, move || Ok(fin.finalize(monitor_tx, monitor)))
+    }
+}

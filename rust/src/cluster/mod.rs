@@ -1,0 +1,122 @@
+//! `kpynq::cluster` — cross-process shards behind one serving endpoint.
+//!
+//! PR 2 sharded one process (worker threads with private engine banks);
+//! PR 3 made the NDJSON job model a normative wire protocol
+//! (PROTOCOL.md) and put a daemon on it. This subsystem is the next
+//! scale-out rung on the ROADMAP: `kpynq cluster --shards N` turns N
+//! independent `kpynq serve --listen unix:…` daemons — each a whole
+//! process with its own admission queue and warm engine banks — into one
+//! serving surface, the map-reduce shape the related k-means scale-out
+//! work uses (simplified map-reduce over processing elements; an AccD/
+//! KPynq-style host coordinator dispatching distance work to workers —
+//! here each "worker" is an entire daemon). Four pieces:
+//!
+//! * [`client`] — [`client::ClientConn`]: the first *client*-side
+//!   implementation of PROTOCOL.md in the tree (greeting + handshake,
+//!   id remapping, typed control frames, bounded reconnect-with-backoff),
+//!   built on the same `serve::codec` framing the daemon uses.
+//! * [`supervisor`] — [`supervisor::Supervisor`]: spawns and owns the
+//!   shard child processes, waits for protocol-level readiness, respawns
+//!   crashes within a budget, reaps zombies.
+//! * [`router`] — [`router::Router`]: the fan-out policy. BatchKey
+//!   affinity keeps same-shape jobs on one shard so the lockstep
+//!   micro-batcher still coalesces across processes; everything else
+//!   goes to the least-loaded live shard (by the `stats` frame's
+//!   `queue_depth` plus the exact local in-flight count).
+//! * [`front`] — [`front::Cluster`]: the front door. It reuses
+//!   `serve::net`'s listener and connection protocol via the
+//!   `net::FrontCore` trait, so external clients see one ordinary
+//!   daemon; behind it, tickets fan out to shards and replies fan back
+//!   in with client ids restored, shard crashes are recovered with
+//!   in-flight work requeued, and the final [`crate::serve::ServeReport`]
+//!   merges the shards' counters.
+//!
+//! The contract is the serving guarantee one level up: **cluster-served
+//! results are bit-identical to single-daemon results are bit-identical
+//! to direct engine runs** — asserted end to end (FNV fingerprints
+//! included) by `rust/tests/cluster.rs`, which also kills a shard
+//! mid-stream and checks every reply still arrives exactly once.
+//! Cluster-layer contracts live in DESIGN.md §2; the wire surface is
+//! unchanged from PROTOCOL.md.
+
+pub mod client;
+pub mod front;
+pub mod router;
+pub mod supervisor;
+
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+use crate::serve::ServeConfig;
+
+pub use client::{ClientConn, ClientEvent, ShardStats};
+pub use front::{Cluster, ClusterHandle};
+pub use router::Router;
+pub use supervisor::Supervisor;
+
+/// Cluster shape (the `[cluster]` config section + `kpynq cluster` flags).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Shard daemon count.
+    pub shards: usize,
+    /// Per-shard pool shape (each shard gets its own `[serve]`-shaped
+    /// pool: workers, queue, batching, shed policy).
+    pub serve: ServeConfig,
+    /// Directory for the shards' `unix:` listener sockets.
+    pub socket_dir: PathBuf,
+    /// Respawns allowed per shard before it is abandoned and routed
+    /// around.
+    pub max_restarts: u32,
+    /// The `kpynq` binary to exec as shards (defaults to the current
+    /// executable).
+    pub program: PathBuf,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            shards: 2,
+            serve: ServeConfig::default(),
+            socket_dir: default_socket_dir(),
+            max_restarts: 3,
+            program: supervisor::default_program(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            return Err(Error::Config("cluster shards must be positive".into()));
+        }
+        self.serve.validate()
+    }
+}
+
+/// Default shard-socket directory: per-process under the system temp dir
+/// (Unix sockets want short paths; `sun_path` caps out around 104 bytes).
+pub fn default_socket_dir() -> PathBuf {
+    std::env::temp_dir().join(format!("kpynq-cluster-{}", std::process::id()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_config_validates() {
+        ClusterConfig::default().validate().unwrap();
+        assert!(ClusterConfig { shards: 0, ..Default::default() }.validate().is_err());
+        let bad_serve = ClusterConfig {
+            serve: ServeConfig { workers: 0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(bad_serve.validate().is_err());
+    }
+
+    #[test]
+    fn default_socket_dir_is_process_scoped() {
+        let d = default_socket_dir();
+        assert!(d.to_string_lossy().contains("kpynq-cluster-"));
+    }
+}

@@ -1,0 +1,153 @@
+//! Fan-out policy: which shard gets a job.
+//!
+//! Two forces pull on placement. Micro-batching wants *affinity*: the
+//! lockstep batcher only coalesces jobs sharing a [`BatchKey`] (same
+//! dimensionality, same backend — `serve::batch`), and jobs scattered
+//! across shards can never meet in one shard's queue, so same-shape
+//! traffic should pile onto one shard until it is actually loaded.
+//! Utilization wants *spreading*: an idle shard is wasted capacity. The
+//! policy here is therefore **BatchKey affinity with a least-queue-depth
+//! fallback**:
+//!
+//! * a job whose `BatchKey` was seen before goes to the shard that key is
+//!   pinned to (coalescing keeps working across processes);
+//! * a new key — or an unbatchable job (fpga-sim, file datasets), which
+//!   pops solo everywhere — goes to the live shard with the smallest
+//!   queue depth, ties broken by lowest shard index (deterministic, and
+//!   pinned by the unit tests below);
+//! * a dead shard (`depth == usize::MAX`) is never chosen, and
+//!   [`Router::forget_shard`] drops its pins so its keys re-home by
+//!   current load after a crash.
+//!
+//! Depth is whatever load signal the caller trusts; the cluster front
+//! feeds it `max(local in-flight count, last reported queue_depth)` — the
+//! `stats` control frame's `queue_depth` field (PROTOCOL.md §6) refreshed
+//! by the health poll, combined with the exact local count of
+//! not-yet-answered forwards. The router is pure and single-threaded by
+//! design: policy decisions are unit-testable without a socket in sight.
+
+use std::collections::HashMap;
+
+use crate::serve::batch::BatchKey;
+use crate::serve::job::FitRequest;
+
+/// Marks a shard the router must never pick.
+pub const DEAD: usize = usize::MAX;
+
+/// The fan-out policy state: `BatchKey → shard` pins.
+#[derive(Debug, Default)]
+pub struct Router {
+    affinity: HashMap<BatchKey, usize>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Pick a shard for `req` given per-shard depths (`DEAD` = not
+    /// routable). Returns `None` only when every shard is dead.
+    pub fn route(&mut self, req: &FitRequest, depths: &[usize]) -> Option<usize> {
+        let key = BatchKey::of(req);
+        if let Some(key) = &key {
+            if let Some(&pinned) = self.affinity.get(key) {
+                if depths.get(pinned).copied().unwrap_or(DEAD) != DEAD {
+                    return Some(pinned);
+                }
+                // Pinned shard died between forget_shard sweeps: re-home.
+                self.affinity.remove(key);
+            }
+        }
+        let shard = least_loaded(depths)?;
+        if let Some(key) = key {
+            self.affinity.insert(key, shard);
+        }
+        Some(shard)
+    }
+
+    /// Drop every pin onto `shard` (it crashed or was retired); its keys
+    /// re-home to the least-loaded survivor on next sight.
+    pub fn forget_shard(&mut self, shard: usize) {
+        self.affinity.retain(|_, &mut s| s != shard);
+    }
+
+    /// Current number of pinned keys (telemetry).
+    pub fn pinned_keys(&self) -> usize {
+        self.affinity.len()
+    }
+}
+
+/// Smallest depth wins; ties break to the lowest index; `DEAD` entries
+/// never win. `None` when nothing is routable.
+fn least_loaded(depths: &[usize]) -> Option<usize> {
+    depths
+        .iter()
+        .enumerate()
+        .filter(|&(_, &d)| d != DEAD)
+        .min_by_key(|&(i, &d)| (d, i))
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_job(dataset: &str) -> FitRequest {
+        FitRequest { dataset: dataset.into(), ..Default::default() }
+    }
+
+    fn solo_job() -> FitRequest {
+        // fpga-sim has no BatchKey: always routed by load, never pinned.
+        FitRequest { backend_name: "fpga-sim".into(), ..Default::default() }
+    }
+
+    #[test]
+    fn same_batch_key_sticks_to_one_shard() {
+        let mut r = Router::new();
+        // First sight: blobs/native goes least-loaded (tie → shard 0).
+        assert_eq!(r.route(&native_job("blobs"), &[0, 0]), Some(0));
+        // Even with shard 1 now emptier, the key stays pinned to 0 so the
+        // lockstep batcher can coalesce the stream.
+        assert_eq!(r.route(&native_job("blobs"), &[5, 0]), Some(0));
+        assert_eq!(r.route(&native_job("blobs"), &[9, 0]), Some(0));
+        // A different key (kegg is d=20, blobs d=16) routes by load.
+        assert_eq!(r.route(&native_job("kegg"), &[9, 0]), Some(1));
+        assert_eq!(r.pinned_keys(), 2);
+    }
+
+    #[test]
+    fn unbatchable_jobs_always_go_least_loaded() {
+        let mut r = Router::new();
+        assert_eq!(r.route(&solo_job(), &[3, 1]), Some(1));
+        assert_eq!(r.route(&solo_job(), &[0, 1]), Some(0));
+        assert_eq!(r.pinned_keys(), 0, "solo jobs never pin");
+    }
+
+    #[test]
+    fn ties_break_to_the_lowest_index() {
+        let mut r = Router::new();
+        assert_eq!(r.route(&solo_job(), &[2, 2, 2]), Some(0));
+        assert_eq!(r.route(&solo_job(), &[2, 1, 1]), Some(1));
+        // A pinned key also forms on the tie-broken shard.
+        assert_eq!(r.route(&native_job("blobs"), &[4, 4]), Some(0));
+        assert_eq!(r.route(&native_job("blobs"), &[4, 0]), Some(0), "pin beats depth");
+    }
+
+    #[test]
+    fn dead_shards_are_skipped_and_forgotten_pins_rehome() {
+        let mut r = Router::new();
+        assert_eq!(r.route(&native_job("blobs"), &[0, 0]), Some(0));
+        // Shard 0 dies. Without a forget sweep, the stale pin is detected
+        // at route time and re-homed.
+        assert_eq!(r.route(&native_job("blobs"), &[DEAD, 7]), Some(1));
+        // The new pin holds on shard 1.
+        assert_eq!(r.route(&native_job("blobs"), &[0, 7]), Some(1));
+        // forget_shard clears pins wholesale.
+        r.forget_shard(1);
+        assert_eq!(r.pinned_keys(), 0);
+        assert_eq!(r.route(&native_job("blobs"), &[0, 7]), Some(0));
+        // Everything dead: nowhere to route.
+        assert_eq!(r.route(&solo_job(), &[DEAD, DEAD]), None);
+        assert_eq!(r.route(&solo_job(), &[]), None);
+    }
+}

@@ -1,0 +1,292 @@
+//! Shard process lifecycle: spawn, health, restart, reap.
+//!
+//! Each shard is a whole `kpynq serve --listen unix:<dir>/shard-<i>.sock`
+//! child process with its own engine banks — the cross-process analogue
+//! of PR 2's in-process worker shards, so warm-engine amortization scales
+//! past one address space (DESIGN.md §2). The [`Supervisor`] owns the
+//! `std::process::Child` handles and nothing else: readiness waits,
+//! respawn budgets and zombie reaping live here, while in-flight-job
+//! bookkeeping (what must be requeued when a shard dies) stays with the
+//! cluster front, which is the only component that knows what each shard
+//! was sent.
+//!
+//! Readiness is protocol-level, not process-level: a shard counts as up
+//! when a [`ClientConn`] completes the PROTOCOL.md §2 greeting +
+//! handshake over its socket — the same connection the front then keeps
+//! as the shard's forwarding link, so there is no separate health port to
+//! drift from reality. Liveness after that is watched two ways: the
+//! link's reader sees EOF the moment the process dies, and the front's
+//! periodic poll calls [`Supervisor::reap_exited`] to catch children that
+//! exited without ever owning a socket.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::serve::ServeConfig;
+
+use super::client::ClientConn;
+
+/// Connect-retry shape for a freshly spawned shard: doubling backoff
+/// from 20 ms capped at 250 ms, 45 attempts ≈ a 10 s total budget,
+/// vetoed early if the child exits. Deliberately bounded: a respawn runs
+/// this inline on the cluster's monitor thread, which is stalled for the
+/// duration.
+const READY_ATTEMPTS: u32 = 45;
+const READY_DELAY: Duration = Duration::from_millis(20);
+const READY_MAX_DELAY: Duration = Duration::from_millis(250);
+
+/// How a shard process is launched.
+#[derive(Clone, Debug)]
+pub struct SupervisorConfig {
+    /// The `kpynq` binary to exec. Defaults to the current executable —
+    /// right for `kpynq cluster`; tests point it at `CARGO_BIN_EXE_kpynq`.
+    pub program: PathBuf,
+    /// Directory for `shard-<i>.sock` listener sockets.
+    pub socket_dir: PathBuf,
+    /// Per-shard pool shape, forwarded as `--workers/--queue/--batch/--shed`.
+    pub serve: ServeConfig,
+    /// Respawns allowed per shard before it is abandoned as dead.
+    pub max_restarts: u32,
+}
+
+struct ShardProc {
+    child: Child,
+    socket: PathBuf,
+    restarts: u32,
+    /// Bumped on every (re)spawn; stale crash reports from a link of an
+    /// earlier incarnation are ignored by generation.
+    generation: u64,
+    /// Past its restart budget: the reaper stops reporting it and
+    /// `respawn` refuses it.
+    abandoned: bool,
+    /// This incarnation was killed *by us* (health watchdog / chaos
+    /// hook), not by a crash of its own: its respawn is budget-free, so
+    /// a slow-but-healthy shard repeatedly reaped by the watchdog can
+    /// never spiral into permanent abandonment — the budget only counts
+    /// deaths the shard caused itself.
+    killed_by_supervisor: bool,
+}
+
+/// Owns the shard child processes of one cluster.
+pub struct Supervisor {
+    cfg: SupervisorConfig,
+    shards: Vec<ShardProc>,
+    restarts_total: u64,
+}
+
+impl Supervisor {
+    /// Spawn `shards` children and wait until each one speaks the
+    /// protocol; returns the supervisor plus one ready connection per
+    /// shard (in shard order). Any startup failure kills what was already
+    /// spawned — a half-up cluster is refused, not served.
+    pub fn spawn(cfg: SupervisorConfig, shards: usize) -> Result<(Supervisor, Vec<ClientConn>)> {
+        if shards == 0 {
+            return Err(Error::Config("cluster shards must be positive".into()));
+        }
+        std::fs::create_dir_all(&cfg.socket_dir)?;
+        let mut sup = Supervisor { cfg, shards: Vec::with_capacity(shards), restarts_total: 0 };
+        let mut conns = Vec::with_capacity(shards);
+        for index in 0..shards {
+            match sup.spawn_one(index) {
+                Ok((proc_, conn)) => {
+                    sup.shards.push(proc_);
+                    conns.push(conn);
+                }
+                Err(e) => {
+                    sup.kill_all();
+                    return Err(e);
+                }
+            }
+        }
+        Ok((sup, conns))
+    }
+
+    /// The `unix:<path>` address of shard `index`.
+    pub fn socket_addr(&self, index: usize) -> String {
+        format!("unix:{}", self.shards[index].socket.display())
+    }
+
+    /// OS pid of shard `index`'s current incarnation.
+    pub fn pid(&self, index: usize) -> u32 {
+        self.shards[index].child.id()
+    }
+
+    /// Current spawn generation of shard `index`.
+    pub fn generation(&self, index: usize) -> u64 {
+        self.shards[index].generation
+    }
+
+    /// Total respawns performed over the cluster's lifetime.
+    pub fn restarts_total(&self) -> u64 {
+        self.restarts_total
+    }
+
+    /// SIGKILL shard `index` (fault injection / last-resort teardown).
+    /// The crash is observed and recovered through the normal path: the
+    /// shard's link sees EOF and reports it.
+    pub fn kill(&mut self, index: usize) {
+        let s = &mut self.shards[index];
+        s.killed_by_supervisor = true;
+        let _ = s.child.kill();
+        let _ = s.child.wait(); // reap; a later respawn must not see a zombie
+    }
+
+    /// Sweep for children that exited on their own; returns
+    /// `(index, generation)` of each newly dead shard. (Crashes are
+    /// usually seen first by the shard's link reader — this catches a
+    /// child that died without ever serving its socket.)
+    pub fn reap_exited(&mut self) -> Vec<(usize, u64)> {
+        let mut dead = Vec::new();
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            if s.abandoned {
+                continue;
+            }
+            if let Ok(Some(_)) = s.child.try_wait() {
+                dead.push((i, s.generation));
+            }
+        }
+        dead
+    }
+
+    /// Stop supervising shard `index` for good (its restart budget is
+    /// spent, or it cannot be respawned); the reaper ignores it from now
+    /// on and `respawn` refuses it.
+    pub fn abandon(&mut self, index: usize) {
+        let s = &mut self.shards[index];
+        s.abandoned = true;
+        let _ = s.child.kill();
+        let _ = s.child.wait();
+    }
+
+    /// Replace a dead shard with a fresh incarnation and return a ready
+    /// connection to it. Fails once the shard's respawn budget
+    /// (`max_restarts`) is exhausted — the caller then requeues its work
+    /// onto the survivors and routes around it.
+    pub fn respawn(&mut self, index: usize) -> Result<ClientConn> {
+        if self.shards[index].abandoned {
+            return Err(Error::Config(format!("shard {index} was abandoned")));
+        }
+        // Supervisor-initiated kills (watchdog, chaos) respawn for free;
+        // only self-inflicted deaths consume the budget.
+        let budgeted = !self.shards[index].killed_by_supervisor;
+        if budgeted && self.shards[index].restarts >= self.cfg.max_restarts {
+            return Err(Error::Config(format!(
+                "shard {index} exceeded its restart budget ({})",
+                self.cfg.max_restarts
+            )));
+        }
+        // Reap whatever is left of the old incarnation.
+        let _ = self.shards[index].child.kill();
+        let _ = self.shards[index].child.wait();
+        let restarts = self.shards[index].restarts + if budgeted { 1 } else { 0 };
+        let generation = self.shards[index].generation + 1;
+        let (mut proc_, conn) = self.spawn_one(index)?;
+        proc_.restarts = restarts;
+        proc_.generation = generation;
+        self.restarts_total += 1;
+        self.shards[index] = proc_;
+        Ok(conn)
+    }
+
+    /// Wait for every child to exit within `grace` (the caller has
+    /// already sent each one `{"op":"shutdown"}`); stragglers are killed.
+    pub fn shutdown(mut self, grace: Duration) {
+        let deadline = std::time::Instant::now() + grace;
+        loop {
+            let all_done = self
+                .shards
+                .iter_mut()
+                .all(|s| matches!(s.child.try_wait(), Ok(Some(_))));
+            if all_done {
+                break;
+            }
+            if std::time::Instant::now() >= deadline {
+                self.kill_all();
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        for s in &self.shards {
+            let _ = std::fs::remove_file(&s.socket);
+        }
+    }
+
+    fn kill_all(&mut self) {
+        for s in &mut self.shards {
+            let _ = s.child.kill();
+            let _ = s.child.wait();
+        }
+    }
+
+    /// Spawn shard `index` and block until it speaks the protocol.
+    fn spawn_one(&self, index: usize) -> Result<(ShardProc, ClientConn)> {
+        let socket = self.cfg.socket_dir.join(format!("shard-{index}.sock"));
+        // A stale socket from a previous incarnation would let the connect
+        // loop reach a dead listener; the daemon also clears it, but only
+        // once it gets as far as binding.
+        let _ = std::fs::remove_file(&socket);
+        let addr = format!("unix:{}", socket.display());
+        let serve = &self.cfg.serve;
+        let mut child = Command::new(&self.cfg.program)
+            .arg("serve")
+            .arg("--listen")
+            .arg(&addr)
+            .arg("--workers")
+            .arg(serve.workers.to_string())
+            .arg("--queue")
+            .arg(serve.queue_capacity.to_string())
+            .arg("--batch")
+            .arg(serve.max_batch.to_string())
+            .arg("--shed")
+            .arg(serve.shed_policy.name())
+            // The shard's stdio is not ours to inherit: stdout is unused by
+            // the daemon, and a piped stderr nobody drains would wedge the
+            // child on its first report write.
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(|e| {
+                Error::Config(format!(
+                    "cannot spawn shard {index} ({}): {e}",
+                    self.cfg.program.display()
+                ))
+            })?;
+        let conn = ClientConn::connect_with_backoff(
+            &addr,
+            READY_ATTEMPTS,
+            READY_DELAY,
+            READY_MAX_DELAY,
+            || match child.try_wait() {
+                Ok(Some(status)) => Some(format!("shard {index} exited during startup: {status}")),
+                _ => None,
+            },
+        );
+        match conn {
+            Ok(conn) => Ok((
+                ShardProc {
+                    child,
+                    socket,
+                    restarts: 0,
+                    generation: 0,
+                    abandoned: false,
+                    killed_by_supervisor: false,
+                },
+                conn,
+            )),
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                Err(e)
+            }
+        }
+    }
+}
+
+/// The default shard program: this very binary (`kpynq cluster` re-execs
+/// itself as `kpynq serve`).
+pub fn default_program() -> PathBuf {
+    std::env::current_exe().unwrap_or_else(|_| PathBuf::from("kpynq"))
+}

@@ -59,6 +59,13 @@ pub struct RunConfig {
     pub serve_max_conns: usize,
     /// Daemon: idle-connection timeout in milliseconds (0 = never).
     pub serve_idle_timeout_ms: u64,
+    /// Cluster: shard daemon count (`kpynq cluster`).
+    pub cluster_shards: usize,
+    /// Cluster: directory for shard `unix:` sockets ("" = per-process
+    /// temp dir).
+    pub cluster_socket_dir: String,
+    /// Cluster: respawns allowed per shard before it is abandoned.
+    pub cluster_max_restarts: usize,
 }
 
 impl Default for RunConfig {
@@ -85,6 +92,9 @@ impl Default for RunConfig {
             serve_listen: String::new(),
             serve_max_conns: 32,
             serve_idle_timeout_ms: 0,
+            cluster_shards: 2,
+            cluster_socket_dir: String::new(),
+            cluster_max_restarts: 3,
         }
     }
 }
@@ -126,6 +136,11 @@ shed = "block"           # block|shed (full-queue policy)
 listen = ""              # daemon: "host:port" or "unix:/path.sock"; "" = one-shot stdin mode
 max_conns = 32           # simultaneous client connections (extras refused)
 idle_timeout_ms = 0      # close idle connections after this long (0 = never)
+
+[cluster]
+shards = 2               # shard daemon processes (kpynq cluster); each gets the [serve] pool
+socket_dir = ""          # shard unix-socket dir; "" = per-process temp dir
+max_restarts = 3         # respawns per shard before it is abandoned
 "#;
 
 impl RunConfig {
@@ -228,6 +243,16 @@ impl RunConfig {
             // a ~584-million-year timeout.
             cfg.serve_idle_timeout_ms = v.as_usize()? as u64;
         }
+
+        if let Some(v) = toml::get(&doc, "cluster", "shards") {
+            cfg.cluster_shards = v.as_usize()?;
+        }
+        if let Some(v) = toml::get(&doc, "cluster", "socket_dir") {
+            cfg.cluster_socket_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = toml::get(&doc, "cluster", "max_restarts") {
+            cfg.cluster_max_restarts = v.as_usize()?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -250,7 +275,27 @@ impl RunConfig {
         }
         self.serve_config()?;
         self.net_config()?;
+        self.cluster_config()?;
         Ok(())
+    }
+
+    /// Build the cluster shape described by the `[cluster]` section (the
+    /// per-shard pool comes from `[serve]`; the shard binary defaults to
+    /// the current executable).
+    pub fn cluster_config(&self) -> Result<crate::cluster::ClusterConfig> {
+        let cfg = crate::cluster::ClusterConfig {
+            shards: self.cluster_shards,
+            serve: self.serve_config()?,
+            socket_dir: if self.cluster_socket_dir.is_empty() {
+                crate::cluster::default_socket_dir()
+            } else {
+                PathBuf::from(&self.cluster_socket_dir)
+            },
+            max_restarts: self.cluster_max_restarts as u32,
+            ..Default::default()
+        };
+        cfg.validate()?;
+        Ok(cfg)
     }
 
     /// Build the serving-pool config described by the `[serve]` section.
@@ -376,6 +421,24 @@ mod tests {
         assert!(RunConfig::from_toml("[serve]\nworkers = 0").is_err());
         assert!(RunConfig::from_toml("[serve.net]\nmax_conns = 0").is_err());
         assert!(RunConfig::from_toml("[serve.net]\nidle_timeout_ms = -500").is_err());
+        assert!(RunConfig::from_toml("[cluster]\nshards = 0").is_err());
+    }
+
+    #[test]
+    fn cluster_section_configures_the_shard_fleet() {
+        let cfg = RunConfig::from_toml(
+            "[serve]\nworkers = 3\n[cluster]\nshards = 4\nsocket_dir = \"/tmp/kp\"\nmax_restarts = 1",
+        )
+        .unwrap();
+        let cluster = cfg.cluster_config().unwrap();
+        assert_eq!(cluster.shards, 4);
+        assert_eq!(cluster.serve.workers, 3, "shards inherit the [serve] pool shape");
+        assert_eq!(cluster.socket_dir, PathBuf::from("/tmp/kp"));
+        assert_eq!(cluster.max_restarts, 1);
+        // Defaults: 2 shards, per-process temp socket dir.
+        let d = RunConfig::default().cluster_config().unwrap();
+        assert_eq!(d.shards, 2);
+        assert!(d.socket_dir.to_string_lossy().contains("kpynq-cluster-"));
     }
 
     #[test]

@@ -10,10 +10,13 @@
 //!   AXIS transport, BRAM banking, the pipelined distance calculator and the
 //!   point/group filter units, the host-side coordinator ([`coordinator`])
 //!   that tiles datasets, drives double-buffered transfers and manages run
-//!   state, and the multi-tenant serving layer ([`serve`]) that queues,
+//!   state, the multi-tenant serving layer ([`serve`]) that queues,
 //!   shards and micro-batches concurrent fit requests over the coordinator —
 //!   one-shot from NDJSON streams, or as a persistent socket daemon
-//!   (`kpynq serve --listen`, wire protocol normative in PROTOCOL.md).
+//!   (`kpynq serve --listen`, wire protocol normative in PROTOCOL.md) —
+//!   and the cross-process shard supervisor ([`cluster`]) that puts N such
+//!   daemons behind one endpoint (`kpynq cluster`) with BatchKey-affine
+//!   fan-out, crash recovery and exactly-once fan-in.
 //! * **Layer 2** — JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text and executed from Rust through PJRT ([`runtime`]). Python is
 //!   never on the request path.
@@ -42,6 +45,7 @@
 //!          out.fit.inertia, out.fit.iterations, out.report.total_cycles);
 //! ```
 
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

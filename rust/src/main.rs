@@ -7,6 +7,7 @@
 //! kpynq run [--config FILE] [--dataset NAME] [--k K] [--backend B] [--software]
 //! kpynq serve [--jobs FILE] [--workers N] [--batch N]   NDJSON fit jobs → pool
 //! kpynq serve --listen ADDR [--max-conns N]             persistent daemon (PROTOCOL.md)
+//! kpynq cluster --shards N --listen ADDR                N shard daemons, one endpoint
 //! kpynq datasets                      list the built-in dataset generators
 //! kpynq resources [--d D] [--k K]     lane-count frontier on both parts
 //! kpynq init-config                   print an example config file
@@ -33,6 +34,7 @@ fn main() -> ExitCode {
     let result = match cmd {
         "run" => cmd_run(rest),
         "serve" => cmd_serve(rest),
+        "cluster" => cmd_cluster(rest),
         "datasets" => cmd_datasets(),
         "resources" => cmd_resources(rest),
         "init-config" => {
@@ -69,6 +71,7 @@ fn print_help() {
          commands:\n\
          \x20 run          cluster a dataset (simulated FPGA, native or XLA backend)\n\
          \x20 serve        serve line-delimited JSON fit jobs on a sharded worker pool\n\
+         \x20 cluster      one endpoint over N shard daemons (spawned + supervised)\n\
          \x20 datasets     list built-in dataset generators\n\
          \x20 resources    print the lane-count frontier for the supported parts\n\
          \x20 init-config  print an example TOML config\n\
@@ -99,7 +102,16 @@ fn print_help() {
          drain with {{\"op\":\"shutdown\"}} on any connection):\n\
          \x20 --listen ADDR         host:port (0 = ephemeral) or unix:/path.sock\n\
          \x20 --max-conns N         simultaneous client connections (default 32)\n\
-         \x20 --idle-timeout-ms N   close idle connections after N ms (default 0 = never)"
+         \x20 --idle-timeout-ms N   close idle connections after N ms (default 0 = never)\n\
+         \n\
+         cluster options (cross-process shards behind one endpoint; same wire\n\
+         protocol as the daemon — external clients cannot tell the difference):\n\
+         \x20 --listen ADDR         the front door (required; host:port or unix:/path.sock)\n\
+         \x20 --shards N            shard daemon processes (default 2; [cluster] in config)\n\
+         \x20 --socket-dir DIR      shard unix-socket directory (default: temp dir)\n\
+         \x20 --max-restarts N      respawns per crashed shard before abandoning it\n\
+         \x20 plus the serve pool flags (--workers/--queue/--batch/--shed, per shard)\n\
+         \x20 and the daemon flags (--max-conns/--idle-timeout-ms, at the front)"
     );
 }
 
@@ -330,6 +342,94 @@ fn cmd_serve_daemon(
         daemon.serve_config().shed_policy.name(),
     );
     let report = daemon.run()?;
+    eprint!("{}", report.render());
+    Ok(())
+}
+
+/// `kpynq cluster`: spawn and supervise N shard daemons behind one
+/// listener (wire surface identical to `kpynq serve --listen`; the
+/// fan-out/fan-in and crash-recovery contracts are in DESIGN.md §2).
+fn cmd_cluster(args: &[String]) -> kpynq::Result<()> {
+    use kpynq::cluster::Cluster;
+    use kpynq::serve::net::PROTO_VERSION;
+    use kpynq::serve::ShedPolicy;
+
+    let cfg = match take_opt(args, "--config") {
+        Some(path) => RunConfig::from_file(Path::new(&path))?,
+        None => RunConfig::default(),
+    };
+    // Per-shard pool shape: [serve] section + the serve pool flags.
+    let mut scfg = cfg.serve_config()?;
+    if let Some(w) = take_opt(args, "--workers") {
+        scfg.workers = w
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --workers '{w}'")))?;
+    }
+    if let Some(q) = take_opt(args, "--queue") {
+        scfg.queue_capacity = q
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --queue '{q}'")))?;
+    }
+    if let Some(b) = take_opt(args, "--batch") {
+        scfg.max_batch = b
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --batch '{b}'")))?;
+    }
+    if let Some(s) = take_opt(args, "--shed") {
+        scfg.shed_policy = ShedPolicy::from_name(&s)?;
+    }
+
+    // The flag-overridden pool shape replaces cluster_config()'s copy;
+    // the single ccfg.validate() below covers both it and the cluster
+    // fields (no separate scfg.validate() needed).
+    let mut ccfg = cfg.cluster_config()?;
+    ccfg.serve = scfg;
+    if let Some(n) = take_opt(args, "--shards") {
+        ccfg.shards = n
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --shards '{n}'")))?;
+    }
+    if let Some(d) = take_opt(args, "--socket-dir") {
+        ccfg.socket_dir = PathBuf::from(d);
+    }
+    if let Some(r) = take_opt(args, "--max-restarts") {
+        ccfg.max_restarts = r
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --max-restarts '{r}'")))?;
+    }
+    ccfg.validate()?;
+
+    let listen = take_opt(args, "--listen")
+        .or_else(|| (!cfg.serve_listen.is_empty()).then(|| cfg.serve_listen.clone()))
+        .ok_or_else(|| {
+            kpynq::Error::Config(
+                "kpynq cluster needs --listen ADDR (or [serve.net] listen in the config)".into(),
+            )
+        })?;
+    let mut net = cfg.net_config()?;
+    if let Some(n) = take_opt(args, "--max-conns") {
+        net.max_conns = n
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --max-conns '{n}'")))?;
+    }
+    if let Some(t) = take_opt(args, "--idle-timeout-ms") {
+        net.idle_timeout_ms = t
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --idle-timeout-ms '{t}'")))?;
+    }
+    net.validate()?;
+
+    let shards = ccfg.shards;
+    let workers = ccfg.serve.workers;
+    let cluster = Cluster::start(&listen, net, ccfg)?;
+    eprintln!(
+        "kpynq cluster: {} shards x {} workers behind {} (proto {PROTO_VERSION}; \
+         NDJSON jobs per PROTOCOL.md, drain with {{\"op\":\"shutdown\"}})",
+        shards,
+        workers,
+        cluster.local_addr(),
+    );
+    let report = cluster.run()?;
     eprint!("{}", report.render());
     Ok(())
 }

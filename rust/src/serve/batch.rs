@@ -27,7 +27,7 @@ use super::job::FitRequest;
 
 /// Which execution backend a request targets (the serve-side mirror of
 /// `coordinator::Backend`, comparable and hashable for batching).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum BackendKind {
     FpgaSim,
     Native,
@@ -57,7 +57,7 @@ impl BackendKind {
 /// backend, the same artifact directory (different artifact dirs mean
 /// different compiled programs; coalescing across them would execute a
 /// tenant against kernels it never asked for).
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub d: usize,
     pub backend: BackendKind,

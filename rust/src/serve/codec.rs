@@ -1,0 +1,362 @@
+//! The shared wire codec: line framing both protocol peers use.
+//!
+//! PR 3's daemon owned the only implementation of the NDJSON framing —
+//! the bounded [`LineReader`], the 64 KiB line cap, the line-locked
+//! writer. The cluster layer ([`crate::cluster`]) puts a *client* on the
+//! same wire, and a client that copied the framing would inevitably
+//! drift from it (the daemon's writer-side shutdown also used to assume
+//! the daemon owns the socket lifetime). So the codec lives here once,
+//! and `serve::net` (server side) and `cluster::client` (client side)
+//! are both thin users of it. The framing rules themselves are normative
+//! in PROTOCOL.md §2; this module implements them and cites them.
+//!
+//! What lives here:
+//!
+//! * [`MAX_LINE_BYTES`] — the request-line cap (PROTOCOL.md §2).
+//! * [`LineReader`] / [`LineEvent`] — incremental, bounded line framing
+//!   over a timeout-ticking stream.
+//! * [`write_line`] — one whole protocol line under a writer lock, so
+//!   concurrent writers never tear frames.
+//! * [`Stream`] — the TCP-or-Unix stream both peers speak over, plus
+//!   [`Stream::connect`] for the client side of the `host:port` /
+//!   `unix:<path>` address notation `Daemon::bind` accepts.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Hard cap on one protocol line (PROTOCOL.md §2). Longer lines are
+/// answered with a structured error and discarded up to the next newline.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// The minimal stream surface both TCP and Unix-domain sockets provide;
+/// connection handling (daemon and client alike) is generic over it.
+pub trait WireStream: Read + Write + Send + Sized + 'static {
+    fn try_clone_stream(&self) -> io::Result<Self>;
+    /// Force blocking mode: whether an accepted socket inherits the
+    /// listener's non-blocking flag is platform-dependent, and the read
+    /// loop's timeout ticks assume a blocking socket (a non-blocking one
+    /// would spin hot instead of sleeping up to the read tick).
+    fn set_blocking(&self) -> io::Result<()>;
+    fn set_read_timeout_dur(&self, d: Option<Duration>) -> io::Result<()>;
+    fn set_write_timeout_dur(&self, d: Option<Duration>) -> io::Result<()>;
+    fn shutdown_stream(&self);
+}
+
+impl WireStream for TcpStream {
+    fn try_clone_stream(&self) -> io::Result<Self> {
+        self.try_clone()
+    }
+    fn set_blocking(&self) -> io::Result<()> {
+        self.set_nonblocking(false)
+    }
+    fn set_read_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+    fn set_write_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_write_timeout(d)
+    }
+    fn shutdown_stream(&self) {
+        let _ = self.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+#[cfg(unix)]
+impl WireStream for std::os::unix::net::UnixStream {
+    fn try_clone_stream(&self) -> io::Result<Self> {
+        self.try_clone()
+    }
+    fn set_blocking(&self) -> io::Result<()> {
+        self.set_nonblocking(false)
+    }
+    fn set_read_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+    fn set_write_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_write_timeout(d)
+    }
+    fn shutdown_stream(&self) {
+        let _ = self.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// A connected protocol stream: TCP or (on Unix) Unix-domain — the
+/// client-side counterpart of the daemon's listener, speaking the same
+/// address notation (`host:port` or `unix:<path>`).
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+}
+
+impl Stream {
+    /// Connect to a daemon at `host:port` or `unix:<path>`.
+    pub fn connect(addr: &str) -> Result<Stream> {
+        match addr.strip_prefix("unix:") {
+            Some(path) => connect_unix(path),
+            None => {
+                let s = TcpStream::connect(addr)
+                    .map_err(|e| Error::Io(io::Error::new(e.kind(), format!("{addr}: {e}"))))?;
+                let _ = s.set_nodelay(true);
+                Ok(Stream::Tcp(s))
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+fn connect_unix(path: &str) -> Result<Stream> {
+    let s = std::os::unix::net::UnixStream::connect(path)
+        .map_err(|e| Error::Io(io::Error::new(e.kind(), format!("unix:{path}: {e}"))))?;
+    Ok(Stream::Unix(s))
+}
+
+#[cfg(not(unix))]
+fn connect_unix(_path: &str) -> Result<Stream> {
+    Err(Error::Config("unix-domain sockets are only available on Unix platforms".into()))
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+impl WireStream for Stream {
+    fn try_clone_stream(&self) -> io::Result<Self> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+        }
+    }
+    fn set_blocking(&self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(false),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(false),
+        }
+    }
+    fn set_read_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+    fn set_write_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(d),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_write_timeout(d),
+        }
+    }
+    fn shutdown_stream(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+/// Write one full protocol line under the peer's writer lock.
+pub fn write_line<S: Write>(out: &Mutex<S>, line: &str) -> io::Result<()> {
+    let mut w = out.lock().expect("wire writer lock poisoned");
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// One step of a connection read loop.
+pub enum LineEvent {
+    /// A complete line (without its terminator).
+    Line(Vec<u8>),
+    /// A line exceeded [`MAX_LINE_BYTES`]; its bytes are being discarded
+    /// up to the next newline.
+    Oversized,
+    /// The read timeout elapsed with no data — time to check shutdown
+    /// flags and idle budgets. Never produced on a stream with no read
+    /// timeout set.
+    Tick,
+    Eof,
+    Error(io::Error),
+}
+
+/// Incremental, bounded line reader over a timeout-ticking stream.
+/// `BufReader::read_line` can neither bound a hostile line's memory nor
+/// surface timeout ticks mid-line, so the accumulation is explicit here.
+pub struct LineReader<S: Read> {
+    stream: S,
+    acc: Vec<u8>,
+    discarding: bool,
+}
+
+impl<S: Read> LineReader<S> {
+    pub fn new(stream: S) -> Self {
+        Self { stream, acc: Vec::new(), discarding: false }
+    }
+
+    pub fn into_inner(self) -> S {
+        self.stream
+    }
+
+    /// The wrapped stream (for timeout adjustments mid-conversation).
+    pub fn get_ref(&self) -> &S {
+        &self.stream
+    }
+
+    pub fn next_event(&mut self) -> LineEvent {
+        loop {
+            if let Some(i) = self.acc.iter().position(|&b| b == b'\n') {
+                let rest = self.acc.split_off(i + 1);
+                let mut line = std::mem::replace(&mut self.acc, rest);
+                line.pop(); // the newline
+                if self.discarding {
+                    // Tail of an oversized line: drop it and resume normal
+                    // framing from the next line.
+                    self.discarding = false;
+                    continue;
+                }
+                if line.len() > MAX_LINE_BYTES {
+                    return LineEvent::Oversized; // complete, but too long
+                }
+                return LineEvent::Line(line);
+            }
+            if self.discarding {
+                self.acc.clear(); // bound memory while hunting the newline
+            } else if self.acc.len() > MAX_LINE_BYTES {
+                self.discarding = true;
+                self.acc.clear();
+                return LineEvent::Oversized;
+            }
+            let mut buf = [0u8; 4096];
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    // A final line without its terminator still counts (a
+                    // `printf` without `\n` followed by EOF); discarded
+                    // oversize tails do not.
+                    if self.acc.is_empty() || self.discarding {
+                        return LineEvent::Eof;
+                    }
+                    return LineEvent::Line(std::mem::take(&mut self.acc));
+                }
+                Ok(n) => self.acc.extend_from_slice(&buf[..n]),
+                Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                    return LineEvent::Tick
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return LineEvent::Error(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A scripted reader: each entry is either bytes to deliver or a
+    /// would-block tick.
+    struct Script(Vec<Option<Vec<u8>>>);
+
+    impl Read for Script {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            match self.0.pop() {
+                None => Ok(0), // EOF
+                Some(None) => Err(io::Error::new(io::ErrorKind::WouldBlock, "tick")),
+                Some(Some(mut bytes)) => {
+                    let n = bytes.len().min(buf.len());
+                    buf[..n].copy_from_slice(&bytes[..n]);
+                    if n < bytes.len() {
+                        // Hand the remainder back as the next read.
+                        self.0.push(Some(bytes.split_off(n)));
+                    }
+                    Ok(n)
+                }
+            }
+        }
+    }
+
+    fn reader(script: Vec<Option<&[u8]>>) -> LineReader<Script> {
+        LineReader::new(Script(
+            script.into_iter().rev().map(|e| e.map(|b| b.to_vec())).collect(),
+        ))
+    }
+
+    #[test]
+    fn line_reader_splits_and_reassembles_partial_lines() {
+        let mut r = reader(vec![Some(&b"{\"id\""[..]), Some(&b":1}\n{\"id\":2}\n"[..])]);
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"{\"id\":1}"));
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"{\"id\":2}"));
+        assert!(matches!(r.next_event(), LineEvent::Eof));
+    }
+
+    #[test]
+    fn line_reader_surfaces_ticks_between_chunks() {
+        let mut r = reader(vec![None, Some(&b"x\n"[..]), None]);
+        assert!(matches!(r.next_event(), LineEvent::Tick));
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"x"));
+        assert!(matches!(r.next_event(), LineEvent::Tick));
+        assert!(matches!(r.next_event(), LineEvent::Eof));
+    }
+
+    #[test]
+    fn line_reader_discards_oversized_lines_and_recovers() {
+        let big = vec![b'a'; MAX_LINE_BYTES + 4096];
+        let mut r = reader(vec![Some(&big[..]), Some(&b"bbb\nok\n"[..])]);
+        assert!(matches!(r.next_event(), LineEvent::Oversized));
+        // The giant line's tail ("bbb\n") is swallowed; framing resumes at
+        // the next line.
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"ok"));
+        assert!(matches!(r.next_event(), LineEvent::Eof));
+    }
+
+    #[test]
+    fn line_reader_yields_an_unterminated_final_line() {
+        let mut r = reader(vec![Some(&b"a\nb"[..])]);
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"a"));
+        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"b"));
+        assert!(matches!(r.next_event(), LineEvent::Eof));
+    }
+
+    #[test]
+    fn stream_connect_rejects_unreachable_addresses() {
+        // Nothing listens here; the point is the error carries the address.
+        let err = Stream::connect("127.0.0.1:1").unwrap_err();
+        assert!(err.to_string().contains("127.0.0.1:1"), "{err}");
+        #[cfg(unix)]
+        {
+            let err = Stream::connect("unix:/nonexistent/kpynq-test.sock").unwrap_err();
+            assert!(err.to_string().contains("kpynq-test.sock"), "{err}");
+        }
+    }
+}

@@ -197,6 +197,33 @@ impl FitRequest {
         Ok(req)
     }
 
+    /// Serialize onto the NDJSON wire (PROTOCOL.md §3) — the client side
+    /// of [`FitRequest::from_json`], used when forwarding a request to a
+    /// daemon (`cluster::client`). Exactly the §3 surface crosses the
+    /// wire: every documented key is emitted explicitly (`deadline_ms`
+    /// only when set), and fields outside it — notably `kmeans.init`,
+    /// which has no wire key — do not survive a round-trip.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("id".into(), Json::Num(self.id as f64));
+        m.insert("dataset".into(), Json::Str(self.dataset.clone()));
+        m.insert("data_seed".into(), Json::Num(self.data_seed as f64));
+        m.insert("max_points".into(), Json::Num(self.max_points as f64));
+        m.insert("normalize".into(), Json::Str(self.normalize.clone()));
+        m.insert("k".into(), Json::Num(self.kmeans.k as f64));
+        m.insert("groups".into(), Json::Num(self.kmeans.groups as f64));
+        m.insert("max_iters".into(), Json::Num(self.kmeans.max_iters as f64));
+        m.insert("tol".into(), Json::Num(self.kmeans.tol));
+        m.insert("seed".into(), Json::Num(self.kmeans.seed as f64));
+        m.insert("backend".into(), Json::Str(self.backend_name.clone()));
+        m.insert("artifact_dir".into(), Json::Str(self.artifact_dir.clone()));
+        m.insert("priority".into(), Json::Str(self.priority.name().into()));
+        if let Some(d) = self.deadline_ms {
+            m.insert("deadline_ms".into(), Json::Num(d as f64));
+        }
+        Json::Obj(m)
+    }
+
     /// The equivalent one-shot run configuration — served jobs reuse the
     /// `RunConfig` dataset/backend machinery verbatim, so a served fit and
     /// `kpynq run` with the same parameters see the same bytes.
@@ -241,6 +268,43 @@ impl JobStatus {
             JobStatus::Failed => "failed",
         }
     }
+
+    pub fn from_name(name: &str) -> Result<JobStatus> {
+        match name {
+            "ok" => Ok(JobStatus::Ok),
+            "shed" => Ok(JobStatus::Shed),
+            "failed" => Ok(JobStatus::Failed),
+            other => Err(Error::Parse(format!("unknown job status '{other}'"))),
+        }
+    }
+}
+
+/// The scalar fit summary that crosses the wire for an `ok` response
+/// (PROTOCOL.md §4): what a protocol peer knows about a completed
+/// clustering without holding the n-point assignment vector. Populated
+/// from the full [`FitResult`] by the worker that ran the job, or parsed
+/// back off the wire by [`FitResponse::from_wire_json`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FitSummary {
+    /// Final within-cluster sum of squared distances.
+    pub inertia: f64,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Whether the tolerance was met before `max_iters`.
+    pub converged: bool,
+    /// FNV-1a fingerprint of the assignment vector (PROTOCOL.md §8).
+    pub assignments_fnv: u64,
+}
+
+impl FitSummary {
+    pub fn of(fit: &FitResult) -> FitSummary {
+        FitSummary {
+            inertia: fit.inertia,
+            iterations: fit.iterations,
+            converged: fit.converged,
+            assignments_fnv: assignments_checksum(&fit.assignments),
+        }
+    }
 }
 
 /// Outcome of one served job.
@@ -261,8 +325,14 @@ pub struct FitResponse {
     /// Execution seconds. For coalesced jobs this is the whole batch
     /// dispatch — the latency the tenant observed, not a per-job share.
     pub service_seconds: f64,
+    /// Wire-level fit summary (`Some` exactly for [`JobStatus::Ok`]). For
+    /// locally executed jobs it is derived from `fit`; for responses
+    /// parsed off the wire ([`FitResponse::from_wire_json`]) it is all a
+    /// peer gets — the full clustering never crosses the NDJSON surface.
+    pub summary: Option<FitSummary>,
     /// The clustering, bit-identical to a direct `coordinator` run with
-    /// the same request parameters.
+    /// the same request parameters. `None` for shed/failed jobs and for
+    /// responses received over the wire.
     pub fit: Option<FitResult>,
     pub report: Option<RunReport>,
 }
@@ -278,6 +348,7 @@ impl FitResponse {
             batch_size: 0,
             queue_seconds,
             service_seconds: 0.0,
+            summary: None,
             fit: None,
             report: None,
         }
@@ -300,8 +371,37 @@ impl FitResponse {
             batch_size,
             queue_seconds,
             service_seconds: 0.0,
+            summary: None,
             fit: None,
             report: None,
+        }
+    }
+
+    /// A completed job's response: the summary is derived from the fit
+    /// here, once, so every later render (or wire crossing) agrees.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn ok(
+        id: u64,
+        backend: String,
+        worker: usize,
+        batch_size: usize,
+        queue_seconds: f64,
+        service_seconds: f64,
+        fit: FitResult,
+        report: RunReport,
+    ) -> Self {
+        Self {
+            id,
+            status: JobStatus::Ok,
+            detail: String::new(),
+            backend,
+            worker,
+            batch_size,
+            queue_seconds,
+            service_seconds,
+            summary: Some(FitSummary::of(&fit)),
+            fit: Some(fit),
+            report: Some(report),
         }
     }
 
@@ -328,16 +428,66 @@ impl FitResponse {
         m.insert("batch_size".into(), Json::Num(self.batch_size as f64));
         m.insert("queue_ms".into(), Json::Num(self.queue_seconds * 1e3));
         m.insert("service_ms".into(), Json::Num(self.service_seconds * 1e3));
-        if let Some(fit) = &self.fit {
-            m.insert("inertia".into(), Json::Num(fit.inertia));
-            m.insert("iterations".into(), Json::Num(fit.iterations as f64));
-            m.insert("converged".into(), Json::Bool(fit.converged));
+        if let Some(s) = &self.summary {
+            m.insert("inertia".into(), Json::Num(s.inertia));
+            m.insert("iterations".into(), Json::Num(s.iterations as f64));
+            m.insert("converged".into(), Json::Bool(s.converged));
             m.insert(
                 "assignments_fnv".into(),
-                Json::Str(format!("{:016x}", assignments_checksum(&fit.assignments))),
+                Json::Str(format!("{:016x}", s.assignments_fnv)),
             );
         }
         Json::Obj(m)
+    }
+
+    /// Parse a response line back off the wire (PROTOCOL.md §4) — the
+    /// client side of [`FitResponse::to_json`], used by `cluster::client`
+    /// when collecting from a daemon. `fit`/`report` are `None` (the full
+    /// clustering never crosses the NDJSON surface); an `ok` response
+    /// carries its [`FitSummary`], so re-serializing is lossless and the
+    /// §8 fingerprint survives every fan-out/fan-in hop unchanged.
+    pub fn from_wire_json(j: &Json) -> Result<FitResponse> {
+        let map = match j {
+            Json::Obj(m) => m,
+            other => {
+                return Err(Error::Parse(format!("response must be a JSON object, got {other:?}")))
+            }
+        };
+        let id = j.get("id")?.as_usize()? as u64;
+        let status = JobStatus::from_name(j.get("status")?.as_str()?)?;
+        let get_str = |key: &str| -> Result<String> {
+            Ok(map.get(key).map(|v| v.as_str()).transpose()?.unwrap_or("").to_string())
+        };
+        let get_num = |key: &str| -> Result<f64> {
+            Ok(map.get(key).map(|v| v.as_f64()).transpose()?.unwrap_or(0.0))
+        };
+        let summary = if status == JobStatus::Ok {
+            let fnv_hex = j.get("assignments_fnv")?.as_str()?;
+            let assignments_fnv = u64::from_str_radix(fnv_hex, 16).map_err(|_| {
+                Error::Parse(format!("assignments_fnv '{fnv_hex}' is not 16 hex digits"))
+            })?;
+            Some(FitSummary {
+                inertia: j.get("inertia")?.as_f64()?,
+                iterations: j.get("iterations")?.as_usize()?,
+                converged: matches!(j.get("converged")?, Json::Bool(true)),
+                assignments_fnv,
+            })
+        } else {
+            None
+        };
+        Ok(FitResponse {
+            id,
+            status,
+            detail: get_str("detail")?,
+            backend: get_str("backend")?,
+            worker: map.get("worker").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+            batch_size: map.get("batch_size").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+            queue_seconds: get_num("queue_ms")? / 1e3,
+            service_seconds: get_num("service_ms")? / 1e3,
+            summary,
+            fit: None,
+            report: None,
+        })
     }
 }
 
@@ -414,6 +564,80 @@ mod tests {
         assert_eq!(back.get("id").unwrap().as_usize().unwrap(), 42);
         assert_eq!(back.get("status").unwrap().as_str().unwrap(), "shed");
         assert_eq!(back.get("detail").unwrap().as_str().unwrap(), "queue full");
+    }
+
+    #[test]
+    fn request_round_trips_through_its_wire_form() {
+        let req = FitRequest {
+            id: 41,
+            dataset: "kegg".into(),
+            data_seed: 9,
+            max_points: 1234,
+            normalize: "zscore".into(),
+            kmeans: KMeansConfig { k: 5, seed: 77, max_iters: 31, tol: 2e-3, groups: 2, ..Default::default() },
+            backend_name: "native".into(),
+            artifact_dir: "arts".into(),
+            priority: Priority::High,
+            deadline_ms: Some(900),
+        };
+        let back = FitRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.dataset, req.dataset);
+        assert_eq!(back.data_seed, req.data_seed);
+        assert_eq!(back.max_points, req.max_points);
+        assert_eq!(back.normalize, req.normalize);
+        assert_eq!(back.kmeans.k, req.kmeans.k);
+        assert_eq!(back.kmeans.seed, req.kmeans.seed);
+        assert_eq!(back.kmeans.max_iters, req.kmeans.max_iters);
+        assert_eq!(back.kmeans.tol, req.kmeans.tol);
+        assert_eq!(back.kmeans.groups, req.kmeans.groups);
+        assert_eq!(back.backend_name, req.backend_name);
+        assert_eq!(back.artifact_dir, req.artifact_dir);
+        assert_eq!(back.priority, req.priority);
+        assert_eq!(back.deadline_ms, req.deadline_ms);
+        // No deadline ⇒ no key on the wire (absent, not 0 — PROTOCOL.md §3).
+        let none = FitRequest { deadline_ms: None, ..FitRequest::default() };
+        assert!(none.to_json().get("deadline_ms").is_err());
+    }
+
+    #[test]
+    fn ok_response_round_trips_its_summary_over_the_wire() {
+        let req = FitRequest { id: 3, max_points: 300, ..Default::default() };
+        let ds = req.load_dataset().unwrap();
+        let out = crate::coordinator::driver::run_with_engine(
+            &mut crate::runtime::native::NativeEngine,
+            &ds,
+            &req.kmeans,
+        )
+        .unwrap();
+        let fnv = assignments_checksum(&out.fit.assignments);
+        let resp = FitResponse::ok(3, "native".into(), 1, 2, 0.004, 0.09, out.fit, out.report);
+        let wire = resp.to_json().to_string();
+        let back = FitResponse::from_wire_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.id, 3);
+        assert_eq!(back.status, JobStatus::Ok);
+        assert_eq!(back.summary, resp.summary);
+        assert_eq!(back.summary.unwrap().assignments_fnv, fnv);
+        assert_eq!(back.worker, 1);
+        assert_eq!(back.batch_size, 2);
+        assert!(back.fit.is_none(), "the clustering itself never crosses the wire");
+        // Re-serializing the parsed response is byte-stable: the summary
+        // (fingerprint included) survives a fan-out/fan-in hop unchanged.
+        assert_eq!(back.to_json().to_string(), wire);
+    }
+
+    #[test]
+    fn shed_and_failed_responses_round_trip_too() {
+        let shed = FitResponse::shed(9, "queue full", 0.001);
+        let back = FitResponse::from_wire_json(&shed.to_json()).unwrap();
+        assert_eq!(back.status, JobStatus::Shed);
+        assert_eq!(back.detail, "queue full");
+        assert!(back.summary.is_none());
+        assert!(JobStatus::from_name("bogus").is_err());
+        assert!(
+            FitResponse::from_wire_json(&Json::parse(r#"{"id":1}"#).unwrap()).is_err(),
+            "status is required"
+        );
     }
 
     #[test]

@@ -21,9 +21,15 @@
 //!   drives: queue + workers + a response router that restores
 //!   client-chosen job ids, so id spaces from different submitters can
 //!   collide safely.
+//! * **Wire codec** ([`codec`]) — the NDJSON line framing (bounded
+//!   reader, line cap, locked whole-line writes) shared by the daemon and
+//!   by protocol *clients* ([`crate::cluster`]), so both ends of the wire
+//!   run one implementation of PROTOCOL.md §2.
 //! * **Socket front-end** ([`net`]) — `kpynq serve --listen`: a persistent
 //!   daemon multiplexing concurrent TCP / Unix-domain connections into one
 //!   shared session, speaking the wire protocol specified in PROTOCOL.md.
+//!   Its accept loop is generic over a [`net::FrontCore`], which is how
+//!   the cross-process cluster front ([`crate::cluster`]) reuses it.
 //! * **Telemetry** ([`report`]) — [`ServeReport`]: p50/p95 latency, shed
 //!   counts, queue depth, batch sizes, connection counters and per-backend
 //!   rollups of `coordinator::telemetry::RunReport`.
@@ -45,6 +51,7 @@
 //! ```
 
 pub mod batch;
+pub mod codec;
 pub mod job;
 pub mod net;
 pub mod queue;
@@ -56,7 +63,7 @@ use std::sync::mpsc;
 
 use crate::error::{Error, Result};
 
-pub use job::{FitRequest, FitResponse, JobStatus, Priority};
+pub use job::{FitRequest, FitResponse, FitSummary, JobStatus, Priority};
 pub use net::{Daemon, NetConfig};
 pub use queue::ShedPolicy;
 pub use report::ServeReport;

@@ -11,10 +11,17 @@
 //! The wire format is the NDJSON job model `serve::job` already speaks —
 //! one `FitRequest` object per line in, one response line per job out —
 //! prefixed by a single server greeting line and with a handful of
-//! control frames (`ping`, `stats`, `bye`, `shutdown`). The protocol is
-//! specified normatively in PROTOCOL.md; this module implements it and
-//! cites it rather than restating it. Connection lifecycle and
-//! backpressure contracts live in DESIGN.md §2.
+//! control frames (`ping`, `stats`, `cancel`, `bye`, `shutdown`). The
+//! protocol is specified normatively in PROTOCOL.md; this module
+//! implements it and cites it rather than restating it. The line framing
+//! itself is shared with the client side in [`super::codec`]. Connection
+//! lifecycle and backpressure contracts live in DESIGN.md §2.
+//!
+//! The accept loop and per-connection protocol machinery are generic
+//! over a [`FrontCore`] — the thing that actually answers jobs. The
+//! local [`ServeSession`] is one core (`kpynq serve --listen`); the
+//! cross-process fan-out front in [`crate::cluster`] is another
+//! (`kpynq cluster`), so both fronts present one identical wire surface.
 //!
 //! Malformed lines never kill a connection, let alone the daemon: every
 //! frame the server cannot accept is answered with a structured error
@@ -33,8 +40,8 @@
 //! println!("{}", report.render());
 //! ```
 
-use std::collections::BTreeMap;
-use std::io::{self, Read, Write};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{self, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -43,16 +50,15 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::util::json::Json;
 
+use super::codec::{write_line, LineEvent, LineReader, WireStream};
 use super::job::{FitRequest, FitResponse};
 use super::session::ServeSession;
 use super::{ServeConfig, ServeReport};
 
+pub use super::codec::MAX_LINE_BYTES;
+
 /// Wire protocol revision this build speaks (PROTOCOL.md §1).
 pub const PROTO_VERSION: u64 = 1;
-
-/// Hard cap on one request line (PROTOCOL.md §2). Longer lines are
-/// answered with a structured error and discarded up to the next newline.
-pub const MAX_LINE_BYTES: usize = 64 * 1024;
 
 /// Read-timeout tick: how often a blocked connection reader wakes to check
 /// the shutdown flag and its idle budget.
@@ -62,6 +68,73 @@ const ACCEPT_TICK: Duration = Duration::from_millis(20);
 /// Writer-side timeout: a client that stops reading for this long has its
 /// responses dropped instead of wedging a worker-fed writer thread.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// What the connection layer needs from whatever answers the jobs behind
+/// it. [`ServeSession`] is the in-process core (`kpynq serve --listen`);
+/// `cluster::front` implements it over N child daemons (`kpynq cluster`).
+/// Everything protocol-visible — framing, greeting, control frames, error
+/// replies — lives in the connection layer, so every core serves one
+/// identical wire surface (PROTOCOL.md).
+pub trait FrontCore: Send + Sync + 'static {
+    /// Submit one job; the single reply arrives on `reply` with the
+    /// request's own id restored. Returns the core-unique ticket the
+    /// job runs under (the handle [`FrontCore::cancel`] takes).
+    fn submit(&self, req: FitRequest, reply: &mpsc::Sender<FitResponse>) -> u64;
+
+    /// Try to cancel a submitted job by ticket (PROTOCOL.md §6): `true`
+    /// when the job was still queued and was removed — its single reply
+    /// then arrives as `status:"shed"` / `detail:"cancelled by client"`.
+    /// `false` when it already started, finished, or is unknown (its
+    /// normal reply, if any is still owed, arrives unchanged).
+    fn cancel(&self, ticket: u64) -> bool;
+
+    /// Core-specific greeting keys (PROTOCOL.md §2), added on top of the
+    /// common ones (`kpynq`, `proto`, `version`, `max_line_bytes`).
+    fn greeting_fields(&self, m: &mut BTreeMap<String, Json>);
+
+    /// Core-specific `stats` reply keys (PROTOCOL.md §6), added on top of
+    /// the connection-level ones (`connections`, `active_conns`,
+    /// `pending_here`).
+    fn stats_fields(&self, m: &mut BTreeMap<String, Json>);
+}
+
+impl FrontCore for ServeSession {
+    fn submit(&self, req: FitRequest, reply: &mpsc::Sender<FitResponse>) -> u64 {
+        ServeSession::submit(self, req, reply)
+    }
+
+    fn cancel(&self, ticket: u64) -> bool {
+        ServeSession::cancel(self, ticket)
+    }
+
+    fn greeting_fields(&self, m: &mut BTreeMap<String, Json>) {
+        let cfg = self.config();
+        m.insert("workers".to_string(), Json::Num(cfg.workers as f64));
+        m.insert("max_batch".to_string(), Json::Num(cfg.max_batch as f64));
+        m.insert("backends".to_string(), Json::Arr(advertised_backends()));
+    }
+
+    fn stats_fields(&self, m: &mut BTreeMap<String, Json>) {
+        let q = self.queue_stats();
+        m.insert("submitted".to_string(), Json::Num(self.submitted() as f64));
+        m.insert("queue_depth".to_string(), Json::Num(self.queue_depth() as f64));
+        m.insert("shed_full".to_string(), Json::Num(q.shed_full as f64));
+        m.insert("shed_deadline".to_string(), Json::Num(q.shed_deadline as f64));
+        m.insert("peak_queue_depth".to_string(), Json::Num(q.peak_depth as f64));
+    }
+}
+
+/// Only backends this *build* can actually execute (PROTOCOL.md §2):
+/// without the `xla` cargo feature the engine is a stub whose
+/// construction errors, so advertising it would invite guaranteed-to-
+/// fail jobs.
+pub(crate) fn advertised_backends() -> Vec<Json> {
+    let mut backends = vec![Json::Str("fpga-sim".into()), Json::Str("native".into())];
+    if cfg!(feature = "xla") {
+        backends.push(Json::Str("xla".into()));
+    }
+    backends
+}
 
 /// Listener configuration (the `[serve.net]` config section).
 #[derive(Clone, Debug)]
@@ -130,57 +203,6 @@ impl Listener {
     }
 }
 
-/// The minimal stream surface both TCP and Unix-domain sockets provide;
-/// connection handling is generic over it.
-trait WireStream: Read + Write + Send + Sized + 'static {
-    fn try_clone_stream(&self) -> io::Result<Self>;
-    /// Force blocking mode: whether an accepted socket inherits the
-    /// listener's non-blocking flag is platform-dependent, and the read
-    /// loop's timeout ticks assume a blocking socket (a non-blocking one
-    /// would spin hot instead of sleeping up to `READ_TICK`).
-    fn set_blocking(&self) -> io::Result<()>;
-    fn set_read_timeout_dur(&self, d: Option<Duration>) -> io::Result<()>;
-    fn set_write_timeout_dur(&self, d: Option<Duration>) -> io::Result<()>;
-    fn shutdown_stream(&self);
-}
-
-impl WireStream for TcpStream {
-    fn try_clone_stream(&self) -> io::Result<Self> {
-        self.try_clone()
-    }
-    fn set_blocking(&self) -> io::Result<()> {
-        self.set_nonblocking(false)
-    }
-    fn set_read_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
-        self.set_read_timeout(d)
-    }
-    fn set_write_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
-        self.set_write_timeout(d)
-    }
-    fn shutdown_stream(&self) {
-        let _ = self.shutdown(std::net::Shutdown::Both);
-    }
-}
-
-#[cfg(unix)]
-impl WireStream for std::os::unix::net::UnixStream {
-    fn try_clone_stream(&self) -> io::Result<Self> {
-        self.try_clone()
-    }
-    fn set_blocking(&self) -> io::Result<()> {
-        self.set_nonblocking(false)
-    }
-    fn set_read_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
-        self.set_read_timeout(d)
-    }
-    fn set_write_timeout_dur(&self, d: Option<Duration>) -> io::Result<()> {
-        self.set_write_timeout(d)
-    }
-    fn shutdown_stream(&self) {
-        let _ = self.shutdown(std::net::Shutdown::Both);
-    }
-}
-
 /// Daemon-wide connection counters, folded into the final [`ServeReport`].
 #[derive(Debug, Default)]
 struct NetCounters {
@@ -193,7 +215,7 @@ struct NetCounters {
 
 /// Everything a connection handler needs a handle on.
 struct ConnCtx {
-    session: Arc<ServeSession>,
+    core: Arc<dyn FrontCore>,
     counters: Arc<NetCounters>,
     shutdown: Arc<AtomicBool>,
     net: NetConfig,
@@ -265,14 +287,31 @@ impl Daemon {
         &self.serve
     }
 
-    /// Serve until shutdown: accept connections (refusing extras beyond
-    /// `max_conns`), multiplex them all into one shared [`ServeSession`],
-    /// and on the shutdown signal stop accepting, join every connection
-    /// (each drains its pending replies first), drain the pool and return
-    /// the session report with the connection counters folded in.
+    /// Serve until shutdown with a local [`ServeSession`] as the core:
+    /// accept connections (refusing extras beyond `max_conns`), multiplex
+    /// them all into the shared session, and on the shutdown signal stop
+    /// accepting, join every connection (each drains its pending replies
+    /// first), drain the pool and return the session report with the
+    /// connection counters folded in.
     pub fn run(self) -> Result<ServeReport> {
-        let Daemon { listener, net, serve, shutdown } = self;
-        let session = Arc::new(ServeSession::start(serve)?);
+        let session = Arc::new(ServeSession::start(self.serve.clone())?);
+        let fin = Arc::clone(&session);
+        self.run_with(session, move || {
+            Ok(Arc::into_inner(fin).expect("all connections joined").shutdown())
+        })
+    }
+
+    /// The generalized serve loop: accept until shutdown against an
+    /// arbitrary [`FrontCore`], then call `finish` (which must consume
+    /// the caller's remaining core handles and produce the report). The
+    /// connection counters are folded into whatever report `finish`
+    /// returns.
+    pub(crate) fn run_with(
+        self,
+        core: Arc<dyn FrontCore>,
+        finish: impl FnOnce() -> Result<ServeReport>,
+    ) -> Result<ServeReport> {
+        let Daemon { listener, net, serve: _, shutdown } = self;
         let counters = Arc::new(NetCounters::default());
         listener.set_nonblocking()?;
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -286,13 +325,13 @@ impl Daemon {
                 Err(_) | Ok(Accepted::Pending) => std::thread::sleep(ACCEPT_TICK),
                 Ok(Accepted::Tcp(stream)) => {
                     let _ = stream.set_nodelay(true);
-                    if let Some(h) = spawn_conn(stream, &session, &counters, &shutdown, &net) {
+                    if let Some(h) = spawn_conn(stream, &core, &counters, &shutdown, &net) {
                         conns.push(h);
                     }
                 }
                 #[cfg(unix)]
                 Ok(Accepted::Unix(stream)) => {
-                    if let Some(h) = spawn_conn(stream, &session, &counters, &shutdown, &net) {
+                    if let Some(h) = spawn_conn(stream, &core, &counters, &shutdown, &net) {
                         conns.push(h);
                     }
                 }
@@ -316,9 +355,9 @@ impl Daemon {
             _ => {}
         }
         drop(listener);
+        drop(core); // `finish` must now hold the only core reference
 
-        let session = Arc::into_inner(session).expect("all connections joined");
-        let mut report = session.shutdown();
+        let mut report = finish()?;
         report.connections = counters.accepted.load(Ordering::SeqCst);
         report.peak_connections = counters.peak.load(Ordering::SeqCst);
         report.refused_connections = counters.refused.load(Ordering::SeqCst);
@@ -351,7 +390,7 @@ fn bind_unix(_path: &str) -> Result<Listener> {
 /// Admit-or-refuse one accepted stream; on admit, spawn its handler.
 fn spawn_conn<S: WireStream>(
     stream: S,
-    session: &Arc<ServeSession>,
+    core: &Arc<dyn FrontCore>,
     counters: &Arc<NetCounters>,
     shutdown: &Arc<AtomicBool>,
     net: &NetConfig,
@@ -374,7 +413,7 @@ fn spawn_conn<S: WireStream>(
     let active = counters.active.fetch_add(1, Ordering::SeqCst) + 1;
     counters.peak.fetch_max(active, Ordering::SeqCst);
     let ctx = ConnCtx {
-        session: Arc::clone(session),
+        core: Arc::clone(core),
         counters: Arc::clone(counters),
         shutdown: Arc::clone(shutdown),
         net: net.clone(),
@@ -404,13 +443,26 @@ fn handle_conn<S: WireStream>(stream: S, ctx: &ConnCtx) {
 
     let _ = write_line(&out, &greeting(ctx));
 
+    // Client id → core ticket of the most recent submission with that id,
+    // so `{"op":"cancel","id":N}` can address jobs in the core's ticket
+    // space (PROTOCOL.md §6). The writer prunes an id's entry as its
+    // reply is delivered — without that, a long-lived connection (every
+    // cluster shard link is one) would grow this map per job forever.
+    // Pruning is by client id, not ticket: when several in-flight jobs
+    // share an id, an earlier job's reply can drop the newer job's entry
+    // (a later cancel then answers `false`) — acceptable for an advisory
+    // ack, bounded either way.
+    let tickets: Arc<Mutex<HashMap<u64, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+
     let (resp_tx, resp_rx) = mpsc::channel::<FitResponse>();
     let writer_thread = {
         let out = Arc::clone(&out);
         let pending = Arc::clone(&pending);
+        let tickets = Arc::clone(&tickets);
         std::thread::spawn(move || {
             for resp in resp_rx {
                 let _ = write_line(&out, &resp.to_json().to_string());
+                tickets.lock().expect("ticket map poisoned").remove(&resp.id);
                 // Decrement even on write failure: the job is answered as
                 // far as the session is concerned, and the reader's drain
                 // must not wait on a dead peer.
@@ -432,7 +484,7 @@ fn handle_conn<S: WireStream>(stream: S, ctx: &ConnCtx) {
             LineEvent::Line(bytes) => {
                 lineno += 1;
                 last_activity = Instant::now();
-                if !handle_frame(&bytes, lineno, ctx, &out, &resp_tx, &pending) {
+                if !handle_frame(&bytes, lineno, ctx, &out, &resp_tx, &pending, &tickets) {
                     break;
                 }
             }
@@ -474,6 +526,7 @@ fn handle_conn<S: WireStream>(stream: S, ctx: &ConnCtx) {
 
 /// Dispatch one parsed-or-not frame; returns `false` when the connection
 /// should stop reading (`bye`, `shutdown`, handshake mismatch).
+#[allow(clippy::too_many_arguments)]
 fn handle_frame<S: WireStream>(
     bytes: &[u8],
     lineno: u64,
@@ -481,6 +534,7 @@ fn handle_frame<S: WireStream>(
     out: &Mutex<S>,
     resp_tx: &mpsc::Sender<FitResponse>,
     pending: &AtomicUsize,
+    tickets: &Mutex<HashMap<u64, u64>>,
 ) -> bool {
     let text = match std::str::from_utf8(bytes) {
         Ok(t) => t,
@@ -502,7 +556,7 @@ fn handle_frame<S: WireStream>(
     };
     if let Json::Obj(map) = &parsed {
         if map.contains_key("op") {
-            return control_frame(map, lineno, ctx, out, pending);
+            return control_frame(map, lineno, ctx, out, pending, tickets);
         }
         if map.contains_key("proto") && !map.contains_key("id") {
             // Client handshake (PROTOCOL.md §2): optional, but if sent it
@@ -523,8 +577,15 @@ fn handle_frame<S: WireStream>(
     }
     match FitRequest::from_json(&parsed) {
         Ok(req) => {
+            let client_id = req.id;
             pending.fetch_add(1, Ordering::SeqCst);
-            ctx.session.submit(req, resp_tx);
+            let ticket = ctx.core.submit(req, resp_tx);
+            // Registered after submit (the ticket does not exist before);
+            // the writer's prune-on-delivery cannot plausibly beat this
+            // insert — a reply must cross the core, the router and a
+            // thread wakeup first — and even then the stale entry is
+            // overwritten the next time the client reuses the id.
+            tickets.lock().expect("ticket map poisoned").insert(client_id, ticket);
             true
         }
         Err(e) => {
@@ -542,6 +603,7 @@ fn control_frame<S: WireStream>(
     ctx: &ConnCtx,
     out: &Mutex<S>,
     pending: &AtomicUsize,
+    tickets: &Mutex<HashMap<u64, u64>>,
 ) -> bool {
     let op = match map.get("op").map(|v| v.as_str()) {
         Some(Ok(op)) => op,
@@ -559,10 +621,8 @@ fn control_frame<S: WireStream>(
             true
         }
         "stats" => {
-            let q = ctx.session.queue_stats();
             let mut m = BTreeMap::new();
             m.insert("op".to_string(), Json::Str("stats".into()));
-            m.insert("submitted".to_string(), Json::Num(ctx.session.submitted() as f64));
             m.insert(
                 "connections".to_string(),
                 Json::Num(ctx.counters.accepted.load(Ordering::SeqCst) as f64),
@@ -572,9 +632,30 @@ fn control_frame<S: WireStream>(
                 Json::Num(ctx.counters.active.load(Ordering::SeqCst) as f64),
             );
             m.insert("pending_here".to_string(), Json::Num(pending.load(Ordering::SeqCst) as f64));
-            m.insert("shed_full".to_string(), Json::Num(q.shed_full as f64));
-            m.insert("shed_deadline".to_string(), Json::Num(q.shed_deadline as f64));
-            m.insert("peak_queue_depth".to_string(), Json::Num(q.peak_depth as f64));
+            ctx.core.stats_fields(&mut m);
+            let _ = write_line(out, &Json::Obj(m).to_string());
+            true
+        }
+        "cancel" => {
+            // Cancel the most recent in-flight job this connection
+            // submitted with the given id (PROTOCOL.md §6). The ack is
+            // advisory; the job's own single reply stays authoritative.
+            let id = match map.get("id").map(|v| v.as_usize()) {
+                Some(Ok(id)) => id as u64,
+                _ => {
+                    proto_error(ctx, out, lineno, "cancel needs a non-negative integer 'id'");
+                    return true;
+                }
+            };
+            let ticket = tickets.lock().expect("ticket map poisoned").get(&id).copied();
+            let cancelled = match ticket {
+                Some(ticket) => ctx.core.cancel(ticket),
+                None => false,
+            };
+            let mut m = BTreeMap::new();
+            m.insert("op".to_string(), Json::Str("cancelled".into()));
+            m.insert("id".to_string(), Json::Num(id as f64));
+            m.insert("cancelled".to_string(), Json::Bool(cancelled));
             let _ = write_line(out, &Json::Obj(m).to_string());
             true
         }
@@ -594,25 +675,14 @@ fn control_frame<S: WireStream>(
 }
 
 /// The server greeting (PROTOCOL.md §2): the first line on every
-/// connection, announcing the protocol revision and pool capabilities.
+/// connection, announcing the protocol revision and core capabilities.
 fn greeting(ctx: &ConnCtx) -> String {
-    let cfg = ctx.session.config();
     let mut m = BTreeMap::new();
     m.insert("kpynq".to_string(), Json::Str("serve".into()));
     m.insert("proto".to_string(), Json::Num(PROTO_VERSION as f64));
     m.insert("version".to_string(), Json::Str(env!("CARGO_PKG_VERSION").into()));
-    m.insert("workers".to_string(), Json::Num(cfg.workers as f64));
-    m.insert("max_batch".to_string(), Json::Num(cfg.max_batch as f64));
     m.insert("max_line_bytes".to_string(), Json::Num(MAX_LINE_BYTES as f64));
-    // Only backends this *build* can actually execute (PROTOCOL.md §2):
-    // without the `xla` cargo feature the engine is a stub whose
-    // construction errors, so advertising it would invite guaranteed-to-
-    // fail jobs.
-    let mut backends = vec![Json::Str("fpga-sim".into()), Json::Str("native".into())];
-    if cfg!(feature = "xla") {
-        backends.push(Json::Str("xla".into()));
-    }
-    m.insert("backends".to_string(), Json::Arr(backends));
+    ctx.core.greeting_fields(&mut m);
     Json::Obj(m).to_string()
 }
 
@@ -632,159 +702,9 @@ fn proto_error<S: WireStream>(ctx: &ConnCtx, out: &Mutex<S>, lineno: u64, msg: &
     let _ = write_line(out, &error_reply(lineno, msg));
 }
 
-/// Write one full protocol line under the connection's writer lock.
-fn write_line<S: Write>(out: &Mutex<S>, line: &str) -> io::Result<()> {
-    let mut w = out.lock().expect("connection writer lock poisoned");
-    w.write_all(line.as_bytes())?;
-    w.write_all(b"\n")?;
-    w.flush()
-}
-
-/// One step of the connection read loop.
-enum LineEvent {
-    /// A complete line (without its terminator).
-    Line(Vec<u8>),
-    /// A line exceeded [`MAX_LINE_BYTES`]; its bytes are being discarded
-    /// up to the next newline.
-    Oversized,
-    /// The read timeout elapsed with no data — time to check the shutdown
-    /// flag and the idle budget.
-    Tick,
-    Eof,
-    Error(io::Error),
-}
-
-/// Incremental, bounded line reader over a timeout-ticking stream.
-/// `BufReader::read_line` can neither bound a hostile line's memory nor
-/// surface timeout ticks mid-line, so the accumulation is explicit here.
-struct LineReader<S: Read> {
-    stream: S,
-    acc: Vec<u8>,
-    discarding: bool,
-}
-
-impl<S: Read> LineReader<S> {
-    fn new(stream: S) -> Self {
-        Self { stream, acc: Vec::new(), discarding: false }
-    }
-
-    fn into_inner(self) -> S {
-        self.stream
-    }
-
-    fn next_event(&mut self) -> LineEvent {
-        loop {
-            if let Some(i) = self.acc.iter().position(|&b| b == b'\n') {
-                let rest = self.acc.split_off(i + 1);
-                let mut line = std::mem::replace(&mut self.acc, rest);
-                line.pop(); // the newline
-                if self.discarding {
-                    // Tail of an oversized line: drop it and resume normal
-                    // framing from the next line.
-                    self.discarding = false;
-                    continue;
-                }
-                if line.len() > MAX_LINE_BYTES {
-                    return LineEvent::Oversized; // complete, but too long
-                }
-                return LineEvent::Line(line);
-            }
-            if self.discarding {
-                self.acc.clear(); // bound memory while hunting the newline
-            } else if self.acc.len() > MAX_LINE_BYTES {
-                self.discarding = true;
-                self.acc.clear();
-                return LineEvent::Oversized;
-            }
-            let mut buf = [0u8; 4096];
-            match self.stream.read(&mut buf) {
-                Ok(0) => {
-                    // A final line without its terminator still counts (a
-                    // `printf` without `\n` followed by EOF); discarded
-                    // oversize tails do not.
-                    if self.acc.is_empty() || self.discarding {
-                        return LineEvent::Eof;
-                    }
-                    return LineEvent::Line(std::mem::take(&mut self.acc));
-                }
-                Ok(n) => self.acc.extend_from_slice(&buf[..n]),
-                Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
-                    return LineEvent::Tick
-                }
-                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
-                Err(e) => return LineEvent::Error(e),
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    /// A scripted reader: each entry is either bytes to deliver or a
-    /// would-block tick.
-    struct Script(Vec<Option<Vec<u8>>>);
-
-    impl Read for Script {
-        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
-            match self.0.pop() {
-                None => Ok(0), // EOF
-                Some(None) => Err(io::Error::new(io::ErrorKind::WouldBlock, "tick")),
-                Some(Some(mut bytes)) => {
-                    let n = bytes.len().min(buf.len());
-                    buf[..n].copy_from_slice(&bytes[..n]);
-                    if n < bytes.len() {
-                        // Hand the remainder back as the next read.
-                        self.0.push(Some(bytes.split_off(n)));
-                    }
-                    Ok(n)
-                }
-            }
-        }
-    }
-
-    fn reader(script: Vec<Option<&[u8]>>) -> LineReader<Script> {
-        LineReader::new(Script(
-            script.into_iter().rev().map(|e| e.map(|b| b.to_vec())).collect(),
-        ))
-    }
-
-    #[test]
-    fn line_reader_splits_and_reassembles_partial_lines() {
-        let mut r = reader(vec![Some(&b"{\"id\""[..]), Some(&b":1}\n{\"id\":2}\n"[..])]);
-        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"{\"id\":1}"));
-        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"{\"id\":2}"));
-        assert!(matches!(r.next_event(), LineEvent::Eof));
-    }
-
-    #[test]
-    fn line_reader_surfaces_ticks_between_chunks() {
-        let mut r = reader(vec![None, Some(&b"x\n"[..]), None]);
-        assert!(matches!(r.next_event(), LineEvent::Tick));
-        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"x"));
-        assert!(matches!(r.next_event(), LineEvent::Tick));
-        assert!(matches!(r.next_event(), LineEvent::Eof));
-    }
-
-    #[test]
-    fn line_reader_discards_oversized_lines_and_recovers() {
-        let big = vec![b'a'; MAX_LINE_BYTES + 4096];
-        let mut r = reader(vec![Some(&big[..]), Some(&b"bbb\nok\n"[..])]);
-        assert!(matches!(r.next_event(), LineEvent::Oversized));
-        // The giant line's tail ("bbb\n") is swallowed; framing resumes at
-        // the next line.
-        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"ok"));
-        assert!(matches!(r.next_event(), LineEvent::Eof));
-    }
-
-    #[test]
-    fn line_reader_yields_an_unterminated_final_line() {
-        let mut r = reader(vec![Some(&b"a\nb"[..])]);
-        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"a"));
-        assert!(matches!(r.next_event(), LineEvent::Line(l) if l == b"b"));
-        assert!(matches!(r.next_event(), LineEvent::Eof));
-    }
 
     #[test]
     fn net_config_validates() {
@@ -800,5 +720,20 @@ mod tests {
         assert!(j.get("error").unwrap().as_str().unwrap().contains("oops"));
         // Line 0 (pre-session refusals) omits the line key.
         assert!(Json::parse(&error_reply(0, "busy")).unwrap().get("line").is_err());
+    }
+
+    #[test]
+    fn session_stats_fields_include_queue_depth() {
+        let session = ServeSession::start(ServeConfig::default()).unwrap();
+        let mut m = BTreeMap::new();
+        FrontCore::stats_fields(&session, &mut m);
+        assert!(m.contains_key("queue_depth"), "router least-loaded needs this");
+        assert!(m.contains_key("submitted"));
+        assert!(m.contains_key("peak_queue_depth"));
+        let mut g = BTreeMap::new();
+        FrontCore::greeting_fields(&session, &mut g);
+        assert!(g.contains_key("workers"));
+        assert!(g.contains_key("backends"));
+        session.shutdown();
     }
 }

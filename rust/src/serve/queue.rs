@@ -163,6 +163,20 @@ impl AdmissionQueue {
         Admission::Admitted
     }
 
+    /// Remove a queued job by its (session-rewritten) id — the queue side
+    /// of per-request cancellation (PROTOCOL.md §6 `cancel`). Returns the
+    /// removed entry, or `None` when no queued job carries that id (it
+    /// already popped, or never existed). Ids are session tickets, so at
+    /// most one queued job can match.
+    pub fn remove(&mut self, id: u64) -> Option<Pending> {
+        for lane in self.lanes.iter_mut() {
+            if let Some(i) = lane.iter().position(|p| p.req.id == id) {
+                return lane.remove(i);
+            }
+        }
+        None
+    }
+
     /// Pop the oldest highest-priority live job plus up to `max_batch - 1`
     /// queued jobs sharing its [`BatchKey`], scanned in pop order (so a
     /// high-priority head coalesces compatible lower-priority riders —
@@ -278,6 +292,23 @@ impl SharedQueue {
             }
             q = self.work.wait(q).expect("queue mutex poisoned");
         }
+    }
+
+    /// Remove a queued job by id (see [`AdmissionQueue::remove`]); a
+    /// successful removal frees a slot, so blocked submitters are woken.
+    pub fn remove(&self, id: u64) -> Option<Pending> {
+        let mut q = self.inner.lock().expect("queue mutex poisoned");
+        let removed = q.remove(id);
+        if removed.is_some() {
+            self.space.notify_all();
+        }
+        removed
+    }
+
+    /// Jobs currently queued (admitted, not yet popped) — the live
+    /// `queue_depth` the `stats` control frame reports (PROTOCOL.md §6).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().expect("queue mutex poisoned").len()
     }
 
     /// Close the queue and wake everyone (submitters shed, workers drain
@@ -397,6 +428,34 @@ mod tests {
         assert_eq!(out.batch.len(), 1);
         assert_eq!(out.batch[0].req.id, 2);
         assert_eq!(q.stats().shed_deadline, 1);
+    }
+
+    #[test]
+    fn remove_by_id_pulls_a_queued_job_and_only_that_job() {
+        let mut q = AdmissionQueue::new(8);
+        q.try_admit(req(1, Priority::Normal));
+        q.try_admit(req(2, Priority::High));
+        q.try_admit(req(3, Priority::Low));
+        let removed = q.remove(2).expect("id 2 is queued");
+        assert_eq!(removed.req.id, 2);
+        assert_eq!(q.len(), 2);
+        assert!(q.remove(2).is_none(), "a second remove finds nothing");
+        assert!(q.remove(99).is_none(), "unknown ids find nothing");
+        // The survivors still pop in priority/FIFO order.
+        assert_eq!(q.pop_batch(1).batch[0].req.id, 1);
+        assert_eq!(q.pop_batch(1).batch[0].req.id, 3);
+    }
+
+    #[test]
+    fn shared_queue_remove_and_depth() {
+        let q = SharedQueue::new(4);
+        assert_eq!(q.depth(), 0);
+        q.submit(req(7, Priority::Normal), ShedPolicy::Block);
+        q.submit(req(8, Priority::Normal), ShedPolicy::Block);
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.remove(7).unwrap().req.id, 7);
+        assert_eq!(q.depth(), 1);
+        assert!(q.remove(7).is_none());
     }
 
     #[test]

@@ -77,6 +77,9 @@ pub struct ServeReport {
     pub protocol_errors: u64,
     /// Responses whose submitter had disconnected before delivery.
     pub dropped_replies: u64,
+    /// Shard daemons restarted by a cluster supervisor (`kpynq cluster`;
+    /// 0 for single-process sessions).
+    pub shard_restarts: u64,
 }
 
 /// Streaming fold of [`FitResponse`]s into report form. The session's
@@ -173,6 +176,50 @@ impl ServeReport {
         acc.into_report(submitted, workers, queue, wall_seconds)
     }
 
+    /// Fold another session's report into this one — the fan-in side of
+    /// multi-shard serving (`kpynq cluster`), also usable by ops tooling
+    /// aggregating several daemons. Count fields add; peak fields take
+    /// the max. Latency percentiles cannot be merged exactly from
+    /// percentiles, so `p50`/`p95`/`max` take the max across the inputs —
+    /// a conservative (upper-bound) cluster figure, not a recomputed
+    /// distribution. Per-backend rollups merge by backend name.
+    pub fn merge(&mut self, other: &ServeReport) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.shed += other.shed;
+        self.shed_full += other.shed_full;
+        self.shed_deadline += other.shed_deadline;
+        self.workers += other.workers;
+        self.batches += other.batches;
+        self.batched_jobs += other.batched_jobs;
+        self.busy_seconds += other.busy_seconds;
+        self.connections += other.connections;
+        self.refused_connections += other.refused_connections;
+        self.protocol_errors += other.protocol_errors;
+        self.dropped_replies += other.dropped_replies;
+        self.shard_restarts += other.shard_restarts;
+        self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
+        self.max_batch = self.max_batch.max(other.max_batch);
+        self.peak_connections = self.peak_connections.max(other.peak_connections);
+        self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
+        self.p50_latency_ms = self.p50_latency_ms.max(other.p50_latency_ms);
+        self.p95_latency_ms = self.p95_latency_ms.max(other.p95_latency_ms);
+        self.max_latency_ms = self.max_latency_ms.max(other.max_latency_ms);
+        for u in &other.per_backend {
+            match self.per_backend.iter_mut().find(|m| m.backend == u.backend) {
+                Some(m) => {
+                    m.jobs += u.jobs;
+                    m.fit_seconds += u.fit_seconds;
+                    m.total_cycles += u.total_cycles;
+                    m.tiles_dispatched += u.tiles_dispatched;
+                    m.points_rescanned += u.points_rescanned;
+                }
+                None => self.per_backend.push(u.clone()),
+            }
+        }
+    }
+
     /// Completed jobs per wall-clock second.
     pub fn throughput_jobs_per_sec(&self) -> f64 {
         if self.wall_seconds > 0.0 {
@@ -230,6 +277,9 @@ impl ServeReport {
                 self.dropped_replies,
             ));
         }
+        if self.shard_restarts > 0 {
+            out.push_str(&format!("cluster: {} shard restarts\n", self.shard_restarts));
+        }
         if !self.per_backend.is_empty() {
             let mut t = Table::new(&[
                 "backend",
@@ -271,6 +321,7 @@ mod tests {
             batch_size: 1,
             queue_seconds: queue_s,
             service_seconds: service_s,
+            summary: None,
             fit: None,
             report: Some(RunReport {
                 backend: backend.into(),
@@ -378,6 +429,45 @@ mod tests {
         assert_eq!(batch.p50_latency_ms, streamed.p50_latency_ms);
         assert_eq!(batch.p95_latency_ms, streamed.p95_latency_ms);
         assert_eq!(batch.per_backend.len(), streamed.per_backend.len());
+    }
+
+    #[test]
+    fn merge_sums_counts_and_maxes_peaks() {
+        let mut a = ServeReport::build(
+            3,
+            &[ok_response(1, "native", 0.0, 0.1), ok_response(2, "native", 0.0, 0.2)],
+            &[WorkerStats { worker: 0, jobs: 2, batches: 2, max_batch: 1, ..Default::default() }],
+            QueueStats { shed_full: 1, shed_deadline: 0, peak_depth: 4 },
+            0.5,
+        );
+        let b = ServeReport::build(
+            2,
+            &[ok_response(1, "native", 0.0, 0.4), ok_response(2, "fpga-sim", 0.0, 0.1)],
+            &[WorkerStats { worker: 0, jobs: 2, batches: 1, max_batch: 2, ..Default::default() }],
+            QueueStats { shed_full: 0, shed_deadline: 2, peak_depth: 2 },
+            0.3,
+        );
+        a.merge(&b);
+        assert_eq!(a.submitted, 5);
+        assert_eq!(a.completed, 4);
+        assert_eq!(a.shed_full, 1);
+        assert_eq!(a.shed_deadline, 2);
+        assert_eq!(a.peak_queue_depth, 4, "peaks take the max");
+        assert_eq!(a.max_batch, 2);
+        assert_eq!(a.wall_seconds, 0.5, "wall is the max, not the sum");
+        // 400 ms is b's max latency; the merged upper bound keeps it.
+        assert!((a.max_latency_ms - 400.0).abs() < 1e-9);
+        let native = a.per_backend.iter().find(|u| u.backend == "native").unwrap();
+        assert_eq!(native.jobs, 3, "per-backend rollups merge by name");
+        assert!(a.per_backend.iter().any(|u| u.backend == "fpga-sim"));
+    }
+
+    #[test]
+    fn shard_restarts_render_only_when_nonzero() {
+        let mut r = ServeReport::build(0, &[], &[], QueueStats::default(), 0.0);
+        assert!(!r.render().contains("shard restarts"), "{}", r.render());
+        r.shard_restarts = 2;
+        assert!(r.render().contains("cluster: 2 shard restarts"), "{}", r.render());
     }
 
     #[test]

@@ -131,13 +131,22 @@ impl ServeSession {
         self.queue.stats()
     }
 
+    /// Jobs currently sitting in the admission queue — the `queue_depth`
+    /// field of the `stats` control frame (PROTOCOL.md §6), and the load
+    /// signal the cluster router's least-loaded policy reads.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
     /// Submit one job. The response — `ok`, `failed` or `shed` — arrives
-    /// on `reply` with the request's own id restored; returns `false` when
-    /// the job was shed at admission (the shed response is still
-    /// delivered). Blocks only under `ShedPolicy::Block` with a full
-    /// queue — this is the backpressure a socket connection propagates to
-    /// its client (DESIGN.md §2).
-    pub fn submit(&self, req: FitRequest, reply: &mpsc::Sender<FitResponse>) -> bool {
+    /// on `reply` with the request's own id restored. Returns the
+    /// session-unique ticket the job runs under: the handle
+    /// [`ServeSession::cancel`] takes (jobs shed at admission still get a
+    /// ticket; their shed response is already on its way). Blocks only
+    /// under `ShedPolicy::Block` with a full queue — this is the
+    /// backpressure a socket connection propagates to its client
+    /// (DESIGN.md §2).
+    pub fn submit(&self, req: FitRequest, reply: &mpsc::Sender<FitResponse>) -> u64 {
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let client_id = req.id;
         self.submitted.fetch_add(1, Ordering::Relaxed);
@@ -147,15 +156,31 @@ impl ServeSession {
             .insert(ticket, Route { client_id, reply: reply.clone() });
         let mut req = req;
         req.id = ticket;
-        match self.queue.submit(req, self.cfg.shed_policy) {
-            Submission::Admitted => true,
-            Submission::Shed { req, reason } => {
-                // Route the shed response like any other so the submitter
-                // sees its own id and the accumulator counts the shed.
+        if let Submission::Shed { req, reason } = self.queue.submit(req, self.cfg.shed_policy) {
+            // Route the shed response like any other so the submitter
+            // sees its own id and the accumulator counts the shed.
+            let tx = self.tx.as_ref().expect("session is live until shutdown");
+            let _ = tx.send(FitResponse::shed(req.id, reason, 0.0));
+        }
+        ticket
+    }
+
+    /// Cancel a submitted job by its ticket (PROTOCOL.md §6 `cancel`):
+    /// if the job is still queued it is removed — never executed — and
+    /// its single response is routed as `status:"shed"`,
+    /// `detail:"cancelled by client"`. Returns `false` when the ticket's
+    /// job already started executing, already answered, or never existed;
+    /// whatever response it owes (if any) arrives unchanged. Either way
+    /// the per-job exactly-one-response invariant holds.
+    pub fn cancel(&self, ticket: u64) -> bool {
+        match self.queue.remove(ticket) {
+            Some(p) => {
                 let tx = self.tx.as_ref().expect("session is live until shutdown");
-                let _ = tx.send(FitResponse::shed(req.id, reason, 0.0));
-                false
+                let _ =
+                    tx.send(FitResponse::shed(ticket, "cancelled by client", p.queue_seconds()));
+                true
             }
+            None => false,
         }
     }
 
@@ -290,6 +315,39 @@ mod tests {
         assert_eq!(resp.id, 42);
         assert_eq!(resp.status, JobStatus::Shed);
         let report = session.shutdown();
+        assert_eq!(report.shed, 1);
+    }
+
+    #[test]
+    fn cancel_removes_a_queued_job_and_routes_its_shed_reply() {
+        // One worker, no coalescing: the first (heavy) job occupies the
+        // worker while the second waits in the queue — cancellable.
+        let session = ServeSession::start(ServeConfig {
+            workers: 1,
+            max_batch: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let mut heavy = job(1, 11);
+        heavy.max_points = 4_000;
+        heavy.kmeans.k = 8;
+        session.submit(heavy, &tx);
+        let ticket2 = session.submit(job(2, 22), &tx);
+        assert!(session.cancel(ticket2), "job 2 had not started executing");
+        assert!(!session.cancel(ticket2), "a second cancel finds nothing");
+        assert!(!session.cancel(9_999), "unknown tickets cancel nothing");
+        let mut by_id = std::collections::HashMap::new();
+        for _ in 0..2 {
+            let r = rx.recv().unwrap();
+            by_id.insert(r.id, r);
+        }
+        assert_eq!(by_id[&1].status, JobStatus::Ok, "{}", by_id[&1].detail);
+        assert_eq!(by_id[&2].status, JobStatus::Shed);
+        assert!(by_id[&2].detail.contains("cancelled"), "{}", by_id[&2].detail);
+        let report = session.shutdown();
+        assert_eq!(report.submitted, 2);
+        assert_eq!(report.completed, 1);
         assert_eq!(report.shed, 1);
     }
 

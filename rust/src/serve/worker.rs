@@ -20,7 +20,7 @@ use crate::error::Result;
 use crate::runtime::{native::NativeEngine, xla::XlaEngine, Engine};
 
 use super::batch::{fit_lockstep, BackendKind};
-use super::job::{FitResponse, JobStatus};
+use super::job::FitResponse;
 use super::queue::{Pending, SharedQueue};
 use super::ServeConfig;
 
@@ -235,18 +235,19 @@ fn send_result(
 ) {
     stats.jobs += 1;
     let resp = match res {
-        Ok(out) => FitResponse {
-            id: p.req.id,
-            status: JobStatus::Ok,
-            detail: String::new(),
-            backend: out.report.backend.clone(),
-            worker,
-            batch_size,
-            queue_seconds,
-            service_seconds,
-            fit: Some(out.fit),
-            report: Some(out.report),
-        },
+        Ok(out) => {
+            let backend = out.report.backend.clone();
+            FitResponse::ok(
+                p.req.id,
+                backend,
+                worker,
+                batch_size,
+                queue_seconds,
+                service_seconds,
+                out.fit,
+                out.report,
+            )
+        }
         Err(e) => {
             let mut r =
                 FitResponse::failed(p.req.id, &p.req.backend_name, worker, batch_size, queue_seconds, &e);
@@ -260,7 +261,7 @@ fn send_result(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::job::FitRequest;
+    use crate::serve::job::{FitRequest, JobStatus};
     use crate::serve::queue::ShedPolicy;
     use std::sync::mpsc;
 

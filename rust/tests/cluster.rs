@@ -1,0 +1,281 @@
+//! End-to-end tests for `kpynq::cluster` — real child processes, real
+//! sockets.
+//!
+//! The acceptance claims (ISSUE 4 / DESIGN.md §2):
+//!
+//! * a 2-shard cluster returns **bit-identical** `FitResponse`s —
+//!   including the PROTOCOL.md §8 FNV fingerprint — to a single daemon,
+//!   which in turn matches direct engine runs;
+//! * killing a shard mid-stream is survivable: the supervisor restarts
+//!   it, its in-flight jobs are requeued, and the external client still
+//!   receives every reply exactly once;
+//! * the router policy (BatchKey affinity, least-loaded fallback,
+//!   lowest-index tie-break) is pinned at the public API.
+//!
+//! Shard children are the real `kpynq` binary (`CARGO_BIN_EXE_kpynq`),
+//! exec'd as `kpynq serve --listen unix:…` exactly as `kpynq cluster`
+//! does in production.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use kpynq::cluster::{Cluster, ClusterConfig, ClusterHandle, ClientConn, Router};
+use kpynq::coordinator::{KpynqSystem, SystemConfig, SystemOutput};
+use kpynq::serve::job::assignments_checksum;
+use kpynq::serve::net::{Daemon, NetConfig};
+use kpynq::serve::{FitRequest, FitResponse, JobStatus, ServeConfig, ServeReport};
+
+/// Generous safety net: nothing here should take anywhere near this
+/// long, but a wedged cluster must fail the test, not hang CI.
+const TEST_READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+fn unique_socket_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("kpynq-cluster-test-{tag}-{}", std::process::id()))
+}
+
+fn cluster_config(shards: usize, tag: &str, serve: ServeConfig) -> ClusterConfig {
+    ClusterConfig {
+        shards,
+        serve,
+        socket_dir: unique_socket_dir(tag),
+        max_restarts: 3,
+        program: PathBuf::from(env!("CARGO_BIN_EXE_kpynq")),
+    }
+}
+
+fn start_cluster(
+    shards: usize,
+    tag: &str,
+    serve: ServeConfig,
+) -> (String, ClusterHandle, std::thread::JoinHandle<ServeReport>) {
+    let cluster = Cluster::start("127.0.0.1:0", NetConfig::default(), cluster_config(shards, tag, serve))
+        .expect("cluster start");
+    let addr = cluster.local_addr();
+    let handle = cluster.handle();
+    let thread = std::thread::spawn(move || cluster.run().expect("cluster run"));
+    (addr, handle, thread)
+}
+
+fn connect(addr: &str) -> ClientConn {
+    let c = ClientConn::connect(addr).expect("connect");
+    c.set_read_timeout(Some(TEST_READ_TIMEOUT)).expect("set timeout");
+    c
+}
+
+fn job(id: u64, dataset: &str, data_seed: u64, k: usize, seed: u64) -> FitRequest {
+    FitRequest {
+        id,
+        dataset: dataset.into(),
+        data_seed,
+        max_points: 800,
+        kmeans: kpynq::kmeans::KMeansConfig { k, seed, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// The ground truth: the same request straight through the coordinator —
+/// no serving, no socket, no cluster.
+fn direct(req: &FitRequest) -> SystemOutput {
+    let rc = req.to_run_config().unwrap();
+    let ds = rc.load_dataset().unwrap();
+    KpynqSystem::new(SystemConfig { backend: rc.backend(), verify: false })
+        .unwrap()
+        .cluster(&ds, &req.kmeans)
+        .unwrap()
+}
+
+fn collect_by_id(c: &mut ClientConn, n: usize) -> BTreeMap<u64, FitResponse> {
+    let mut by_id = BTreeMap::new();
+    for _ in 0..n {
+        let r = c.recv_response().expect("response");
+        assert!(
+            by_id.insert(r.id, r).is_none(),
+            "duplicate reply for one id: exactly-once delivery is broken"
+        );
+    }
+    by_id
+}
+
+#[test]
+fn two_shard_cluster_matches_single_daemon_and_direct_runs() {
+    // A job mix spanning two BatchKeys (blobs d=16, kegg d=20), so the
+    // router actually spreads work across both shards.
+    let jobs: Vec<FitRequest> = vec![
+        job(1, "blobs", 100, 3, 41),
+        job(2, "blobs", 101, 4, 42),
+        job(3, "kegg", 102, 5, 43),
+        job(4, "blobs", 103, 3, 44),
+        job(5, "kegg", 104, 4, 45),
+        job(6, "blobs", 105, 5, 46),
+    ];
+
+    // Reference 1: one plain daemon (in-process), same total worker count.
+    let daemon = Daemon::bind(
+        "127.0.0.1:0",
+        NetConfig::default(),
+        ServeConfig { workers: 2, ..Default::default() },
+    )
+    .expect("daemon bind");
+    let daemon_addr = daemon.local_addr();
+    let daemon_handle = daemon.handle();
+    let daemon_thread = std::thread::spawn(move || daemon.run().expect("daemon run"));
+    let mut dc = connect(&daemon_addr);
+    for j in &jobs {
+        dc.submit(j).unwrap();
+    }
+    let daemon_replies = collect_by_id(&mut dc, jobs.len());
+    daemon_handle.shutdown();
+    daemon_thread.join().unwrap();
+
+    // The system under test: two whole shard processes behind one port.
+    let (addr, handle, thread) = start_cluster(
+        2,
+        "identity",
+        ServeConfig { workers: 1, ..Default::default() },
+    );
+    let mut cc = connect(&addr);
+    let g = cc.greeting();
+    assert_eq!(g.get("shards").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(g.get("workers").unwrap().as_usize().unwrap(), 2, "shards x workers");
+    for j in &jobs {
+        cc.submit(j).unwrap();
+    }
+    let cluster_replies = collect_by_id(&mut cc, jobs.len());
+
+    for j in &jobs {
+        let want = direct(j);
+        let want_fnv = assignments_checksum(&want.fit.assignments);
+        for (surface, reply) in
+            [("daemon", &daemon_replies[&j.id]), ("cluster", &cluster_replies[&j.id])]
+        {
+            assert_eq!(reply.status, JobStatus::Ok, "{surface} job {}: {}", j.id, reply.detail);
+            let s = reply.summary.expect("ok replies carry a summary");
+            assert_eq!(s.assignments_fnv, want_fnv, "{surface} job {} fingerprint", j.id);
+            assert_eq!(s.inertia, want.fit.inertia, "{surface} job {} inertia", j.id);
+            assert_eq!(s.iterations, want.fit.iterations, "{surface} job {} iterations", j.id);
+        }
+    }
+
+    // stats over the cluster front: aggregate queue_depth + shard gauges.
+    let stats = cc.stats().unwrap();
+    assert_eq!(stats.submitted, jobs.len() as u64);
+    assert_eq!(stats.queue_depth, 0, "everything answered");
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.submitted, jobs.len() as u64);
+    assert_eq!(report.completed, jobs.len() as u64);
+    assert_eq!(report.shard_restarts, 0);
+    assert_eq!(report.dropped_replies, 0);
+    assert_eq!(report.workers, 2);
+}
+
+#[test]
+fn shard_kill_mid_stream_loses_and_duplicates_nothing() {
+    let (addr, handle, thread) = start_cluster(
+        2,
+        "chaos",
+        ServeConfig { workers: 1, ..Default::default() },
+    );
+    let mut cc = connect(&addr);
+
+    // Same BatchKey throughout ⇒ affinity piles the stream onto one
+    // shard (the lowest-index tie-break says shard 0) — killing it hits
+    // the busiest possible target.
+    let jobs: Vec<FitRequest> =
+        (1..=12).map(|i| job(i, "blobs", 200 + i, 3 + (i as usize % 3), 50 + i)).collect();
+    for j in &jobs {
+        cc.submit(j).unwrap();
+    }
+    // Kill while the stream is (very likely) in flight. Even if the pool
+    // won the race and finished everything, the assertions below still
+    // must hold: the kill always lands, the supervisor always restarts,
+    // and no reply may be lost or duplicated either way.
+    handle.kill_shard(0);
+    let replies = collect_by_id(&mut cc, jobs.len());
+
+    for j in &jobs {
+        let r = &replies[&j.id];
+        assert_eq!(r.status, JobStatus::Ok, "job {} after shard kill: {}", j.id, r.detail);
+        let want = direct(j);
+        assert_eq!(
+            r.summary.unwrap().assignments_fnv,
+            assignments_checksum(&want.fit.assignments),
+            "job {} must be bit-identical even if it was requeued and re-run",
+            j.id
+        );
+    }
+
+    // The cluster is fully serviceable after recovery.
+    assert_eq!(cc.ping().unwrap(), kpynq::serve::net::PROTO_VERSION);
+    let post = job(99, "blobs", 999, 4, 99);
+    cc.submit(&post).unwrap();
+    let r = cc.recv_response().unwrap();
+    assert_eq!(r.id, 99);
+    assert_eq!(r.status, JobStatus::Ok, "{}", r.detail);
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert!(report.shard_restarts >= 1, "the killed shard was restarted");
+    assert_eq!(report.submitted, jobs.len() as u64 + 1);
+    assert_eq!(report.completed, jobs.len() as u64 + 1, "every job answered exactly once");
+    assert_eq!(report.dropped_replies, 0);
+}
+
+#[test]
+fn cancel_over_the_cluster_front_keeps_the_exactly_once_contract() {
+    // One worker per shard, no coalescing: a heavy head job keeps shard
+    // queues occupiable, so the cancel target is usually still queued.
+    let (addr, handle, thread) = start_cluster(
+        2,
+        "cancel",
+        ServeConfig { workers: 1, max_batch: 1, ..Default::default() },
+    );
+    let mut cc = connect(&addr);
+    let mut heavy = job(1, "blobs", 300, 8, 61);
+    heavy.max_points = 4_000;
+    cc.submit(&heavy).unwrap();
+    let target = job(2, "blobs", 301, 3, 62);
+    cc.submit(&target).unwrap();
+    // The ack is advisory (the cancel races execution); the invariant
+    // under test is that BOTH jobs still get exactly one reply, with the
+    // cancelled one shed iff the ack said so.
+    let cancelled = cc.cancel(2).unwrap();
+    let replies = collect_by_id(&mut cc, 2);
+    assert_eq!(replies[&1].status, JobStatus::Ok, "{}", replies[&1].detail);
+    if cancelled {
+        assert_eq!(replies[&2].status, JobStatus::Shed);
+        assert!(replies[&2].detail.contains("cancelled"), "{}", replies[&2].detail);
+    } else {
+        assert_eq!(replies[&2].status, JobStatus::Ok, "{}", replies[&2].detail);
+    }
+    // Cancelling something already answered is a clean false.
+    assert!(!cc.cancel(1).unwrap());
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.submitted, 2);
+    assert_eq!(report.completed + report.shed, 2);
+}
+
+#[test]
+fn router_pins_batch_keys_and_breaks_ties_low() {
+    // The policy pinned at the public API (unit-level detail lives in
+    // cluster::router's own tests): affinity beats load, new keys go
+    // least-loaded, ties break to the lowest index, dead shards re-home.
+    let mut r = Router::new();
+    let blobs = FitRequest::default(); // native + blobs: batchable
+    let first = r.route(&blobs, &[0, 0]).unwrap();
+    assert_eq!(first, 0, "tie-break: lowest index");
+    assert_eq!(r.route(&blobs, &[7, 0]).unwrap(), 0, "affinity beats least-loaded");
+    let mut kegg = FitRequest::default();
+    kegg.dataset = "kegg".into();
+    assert_eq!(r.route(&kegg, &[7, 0]).unwrap(), 1, "new key goes least-loaded");
+    r.forget_shard(0);
+    assert_eq!(r.route(&blobs, &[0, 9]).unwrap(), 0, "forgotten pins re-home by load");
+    let mut solo = FitRequest::default();
+    solo.backend_name = "fpga-sim".into(); // no BatchKey: never pinned
+    assert_eq!(r.route(&solo, &[5, 2]).unwrap(), 1);
+    assert_eq!(r.route(&solo, &[1, 2]).unwrap(), 0);
+}

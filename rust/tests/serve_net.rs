@@ -238,6 +238,11 @@ fn protocol_edges_answer_structured_errors_without_killing_the_session() {
     let stats = c.read_json();
     assert_eq!(stats.get("submitted").unwrap().as_usize().unwrap(), 1);
     assert_eq!(stats.get("active_conns").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(
+        stats.get("queue_depth").unwrap().as_usize().unwrap(),
+        0,
+        "queue_depth is part of the stats reply (PROTOCOL.md §6)"
+    );
 
     c.send(r#"{"op":"shutdown"}"#);
     let report = thread.join().unwrap();
@@ -352,6 +357,55 @@ fn unix_domain_listener_serves_the_same_protocol() {
     let report = thread.join().unwrap();
     assert_eq!(report.completed, 1);
     assert!(!path.exists(), "socket file removed on drain");
+}
+
+#[test]
+fn cancel_op_sheds_a_queued_job_and_acks_misses_honestly() {
+    // One worker, no coalescing: a heavy head job keeps the second one
+    // queued long enough to cancel it deterministically.
+    let (addr, _handle, thread) = start_daemon(
+        ServeConfig { workers: 1, max_batch: 1, ..Default::default() },
+        NetConfig::default(),
+    );
+    let mut c = Client::connect(&addr);
+    c.expect_greeting();
+    c.send(r#"{"id": 1, "max_points": 4000, "k": 8, "seed": 5}"#);
+    c.send(&job_line(2, 7, 3, 7));
+    c.send(r#"{"op":"cancel","id":2}"#);
+    let ack = c.read_json();
+    assert_eq!(ack.get("op").unwrap().as_str().unwrap(), "cancelled");
+    assert_eq!(ack.get("id").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(
+        ack.get("cancelled").unwrap(),
+        &kpynq::util::json::Json::Bool(true),
+        "job 2 had not started executing"
+    );
+    // Both jobs still answer exactly once: 1 ok, 2 shed-as-cancelled.
+    let mut by_id = std::collections::BTreeMap::new();
+    for _ in 0..2 {
+        let r = c.read_json();
+        by_id.insert(r.get("id").unwrap().as_usize().unwrap() as u64, r);
+    }
+    assert_eq!(by_id[&1].get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(by_id[&2].get("status").unwrap().as_str().unwrap(), "shed");
+    assert!(by_id[&2].get("detail").unwrap().as_str().unwrap().contains("cancelled"));
+    // Cancelling something finished (or never submitted) is a clean false.
+    c.send(r#"{"op":"cancel","id":1}"#);
+    let ack = c.read_json();
+    assert_eq!(ack.get("cancelled").unwrap(), &kpynq::util::json::Json::Bool(false));
+    c.send(r#"{"op":"cancel","id":777}"#);
+    let ack = c.read_json();
+    assert_eq!(ack.get("cancelled").unwrap(), &kpynq::util::json::Json::Bool(false));
+    // A malformed cancel is a protocol error, not a dead connection.
+    c.send(r#"{"op":"cancel","id":"two"}"#);
+    let err = c.read_json();
+    assert_eq!(err.get("status").unwrap().as_str().unwrap(), "error");
+
+    c.send(r#"{"op":"shutdown"}"#);
+    let report = thread.join().unwrap();
+    assert_eq!(report.completed, 1);
+    assert_eq!(report.shed, 1);
+    assert_eq!(report.protocol_errors, 1);
 }
 
 #[test]

@@ -10,6 +10,10 @@
 #      request-side KNOWN key list and the response-side `to_json` inserts
 #      — is documented in PROTOCOL.md (as `` `field` ``). No undocumented
 #      wire fields, in either direction.
+#   3. Every control-frame op the server dispatches on (the match arms in
+#      `serve::net::control_frame`), every reply/notice op it emits, and
+#      the stats-reply keys new wire consumers depend on (`queue_depth`,
+#      the cancel ack shape) are documented in PROTOCOL.md.
 set -eu
 cd "$(dirname "$0")/.."
 fail=0
@@ -61,6 +65,27 @@ fi
 for key in $req_keys $resp_keys; do
     if ! grep -q "\`$key\`" PROTOCOL.md; then
         echo "FAIL: wire field \`$key\` (serialized by serve::job) is undocumented in PROTOCOL.md"
+        fail=1
+    fi
+done
+
+# ---- 3. control-frame surface is documented in PROTOCOL.md --------------
+net_rs=rust/src/serve/net.rs
+# Request ops: the match arms of control_frame ("ping" => ...).
+req_ops=$(sed -n '/fn control_frame/,/^}$/p' "$net_rs" \
+          | grep -oE '"[a-z-]+" =>' | sed 's/" =>$//;s/^"//' | sort -u)
+if [ -z "$req_ops" ]; then
+    echo "FAIL: could not extract control-frame ops from $net_rs (layout changed?)"
+    fail=1
+fi
+# Reply/notice ops and stats keys the cluster layer (and any other wire
+# consumer) depends on; extend this list when the control surface grows.
+emitted="pong cancelled shutdown-ack idle-timeout queue_depth shards shards_alive"
+for tok in $req_ops $emitted; do
+    # Ops appear JSON-quoted ("ping", inside example frames or tables),
+    # stats keys as backticked `queue_depth`.
+    if ! grep -q -e "\"$tok\"" -e "\`$tok\`" PROTOCOL.md; then
+        echo "FAIL: control-frame token '$tok' (serve::net wire surface) is undocumented in PROTOCOL.md"
         fail=1
     fi
 done
