@@ -9,7 +9,7 @@ PYTHON      ?= python3
 ARTIFACTS   := artifacts
 PY_SOURCES  := $(wildcard python/compile/*.py python/compile/kernels/*.py)
 
-.PHONY: all build test serve-test serve-net-test cluster-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
+.PHONY: all build test serve-test serve-net-test cluster-test cluster-remote-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
 
 all: build
 
@@ -36,6 +36,13 @@ serve-net-test:
 # policy pins. Spawns real `kpynq serve --listen unix:` child processes.
 cluster-test:
 	cargo test -q --test cluster
+
+# The remote-shards (multi-host) mode: chaos tests against deterministic
+# fake-shard doubles (scripted disconnects/stalls/garbling — no child
+# processes, no signals) plus the PROTOCOL.md §4–§6 conformance vectors
+# run against both the real daemon and the double.
+cluster-remote-test:
+	cargo test -q --test cluster_remote --test protocol_conformance
 
 # Docs consistency: DESIGN.md/PROTOCOL.md/EXPERIMENTS.md §-citations in the
 # source must resolve, and every serve::job wire field must be documented

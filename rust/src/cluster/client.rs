@@ -21,8 +21,11 @@
 //! * **Control frames** — typed `ping` / `stats` / `cancel` round-trips
 //!   (job responses arriving in between are buffered, not lost).
 //! * **Reconnect with backoff** — [`ClientConn::connect_with_backoff`]
-//!   bounds the doubling retry loop the supervisor leans on while a
-//!   freshly spawned shard binds its socket.
+//!   runs the doubling retry loop under a [`ReconnectPolicy`]: the
+//!   supervisor leans on it while a freshly spawned shard binds its
+//!   socket, and the remote-shards front ([`crate::cluster::remote`])
+//!   leans on it to re-establish a lost link to a daemon on another
+//!   host.
 //!
 //! ```no_run
 //! use kpynq::cluster::client::ClientConn;
@@ -44,6 +47,92 @@ use crate::serve::codec::{write_line, LineEvent, LineReader, Stream, WireStream}
 use crate::serve::job::{FitRequest, FitResponse};
 use crate::serve::net::PROTO_VERSION;
 use crate::util::json::Json;
+
+/// The bounded-backoff shape every (re)connect to a protocol peer shares:
+/// the supervisor's readiness wait for a freshly spawned local shard and
+/// the remote fleet's link re-establishment are the *same* loop with
+/// different budgets, so the knobs live here once instead of riding along
+/// as loose arguments (they used to — four positional `Duration`/`u32`
+/// parameters on `connect_with_backoff`, duplicated at each call site).
+///
+/// **Total-wait bound.** Retry delays double from [`base_delay`] up to
+/// [`max_delay`], and the *sum of backoff sleeps* is additionally capped
+/// by [`total_wait`]: each sleep is clamped to the remaining budget, and
+/// once the budget is spent the loop stops retrying even if `attempts`
+/// remain. The bound is therefore hard for the waiting the policy itself
+/// inserts; the connect attempts' own latency (normally instant on a
+/// refused loopback port, but up to the OS connect timeout for a
+/// black-holed remote host) rides on top and cannot be bounded from
+/// here. `rust/src/cluster/client.rs` unit-pins the sleep bound.
+///
+/// [`base_delay`]: ReconnectPolicy::base_delay
+/// [`max_delay`]: ReconnectPolicy::max_delay
+/// [`total_wait`]: ReconnectPolicy::total_wait
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReconnectPolicy {
+    /// Connection attempts before giving up (at least 1 is always made).
+    pub attempts: u32,
+    /// First retry delay; doubles after every failed attempt.
+    pub base_delay: Duration,
+    /// Cap on the doubled delay.
+    pub max_delay: Duration,
+    /// Hard bound on the total time spent sleeping between attempts.
+    pub total_wait: Duration,
+}
+
+impl Default for ReconnectPolicy {
+    /// The shard-readiness shape the supervisor has always used: doubling
+    /// backoff from 20 ms capped at 250 ms, 45 attempts, ≈ 10 s total —
+    /// deliberately bounded, because a respawn runs this inline on the
+    /// cluster's monitor thread, which is stalled for the duration.
+    fn default() -> Self {
+        Self {
+            attempts: 45,
+            base_delay: Duration::from_millis(20),
+            max_delay: Duration::from_millis(250),
+            total_wait: Duration::from_secs(10),
+        }
+    }
+}
+
+impl ReconnectPolicy {
+    pub fn validate(&self) -> Result<()> {
+        if self.attempts == 0 {
+            return Err(Error::Config("reconnect attempts must be positive".into()));
+        }
+        if self.base_delay.is_zero() || self.max_delay < self.base_delay {
+            return Err(Error::Config(
+                "reconnect base delay must be positive and no larger than the cap".into(),
+            ));
+        }
+        if self.total_wait.is_zero() {
+            return Err(Error::Config("reconnect total wait must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+/// A detached handle that can force a connection's socket closed from any
+/// thread: both halves of a split [`ClientConn`] then observe EOF/EPIPE
+/// and wind down through their normal error paths. This is the remote
+/// fleet's analogue of the supervisor's SIGKILL — the only way to
+/// "crash" a peer the cluster does not own a process handle for (the
+/// hung-link watchdog and the chaos hook both use it). The handle holds
+/// its own clone of the socket, deliberately *outside* the writer lock:
+/// a force-close must land even when the writer half is wedged
+/// mid-`write` on a peer that stopped reading — which is precisely the
+/// condition the watchdog fires on.
+#[derive(Clone)]
+pub struct LinkShutdown {
+    stream: Arc<Stream>,
+}
+
+impl LinkShutdown {
+    /// Shut the socket down in both directions (idempotent).
+    pub fn shutdown(&self) {
+        self.stream.shutdown_stream();
+    }
+}
 
 /// Parsed `{"op":"stats"}` reply (PROTOCOL.md §6) — the per-shard load
 /// snapshot the cluster router's least-loaded policy reads.
@@ -105,6 +194,9 @@ pub enum ClientEvent {
 #[derive(Clone)]
 struct Shared {
     writer: Arc<Mutex<Stream>>,
+    /// A lock-free socket clone for [`LinkShutdown`] (see there for why
+    /// it must not share the writer lock).
+    killer: Arc<Stream>,
     /// wire id → the submitter's id, removed as responses arrive.
     inflight: Arc<Mutex<HashMap<u64, u64>>>,
     /// wire id → submitter's id for sent cancels. Kept separately from
@@ -295,8 +387,10 @@ impl ClientConn {
         let stream = Stream::connect(addr)?;
         stream.set_blocking().map_err(Error::Io)?;
         let writer = stream.try_clone_stream().map_err(Error::Io)?;
+        let killer = Arc::new(stream.try_clone_stream().map_err(Error::Io)?);
         let shared = Shared {
             writer: Arc::new(Mutex::new(writer)),
+            killer,
             inflight: Arc::new(Mutex::new(HashMap::new())),
             cancels: Arc::new(Mutex::new(HashMap::new())),
             next_wire_id: Arc::new(AtomicU64::new(1)),
@@ -337,22 +431,26 @@ impl ClientConn {
         })
     }
 
-    /// [`ClientConn::connect`] with a bounded doubling-backoff retry loop
-    /// (delays double from `initial_delay` up to `max_delay`; total
-    /// budget ≈ `attempts × max_delay` once the doubling saturates) — the
-    /// supervisor's readiness wait for a daemon that is still binding its
-    /// socket. `give_up` may veto further attempts early (e.g. when the
-    /// child process already exited).
+    /// [`ClientConn::connect`] with the bounded doubling-backoff retry
+    /// loop a [`ReconnectPolicy`] describes — the supervisor's readiness
+    /// wait for a daemon that is still binding its socket, and the remote
+    /// fleet's link re-establishment. `give_up` may veto further attempts
+    /// early (e.g. when the child process already exited). Backoff sleeps
+    /// never exceed `policy.total_wait` in sum; once that budget is spent
+    /// the loop stops retrying even with attempts remaining.
     pub fn connect_with_backoff(
         addr: &str,
-        attempts: u32,
-        initial_delay: Duration,
-        max_delay: Duration,
+        policy: &ReconnectPolicy,
         mut give_up: impl FnMut() -> Option<String>,
     ) -> Result<ClientConn> {
-        let mut delay = initial_delay;
+        // The budget tracks backoff *sleeps* only (the documented bound):
+        // charging the dials' own latency against it would collapse
+        // `attempts` retries into one for a black-holed host whose
+        // connect blocks for the OS timeout.
+        let mut slept = Duration::ZERO;
+        let mut delay = policy.base_delay;
         let mut last_err = None;
-        for attempt in 0..attempts.max(1) {
+        for attempt in 0..policy.attempts.max(1) {
             if let Some(reason) = give_up() {
                 return Err(Error::Io(std::io::Error::new(
                     std::io::ErrorKind::ConnectionRefused,
@@ -363,14 +461,27 @@ impl ClientConn {
                 Ok(c) => return Ok(c),
                 Err(e) => last_err = Some(e),
             }
-            if attempt + 1 < attempts {
-                std::thread::sleep(delay);
-                delay = (delay * 2).min(max_delay);
+            if attempt + 1 < policy.attempts.max(1) {
+                let remaining = policy.total_wait.saturating_sub(slept);
+                if remaining.is_zero() {
+                    break; // total-wait budget spent: stop retrying
+                }
+                let nap = delay.min(remaining);
+                std::thread::sleep(nap);
+                slept += nap;
+                delay = (delay * 2).min(policy.max_delay);
             }
         }
         Err(last_err.unwrap_or_else(|| {
             Error::Config(format!("{addr}: connect_with_backoff needs at least one attempt"))
         }))
+    }
+
+    /// A handle that can force this connection's socket closed from any
+    /// thread (see [`LinkShutdown`]). Works before and after
+    /// [`ClientConn::split`].
+    pub fn shutdown_handle(&self) -> LinkShutdown {
+        LinkShutdown { stream: Arc::clone(&self.sender.shared.killer) }
     }
 
     /// The server's greeting line (PROTOCOL.md §2), as parsed JSON.
@@ -543,6 +654,7 @@ mod tests {
     use super::*;
     use crate::serve::net::{Daemon, DaemonHandle, NetConfig};
     use crate::serve::{JobStatus, ServeConfig, ServeReport};
+    use std::time::Instant;
 
     fn start_daemon(serve: ServeConfig) -> (String, DaemonHandle, std::thread::JoinHandle<ServeReport>) {
         let daemon = Daemon::bind("127.0.0.1:0", NetConfig::default(), serve).expect("bind");
@@ -622,13 +734,20 @@ mod tests {
         assert_eq!(report.dropped_replies, 0);
     }
 
+    fn quick_policy(attempts: u32, total: Duration) -> ReconnectPolicy {
+        ReconnectPolicy {
+            attempts,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(4),
+            total_wait: total,
+        }
+    }
+
     #[test]
     fn connect_with_backoff_gives_up_on_request() {
         let err = ClientConn::connect_with_backoff(
             "127.0.0.1:1",
-            10,
-            Duration::from_millis(1),
-            Duration::from_millis(4),
+            &quick_policy(10, Duration::from_secs(1)),
             || Some("child exited".into()),
         )
         .unwrap_err();
@@ -636,12 +755,66 @@ mod tests {
         // And without a veto it retries, then reports the connect error.
         let err = ClientConn::connect_with_backoff(
             "127.0.0.1:1",
-            2,
-            Duration::from_millis(1),
-            Duration::from_millis(4),
+            &quick_policy(2, Duration::from_secs(1)),
             || None,
         )
         .unwrap_err();
         assert!(err.to_string().contains("127.0.0.1:1"), "{err}");
+    }
+
+    #[test]
+    fn connect_with_backoff_never_sleeps_past_the_total_wait_bound() {
+        // Far more attempts than the budget can fund: without the
+        // total-wait clamp, ~10k attempts at the 4 ms cap would sleep for
+        // tens of seconds. Port 1 refuses instantly on loopback, so the
+        // elapsed time is dominated by the backoff sleeps the policy
+        // controls — the bound plus scheduling slack is the whole story.
+        let total = Duration::from_millis(200);
+        let started = Instant::now();
+        let err =
+            ClientConn::connect_with_backoff("127.0.0.1:1", &quick_policy(10_000, total), || None)
+                .unwrap_err();
+        let elapsed = started.elapsed();
+        assert!(err.to_string().contains("127.0.0.1:1"), "{err}");
+        assert!(
+            elapsed < total + Duration::from_secs(5),
+            "total-wait bound not enforced: slept {elapsed:?} against a {total:?} budget"
+        );
+    }
+
+    #[test]
+    fn reconnect_policy_validates_and_defaults_to_the_readiness_shape() {
+        let d = ReconnectPolicy::default();
+        d.validate().unwrap();
+        assert_eq!(d.attempts, 45);
+        assert_eq!(d.base_delay, Duration::from_millis(20));
+        assert_eq!(d.max_delay, Duration::from_millis(250));
+        assert_eq!(d.total_wait, Duration::from_secs(10));
+        assert!(ReconnectPolicy { attempts: 0, ..d.clone() }.validate().is_err());
+        assert!(ReconnectPolicy { base_delay: Duration::ZERO, ..d.clone() }.validate().is_err());
+        assert!(ReconnectPolicy {
+            max_delay: Duration::from_millis(1),
+            ..d.clone()
+        }
+        .validate()
+        .is_err());
+        assert!(ReconnectPolicy { total_wait: Duration::ZERO, ..d }.validate().is_err());
+    }
+
+    #[test]
+    fn shutdown_handle_forces_both_halves_down() {
+        let (addr, handle, thread) = start_daemon(ServeConfig { workers: 1, ..Default::default() });
+        let mut c = ClientConn::connect(&addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let killer = c.shutdown_handle();
+        killer.shutdown();
+        killer.shutdown(); // idempotent
+        // The reader observes EOF (or a reset error) instead of blocking.
+        match c.next_event() {
+            Ok(ClientEvent::Eof) | Err(_) => {}
+            Ok(other) => panic!("expected EOF after forced shutdown, got {other:?}"),
+        }
+        handle.shutdown();
+        thread.join().unwrap();
     }
 }

@@ -17,14 +17,19 @@
 //!   folding every response into the cluster's `ResponseAccumulator` on
 //!   the way — the same exactly-one-reply-per-job contract the session
 //!   gives in-process (DESIGN.md §2).
-//! * **Supervision.** A monitor thread owns the [`Supervisor`]: a shard
-//!   that crashes (link EOF, write error, or a reaped child) is
-//!   respawned within its restart budget and every ticket it had not
-//!   answered is requeued — onto the new incarnation or the survivors.
-//!   Requeueing re-*runs* jobs, which is safe precisely because of the
-//!   serving guarantee: a fit is a deterministic function of its request,
-//!   so the re-run's reply is bit-identical to the one the dead shard
-//!   would have sent, and each ticket still yields exactly one reply.
+//! * **Supervision.** A monitor thread owns the shard *host* — the
+//!   [`Supervisor`] when the shards are spawned local children, the
+//!   [`super::remote::RemoteFleet`] when they are already-running
+//!   daemons on other hosts (`remote_shards` config / `--remote`). A
+//!   shard that crashes (link EOF, write error, or a reaped child) is
+//!   respawned — or its link re-dialed under the shared
+//!   [`super::client::ReconnectPolicy`] — within its budget, and every
+//!   ticket it had not answered is requeued onto the new incarnation or
+//!   the survivors. Requeueing re-*runs* jobs, which is safe precisely
+//!   because of the serving guarantee: a fit is a deterministic function
+//!   of its request, so the re-run's reply is bit-identical to the one
+//!   the dead shard would have sent, and each ticket still yields
+//!   exactly one reply.
 //! * **Cancel forwarding.** `{"op":"cancel"}` resolves the ticket's
 //!   owning shard and round-trips the cancel there, so the ack keeps the
 //!   single-daemon meaning (PROTOCOL.md §6).
@@ -57,6 +62,7 @@ use crate::serve::{ServeConfig, ServeReport};
 use crate::util::json::Json;
 
 use super::client::{ClientConn, ClientEvent};
+use super::remote::RemoteFleet;
 use super::router::{Router, DEAD};
 use super::supervisor::{Supervisor, SupervisorConfig};
 use super::ClusterConfig;
@@ -69,13 +75,6 @@ const CANCEL_WAIT: Duration = Duration::from_secs(2);
 const FINAL_STATS_WAIT: Duration = Duration::from_secs(2);
 /// Grace for shard daemons to exit after their `shutdown` frame.
 const SHUTDOWN_GRACE: Duration = Duration::from_secs(10);
-/// A live shard whose link has answered nothing (not even the monitor's
-/// ~4/s stats polls) for this long is treated as wedged and killed so the
-/// normal crash recovery requeues its work. Generous on purpose: under
-/// sustained `block`-policy backpressure a healthy shard's connection
-/// reader can legitimately go quiet while its queue drains — a watchdog
-/// kill there wastes (re-run) work but never loses or duplicates a reply.
-const HEALTH_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// `ClusterRoute.shard` before dispatch has picked one.
 const UNROUTED: usize = usize::MAX;
@@ -87,7 +86,103 @@ enum ShardCmd {
     /// Cancel by cluster ticket.
     Cancel(u64),
     Stats,
+    /// Drain-and-exit frame for shards the cluster owns (local children).
     Shutdown,
+    /// Graceful goodbye for shards it does not (remote daemons).
+    Bye,
+}
+
+/// What the monitor needs from whatever owns the shards' lifecycles: the
+/// [`Supervisor`] (spawned local children) and the [`RemoteFleet`]
+/// (unsupervised links to daemons on other hosts) are the two
+/// implementations, so one monitor loop drives both modes — crash
+/// recovery, the hung-link watchdog, the chaos hook and teardown all
+/// behave identically whether a "respawn" execs a process or re-dials a
+/// socket (DESIGN.md §2).
+trait ShardHost: Send {
+    /// Replace dead shard `index` with a fresh incarnation (respawned
+    /// child / re-dialed link) and return a ready connection. An error
+    /// means the shard is gone for good — the caller abandons it.
+    fn respawn(&mut self, index: usize) -> Result<ClientConn>;
+    /// Current incarnation of shard `index` (stale-report guard).
+    fn generation(&self, index: usize) -> u64;
+    /// Stop driving shard `index` for good.
+    fn abandon(&mut self, index: usize);
+    /// Force shard `index` down — SIGKILL locally, socket shutdown
+    /// remotely — so its link EOFs into the normal recovery path. Budget
+    /// accounting is the host's call: the supervisor respawns its own
+    /// kills for free (a fresh process is the cure), the remote fleet
+    /// charges them (re-dialing a wedged daemon cures nothing — see
+    /// `cluster::remote`).
+    fn kill(&mut self, index: usize);
+    /// Sweep for shards that died without their link noticing (local
+    /// children that exited before serving; remote links have no such
+    /// channel and return nothing).
+    fn reap_exited(&mut self) -> Vec<(usize, u64)>;
+    /// Total respawns/reconnects over the cluster's lifetime.
+    fn restarts_total(&self) -> u64;
+    /// Whether the shards are processes this cluster owns. Owned shards
+    /// are drained with `{"op":"shutdown"}` at teardown and waited on;
+    /// unowned remote daemons get `{"op":"bye"}` and keep serving
+    /// whoever else they serve (PROTOCOL.md §6).
+    fn owns_shards(&self) -> bool;
+    /// Post-drain teardown (reap children / drop links).
+    fn shutdown(self: Box<Self>, grace: Duration);
+}
+
+impl ShardHost for Supervisor {
+    fn respawn(&mut self, index: usize) -> Result<ClientConn> {
+        Supervisor::respawn(self, index)
+    }
+    fn generation(&self, index: usize) -> u64 {
+        Supervisor::generation(self, index)
+    }
+    fn abandon(&mut self, index: usize) {
+        Supervisor::abandon(self, index)
+    }
+    fn kill(&mut self, index: usize) {
+        Supervisor::kill(self, index)
+    }
+    fn reap_exited(&mut self) -> Vec<(usize, u64)> {
+        Supervisor::reap_exited(self)
+    }
+    fn restarts_total(&self) -> u64 {
+        Supervisor::restarts_total(self)
+    }
+    fn owns_shards(&self) -> bool {
+        true
+    }
+    fn shutdown(self: Box<Self>, grace: Duration) {
+        Supervisor::shutdown(*self, grace)
+    }
+}
+
+impl ShardHost for RemoteFleet {
+    fn respawn(&mut self, index: usize) -> Result<ClientConn> {
+        RemoteFleet::reconnect(self, index)
+    }
+    fn generation(&self, index: usize) -> u64 {
+        RemoteFleet::generation(self, index)
+    }
+    fn abandon(&mut self, index: usize) {
+        RemoteFleet::abandon(self, index)
+    }
+    fn kill(&mut self, index: usize) {
+        RemoteFleet::force_close(self, index)
+    }
+    fn reap_exited(&mut self) -> Vec<(usize, u64)> {
+        Vec::new() // link EOF is the only death signal for a remote peer
+    }
+    fn restarts_total(&self) -> u64 {
+        RemoteFleet::reconnects_total(self)
+    }
+    fn owns_shards(&self) -> bool {
+        false
+    }
+    fn shutdown(self: Box<Self>, _grace: Duration) {
+        // Nothing to reap: the byes are already sent, and the daemons
+        // belong to whoever started them.
+    }
 }
 
 enum MonitorMsg {
@@ -116,7 +211,7 @@ struct ShardLink {
     /// FIFO of synchronous stats requests (single link ⇒ replies ordered).
     stats_waiters: Arc<Mutex<VecDeque<mpsc::Sender<super::client::ShardStats>>>>,
     /// When the link last heard *anything* from the shard — the hung-shard
-    /// watchdog's signal (see [`HEALTH_TIMEOUT`]).
+    /// watchdog's signal (see [`ClusterConfig::health_timeout`]).
     last_heard: Arc<Mutex<Instant>>,
 }
 
@@ -163,18 +258,24 @@ pub(crate) struct ClusterCore {
     admission: Mutex<usize>,
     admission_free: Condvar,
     admission_cap: usize,
+    /// Hung-link watchdog window (see [`ClusterConfig::health_timeout`]).
+    health_timeout: Duration,
     started: Instant,
 }
 
 impl ClusterCore {
     fn new(cfg: &ClusterConfig) -> ClusterCore {
+        let shards = cfg.shard_count();
         // Aggregate capacity of the fleet: what fits in the shard queues
-        // plus what the workers can be executing at once.
+        // plus what the workers can be executing at once. (In remote mode
+        // `cfg.serve` is the operator's *estimate* of the remote pool
+        // shape — the bound is still finite either way, which is what
+        // matters for front-door memory.)
         let per_shard = cfg.serve.queue_capacity + cfg.serve.workers * cfg.serve.max_batch;
         ClusterCore {
             serve: cfg.serve.clone(),
-            shard_count: cfg.shards,
-            links: Mutex::new(Vec::with_capacity(cfg.shards)),
+            shard_count: shards,
+            links: Mutex::new(Vec::with_capacity(shards)),
             routes: Mutex::new(HashMap::new()),
             router: Mutex::new(Router::new()),
             next_ticket: AtomicU64::new(1),
@@ -183,7 +284,8 @@ impl ClusterCore {
             pending_cancels: Mutex::new(HashMap::new()),
             admission: Mutex::new(0),
             admission_free: Condvar::new(),
-            admission_cap: (cfg.shards * per_shard).max(1),
+            admission_cap: (shards * per_shard).max(1),
+            health_timeout: cfg.health_timeout,
             started: Instant::now(),
         }
     }
@@ -298,12 +400,14 @@ impl ClusterCore {
         }
     }
 
-    /// Send every live shard its `{"op":"shutdown"}` frame (monitor-side
-    /// teardown — recovery is already off when this runs).
-    fn send_shutdowns(&self) {
+    /// Send every live shard one teardown frame (monitor-side — recovery
+    /// is already off when this runs): `{"op":"shutdown"}` for owned
+    /// local children, `{"op":"bye"}` for remote daemons that are not
+    /// ours to drain (PROTOCOL.md §6).
+    fn broadcast(&self, cmd: impl Fn() -> ShardCmd) {
         let links = self.links.lock().expect("links poisoned");
         for l in links.iter().filter(|l| l.alive) {
-            let _ = l.tx.send(ShardCmd::Shutdown);
+            let _ = l.tx.send(cmd());
         }
     }
 
@@ -373,9 +477,10 @@ impl ClusterCore {
                 .unwrap_or_else(|_| *last.lock().expect("stats poisoned"));
             partials.push(stats);
         }
-        // Hand teardown to the monitor: *it* must send the shard shutdown
-        // frames after it stops recovering, or the resulting link EOFs
-        // would look like crashes and resurrect the shards being drained.
+        // Hand teardown to the monitor: *it* must send the shard teardown
+        // frames (`shutdown` for owned children, `bye` for remote peers)
+        // after it stops recovering, or the resulting link EOFs would
+        // look like crashes and resurrect the shards being drained.
         let _ = monitor_tx.send(MonitorMsg::Finalize);
         let restarts = monitor.join().unwrap_or(0);
 
@@ -510,6 +615,7 @@ fn spawn_link(
                     },
                     ShardCmd::Stats => sender.request_stats(),
                     ShardCmd::Shutdown => sender.request_shutdown(),
+                    ShardCmd::Bye => sender.send_bye(),
                 };
                 if sent.is_err() {
                     let _ = monitor_tx.send(MonitorMsg::ShardDown { shard, generation });
@@ -586,11 +692,12 @@ fn spawn_link(
     }
 }
 
-/// Monitor main loop: owns the [`Supervisor`]; recovers crashed shards,
-/// executes chaos kills, polls health/stats, and finally reaps everything.
-/// Returns the total restart count.
+/// Monitor main loop: owns the [`ShardHost`] (supervisor or remote
+/// fleet); recovers crashed shards / lost links, executes chaos kills,
+/// polls health/stats, and finally tears everything down. Returns the
+/// total restart/reconnect count.
 fn monitor_main(
-    mut supervisor: Supervisor,
+    mut host: Box<dyn ShardHost>,
     core: Arc<ClusterCore>,
     rx: mpsc::Receiver<MonitorMsg>,
     monitor_tx: mpsc::Sender<MonitorMsg>,
@@ -599,52 +706,60 @@ fn monitor_main(
     loop {
         match rx.recv_timeout(POLL) {
             Ok(MonitorMsg::ShardDown { shard, generation }) => {
-                recover(&mut supervisor, &core, &monitor_tx, shard, generation);
+                recover(host.as_mut(), &core, &monitor_tx, shard, generation);
             }
             Ok(MonitorMsg::KillShard(shard)) => {
                 // The kill is observed through the normal crash path: the
                 // link's reader sees EOF and files a ShardDown.
-                supervisor.kill(shard);
+                host.kill(shard);
             }
             Ok(MonitorMsg::Finalize) | Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // Recovery is off from here on: drain the shard daemons —
-                // their link EOFs must read as shutdown, not as crashes.
-                core.send_shutdowns();
+                // Recovery is off from here on. Drain shards we own with
+                // `shutdown` (their link EOFs must read as teardown, not
+                // as crashes); say `bye` to remote daemons we do not —
+                // they keep serving whoever else they serve.
+                if host.owns_shards() {
+                    core.broadcast(|| ShardCmd::Shutdown);
+                } else {
+                    core.broadcast(|| ShardCmd::Bye);
+                }
                 break;
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                for (shard, generation) in supervisor.reap_exited() {
-                    recover(&mut supervisor, &core, &monitor_tx, shard, generation);
+                for (shard, generation) in host.reap_exited() {
+                    recover(host.as_mut(), &core, &monitor_tx, shard, generation);
                 }
                 core.poll_stats();
-                // Hung-shard watchdog: a shard that is alive as a process
-                // but has answered nothing (not even these stats polls)
-                // for HEALTH_TIMEOUT is killed so its EOF drives the
-                // normal recovery path. Repeat kills of an already-dead
-                // child are harmless; the generation guard deduplicates
-                // the recoveries. Staleness is only trusted while polling
+                // Hung-shard watchdog: a shard that is up (as a process
+                // or a connected peer) but has answered nothing — not
+                // even these stats polls — for the health-timeout window
+                // is killed/force-closed so its EOF drives the normal
+                // recovery path. Repeat kills of an already-dead link are
+                // harmless; the generation guard deduplicates the
+                // recoveries. Staleness is only trusted while polling
                 // has been continuous — right after a long blocking
                 // recovery, shards get one tick to answer the resumed
                 // poll before being judged.
                 if last_poll.elapsed() <= 2 * POLL {
-                    for shard in core.stalled_shards(HEALTH_TIMEOUT) {
-                        supervisor.kill(shard);
+                    for shard in core.stalled_shards(core.health_timeout) {
+                        host.kill(shard);
                     }
                 }
                 last_poll = Instant::now();
             }
         }
     }
-    let restarts = supervisor.restarts_total();
-    supervisor.shutdown(SHUTDOWN_GRACE);
+    let restarts = host.restarts_total();
+    host.shutdown(SHUTDOWN_GRACE);
     restarts
 }
 
-/// One shard-crash recovery: respawn within budget and requeue the dead
-/// incarnation's unanswered tickets; past budget, requeue to survivors
-/// and route around the abandoned shard from now on.
+/// One shard-crash (or link-loss) recovery: respawn/reconnect within
+/// budget and requeue the dead incarnation's unanswered tickets; past
+/// budget, requeue to survivors and route around the abandoned shard
+/// from now on.
 fn recover(
-    supervisor: &mut Supervisor,
+    host: &mut dyn ShardHost,
     core: &Arc<ClusterCore>,
     monitor_tx: &mpsc::Sender<MonitorMsg>,
     shard: usize,
@@ -654,11 +769,11 @@ fn recover(
         return; // stale report: a newer incarnation is already up
     }
     core.router.lock().expect("router poisoned").forget_shard(shard);
-    let orphans = match supervisor.respawn(shard) {
+    let orphans = match host.respawn(shard) {
         Ok(conn) => {
             let link = spawn_link(
                 shard,
-                supervisor.generation(shard),
+                host.generation(shard),
                 conn,
                 Arc::clone(core),
                 monitor_tx.clone(),
@@ -666,7 +781,7 @@ fn recover(
             core.install_link(shard, link)
         }
         Err(_) => {
-            supervisor.abandon(shard);
+            host.abandon(shard);
             core.take_inflight(shard)
         }
     };
@@ -698,30 +813,45 @@ impl ClusterHandle {
         self.daemon.shutdown();
     }
 
-    /// SIGKILL one shard daemon (fault injection). The supervisor
-    /// restarts it and requeues its in-flight jobs — external clients
-    /// still receive every reply exactly once.
+    /// Take one shard down (fault injection): SIGKILL for a supervised
+    /// local child, a forced socket shutdown for a remote link. Either
+    /// way the shard is restarted/re-dialed and its in-flight jobs are
+    /// requeued — external clients still receive every reply exactly
+    /// once.
     pub fn kill_shard(&self, shard: usize) {
         let _ = self.monitor_tx.send(MonitorMsg::KillShard(shard));
     }
 }
 
 impl Cluster {
-    /// Bind the front listener, spawn and link `cfg.shards` shard
-    /// daemons, and start the supervision monitor. Everything is torn
-    /// down if any step fails — no half-up cluster.
+    /// Bind the front listener, bring up the shard fleet — spawn and
+    /// link `cfg.shards` local daemons, or (when `cfg.remote_shards` is
+    /// non-empty) attach to the already-running daemons it names,
+    /// skipping the supervisor entirely — and start the monitor.
+    /// Everything is torn down if any step fails — no half-up cluster.
     pub fn start(listen: &str, net: NetConfig, cfg: ClusterConfig) -> Result<Cluster> {
         cfg.validate()?;
         // Bind first: an unusable front address should fail before any
-        // child process exists.
+        // child process (or remote link) exists.
         let daemon = Daemon::bind(listen, net, cfg.serve.clone())?;
-        let sup_cfg = SupervisorConfig {
-            program: cfg.program.clone(),
-            socket_dir: cfg.socket_dir.clone(),
-            serve: cfg.serve.clone(),
-            max_restarts: cfg.max_restarts,
+        let (host, conns) = if cfg.remote_shards.is_empty() {
+            let sup_cfg = SupervisorConfig {
+                program: cfg.program.clone(),
+                socket_dir: cfg.socket_dir.clone(),
+                serve: cfg.serve.clone(),
+                max_restarts: cfg.max_restarts,
+                reconnect: cfg.reconnect.clone(),
+            };
+            let (supervisor, conns) = Supervisor::spawn(sup_cfg, cfg.shards)?;
+            (Box::new(supervisor) as Box<dyn ShardHost>, conns)
+        } else {
+            let (fleet, conns) = RemoteFleet::connect(
+                &cfg.remote_shards,
+                cfg.reconnect.clone(),
+                cfg.max_restarts,
+            )?;
+            (Box::new(fleet) as Box<dyn ShardHost>, conns)
         };
-        let (supervisor, conns) = Supervisor::spawn(sup_cfg, cfg.shards)?;
         let (monitor_tx, monitor_rx) = mpsc::channel();
         let core = Arc::new(ClusterCore::new(&cfg));
         {
@@ -733,7 +863,7 @@ impl Cluster {
         let monitor = {
             let core = Arc::clone(&core);
             let monitor_tx = monitor_tx.clone();
-            std::thread::spawn(move || monitor_main(supervisor, core, monitor_rx, monitor_tx))
+            std::thread::spawn(move || monitor_main(host, core, monitor_rx, monitor_tx))
         };
         Ok(Cluster { daemon, core, monitor, monitor_tx })
     }

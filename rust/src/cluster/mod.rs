@@ -23,6 +23,12 @@
 //!   micro-batcher still coalesces across processes; everything else
 //!   goes to the least-loaded live shard (by the `stats` frame's
 //!   `queue_depth` plus the exact local in-flight count).
+//! * [`remote`] — [`remote::RemoteFleet`]: the supervisor's stand-in for
+//!   **multi-host** clusters (`remote_shards` config / `--remote`): the
+//!   front attaches to already-running daemons over ordinary
+//!   [`client::ClientConn`] links — a remote front is just another
+//!   revision-1 client (PROTOCOL.md §9) — with link loss recovered by
+//!   reconnect-under-[`ReconnectPolicy`] instead of respawn.
 //! * [`front`] — [`front::Cluster`]: the front door. It reuses
 //!   `serve::net`'s listener and connection protocol via the
 //!   `net::FrontCore` trait, so external clients see one ordinary
@@ -41,34 +47,66 @@
 
 pub mod client;
 pub mod front;
+pub mod remote;
 pub mod router;
 pub mod supervisor;
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::serve::ServeConfig;
 
-pub use client::{ClientConn, ClientEvent, ShardStats};
+pub use client::{ClientConn, ClientEvent, LinkShutdown, ReconnectPolicy, ShardStats};
 pub use front::{Cluster, ClusterHandle};
+pub use remote::RemoteFleet;
 pub use router::Router;
 pub use supervisor::Supervisor;
 
 /// Cluster shape (the `[cluster]` config section + `kpynq cluster` flags).
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
-    /// Shard daemon count.
+    /// Shard daemon count (local mode; ignored when [`remote_shards`]
+    /// is non-empty).
+    ///
+    /// [`remote_shards`]: ClusterConfig::remote_shards
     pub shards: usize,
-    /// Per-shard pool shape (each shard gets its own `[serve]`-shaped
-    /// pool: workers, queue, batching, shed policy).
+    /// **Remote mode.** When non-empty, the front attaches to these
+    /// already-running daemons (`host:port` / `unix:<path>`, one per
+    /// shard, in shard order) instead of spawning local children: the
+    /// supervisor is skipped entirely, and `shards`, `socket_dir` and
+    /// `program` are ignored. Link loss is recovered by reconnecting
+    /// under [`reconnect`]; teardown says `bye`, never `shutdown` — the
+    /// daemons belong to whoever started them (PROTOCOL.md §6).
+    ///
+    /// [`reconnect`]: ClusterConfig::reconnect
+    pub remote_shards: Vec<String>,
+    /// The (re)connect shape shared by shard-readiness waits (local
+    /// mode) and link re-establishment (remote mode).
+    pub reconnect: ReconnectPolicy,
+    /// Hung-link watchdog window: a live shard whose link has answered
+    /// nothing (not even the monitor's ~4/s stats polls) for this long
+    /// is killed/force-closed so the normal crash recovery requeues its
+    /// work. Generous by default (30 s) and deliberately so: under
+    /// sustained `block`-policy backpressure a healthy shard's
+    /// connection reader can legitimately go quiet while its queue
+    /// drains — a watchdog kill there wastes (re-run) work but never
+    /// loses or duplicates a reply. Tests shrink it to fault-inject
+    /// stalls quickly.
+    pub health_timeout: Duration,
+    /// Per-shard pool shape (each local shard gets its own
+    /// `[serve]`-shaped pool: workers, queue, batching, shed policy). In
+    /// remote mode the remote daemons own their real pool shape; this is
+    /// the operator's estimate, used only to size the front's admission
+    /// bound and the informational greeting keys.
     pub serve: ServeConfig,
-    /// Directory for the shards' `unix:` listener sockets.
+    /// Directory for the shards' `unix:` listener sockets (local mode).
     pub socket_dir: PathBuf,
-    /// Respawns allowed per shard before it is abandoned and routed
-    /// around.
+    /// Respawns (local mode) / reconnects (remote mode) allowed per
+    /// shard before it is abandoned and routed around.
     pub max_restarts: u32,
-    /// The `kpynq` binary to exec as shards (defaults to the current
-    /// executable).
+    /// The `kpynq` binary to exec as shards (local mode; defaults to the
+    /// current executable).
     pub program: PathBuf,
 }
 
@@ -76,6 +114,9 @@ impl Default for ClusterConfig {
     fn default() -> Self {
         Self {
             shards: 2,
+            remote_shards: Vec::new(),
+            reconnect: ReconnectPolicy::default(),
+            health_timeout: Duration::from_secs(30),
             serve: ServeConfig::default(),
             socket_dir: default_socket_dir(),
             max_restarts: 3,
@@ -85,10 +126,28 @@ impl Default for ClusterConfig {
 }
 
 impl ClusterConfig {
-    pub fn validate(&self) -> Result<()> {
-        if self.shards == 0 {
-            return Err(Error::Config("cluster shards must be positive".into()));
+    /// Effective shard count: the remote address list's length in remote
+    /// mode, `shards` otherwise.
+    pub fn shard_count(&self) -> usize {
+        if self.remote_shards.is_empty() {
+            self.shards
+        } else {
+            self.remote_shards.len()
         }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.remote_shards.is_empty() {
+            if self.shards == 0 {
+                return Err(Error::Config("cluster shards must be positive".into()));
+            }
+        } else if self.remote_shards.iter().any(|a| a.trim().is_empty()) {
+            return Err(Error::Config("cluster remote_shards entries must be non-empty".into()));
+        }
+        if self.health_timeout.is_zero() {
+            return Err(Error::Config("cluster health timeout must be positive".into()));
+        }
+        self.reconnect.validate()?;
         self.serve.validate()
     }
 }
@@ -112,6 +171,32 @@ mod tests {
             ..Default::default()
         };
         assert!(bad_serve.validate().is_err());
+    }
+
+    #[test]
+    fn remote_mode_overrides_shards_and_validates_addresses() {
+        let remote = ClusterConfig {
+            shards: 0, // ignored in remote mode — and not an error
+            remote_shards: vec!["hosta:7071".into(), "unix:/tmp/b.sock".into()],
+            ..Default::default()
+        };
+        remote.validate().unwrap();
+        assert_eq!(remote.shard_count(), 2);
+        assert_eq!(ClusterConfig::default().shard_count(), 2, "local mode uses `shards`");
+        let blank = ClusterConfig {
+            remote_shards: vec!["hosta:7071".into(), "  ".into()],
+            ..Default::default()
+        };
+        assert!(blank.validate().is_err());
+        let bad_policy = ClusterConfig {
+            remote_shards: vec!["hosta:7071".into()],
+            reconnect: ReconnectPolicy { attempts: 0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(bad_policy.validate().is_err());
+        let bad_watchdog =
+            ClusterConfig { health_timeout: Duration::ZERO, ..Default::default() };
+        assert!(bad_watchdog.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Remote shards: unsupervised daemon links on other hosts.
+//!
+//! The supervisor ([`super::supervisor`]) owns *processes* — it can spawn
+//! them, SIGKILL them and reap their exit statuses. A multi-host cluster
+//! has none of that: the shards are `kpynq serve --listen` daemons
+//! somebody else started on other machines, and the only thing the front
+//! holds is an ordinary protocol connection to each (PROTOCOL.md §9: a
+//! remote front is an ordinary revision-1 client — there is no
+//! cluster-to-shard dialect). [`RemoteFleet`] is therefore the
+//! supervisor's shape with every process verb translated into a link
+//! verb:
+//!
+//! | supervisor (local children)      | remote fleet (unsupervised links) |
+//! |----------------------------------|-----------------------------------|
+//! | spawn + readiness wait           | [`ClientConn::connect_with_backoff`] under the shared [`ReconnectPolicy`] |
+//! | respawn a crashed child          | [`RemoteFleet::reconnect`] to the same address |
+//! | SIGKILL (watchdog / chaos)       | [`RemoteFleet::force_close`] — socket shutdown via [`LinkShutdown`] |
+//! | abandon past the restart budget  | abandon past the reconnect budget |
+//! | reap exited children             | nothing — link EOF is the only death signal |
+//!
+//! The resulting link-state machine is: **connected** → (loss observed:
+//! EOF, write error, garbled frame, watchdog force-close) →
+//! **reconnecting** (the monitor runs the bounded [`ReconnectPolicy`]
+//! loop inline, exactly like a local respawn) → **connected** again with
+//! a bumped generation, or **dead** once the policy budget or the
+//! per-link reconnect budget is spent — at which point the front requeues
+//! the link's unanswered tickets onto the survivors and routes around it,
+//! the same recovery path a crashed local shard takes (DESIGN.md §2).
+//!
+//! One deliberate asymmetry with the supervisor: its watchdog/chaos
+//! kills respawn **budget-free** (`killed_by_supervisor`), because a
+//! respawn execs a *fresh process* — the kill itself is the cure, so
+//! charging it could spiral a slow-but-healthy shard into abandonment.
+//! A remote reconnect heals nothing: it re-dials the **same daemon**,
+//! wedged or not. If force-closes were budget-free here, a
+//! wedged-but-reachable peer would loop force-close → reconnect →
+//! requeue-onto-itself forever and the "dead" state would be
+//! unreachable for exactly the failure the watchdog exists to catch. So
+//! remote reconnects **always consume budget**; a remote that trips the
+//! watchdog `max_restarts` times is abandoned and its work re-homes to
+//! the survivors — which costs little, since abandoning a remote kills
+//! no process: the daemon keeps serving its other clients, this front
+//! merely routes around it.
+//!
+//! Ownership is the other asymmetry: on cluster teardown, local children
+//! are drained with `{"op":"shutdown"}` (PROTOCOL.md §6) because the
+//! cluster started them; remote daemons belong to whoever launched them,
+//! so the front says `{"op":"bye"}` and leaves them serving.
+
+use crate::error::{Error, Result};
+
+use super::client::{ClientConn, LinkShutdown, ReconnectPolicy};
+
+/// One remote link's bookkeeping (the `ShardProc` analogue).
+struct RemoteLink {
+    /// The daemon's address, `host:port` or `unix:<path>` — reconnects
+    /// always dial the same place; remote membership is static.
+    addr: String,
+    /// Bumped on every successful (re)connect; stale loss reports from an
+    /// earlier incarnation of the link are ignored by generation.
+    generation: u64,
+    /// Reconnects performed so far. Every loss counts — including
+    /// fleet-initiated force-closes, see the module docs for why the
+    /// supervisor's budget-free kill rule does not transfer here.
+    reconnects: u32,
+    /// Past its reconnect budget (or unreachable): routed around for good.
+    abandoned: bool,
+    /// Force-close handle for the current incarnation's socket.
+    shutdown: LinkShutdown,
+}
+
+/// Owns the unsupervised links of one remote-shards cluster.
+pub struct RemoteFleet {
+    policy: ReconnectPolicy,
+    /// Reconnects allowed per link before it is abandoned (the remote
+    /// reading of the cluster's `max_restarts`).
+    max_reconnects: u32,
+    links: Vec<RemoteLink>,
+    reconnects_total: u64,
+}
+
+impl RemoteFleet {
+    /// Dial every address and complete the PROTOCOL.md §2 greeting +
+    /// handshake on each; returns the fleet plus one ready connection per
+    /// shard (in address order). Any unreachable daemon fails the whole
+    /// start — a half-up cluster is refused, not served — and, since
+    /// nothing was spawned, there is nothing to tear down: the
+    /// already-opened connections simply drop (the daemons see an EOF
+    /// with nothing in flight).
+    pub fn connect(
+        addrs: &[String],
+        policy: ReconnectPolicy,
+        max_reconnects: u32,
+    ) -> Result<(RemoteFleet, Vec<ClientConn>)> {
+        if addrs.is_empty() {
+            return Err(Error::Config("remote fleet needs at least one shard address".into()));
+        }
+        policy.validate()?;
+        let mut links = Vec::with_capacity(addrs.len());
+        let mut conns = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let conn = ClientConn::connect_with_backoff(addr, &policy, || None)
+                .map_err(|e| Error::Config(format!("remote shard {addr}: {e}")))?;
+            links.push(RemoteLink {
+                addr: addr.clone(),
+                generation: 0,
+                reconnects: 0,
+                abandoned: false,
+                shutdown: conn.shutdown_handle(),
+            });
+            conns.push(conn);
+        }
+        Ok((RemoteFleet { policy, max_reconnects, links, reconnects_total: 0 }, conns))
+    }
+
+    /// The address link `index` dials.
+    pub fn addr(&self, index: usize) -> &str {
+        &self.links[index].addr
+    }
+
+    /// Current link generation of shard `index`.
+    pub fn generation(&self, index: usize) -> u64 {
+        self.links[index].generation
+    }
+
+    /// Total successful reconnects over the fleet's lifetime (the remote
+    /// reading of the report's `shard_restarts`).
+    pub fn reconnects_total(&self) -> u64 {
+        self.reconnects_total
+    }
+
+    /// Force link `index`'s socket closed (watchdog / chaos hook). The
+    /// loss is observed through the normal path — the link's reader sees
+    /// EOF and reports it — and the ensuing reconnect consumes budget
+    /// like any other (see the module docs: re-dialing cannot heal a
+    /// wedged peer, so a budget-free close would livelock on it).
+    pub fn force_close(&mut self, index: usize) {
+        self.links[index].shutdown.shutdown();
+    }
+
+    /// Stop driving link `index` for good: its budget is spent or its
+    /// daemon is unreachable; the front requeues its work and routes
+    /// around it from now on.
+    pub fn abandon(&mut self, index: usize) {
+        let l = &mut self.links[index];
+        l.abandoned = true;
+        l.shutdown.shutdown();
+    }
+
+    /// Re-establish a lost link with the shared [`ReconnectPolicy`] and
+    /// return a ready connection to the same daemon. Fails once the
+    /// link's reconnect budget is exhausted or the daemon stays
+    /// unreachable past the policy budget — the caller then abandons the
+    /// link and requeues its work onto the survivors.
+    pub fn reconnect(&mut self, index: usize) -> Result<ClientConn> {
+        {
+            let l = &self.links[index];
+            if l.abandoned {
+                return Err(Error::Config(format!("remote shard {index} ({}) was abandoned", l.addr)));
+            }
+            if l.reconnects >= self.max_reconnects {
+                return Err(Error::Config(format!(
+                    "remote shard {index} ({}) exceeded its reconnect budget ({})",
+                    l.addr, self.max_reconnects
+                )));
+            }
+        }
+        // Make sure the dead incarnation's socket is fully closed before
+        // dialing again (idempotent when the peer already closed it).
+        self.links[index].shutdown.shutdown();
+        let addr = self.links[index].addr.clone();
+        let conn = ClientConn::connect_with_backoff(&addr, &self.policy, || None)?;
+        let l = &mut self.links[index];
+        l.reconnects += 1;
+        l.generation += 1;
+        l.shutdown = conn.shutdown_handle();
+        self.reconnects_total += 1;
+        Ok(conn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn fast_policy() -> ReconnectPolicy {
+        ReconnectPolicy {
+            attempts: 2,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(2),
+            total_wait: Duration::from_millis(50),
+        }
+    }
+
+    #[test]
+    fn empty_fleet_and_unreachable_daemons_are_refused() {
+        assert!(RemoteFleet::connect(&[], fast_policy(), 3).is_err());
+        let err = RemoteFleet::connect(&["127.0.0.1:1".to_string()], fast_policy(), 3)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("remote shard 127.0.0.1:1"), "{err}");
+        // A bad policy is rejected before any dialing happens.
+        let bad = ReconnectPolicy { attempts: 0, ..fast_policy() };
+        assert!(RemoteFleet::connect(&["127.0.0.1:1".to_string()], bad, 3).is_err());
+    }
+}

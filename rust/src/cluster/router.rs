@@ -150,4 +150,101 @@ mod tests {
         assert_eq!(r.route(&solo_job(), &[DEAD, DEAD]), None);
         assert_eq!(r.route(&solo_job(), &[]), None);
     }
+
+    /// Property: under arbitrary interleavings of routes, depth updates,
+    /// shard deaths (with or without the `forget_shard` sweep — route-time
+    /// detection must cover the sweepless case) and revivals,
+    ///
+    /// * a placement never targets a dead shard, and `None` is returned
+    ///   exactly when every shard is dead;
+    /// * a batchable key's pin is *stable*: once routed to shard `s`, it
+    ///   keeps routing to `s` until `s` dies or is explicitly forgotten —
+    ///   no depth change and no *other* shard's death/revival may move it
+    ///   (moving a pin would silently break cross-process coalescing).
+    ///
+    /// The model mirrors the contract, not the implementation: it drops a
+    /// key's pin when its shard dies and re-learns whatever the router
+    /// picks next — so a revived shard legitimately keeping its old pin
+    /// (death never observed at route time) is accepted, while any other
+    /// movement fails the property.
+    #[test]
+    fn prop_pins_stable_and_dead_shards_never_placed() {
+        use crate::serve::batch::BatchKey;
+        use crate::util::proptest::run_cases;
+        use std::collections::HashMap;
+
+        let datasets = ["blobs", "kegg", "gassensor", "uscensus"];
+        run_cases("router-chaos", 0xC10C_BA5E, |rng| {
+            let shards = 2 + rng.next_below(4); // 2..=5
+            let mut r = Router::new();
+            let mut alive = vec![true; shards];
+            let mut depths = vec![0usize; shards];
+            let mut pins: HashMap<BatchKey, usize> = HashMap::new();
+            for step in 0..60 {
+                match rng.next_below(6) {
+                    0 => {
+                        // A shard dies; half the time the monitor's
+                        // forget sweep runs, half the time the router
+                        // must catch the stale pin at route time.
+                        let s = rng.next_below(shards);
+                        alive[s] = false;
+                        if rng.next_below(2) == 0 {
+                            r.forget_shard(s);
+                        }
+                        pins.retain(|_, &mut p| p != s);
+                    }
+                    1 => {
+                        let s = rng.next_below(shards);
+                        alive[s] = true;
+                    }
+                    2 => {
+                        let s = rng.next_below(shards);
+                        depths[s] = rng.next_below(64);
+                    }
+                    _ => {
+                        let req = FitRequest {
+                            dataset: datasets[rng.next_below(datasets.len())].into(),
+                            // 1 in 4 jobs is unbatchable (fpga-sim): load-
+                            // routed, never pinned.
+                            backend_name: if rng.next_below(4) == 0 {
+                                "fpga-sim".into()
+                            } else {
+                                "native".into()
+                            },
+                            ..Default::default()
+                        };
+                        let view: Vec<usize> = (0..shards)
+                            .map(|i| if alive[i] { depths[i] } else { DEAD })
+                            .collect();
+                        let got = r.route(&req, &view);
+                        if !alive.iter().any(|&a| a) {
+                            if got.is_some() {
+                                return Err(format!("step {step}: routed with all shards dead"));
+                            }
+                            continue;
+                        }
+                        let s = got
+                            .ok_or_else(|| format!("step {step}: no route with live shards"))?;
+                        if !alive[s] {
+                            return Err(format!("step {step}: placed on dead shard {s}"));
+                        }
+                        if let Some(key) = BatchKey::of(&req) {
+                            match pins.get(&key) {
+                                Some(&pinned) if pinned != s => {
+                                    return Err(format!(
+                                        "step {step}: pin moved {pinned} -> {s} \
+                                         with shard {pinned} still alive"
+                                    ));
+                                }
+                                _ => {
+                                    pins.insert(key, s);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
 }

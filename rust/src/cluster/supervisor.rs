@@ -26,16 +26,7 @@ use std::time::Duration;
 use crate::error::{Error, Result};
 use crate::serve::ServeConfig;
 
-use super::client::ClientConn;
-
-/// Connect-retry shape for a freshly spawned shard: doubling backoff
-/// from 20 ms capped at 250 ms, 45 attempts ≈ a 10 s total budget,
-/// vetoed early if the child exits. Deliberately bounded: a respawn runs
-/// this inline on the cluster's monitor thread, which is stalled for the
-/// duration.
-const READY_ATTEMPTS: u32 = 45;
-const READY_DELAY: Duration = Duration::from_millis(20);
-const READY_MAX_DELAY: Duration = Duration::from_millis(250);
+use super::client::{ClientConn, ReconnectPolicy};
 
 /// How a shard process is launched.
 #[derive(Clone, Debug)]
@@ -49,6 +40,13 @@ pub struct SupervisorConfig {
     pub serve: ServeConfig,
     /// Respawns allowed per shard before it is abandoned as dead.
     pub max_restarts: u32,
+    /// Connect-retry shape for a freshly spawned shard (vetoed early if
+    /// the child exits). The [`ReconnectPolicy`] default *is* the
+    /// readiness shape this module used to hard-code: doubling backoff
+    /// from 20 ms capped at 250 ms, 45 attempts, ≈ 10 s total.
+    /// Deliberately bounded: a respawn runs this inline on the cluster's
+    /// monitor thread, which is stalled for the duration.
+    pub reconnect: ReconnectPolicy,
 }
 
 struct ShardProc {
@@ -256,9 +254,7 @@ impl Supervisor {
             })?;
         let conn = ClientConn::connect_with_backoff(
             &addr,
-            READY_ATTEMPTS,
-            READY_DELAY,
-            READY_MAX_DELAY,
+            &self.cfg.reconnect,
             || match child.try_wait() {
                 Ok(Some(status)) => Some(format!("shard {index} exited during startup: {status}")),
                 _ => None,

@@ -64,8 +64,20 @@ pub struct RunConfig {
     /// Cluster: directory for shard `unix:` sockets ("" = per-process
     /// temp dir).
     pub cluster_socket_dir: String,
-    /// Cluster: respawns allowed per shard before it is abandoned.
+    /// Cluster: respawns (local) / reconnects (remote) allowed per shard
+    /// before it is abandoned.
     pub cluster_max_restarts: usize,
+    /// Cluster remote mode: addresses of already-running daemons to
+    /// attach to instead of spawning local shards (empty = local mode).
+    pub cluster_remote_shards: Vec<String>,
+    /// Cluster: link (re)connect attempts per loss.
+    pub cluster_reconnect_attempts: usize,
+    /// Cluster: first retry delay in milliseconds (doubles per attempt).
+    pub cluster_reconnect_base_ms: u64,
+    /// Cluster: backoff delay cap in milliseconds.
+    pub cluster_reconnect_cap_ms: u64,
+    /// Cluster: hard bound on total backoff sleep per (re)connect, ms.
+    pub cluster_reconnect_total_wait_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -95,6 +107,11 @@ impl Default for RunConfig {
             cluster_shards: 2,
             cluster_socket_dir: String::new(),
             cluster_max_restarts: 3,
+            cluster_remote_shards: Vec::new(),
+            cluster_reconnect_attempts: 45,
+            cluster_reconnect_base_ms: 20,
+            cluster_reconnect_cap_ms: 250,
+            cluster_reconnect_total_wait_ms: 10_000,
         }
     }
 }
@@ -140,7 +157,12 @@ idle_timeout_ms = 0      # close idle connections after this long (0 = never)
 [cluster]
 shards = 2               # shard daemon processes (kpynq cluster); each gets the [serve] pool
 socket_dir = ""          # shard unix-socket dir; "" = per-process temp dir
-max_restarts = 3         # respawns per shard before it is abandoned
+max_restarts = 3         # respawns (local) / reconnects (remote) per shard before abandoning it
+remote_shards = []       # remote mode: ["hosta:7071", "unix:/path.sock"] — attach, don't spawn
+reconnect_attempts = 45  # link (re)connect attempts per loss
+reconnect_base_ms = 20   # first retry delay (doubles per attempt)
+reconnect_cap_ms = 250   # backoff delay cap
+reconnect_total_wait_ms = 10000  # hard bound on total backoff sleep per (re)connect
 "#;
 
 impl RunConfig {
@@ -253,6 +275,31 @@ impl RunConfig {
         if let Some(v) = toml::get(&doc, "cluster", "max_restarts") {
             cfg.cluster_max_restarts = v.as_usize()?;
         }
+        if let Some(v) = toml::get(&doc, "cluster", "remote_shards") {
+            cfg.cluster_remote_shards = match v {
+                toml::Value::Arr(items) => items
+                    .iter()
+                    .map(|item| Ok(item.as_str()?.to_string()))
+                    .collect::<Result<Vec<String>>>()?,
+                other => {
+                    return Err(Error::Config(format!(
+                        "cluster remote_shards must be an array of address strings, got {other:?}"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = toml::get(&doc, "cluster", "reconnect_attempts") {
+            cfg.cluster_reconnect_attempts = v.as_usize()?;
+        }
+        if let Some(v) = toml::get(&doc, "cluster", "reconnect_base_ms") {
+            cfg.cluster_reconnect_base_ms = v.as_usize()? as u64;
+        }
+        if let Some(v) = toml::get(&doc, "cluster", "reconnect_cap_ms") {
+            cfg.cluster_reconnect_cap_ms = v.as_usize()? as u64;
+        }
+        if let Some(v) = toml::get(&doc, "cluster", "reconnect_total_wait_ms") {
+            cfg.cluster_reconnect_total_wait_ms = v.as_usize()? as u64;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -281,10 +328,21 @@ impl RunConfig {
 
     /// Build the cluster shape described by the `[cluster]` section (the
     /// per-shard pool comes from `[serve]`; the shard binary defaults to
-    /// the current executable).
+    /// the current executable). A non-empty `remote_shards` selects
+    /// remote mode — attach to those daemons instead of spawning local
+    /// children — with the `reconnect_*` keys shaping the shared
+    /// `ReconnectPolicy`.
     pub fn cluster_config(&self) -> Result<crate::cluster::ClusterConfig> {
+        use std::time::Duration;
         let cfg = crate::cluster::ClusterConfig {
             shards: self.cluster_shards,
+            remote_shards: self.cluster_remote_shards.clone(),
+            reconnect: crate::cluster::ReconnectPolicy {
+                attempts: self.cluster_reconnect_attempts as u32,
+                base_delay: Duration::from_millis(self.cluster_reconnect_base_ms),
+                max_delay: Duration::from_millis(self.cluster_reconnect_cap_ms),
+                total_wait: Duration::from_millis(self.cluster_reconnect_total_wait_ms),
+            },
             serve: self.serve_config()?,
             socket_dir: if self.cluster_socket_dir.is_empty() {
                 crate::cluster::default_socket_dir()
@@ -435,10 +493,37 @@ mod tests {
         assert_eq!(cluster.serve.workers, 3, "shards inherit the [serve] pool shape");
         assert_eq!(cluster.socket_dir, PathBuf::from("/tmp/kp"));
         assert_eq!(cluster.max_restarts, 1);
-        // Defaults: 2 shards, per-process temp socket dir.
+        // Defaults: 2 shards, per-process temp socket dir, local mode,
+        // the supervisor's readiness-shaped reconnect policy.
         let d = RunConfig::default().cluster_config().unwrap();
         assert_eq!(d.shards, 2);
         assert!(d.socket_dir.to_string_lossy().contains("kpynq-cluster-"));
+        assert!(d.remote_shards.is_empty());
+        assert_eq!(d.reconnect, crate::cluster::ReconnectPolicy::default());
+    }
+
+    #[test]
+    fn cluster_remote_shards_and_reconnect_knobs_parse() {
+        let cfg = RunConfig::from_toml(
+            "[cluster]\nremote_shards = [\"hosta:7071\", \"unix:/tmp/b.sock\"]\n\
+             reconnect_attempts = 5\nreconnect_base_ms = 10\nreconnect_cap_ms = 80\n\
+             reconnect_total_wait_ms = 900",
+        )
+        .unwrap();
+        let cluster = cfg.cluster_config().unwrap();
+        assert_eq!(
+            cluster.remote_shards,
+            vec!["hosta:7071".to_string(), "unix:/tmp/b.sock".to_string()]
+        );
+        assert_eq!(cluster.shard_count(), 2, "remote mode counts addresses, not `shards`");
+        assert_eq!(cluster.reconnect.attempts, 5);
+        assert_eq!(cluster.reconnect.base_delay, std::time::Duration::from_millis(10));
+        assert_eq!(cluster.reconnect.max_delay, std::time::Duration::from_millis(80));
+        assert_eq!(cluster.reconnect.total_wait, std::time::Duration::from_millis(900));
+        // Malformed remote lists fail loudly at parse time.
+        assert!(RunConfig::from_toml("[cluster]\nremote_shards = [1, 2]").is_err());
+        assert!(RunConfig::from_toml("[cluster]\nremote_shards = \"hosta:7071\"").is_err());
+        assert!(RunConfig::from_toml("[cluster]\nreconnect_attempts = 0").is_err());
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //!   (`kpynq serve --listen`, wire protocol normative in PROTOCOL.md) —
 //!   and the cross-process shard supervisor ([`cluster`]) that puts N such
 //!   daemons behind one endpoint (`kpynq cluster`) with BatchKey-affine
-//!   fan-out, crash recovery and exactly-once fan-in.
+//!   fan-out, crash recovery and exactly-once fan-in — supervised local
+//!   children, or already-running daemons on other hosts
+//!   (`kpynq cluster --remote`, multi-host mode).
 //! * **Layer 2** — JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text and executed from Rust through PJRT ([`runtime`]). Python is
 //!   never on the request path.

@@ -8,6 +8,7 @@
 //! kpynq serve [--jobs FILE] [--workers N] [--batch N]   NDJSON fit jobs → pool
 //! kpynq serve --listen ADDR [--max-conns N]             persistent daemon (PROTOCOL.md)
 //! kpynq cluster --shards N --listen ADDR                N shard daemons, one endpoint
+//! kpynq cluster --remote A,B --listen ADDR              multi-host: attach to remote daemons
 //! kpynq datasets                      list the built-in dataset generators
 //! kpynq resources [--d D] [--k K]     lane-count frontier on both parts
 //! kpynq init-config                   print an example config file
@@ -108,8 +109,13 @@ fn print_help() {
          protocol as the daemon — external clients cannot tell the difference):\n\
          \x20 --listen ADDR         the front door (required; host:port or unix:/path.sock)\n\
          \x20 --shards N            shard daemon processes (default 2; [cluster] in config)\n\
+         \x20 --remote A,B,…        remote mode: attach to already-running daemons at these\n\
+         \x20                       addresses (host:port or unix:/path.sock) instead of\n\
+         \x20                       spawning local shards; lost links reconnect under the\n\
+         \x20                       [cluster] reconnect_* policy, dead ones are routed around\n\
          \x20 --socket-dir DIR      shard unix-socket directory (default: temp dir)\n\
-         \x20 --max-restarts N      respawns per crashed shard before abandoning it\n\
+         \x20 --max-restarts N      respawns (local) / reconnects (remote) per shard\n\
+         \x20                       before abandoning it\n\
          \x20 plus the serve pool flags (--workers/--queue/--batch/--shed, per shard)\n\
          \x20 and the daemon flags (--max-conns/--idle-timeout-ms, at the front)"
     );
@@ -397,6 +403,20 @@ fn cmd_cluster(args: &[String]) -> kpynq::Result<()> {
             .parse()
             .map_err(|_| kpynq::Error::Config(format!("bad --max-restarts '{r}'")))?;
     }
+    if let Some(list) = take_opt(args, "--remote") {
+        let addrs: Vec<String> = list
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        if addrs.is_empty() {
+            return Err(kpynq::Error::Config(
+                "--remote needs a comma-separated address list (host:port or unix:/path.sock)"
+                    .into(),
+            ));
+        }
+        ccfg.remote_shards = addrs;
+    }
     ccfg.validate()?;
 
     let listen = take_opt(args, "--listen")
@@ -419,13 +439,19 @@ fn cmd_cluster(args: &[String]) -> kpynq::Result<()> {
     }
     net.validate()?;
 
-    let shards = ccfg.shards;
+    let shards = ccfg.shard_count();
     let workers = ccfg.serve.workers;
+    let mode = if ccfg.remote_shards.is_empty() {
+        "local".to_string()
+    } else {
+        format!("remote: {}", ccfg.remote_shards.join(", "))
+    };
     let cluster = Cluster::start(&listen, net, ccfg)?;
     eprintln!(
-        "kpynq cluster: {} shards x {} workers behind {} (proto {PROTO_VERSION}; \
+        "kpynq cluster: {} shards ({}) x {} workers behind {} (proto {PROTO_VERSION}; \
          NDJSON jobs per PROTOCOL.md, drain with {{\"op\":\"shutdown\"}})",
         shards,
+        mode,
         workers,
         cluster.local_addr(),
     );

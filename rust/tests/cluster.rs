@@ -41,6 +41,7 @@ fn cluster_config(shards: usize, tag: &str, serve: ServeConfig) -> ClusterConfig
         socket_dir: unique_socket_dir(tag),
         max_restarts: 3,
         program: PathBuf::from(env!("CARGO_BIN_EXE_kpynq")),
+        ..Default::default()
     }
 }
 

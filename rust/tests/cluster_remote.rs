@@ -1,0 +1,423 @@
+//! Chaos tests for the remote-shards cluster mode (`remote_shards` /
+//! `--remote`): a front door attached to *unsupervised* daemons, with
+//! every failure mode scripted deterministically by the
+//! `support/fake_shard.rs` harness — no child processes, no signals.
+//!
+//! The acceptance claims (ISSUE 5 / DESIGN.md §2):
+//!
+//! * a 2-remote-shard cluster returns **bit-identical** replies —
+//!   PROTOCOL.md §8 FNV fingerprints included — to a single daemon,
+//!   which in turn matches direct engine runs;
+//! * a remote link lost mid-reply is survivable: the front reconnects
+//!   under the shared `ReconnectPolicy`, requeues the link's unanswered
+//!   tickets, and the external client still receives every reply exactly
+//!   once;
+//! * a permanently dead remote (reconnects refused) is abandoned and its
+//!   tickets are re-homed to the survivors;
+//! * a stalled link (socket open, nothing answered) trips the hung-link
+//!   watchdog into the same recovery path;
+//! * framing poison (a garbled frame) reads as link loss; stray replies
+//!   under unknown wire ids are ignored without drama.
+
+#[allow(dead_code)]
+#[path = "support/fake_shard.rs"]
+mod fake_shard;
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use fake_shard::{FakeShard, Fault};
+use kpynq::cluster::{Cluster, ClusterConfig, ClusterHandle, ClientConn, ReconnectPolicy};
+use kpynq::coordinator::{KpynqSystem, SystemConfig, SystemOutput};
+use kpynq::serve::job::assignments_checksum;
+use kpynq::serve::net::{Daemon, NetConfig};
+use kpynq::serve::{FitRequest, FitResponse, JobStatus, ServeConfig, ServeReport};
+
+/// Generous safety net: nothing here should take anywhere near this
+/// long, but a wedged cluster must fail the test, not hang CI.
+const TEST_READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// A reconnect shape tuned for tests: quick retries, sub-second budget —
+/// a refused remote is abandoned in well under a second.
+fn fast_reconnect() -> ReconnectPolicy {
+    ReconnectPolicy {
+        attempts: 5,
+        base_delay: Duration::from_millis(5),
+        max_delay: Duration::from_millis(50),
+        total_wait: Duration::from_secs(2),
+    }
+}
+
+fn start_remote_cluster_with(
+    addrs: Vec<String>,
+    health_timeout: Duration,
+    max_restarts: u32,
+) -> (String, ClusterHandle, std::thread::JoinHandle<ServeReport>) {
+    let cfg = ClusterConfig {
+        remote_shards: addrs,
+        reconnect: fast_reconnect(),
+        health_timeout,
+        max_restarts,
+        serve: ServeConfig { workers: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let cluster =
+        Cluster::start("127.0.0.1:0", NetConfig::default(), cfg).expect("remote cluster start");
+    let addr = cluster.local_addr();
+    let handle = cluster.handle();
+    let thread = std::thread::spawn(move || cluster.run().expect("cluster run"));
+    (addr, handle, thread)
+}
+
+fn start_remote_cluster(
+    addrs: Vec<String>,
+    health_timeout: Duration,
+) -> (String, ClusterHandle, std::thread::JoinHandle<ServeReport>) {
+    start_remote_cluster_with(addrs, health_timeout, 3)
+}
+
+fn connect(addr: &str) -> ClientConn {
+    let c = ClientConn::connect(addr).expect("connect");
+    c.set_read_timeout(Some(TEST_READ_TIMEOUT)).expect("set timeout");
+    c
+}
+
+fn job(id: u64, dataset: &str, data_seed: u64, k: usize, seed: u64) -> FitRequest {
+    FitRequest {
+        id,
+        dataset: dataset.into(),
+        data_seed,
+        max_points: 500,
+        kmeans: kpynq::kmeans::KMeansConfig { k, seed, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// The ground truth: the same request straight through the coordinator —
+/// no serving, no socket, no cluster.
+fn direct(req: &FitRequest) -> SystemOutput {
+    let rc = req.to_run_config().unwrap();
+    let ds = rc.load_dataset().unwrap();
+    KpynqSystem::new(SystemConfig { backend: rc.backend(), verify: false })
+        .unwrap()
+        .cluster(&ds, &req.kmeans)
+        .unwrap()
+}
+
+fn collect_by_id(c: &mut ClientConn, n: usize) -> BTreeMap<u64, FitResponse> {
+    let mut by_id = BTreeMap::new();
+    for _ in 0..n {
+        let r = c.recv_response().expect("response");
+        assert!(
+            by_id.insert(r.id, r).is_none(),
+            "duplicate reply for one id: exactly-once delivery is broken"
+        );
+    }
+    by_id
+}
+
+fn assert_all_ok_and_bit_identical(jobs: &[FitRequest], replies: &BTreeMap<u64, FitResponse>) {
+    for j in jobs {
+        let r = &replies[&j.id];
+        assert_eq!(r.status, JobStatus::Ok, "job {}: {}", j.id, r.detail);
+        let want = direct(j);
+        let s = r.summary.expect("ok replies carry a summary");
+        assert_eq!(
+            s.assignments_fnv,
+            assignments_checksum(&want.fit.assignments),
+            "job {} fingerprint must match a direct fit even across faults/requeues",
+            j.id
+        );
+        assert_eq!(s.inertia, want.fit.inertia, "job {} inertia", j.id);
+        assert_eq!(s.iterations, want.fit.iterations, "job {} iterations", j.id);
+    }
+}
+
+#[test]
+fn two_remote_shard_cluster_matches_single_daemon_and_direct_runs() {
+    // A job mix spanning two BatchKeys (blobs d=16, kegg d=20) so the
+    // router spreads work across both remotes.
+    let jobs: Vec<FitRequest> = vec![
+        job(1, "blobs", 100, 3, 41),
+        job(2, "blobs", 101, 4, 42),
+        job(3, "kegg", 102, 5, 43),
+        job(4, "blobs", 103, 3, 44),
+        job(5, "kegg", 104, 4, 45),
+        job(6, "blobs", 105, 5, 46),
+    ];
+
+    // Reference: one plain in-process daemon.
+    let daemon = Daemon::bind(
+        "127.0.0.1:0",
+        NetConfig::default(),
+        ServeConfig { workers: 2, ..Default::default() },
+    )
+    .expect("daemon bind");
+    let daemon_addr = daemon.local_addr();
+    let daemon_handle = daemon.handle();
+    let daemon_thread = std::thread::spawn(move || daemon.run().expect("daemon run"));
+    let mut dc = connect(&daemon_addr);
+    for j in &jobs {
+        dc.submit(j).unwrap();
+    }
+    let daemon_replies = collect_by_id(&mut dc, jobs.len());
+    daemon_handle.shutdown();
+    daemon_thread.join().unwrap();
+
+    // The system under test: a front attached to two remote doubles.
+    let a = FakeShard::start(vec![]);
+    let b = FakeShard::start(vec![]);
+    let (addr, handle, thread) = start_remote_cluster(
+        vec![a.addr(), b.addr()],
+        Duration::from_secs(30),
+    );
+    let mut cc = connect(&addr);
+    let g = cc.greeting();
+    assert_eq!(g.get("shards").unwrap().as_usize().unwrap(), 2);
+    for j in &jobs {
+        cc.submit(j).unwrap();
+    }
+    let cluster_replies = collect_by_id(&mut cc, jobs.len());
+
+    assert_all_ok_and_bit_identical(&jobs, &cluster_replies);
+    for j in &jobs {
+        assert_eq!(
+            daemon_replies[&j.id].summary.unwrap().assignments_fnv,
+            cluster_replies[&j.id].summary.unwrap().assignments_fnv,
+            "job {}: single daemon and remote cluster disagree",
+            j.id
+        );
+    }
+
+    let stats = cc.stats().unwrap();
+    assert_eq!(stats.submitted, jobs.len() as u64);
+    assert_eq!(stats.queue_depth, 0, "everything answered");
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.submitted, jobs.len() as u64);
+    assert_eq!(report.completed, jobs.len() as u64);
+    assert_eq!(report.shard_restarts, 0, "no faults were scripted");
+    assert_eq!(report.dropped_replies, 0);
+    assert_eq!(
+        a.answered() + b.answered(),
+        jobs.len() as u64,
+        "every job ran on exactly one remote"
+    );
+}
+
+#[test]
+fn link_dropped_mid_reply_reconnects_with_exactly_once_replies() {
+    // Shard 0's first connection answers one job, then severs the socket
+    // halfway through the next reply; its second connection (the front's
+    // reconnect) behaves. Same BatchKey throughout ⇒ the stream pins to
+    // shard 0, so the fault lands on the busiest link.
+    let a = FakeShard::start(vec![Fault::DropMidReply { after: 1 }]);
+    let b = FakeShard::start(vec![]);
+    let (addr, handle, thread) =
+        start_remote_cluster(vec![a.addr(), b.addr()], Duration::from_secs(30));
+    let mut cc = connect(&addr);
+
+    let jobs: Vec<FitRequest> =
+        (1..=8).map(|i| job(i, "blobs", 200 + i, 3 + (i as usize % 3), 50 + i)).collect();
+    for j in &jobs {
+        cc.submit(j).unwrap();
+    }
+    let replies = collect_by_id(&mut cc, jobs.len());
+    assert_all_ok_and_bit_identical(&jobs, &replies);
+
+    // The cluster is fully serviceable after the reconnect.
+    assert_eq!(cc.ping().unwrap(), kpynq::serve::net::PROTO_VERSION);
+    let post = job(99, "blobs", 999, 4, 99);
+    cc.submit(&post).unwrap();
+    let r = cc.recv_response().unwrap();
+    assert_eq!((r.id, r.status), (99, JobStatus::Ok), "{}", r.detail);
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert!(report.shard_restarts >= 1, "the dropped link was re-dialed");
+    assert_eq!(report.submitted, jobs.len() as u64 + 1);
+    assert_eq!(report.completed, jobs.len() as u64 + 1, "every job answered exactly once");
+    assert_eq!(report.dropped_replies, 0);
+    assert!(a.accepted() >= 2, "shard 0 saw the original link and the reconnect");
+}
+
+#[test]
+fn permanently_dead_remote_is_abandoned_and_tickets_rehome_to_survivors() {
+    // Shard 0 tears its first connection down on the first job and then
+    // refuses every reconnect (accept + instant close) — the
+    // "daemon host went away for good" script. Its unanswered tickets
+    // must re-home to shard 1 and be answered exactly once.
+    let a = FakeShard::start(vec![Fault::DropMidReply { after: 0 }]);
+    let b = FakeShard::start(vec![]);
+    let (addr, handle, thread) =
+        start_remote_cluster(vec![a.addr(), b.addr()], Duration::from_secs(30));
+    a.refuse_new_conns(); // future dials fail; the link already up stays up
+    let mut cc = connect(&addr);
+
+    let jobs: Vec<FitRequest> =
+        (1..=6).map(|i| job(i, "blobs", 300 + i, 3 + (i as usize % 2), 70 + i)).collect();
+    for j in &jobs {
+        cc.submit(j).unwrap();
+    }
+    let replies = collect_by_id(&mut cc, jobs.len());
+    assert_all_ok_and_bit_identical(&jobs, &replies);
+
+    assert_eq!(a.answered(), 0, "shard 0 never completed a reply");
+    assert_eq!(b.answered(), jobs.len() as u64, "the survivor answered everything");
+
+    // The abandoned shard is routed around, not resurrected: new work
+    // still flows through the survivor.
+    let post = job(50, "blobs", 888, 3, 88);
+    cc.submit(&post).unwrap();
+    let r = cc.recv_response().unwrap();
+    assert_eq!((r.id, r.status), (50, JobStatus::Ok), "{}", r.detail);
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.completed, jobs.len() as u64 + 1, "exactly once despite the re-homing");
+    assert_eq!(report.dropped_replies, 0);
+}
+
+#[test]
+fn stalled_link_trips_the_watchdog_into_reconnect_and_requeue() {
+    // Shard 0 goes silent on its first job with the socket held open —
+    // the failure EOF detection cannot see. A short health timeout lets
+    // the watchdog force the link closed; recovery then reconnects (the
+    // fake's second connection behaves) and requeues everything.
+    let a = FakeShard::start(vec![Fault::Stall {
+        after: 0,
+        dead_air: Duration::from_secs(20),
+    }]);
+    let b = FakeShard::start(vec![]);
+    let (addr, handle, thread) =
+        start_remote_cluster(vec![a.addr(), b.addr()], Duration::from_millis(1_500));
+    let mut cc = connect(&addr);
+
+    let jobs: Vec<FitRequest> =
+        (1..=5).map(|i| job(i, "blobs", 400 + i, 3, 90 + i)).collect();
+    for j in &jobs {
+        cc.submit(j).unwrap();
+    }
+    let replies = collect_by_id(&mut cc, jobs.len());
+    assert_all_ok_and_bit_identical(&jobs, &replies);
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert!(report.shard_restarts >= 1, "the watchdog re-dialed the stalled link");
+    assert_eq!(report.completed, jobs.len() as u64);
+    assert_eq!(report.dropped_replies, 0);
+    assert!(a.accepted() >= 2, "the stalled connection was replaced");
+}
+
+#[test]
+fn wedged_forever_remote_exhausts_its_budget_and_rehomes_to_the_survivor() {
+    // Shard 0 is wedged-but-reachable: every connection greets, then
+    // stalls on its first job. Because remote reconnects always consume
+    // budget (re-dialing cannot heal the peer — see cluster::remote),
+    // the watchdog cycle must converge: force-close → reconnect (1/1) →
+    // stall again → force-close → budget exhausted → abandoned, with
+    // every ticket re-homed to shard 1 and answered exactly once. With
+    // the supervisor's budget-free kill rule this would livelock
+    // forever, which is exactly the asymmetry under test.
+    let wedged = Fault::Stall { after: 0, dead_air: Duration::from_secs(60) };
+    let a = FakeShard::start(vec![wedged, wedged, wedged]);
+    let b = FakeShard::start(vec![]);
+    let (addr, handle, thread) = start_remote_cluster_with(
+        vec![a.addr(), b.addr()],
+        Duration::from_millis(1_200),
+        1, // one reconnect, then abandonment
+    );
+    let mut cc = connect(&addr);
+
+    let jobs: Vec<FitRequest> =
+        (1..=4).map(|i| job(i, "blobs", 800 + i, 3, 150 + i)).collect();
+    for j in &jobs {
+        cc.submit(j).unwrap();
+    }
+    let replies = collect_by_id(&mut cc, jobs.len());
+    assert_all_ok_and_bit_identical(&jobs, &replies);
+
+    assert_eq!(a.answered(), 0, "the wedged shard never completed a reply");
+    assert_eq!(b.answered(), jobs.len() as u64, "the survivor answered everything");
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.shard_restarts, 1, "exactly the budgeted reconnect, then abandonment");
+    assert_eq!(report.completed, jobs.len() as u64);
+    assert_eq!(report.dropped_replies, 0);
+}
+
+#[test]
+fn garbled_frame_reads_as_link_loss_and_recovery_keeps_exactly_once() {
+    // A peer that emits non-protocol bytes cannot be resynced; the link
+    // reader must treat the stream as poisoned (link down), and recovery
+    // must still deliver every reply exactly once.
+    let a = FakeShard::start(vec![Fault::GarbleReply { after: 0 }]);
+    let b = FakeShard::start(vec![]);
+    let (addr, handle, thread) =
+        start_remote_cluster(vec![a.addr(), b.addr()], Duration::from_secs(30));
+    let mut cc = connect(&addr);
+
+    let jobs: Vec<FitRequest> =
+        (1..=4).map(|i| job(i, "blobs", 500 + i, 3, 110 + i)).collect();
+    for j in &jobs {
+        cc.submit(j).unwrap();
+    }
+    let replies = collect_by_id(&mut cc, jobs.len());
+    assert_all_ok_and_bit_identical(&jobs, &replies);
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert!(report.shard_restarts >= 1, "framing poison must be treated as link loss");
+    assert_eq!(report.completed, jobs.len() as u64);
+    assert_eq!(report.dropped_replies, 0);
+}
+
+#[test]
+fn stale_wire_id_replies_are_ignored_without_drama() {
+    // A stray reply under a wire id nobody submitted must be dropped on
+    // the floor: no crash, no mis-delivery, no spurious reconnect.
+    let a = FakeShard::start(vec![Fault::StaleWireId { after: 0 }]);
+    let (addr, handle, thread) =
+        start_remote_cluster(vec![a.addr()], Duration::from_secs(30));
+    let mut cc = connect(&addr);
+
+    let jobs: Vec<FitRequest> =
+        (1..=3).map(|i| job(i, "blobs", 600 + i, 3, 130 + i)).collect();
+    for j in &jobs {
+        cc.submit(j).unwrap();
+    }
+    let replies = collect_by_id(&mut cc, jobs.len());
+    assert_all_ok_and_bit_identical(&jobs, &replies);
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.shard_restarts, 0, "a stray reply is noise, not a link failure");
+    assert_eq!(report.completed, jobs.len() as u64);
+}
+
+#[test]
+fn refused_handshake_is_retried_until_the_peer_speaks_revision_one() {
+    // The fake's first two connections greet with protocol revision 99 —
+    // the §2 version-skew refusal. A single connect fails with a revision
+    // error (consuming fault one); the cluster's backoff loop eats fault
+    // two and lands on the third (conforming) connection, so startup
+    // still succeeds.
+    let a = FakeShard::start(vec![Fault::RefuseHandshake, Fault::RefuseHandshake]);
+    let err = ClientConn::connect(&a.addr()).unwrap_err().to_string();
+    assert!(err.contains("protocol revision"), "{err}");
+
+    let (addr, handle, thread) =
+        start_remote_cluster(vec![a.addr()], Duration::from_secs(30));
+    let mut cc = connect(&addr);
+    let probe = job(1, "blobs", 700, 3, 140);
+    cc.submit(&probe).unwrap();
+    let r = cc.recv_response().unwrap();
+    assert_eq!((r.id, r.status), (1, JobStatus::Ok), "{}", r.detail);
+    assert!(a.accepted() >= 3, "refused greeting, cluster retry, then the front link");
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.completed, 1);
+}

@@ -1,0 +1,443 @@
+//! Protocol conformance: table-driven request/response vectors extracted
+//! from PROTOCOL.md §4–§6, run against **both** the production daemon
+//! (`serve::net::Daemon`) and the test double
+//! (`support/fake_shard.rs`).
+//!
+//! This is the three-way contract that keeps the server, the client and
+//! the document from silently diverging: the vectors are written from
+//! the spec's text (each names the section it encodes), the daemon must
+//! pass them because it *is* the spec's implementation, and the fake
+//! must pass them because every remote-shards chaos test
+//! (`rust/tests/cluster_remote.rs`) is only as honest as the double it
+//! runs against. A behavior change that touches the wire shows up here
+//! as a failing vector on one server but not the other — which is
+//! exactly the drift the suite exists to catch.
+//!
+//! The client side under test is deliberately *raw*: a plain socket plus
+//! the shared `serve::codec` line framing, no `ClientConn` — so the
+//! vectors check the bytes the document promises, not what a convenient
+//! client happens to tolerate.
+
+#[allow(dead_code)]
+#[path = "support/fake_shard.rs"]
+mod fake_shard;
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use fake_shard::FakeShard;
+use kpynq::serve::codec::{LineEvent, LineReader, MAX_LINE_BYTES};
+use kpynq::serve::net::{Daemon, NetConfig, PROTO_VERSION};
+use kpynq::serve::ServeConfig;
+use kpynq::util::json::Json;
+
+/// Fail-don't-hang budget for every read in the suite.
+const TEST_READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// A raw protocol connection: socket + shared line framing, nothing else.
+struct Wire {
+    reader: LineReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Wire {
+    /// Connect, read the §2 greeting, return both.
+    fn connect(addr: &str) -> (Json, Wire) {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(TEST_READ_TIMEOUT)).expect("read timeout");
+        let writer = stream.try_clone().expect("clone stream");
+        let mut reader = LineReader::new(stream);
+        let greeting = match reader.next_event() {
+            LineEvent::Line(bytes) => {
+                Json::parse(std::str::from_utf8(&bytes).expect("greeting utf-8").trim())
+                    .expect("greeting parses")
+            }
+            other => panic!("no greeting line, got {}", describe(&other)),
+        };
+        (greeting, Wire { reader, writer })
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).expect("send");
+        self.writer.write_all(b"\n").expect("send newline");
+        self.writer.flush().expect("flush");
+    }
+
+    /// Next reply line as JSON; `None` once the server closed.
+    fn recv(&mut self) -> Option<Json> {
+        loop {
+            match self.reader.next_event() {
+                LineEvent::Line(bytes) => {
+                    let text = std::str::from_utf8(&bytes).expect("reply utf-8");
+                    return Some(Json::parse(text.trim()).expect("reply parses"));
+                }
+                LineEvent::Tick => panic!("read timeout waiting for a reply"),
+                LineEvent::Oversized => panic!("server sent an oversized line"),
+                // EOF and a post-close reset both mean "closed".
+                LineEvent::Eof | LineEvent::Error(_) => return None,
+            }
+        }
+    }
+}
+
+fn describe(ev: &LineEvent) -> &'static str {
+    match ev {
+        LineEvent::Line(_) => "line",
+        LineEvent::Oversized => "oversized",
+        LineEvent::Tick => "tick",
+        LineEvent::Eof => "eof",
+        LineEvent::Error(_) => "error",
+    }
+}
+
+/// What one reply must look like.
+enum Expect {
+    /// `{"op":"pong","proto":1}` (§6).
+    Pong,
+    /// A `{"op":"stats"}` reply carrying every documented counter key (§6).
+    StatsKeys(&'static [&'static str]),
+    /// A §5 error reply whose `error` text contains the needle.
+    ErrorContains(&'static str),
+    /// A §5 error reply with 1-based line attribution (§5).
+    ErrorAtLine(u64, &'static str),
+    /// `{"op":"cancelled","id":N,"cancelled":B}` (§6).
+    Cancelled { id: u64, value: bool },
+    /// A full §4 `ok` response: every always-present scalar, the
+    /// `ok`-only fit fields, and a 16-lowercase-hex-digit §8 fingerprint.
+    OkJob(u64),
+    /// A §4 `failed` response with a non-empty `detail`.
+    FailedJob(u64),
+    /// The server closes the connection.
+    Closed,
+}
+
+struct Vector {
+    name: &'static str,
+    send: Vec<String>,
+    expect: Vec<Expect>,
+}
+
+fn ok_job_line(id: u64) -> String {
+    format!("{{\"id\":{id},\"dataset\":\"blobs\",\"data_seed\":7,\"max_points\":300,\"k\":3,\"seed\":9}}")
+}
+
+fn vectors() -> Vec<Vector> {
+    let oversized = "a".repeat(MAX_LINE_BYTES + 16);
+    vec![
+        Vector {
+            name: "ping answers pong with the protocol revision (§6)",
+            send: vec![r#"{"op":"ping"}"#.into()],
+            expect: vec![Expect::Pong],
+        },
+        Vector {
+            name: "stats carries every documented counter key (§6)",
+            send: vec![r#"{"op":"stats"}"#.into()],
+            expect: vec![Expect::StatsKeys(&[
+                "submitted",
+                "queue_depth",
+                "shed_full",
+                "shed_deadline",
+                "peak_queue_depth",
+                "connections",
+                "active_conns",
+                "pending_here",
+            ])],
+        },
+        Vector {
+            name: "a handshake at the server's revision is accepted silently (§2)",
+            send: vec![r#"{"proto":1}"#.into(), r#"{"op":"ping"}"#.into()],
+            expect: vec![Expect::Pong],
+        },
+        Vector {
+            name: "a handshake at a foreign revision is refused and closes (§2, §5)",
+            send: vec![r#"{"proto":99}"#.into()],
+            expect: vec![Expect::ErrorContains("protocol revision"), Expect::Closed],
+        },
+        Vector {
+            name: "malformed JSON draws a §5 error with line attribution",
+            send: vec!["{nope".into()],
+            expect: vec![Expect::ErrorAtLine(1, "malformed JSON")],
+        },
+        Vector {
+            name: "an unknown job key is rejected at admission (§3 strictness, §5)",
+            send: vec![r#"{"id":1,"kay":8}"#.into()],
+            expect: vec![Expect::ErrorContains("unknown job key")],
+        },
+        Vector {
+            name: "a non-object frame is a §5 error, not a job",
+            send: vec!["[1,2]".into()],
+            expect: vec![Expect::ErrorContains("must be a JSON object")],
+        },
+        Vector {
+            name: "an unknown control op draws a §5 error (§6)",
+            send: vec![r#"{"op":"dance"}"#.into()],
+            expect: vec![Expect::ErrorContains("unknown op")],
+        },
+        Vector {
+            name: "cancel with a malformed id is a §5 error (§6)",
+            send: vec![r#"{"op":"cancel","id":"x"}"#.into()],
+            expect: vec![Expect::ErrorContains("cancel needs")],
+        },
+        Vector {
+            name: "cancel of an unknown id acks cancelled:false (§6)",
+            send: vec![r#"{"op":"cancel","id":7}"#.into()],
+            expect: vec![Expect::Cancelled { id: 7, value: false }],
+        },
+        Vector {
+            name: "blank lines and # comments are ignored (§2)",
+            send: vec!["".into(), "# a comment".into(), r#"{"op":"ping"}"#.into()],
+            expect: vec![Expect::Pong],
+        },
+        Vector {
+            name: "an oversized line is rejected and framing resumes (§2, §5)",
+            send: vec![oversized, r#"{"op":"ping"}"#.into()],
+            expect: vec![Expect::ErrorContains("exceeds"), Expect::Pong],
+        },
+        Vector {
+            name: "an ok response carries the full §4 scalar surface + §8 fingerprint",
+            send: vec![ok_job_line(5)],
+            expect: vec![Expect::OkJob(5)],
+        },
+        Vector {
+            name: "an admitted-but-failing job answers failed with detail (§4)",
+            send: vec![r#"{"id":6,"dataset":"no-such-file.csv"}"#.into()],
+            expect: vec![Expect::FailedJob(6)],
+        },
+        Vector {
+            name: "bye delivers every owed reply, then closes (§6, §2)",
+            send: vec![ok_job_line(9), r#"{"op":"bye"}"#.into()],
+            expect: vec![Expect::OkJob(9), Expect::Closed],
+        },
+    ]
+}
+
+fn check_greeting(greeting: &Json, server: &str) {
+    assert_eq!(
+        greeting.get("kpynq").unwrap().as_str().unwrap(),
+        "serve",
+        "{server}: greeting names the protocol family (§2)"
+    );
+    assert_eq!(
+        greeting.get("proto").unwrap().as_usize().unwrap() as u64,
+        PROTO_VERSION,
+        "{server}: greeting announces the revision (§2)"
+    );
+    assert_eq!(
+        greeting.get("max_line_bytes").unwrap().as_usize().unwrap(),
+        MAX_LINE_BYTES,
+        "{server}: greeting echoes the line cap (§2)"
+    );
+    for key in ["version", "workers", "max_batch", "backends"] {
+        assert!(greeting.get(key).is_ok(), "{server}: greeting key '{key}' missing (§2)");
+    }
+}
+
+fn check(expect: &Expect, reply: Option<Json>, server: &str, vector: &str) {
+    let ctx = format!("[{server}] {vector}");
+    match expect {
+        Expect::Closed => {
+            assert!(reply.is_none(), "{ctx}: expected the connection to close, got {reply:?}");
+            return;
+        }
+        _ => {}
+    }
+    let j = reply.unwrap_or_else(|| panic!("{ctx}: server closed instead of replying"));
+    match expect {
+        Expect::Pong => {
+            assert_eq!(j.get("op").unwrap().as_str().unwrap(), "pong", "{ctx}");
+            assert_eq!(j.get("proto").unwrap().as_usize().unwrap() as u64, PROTO_VERSION, "{ctx}");
+        }
+        Expect::StatsKeys(keys) => {
+            assert_eq!(j.get("op").unwrap().as_str().unwrap(), "stats", "{ctx}");
+            for key in *keys {
+                assert!(j.get(key).is_ok(), "{ctx}: stats key '{key}' missing");
+            }
+        }
+        Expect::ErrorContains(needle) => {
+            assert_eq!(j.get("status").unwrap().as_str().unwrap(), "error", "{ctx}: {j:?}");
+            let text = j.get("error").unwrap().as_str().unwrap().to_string();
+            assert!(text.contains(needle), "{ctx}: error '{text}' lacks '{needle}'");
+            assert!(j.get("id").is_err(), "{ctx}: §5 error replies carry no id");
+        }
+        Expect::ErrorAtLine(line, needle) => {
+            assert_eq!(j.get("status").unwrap().as_str().unwrap(), "error", "{ctx}: {j:?}");
+            let text = j.get("error").unwrap().as_str().unwrap().to_string();
+            assert!(text.contains(needle), "{ctx}: error '{text}' lacks '{needle}'");
+            assert_eq!(j.get("line").unwrap().as_usize().unwrap() as u64, *line, "{ctx}");
+        }
+        Expect::Cancelled { id, value } => {
+            assert_eq!(j.get("op").unwrap().as_str().unwrap(), "cancelled", "{ctx}");
+            assert_eq!(j.get("id").unwrap().as_usize().unwrap() as u64, *id, "{ctx}");
+            assert_eq!(
+                matches!(j.get("cancelled"), Ok(Json::Bool(true))),
+                *value,
+                "{ctx}: cancelled flag"
+            );
+        }
+        Expect::OkJob(id) => {
+            assert_eq!(j.get("id").unwrap().as_usize().unwrap() as u64, *id, "{ctx}");
+            assert_eq!(j.get("status").unwrap().as_str().unwrap(), "ok", "{ctx}: {j:?}");
+            // Always-present scalars (§4).
+            for key in ["worker", "batch_size", "queue_ms", "service_ms"] {
+                assert!(
+                    j.get(key).and_then(|v| v.as_f64()).is_ok(),
+                    "{ctx}: §4 key '{key}' missing or non-numeric"
+                );
+            }
+            // ok-only fit fields (§4).
+            assert!(j.get("inertia").and_then(|v| v.as_f64()).is_ok(), "{ctx}: inertia");
+            assert!(j.get("iterations").and_then(|v| v.as_usize()).is_ok(), "{ctx}: iterations");
+            assert!(
+                matches!(j.get("converged"), Ok(Json::Bool(_))),
+                "{ctx}: converged must be a bool"
+            );
+            // §8: exactly 16 lowercase hex digits.
+            let fnv = j.get("assignments_fnv").unwrap().as_str().unwrap().to_string();
+            assert_eq!(fnv.len(), 16, "{ctx}: fingerprint '{fnv}' is not 16 digits");
+            assert!(
+                fnv.chars().all(|c| c.is_ascii_hexdigit() && !c.is_ascii_uppercase()),
+                "{ctx}: fingerprint '{fnv}' is not lowercase hex"
+            );
+        }
+        Expect::FailedJob(id) => {
+            assert_eq!(j.get("id").unwrap().as_usize().unwrap() as u64, *id, "{ctx}");
+            assert_eq!(j.get("status").unwrap().as_str().unwrap(), "failed", "{ctx}: {j:?}");
+            assert!(
+                !j.get("detail").unwrap().as_str().unwrap().is_empty(),
+                "{ctx}: failed replies carry the error text (§4)"
+            );
+        }
+        Expect::Closed => unreachable!("handled above"),
+    }
+}
+
+/// Run every vector against one server, each on a fresh connection so
+/// line numbering and teardown expectations stay independent.
+fn run_vectors(addr: &str, server: &str) {
+    for v in vectors() {
+        let (greeting, mut wire) = Wire::connect(addr);
+        check_greeting(&greeting, server);
+        for line in &v.send {
+            wire.send(line);
+        }
+        for expect in &v.expect {
+            check(expect, wire.recv(), server, v.name);
+        }
+    }
+}
+
+#[test]
+fn the_daemon_conforms_to_the_documented_vectors() {
+    let daemon = Daemon::bind(
+        "127.0.0.1:0",
+        NetConfig::default(),
+        ServeConfig { workers: 1, ..Default::default() },
+    )
+    .expect("daemon bind");
+    let addr = daemon.local_addr();
+    let handle = daemon.handle();
+    let thread = std::thread::spawn(move || daemon.run().expect("daemon run"));
+    run_vectors(&addr, "daemon");
+    handle.shutdown();
+    thread.join().unwrap();
+}
+
+#[test]
+fn the_fake_shard_conforms_to_the_same_vectors() {
+    let fake = FakeShard::start(vec![]);
+    run_vectors(&fake.addr(), "fake_shard");
+}
+
+#[test]
+fn ok_fingerprints_agree_across_daemon_fake_and_direct_runs() {
+    // The §4 serving guarantee, cross-server: the same request answered
+    // by the daemon, by the double, and by a direct coordinator run must
+    // carry one identical §8 fingerprint — the property every
+    // bit-identity assertion in the chaos suite stands on.
+    let req = kpynq::serve::FitRequest {
+        id: 5,
+        dataset: "blobs".into(),
+        data_seed: 7,
+        max_points: 300,
+        kmeans: kpynq::kmeans::KMeansConfig { k: 3, seed: 9, ..Default::default() },
+        ..Default::default()
+    };
+    let rc = req.to_run_config().unwrap();
+    let ds = rc.load_dataset().unwrap();
+    let want = kpynq::coordinator::KpynqSystem::new(kpynq::coordinator::SystemConfig {
+        backend: rc.backend(),
+        verify: false,
+    })
+    .unwrap()
+    .cluster(&ds, &req.kmeans)
+    .unwrap();
+    let want_fnv = format!(
+        "{:016x}",
+        kpynq::serve::job::assignments_checksum(&want.fit.assignments)
+    );
+
+    let mut got = Vec::new();
+    // Daemon.
+    let daemon = Daemon::bind(
+        "127.0.0.1:0",
+        NetConfig::default(),
+        ServeConfig { workers: 1, ..Default::default() },
+    )
+    .expect("daemon bind");
+    let addr = daemon.local_addr();
+    let handle = daemon.handle();
+    let thread = std::thread::spawn(move || daemon.run().expect("daemon run"));
+    {
+        let (_, mut wire) = Wire::connect(&addr);
+        wire.send(&ok_job_line(5));
+        let j = wire.recv().expect("daemon reply");
+        got.push(("daemon", j.get("assignments_fnv").unwrap().as_str().unwrap().to_string()));
+    }
+    handle.shutdown();
+    thread.join().unwrap();
+    // Fake.
+    let fake = FakeShard::start(vec![]);
+    {
+        let (_, mut wire) = Wire::connect(&fake.addr());
+        wire.send(&ok_job_line(5));
+        let j = wire.recv().expect("fake reply");
+        got.push(("fake", j.get("assignments_fnv").unwrap().as_str().unwrap().to_string()));
+    }
+    for (server, fnv) in got {
+        assert_eq!(fnv, want_fnv, "{server} fingerprint diverges from the direct fit");
+    }
+}
+
+#[test]
+fn shutdown_acks_and_drains_on_both_servers() {
+    // §6 `shutdown` last and on dedicated instances: it takes the whole
+    // server down, which is the point.
+    let daemon = Daemon::bind(
+        "127.0.0.1:0",
+        NetConfig::default(),
+        ServeConfig { workers: 1, ..Default::default() },
+    )
+    .expect("daemon bind");
+    let addr = daemon.local_addr();
+    let thread = std::thread::spawn(move || daemon.run().expect("daemon run"));
+    {
+        let (_, mut wire) = Wire::connect(&addr);
+        wire.send(r#"{"op":"shutdown"}"#);
+        let j = wire.recv().expect("shutdown-ack");
+        assert_eq!(j.get("op").unwrap().as_str().unwrap(), "shutdown-ack");
+        assert!(wire.recv().is_none(), "daemon closes after the ack");
+    }
+    thread.join().unwrap(); // the daemon actually exited
+
+    let fake = FakeShard::start(vec![]);
+    let fake_addr = fake.addr();
+    {
+        let (_, mut wire) = Wire::connect(&fake_addr);
+        wire.send(r#"{"op":"shutdown"}"#);
+        let j = wire.recv().expect("shutdown-ack");
+        assert_eq!(j.get("op").unwrap().as_str().unwrap(), "shutdown-ack");
+        assert!(wire.recv().is_none(), "fake closes after the ack");
+    }
+    drop(fake); // joins its (now stopped) accept loop
+}

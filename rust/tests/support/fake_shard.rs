@@ -1,0 +1,521 @@
+//! A deterministic, in-process PROTOCOL.md-speaking server double with
+//! scriptable faults — the test backbone for the remote-shards cluster
+//! mode.
+//!
+//! A remote peer cannot be SIGKILLed from a test the way
+//! `rust/tests/cluster.rs` kills supervised children, so every remote
+//! failure mode must be *scripted* instead: [`FakeShard`] is a real
+//! listener speaking the real wire protocol (greeting + handshake,
+//! control frames, §5 error replies — all built on the same
+//! `serve::codec` framing both production peers use), whose connections
+//! can be told to misbehave in precisely one way at precisely one point:
+//!
+//! * [`Fault::RefuseHandshake`] — greet with an unsupported protocol
+//!   revision (the §2 version-skew connect failure);
+//! * [`Fault::DropMidReply`] — answer `after` jobs, then write half a
+//!   reply line and sever the socket;
+//! * [`Fault::Stall`] — answer `after` jobs, then go silent with the
+//!   socket open (the wedged-peer case only the watchdog can see);
+//! * [`Fault::GarbleReply`] — answer one job with a non-JSON line
+//!   (framing poison: a conformant client must treat the link as lost);
+//! * [`Fault::StaleWireId`] — emit a stray reply under a wire id that
+//!   was never submitted before the real one (a conformant front must
+//!   ignore it and deliver exactly one reply).
+//!
+//! Faults are consumed one per accepted connection, in order — so "drop
+//! the link mid-stream, then behave after the reconnect" is the script
+//! `vec![Fault::DropMidReply { after: 1 }]`: connection 1 misbehaves,
+//! connection 2 (the front's reconnect) runs fault-free. Every fault is
+//! therefore deterministic in *what* happens and *where* in the stream,
+//! with no process spawning, no signals and no timing dice.
+//!
+//! Jobs are answered by running the real fit through the library
+//! (`FitRequest::to_run_config` → `KpynqSystem::cluster`, synchronously,
+//! in submission order), so replies carry genuine §4 summaries and the
+//! §8 FNV fingerprint — a cluster fronting fake shards can be held to
+//! full bit-identity against direct engine runs. The same conformance
+//! suite (`rust/tests/protocol_conformance.rs`) runs against this double
+//! *and* the production daemon, which is what keeps the two from
+//! diverging.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use kpynq::coordinator::{KpynqSystem, SystemConfig};
+use kpynq::serve::codec::{write_line, LineEvent, LineReader, MAX_LINE_BYTES};
+use kpynq::serve::job::{assignments_checksum, FitRequest};
+use kpynq::serve::net::PROTO_VERSION;
+use kpynq::util::json::Json;
+
+/// Accept-poll tick for the fake's (non-blocking) listener loop.
+const ACCEPT_TICK: Duration = Duration::from_millis(5);
+
+/// One scripted fault, consumed by one accepted connection.
+#[derive(Clone, Copy, Debug)]
+pub enum Fault {
+    /// Behave perfectly.
+    None,
+    /// Greet with an unsupported protocol revision, then close.
+    RefuseHandshake,
+    /// Answer `after` jobs, then write half of the next reply and sever
+    /// the socket (the mid-reply connection loss).
+    DropMidReply { after: usize },
+    /// Answer `after` jobs, then hold the socket open and answer nothing
+    /// for `dead_air` — long enough to trip a watchdog under test.
+    Stall { after: usize, dead_air: Duration },
+    /// Answer the job after `after` replies with a garbage non-JSON line
+    /// instead of its reply.
+    GarbleReply { after: usize },
+    /// Before the job after `after` replies is answered, emit the same
+    /// reply under a wire id that was never submitted; then answer
+    /// properly.
+    StaleWireId { after: usize },
+}
+
+/// Counters and control flags shared by the listener and every
+/// connection thread.
+struct SharedState {
+    stop: AtomicBool,
+    /// When set, accepted sockets are dropped before the greeting — the
+    /// "daemon host went away for good" script.
+    refuse_conns: AtomicBool,
+    faults: Mutex<Vec<Fault>>,
+    accepted: AtomicU64,
+    active_conns: AtomicUsize,
+    /// Jobs admitted over the fake's lifetime (the `stats` `submitted`).
+    submitted: AtomicU64,
+    /// Job replies fully written (ok + failed), across all connections.
+    answered: AtomicU64,
+}
+
+/// A running fake shard: one listener, real protocol, scripted faults.
+pub struct FakeShard {
+    addr: String,
+    shared: Arc<SharedState>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FakeShard {
+    /// Bind an ephemeral loopback listener and start serving. `faults`
+    /// are consumed one per accepted connection, in order; connections
+    /// past the script's end behave perfectly.
+    pub fn start(faults: Vec<Fault>) -> FakeShard {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("fake shard bind");
+        listener.set_nonblocking(true).expect("fake shard nonblocking");
+        let addr = listener.local_addr().expect("fake shard addr").to_string();
+        // The script is consumed front-to-back; store reversed so `pop`
+        // yields connection order.
+        let shared = Arc::new(SharedState {
+            stop: AtomicBool::new(false),
+            refuse_conns: AtomicBool::new(false),
+            faults: Mutex::new(faults.into_iter().rev().collect()),
+            accepted: AtomicU64::new(0),
+            active_conns: AtomicUsize::new(0),
+            submitted: AtomicU64::new(0),
+            answered: AtomicU64::new(0),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_thread = std::thread::spawn(move || {
+            while !accept_shared.stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if accept_shared.refuse_conns.load(Ordering::SeqCst) {
+                            drop(stream); // connect succeeds, then instant EOF
+                            continue;
+                        }
+                        accept_shared.accepted.fetch_add(1, Ordering::SeqCst);
+                        let fault = accept_shared
+                            .faults
+                            .lock()
+                            .expect("fault script poisoned")
+                            .pop()
+                            .unwrap_or(Fault::None);
+                        let conn_shared = Arc::clone(&accept_shared);
+                        conn_shared.active_conns.fetch_add(1, Ordering::SeqCst);
+                        std::thread::spawn(move || {
+                            serve_conn(stream, fault, &conn_shared);
+                            conn_shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::Interrupted
+                        ) =>
+                    {
+                        std::thread::sleep(ACCEPT_TICK)
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        FakeShard { addr, shared, accept_thread: Some(accept_thread) }
+    }
+
+    /// The `host:port` this fake listens on.
+    pub fn addr(&self) -> String {
+        self.addr.clone()
+    }
+
+    /// Append a fault for a future connection.
+    pub fn push_fault(&self, fault: Fault) {
+        self.shared.faults.lock().expect("fault script poisoned").insert(0, fault);
+    }
+
+    /// From now on, accept and immediately drop every new connection —
+    /// the permanently-dead-host script (reconnects fail until the
+    /// caller's budget runs out).
+    pub fn refuse_new_conns(&self) {
+        self.shared.refuse_conns.store(true, Ordering::SeqCst);
+    }
+
+    /// Connections accepted (and served) so far.
+    pub fn accepted(&self) -> u64 {
+        self.shared.accepted.load(Ordering::SeqCst)
+    }
+
+    /// Job replies fully written so far, across all connections.
+    pub fn answered(&self) -> u64 {
+        self.shared.answered.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for FakeShard {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // Connection threads exit on their sockets' EOF; a stalling one
+        // dies with the test process.
+    }
+}
+
+/// Structured §5 error reply (mirrors `serve::net::error_reply`).
+fn error_reply(lineno: u64, msg: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("status".to_string(), Json::Str("error".into()));
+    m.insert("error".to_string(), Json::Str(msg.into()));
+    if lineno > 0 {
+        m.insert("line".to_string(), Json::Num(lineno as f64));
+    }
+    Json::Obj(m).to_string()
+}
+
+fn op_frame(pairs: &[(&str, Json)]) -> String {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert((*k).to_string(), v.clone());
+    }
+    Json::Obj(m).to_string()
+}
+
+/// Run the real fit and build the §4 reply line by hand — the double
+/// constructs raw wire JSON on purpose, so the conformance suite checks
+/// the documented shape itself, not a shared serializer.
+fn job_reply_json(req: &FitRequest) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(req.id as f64));
+    m.insert("worker".to_string(), Json::Num(0.0));
+    m.insert("batch_size".to_string(), Json::Num(1.0));
+    m.insert("queue_ms".to_string(), Json::Num(0.0));
+    m.insert("service_ms".to_string(), Json::Num(0.0));
+    let run = req.to_run_config().and_then(|rc| {
+        let ds = rc.load_dataset()?;
+        KpynqSystem::new(SystemConfig { backend: rc.backend(), verify: false })?
+            .cluster(&ds, &req.kmeans)
+    });
+    match run {
+        Ok(out) => {
+            m.insert("status".to_string(), Json::Str("ok".into()));
+            m.insert("backend".to_string(), Json::Str(req.backend_name.clone()));
+            m.insert("inertia".to_string(), Json::Num(out.fit.inertia));
+            m.insert("iterations".to_string(), Json::Num(out.fit.iterations as f64));
+            m.insert("converged".to_string(), Json::Bool(out.fit.converged));
+            m.insert(
+                "assignments_fnv".to_string(),
+                Json::Str(format!("{:016x}", assignments_checksum(&out.fit.assignments))),
+            );
+        }
+        Err(e) => {
+            m.insert("status".to_string(), Json::Str("failed".into()));
+            m.insert("detail".to_string(), Json::Str(e.to_string()));
+            m.insert("backend".to_string(), Json::Str(req.backend_name.clone()));
+        }
+    }
+    Json::Obj(m)
+}
+
+/// One connection's protocol loop (PROTOCOL.md §2–§6), with the
+/// connection's scripted fault applied at its trigger point.
+fn serve_conn(stream: TcpStream, fault: Fault, shared: &SharedState) {
+    let _ = stream.set_nodelay(true);
+    let writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let out = Mutex::new(writer);
+
+    // Greeting (§2) — or the scripted version-skew refusal.
+    if matches!(fault, Fault::RefuseHandshake) {
+        let _ = write_line(
+            &out,
+            &op_frame(&[
+                ("kpynq", Json::Str("serve".into())),
+                ("proto", Json::Num(99.0)),
+                ("version", Json::Str("fake".into())),
+            ]),
+        );
+        return;
+    }
+    let _ = write_line(
+        &out,
+        &op_frame(&[
+            ("kpynq", Json::Str("serve".into())),
+            ("proto", Json::Num(PROTO_VERSION as f64)),
+            ("version", Json::Str("fake".into())),
+            ("workers", Json::Num(1.0)),
+            ("max_batch", Json::Num(1.0)),
+            ("max_line_bytes", Json::Num(MAX_LINE_BYTES as f64)),
+            (
+                "backends",
+                Json::Arr(vec![Json::Str("fpga-sim".into()), Json::Str("native".into())]),
+            ),
+        ]),
+    );
+
+    let mut reader = LineReader::new(stream);
+    let mut lineno = 0u64;
+    let mut answered_here = 0usize;
+    loop {
+        match reader.next_event() {
+            LineEvent::Line(bytes) => {
+                lineno += 1;
+                let text = match std::str::from_utf8(&bytes) {
+                    Ok(t) => t,
+                    Err(_) => {
+                        let _ = write_line(
+                            &out,
+                            &error_reply(lineno, "request line is not valid UTF-8"),
+                        );
+                        continue;
+                    }
+                };
+                let line = text.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue; // §2: blank lines and comments are ignored
+                }
+                let parsed = match Json::parse(line) {
+                    Ok(j) => j,
+                    Err(e) => {
+                        let _ =
+                            write_line(&out, &error_reply(lineno, &format!("malformed JSON: {e}")));
+                        continue;
+                    }
+                };
+                if let Json::Obj(map) = &parsed {
+                    if map.contains_key("op") {
+                        if !control_frame(map, lineno, &out, shared) {
+                            return;
+                        }
+                        continue;
+                    }
+                    if map.contains_key("proto") && !map.contains_key("id") {
+                        // Handshake (§2): a mismatched revision is refused
+                        // and the connection closes.
+                        match map.get("proto").map(|v| v.as_usize()) {
+                            Some(Ok(v)) if v as u64 == PROTO_VERSION => continue,
+                            _ => {
+                                let _ = write_line(
+                                    &out,
+                                    &error_reply(
+                                        lineno,
+                                        &format!(
+                                            "unsupported protocol revision \
+                                             (server speaks {PROTO_VERSION})"
+                                        ),
+                                    ),
+                                );
+                                return;
+                            }
+                        }
+                    }
+                }
+                match FitRequest::from_json(&parsed) {
+                    Ok(req) => {
+                        shared.submitted.fetch_add(1, Ordering::SeqCst);
+                        if !answer_job(&req, fault, &mut answered_here, &out, shared) {
+                            return; // the fault severed the connection
+                        }
+                    }
+                    Err(e) => {
+                        let _ = write_line(&out, &error_reply(lineno, &e.to_string()));
+                    }
+                }
+            }
+            LineEvent::Oversized => {
+                lineno += 1;
+                let _ = write_line(
+                    &out,
+                    &error_reply(lineno, &format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+                );
+            }
+            LineEvent::Tick => continue,
+            LineEvent::Eof | LineEvent::Error(_) => return,
+        }
+    }
+}
+
+/// §6 control frames; returns `false` when the connection should close.
+fn control_frame(
+    map: &BTreeMap<String, Json>,
+    lineno: u64,
+    out: &Mutex<TcpStream>,
+    shared: &SharedState,
+) -> bool {
+    let op = match map.get("op").map(|v| v.as_str()) {
+        Some(Ok(op)) => op,
+        _ => {
+            let _ = write_line(out, &error_reply(lineno, "control frame 'op' must be a string"));
+            return true;
+        }
+    };
+    match op {
+        "ping" => {
+            let _ = write_line(
+                out,
+                &op_frame(&[
+                    ("op", Json::Str("pong".into())),
+                    ("proto", Json::Num(PROTO_VERSION as f64)),
+                ]),
+            );
+            true
+        }
+        "stats" => {
+            // The fake executes synchronously, so nothing is ever queued:
+            // every gauge a router might read is an honest zero.
+            let _ = write_line(
+                out,
+                &op_frame(&[
+                    ("op", Json::Str("stats".into())),
+                    ("submitted", Json::Num(shared.submitted.load(Ordering::SeqCst) as f64)),
+                    ("queue_depth", Json::Num(0.0)),
+                    ("shed_full", Json::Num(0.0)),
+                    ("shed_deadline", Json::Num(0.0)),
+                    ("peak_queue_depth", Json::Num(0.0)),
+                    ("connections", Json::Num(shared.accepted.load(Ordering::SeqCst) as f64)),
+                    ("active_conns", Json::Num(shared.active_conns.load(Ordering::SeqCst) as f64)),
+                    ("pending_here", Json::Num(0.0)),
+                ]),
+            );
+            true
+        }
+        "cancel" => {
+            let id = match map.get("id").map(|v| v.as_usize()) {
+                Some(Ok(id)) => id as u64,
+                _ => {
+                    let _ = write_line(
+                        out,
+                        &error_reply(lineno, "cancel needs a non-negative integer 'id'"),
+                    );
+                    return true;
+                }
+            };
+            // Synchronous execution means the job either already answered
+            // or is answering right now — `false` is always the truth.
+            let _ = write_line(
+                out,
+                &op_frame(&[
+                    ("op", Json::Str("cancelled".into())),
+                    ("id", Json::Num(id as f64)),
+                    ("cancelled", Json::Bool(false)),
+                ]),
+            );
+            true
+        }
+        "bye" => false, // replies are already written (synchronous): close
+        "shutdown" => {
+            let _ = write_line(out, &op_frame(&[("op", Json::Str("shutdown-ack".into()))]));
+            shared.stop.store(true, Ordering::SeqCst);
+            false
+        }
+        other => {
+            let _ = write_line(out, &error_reply(lineno, &format!("unknown op '{other}'")));
+            true
+        }
+    }
+}
+
+/// Answer one job, applying the connection's fault at its trigger point;
+/// returns `false` when the fault severed the connection.
+fn answer_job(
+    req: &FitRequest,
+    fault: Fault,
+    answered_here: &mut usize,
+    out: &Mutex<TcpStream>,
+    shared: &SharedState,
+) -> bool {
+    match fault {
+        Fault::DropMidReply { after } if *answered_here == after => {
+            let line = job_reply_json(req).to_string();
+            let torn = &line.as_bytes()[..line.len() / 2];
+            {
+                let mut w = out.lock().expect("fake writer poisoned");
+                let _ = w.write_all(torn); // no newline — a torn frame
+                let _ = w.flush();
+                let _ = w.shutdown(std::net::Shutdown::Both);
+            }
+            false
+        }
+        Fault::GarbleReply { after } if *answered_here == after => {
+            // Framing poison instead of the reply: a conformant client
+            // must treat the link as lost (there is no way to resync a
+            // stream whose peer emits non-protocol bytes).
+            let _ = write_line(out, "!! this is not a protocol frame !!");
+            *answered_here += 1;
+            true
+        }
+        Fault::Stall { after, dead_air } if *answered_here == after => {
+            // Dead air with the socket open: the failure mode EOF
+            // detection cannot see. Whoever is watching has to decide the
+            // peer is wedged on their own clock; by the time the nap ends
+            // the socket is usually gone and the write below fails, which
+            // ends the connection quietly.
+            std::thread::sleep(dead_air);
+            let ok = write_line(out, &job_reply_json(req).to_string()).is_ok();
+            if ok {
+                *answered_here += 1;
+                shared.answered.fetch_add(1, Ordering::SeqCst);
+            }
+            ok
+        }
+        Fault::StaleWireId { after } if *answered_here == after => {
+            // A stray reply under an id nobody asked for, then the real
+            // one: the front must ignore the stray and deliver exactly
+            // one reply for the ticket.
+            let mut stray = job_reply_json(req);
+            if let Json::Obj(m) = &mut stray {
+                m.insert("id".to_string(), Json::Num((req.id + 1_000_000) as f64));
+            }
+            let _ = write_line(out, &stray.to_string());
+            let ok = write_line(out, &job_reply_json(req).to_string()).is_ok();
+            if ok {
+                *answered_here += 1;
+                shared.answered.fetch_add(1, Ordering::SeqCst);
+            }
+            ok
+        }
+        _ => {
+            let ok = write_line(out, &job_reply_json(req).to_string()).is_ok();
+            if ok {
+                *answered_here += 1;
+                shared.answered.fetch_add(1, Ordering::SeqCst);
+            }
+            ok
+        }
+    }
+}

@@ -14,6 +14,10 @@
 #      `serve::net::control_frame`), every reply/notice op it emits, and
 #      the stats-reply keys new wire consumers depend on (`queue_depth`,
 #      the cancel ack shape) are documented in PROTOCOL.md.
+#   4. The cluster layer stays spec-anchored: every `rust/src/cluster/*.rs`
+#      module carries at least one PROTOCOL.md §-citation (whose
+#      resolution check 1 already covers), and every `[cluster]` config
+#      key in the `kpynq init-config` EXAMPLE is documented in README.md.
 set -eu
 cd "$(dirname "$0")/.."
 fail=0
@@ -86,6 +90,27 @@ for tok in $req_ops $emitted; do
     # stats keys as backticked `queue_depth`.
     if ! grep -q -e "\"$tok\"" -e "\`$tok\`" PROTOCOL.md; then
         echo "FAIL: control-frame token '$tok' (serve::net wire surface) is undocumented in PROTOCOL.md"
+        fail=1
+    fi
+done
+
+# ---- 4. cluster layer: §-citations present + [cluster] keys in README ---
+for f in rust/src/cluster/*.rs; do
+    if ! grep -q "PROTOCOL\.md §" "$f"; then
+        echo "FAIL: $f cites no PROTOCOL.md section (cluster modules must anchor to the spec)"
+        fail=1
+    fi
+done
+# The [cluster] section of config.rs's EXAMPLE is the authoritative key
+# list; each key must appear backticked in README.md.
+cluster_keys=$(sed -n '/^\[cluster\]/,/^"#/p' rust/src/config.rs | grep -oE '^[a-z_]+' | sort -u)
+if [ -z "$cluster_keys" ]; then
+    echo "FAIL: could not extract [cluster] keys from rust/src/config.rs (EXAMPLE layout changed?)"
+    fail=1
+fi
+for key in $cluster_keys; do
+    if ! grep -q "\`$key\`" README.md; then
+        echo "FAIL: [cluster] config key '$key' is undocumented in README.md"
         fail=1
     fi
 done
