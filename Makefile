@@ -9,7 +9,7 @@ PYTHON      ?= python3
 ARTIFACTS   := artifacts
 PY_SOURCES  := $(wildcard python/compile/*.py python/compile/kernels/*.py)
 
-.PHONY: all build test serve-test serve-net-test cluster-test cluster-remote-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
+.PHONY: all build test serve-test serve-net-test cluster-test cluster-remote-test mapreduce-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
 
 all: build
 
@@ -43,6 +43,13 @@ cluster-test:
 # run against both the real daemon and the double.
 cluster-remote-test:
 	cargo test -q --test cluster_remote --test protocol_conformance
+
+# Map-reduce fits (PROTOCOL.md §10): the partition-equivalence property
+# battery (sliced fit == solo fit, bit for bit, for every algorithm x
+# shard count) plus the mapreduce unit tests in the library.
+mapreduce-test:
+	cargo test -q --test mapreduce
+	cargo test -q --lib mapreduce
 
 # Docs consistency: DESIGN.md/PROTOCOL.md/EXPERIMENTS.md §-citations in the
 # source must resolve, and every serve::job wire field must be documented

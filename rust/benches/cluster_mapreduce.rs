@@ -1,0 +1,65 @@
+//! Map-reduce fit — shard-count sweep of one sliced fit
+//! (EXPERIMENTS.md §Serving, PROTOCOL.md §10).
+//!
+//! Drives `cluster::fit_sliced` — the in-process reference for the
+//! map-reduce reduction loop — over one fixed fit at increasing shard
+//! counts, and holds every row to bit-identity with the solo
+//! `kmeans::fit`. The shard states run *sequentially* on this one
+//! thread, so the sweep does not measure distributed speedup (that
+//! comes from shards being separate processes/hosts); it measures what
+//! slicing itself **costs**: per-shard bound-state duplication, the
+//! per-epoch exact-sum reduction, and the loss of cross-slice pruning
+//! (each shard's triangle-inequality bounds only see its own slice).
+//! Read the `vs solo` column as reduction overhead — the price paid per
+//! epoch for a partitioning that provably cannot move the bits. Knobs:
+//!
+//! * `KPYNQ_BENCH_POINTS` — dataset size (default 20 000)
+//! * `KPYNQ_MAPREDUCE_K`  — cluster count (default 16)
+
+use std::time::Instant;
+
+use kpynq::cluster::fit_sliced;
+use kpynq::data::synth;
+use kpynq::kmeans::{self, Algorithm, KMeansConfig};
+use kpynq::serve::job::assignments_checksum;
+use kpynq::util::bench::Table;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let points = env_usize("KPYNQ_BENCH_POINTS", 20_000);
+    let k = env_usize("KPYNQ_MAPREDUCE_K", 16);
+    let ds = synth::blobs(points, 16, 8, 42);
+    let cfg = KMeansConfig { k, seed: 7, max_iters: 50, ..Default::default() };
+
+    let t0 = Instant::now();
+    let solo = kmeans::fit(Algorithm::Yinyang, &ds, &cfg).expect("solo fit");
+    let solo_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let want_fnv = assignments_checksum(&solo.assignments);
+    println!(
+        "cluster_mapreduce: {points} points x d=16, k={k}, yinyang; \
+         solo {solo_ms:.1} ms, {} iters",
+        solo.iterations
+    );
+
+    let mut t = Table::new(&["shards", "wall ms", "vs solo", "iters", "bit-identical"]);
+    for shards in [1usize, 2, 4, 8] {
+        let t1 = Instant::now();
+        let fit = fit_sliced(Algorithm::Yinyang, &ds, &cfg, shards).expect("sliced fit");
+        let ms = t1.elapsed().as_secs_f64() * 1e3;
+        let identical = assignments_checksum(&fit.assignments) == want_fnv
+            && fit.inertia.to_bits() == solo.inertia.to_bits()
+            && fit.iterations == solo.iterations;
+        t.row(vec![
+            shards.to_string(),
+            format!("{ms:.1}"),
+            format!("{:.2}x", ms / solo_ms),
+            fit.iterations.to_string(),
+            identical.to_string(),
+        ]);
+        assert!(identical, "{shards}-shard slicing diverged from the solo fit");
+    }
+    t.print();
+}

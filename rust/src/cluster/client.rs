@@ -217,6 +217,15 @@ impl Shared {
         Ok(wire_id)
     }
 
+    /// Send a raw frame verbatim — no wire-id remapping. The map-reduce
+    /// driver (PROTOCOL.md §10) uses this for `partial_fit` /
+    /// `centroid_sync`, whose ids it manages itself; the replies arrive
+    /// as [`ClientEvent::Notice`] frames.
+    fn send_frame(&self, frame: &Json) -> Result<()> {
+        write_line(&self.writer, &frame.to_string())?;
+        Ok(())
+    }
+
     fn send_op(&self, op: &str) -> Result<()> {
         let mut m = std::collections::BTreeMap::new();
         m.insert("op".to_string(), Json::Str(op.into()));
@@ -333,6 +342,14 @@ impl ClientSender {
     /// paired receiver yields its [`ClientEvent::Response`] later.
     pub fn submit(&self, req: &FitRequest) -> Result<u64> {
         self.shared.submit(req)
+    }
+
+    /// Send a raw protocol frame verbatim (no id remapping) — the
+    /// map-reduce driver's `partial_fit` / `centroid_sync` path
+    /// (PROTOCOL.md §10). Replies to ops the classifier does not know
+    /// arrive as [`ClientEvent::Notice`].
+    pub fn send_frame(&self, frame: &Json) -> Result<()> {
+        self.shared.send_frame(frame)
     }
 
     /// Request a `stats` reply (arrives as [`ClientEvent::Stats`]).
@@ -509,6 +526,11 @@ impl ClientConn {
     /// Submit one job; returns the wire id it travels under.
     pub fn submit(&mut self, req: &FitRequest) -> Result<u64> {
         self.sender.submit(req)
+    }
+
+    /// Send a raw protocol frame verbatim (see [`ClientSender::send_frame`]).
+    pub fn send_frame(&self, frame: &Json) -> Result<()> {
+        self.sender.send_frame(frame)
     }
 
     /// Submitted-but-unanswered jobs on this connection.

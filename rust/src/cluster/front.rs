@@ -33,6 +33,12 @@
 //! * **Cancel forwarding.** `{"op":"cancel"}` resolves the ticket's
 //!   owning shard and round-trips the cancel there, so the ack keeps the
 //!   single-daemon meaning (PROTOCOL.md §6).
+//! * **Map-reduce mode.** With `fit_mode = map-reduce`
+//!   ([`super::FitMode::MapReduce`]), a job is not routed whole to one
+//!   shard: its *points* are sliced across every shard and the front
+//!   runs the iteration barrier itself via [`MapReduceFit`]
+//!   (PROTOCOL.md §10) — one fit scales with shard count, and the reply
+//!   is still bit-identical to a solo run.
 //!
 //! ```no_run
 //! use kpynq::cluster::{Cluster, ClusterConfig};
@@ -54,18 +60,19 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
-use crate::serve::job::{FitRequest, FitResponse};
+use crate::serve::job::{FitRequest, FitResponse, FitSummary, JobStatus};
 use crate::serve::net::{advertised_backends, Daemon, DaemonHandle, FrontCore, NetConfig};
 use crate::serve::queue::QueueStats;
 use crate::serve::report::ResponseAccumulator;
 use crate::serve::{ServeConfig, ServeReport};
 use crate::util::json::Json;
 
-use super::client::{ClientConn, ClientEvent};
+use super::client::{ClientConn, ClientEvent, ReconnectPolicy};
+use super::mapreduce::MapReduceFit;
 use super::remote::RemoteFleet;
 use super::router::{Router, DEAD};
 use super::supervisor::{Supervisor, SupervisorConfig};
-use super::ClusterConfig;
+use super::{ClusterConfig, FitMode};
 
 /// Monitor poll period: health sweep + per-shard `stats` refresh.
 const POLL: Duration = Duration::from_millis(250);
@@ -260,6 +267,16 @@ pub(crate) struct ClusterCore {
     admission_cap: usize,
     /// Hung-link watchdog window (see [`ClusterConfig::health_timeout`]).
     health_timeout: Duration,
+    /// How client jobs map onto shards (see [`super::FitMode`]).
+    fit_mode: FitMode,
+    /// Shard daemon addresses in shard order. The map-reduce driver dials
+    /// its own dedicated per-shard links instead of sharing the
+    /// forwarding links — `partial_fit` state is connection-scoped
+    /// (PROTOCOL.md §10), so a fit must own the connection it lives on.
+    mapreduce_addrs: Vec<String>,
+    reconnect: ReconnectPolicy,
+    /// Re-dispatches allowed per shard within one map-reduce fit.
+    max_restarts: u32,
     started: Instant,
 }
 
@@ -272,6 +289,15 @@ impl ClusterCore {
         // shape — the bound is still finite either way, which is what
         // matters for front-door memory.)
         let per_shard = cfg.serve.queue_capacity + cfg.serve.workers * cfg.serve.max_batch;
+        let mapreduce_addrs = if cfg.remote_shards.is_empty() {
+            (0..shards)
+                .map(|i| {
+                    format!("unix:{}", cfg.socket_dir.join(format!("shard-{i}.sock")).display())
+                })
+                .collect()
+        } else {
+            cfg.remote_shards.clone()
+        };
         ClusterCore {
             serve: cfg.serve.clone(),
             shard_count: shards,
@@ -286,8 +312,47 @@ impl ClusterCore {
             admission_free: Condvar::new(),
             admission_cap: (shards * per_shard).max(1),
             health_timeout: cfg.health_timeout,
+            fit_mode: cfg.fit_mode,
+            mapreduce_addrs,
+            reconnect: cfg.reconnect.clone(),
+            max_restarts: cfg.max_restarts,
             started: Instant::now(),
         }
+    }
+
+    /// Map-reduce dispatch (PROTOCOL.md §10): run the whole sliced fit
+    /// right here — on the submitting connection's reader thread, the
+    /// same inline-compute shape the shard side uses — over dedicated
+    /// per-shard links, and deliver the assembled response. Jobs
+    /// pipelined on one client connection therefore serialize; concurrent
+    /// client connections run concurrent map-reduce fits. The route's
+    /// shard stays [`UNROUTED`] for the fit's whole life, so a forwarded
+    /// cancel answers `false` — map-reduce fits are not cancellable
+    /// mid-iteration.
+    fn dispatch_mapreduce(&self, ticket: u64, req: FitRequest) {
+        let started = Instant::now();
+        let backend = req.backend_name.clone();
+        let mut mr = MapReduceFit::new(req, self.mapreduce_addrs.clone());
+        mr.reconnect = self.reconnect.clone();
+        mr.shard_timeout = self.health_timeout;
+        mr.redispatch_budget = self.max_restarts.max(1);
+        let resp = match mr.run() {
+            Ok(fit) => FitResponse {
+                id: ticket,
+                status: JobStatus::Ok,
+                detail: String::new(),
+                backend,
+                worker: 0,
+                batch_size: 1,
+                queue_seconds: 0.0,
+                service_seconds: started.elapsed().as_secs_f64(),
+                summary: Some(FitSummary::of(&fit)),
+                fit: Some(fit),
+                report: None,
+            },
+            Err(e) => FitResponse::failed(ticket, &backend, 0, 0, 0.0, &e),
+        };
+        self.deliver(resp);
     }
 
     /// Route one ticketed request onto a live shard (recording it for
@@ -522,7 +587,10 @@ impl FrontCore for ClusterCore {
         );
         let mut req = req;
         req.id = ticket;
-        self.dispatch(ticket, req);
+        match self.fit_mode {
+            FitMode::Request => self.dispatch(ticket, req),
+            FitMode::MapReduce => self.dispatch_mapreduce(ticket, req),
+        }
         ticket
     }
 

@@ -1,0 +1,543 @@
+//! The front half of a map-reduce fit (PROTOCOL.md §10): partition the
+//! *points* of one clustering job across shards, reduce their per-cluster
+//! partial sums into new centroids each iteration, and rebroadcast until
+//! convergence.
+//!
+//! Two drivers share the reduction arithmetic:
+//!
+//! * [`fit_sliced`] — the in-process reference: `S` shard-side
+//!   [`PartialFitState`]s driven directly, no sockets. This is what the
+//!   partition-equivalence battery (`rust/tests/mapreduce.rs`) runs
+//!   against the solo `kmeans::fit`, and what the `cluster_mapreduce`
+//!   bench sweeps.
+//! * [`MapReduceFit`] — the wire driver the cluster front uses
+//!   (`kpynq cluster --mode map-reduce`): one dedicated protocol
+//!   connection per shard, `partial_fit` / `centroid_sync` frames, a
+//!   straggler watchdog (read timeout → force-close → re-dispatch), and
+//!   shard-loss recovery that replays the reduced-centroid history so a
+//!   fresh shard lands on exactly the epoch its dead predecessor held.
+//!
+//! **Why the results are bit-identical to a solo fit.** Every per-point
+//! assignment decision in all four algorithms is a pure function of the
+//! point, its own bounds, and the shared centroid geometry — so slicing
+//! the point loop changes nothing. The only cross-point arithmetic is the
+//! reduction, and that runs on [`PartialAccumulator`]/[`ExactSum`]
+//! superaccumulators whose merges are exactly associative: any shard
+//! count, any merge order, any re-dispatch produces the same canonical
+//! sums, hence the same `f64` centroids, hence the same next iteration.
+//! Recovery is idempotent for the same reason — a replayed shard
+//! recomputes, from the same deterministic inputs, exactly the state the
+//! lost shard held.
+
+use std::time::Duration;
+
+use crate::coordinator::driver::PartialFitState;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::kmeans::reduce::{
+    matrix_from_hex, matrix_to_hex, u32s_from_hex, ExactSum, PartialAccumulator,
+};
+use crate::kmeans::{centroid_drifts, Algorithm, FitResult, IterStats, KMeansConfig, RunStats};
+use crate::serve::job::FitRequest;
+use crate::util::json::Json;
+use crate::util::matrix::Matrix;
+
+use super::client::{ClientConn, ClientEvent, ReconnectPolicy};
+
+/// Run one fit with its points partitioned across `shards` in-process
+/// partial states — the reference reduction loop, bit-identical to
+/// `kmeans::fit` with the same inputs (the partition-equivalence battery
+/// asserts this for every algorithm × shard count).
+///
+/// Work counters are *not* reproduced: distributed bound state means each
+/// shard prunes against its own slice, so `stats` carries only the
+/// per-iteration `max_drift` (which is partition-invariant).
+pub fn fit_sliced(
+    algo: Algorithm,
+    ds: &Dataset,
+    cfg: &KMeansConfig,
+    shards: usize,
+) -> Result<FitResult> {
+    if shards == 0 {
+        return Err(Error::Config("fit_sliced needs at least one shard".into()));
+    }
+    let mut states = Vec::with_capacity(shards);
+    for i in 0..shards {
+        states.push(PartialFitState::new(algo, ds.clone(), cfg.clone(), i, shards)?);
+    }
+    let (k, d) = (cfg.k, ds.d());
+    let mut prev = states[0].init_centroids().clone();
+    let mut stats = RunStats::default();
+    let (centroids, iterations, converged) = loop {
+        let epoch = states[0].epoch();
+        let mut acc = PartialAccumulator::new(k, d);
+        for st in &states {
+            acc.merge(&st.partial())?;
+        }
+        let (new_c, _) = acc.finalize(&prev);
+        let (_, max_drift) = centroid_drifts(&prev, &new_c);
+        stats.push(IterStats { max_drift, ..Default::default() });
+        let converged = (max_drift as f64) <= cfg.tol;
+        if converged || epoch >= cfg.max_iters {
+            break (new_c, epoch, converged);
+        }
+        for st in &mut states {
+            st.apply_sync(&new_c)?;
+        }
+        prev = new_c;
+    };
+    let mut assignments = Vec::with_capacity(ds.n());
+    let mut inertia = ExactSum::new();
+    for st in &states {
+        let (a, s) = st.finish(&centroids)?;
+        assignments.extend_from_slice(&a);
+        inertia.merge(&s);
+    }
+    Ok(FitResult {
+        centroids,
+        assignments,
+        inertia: inertia.value(),
+        iterations,
+        converged,
+        stats,
+    })
+}
+
+/// One shard's parsed `partial` reply (PROTOCOL.md §10).
+struct PartialMsg {
+    d: usize,
+    counts: Vec<u64>,
+    sums: String,
+    /// Present only on replies to `partial_fit` (the initial centroids
+    /// every shard derives identically — how the front learns `c_0`
+    /// without ever loading the dataset).
+    init: Option<String>,
+}
+
+/// One shard's parsed `partial_done` reply.
+struct DoneMsg {
+    lo: usize,
+    hi: usize,
+    assignments: Vec<u32>,
+    inertia: ExactSum,
+}
+
+/// What one blocking read produced for a shard link.
+enum Read<T> {
+    Got(T),
+    /// EOF, read error, or the straggler watchdog fired — the slice must
+    /// be re-dispatched.
+    Lost,
+}
+
+/// Per-shard wire state: the dedicated connection plus its remaining
+/// re-dispatch budget.
+struct ShardSlot {
+    addr: String,
+    conn: ClientConn,
+    budget: u32,
+}
+
+/// The socket-level map-reduce driver (PROTOCOL.md §10): owns the
+/// iteration barrier across `addrs.len()` shard daemons, the straggler
+/// watchdog, and shard-loss recovery. Construct with [`MapReduceFit::new`],
+/// adjust the public knobs, then [`MapReduceFit::run`].
+///
+/// Sizing note: partial frames carry `k·d` exact sums at 160 hex chars
+/// each and `partial_done` carries the slice's assignment vector, all
+/// under the protocol's 64 KiB line cap — map-reduce jobs are bounded to
+/// roughly `k·d ≤ 400` and ~8000 points per slice at revision 1 framing
+/// (PROTOCOL.md §10 documents the limit).
+pub struct MapReduceFit {
+    /// The §3 job body; `req.id` is used verbatim as the wire id on every
+    /// §10 frame (no remapping — this driver owns its connections).
+    pub req: FitRequest,
+    pub algo: Algorithm,
+    /// One shard daemon address per slice, in shard order.
+    pub addrs: Vec<String>,
+    pub reconnect: ReconnectPolicy,
+    /// Straggler watchdog: a shard that produces nothing on its link for
+    /// this long is force-closed and its slice re-dispatched.
+    pub shard_timeout: Duration,
+    /// Re-dispatches allowed per shard before the fit fails.
+    pub redispatch_budget: u32,
+}
+
+impl MapReduceFit {
+    pub fn new(req: FitRequest, addrs: Vec<String>) -> MapReduceFit {
+        MapReduceFit {
+            req,
+            algo: Algorithm::Yinyang,
+            addrs,
+            reconnect: ReconnectPolicy::default(),
+            shard_timeout: Duration::from_secs(30),
+            redispatch_budget: 3,
+        }
+    }
+
+    /// Drive the fit to completion: fan out `partial_fit`, reduce each
+    /// epoch's partials into new centroids, rebroadcast via
+    /// `centroid_sync`, and seal with `done: true` once converged (or at
+    /// the iteration cap). Returns the assembled [`FitResult`] —
+    /// bit-identical to the solo fit with the same request parameters.
+    pub fn run(&self) -> Result<FitResult> {
+        let s = self.addrs.len();
+        if s == 0 {
+            return Err(Error::Config("map-reduce fit needs at least one shard".into()));
+        }
+        let k = self.req.kmeans.k;
+        let mut slots = Vec::with_capacity(s);
+        for addr in &self.addrs {
+            slots.push(ShardSlot {
+                addr: addr.clone(),
+                conn: self.connect(addr)?,
+                budget: self.redispatch_budget,
+            });
+        }
+        for (i, slot) in slots.iter_mut().enumerate() {
+            // A failed send surfaces as a lost link at collect time.
+            let _ = slot.conn.send_frame(&self.partial_fit_frame(i, s, &[]));
+        }
+
+        // Reduced centroid sets c_1..c_{t-1}, hex, oldest first — exactly
+        // the §10 `history` a re-dispatched shard replays.
+        let mut history: Vec<String> = Vec::new();
+        let mut init: Option<Matrix> = None;
+        let mut d = 0usize;
+        let mut prev: Option<Matrix> = None;
+        let mut stats = RunStats::default();
+        let (centroids, iterations, converged) = loop {
+            let epoch = history.len() + 1;
+            let mut acc: Option<PartialAccumulator> = None;
+            for i in 0..s {
+                let msg = self.collect_partial(&mut slots[i], i, s, epoch, &history)?;
+                if init.is_none() {
+                    d = msg.d;
+                    let hex = msg.init.as_ref().ok_or_else(|| {
+                        Error::Parse("first partial reply carries no init centroids".into())
+                    })?;
+                    init = Some(matrix_from_hex(hex, k, d)?);
+                }
+                let part = PartialAccumulator::from_wire(k, d, &msg.counts, &msg.sums)?;
+                match &mut acc {
+                    None => acc = Some(part),
+                    Some(a) => a.merge(&part)?,
+                }
+            }
+            let acc = acc.expect("at least one shard reduced");
+            let base = prev.as_ref().unwrap_or_else(|| init.as_ref().expect("init learned"));
+            let (new_c, _) = acc.finalize(base);
+            let (_, max_drift) = centroid_drifts(base, &new_c);
+            stats.push(IterStats { max_drift, ..Default::default() });
+            let converged = (max_drift as f64) <= self.req.kmeans.tol;
+            if converged || epoch >= self.req.kmeans.max_iters {
+                break (new_c, epoch, converged);
+            }
+            let frame = self.sync_frame(epoch, &new_c, false);
+            for slot in &mut slots {
+                let _ = slot.conn.send_frame(&frame);
+            }
+            history.push(matrix_to_hex(&new_c));
+            prev = Some(new_c);
+        };
+
+        // Done phase: seal every slice against the final centroids.
+        let done = self.sync_frame(iterations, &centroids, true);
+        for slot in &mut slots {
+            let _ = slot.conn.send_frame(&done);
+        }
+        let mut assignments = Vec::new();
+        let mut inertia = ExactSum::new();
+        let mut cursor = 0usize;
+        for (i, slot) in slots.iter_mut().enumerate() {
+            let msg = self.collect_done(slot, i, s, iterations, &history, &done)?;
+            if msg.lo != cursor {
+                return Err(Error::Parse(format!(
+                    "shard {i} sealed slice [{}, {}), expected it to start at {cursor}",
+                    msg.lo, msg.hi
+                )));
+            }
+            cursor = msg.hi;
+            assignments.extend_from_slice(&msg.assignments);
+            inertia.merge(&msg.inertia);
+        }
+        Ok(FitResult {
+            centroids,
+            assignments,
+            inertia: inertia.value(),
+            iterations,
+            converged,
+            stats,
+        })
+    }
+
+    fn connect(&self, addr: &str) -> Result<ClientConn> {
+        let conn = ClientConn::connect_with_backoff(addr, &self.reconnect, || None)?;
+        conn.set_read_timeout(Some(self.shard_timeout))?;
+        Ok(conn)
+    }
+
+    /// The §10 `partial_fit` frame: the §3 job body plus the op-specific
+    /// keys (and the replay history when re-dispatching).
+    fn partial_fit_frame(&self, shard_index: usize, shard_count: usize, history: &[String]) -> Json {
+        let mut m = match self.req.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("FitRequest::to_json returns an object"),
+        };
+        m.insert("op".into(), Json::Str("partial_fit".into()));
+        m.insert("algorithm".into(), Json::Str(self.algo.name().into()));
+        m.insert("shard_index".into(), Json::Num(shard_index as f64));
+        m.insert("shard_count".into(), Json::Num(shard_count as f64));
+        if !history.is_empty() {
+            m.insert("history".into(), Json::Str(history.concat()));
+        }
+        Json::Obj(m)
+    }
+
+    fn sync_frame(&self, epoch: usize, centroids: &Matrix, done: bool) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("op".into(), Json::Str("centroid_sync".into()));
+        m.insert("id".into(), Json::Num(self.req.id as f64));
+        m.insert("epoch".into(), Json::Num(epoch as f64));
+        m.insert("centroids".into(), Json::Str(matrix_to_hex(centroids)));
+        m.insert("done".into(), Json::Bool(done));
+        Json::Obj(m)
+    }
+
+    /// Await shard `i`'s `partial` for `epoch`; on loss, re-dispatch the
+    /// slice (with history) until the budget runs out.
+    fn collect_partial(
+        &self,
+        slot: &mut ShardSlot,
+        i: usize,
+        s: usize,
+        epoch: usize,
+        history: &[String],
+    ) -> Result<PartialMsg> {
+        match self.await_partial(slot, i, epoch)? {
+            Read::Got(msg) => Ok(msg),
+            Read::Lost => self.redispatch(slot, i, s, epoch, history),
+        }
+    }
+
+    /// Re-dispatch shard `i`'s slice onto a fresh connection: reconnect
+    /// under the backoff policy, resend `partial_fit` with the reduced-
+    /// centroid history, and await the replayed `partial` — which lands on
+    /// exactly the epoch the lost incarnation held (replay is
+    /// deterministic, so recovery is idempotent; PROTOCOL.md §10).
+    fn redispatch(
+        &self,
+        slot: &mut ShardSlot,
+        i: usize,
+        s: usize,
+        epoch: usize,
+        history: &[String],
+    ) -> Result<PartialMsg> {
+        loop {
+            if slot.budget == 0 {
+                return Err(Error::Config(format!(
+                    "shard {i} ({}) lost and re-dispatch budget exhausted",
+                    slot.addr
+                )));
+            }
+            slot.budget -= 1;
+            slot.conn.shutdown_handle().shutdown();
+            slot.conn = match self.connect(&slot.addr) {
+                Ok(c) => c,
+                Err(e) => {
+                    if slot.budget == 0 {
+                        return Err(e);
+                    }
+                    continue;
+                }
+            };
+            let _ = slot.conn.send_frame(&self.partial_fit_frame(i, s, history));
+            if let Read::Got(msg) = self.await_partial(slot, i, epoch)? {
+                return Ok(msg);
+            }
+        }
+    }
+
+    /// Await shard `i`'s `partial_done`; on loss, re-dispatch (full
+    /// history replay), discard the replayed `partial`, resend the done
+    /// sync, and await again.
+    fn collect_done(
+        &self,
+        slot: &mut ShardSlot,
+        i: usize,
+        s: usize,
+        epoch: usize,
+        history: &[String],
+        done_frame: &Json,
+    ) -> Result<DoneMsg> {
+        loop {
+            match self.await_done(slot, i)? {
+                Read::Got(msg) => return Ok(msg),
+                Read::Lost => {
+                    // The replayed partial (epoch == `epoch`) is consumed
+                    // and discarded here; its sums were already reduced.
+                    self.redispatch(slot, i, s, epoch, history)?;
+                    let _ = slot.conn.send_frame(done_frame);
+                }
+            }
+        }
+    }
+
+    /// One blocking read loop for a `partial` frame. Protocol-error
+    /// replies are fatal (the shard rejected a frame deterministically —
+    /// re-dispatching would reproduce the rejection); EOF, read errors and
+    /// watchdog ticks report the link lost.
+    fn await_partial(&self, slot: &mut ShardSlot, i: usize, epoch: usize) -> Result<Read<PartialMsg>> {
+        loop {
+            match slot.conn.next_event() {
+                Ok(ClientEvent::Notice(j)) => {
+                    let op = j.get("op").ok().and_then(|v| v.as_str().ok().map(str::to_string));
+                    if op.as_deref() == Some("partial") {
+                        return Ok(Read::Got(self.parse_partial(&j, i, epoch)?));
+                    }
+                    // Unrelated notices (idle-timeout warnings etc.): skip.
+                }
+                Ok(ClientEvent::ProtocolError(j)) => {
+                    let msg = j
+                        .get("error")
+                        .ok()
+                        .and_then(|v| v.as_str().ok().map(str::to_string))
+                        .unwrap_or_else(|| j.to_string());
+                    return Err(Error::Parse(format!("shard {i} rejected frame: {msg}")));
+                }
+                Ok(ClientEvent::Tick) => {
+                    // Straggler watchdog: force-close so both halves EOF,
+                    // then let the caller re-dispatch.
+                    slot.conn.shutdown_handle().shutdown();
+                    return Ok(Read::Lost);
+                }
+                Ok(ClientEvent::Eof) | Err(_) => return Ok(Read::Lost),
+                Ok(_) => {} // pongs, job responses: not ours, skip
+            }
+        }
+    }
+
+    fn await_done(&self, slot: &mut ShardSlot, i: usize) -> Result<Read<DoneMsg>> {
+        loop {
+            match slot.conn.next_event() {
+                Ok(ClientEvent::Notice(j)) => {
+                    let op = j.get("op").ok().and_then(|v| v.as_str().ok().map(str::to_string));
+                    if op.as_deref() == Some("partial_done") {
+                        return Ok(Read::Got(self.parse_done(&j, i)?));
+                    }
+                }
+                Ok(ClientEvent::ProtocolError(j)) => {
+                    let msg = j
+                        .get("error")
+                        .ok()
+                        .and_then(|v| v.as_str().ok().map(str::to_string))
+                        .unwrap_or_else(|| j.to_string());
+                    return Err(Error::Parse(format!("shard {i} rejected frame: {msg}")));
+                }
+                Ok(ClientEvent::Tick) => {
+                    slot.conn.shutdown_handle().shutdown();
+                    return Ok(Read::Lost);
+                }
+                Ok(ClientEvent::Eof) | Err(_) => return Ok(Read::Lost),
+                Ok(_) => {}
+            }
+        }
+    }
+
+    fn parse_partial(&self, j: &Json, shard_index: usize, epoch: usize) -> Result<PartialMsg> {
+        if j.get("id")?.as_usize()? as u64 != self.req.id {
+            return Err(Error::Parse("partial reply carries a foreign id".into()));
+        }
+        if j.get("shard_index")?.as_usize()? != shard_index {
+            return Err(Error::Parse(format!(
+                "partial reply from the wrong shard (expected {shard_index})"
+            )));
+        }
+        let got = j.get("epoch")?.as_usize()?;
+        if got != epoch {
+            return Err(Error::Parse(format!(
+                "partial reply for epoch {got}, expected {epoch}"
+            )));
+        }
+        let counts = j
+            .get("counts")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_usize()? as u64))
+            .collect::<Result<Vec<u64>>>()?;
+        Ok(PartialMsg {
+            d: j.get("d")?.as_usize()?,
+            counts,
+            sums: j.get("sums")?.as_str()?.to_string(),
+            init: j.get("init").ok().and_then(|v| v.as_str().ok().map(str::to_string)),
+        })
+    }
+
+    fn parse_done(&self, j: &Json, shard_index: usize) -> Result<DoneMsg> {
+        if j.get("id")?.as_usize()? as u64 != self.req.id {
+            return Err(Error::Parse("partial_done reply carries a foreign id".into()));
+        }
+        if j.get("shard_index")?.as_usize()? != shard_index {
+            return Err(Error::Parse(format!(
+                "partial_done reply from the wrong shard (expected {shard_index})"
+            )));
+        }
+        Ok(DoneMsg {
+            lo: j.get("lo")?.as_usize()?,
+            hi: j.get("hi")?.as_usize()?,
+            assignments: u32s_from_hex(j.get("assignments")?.as_str()?)?,
+            inertia: ExactSum::from_hex(j.get("inertia")?.as_str()?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kmeans::{self, KMeansConfig};
+    use crate::serve::job::assignments_checksum;
+
+    #[test]
+    fn one_shard_slicing_is_the_solo_fit() {
+        let ds = synth::blobs(200, 8, 4, 7);
+        let cfg = KMeansConfig { k: 4, seed: 11, ..Default::default() };
+        for algo in Algorithm::ALL {
+            let solo = kmeans::fit(algo, &ds, &cfg).unwrap();
+            let sliced = fit_sliced(algo, &ds, &cfg, 1).unwrap();
+            assert_eq!(solo.assignments, sliced.assignments, "{}", algo.name());
+            assert_eq!(
+                solo.centroids.as_slice(),
+                sliced.centroids.as_slice(),
+                "{}",
+                algo.name()
+            );
+            assert_eq!(solo.inertia.to_bits(), sliced.inertia.to_bits(), "{}", algo.name());
+            assert_eq!(
+                assignments_checksum(&solo.assignments),
+                assignments_checksum(&sliced.assignments)
+            );
+        }
+    }
+
+    #[test]
+    fn more_shards_than_points_leaves_empty_slices_harmless() {
+        // n=3 across 5 shards: two slices are empty; their partials are
+        // all-zero and must not poison the reduction with NaNs.
+        let ds = synth::blobs(3, 2, 2, 5);
+        let cfg = KMeansConfig { k: 2, seed: 3, max_iters: 10, ..Default::default() };
+        let solo = kmeans::fit(Algorithm::Lloyd, &ds, &cfg).unwrap();
+        let sliced = fit_sliced(Algorithm::Lloyd, &ds, &cfg, 5).unwrap();
+        assert_eq!(solo.assignments, sliced.assignments);
+        assert_eq!(solo.centroids.as_slice(), sliced.centroids.as_slice());
+        assert!(sliced.centroids.as_slice().iter().all(|v| v.is_finite()));
+        assert_eq!(solo.inertia.to_bits(), sliced.inertia.to_bits());
+    }
+
+    #[test]
+    fn zero_shards_is_a_config_error() {
+        let ds = synth::blobs(10, 2, 2, 1);
+        let cfg = KMeansConfig { k: 2, ..Default::default() };
+        assert!(fit_sliced(Algorithm::Lloyd, &ds, &cfg, 0).is_err());
+    }
+}

@@ -47,6 +47,7 @@
 
 pub mod client;
 pub mod front;
+pub mod mapreduce;
 pub mod remote;
 pub mod router;
 pub mod supervisor;
@@ -59,9 +60,43 @@ use crate::serve::ServeConfig;
 
 pub use client::{ClientConn, ClientEvent, LinkShutdown, ReconnectPolicy, ShardStats};
 pub use front::{Cluster, ClusterHandle};
+pub use mapreduce::{fit_sliced, MapReduceFit};
 pub use remote::RemoteFleet;
 pub use router::Router;
 pub use supervisor::Supervisor;
+
+/// How the front turns one client job into shard work (PROTOCOL.md §10).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FitMode {
+    /// Request-parallel (the original mode): each job is routed whole to
+    /// one shard; throughput scales with *concurrent* jobs.
+    #[default]
+    Request,
+    /// Data-parallel map-reduce: each job's *points* are sliced across
+    /// every shard; the front reduces per-cluster partial sums into new
+    /// centroids each iteration ([`MapReduceFit`]). A single fit scales
+    /// with shard count, and the result stays bit-identical to a solo fit.
+    MapReduce,
+}
+
+impl FitMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            FitMode::Request => "request",
+            FitMode::MapReduce => "map-reduce",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<FitMode> {
+        match name {
+            "request" => Ok(FitMode::Request),
+            "map-reduce" => Ok(FitMode::MapReduce),
+            other => Err(Error::Config(format!(
+                "unknown fit_mode '{other}' (expected 'request' or 'map-reduce')"
+            ))),
+        }
+    }
+}
 
 /// Cluster shape (the `[cluster]` config section + `kpynq cluster` flags).
 #[derive(Clone, Debug)]
@@ -108,6 +143,10 @@ pub struct ClusterConfig {
     /// The `kpynq` binary to exec as shards (local mode; defaults to the
     /// current executable).
     pub program: PathBuf,
+    /// How client jobs map onto shards: [`FitMode::Request`] routes each
+    /// job whole to one shard; [`FitMode::MapReduce`] slices every job's
+    /// points across all shards (PROTOCOL.md §10).
+    pub fit_mode: FitMode,
 }
 
 impl Default for ClusterConfig {
@@ -121,6 +160,7 @@ impl Default for ClusterConfig {
             socket_dir: default_socket_dir(),
             max_restarts: 3,
             program: supervisor::default_program(),
+            fit_mode: FitMode::default(),
         }
     }
 }
@@ -197,6 +237,15 @@ mod tests {
         let bad_watchdog =
             ClusterConfig { health_timeout: Duration::ZERO, ..Default::default() };
         assert!(bad_watchdog.validate().is_err());
+    }
+
+    #[test]
+    fn fit_mode_names_round_trip() {
+        for mode in [FitMode::Request, FitMode::MapReduce] {
+            assert_eq!(FitMode::from_name(mode.name()).unwrap(), mode);
+        }
+        assert!(FitMode::from_name("mapreduce").is_err());
+        assert_eq!(FitMode::default(), FitMode::Request);
     }
 
     #[test]

@@ -78,6 +78,10 @@ pub struct RunConfig {
     pub cluster_reconnect_cap_ms: u64,
     /// Cluster: hard bound on total backoff sleep per (re)connect, ms.
     pub cluster_reconnect_total_wait_ms: u64,
+    /// Cluster: how jobs map onto shards — "request" routes each job
+    /// whole to one shard, "map-reduce" slices every job's points across
+    /// all shards (PROTOCOL.md §10).
+    pub cluster_fit_mode: String,
 }
 
 impl Default for RunConfig {
@@ -112,6 +116,7 @@ impl Default for RunConfig {
             cluster_reconnect_base_ms: 20,
             cluster_reconnect_cap_ms: 250,
             cluster_reconnect_total_wait_ms: 10_000,
+            cluster_fit_mode: "request".into(),
         }
     }
 }
@@ -163,6 +168,7 @@ reconnect_attempts = 45  # link (re)connect attempts per loss
 reconnect_base_ms = 20   # first retry delay (doubles per attempt)
 reconnect_cap_ms = 250   # backoff delay cap
 reconnect_total_wait_ms = 10000  # hard bound on total backoff sleep per (re)connect
+fit_mode = "request"     # request (route each job to one shard) | map-reduce (slice each job across all shards)
 "#;
 
 impl RunConfig {
@@ -300,6 +306,9 @@ impl RunConfig {
         if let Some(v) = toml::get(&doc, "cluster", "reconnect_total_wait_ms") {
             cfg.cluster_reconnect_total_wait_ms = v.as_usize()? as u64;
         }
+        if let Some(v) = toml::get(&doc, "cluster", "fit_mode") {
+            cfg.cluster_fit_mode = v.as_str()?.to_string();
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -350,6 +359,7 @@ impl RunConfig {
                 PathBuf::from(&self.cluster_socket_dir)
             },
             max_restarts: self.cluster_max_restarts as u32,
+            fit_mode: crate::cluster::FitMode::from_name(&self.cluster_fit_mode)?,
             ..Default::default()
         };
         cfg.validate()?;
@@ -524,6 +534,15 @@ mod tests {
         assert!(RunConfig::from_toml("[cluster]\nremote_shards = [1, 2]").is_err());
         assert!(RunConfig::from_toml("[cluster]\nremote_shards = \"hosta:7071\"").is_err());
         assert!(RunConfig::from_toml("[cluster]\nreconnect_attempts = 0").is_err());
+    }
+
+    #[test]
+    fn cluster_fit_mode_parses_and_rejects_unknowns() {
+        let cfg = RunConfig::from_toml("[cluster]\nfit_mode = \"map-reduce\"").unwrap();
+        assert_eq!(cfg.cluster_config().unwrap().fit_mode, crate::cluster::FitMode::MapReduce);
+        let d = RunConfig::default().cluster_config().unwrap();
+        assert_eq!(d.fit_mode, crate::cluster::FitMode::Request);
+        assert!(RunConfig::from_toml("[cluster]\nfit_mode = \"mapreduce\"").is_err());
     }
 
     #[test]

@@ -36,15 +36,17 @@ use std::time::Instant;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::hw::{AccelConfig, Accelerator};
-use crate::kmeans::bounds::{deflate_lb, filter_safe, inflate_ub};
+use crate::kmeans::bounds::{deflate_lb, filter_safe, group_max_drifts, inflate_ub};
 use crate::kmeans::hamerly::half_nearest_other;
+use crate::kmeans::lloyd::scan_all;
 use crate::kmeans::metrics::IterStats;
+use crate::kmeans::reduce::{ExactSum, PartialAccumulator};
 use crate::kmeans::{
-    centroid_drifts, compute_inertia, init, recompute_centroids, FitResult, KMeansConfig,
-    RunStats,
+    centroid_drifts, compute_inertia, init, recompute_centroids, yinyang, Algorithm, FitResult,
+    KMeansConfig, RunStats,
 };
 use crate::runtime::{native::NativeEngine, xla::XlaEngine, AssignOut, Engine};
-use crate::util::matrix::Matrix;
+use crate::util::matrix::{dist, sq_dist, Matrix};
 
 use super::scheduler;
 use super::telemetry::RunReport;
@@ -379,6 +381,336 @@ pub fn run_with_engine(
 ) -> Result<SystemOutput> {
     let name = engine.name();
     run_engine(engine, name, ds, kcfg)
+}
+
+/// Per-algorithm shard-local bound state for a [`PartialFitState`].
+///
+/// Each variant mirrors the corresponding solo fit's per-point state, and
+/// the assignment passes below transcribe the solo inner loops verbatim
+/// (stats aside). Every per-point decision in all four algorithms is a
+/// pure function of (point row, that point's bounds, the shared centroid
+/// geometry), so running the identical loop over a slice produces the
+/// identical assignments the solo loop would produce for those points —
+/// the keystone of the map-reduce bit-identity contract (PROTOCOL.md §10).
+enum SliceBounds {
+    Lloyd,
+    /// One upper + one lower bound per slice point.
+    Hamerly { ub: Vec<f32>, lb: Vec<f32> },
+    /// Upper bound + per-centroid lower bounds (`slice_n × k`).
+    Elkan { ub: Vec<f32>, lb: Vec<f32> },
+    /// The multi-level filter state over a gathered copy of the slice.
+    Yinyang {
+        sub: Dataset,
+        grouping: yinyang::Grouping,
+        st: yinyang::FilterState,
+    },
+}
+
+/// One shard's half of a map-reduce fit (PROTOCOL.md §10): per-iteration
+/// assignments plus per-cluster partial sums/counts over the contiguous
+/// slice `[lo, hi)` of the dataset, with triangle-inequality bounds kept
+/// entirely shard-local. The counterpart of [`FitState`]'s begin/dispatch/
+/// complete seam, split at the reduction instead of the engine dispatch:
+///
+/// 1. [`PartialFitState::new`] loads nothing over the wire — every shard
+///    derives the same initial centroids from the same deterministic
+///    seed — and runs assignment pass 1 over its slice (`epoch` = 1).
+/// 2. [`PartialFitState::partial`] packages the slice's sums/counts for
+///    the front to merge ([`PartialAccumulator`] is exact, so merge order
+///    cannot matter).
+/// 3. [`PartialFitState::apply_sync`] accepts the reduced centroids,
+///    applies drift updates to the local bounds exactly as the solo fit
+///    would, and runs the next assignment pass (`epoch` += 1).
+/// 4. [`PartialFitState::finish`] seals the slice: final assignments and
+///    the slice's exact inertia contribution against the final centroids.
+///
+/// Epochs count completed assignment passes; a re-dispatched shard can be
+/// replayed to any epoch by feeding the reduced-centroid history through
+/// `apply_sync`, which makes recovery idempotent.
+pub struct PartialFitState {
+    ds: Dataset,
+    kcfg: KMeansConfig,
+    shard_index: usize,
+    shard_count: usize,
+    lo: usize,
+    hi: usize,
+    /// The deterministic initial centroids (`c_0`), kept for the front
+    /// (which never loads the dataset itself).
+    init: Matrix,
+    /// The centroids the current assignments were computed against.
+    centroids: Matrix,
+    /// Completed assignment passes.
+    epoch: usize,
+    /// Slice-local assignments (`hi - lo` entries).
+    assignments: Vec<u32>,
+    bounds: SliceBounds,
+}
+
+impl PartialFitState {
+    /// Validate, initialise centroids deterministically and run assignment
+    /// pass 1 over this shard's slice. `ds` must be the *full* dataset —
+    /// the slice boundaries are derived from the global `n`, so every
+    /// shard agrees on who owns which points. A slice may be empty (more
+    /// shards than points); it then contributes zero sums/counts.
+    pub fn new(
+        algo: Algorithm,
+        ds: Dataset,
+        kcfg: KMeansConfig,
+        shard_index: usize,
+        shard_count: usize,
+    ) -> Result<PartialFitState> {
+        if shard_count == 0 {
+            return Err(Error::Config("partial fit shard_count must be positive".into()));
+        }
+        if shard_index >= shard_count {
+            return Err(Error::Config(format!(
+                "partial fit shard_index {shard_index} out of range for {shard_count} shards"
+            )));
+        }
+        kcfg.validate(ds.n())?;
+        ds.validate()?;
+        let n = ds.n();
+        let k = kcfg.k;
+        let (lo, hi) = (shard_index * n / shard_count, (shard_index + 1) * n / shard_count);
+        let centroids = init::initialize(&ds, &kcfg)?;
+        let slice_n = hi - lo;
+        let mut assignments = vec![0u32; slice_n];
+        let bounds = match algo {
+            Algorithm::Lloyd => {
+                for (j, a) in assignments.iter_mut().enumerate() {
+                    let (arg, _, _) = scan_all(ds.points.row(lo + j), &centroids);
+                    *a = arg as u32;
+                }
+                SliceBounds::Lloyd
+            }
+            Algorithm::Hamerly => {
+                let mut ub = vec![0.0f32; slice_n];
+                let mut lb = vec![0.0f32; slice_n];
+                for j in 0..slice_n {
+                    let (arg, best, second) = scan_all(ds.points.row(lo + j), &centroids);
+                    assignments[j] = arg as u32;
+                    ub[j] = best.sqrt();
+                    lb[j] = second.sqrt();
+                }
+                SliceBounds::Hamerly { ub, lb }
+            }
+            Algorithm::Elkan => {
+                let mut ub = vec![0.0f32; slice_n];
+                let mut lb = vec![0.0f32; slice_n * k];
+                for j in 0..slice_n {
+                    let row = ds.points.row(lo + j);
+                    let lbrow = &mut lb[j * k..(j + 1) * k];
+                    let mut best = f32::INFINITY;
+                    let mut arg = 0usize;
+                    for (c, slot) in lbrow.iter_mut().enumerate() {
+                        let d = dist(row, centroids.row(c));
+                        *slot = d;
+                        if d < best {
+                            best = d;
+                            arg = c;
+                        }
+                    }
+                    assignments[j] = arg as u32;
+                    ub[j] = best;
+                }
+                SliceBounds::Elkan { ub, lb }
+            }
+            Algorithm::Yinyang => {
+                let n_groups = kcfg.effective_groups().clamp(1, k);
+                let grouping = yinyang::group_centroids(&centroids, n_groups, kcfg.seed);
+                let idx: Vec<usize> = (lo..hi).collect();
+                let sub = Dataset {
+                    name: ds.name.clone(),
+                    points: ds.points.gather_rows(&idx),
+                    labels: None,
+                };
+                let (st, _) = yinyang::FilterState::init_full_scan(&sub, &centroids, &grouping);
+                assignments.copy_from_slice(&st.assignments);
+                SliceBounds::Yinyang { sub, grouping, st }
+            }
+        };
+        Ok(PartialFitState {
+            ds,
+            kcfg,
+            shard_index,
+            shard_count,
+            lo,
+            hi,
+            init: centroids.clone(),
+            centroids,
+            epoch: 1,
+            assignments,
+            bounds,
+        })
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    pub fn shard_index(&self) -> usize {
+        self.shard_index
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shard_count
+    }
+
+    /// Slice boundaries `[lo, hi)` in global point indices.
+    pub fn slice(&self) -> (usize, usize) {
+        (self.lo, self.hi)
+    }
+
+    pub fn k(&self) -> usize {
+        self.kcfg.k
+    }
+
+    pub fn d(&self) -> usize {
+        self.ds.d()
+    }
+
+    /// The deterministic initial centroids every shard agrees on.
+    pub fn init_centroids(&self) -> &Matrix {
+        &self.init
+    }
+
+    /// This slice's per-cluster partial sums + counts for the current
+    /// epoch's assignments — the shard's contribution to the front's
+    /// reduction. Empty slices return an all-zero accumulator.
+    pub fn partial(&self) -> PartialAccumulator {
+        let mut acc = PartialAccumulator::new(self.kcfg.k, self.ds.d());
+        for (j, &a) in self.assignments.iter().enumerate() {
+            acc.add_point(self.ds.points.row(self.lo + j), a as usize);
+        }
+        acc
+    }
+
+    /// Accept the reduced centroids for the just-completed epoch, apply
+    /// the same drift-based bound updates the solo fit applies when it is
+    /// not converged, and run the next assignment pass over the slice.
+    pub fn apply_sync(&mut self, new_c: &Matrix) -> Result<()> {
+        let (k, d) = (self.kcfg.k, self.ds.d());
+        if new_c.rows() != k || new_c.cols() != d {
+            return Err(Error::Config(format!(
+                "centroid sync is {}x{}, expected {}x{}",
+                new_c.rows(),
+                new_c.cols(),
+                k,
+                d
+            )));
+        }
+        let (drifts, max_drift) = centroid_drifts(&self.centroids, new_c);
+        let (lo, slice_n) = (self.lo, self.hi - self.lo);
+        match &mut self.bounds {
+            SliceBounds::Lloyd => {
+                for (j, a) in self.assignments.iter_mut().enumerate() {
+                    let (arg, _, _) = scan_all(self.ds.points.row(lo + j), new_c);
+                    *a = arg as u32;
+                }
+            }
+            SliceBounds::Hamerly { ub, lb } => {
+                for j in 0..slice_n {
+                    ub[j] = inflate_ub(ub[j], drifts[self.assignments[j] as usize]);
+                    lb[j] = deflate_lb(lb[j], max_drift);
+                }
+                let (s_half, _) = half_nearest_other(new_c);
+                for j in 0..slice_n {
+                    let row = self.ds.points.row(lo + j);
+                    let a = self.assignments[j] as usize;
+                    let m = lb[j].max(s_half[a]);
+                    if filter_safe(m, ub[j]) {
+                        continue;
+                    }
+                    let exact = dist(row, new_c.row(a));
+                    ub[j] = exact;
+                    if filter_safe(m, ub[j]) {
+                        continue;
+                    }
+                    let (arg, best, second) = scan_all(row, new_c);
+                    self.assignments[j] = arg as u32;
+                    ub[j] = best.sqrt();
+                    lb[j] = second.sqrt();
+                }
+            }
+            SliceBounds::Elkan { ub, lb } => {
+                for j in 0..slice_n {
+                    ub[j] = inflate_ub(ub[j], drifts[self.assignments[j] as usize]);
+                    let lbrow = &mut lb[j * k..(j + 1) * k];
+                    for c in 0..k {
+                        lbrow[c] = deflate_lb(lbrow[c], drifts[c]);
+                    }
+                }
+                let (s_half, _) = half_nearest_other(new_c);
+                for j in 0..slice_n {
+                    let row = self.ds.points.row(lo + j);
+                    let mut a = self.assignments[j] as usize;
+                    if filter_safe(s_half[a], ub[j]) {
+                        continue;
+                    }
+                    let lbrow = &mut lb[j * k..(j + 1) * k];
+                    let mut ub_i = ub[j];
+                    let mut tight = false;
+                    for c in 0..k {
+                        if c == a {
+                            continue;
+                        }
+                        if filter_safe(lbrow[c], ub_i) {
+                            continue;
+                        }
+                        if !tight {
+                            ub_i = dist(row, new_c.row(a));
+                            lbrow[a] = ub_i;
+                            tight = true;
+                            if filter_safe(lbrow[c], ub_i) {
+                                continue;
+                            }
+                        }
+                        let dc = dist(row, new_c.row(c));
+                        lbrow[c] = dc;
+                        if dc < ub_i {
+                            a = c;
+                            ub_i = dc;
+                        }
+                    }
+                    ub[j] = ub_i;
+                    self.assignments[j] = a as u32;
+                }
+            }
+            SliceBounds::Yinyang { sub, grouping, st } => {
+                let group_drifts = group_max_drifts(&drifts, &grouping.group_of, grouping.n_groups());
+                st.apply_drifts(&drifts, &group_drifts);
+                for (j, row) in sub.points.rows_iter().enumerate() {
+                    yinyang::step_point(row, new_c, grouping, &drifts, &group_drifts, j, st);
+                }
+                self.assignments.copy_from_slice(&st.assignments);
+            }
+        }
+        self.centroids = new_c.clone();
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// Seal the slice against the final centroids: the slice's assignment
+    /// vector (to be concatenated in shard order) and its exact inertia
+    /// contribution (to be merged across shards). No reassignment happens
+    /// here — exactly like the solo fits, the final assignments are the
+    /// ones from the last completed pass.
+    pub fn finish(&self, final_c: &Matrix) -> Result<(Vec<u32>, ExactSum)> {
+        if final_c.rows() != self.kcfg.k || final_c.cols() != self.ds.d() {
+            return Err(Error::Config(format!(
+                "final centroids are {}x{}, expected {}x{}",
+                final_c.rows(),
+                final_c.cols(),
+                self.kcfg.k,
+                self.ds.d()
+            )));
+        }
+        let mut inertia = ExactSum::new();
+        for (j, &a) in self.assignments.iter().enumerate() {
+            inertia.add(sq_dist(self.ds.points.row(self.lo + j), final_c.row(a as usize)));
+        }
+        Ok((self.assignments.clone(), inertia))
+    }
 }
 
 #[cfg(test)]

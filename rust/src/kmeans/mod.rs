@@ -24,6 +24,7 @@ pub mod hamerly;
 pub mod init;
 pub mod lloyd;
 pub mod metrics;
+pub mod reduce;
 pub mod yinyang;
 
 use crate::data::Dataset;
@@ -181,41 +182,26 @@ pub fn fit_from(
     }
 }
 
-/// Recompute centroids from assignments, in point-index order.
+/// Recompute centroids from assignments.
 ///
-/// Every algorithm uses this same routine so float summation order is
-/// identical across algorithms — a prerequisite for the exact-equivalence
-/// property the test suite asserts. Empty clusters keep their previous
-/// centroid (matching `python/compile/model.py`).
+/// Every algorithm uses this same routine, and it runs on the
+/// order-independent [`reduce::PartialAccumulator`] — so the result is
+/// bit-identical whether the points are folded in sequentially (solo fit)
+/// or as merged per-shard partials (`cluster` map-reduce mode,
+/// PROTOCOL.md §10). Empty clusters keep their previous centroid
+/// (matching `python/compile/model.py`); the same guard covers shard
+/// slices that contributed no points at all.
 pub(crate) fn recompute_centroids(
     ds: &Dataset,
     assignments: &[u32],
     prev: &Matrix,
 ) -> (Matrix, Vec<usize>) {
     let (k, d) = (prev.rows(), prev.cols());
-    let mut sums = vec![0.0f64; k * d];
-    let mut counts = vec![0usize; k];
+    let mut acc = reduce::PartialAccumulator::new(k, d);
     for (i, row) in ds.points.rows_iter().enumerate() {
-        let c = assignments[i] as usize;
-        counts[c] += 1;
-        let acc = &mut sums[c * d..(c + 1) * d];
-        for (a, &v) in acc.iter_mut().zip(row) {
-            *a += v as f64;
-        }
+        acc.add_point(row, assignments[i] as usize);
     }
-    let mut out = Matrix::zeros(k, d);
-    for c in 0..k {
-        let row = out.row_mut(c);
-        if counts[c] == 0 {
-            row.copy_from_slice(prev.row(c));
-        } else {
-            let inv = 1.0 / counts[c] as f64;
-            for (j, r) in row.iter_mut().enumerate() {
-                *r = (sums[c * d + j] * inv) as f32;
-            }
-        }
-    }
-    (out, counts)
+    acc.finalize(prev)
 }
 
 /// Per-centroid drift (Euclidean movement) between two centroid sets, plus
@@ -231,13 +217,16 @@ pub(crate) fn centroid_drifts(old: &Matrix, new: &Matrix) -> (Vec<f32>, f32) {
     (drifts, max)
 }
 
-/// Final inertia for a fitted state.
+/// Final inertia for a fitted state. Accumulated on [`reduce::ExactSum`]
+/// so the value is independent of summation order — per-shard slice
+/// inertias merged by the map-reduce front (PROTOCOL.md §10) reproduce
+/// the solo value bit for bit.
 pub(crate) fn compute_inertia(ds: &Dataset, centroids: &Matrix, assignments: &[u32]) -> f64 {
-    assignments
-        .iter()
-        .enumerate()
-        .map(|(i, &a)| crate::util::matrix::sq_dist(ds.points.row(i), centroids.row(a as usize)) as f64)
-        .sum()
+    let mut sum = reduce::ExactSum::new();
+    for (i, &a) in assignments.iter().enumerate() {
+        sum.add(crate::util::matrix::sq_dist(ds.points.row(i), centroids.row(a as usize)));
+    }
+    sum.value()
 }
 
 #[cfg(test)]

@@ -1,0 +1,580 @@
+//! Exact, order-independent reduction primitives for distributed K-means.
+//!
+//! The map-reduce cluster mode (PROTOCOL.md §10) splits one fit's points
+//! across shards and reduces per-cluster partial sums on the front. For
+//! the distributed fit to be **bit-identical** to the solo fit — the
+//! contract `rust/tests/mapreduce.rs` enforces — the reduction must not
+//! depend on the order addends arrive in, which rules out floating-point
+//! running sums (`(a + b) + c != a + (b + c)` in f64). [`ExactSum`] is a
+//! fixed-point superaccumulator: a 320-bit signed integer in base 2^32
+//! limbs spanning binary weights 2^-160 .. 2^160, wide enough to hold any
+//! finite `f32` addend (subnormals included) *exactly*. Integer addition
+//! is associative and commutative, and [`ExactSum::value`] reads the
+//! canonical normalized form, so any partition of the addends over any
+//! number of shards merges to the same bits as the sequential sum.
+//!
+//! [`PartialAccumulator`] packages the per-cluster `k*d` coordinate sums
+//! plus member counts — the thing a shard computes over its slice and the
+//! front merges — and owns the empty-cluster guard: a cluster (or a whole
+//! shard slice) with zero members contributes zero sums/counts and the
+//! finalize step keeps the previous centroid row instead of dividing by
+//! zero into NaN.
+//!
+//! The solo path (`kmeans::recompute_centroids` / `compute_inertia`) is
+//! built on these same primitives, so "solo" and "distributed over N
+//! shards" are literally the same arithmetic.
+//!
+//! The hex codecs at the bottom are the wire forms PROTOCOL.md §10 uses:
+//! JSON float printing does not round-trip f32 bits, so centroids,
+//! partial sums and assignment vectors cross the wire as fixed-width
+//! little-endian hex strings instead.
+
+use crate::error::{Error, Result};
+use crate::util::matrix::Matrix;
+
+/// Limb count: 10 base-2^32 digits = 320 bits.
+const LIMBS: usize = 10;
+/// Binary weight of bit 0 of limb 0 is 2^-BIAS.
+const BIAS: i32 = 160;
+/// Normalize after this many raw adds so limb magnitudes stay far from
+/// i64 overflow (each add deposits < 2^33 per limb; 2^24 * 2^33 << 2^63).
+const NORMALIZE_EVERY: u32 = 1 << 24;
+
+/// A 320-bit fixed-point superaccumulator for finite `f32` addends.
+///
+/// Limb `i` carries binary weights `2^(32*i - 160) ..= 2^(32*i - 129)`.
+/// An f32's mantissa spans at most 24 bits at weights `2^-149 ..= 2^104`
+/// (bit positions 11..=264 after the +160 bias), so every finite addend
+/// lands entirely inside the accumulator. Limbs are signed during
+/// accumulation; `normalize` canonicalizes digits 0..9 into `[0, 2^32)`
+/// with the sign carried by the top limb, which makes the representation
+/// a function of the accumulated *value* alone — independent of add
+/// order, partitioning, or when intermediate normalizations happened.
+#[derive(Clone, Debug)]
+pub struct ExactSum {
+    limbs: [i64; LIMBS],
+    adds: u32,
+}
+
+impl Default for ExactSum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExactSum {
+    pub fn new() -> ExactSum {
+        ExactSum { limbs: [0; LIMBS], adds: 0 }
+    }
+
+    /// Add one finite f32 exactly. Panics on NaN/infinity — an exact
+    /// accumulator has no representation for them, and every K-means
+    /// quantity fed here (coordinates, squared distances of finite rows)
+    /// is finite by construction.
+    pub fn add(&mut self, v: f32) {
+        assert!(v.is_finite(), "ExactSum::add requires a finite addend, got {v}");
+        let bits = v.to_bits();
+        let exp = ((bits >> 23) & 0xff) as i32;
+        let frac = bits & 0x7f_ffff;
+        let (mant, pow) = if exp == 0 {
+            if frac == 0 {
+                return; // ±0 contributes nothing
+            }
+            (frac, -149) // subnormal: no implicit leading bit
+        } else {
+            (frac | 0x80_0000, exp - 150)
+        };
+        let bitpos = (pow + BIAS) as usize; // 11 ..= 264
+        let (limb, shift) = (bitpos / 32, bitpos % 32);
+        let wide = (mant as u64) << shift; // at most 55 significant bits
+        let (lo, hi) = ((wide & 0xffff_ffff) as i64, (wide >> 32) as i64);
+        if bits >> 31 == 1 {
+            self.limbs[limb] -= lo;
+            self.limbs[limb + 1] -= hi;
+        } else {
+            self.limbs[limb] += lo;
+            self.limbs[limb + 1] += hi;
+        }
+        self.adds += 1;
+        if self.adds >= NORMALIZE_EVERY {
+            self.normalize();
+        }
+    }
+
+    /// Fold another accumulator in: plain limb-wise integer addition, the
+    /// front's reduction step. Exactly equivalent to having added the
+    /// other side's addends here one by one.
+    pub fn merge(&mut self, other: &ExactSum) {
+        for (a, b) in self.limbs.iter_mut().zip(other.limbs.iter()) {
+            *a += *b;
+        }
+        self.normalize();
+    }
+
+    /// Carry-propagate into canonical form: digits 0..9 in `[0, 2^32)`,
+    /// sign (and overflow headroom) carried by the top limb.
+    fn normalize(&mut self) {
+        let mut carry = 0i64;
+        for i in 0..LIMBS - 1 {
+            let v = self.limbs[i] + carry;
+            carry = v >> 32; // arithmetic shift = floor division by 2^32
+            self.limbs[i] = v - (carry << 32);
+        }
+        self.limbs[LIMBS - 1] += carry;
+        self.adds = 0;
+    }
+
+    /// The accumulated value, correctly rounded to the nearest f64
+    /// (round-half-even, with a sticky bit for the truncated tail). A
+    /// pure function of the accumulated value — same bits no matter how
+    /// the adds were ordered or partitioned.
+    pub fn value(&self) -> f64 {
+        let mut s = self.clone();
+        s.normalize();
+        let negative = s.limbs[LIMBS - 1] < 0;
+        // Magnitude as 11 base-2^32 digits (the top limb may hold 2).
+        let mut digs = [0u32; LIMBS + 1];
+        let top: u64;
+        if negative {
+            let mut borrow = 0i64;
+            for i in 0..LIMBS - 1 {
+                let v = -s.limbs[i] - borrow;
+                if v < 0 {
+                    digs[i] = (v + (1i64 << 32)) as u32;
+                    borrow = 1;
+                } else {
+                    digs[i] = v as u32;
+                    borrow = 0;
+                }
+            }
+            top = (-s.limbs[LIMBS - 1] - borrow) as u64;
+        } else {
+            for i in 0..LIMBS - 1 {
+                digs[i] = s.limbs[i] as u32;
+            }
+            top = s.limbs[LIMBS - 1] as u64;
+        }
+        digs[LIMBS - 1] = top as u32;
+        digs[LIMBS] = (top >> 32) as u32;
+
+        let top_dig = match (0..digs.len()).rev().find(|&i| digs[i] != 0) {
+            Some(i) => i,
+            None => return 0.0,
+        };
+        let top_bit = 32 * top_dig + (31 - digs[top_dig].leading_zeros() as usize);
+        let shift = top_bit.saturating_sub(63);
+        let (d, off) = (shift / 32, shift % 32);
+        let chunk = |i: usize| digs.get(i).copied().unwrap_or(0) as u128;
+        let wide = chunk(d) | (chunk(d + 1) << 32) | (chunk(d + 2) << 64);
+        let mut window = ((wide >> off) & u64::MAX as u128) as u64;
+        let sticky = digs[..d].iter().any(|&x| x != 0)
+            || (off > 0 && digs[d] & ((1u32 << off) - 1) != 0);
+        if sticky {
+            window |= 1;
+        }
+        // Scale by 2^(shift - 160); the exponent field stays in range for
+        // every reachable shift (0 ..= 288).
+        let scale = f64::from_bits(((shift as i64 - BIAS as i64 + 1023) as u64) << 52);
+        let mag = window as f64 * scale;
+        if negative {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Canonical wire form: 160 lowercase hex chars (10 limbs of 16,
+    /// low limb first, each the limb's i64 bits as u64).
+    pub fn to_hex(&self) -> String {
+        let mut s = self.clone();
+        s.normalize();
+        let mut out = String::with_capacity(LIMBS * 16);
+        for limb in s.limbs {
+            out.push_str(&format!("{:016x}", limb as u64));
+        }
+        out
+    }
+
+    pub fn from_hex(hex: &str) -> Result<ExactSum> {
+        if hex.len() != LIMBS * 16 {
+            return Err(Error::Parse(format!(
+                "ExactSum hex must be {} chars, got {}",
+                LIMBS * 16,
+                hex.len()
+            )));
+        }
+        let mut limbs = [0i64; LIMBS];
+        for (i, limb) in limbs.iter_mut().enumerate() {
+            let chunk = &hex[i * 16..(i + 1) * 16];
+            *limb = u64::from_str_radix(chunk, 16)
+                .map_err(|_| Error::Parse(format!("bad ExactSum hex limb '{chunk}'")))?
+                as i64;
+        }
+        Ok(ExactSum { limbs, adds: 0 })
+    }
+}
+
+/// Per-cluster partial sums + counts over a slice of the dataset: what
+/// one shard computes per iteration and the front merges into the next
+/// centroid matrix (PROTOCOL.md §10). `sums` is row-major `k*d`.
+#[derive(Clone, Debug)]
+pub struct PartialAccumulator {
+    k: usize,
+    d: usize,
+    sums: Vec<ExactSum>,
+    counts: Vec<u64>,
+}
+
+impl PartialAccumulator {
+    pub fn new(k: usize, d: usize) -> PartialAccumulator {
+        PartialAccumulator {
+            k,
+            d,
+            sums: (0..k * d).map(|_| ExactSum::new()).collect(),
+            counts: vec![0; k],
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Fold one point into its assigned cluster's sums.
+    pub fn add_point(&mut self, row: &[f32], cluster: usize) {
+        debug_assert_eq!(row.len(), self.d);
+        self.counts[cluster] += 1;
+        let base = cluster * self.d;
+        for (j, &x) in row.iter().enumerate() {
+            self.sums[base + j].add(x);
+        }
+    }
+
+    /// Merge another shard's partials in (the front's reduce step).
+    pub fn merge(&mut self, other: &PartialAccumulator) -> Result<()> {
+        if self.k != other.k || self.d != other.d {
+            return Err(Error::Parse(format!(
+                "partial shape mismatch: {}x{} vs {}x{}",
+                self.k, self.d, other.k, other.d
+            )));
+        }
+        for (a, b) in self.sums.iter_mut().zip(other.sums.iter()) {
+            a.merge(b);
+        }
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        Ok(())
+    }
+
+    /// New centroids from the merged sums. A cluster that captured no
+    /// points — including the degenerate "more shards than points" case
+    /// where whole slices are empty — keeps its previous row instead of
+    /// dividing 0/0 into NaN. Returns the per-cluster counts alongside.
+    pub fn finalize(&self, prev: &Matrix) -> (Matrix, Vec<usize>) {
+        debug_assert_eq!((prev.rows(), prev.cols()), (self.k, self.d));
+        let mut out = Matrix::zeros(self.k, self.d);
+        for c in 0..self.k {
+            let row = out.row_mut(c);
+            if self.counts[c] == 0 {
+                row.copy_from_slice(prev.row(c));
+                continue;
+            }
+            let inv = 1.0 / self.counts[c] as f64;
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = (self.sums[c * self.d + j].value() * inv) as f32;
+            }
+        }
+        (out, self.counts.iter().map(|&c| c as usize).collect())
+    }
+
+    /// Wire form of the sums: `k*d` concatenated [`ExactSum::to_hex`]
+    /// blocks, row-major.
+    pub fn sums_hex(&self) -> String {
+        let mut out = String::with_capacity(self.sums.len() * LIMBS * 16);
+        for s in &self.sums {
+            out.push_str(&s.to_hex());
+        }
+        out
+    }
+
+    /// Rebuild from the wire (`counts` array + sums hex). The shape must
+    /// be known from the request context; the hex length is checked
+    /// against it.
+    pub fn from_wire(k: usize, d: usize, counts: &[u64], sums_hex: &str) -> Result<PartialAccumulator> {
+        if counts.len() != k {
+            return Err(Error::Parse(format!(
+                "partial counts must have {k} entries, got {}",
+                counts.len()
+            )));
+        }
+        let block = LIMBS * 16;
+        if sums_hex.len() != k * d * block {
+            return Err(Error::Parse(format!(
+                "partial sums hex must be {} chars for k={k} d={d}, got {}",
+                k * d * block,
+                sums_hex.len()
+            )));
+        }
+        let mut sums = Vec::with_capacity(k * d);
+        for i in 0..k * d {
+            sums.push(ExactSum::from_hex(&sums_hex[i * block..(i + 1) * block])?);
+        }
+        Ok(PartialAccumulator { k, d, sums, counts: counts.to_vec() })
+    }
+}
+
+// ---- wire hex codecs (PROTOCOL.md §10) ---------------------------------
+//
+// JSON number printing is not a bit-faithful f32 transport; these codecs
+// are. Fixed width, little-endian bytes, lowercase hex.
+
+/// f32 slice -> hex (8 chars per value, little-endian bytes).
+pub fn f32s_to_hex(values: &[f32]) -> String {
+    let mut out = String::with_capacity(values.len() * 8);
+    for v in values {
+        for b in v.to_le_bytes() {
+            out.push_str(&format!("{b:02x}"));
+        }
+    }
+    out
+}
+
+pub fn f32s_from_hex(hex: &str) -> Result<Vec<f32>> {
+    let bytes = hex_bytes(hex)?;
+    if bytes.len() % 4 != 0 {
+        return Err(Error::Parse(format!("f32 hex length {} is not a multiple of 8", hex.len())));
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// u32 slice -> hex (8 chars per value, little-endian bytes) — the wire
+/// form of assignment vectors.
+pub fn u32s_to_hex(values: &[u32]) -> String {
+    let mut out = String::with_capacity(values.len() * 8);
+    for v in values {
+        for b in v.to_le_bytes() {
+            out.push_str(&format!("{b:02x}"));
+        }
+    }
+    out
+}
+
+pub fn u32s_from_hex(hex: &str) -> Result<Vec<u32>> {
+    let bytes = hex_bytes(hex)?;
+    if bytes.len() % 4 != 0 {
+        return Err(Error::Parse(format!("u32 hex length {} is not a multiple of 8", hex.len())));
+    }
+    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// A `k x d` matrix -> hex of its row-major f32 data.
+pub fn matrix_to_hex(m: &Matrix) -> String {
+    f32s_to_hex(m.as_slice())
+}
+
+pub fn matrix_from_hex(hex: &str, k: usize, d: usize) -> Result<Matrix> {
+    let values = f32s_from_hex(hex)?;
+    if values.len() != k * d {
+        return Err(Error::Parse(format!(
+            "matrix hex holds {} values, expected {k}x{d}",
+            values.len()
+        )));
+    }
+    Matrix::from_vec(values, k, d)
+}
+
+fn hex_bytes(hex: &str) -> Result<Vec<u8>> {
+    if hex.len() % 2 != 0 || !hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(Error::Parse("malformed hex payload".into()));
+    }
+    Ok(hex
+        .as_bytes()
+        .chunks_exact(2)
+        .map(|c| {
+            let hi = (c[0] as char).to_digit(16).unwrap() as u8;
+            let lo = (c[1] as char).to_digit(16).unwrap() as u8;
+            (hi << 4) | lo
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift64* — no external RNG dependency in tests.
+    struct TestRng(u64);
+
+    impl TestRng {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            self.0 = x;
+            x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        }
+
+        /// A finite f32 with a wild exponent spread (subnormals included).
+        fn f32(&mut self) -> f32 {
+            loop {
+                let v = f32::from_bits(self.next() as u32);
+                if v.is_finite() {
+                    return v;
+                }
+            }
+        }
+    }
+
+    fn sum_of(values: &[f32]) -> ExactSum {
+        let mut s = ExactSum::new();
+        for &v in values {
+            s.add(v);
+        }
+        s
+    }
+
+    #[test]
+    fn exact_on_integers_and_singletons() {
+        let mut s = ExactSum::new();
+        for v in [1.0f32, 2.0, 3.0, -4.5, 0.25] {
+            s.add(v);
+        }
+        assert_eq!(s.value(), 1.75);
+        for v in [0.0f32, -0.0, 1.0, -1.0, 3.5e37, -1.1754944e-38, 1e-45, f32::MIN_POSITIVE] {
+            assert_eq!(sum_of(&[v]).value(), v as f64, "singleton {v} must round-trip");
+        }
+        assert_eq!(ExactSum::new().value(), 0.0);
+    }
+
+    #[test]
+    fn order_and_partition_invariant() {
+        let mut rng = TestRng(0x9E37_79B9_7F4A_7C15);
+        let values: Vec<f32> = (0..4000).map(|_| rng.f32()).collect();
+        let sequential = sum_of(&values);
+        // Reversed order.
+        let reversed: Vec<f32> = values.iter().rev().copied().collect();
+        assert_eq!(sum_of(&reversed).to_hex(), sequential.to_hex());
+        assert_eq!(sum_of(&reversed).value().to_bits(), sequential.value().to_bits());
+        // Every partition into 1..=5 contiguous shards, merged in order
+        // and in reverse order, lands on the same canonical bits.
+        for shards in 1..=5 {
+            let n = values.len();
+            let parts: Vec<ExactSum> = (0..shards)
+                .map(|i| sum_of(&values[i * n / shards..(i + 1) * n / shards]))
+                .collect();
+            for ordering in [false, true] {
+                let mut merged = ExactSum::new();
+                let idx: Vec<usize> =
+                    if ordering { (0..shards).rev().collect() } else { (0..shards).collect() };
+                for i in idx {
+                    merged.merge(&parts[i]);
+                }
+                assert_eq!(merged.to_hex(), sequential.to_hex(), "shards={shards}");
+                assert_eq!(merged.value().to_bits(), sequential.value().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn cancellation_is_exact() {
+        // Catastrophic cancellation that f64 running sums get wrong.
+        let mut s = ExactSum::new();
+        s.add(3.4e38);
+        s.add(1.0);
+        s.add(-3.4e38);
+        assert_eq!(s.value(), 1.0);
+        let mut t = ExactSum::new();
+        t.add(1.0e-40); // subnormal survives alongside a huge addend
+        t.add(2.0e38);
+        t.add(-2.0e38);
+        assert_eq!(t.value(), 1.0e-40f32 as f64);
+    }
+
+    #[test]
+    fn hex_round_trips() {
+        let mut rng = TestRng(42);
+        let values: Vec<f32> = (0..257).map(|_| rng.f32()).collect();
+        let s = sum_of(&values);
+        let back = ExactSum::from_hex(&s.to_hex()).unwrap();
+        assert_eq!(back.to_hex(), s.to_hex());
+        assert_eq!(back.value().to_bits(), s.value().to_bits());
+        assert!(ExactSum::from_hex("zz").is_err());
+        assert!(ExactSum::from_hex(&"0".repeat(159)).is_err());
+
+        assert_eq!(f32s_from_hex(&f32s_to_hex(&values)).unwrap(), values);
+        let ids: Vec<u32> = (0..300).map(|_| rng.next() as u32).collect();
+        assert_eq!(u32s_from_hex(&u32s_to_hex(&ids)).unwrap(), ids);
+        assert!(f32s_from_hex("0q").is_err());
+        assert!(u32s_from_hex("abcdef").is_err(), "length not a multiple of 8");
+    }
+
+    #[test]
+    fn accumulator_matches_whole_when_split() {
+        let mut rng = TestRng(7);
+        let (k, d, n) = (4, 3, 200);
+        let rows: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..d).map(|_| rng.f32()).collect()).collect();
+        let assign: Vec<usize> = (0..n).map(|_| rng.next() as usize % k).collect();
+        let mut whole = PartialAccumulator::new(k, d);
+        for (row, &c) in rows.iter().zip(assign.iter()) {
+            whole.add_point(row, c);
+        }
+        let mut merged = PartialAccumulator::new(k, d);
+        for shard in 0..3 {
+            let mut part = PartialAccumulator::new(k, d);
+            for i in (0..n).filter(|i| i % 3 == shard) {
+                part.add_point(&rows[i], assign[i]);
+            }
+            // Wire round-trip every partial before merging, as the front does.
+            let wired =
+                PartialAccumulator::from_wire(k, d, part.counts(), &part.sums_hex()).unwrap();
+            merged.merge(&wired).unwrap();
+        }
+        assert_eq!(merged.counts(), whole.counts());
+        assert_eq!(merged.sums_hex(), whole.sums_hex());
+        let prev = Matrix::zeros(k, d);
+        let (a, ca) = whole.finalize(&prev);
+        let (b, cb) = merged.finalize(&prev);
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert_eq!(ca, cb);
+        assert!(PartialAccumulator::new(k, d).merge(&PartialAccumulator::new(k + 1, d)).is_err());
+        assert!(PartialAccumulator::from_wire(k, d, &[0; 3], &"0".repeat(k * d * 160)).is_err());
+        assert!(PartialAccumulator::from_wire(k, d, &[0; 4], "00").is_err());
+    }
+
+    #[test]
+    fn empty_cluster_keeps_previous_centroid() {
+        // The "more shards than points" edge: an accumulator that saw no
+        // points at all must reproduce `prev` exactly, never NaN.
+        let prev = Matrix::from_vec(vec![1.5, -2.5, 0.25, 9.0], 2, 2).unwrap();
+        let acc = PartialAccumulator::new(2, 2);
+        let (out, counts) = acc.finalize(&prev);
+        assert_eq!(out.as_slice(), prev.as_slice());
+        assert_eq!(counts, vec![0, 0]);
+        assert!(out.as_slice().iter().all(|v| v.is_finite()));
+        // And a half-empty accumulator guards per cluster.
+        let mut half = PartialAccumulator::new(2, 2);
+        half.add_point(&[4.0, 8.0], 1);
+        let (out, counts) = half.finalize(&prev);
+        assert_eq!(&out.as_slice()[..2], &prev.as_slice()[..2]);
+        assert_eq!(&out.as_slice()[2..], &[4.0, 8.0]);
+        assert_eq!(counts, vec![0, 1]);
+    }
+
+    #[test]
+    fn matrix_hex_round_trips() {
+        let m = Matrix::from_vec(vec![1.0, -0.5, 3.25e-12, 7.0, 0.0, -4.5e20], 2, 3).unwrap();
+        let back = matrix_from_hex(&matrix_to_hex(&m), 2, 3).unwrap();
+        assert_eq!(back.as_slice(), m.as_slice());
+        assert!(matrix_from_hex(&matrix_to_hex(&m), 3, 3).is_err());
+    }
+}

@@ -116,6 +116,9 @@ fn print_help() {
          \x20 --socket-dir DIR      shard unix-socket directory (default: temp dir)\n\
          \x20 --max-restarts N      respawns (local) / reconnects (remote) per shard\n\
          \x20                       before abandoning it\n\
+         \x20 --mode MODE           request (default: route each job whole to one shard) or\n\
+         \x20                       map-reduce (slice each job's points across all shards;\n\
+         \x20                       one fit scales with shard count, results bit-identical)\n\
          \x20 plus the serve pool flags (--workers/--queue/--batch/--shed, per shard)\n\
          \x20 and the daemon flags (--max-conns/--idle-timeout-ms, at the front)"
     );
@@ -403,6 +406,9 @@ fn cmd_cluster(args: &[String]) -> kpynq::Result<()> {
             .parse()
             .map_err(|_| kpynq::Error::Config(format!("bad --max-restarts '{r}'")))?;
     }
+    if let Some(m) = take_opt(args, "--mode") {
+        ccfg.fit_mode = kpynq::cluster::FitMode::from_name(&m)?;
+    }
     if let Some(list) = take_opt(args, "--remote") {
         let addrs: Vec<String> = list
             .split(',')
@@ -441,6 +447,7 @@ fn cmd_cluster(args: &[String]) -> kpynq::Result<()> {
 
     let shards = ccfg.shard_count();
     let workers = ccfg.serve.workers;
+    let fit_mode = ccfg.fit_mode.name();
     let mode = if ccfg.remote_shards.is_empty() {
         "local".to_string()
     } else {
@@ -448,12 +455,13 @@ fn cmd_cluster(args: &[String]) -> kpynq::Result<()> {
     };
     let cluster = Cluster::start(&listen, net, ccfg)?;
     eprintln!(
-        "kpynq cluster: {} shards ({}) x {} workers behind {} (proto {PROTO_VERSION}; \
-         NDJSON jobs per PROTOCOL.md, drain with {{\"op\":\"shutdown\"}})",
+        "kpynq cluster: {} shards ({}) x {} workers behind {}, {} fits (proto \
+         {PROTO_VERSION}; NDJSON jobs per PROTOCOL.md, drain with {{\"op\":\"shutdown\"}})",
         shards,
         mode,
         workers,
         cluster.local_addr(),
+        fit_mode,
     );
     let report = cluster.run()?;
     eprint!("{}", report.render());

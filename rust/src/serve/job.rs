@@ -197,6 +197,28 @@ impl FitRequest {
         Ok(req)
     }
 
+    /// Parse the §3 job surface out of a frame that carries extra
+    /// op-specific keys — the `partial_fit` request (PROTOCOL.md §10)
+    /// embeds a full job description alongside its own `op` /
+    /// `algorithm` / `shard_index` / `shard_count` / `history` keys.
+    /// Keys named in `ignore` are stripped before the strict
+    /// [`FitRequest::from_json`] parse, so the unknown-key rejection
+    /// still fires for genuine typos.
+    pub fn from_json_ignoring(j: &Json, ignore: &[&str]) -> Result<FitRequest> {
+        let map = match j {
+            Json::Obj(m) => m,
+            other => {
+                return Err(Error::Parse(format!("job must be a JSON object, got {other:?}")))
+            }
+        };
+        let filtered: std::collections::BTreeMap<String, Json> = map
+            .iter()
+            .filter(|(k, _)| !ignore.contains(&k.as_str()))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        Self::from_json(&Json::Obj(filtered))
+    }
+
     /// Serialize onto the NDJSON wire (PROTOCOL.md §3) — the client side
     /// of [`FitRequest::from_json`], used when forwarding a request to a
     /// daemon (`cluster::client`). Exactly the §3 surface crosses the

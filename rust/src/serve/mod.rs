@@ -67,7 +67,7 @@ pub use job::{FitRequest, FitResponse, FitSummary, JobStatus, Priority};
 pub use net::{Daemon, NetConfig};
 pub use queue::ShedPolicy;
 pub use report::ServeReport;
-pub use session::ServeSession;
+pub use session::{PartialSession, ServeSession};
 
 /// Pool configuration (the `[serve]` section of the run config).
 #[derive(Clone, Debug)]

@@ -52,7 +52,7 @@ use crate::util::json::Json;
 
 use super::codec::{write_line, LineEvent, LineReader, WireStream};
 use super::job::{FitRequest, FitResponse};
-use super::session::ServeSession;
+use super::session::{PartialSession, ServeSession};
 use super::{ServeConfig, ServeReport};
 
 pub use super::codec::MAX_LINE_BYTES;
@@ -476,6 +476,10 @@ fn handle_conn<S: WireStream>(stream: S, ctx: &ConnCtx) {
     let mut reader = LineReader::new(stream);
     let mut last_activity = Instant::now();
     let mut lineno = 0u64;
+    // Map-reduce fit state (PROTOCOL.md §10) is connection-scoped: it
+    // lives and dies with this reader, so a dropped shard link implicitly
+    // discards its partial fits (the front re-dispatches with history).
+    let mut partial = PartialSession::new();
     loop {
         if ctx.shutdown.load(Ordering::SeqCst) {
             break; // daemon draining: stop reading, deliver what's pending
@@ -484,7 +488,7 @@ fn handle_conn<S: WireStream>(stream: S, ctx: &ConnCtx) {
             LineEvent::Line(bytes) => {
                 lineno += 1;
                 last_activity = Instant::now();
-                if !handle_frame(&bytes, lineno, ctx, &out, &resp_tx, &pending, &tickets) {
+                if !handle_frame(&bytes, lineno, ctx, &out, &resp_tx, &pending, &tickets, &mut partial) {
                     break;
                 }
             }
@@ -535,6 +539,7 @@ fn handle_frame<S: WireStream>(
     resp_tx: &mpsc::Sender<FitResponse>,
     pending: &AtomicUsize,
     tickets: &Mutex<HashMap<u64, u64>>,
+    partial: &mut PartialSession,
 ) -> bool {
     let text = match std::str::from_utf8(bytes) {
         Ok(t) => t,
@@ -556,7 +561,7 @@ fn handle_frame<S: WireStream>(
     };
     if let Json::Obj(map) = &parsed {
         if map.contains_key("op") {
-            return control_frame(map, lineno, ctx, out, pending, tickets);
+            return control_frame(map, lineno, ctx, out, pending, tickets, partial);
         }
         if map.contains_key("proto") && !map.contains_key("id") {
             // Client handshake (PROTOCOL.md §2): optional, but if sent it
@@ -597,6 +602,7 @@ fn handle_frame<S: WireStream>(
 
 /// Handle a `{"op": ...}` control frame (PROTOCOL.md §6); returns `false`
 /// when the connection should stop reading.
+#[allow(clippy::too_many_arguments)]
 fn control_frame<S: WireStream>(
     map: &BTreeMap<String, Json>,
     lineno: u64,
@@ -604,6 +610,7 @@ fn control_frame<S: WireStream>(
     out: &Mutex<S>,
     pending: &AtomicUsize,
     tickets: &Mutex<HashMap<u64, u64>>,
+    partial: &mut PartialSession,
 ) -> bool {
     let op = match map.get("op").map(|v| v.as_str()) {
         Some(Ok(op)) => op,
@@ -657,6 +664,28 @@ fn control_frame<S: WireStream>(
             m.insert("id".to_string(), Json::Num(id as f64));
             m.insert("cancelled".to_string(), Json::Bool(cancelled));
             let _ = write_line(out, &Json::Obj(m).to_string());
+            true
+        }
+        "partial_fit" => {
+            // Map-reduce fit, shard side (PROTOCOL.md §10). Computed
+            // inline on this reader thread: the assignment pass blocks
+            // only this connection, and the front drives every shard's
+            // connection concurrently.
+            match partial.partial_fit(&Json::Obj(map.clone())) {
+                Ok(reply) => {
+                    let _ = write_line(out, &reply.to_string());
+                }
+                Err(e) => proto_error(ctx, out, lineno, &e.to_string()),
+            }
+            true
+        }
+        "centroid_sync" => {
+            match partial.centroid_sync(&Json::Obj(map.clone())) {
+                Ok(reply) => {
+                    let _ = write_line(out, &reply.to_string());
+                }
+                Err(e) => proto_error(ctx, out, lineno, &e.to_string()),
+            }
             true
         }
         "bye" => false, // drain pending replies, then close this connection

@@ -45,7 +45,11 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::error::Result;
+use crate::coordinator::driver::PartialFitState;
+use crate::error::{Error, Result};
+use crate::kmeans::reduce::{matrix_from_hex, matrix_to_hex, u32s_to_hex};
+use crate::kmeans::Algorithm;
+use crate::util::json::Json;
 
 use super::job::{FitRequest, FitResponse};
 use super::queue::{QueueStats, SharedQueue, Submission};
@@ -244,6 +248,151 @@ fn route_responses(
         }
     }
     acc
+}
+
+/// Per-connection state for map-reduce fits (PROTOCOL.md §10): the
+/// `partial_fit` / `centroid_sync` op pair, shared verbatim by the real
+/// daemon (`serve::net`) and the test fake shard so conformance vectors
+/// exercise one implementation. Unlike regular jobs, partial fits are
+/// *not* routed through the worker pool — each `partial_fit` owns a
+/// [`PartialFitState`] that lives on the connection that created it and
+/// computes inline on the connection's reader thread, so a sync request
+/// blocks only its own fit (the front drives every shard concurrently).
+///
+/// Callers wrap the `Err` of either method into a §5 error reply; the
+/// connection survives, and the fit state is untouched by a rejected
+/// frame (epoch-mismatch syncs in particular leave the shard replayable).
+pub struct PartialSession {
+    fits: HashMap<u64, PartialFitState>,
+}
+
+impl Default for PartialSession {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PartialSession {
+    pub fn new() -> PartialSession {
+        PartialSession { fits: HashMap::new() }
+    }
+
+    /// Number of live partial fits on this connection.
+    pub fn live(&self) -> usize {
+        self.fits.len()
+    }
+
+    /// Handle a `partial_fit` frame (PROTOCOL.md §10): a §3 job
+    /// description plus `algorithm` / `shard_index` / `shard_count` and an
+    /// optional `history` of already-reduced centroid sets. Loads the
+    /// dataset, runs assignment pass 1 over this shard's slice, replays
+    /// the history (making re-dispatch after shard loss idempotent by
+    /// epoch), and replies with the current `partial` frame — `init`
+    /// included so the front learns `c_0` without loading the dataset.
+    pub fn partial_fit(&mut self, frame: &Json) -> Result<Json> {
+        let id = frame.get("id")?.as_usize()? as u64;
+        if self.fits.contains_key(&id) {
+            return Err(Error::Parse(format!("partial fit id {id} already live")));
+        }
+        let algo_name = match frame.get("algorithm") {
+            Ok(v) => v.as_str()?.to_string(),
+            Err(_) => "yinyang".to_string(),
+        };
+        let algo = Algorithm::from_name(&algo_name)?;
+        let shard_index = frame.get("shard_index")?.as_usize()?;
+        let shard_count = frame.get("shard_count")?.as_usize()?;
+        let history = match frame.get("history") {
+            Ok(v) => v.as_str()?.to_string(),
+            Err(_) => String::new(),
+        };
+        let req = FitRequest::from_json_ignoring(
+            frame,
+            &["op", "algorithm", "shard_index", "shard_count", "history"],
+        )?;
+        let ds = req.load_dataset()?;
+        let mut st = PartialFitState::new(algo, ds, req.kmeans.clone(), shard_index, shard_count)?;
+        // Replay: each history entry is one reduced k×d centroid set,
+        // k·d·8 hex chars, oldest first.
+        let chunk = st.k() * st.d() * 8;
+        if history.len() % chunk != 0 {
+            return Err(Error::Parse(format!(
+                "history length {} is not a multiple of one {}x{} centroid set ({chunk} hex chars)",
+                history.len(),
+                st.k(),
+                st.d()
+            )));
+        }
+        for entry in 0..history.len() / chunk {
+            let m = matrix_from_hex(&history[entry * chunk..(entry + 1) * chunk], st.k(), st.d())?;
+            st.apply_sync(&m)?;
+        }
+        let reply = partial_reply(id, &st, true);
+        self.fits.insert(id, st);
+        Ok(reply)
+    }
+
+    /// Handle a `centroid_sync` frame (PROTOCOL.md §10): the front's
+    /// reduced centroids for the epoch the shard just reported. `done:
+    /// false` advances the fit one assignment pass and replies with the
+    /// next `partial`; `done: true` seals it — the shard computes its
+    /// slice's exact inertia against the final centroids (no
+    /// reassignment), replies `partial_done`, and forgets the fit.
+    pub fn centroid_sync(&mut self, frame: &Json) -> Result<Json> {
+        let id = frame.get("id")?.as_usize()? as u64;
+        let epoch = frame.get("epoch")?.as_usize()?;
+        let hex = frame.get("centroids")?.as_str()?;
+        let done = matches!(frame.get("done"), Ok(Json::Bool(true)));
+        let st = self
+            .fits
+            .get_mut(&id)
+            .ok_or_else(|| Error::Parse(format!("unknown partial fit id {id}")))?;
+        if epoch != st.epoch() {
+            return Err(Error::Parse(format!(
+                "centroid_sync epoch {epoch}, shard is at epoch {}",
+                st.epoch()
+            )));
+        }
+        let m = matrix_from_hex(hex, st.k(), st.d())?;
+        if done {
+            let (assignments, inertia) = st.finish(&m)?;
+            let (lo, hi) = st.slice();
+            let shard_index = st.shard_index();
+            self.fits.remove(&id);
+            let mut out = std::collections::BTreeMap::new();
+            out.insert("op".into(), Json::Str("partial_done".into()));
+            out.insert("id".into(), Json::Num(id as f64));
+            out.insert("shard_index".into(), Json::Num(shard_index as f64));
+            out.insert("lo".into(), Json::Num(lo as f64));
+            out.insert("hi".into(), Json::Num(hi as f64));
+            out.insert("assignments".into(), Json::Str(u32s_to_hex(&assignments)));
+            out.insert("inertia".into(), Json::Str(inertia.to_hex()));
+            Ok(Json::Obj(out))
+        } else {
+            st.apply_sync(&m)?;
+            Ok(partial_reply(id, st, false))
+        }
+    }
+}
+
+/// Build a `partial` reply frame (PROTOCOL.md §10) for the fit's current
+/// epoch. `include_init` is set only when answering `partial_fit`.
+fn partial_reply(id: u64, st: &PartialFitState, include_init: bool) -> Json {
+    let acc = st.partial();
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("op".into(), Json::Str("partial".into()));
+    m.insert("id".into(), Json::Num(id as f64));
+    m.insert("epoch".into(), Json::Num(st.epoch() as f64));
+    m.insert("shard_index".into(), Json::Num(st.shard_index() as f64));
+    m.insert("d".into(), Json::Num(st.d() as f64));
+    m.insert(
+        "counts".into(),
+        Json::Arr(acc.counts().iter().map(|&c| Json::Num(c as f64)).collect()),
+    );
+    m.insert("sums".into(), Json::Str(acc.sums_hex()));
+    if include_init {
+        m.insert("init".into(), Json::Str(matrix_to_hex(st.init_centroids())));
+    }
+    Json::Obj(m)
 }
 
 #[cfg(test)]

@@ -18,6 +18,14 @@
 //!   watchdog into the same recovery path;
 //! * framing poison (a garbled frame) reads as link loss; stray replies
 //!   under unknown wire ids are ignored without drama.
+//!
+//! The map-reduce additions (ISSUE 6 / PROTOCOL.md §10): a single fit
+//! sliced across remote shards by [`MapReduceFit`] must stay
+//! **bit-identical** to the solo in-process fit even when a shard stalls
+//! mid-reduction (straggler watchdog), tears a `centroid_sync` reply, or
+//! dies mid-iteration and is re-dispatched with the §10 `history`
+//! replay — and a fit whose shard keeps dying must fail loudly once the
+//! re-dispatch budget runs out, never return a wrong answer.
 
 #[allow(dead_code)]
 #[path = "support/fake_shard.rs"]
@@ -27,8 +35,11 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use fake_shard::{FakeShard, Fault};
-use kpynq::cluster::{Cluster, ClusterConfig, ClusterHandle, ClientConn, ReconnectPolicy};
+use kpynq::cluster::{
+    Cluster, ClusterConfig, ClusterHandle, ClientConn, FitMode, MapReduceFit, ReconnectPolicy,
+};
 use kpynq::coordinator::{KpynqSystem, SystemConfig, SystemOutput};
+use kpynq::kmeans::{self, Algorithm, FitResult, KMeansConfig};
 use kpynq::serve::job::assignments_checksum;
 use kpynq::serve::net::{Daemon, NetConfig};
 use kpynq::serve::{FitRequest, FitResponse, JobStatus, ServeConfig, ServeReport};
@@ -420,4 +431,198 @@ fn refused_handshake_is_retried_until_the_peer_speaks_revision_one() {
     handle.shutdown();
     let report = thread.join().unwrap();
     assert_eq!(report.completed, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Map-reduce mode (PROTOCOL.md §10): one fit's *points* sliced across the
+// remotes, reduced each epoch, provably bit-identical to the solo fit even
+// under scripted shard faults.
+// ---------------------------------------------------------------------------
+
+/// A map-reduce-sized job: small enough that every §10 frame (exact sums
+/// at 160 hex chars per value, the slice's assignment vector) fits under
+/// the 64 KiB line cap with lots of headroom.
+fn mr_job(id: u64, data_seed: u64, k: usize, seed: u64) -> FitRequest {
+    FitRequest {
+        id,
+        dataset: "blobs".into(),
+        data_seed,
+        max_points: 400,
+        kmeans: KMeansConfig { k, seed, max_iters: 20, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// The map-reduce ground truth: the same request fit solo, in process —
+/// the exact run every sliced fit must reproduce bit for bit.
+fn solo_fit(req: &FitRequest, algo: Algorithm) -> FitResult {
+    let ds = req.to_run_config().unwrap().load_dataset().unwrap();
+    kmeans::fit(algo, &ds, &req.kmeans).unwrap()
+}
+
+/// A wire driver tuned for tests: quick reconnects, generous watchdog
+/// (individual tests shrink `shard_timeout` when the watchdog itself is
+/// under test).
+fn mapreduce(req: FitRequest, addrs: Vec<String>) -> MapReduceFit {
+    let mut mr = MapReduceFit::new(req, addrs);
+    mr.reconnect = fast_reconnect();
+    mr.shard_timeout = Duration::from_secs(30);
+    mr
+}
+
+fn assert_fit_bit_identical(tag: &str, solo: &FitResult, got: &FitResult) {
+    assert_eq!(got.assignments, solo.assignments, "{tag}: assignments diverged");
+    let solo_bits: Vec<u32> = solo.centroids.as_slice().iter().map(|v| v.to_bits()).collect();
+    let got_bits: Vec<u32> = got.centroids.as_slice().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got_bits, solo_bits, "{tag}: centroid bits diverged");
+    assert_eq!(got.inertia.to_bits(), solo.inertia.to_bits(), "{tag}: inertia bits diverged");
+    assert_eq!(got.iterations, solo.iterations, "{tag}: iteration count diverged");
+    assert_eq!(got.converged, solo.converged, "{tag}: converged flag diverged");
+    assert_eq!(
+        assignments_checksum(&got.assignments),
+        assignments_checksum(&solo.assignments),
+        "{tag}: FNV fingerprint diverged"
+    );
+}
+
+#[test]
+fn map_reduce_over_the_wire_matches_the_solo_fit() {
+    // No faults: the pure wire path — partial_fit fan-out, per-epoch
+    // reduction, centroid_sync rebroadcast, done seal — against two
+    // remote doubles running the real partial computations.
+    let a = FakeShard::start(vec![]);
+    let b = FakeShard::start(vec![]);
+    let req = mr_job(1, 900, 4, 61);
+    let solo = solo_fit(&req, Algorithm::Yinyang);
+    let fit = mapreduce(req, vec![a.addr(), b.addr()]).run().expect("map-reduce fit");
+    assert_fit_bit_identical("clean wire run", &solo, &fit);
+    assert_eq!(a.accepted(), 1);
+    assert_eq!(b.accepted(), 1);
+}
+
+#[test]
+fn stalled_partial_trips_the_straggler_watchdog_and_recovery_is_bit_identical() {
+    // Shard 0 goes silent before its epoch-1 partial with the socket held
+    // open — dead air EOF detection cannot see. A short shard_timeout
+    // lets the straggler watchdog force the link closed; the re-dispatch
+    // replays (an empty) history on a fresh connection and the fit must
+    // come out bit-identical anyway.
+    let a = FakeShard::start(vec![Fault::StallPartial {
+        at_epoch: 1,
+        dead_air: Duration::from_secs(20),
+    }]);
+    let b = FakeShard::start(vec![]);
+    let req = mr_job(2, 910, 4, 71);
+    let solo = solo_fit(&req, Algorithm::Yinyang);
+    let mut mr = mapreduce(req, vec![a.addr(), b.addr()]);
+    mr.shard_timeout = Duration::from_millis(750);
+    let fit = mr.run().expect("map-reduce fit survives a stalled reducer");
+    assert_fit_bit_identical("stalled reducer epoch", &solo, &fit);
+    assert!(a.accepted() >= 2, "the stalled link was force-closed and re-dialed");
+}
+
+#[test]
+fn shard_death_mid_iteration_is_redispatched_with_history_replay() {
+    // Shard 0 computes its epoch-2 partial and severs the socket instead
+    // of answering — death *mid-fit*, after real reduction state existed.
+    // The replacement connection starts from nothing, so recovery must
+    // replay the §10 history (c_1) to land on exactly the epoch the dead
+    // incarnation held. Replay is deterministic, hence idempotent, hence
+    // the bits must not move.
+    let a = FakeShard::start(vec![Fault::DieAtEpoch { at_epoch: 2 }]);
+    let b = FakeShard::start(vec![]);
+    let req = mr_job(3, 920, 5, 81);
+    let solo = solo_fit(&req, Algorithm::Yinyang);
+    assert!(
+        solo.iterations >= 2,
+        "the scripted death needs an epoch 2 — pick a different data_seed/seed"
+    );
+    let fit = mapreduce(req, vec![a.addr(), b.addr()])
+        .run()
+        .expect("map-reduce fit survives shard death");
+    assert_fit_bit_identical("shard death at epoch 2", &solo, &fit);
+    assert!(a.accepted() >= 2, "the dead shard's slice was re-dispatched");
+}
+
+#[test]
+fn torn_centroid_sync_reply_is_recovered_bit_identically() {
+    // Shard 0 answers the epoch-1 centroid_sync with half a reply line
+    // and severs — a torn frame mid-barrier. The front must read the
+    // truncated stream as link loss and re-dispatch with history.
+    let a = FakeShard::start(vec![Fault::TearSync { at_epoch: 1 }]);
+    let b = FakeShard::start(vec![]);
+    let req = mr_job(4, 930, 4, 91);
+    let solo = solo_fit(&req, Algorithm::Yinyang);
+    let fit = mapreduce(req, vec![a.addr(), b.addr()])
+        .run()
+        .expect("map-reduce fit survives a torn sync reply");
+    assert_fit_bit_identical("torn centroid_sync", &solo, &fit);
+    assert!(a.accepted() >= 2, "the torn link was replaced");
+}
+
+#[test]
+fn exhausted_redispatch_budget_fails_the_fit_loudly() {
+    // Every connection to shard 0 dies at epoch 1 — original plus both
+    // budgeted re-dispatches. A fit that cannot be completed must error,
+    // never return a partial (and therefore wrong) answer.
+    let die = Fault::DieAtEpoch { at_epoch: 1 };
+    let a = FakeShard::start(vec![die, die, die]);
+    let b = FakeShard::start(vec![]);
+    let mut mr = mapreduce(mr_job(5, 940, 3, 101), vec![a.addr(), b.addr()]);
+    mr.redispatch_budget = 2;
+    let err = mr.run().unwrap_err().to_string();
+    assert!(err.contains("re-dispatch budget exhausted"), "{err}");
+    assert_eq!(a.accepted(), 3, "original connection plus exactly the budgeted re-dials");
+}
+
+#[test]
+fn cluster_in_map_reduce_mode_answers_over_the_wire_bit_identically() {
+    // The full stack: external client → cluster front with
+    // `fit_mode = map-reduce` → every job sliced across both remote
+    // doubles — §4 replies must carry the solo fit's fingerprint,
+    // inertia and iteration count.
+    let a = FakeShard::start(vec![]);
+    let b = FakeShard::start(vec![]);
+    let cfg = ClusterConfig {
+        remote_shards: vec![a.addr(), b.addr()],
+        reconnect: fast_reconnect(),
+        health_timeout: Duration::from_secs(30),
+        max_restarts: 3,
+        fit_mode: FitMode::MapReduce,
+        serve: ServeConfig { workers: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let cluster =
+        Cluster::start("127.0.0.1:0", NetConfig::default(), cfg).expect("map-reduce cluster start");
+    let addr = cluster.local_addr();
+    let handle = cluster.handle();
+    let thread = std::thread::spawn(move || cluster.run().expect("cluster run"));
+    let mut cc = connect(&addr);
+
+    let jobs: Vec<FitRequest> =
+        (1..=3).map(|i| mr_job(i, 950 + i, 3 + (i as usize % 2), 170 + i)).collect();
+    for j in &jobs {
+        cc.submit(j).unwrap();
+    }
+    let replies = collect_by_id(&mut cc, jobs.len());
+    for j in &jobs {
+        let r = &replies[&j.id];
+        assert_eq!(r.status, JobStatus::Ok, "job {}: {}", j.id, r.detail);
+        let want = solo_fit(j, Algorithm::Yinyang);
+        let s = r.summary.expect("ok replies carry a summary");
+        assert_eq!(
+            s.assignments_fnv,
+            assignments_checksum(&want.assignments),
+            "job {}: a sliced fit must carry the solo fingerprint",
+            j.id
+        );
+        assert_eq!(s.inertia, want.inertia, "job {} inertia", j.id);
+        assert_eq!(s.iterations, want.iterations, "job {} iterations", j.id);
+    }
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.submitted, jobs.len() as u64);
+    assert_eq!(report.completed, jobs.len() as u64, "every sliced fit answered exactly once");
+    assert_eq!(report.dropped_replies, 0);
 }

@@ -1,0 +1,154 @@
+//! Partition-equivalence battery for map-reduce fits (PROTOCOL.md §10,
+//! DESIGN.md §2): slicing one fit's points across shards and reducing
+//! per-cluster partial sums each iteration must be **bit-identical** to
+//! the solo in-process fit — same assignments, same centroid bits, same
+//! inertia bits, same iteration count and convergence flag, same FNV §8
+//! fingerprint — for every algorithm variant and every shard count,
+//! including degenerate slicings (more shards than points ⇒ empty
+//! slices).
+//!
+//! The keystone is the exact reduction (`kmeans::reduce`): merges of
+//! `ExactSum` superaccumulators are exactly associative, so any
+//! partitioning produces the same canonical sums and hence the same
+//! `f64` centroids as the solo accumulation. These properties would fail
+//! instantly under naive `f32`/`f64` partial sums.
+
+use kpynq::cluster::fit_sliced;
+use kpynq::data::Dataset;
+use kpynq::kmeans::{self, Algorithm, FitResult, KMeansConfig};
+use kpynq::serve::job::assignments_checksum;
+use kpynq::util::matrix::Matrix;
+use kpynq::util::proptest::{run_cases_n, small_instance};
+use kpynq::util::rng::Rng;
+
+/// Bit-level equality check between a solo fit and a sliced fit.
+fn check_identical(
+    algo: Algorithm,
+    shards: usize,
+    solo: &FitResult,
+    sliced: &FitResult,
+) -> Result<(), String> {
+    let tag = format!("{} x {shards} shards", algo.name());
+    if sliced.assignments != solo.assignments {
+        return Err(format!("{tag}: assignments diverged"));
+    }
+    let solo_bits: Vec<u32> = solo.centroids.as_slice().iter().map(|v| v.to_bits()).collect();
+    let sliced_bits: Vec<u32> =
+        sliced.centroids.as_slice().iter().map(|v| v.to_bits()).collect();
+    if solo_bits != sliced_bits {
+        return Err(format!("{tag}: centroid bits diverged"));
+    }
+    if sliced.inertia.to_bits() != solo.inertia.to_bits() {
+        return Err(format!(
+            "{tag}: inertia diverged ({} vs {})",
+            sliced.inertia, solo.inertia
+        ));
+    }
+    if sliced.iterations != solo.iterations {
+        return Err(format!(
+            "{tag}: iterations {} vs {}",
+            sliced.iterations, solo.iterations
+        ));
+    }
+    if sliced.converged != solo.converged {
+        return Err(format!("{tag}: converged flag diverged"));
+    }
+    if assignments_checksum(&sliced.assignments) != assignments_checksum(&solo.assignments) {
+        return Err(format!("{tag}: FNV fingerprint diverged"));
+    }
+    Ok(())
+}
+
+fn random_dataset(rng: &mut Rng) -> (Dataset, usize) {
+    let (pts, n, d, k) = small_instance(rng);
+    let ds = Dataset {
+        name: "mapreduce-prop".into(),
+        points: Matrix::from_vec(pts, n, d).unwrap(),
+        labels: None,
+    };
+    (ds, k)
+}
+
+#[test]
+fn map_reduce_equals_solo_for_every_algorithm_and_shard_count() {
+    run_cases_n("map-reduce == solo fit", 0xA11, 30, |rng| {
+        let (ds, k) = random_dataset(rng);
+        let cfg = KMeansConfig {
+            k,
+            max_iters: 1 + rng.next_below(25),
+            seed: rng.next_u64(),
+            // Exercise non-default grouping geometry on the yinyang path.
+            groups: rng.next_below(4),
+            ..Default::default()
+        };
+        for algo in Algorithm::ALL {
+            let solo = kmeans::fit(algo, &ds, &cfg).map_err(|e| e.to_string())?;
+            for shards in 1..=5 {
+                let sliced =
+                    fit_sliced(algo, &ds, &cfg, shards).map_err(|e| e.to_string())?;
+                check_identical(algo, shards, &solo, &sliced)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn map_reduce_equals_solo_with_empty_slices() {
+    // More shards than points: some slices are empty and contribute an
+    // all-zero accumulator; the reduction must still match the solo fit
+    // bit for bit (and never produce NaN centroids — the empty-cluster
+    // guard keeps the previous row).
+    run_cases_n("empty slices are harmless", 0xE2, 20, |rng| {
+        let n = 1 + rng.next_below(6);
+        let d = 1 + rng.next_below(4);
+        let k = 1 + rng.next_below(n);
+        let pts: Vec<f32> = (0..n * d).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let ds = Dataset {
+            name: "tiny".into(),
+            points: Matrix::from_vec(pts, n, d).unwrap(),
+            labels: None,
+        };
+        let cfg = KMeansConfig { k, max_iters: 8, seed: rng.next_u64(), ..Default::default() };
+        for algo in Algorithm::ALL {
+            let solo = kmeans::fit(algo, &ds, &cfg).map_err(|e| e.to_string())?;
+            let shards = n + 2; // guaranteed empty slices
+            let sliced = fit_sliced(algo, &ds, &cfg, shards).map_err(|e| e.to_string())?;
+            check_identical(algo, shards, &solo, &sliced)?;
+            if !sliced.centroids.as_slice().iter().all(|v| v.is_finite()) {
+                return Err(format!("{}: non-finite centroid", algo.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn map_reduce_stats_track_the_solo_drift_trace() {
+    // Work counters are shard-local and deliberately not reproduced, but
+    // the per-iteration max_drift is partition-invariant — it is computed
+    // from the reduced centroids, which are bit-identical.
+    run_cases_n("max_drift trace is partition-invariant", 0xD1, 15, |rng| {
+        let (ds, k) = random_dataset(rng);
+        let cfg = KMeansConfig { k, max_iters: 12, seed: rng.next_u64(), ..Default::default() };
+        let solo = kmeans::fit(Algorithm::Yinyang, &ds, &cfg).map_err(|e| e.to_string())?;
+        let sliced =
+            fit_sliced(Algorithm::Yinyang, &ds, &cfg, 3).map_err(|e| e.to_string())?;
+        if solo.stats.iters.len() != sliced.stats.iters.len() {
+            return Err(format!(
+                "iter-stats length {} vs {}",
+                sliced.stats.iters.len(),
+                solo.stats.iters.len()
+            ));
+        }
+        for (i, (s, m)) in solo.stats.iters.iter().zip(&sliced.stats.iters).enumerate() {
+            if s.max_drift.to_bits() != m.max_drift.to_bits() {
+                return Err(format!(
+                    "iteration {i}: max_drift {} vs {}",
+                    m.max_drift, s.max_drift
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,6 +1,7 @@
 //! Protocol conformance: table-driven request/response vectors extracted
-//! from PROTOCOL.md §4–§6, run against **both** the production daemon
-//! (`serve::net::Daemon`) and the test double
+//! from PROTOCOL.md §4–§6 and the §10 map-reduce op pair
+//! (`partial_fit` / `centroid_sync`), run against **both** the production
+//! daemon (`serve::net::Daemon`) and the test double
 //! (`support/fake_shard.rs`).
 //!
 //! This is the three-way contract that keeps the server, the client and
@@ -81,6 +82,10 @@ impl Wire {
     }
 }
 
+fn is_lower_hex(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_hexdigit() && !c.is_ascii_uppercase())
+}
+
 fn describe(ev: &LineEvent) -> &'static str {
     match ev {
         LineEvent::Line(_) => "line",
@@ -108,6 +113,14 @@ enum Expect {
     OkJob(u64),
     /// A §4 `failed` response with a non-empty `detail`.
     FailedJob(u64),
+    /// A §10 `partial` frame: id/epoch/shard_index echoed, `counts` one
+    /// entry per cluster, `sums` at 160 hex chars per value, `init`
+    /// present exactly on replies to `partial_fit`.
+    Partial { id: u64, epoch: u64, shard_index: u64, init: bool },
+    /// A §10 `partial_done` frame: the sealed slice `[lo, hi)`, its
+    /// assignment vector at 8 hex chars per point, and a 160-hex-char
+    /// exact inertia.
+    PartialDone { id: u64, shard_index: u64 },
     /// The server closes the connection.
     Closed,
 }
@@ -120,6 +133,30 @@ struct Vector {
 
 fn ok_job_line(id: u64) -> String {
     format!("{{\"id\":{id},\"dataset\":\"blobs\",\"data_seed\":7,\"max_points\":300,\"k\":3,\"seed\":9}}")
+}
+
+/// A §10 `partial_fit` frame: the §3 job body of [`ok_job_line`] plus the
+/// op-specific keys (shard 0 of 2, the lloyd path — slicing must be
+/// algorithm-agnostic, the battery covers the rest).
+fn partial_fit_line(id: u64) -> String {
+    format!(
+        "{{\"id\":{id},\"dataset\":\"blobs\",\"data_seed\":7,\"max_points\":300,\"k\":3,\
+         \"seed\":9,\"op\":\"partial_fit\",\"algorithm\":\"lloyd\",\
+         \"shard_index\":0,\"shard_count\":2}}"
+    )
+}
+
+/// A §10 `centroid_sync` frame for the job above. `blobs` is d=16 and the
+/// job is k=3, so one centroid set is 3·16·8 = 384 hex chars; all-zero
+/// bits decode to the origin, which the shard applies without judgement —
+/// the *reduction's* correctness is the front's concern, the shard's
+/// contract is only to apply what it is told (PROTOCOL.md §10).
+fn sync_line(id: u64, epoch: u64, done: bool) -> String {
+    format!(
+        "{{\"op\":\"centroid_sync\",\"id\":{id},\"epoch\":{epoch},\
+         \"centroids\":\"{}\",\"done\":{done}}}",
+        "0".repeat(384)
+    )
 }
 
 fn vectors() -> Vec<Vector> {
@@ -208,6 +245,80 @@ fn vectors() -> Vec<Vector> {
             name: "bye delivers every owed reply, then closes (§6, §2)",
             send: vec![ok_job_line(9), r#"{"op":"bye"}"#.into()],
             expect: vec![Expect::OkJob(9), Expect::Closed],
+        },
+        // --- §10 map-reduce ops ------------------------------------------
+        Vector {
+            name: "partial_fit answers the epoch-1 partial with init (§10)",
+            send: vec![partial_fit_line(21)],
+            expect: vec![Expect::Partial { id: 21, epoch: 1, shard_index: 0, init: true }],
+        },
+        Vector {
+            name: "a duplicate partial_fit id is rejected, the first fit survives (§10, §5)",
+            send: vec![partial_fit_line(22), partial_fit_line(22), sync_line(22, 1, true)],
+            expect: vec![
+                Expect::Partial { id: 22, epoch: 1, shard_index: 0, init: true },
+                Expect::ErrorContains("already live"),
+                Expect::PartialDone { id: 22, shard_index: 0 },
+            ],
+        },
+        Vector {
+            name: "partial_fit without shard_count is a §5 error (§10)",
+            send: vec![
+                r#"{"id":23,"dataset":"blobs","data_seed":7,"max_points":300,"k":3,"seed":9,"op":"partial_fit","shard_index":0}"#.into(),
+            ],
+            expect: vec![Expect::ErrorContains("shard_count")],
+        },
+        Vector {
+            name: "partial_fit with an unknown algorithm is a §5 error (§10)",
+            send: vec![
+                r#"{"id":24,"dataset":"blobs","data_seed":7,"max_points":300,"k":3,"seed":9,"op":"partial_fit","algorithm":"dance","shard_index":0,"shard_count":2}"#.into(),
+            ],
+            expect: vec![Expect::ErrorContains("unknown algorithm")],
+        },
+        Vector {
+            name: "partial_fit with shard_index out of range is a §5 error (§10)",
+            send: vec![
+                r#"{"id":25,"dataset":"blobs","data_seed":7,"max_points":300,"k":3,"seed":9,"op":"partial_fit","shard_index":5,"shard_count":2}"#.into(),
+            ],
+            expect: vec![Expect::ErrorContains("out of range")],
+        },
+        Vector {
+            name: "partial_fit with a torn history is a §5 error (§10)",
+            send: vec![
+                r#"{"id":26,"dataset":"blobs","data_seed":7,"max_points":300,"k":3,"seed":9,"op":"partial_fit","shard_index":0,"shard_count":2,"history":"abcd"}"#.into(),
+            ],
+            expect: vec![Expect::ErrorContains("history length")],
+        },
+        Vector {
+            name: "centroid_sync for an unknown id is a §5 error (§10)",
+            send: vec![sync_line(77, 1, false)],
+            expect: vec![Expect::ErrorContains("unknown partial fit id")],
+        },
+        Vector {
+            name: "a continue sync advances the fit exactly one epoch, no init (§10)",
+            send: vec![partial_fit_line(27), sync_line(27, 1, false)],
+            expect: vec![
+                Expect::Partial { id: 27, epoch: 1, shard_index: 0, init: true },
+                Expect::Partial { id: 27, epoch: 2, shard_index: 0, init: false },
+            ],
+        },
+        Vector {
+            name: "an epoch-mismatched sync is rejected and leaves the fit replayable (§10, §5)",
+            send: vec![partial_fit_line(28), sync_line(28, 5, false), sync_line(28, 1, true)],
+            expect: vec![
+                Expect::Partial { id: 28, epoch: 1, shard_index: 0, init: true },
+                Expect::ErrorContains("shard is at epoch"),
+                Expect::PartialDone { id: 28, shard_index: 0 },
+            ],
+        },
+        Vector {
+            name: "a done sync seals the slice and forgets the fit (§10)",
+            send: vec![partial_fit_line(29), sync_line(29, 1, true), sync_line(29, 1, true)],
+            expect: vec![
+                Expect::Partial { id: 29, epoch: 1, shard_index: 0, init: true },
+                Expect::PartialDone { id: 29, shard_index: 0 },
+                Expect::ErrorContains("unknown partial fit id"),
+            ],
         },
     ]
 }
@@ -307,6 +418,57 @@ fn check(expect: &Expect, reply: Option<Json>, server: &str, vector: &str) {
                 !j.get("detail").unwrap().as_str().unwrap().is_empty(),
                 "{ctx}: failed replies carry the error text (§4)"
             );
+        }
+        Expect::Partial { id, epoch, shard_index, init } => {
+            assert_eq!(j.get("op").unwrap().as_str().unwrap(), "partial", "{ctx}: {j:?}");
+            assert_eq!(j.get("id").unwrap().as_usize().unwrap() as u64, *id, "{ctx}");
+            assert_eq!(j.get("epoch").unwrap().as_usize().unwrap() as u64, *epoch, "{ctx}: epoch");
+            assert_eq!(
+                j.get("shard_index").unwrap().as_usize().unwrap() as u64,
+                *shard_index,
+                "{ctx}: shard_index"
+            );
+            let d = j.get("d").unwrap().as_usize().unwrap();
+            let k = j.get("counts").unwrap().as_arr().unwrap().len();
+            assert!(k > 0, "{ctx}: counts must carry one entry per cluster");
+            for c in j.get("counts").unwrap().as_arr().unwrap() {
+                assert!(c.as_usize().is_ok(), "{ctx}: counts must be non-negative integers");
+            }
+            // §10 framing: 160 hex chars per exact sum, k·d sums.
+            let sums = j.get("sums").unwrap().as_str().unwrap().to_string();
+            assert_eq!(sums.len(), k * d * 160, "{ctx}: sums length");
+            assert!(is_lower_hex(&sums), "{ctx}: sums must be lowercase hex");
+            match j.get("init") {
+                Ok(v) if *init => {
+                    let hex = v.as_str().unwrap();
+                    assert_eq!(hex.len(), k * d * 8, "{ctx}: init length");
+                    assert!(is_lower_hex(hex), "{ctx}: init must be lowercase hex");
+                }
+                Err(_) if !*init => {}
+                other => panic!(
+                    "{ctx}: init present only on replies to partial_fit (§10), got {other:?}"
+                ),
+            }
+        }
+        Expect::PartialDone { id, shard_index } => {
+            assert_eq!(j.get("op").unwrap().as_str().unwrap(), "partial_done", "{ctx}: {j:?}");
+            assert_eq!(j.get("id").unwrap().as_usize().unwrap() as u64, *id, "{ctx}");
+            assert_eq!(
+                j.get("shard_index").unwrap().as_usize().unwrap() as u64,
+                *shard_index,
+                "{ctx}: shard_index"
+            );
+            let lo = j.get("lo").unwrap().as_usize().unwrap();
+            let hi = j.get("hi").unwrap().as_usize().unwrap();
+            assert!(lo <= hi, "{ctx}: slice bounds inverted");
+            // §10 framing: 8 hex chars per point assignment.
+            let assignments = j.get("assignments").unwrap().as_str().unwrap().to_string();
+            assert_eq!(assignments.len(), (hi - lo) * 8, "{ctx}: assignments length");
+            assert!(is_lower_hex(&assignments), "{ctx}: assignments must be lowercase hex");
+            // §10 framing: one 160-hex-char exact inertia.
+            let inertia = j.get("inertia").unwrap().as_str().unwrap().to_string();
+            assert_eq!(inertia.len(), 160, "{ctx}: inertia length");
+            assert!(is_lower_hex(&inertia), "{ctx}: inertia must be lowercase hex");
         }
         Expect::Closed => unreachable!("handled above"),
     }

@@ -20,7 +20,15 @@
 //!   (framing poison: a conformant client must treat the link as lost);
 //! * [`Fault::StaleWireId`] — emit a stray reply under a wire id that
 //!   was never submitted before the real one (a conformant front must
-//!   ignore it and deliver exactly one reply).
+//!   ignore it and deliver exactly one reply);
+//! * [`Fault::StallPartial`] — map-reduce (PROTOCOL.md §10): go silent
+//!   before writing the `partial` reply for one reducer epoch (the
+//!   stalled-reducer case the front's straggler watchdog must catch);
+//! * [`Fault::TearSync`] — map-reduce: answer one `centroid_sync` with
+//!   half a reply line, then sever (torn reply mid-barrier);
+//! * [`Fault::DieAtEpoch`] — map-reduce: sever the socket instead of
+//!   writing the `partial` reply for one epoch (shard death
+//!   mid-iteration; the front must re-dispatch the slice with history).
 //!
 //! Faults are consumed one per accepted connection, in order — so "drop
 //! the link mid-stream, then behave after the reconnect" is the script
@@ -33,10 +41,14 @@
 //! (`FitRequest::to_run_config` → `KpynqSystem::cluster`, synchronously,
 //! in submission order), so replies carry genuine §4 summaries and the
 //! §8 FNV fingerprint — a cluster fronting fake shards can be held to
-//! full bit-identity against direct engine runs. The same conformance
-//! suite (`rust/tests/protocol_conformance.rs`) runs against this double
-//! *and* the production daemon, which is what keeps the two from
-//! diverging.
+//! full bit-identity against direct engine runs. Map-reduce frames
+//! (PROTOCOL.md §10 `partial_fit` / `centroid_sync`) run the real
+//! library partial computations too, through the same connection-scoped
+//! `PartialSession` the daemon uses, so the chaos tests hold faulted
+//! map-reduce fits to bit-identity against solo runs. The same
+//! conformance suite (`rust/tests/protocol_conformance.rs`) runs against
+//! this double *and* the production daemon, which is what keeps the two
+//! from diverging.
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -49,6 +61,7 @@ use kpynq::coordinator::{KpynqSystem, SystemConfig};
 use kpynq::serve::codec::{write_line, LineEvent, LineReader, MAX_LINE_BYTES};
 use kpynq::serve::job::{assignments_checksum, FitRequest};
 use kpynq::serve::net::PROTO_VERSION;
+use kpynq::serve::PartialSession;
 use kpynq::util::json::Json;
 
 /// Accept-poll tick for the fake's (non-blocking) listener loop.
@@ -74,6 +87,19 @@ pub enum Fault {
     /// reply under a wire id that was never submitted; then answer
     /// properly.
     StaleWireId { after: usize },
+    /// Map-reduce (PROTOCOL.md §10): before writing the `partial` reply
+    /// whose epoch is `at_epoch`, go silent for `dead_air` with the
+    /// socket open — the stalled reducer epoch only a straggler watchdog
+    /// can see. Fires once per connection.
+    StallPartial { at_epoch: usize, dead_air: Duration },
+    /// Map-reduce: answer the `centroid_sync` carrying epoch `at_epoch`
+    /// with half a reply line, then sever the socket (torn reply
+    /// mid-barrier). Fires once per connection.
+    TearSync { at_epoch: usize },
+    /// Map-reduce: sever the socket instead of writing the `partial`
+    /// reply whose epoch is `at_epoch` — shard death mid-iteration. The
+    /// front must re-dispatch the slice with the §10 `history` replay.
+    DieAtEpoch { at_epoch: usize },
 }
 
 /// Counters and control flags shared by the listener and every
@@ -291,6 +317,11 @@ fn serve_conn(stream: TcpStream, fault: Fault, shared: &SharedState) {
     let mut reader = LineReader::new(stream);
     let mut lineno = 0u64;
     let mut answered_here = 0usize;
+    // Connection-scoped map-reduce fit state (PROTOCOL.md §10), exactly
+    // like the daemon: dropped with the connection, so a severed link
+    // discards its partial fits and the front re-dispatches with history.
+    let mut partial = PartialSession::new();
+    let mut partial_fault_fired = false;
     loop {
         match reader.next_event() {
             LineEvent::Line(bytes) => {
@@ -319,7 +350,15 @@ fn serve_conn(stream: TcpStream, fault: Fault, shared: &SharedState) {
                 };
                 if let Json::Obj(map) = &parsed {
                     if map.contains_key("op") {
-                        if !control_frame(map, lineno, &out, shared) {
+                        if !control_frame(
+                            map,
+                            lineno,
+                            &out,
+                            shared,
+                            &mut partial,
+                            fault,
+                            &mut partial_fault_fired,
+                        ) {
                             return;
                         }
                         continue;
@@ -370,12 +409,17 @@ fn serve_conn(stream: TcpStream, fault: Fault, shared: &SharedState) {
     }
 }
 
-/// §6 control frames; returns `false` when the connection should close.
+/// §6 control frames (plus the §10 map-reduce op pair); returns `false`
+/// when the connection should close.
+#[allow(clippy::too_many_arguments)]
 fn control_frame(
     map: &BTreeMap<String, Json>,
     lineno: u64,
     out: &Mutex<TcpStream>,
     shared: &SharedState,
+    partial: &mut PartialSession,
+    fault: Fault,
+    fault_fired: &mut bool,
 ) -> bool {
     let op = match map.get("op").map(|v| v.as_str()) {
         Some(Ok(op)) => op,
@@ -436,6 +480,26 @@ fn control_frame(
                 ]),
             );
             true
+        }
+        "partial_fit" => {
+            match partial.partial_fit(&Json::Obj(map.clone())) {
+                Ok(reply) => write_partial_reply("partial_fit", map, reply, fault, fault_fired, out),
+                Err(e) => {
+                    let _ = write_line(out, &error_reply(lineno, &e.to_string()));
+                    true
+                }
+            }
+        }
+        "centroid_sync" => {
+            match partial.centroid_sync(&Json::Obj(map.clone())) {
+                Ok(reply) => {
+                    write_partial_reply("centroid_sync", map, reply, fault, fault_fired, out)
+                }
+                Err(e) => {
+                    let _ = write_line(out, &error_reply(lineno, &e.to_string()));
+                    true
+                }
+            }
         }
         "bye" => false, // replies are already written (synchronous): close
         "shutdown" => {
@@ -517,5 +581,55 @@ fn answer_job(
             }
             ok
         }
+    }
+}
+
+/// Write one §10 map-reduce reply, applying the connection's scripted
+/// fault at its trigger point; returns `false` when the fault severed the
+/// connection. Triggers are epoch-addressed so each fault lands at a
+/// deterministic point in the reduction, not at a reply count that would
+/// shift with the front's retry behaviour.
+fn write_partial_reply(
+    op: &str,
+    request: &BTreeMap<String, Json>,
+    reply: Json,
+    fault: Fault,
+    fired: &mut bool,
+    out: &Mutex<TcpStream>,
+) -> bool {
+    let reply_epoch = reply.get("epoch").ok().and_then(|v| v.as_usize().ok());
+    let request_epoch = request.get("epoch").and_then(|v| v.as_usize().ok());
+    match fault {
+        Fault::StallPartial { at_epoch, dead_air }
+            if !*fired && reply_epoch == Some(at_epoch) =>
+        {
+            // Dead air before the epoch's partial: the reducer looks
+            // stalled; only the front's straggler watchdog can tell.
+            *fired = true;
+            std::thread::sleep(dead_air);
+            write_line(out, &reply.to_string()).is_ok()
+        }
+        Fault::DieAtEpoch { at_epoch } if !*fired && reply_epoch == Some(at_epoch) => {
+            // Shard death mid-iteration: the partial state advanced but
+            // its reply never leaves. The replacement connection starts a
+            // fresh PartialSession, so recovery must replay history.
+            *fired = true;
+            let w = out.lock().expect("fake writer poisoned");
+            let _ = w.shutdown(std::net::Shutdown::Both);
+            false
+        }
+        Fault::TearSync { at_epoch }
+            if !*fired && op == "centroid_sync" && request_epoch == Some(at_epoch) =>
+        {
+            *fired = true;
+            let line = reply.to_string();
+            let torn = &line.as_bytes()[..line.len() / 2];
+            let mut w = out.lock().expect("fake writer poisoned");
+            let _ = w.write_all(torn); // no newline — a torn frame
+            let _ = w.flush();
+            let _ = w.shutdown(std::net::Shutdown::Both);
+            false
+        }
+        _ => write_line(out, &reply.to_string()).is_ok(),
     }
 }

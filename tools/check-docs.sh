@@ -77,14 +77,14 @@ done
 net_rs=rust/src/serve/net.rs
 # Request ops: the match arms of control_frame ("ping" => ...).
 req_ops=$(sed -n '/fn control_frame/,/^}$/p' "$net_rs" \
-          | grep -oE '"[a-z-]+" =>' | sed 's/" =>$//;s/^"//' | sort -u)
+          | grep -oE '"[a-z_-]+" =>' | sed 's/" =>$//;s/^"//' | sort -u)
 if [ -z "$req_ops" ]; then
     echo "FAIL: could not extract control-frame ops from $net_rs (layout changed?)"
     fail=1
 fi
 # Reply/notice ops and stats keys the cluster layer (and any other wire
 # consumer) depends on; extend this list when the control surface grows.
-emitted="pong cancelled shutdown-ack idle-timeout queue_depth shards shards_alive"
+emitted="pong cancelled shutdown-ack idle-timeout queue_depth shards shards_alive partial partial_done"
 for tok in $req_ops $emitted; do
     # Ops appear JSON-quoted ("ping", inside example frames or tables),
     # stats keys as backticked `queue_depth`.
