@@ -9,7 +9,7 @@ PYTHON      ?= python3
 ARTIFACTS   := artifacts
 PY_SOURCES  := $(wildcard python/compile/*.py python/compile/kernels/*.py)
 
-.PHONY: all build test serve-test serve-net-test cluster-test cluster-remote-test mapreduce-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
+.PHONY: all build test serve-test serve-net-test cluster-test cluster-remote-test mapreduce-test obs-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
 
 all: build
 
@@ -50,6 +50,15 @@ cluster-remote-test:
 mapreduce-test:
 	cargo test -q --test mapreduce
 	cargo test -q --lib mapreduce
+
+# The observability layer (PROTOCOL.md §11): the obs unit tests (metrics
+# registry, trace ring, log sink) plus the wire suites that assert the
+# trace/metrics control frames, trace_id propagation and the
+# work-efficiency counters end to end.
+obs-test:
+	cargo test -q --lib obs
+	cargo test -q --test serve_net trace_and_metrics_surface_over_the_wire
+	cargo test -q --test cluster cluster_fit_yields_metrics_trace_and_work_counters
 
 # Docs consistency: DESIGN.md/PROTOCOL.md/EXPERIMENTS.md §-citations in the
 # source must resolve, and every serve::job wire field must be documented

@@ -22,7 +22,7 @@ use std::time::Instant;
 
 use kpynq::cluster::{ClientConn, Cluster, ClusterConfig};
 use kpynq::serve::{FitRequest, JobStatus, NetConfig, ServeConfig};
-use kpynq::util::bench::Table;
+use kpynq::util::bench::{self, Table};
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -107,5 +107,8 @@ fn main() {
             report.shard_restarts.to_string(),
         ]);
     }
+    bench::record_table("fanout", &t);
     t.print();
+    let path = bench::write_bench_json("cluster_fanout").expect("bench json");
+    println!("wrote {path}");
 }

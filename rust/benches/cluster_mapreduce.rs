@@ -22,7 +22,7 @@ use kpynq::cluster::fit_sliced;
 use kpynq::data::synth;
 use kpynq::kmeans::{self, Algorithm, KMeansConfig};
 use kpynq::serve::job::assignments_checksum;
-use kpynq::util::bench::Table;
+use kpynq::util::bench::{self, Table};
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -61,5 +61,8 @@ fn main() {
         ]);
         assert!(identical, "{shards}-shard slicing diverged from the solo fit");
     }
+    bench::record_table("mapreduce-scaling", &t);
     t.print();
+    let path = bench::write_bench_json("cluster_mapreduce").expect("bench json");
+    println!("wrote {path}");
 }

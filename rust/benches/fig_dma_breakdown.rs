@@ -9,7 +9,7 @@
 use kpynq::harness;
 use kpynq::hw::AccelConfig;
 use kpynq::kmeans::KMeansConfig;
-use kpynq::util::bench::Table;
+use kpynq::util::bench::{self, Table};
 
 fn bench_points() -> usize {
     std::env::var("KPYNQ_BENCH_POINTS").ok().and_then(|v| v.parse().ok()).unwrap_or(12_000)
@@ -35,6 +35,9 @@ fn main() {
             format!("{:.2}x", row.overlap_gain),
         ]);
     }
+    bench::record_table("dma-breakdown", &t);
     t.print();
     println!("(stage shares of serial cycle sum; overlap gain = serial / makespan)");
+    let path = bench::write_bench_json("fig_dma_breakdown").expect("bench json");
+    println!("wrote {path}");
 }

@@ -12,7 +12,7 @@ use kpynq::data::{normalize, synth};
 use kpynq::harness;
 use kpynq::hw::AccelConfig;
 use kpynq::kmeans::KMeansConfig;
-use kpynq::util::bench::Table;
+use kpynq::util::bench::{self, Table};
 
 fn bench_points() -> usize {
     std::env::var("KPYNQ_BENCH_POINTS").ok().and_then(|v| v.parse().ok()).unwrap_or(12_000)
@@ -45,9 +45,12 @@ fn main() {
             format!("{:.2}x", row.cycles_off as f64 / row.cycles_on as f64),
         ]);
     }
+    bench::record_table("filter-ablation", &t);
     t.print();
     println!(
         "reading: the multi-level filter removes the bulk of distance work after the \
          first (full-scan) iteration; uniform noise is the worst case."
     );
+    let path = bench::write_bench_json("fig_filter_ablation").expect("bench json");
+    println!("wrote {path}");
 }

@@ -10,7 +10,7 @@
 use kpynq::harness;
 use kpynq::hw::ZynqPart;
 use kpynq::kmeans::KMeansConfig;
-use kpynq::util::bench::Table;
+use kpynq::util::bench::{self, Table};
 
 fn bench_points() -> usize {
     std::env::var("KPYNQ_BENCH_POINTS").ok().and_then(|v| v.parse().ok()).unwrap_or(12_000)
@@ -46,6 +46,9 @@ fn main() {
                 spd,
             ]);
         }
+        bench::record_table(&format!("sweep-{}", ds.name), &t);
         t.print();
     }
+    let path = bench::write_bench_json("fig_parallelism_sweep").expect("bench json");
+    println!("wrote {path}");
 }

@@ -11,7 +11,7 @@ use kpynq::data::normalize;
 use kpynq::harness;
 use kpynq::hw::AccelConfig;
 use kpynq::kmeans::KMeansConfig;
-use kpynq::util::bench::Table;
+use kpynq::util::bench::{self, Table};
 
 fn scale(base: usize) -> usize {
     let cap: usize = std::env::var("KPYNQ_BENCH_POINTS")
@@ -55,6 +55,7 @@ fn main() {
             format!("{:.1}x", r.energy_efficiency),
         ]);
     }
+    bench::record_table("dimensionality-sweep", &t);
     t.print();
 
     println!("-- cluster-count sweep (n = {}, d = 32) --", scale(12_000));
@@ -70,6 +71,7 @@ fn main() {
             format!("{:.1}%", r.work_ratio * 100.0),
         ]);
     }
+    bench::record_table("cluster-count-sweep", &t);
     t.print();
 
     println!("-- size sweep (d = 32, k = 16) --");
@@ -85,5 +87,8 @@ fn main() {
             format!("{:.2}", r.cpu_seconds * 1e3),
         ]);
     }
+    bench::record_table("size-sweep", &t);
     t.print();
+    let path = bench::write_bench_json("fig_scaling").expect("bench json");
+    println!("wrote {path}");
 }

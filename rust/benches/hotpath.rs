@@ -19,7 +19,7 @@ use kpynq::kmeans::{self, init, Algorithm, KMeansConfig};
 use kpynq::runtime::native::NativeEngine;
 use kpynq::runtime::xla::XlaEngine;
 use kpynq::runtime::Engine;
-use kpynq::util::bench::{black_box, Bencher};
+use kpynq::util::bench::{self, black_box, Bencher};
 use kpynq::util::matrix::sq_dist;
 
 fn main() {
@@ -93,4 +93,6 @@ fn main() {
              feature (see Cargo.toml), then run `make artifacts` first"
         ),
     }
+    let path = bench::write_bench_json("hotpath").expect("bench json");
+    println!("wrote {path}");
 }

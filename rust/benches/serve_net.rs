@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use kpynq::serve::net::{Daemon, NetConfig};
 use kpynq::serve::ServeConfig;
-use kpynq::util::bench::Table;
+use kpynq::util::bench::{self, Table};
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -92,5 +92,8 @@ fn main() {
             report.peak_connections.to_string(),
         ]);
     }
+    bench::record_table("daemon-throughput", &t);
     t.print();
+    let path = bench::write_bench_json("serve_net").expect("bench json");
+    println!("wrote {path}");
 }

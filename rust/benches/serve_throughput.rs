@@ -13,7 +13,7 @@
 
 use kpynq::kmeans::KMeansConfig;
 use kpynq::serve::{FitRequest, Priority, ServeConfig, Server, ShedPolicy};
-use kpynq::util::bench::Table;
+use kpynq::util::bench::{self, Table};
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -76,5 +76,8 @@ fn main() {
             r.batched_jobs.to_string(),
         ]);
     }
+    bench::record_table("pool-throughput", &t);
     t.print();
+    let path = bench::write_bench_json("serve_throughput").expect("bench json");
+    println!("wrote {path}");
 }

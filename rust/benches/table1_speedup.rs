@@ -14,7 +14,7 @@
 use kpynq::harness::{self, render_speedup_table};
 use kpynq::hw::AccelConfig;
 use kpynq::kmeans::KMeansConfig;
-use kpynq::util::bench::Bencher;
+use kpynq::util::bench::{self, Bencher};
 
 fn bench_points() -> usize {
     std::env::var("KPYNQ_BENCH_POINTS").ok().and_then(|v| v.parse().ok()).unwrap_or(12_000)
@@ -45,4 +45,6 @@ fn main() {
         rows.iter().all(|r| r.speedup > 1.0),
         "KPynq must beat the CPU baseline on every dataset"
     );
+    let path = bench::write_bench_json("table1_speedup").expect("bench json");
+    println!("wrote {path}");
 }

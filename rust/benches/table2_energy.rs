@@ -8,7 +8,7 @@ use kpynq::harness;
 use kpynq::hw::energy::PowerModel;
 use kpynq::hw::AccelConfig;
 use kpynq::kmeans::KMeansConfig;
-use kpynq::util::bench::Table;
+use kpynq::util::bench::{self, Table};
 use kpynq::util::stats::geomean;
 
 fn bench_points() -> usize {
@@ -39,6 +39,7 @@ fn main() {
             format!("{:.2}", row.fpga_joules / row.fpga_seconds.max(1e-12)),
         ]);
     }
+    bench::record_table("energy-efficiency", &t);
     t.print();
     println!(
         "geomean energy-eff {:.1}x (max {:.1}x) | operating-point power ratio {:.1}x",
@@ -48,4 +49,6 @@ fn main() {
     );
     println!("paper: avg 150.90x, max 218x (implied power ratio ~51x)");
     assert!(effs.iter().all(|&e| e > 10.0), "energy-efficiency must be large");
+    let path = bench::write_bench_json("table2_energy").expect("bench json");
+    println!("wrote {path}");
 }

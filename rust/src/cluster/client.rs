@@ -146,6 +146,12 @@ pub struct ShardStats {
     pub shed_deadline: u64,
     pub peak_queue_depth: usize,
     pub active_conns: usize,
+    /// Milliseconds the shard session has been up (PROTOCOL.md §6;
+    /// 0 from servers predating the key).
+    pub uptime_ms: u64,
+    /// Queued jobs per priority lane, `[high, normal, low]` (PROTOCOL.md
+    /// §6; all-zero from servers predating the key).
+    pub queue_lanes: [usize; crate::serve::Priority::LEVELS],
 }
 
 impl ShardStats {
@@ -156,6 +162,12 @@ impl ShardStats {
                 Err(_) => Ok(0), // tolerate absent keys (older servers)
             }
         };
+        let mut queue_lanes = [0usize; crate::serve::Priority::LEVELS];
+        if let Ok(arr) = j.get("queue_lanes").and_then(|v| v.as_arr()) {
+            for (slot, v) in queue_lanes.iter_mut().zip(arr.iter()) {
+                *slot = v.as_usize().unwrap_or(0);
+            }
+        }
         Ok(ShardStats {
             submitted: num("submitted")?,
             queue_depth: num("queue_depth")? as usize,
@@ -163,6 +175,8 @@ impl ShardStats {
             shed_deadline: num("shed_deadline")?,
             peak_queue_depth: num("peak_queue_depth")? as usize,
             active_conns: num("active_conns")? as usize,
+            uptime_ms: num("uptime_ms")?,
+            queue_lanes,
         })
     }
 }
@@ -610,6 +624,35 @@ impl ClientConn {
         }
         self.wait_for(|ev| match ev {
             ClientEvent::Cancelled { cancelled, .. } => Some(*cancelled),
+            _ => None,
+        })
+    }
+
+    /// `{"op":"trace"}` round-trip (PROTOCOL.md §11): destructively drain
+    /// the server's span ring, returning the full reply object
+    /// (`events` array + `dropped` count).
+    pub fn drain_trace(&mut self) -> Result<Json> {
+        self.sender.shared.send_op("trace")?;
+        self.wait_for(|ev| match ev {
+            ClientEvent::Notice(j)
+                if matches!(j.get("op").and_then(|v| v.as_str()), Ok("trace")) =>
+            {
+                Some(j.clone())
+            }
+            _ => None,
+        })
+    }
+
+    /// `{"op":"metrics"}` round-trip (PROTOCOL.md §6): snapshot the
+    /// server's metrics registry (counters / gauges / histograms).
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.sender.shared.send_op("metrics")?;
+        self.wait_for(|ev| match ev {
+            ClientEvent::Notice(j)
+                if matches!(j.get("op").and_then(|v| v.as_str()), Ok("metrics")) =>
+            {
+                Some(j.clone())
+            }
             _ => None,
         })
     }

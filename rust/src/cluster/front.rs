@@ -60,6 +60,8 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::obs::metrics::names;
+use crate::obs::{mint_trace_id, Counter, Histogram, Registry, SpanEvent, TraceRing};
 use crate::serve::job::{FitRequest, FitResponse, FitSummary, JobStatus};
 use crate::serve::net::{advertised_backends, Daemon, DaemonHandle, FrontCore, NetConfig};
 use crate::serve::queue::QueueStats;
@@ -253,7 +255,22 @@ pub(crate) struct ClusterCore {
     routes: Mutex<HashMap<u64, ClusterRoute>>,
     router: Mutex<Router>,
     next_ticket: AtomicU64,
-    submitted: AtomicU64,
+    /// `cluster.jobs.submitted` — lives in the front's metrics registry.
+    submitted: Counter,
+    /// `cluster.requeues`: tickets re-dispatched after a shard death.
+    requeues: Counter,
+    /// `cluster.shard_restarts`: successful respawns/reconnects.
+    restarts: Counter,
+    /// Front-observed per-job latency histograms (`obs::metrics`), fed in
+    /// [`ClusterCore::deliver`] as each routed reply fans back in.
+    queue_wait_ms: Histogram,
+    latency_ms: Histogram,
+    /// Per-front metrics registry: two fronts in one process (tests) must
+    /// not merge counters.
+    registry: Arc<Registry>,
+    /// Front-side trace span ring (PROTOCOL.md §11): admit → dispatch →
+    /// reply, plus per-epoch reduce barriers in map-reduce mode.
+    ring: Arc<TraceRing>,
     acc: Mutex<ResponseAccumulator>,
     pending_cancels: Mutex<HashMap<u64, mpsc::Sender<bool>>>,
     /// Outstanding (submitted, unanswered) jobs, bounded by
@@ -298,6 +315,7 @@ impl ClusterCore {
         } else {
             cfg.remote_shards.clone()
         };
+        let registry = Arc::new(Registry::new());
         ClusterCore {
             serve: cfg.serve.clone(),
             shard_count: shards,
@@ -305,7 +323,13 @@ impl ClusterCore {
             routes: Mutex::new(HashMap::new()),
             router: Mutex::new(Router::new()),
             next_ticket: AtomicU64::new(1),
-            submitted: AtomicU64::new(0),
+            submitted: registry.counter(names::CLUSTER_JOBS_SUBMITTED),
+            requeues: registry.counter(names::CLUSTER_REQUEUES),
+            restarts: registry.counter(names::CLUSTER_SHARD_RESTARTS),
+            queue_wait_ms: registry.histogram(names::SERVE_QUEUE_WAIT_MS),
+            latency_ms: registry.histogram(names::SERVE_LATENCY_MS),
+            registry,
+            ring: Arc::new(TraceRing::default()),
             acc: Mutex::new(ResponseAccumulator::default()),
             pending_cancels: Mutex::new(HashMap::new()),
             admission: Mutex::new(0),
@@ -332,11 +356,15 @@ impl ClusterCore {
     fn dispatch_mapreduce(&self, ticket: u64, req: FitRequest) {
         let started = Instant::now();
         let backend = req.backend_name.clone();
+        let trace_id = req.trace_id.clone();
         let mut mr = MapReduceFit::new(req, self.mapreduce_addrs.clone());
         mr.reconnect = self.reconnect.clone();
         mr.shard_timeout = self.health_timeout;
         mr.redispatch_budget = self.max_restarts.max(1);
-        let resp = match mr.run() {
+        // Per-epoch reduce barriers land in the front's span ring
+        // (PROTOCOL.md §11) under the job's trace id.
+        mr.trace = Some((Arc::clone(&self.ring), trace_id.clone()));
+        let mut resp = match mr.run() {
             Ok(fit) => FitResponse {
                 id: ticket,
                 status: JobStatus::Ok,
@@ -349,9 +377,11 @@ impl ClusterCore {
                 summary: Some(FitSummary::of(&fit)),
                 fit: Some(fit),
                 report: None,
+                trace_id: String::new(),
             },
             Err(e) => FitResponse::failed(ticket, &backend, 0, 0, 0.0, &e),
         };
+        resp.trace_id = trace_id;
         self.deliver(resp);
     }
 
@@ -381,6 +411,13 @@ impl ClusterCore {
                 {
                     route.shard = shard;
                 }
+                if !req.trace_id.is_empty() {
+                    self.ring.push(
+                        SpanEvent::new(&req.trace_id, "dispatch")
+                            .num("ticket", ticket as f64)
+                            .num("shard", shard as f64),
+                    );
+                }
                 // A send failure means the writer just died; the request
                 // is already in `inflight`, so crash recovery requeues it.
                 let _ = tx.send(ShardCmd::Submit(req));
@@ -403,6 +440,16 @@ impl ClusterCore {
         let route = self.routes.lock().expect("routes poisoned").remove(&resp.id);
         if let Some(ClusterRoute { client_id, reply, .. }) = route {
             self.acc.lock().expect("accumulator poisoned").observe(&resp);
+            self.queue_wait_ms.record_ms(resp.queue_seconds * 1e3);
+            self.latency_ms.record_ms(resp.latency_seconds() * 1e3);
+            if !resp.trace_id.is_empty() {
+                self.ring.push(
+                    SpanEvent::new(&resp.trace_id, "reply")
+                        .num("ticket", resp.id as f64)
+                        .attr("status", Json::Str(resp.status.name().into()))
+                        .num("latency_ms", resp.latency_seconds() * 1e3),
+                );
+            }
             resp.id = client_id;
             if reply.send(resp).is_err() {
                 self.acc.lock().expect("accumulator poisoned").count_dropped_reply();
@@ -452,6 +499,7 @@ impl ClusterCore {
 
     fn requeue(&self, orphans: Vec<(u64, FitRequest)>) {
         for (ticket, req) in orphans {
+            self.requeues.inc();
             self.dispatch(ticket, req);
         }
     }
@@ -551,7 +599,7 @@ impl ClusterCore {
 
         let acc = std::mem::take(&mut *self.acc.lock().expect("accumulator poisoned"));
         let mut report = acc.into_report(
-            self.submitted.load(Ordering::SeqCst),
+            self.submitted.get(),
             &[],
             QueueStats::default(),
             self.started.elapsed().as_secs_f64(),
@@ -579,7 +627,7 @@ impl FrontCore for ClusterCore {
             *n += 1;
         }
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
-        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.submitted.inc();
         let client_id = req.id;
         self.routes.lock().expect("routes poisoned").insert(
             ticket,
@@ -587,6 +635,18 @@ impl FrontCore for ClusterCore {
         );
         let mut req = req;
         req.id = ticket;
+        // The front is where a job's trace id is settled (PROTOCOL.md
+        // §11): the client's own when supplied, else minted here. The
+        // shard-bound frame carries it, so the shard's session joins the
+        // same trace instead of minting a second id.
+        if req.trace_id.is_empty() {
+            req.trace_id = mint_trace_id();
+        }
+        self.ring.push(
+            SpanEvent::new(&req.trace_id, "admit")
+                .num("id", client_id as f64)
+                .num("ticket", ticket as f64),
+        );
         match self.fit_mode {
             FitMode::Request => self.dispatch(ticket, req),
             FitMode::MapReduce => self.dispatch_mapreduce(ticket, req),
@@ -621,11 +681,12 @@ impl FrontCore for ClusterCore {
     }
 
     fn stats_fields(&self, m: &mut BTreeMap<String, Json>) {
-        m.insert("submitted".to_string(), Json::Num(self.submitted.load(Ordering::SeqCst) as f64));
+        m.insert("submitted".to_string(), Json::Num(self.submitted.get() as f64));
         m.insert("queue_depth".to_string(), Json::Num(self.queue_depth_total() as f64));
         m.insert("shards".to_string(), Json::Num(self.shard_count as f64));
         m.insert("shards_alive".to_string(), Json::Num(self.shards_alive() as f64));
         let (mut shed_full, mut shed_deadline, mut peak) = (0u64, 0u64, 0usize);
+        let mut lanes = [0usize; crate::serve::Priority::LEVELS];
         {
             let links = self.links.lock().expect("links poisoned");
             for l in links.iter() {
@@ -633,11 +694,28 @@ impl FrontCore for ClusterCore {
                 shed_full += s.shed_full;
                 shed_deadline += s.shed_deadline;
                 peak = peak.max(s.peak_queue_depth);
+                for (total, lane) in lanes.iter_mut().zip(s.queue_lanes.iter()) {
+                    *total += lane;
+                }
             }
         }
         m.insert("shed_full".to_string(), Json::Num(shed_full as f64));
         m.insert("shed_deadline".to_string(), Json::Num(shed_deadline as f64));
         m.insert("peak_queue_depth".to_string(), Json::Num(peak as f64));
+        m.insert("uptime_ms".to_string(), Json::Num(self.started.elapsed().as_millis() as f64));
+        m.insert(
+            "queue_lanes".to_string(),
+            Json::Arr(lanes.iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+    }
+
+    fn drain_trace(&self) -> Json {
+        self.ring.drain_json()
+    }
+
+    fn metrics(&self) -> Json {
+        self.registry.gauge(names::SERVE_QUEUE_DEPTH).set(self.queue_depth_total() as i64);
+        self.registry.snapshot()
     }
 }
 
@@ -836,9 +914,15 @@ fn recover(
     if !core.mark_dead(shard, generation) {
         return; // stale report: a newer incarnation is already up
     }
+    crate::obs::log::warn("cluster", &format!("shard {shard} down (generation {generation})"));
     core.router.lock().expect("router poisoned").forget_shard(shard);
     let orphans = match host.respawn(shard) {
         Ok(conn) => {
+            core.restarts.inc();
+            crate::obs::log::info(
+                "cluster",
+                &format!("shard {shard} recovered (generation {})", host.generation(shard)),
+            );
             let link = spawn_link(
                 shard,
                 host.generation(shard),
@@ -848,7 +932,11 @@ fn recover(
             );
             core.install_link(shard, link)
         }
-        Err(_) => {
+        Err(e) => {
+            crate::obs::log::error(
+                "cluster",
+                &format!("shard {shard} abandoned (respawn budget spent): {e}"),
+            );
             host.abandon(shard);
             core.take_inflight(shard)
         }

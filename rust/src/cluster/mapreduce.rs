@@ -29,9 +29,11 @@
 //! recomputes, from the same deterministic inputs, exactly the state the
 //! lost shard held.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::driver::PartialFitState;
+use crate::obs::{SpanEvent, TraceRing};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::kmeans::reduce::{
@@ -161,6 +163,10 @@ pub struct MapReduceFit {
     pub shard_timeout: Duration,
     /// Re-dispatches allowed per shard before the fit fails.
     pub redispatch_budget: u32,
+    /// When set, every epoch's reduce barrier appends a `reduce-barrier`
+    /// span under the given trace id (PROTOCOL.md §11) — the cluster
+    /// front passes its own ring and the job's trace id here.
+    pub trace: Option<(Arc<TraceRing>, String)>,
 }
 
 impl MapReduceFit {
@@ -172,6 +178,7 @@ impl MapReduceFit {
             reconnect: ReconnectPolicy::default(),
             shard_timeout: Duration::from_secs(30),
             redispatch_budget: 3,
+            trace: None,
         }
     }
 
@@ -229,6 +236,15 @@ impl MapReduceFit {
             let (new_c, _) = acc.finalize(base);
             let (_, max_drift) = centroid_drifts(base, &new_c);
             stats.push(IterStats { max_drift, ..Default::default() });
+            if let Some((ring, trace_id)) = &self.trace {
+                if !trace_id.is_empty() {
+                    ring.push(
+                        SpanEvent::new(trace_id, "reduce-barrier")
+                            .num("epoch", epoch as f64)
+                            .num("max_drift", max_drift as f64),
+                    );
+                }
+            }
             let converged = (max_drift as f64) <= self.req.kmeans.tol;
             if converged || epoch >= self.req.kmeans.max_iters {
                 break (new_c, epoch, converged);

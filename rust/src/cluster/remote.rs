@@ -48,6 +48,8 @@
 //! so the front says `{"op":"bye"}` and leaves them serving.
 
 use crate::error::{Error, Result};
+use crate::obs::metrics::names;
+use crate::obs::{self, Counter};
 
 use super::client::{ClientConn, LinkShutdown, ReconnectPolicy};
 
@@ -76,7 +78,9 @@ pub struct RemoteFleet {
     /// reading of the cluster's `max_restarts`).
     max_reconnects: u32,
     links: Vec<RemoteLink>,
-    reconnects_total: u64,
+    /// Per-fleet reconnect count (a detached `obs::Counter`, not a global
+    /// registry entry: two fleets in one process — tests — must not merge).
+    reconnects_total: Counter,
 }
 
 impl RemoteFleet {
@@ -110,7 +114,10 @@ impl RemoteFleet {
             });
             conns.push(conn);
         }
-        Ok((RemoteFleet { policy, max_reconnects, links, reconnects_total: 0 }, conns))
+        Ok((
+            RemoteFleet { policy, max_reconnects, links, reconnects_total: Counter::new() },
+            conns,
+        ))
     }
 
     /// The address link `index` dials.
@@ -126,7 +133,7 @@ impl RemoteFleet {
     /// Total successful reconnects over the fleet's lifetime (the remote
     /// reading of the report's `shard_restarts`).
     pub fn reconnects_total(&self) -> u64 {
-        self.reconnects_total
+        self.reconnects_total.get()
     }
 
     /// Force link `index`'s socket closed (watchdog / chaos hook). The
@@ -143,6 +150,7 @@ impl RemoteFleet {
     /// around it from now on.
     pub fn abandon(&mut self, index: usize) {
         let l = &mut self.links[index];
+        obs::log::warn("cluster.remote", &format!("abandoning shard {index} ({})", l.addr));
         l.abandoned = true;
         l.shutdown.shutdown();
     }
@@ -174,7 +182,14 @@ impl RemoteFleet {
         l.reconnects += 1;
         l.generation += 1;
         l.shutdown = conn.shutdown_handle();
-        self.reconnects_total += 1;
+        self.reconnects_total.inc();
+        // The process-wide registry keeps the named metric; per-fleet
+        // accounting (the report's `shard_restarts`) stays local above.
+        obs::global().counter(names::CLUSTER_REMOTE_RECONNECTS).inc();
+        obs::log::info(
+            "cluster.remote",
+            &format!("reconnected shard {index} ({}) generation {}", l.addr, l.generation),
+        );
         Ok(conn)
     }
 }

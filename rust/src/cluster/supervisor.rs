@@ -24,6 +24,7 @@ use std::process::{Child, Command, Stdio};
 use std::time::Duration;
 
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::serve::ServeConfig;
 
 use super::client::{ClientConn, ReconnectPolicy};
@@ -126,6 +127,10 @@ impl Supervisor {
     /// shard's link sees EOF and reports it.
     pub fn kill(&mut self, index: usize) {
         let s = &mut self.shards[index];
+        obs::log::warn(
+            "cluster.supervisor",
+            &format!("killing shard {index} pid {} (watchdog/chaos)", s.child.id()),
+        );
         s.killed_by_supervisor = true;
         let _ = s.child.kill();
         let _ = s.child.wait(); // reap; a later respawn must not see a zombie
@@ -153,6 +158,10 @@ impl Supervisor {
     /// on and `respawn` refuses it.
     pub fn abandon(&mut self, index: usize) {
         let s = &mut self.shards[index];
+        obs::log::warn(
+            "cluster.supervisor",
+            &format!("abandoning shard {index} after {} restarts", s.restarts),
+        );
         s.abandoned = true;
         let _ = s.child.kill();
         let _ = s.child.wait();
@@ -184,6 +193,14 @@ impl Supervisor {
         proc_.restarts = restarts;
         proc_.generation = generation;
         self.restarts_total += 1;
+        obs::log::info(
+            "cluster.supervisor",
+            &format!(
+                "respawned shard {index} pid {} generation {generation} ({} restart(s) used)",
+                proc_.child.id(),
+                restarts
+            ),
+        );
         self.shards[index] = proc_;
         Ok(conn)
     }
@@ -261,17 +278,23 @@ impl Supervisor {
             },
         );
         match conn {
-            Ok(conn) => Ok((
-                ShardProc {
-                    child,
-                    socket,
-                    restarts: 0,
-                    generation: 0,
-                    abandoned: false,
-                    killed_by_supervisor: false,
-                },
-                conn,
-            )),
+            Ok(conn) => {
+                obs::log::debug(
+                    "cluster.supervisor",
+                    &format!("shard {index} up: pid {} at {addr}", child.id()),
+                );
+                Ok((
+                    ShardProc {
+                        child,
+                        socket,
+                        restarts: 0,
+                        generation: 0,
+                        abandoned: false,
+                        killed_by_supervisor: false,
+                    },
+                    conn,
+                ))
+            }
             Err(e) => {
                 let _ = child.kill();
                 let _ = child.wait();

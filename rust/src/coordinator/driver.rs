@@ -87,6 +87,7 @@ fn run_fpga(acfg: &AccelConfig, ds: &Dataset, kcfg: &KMeansConfig) -> Result<Sys
         dma_bytes: run.dma_bytes,
         tiles_dispatched: 0,
         points_rescanned: run.fit.stats.iters.iter().map(|i| i.survivors).sum(),
+        work: run.fit.stats.work_efficiency(ds.n(), kcfg.k),
     };
     Ok(SystemOutput { fit: run.fit, report })
 }
@@ -334,6 +335,7 @@ impl<'a> FitState<'a> {
     pub fn finish(self, backend_name: &str) -> SystemOutput {
         debug_assert!(self.pending.is_none(), "finish with an iteration in flight");
         let inertia = compute_inertia(self.ds, &self.centroids, &self.assignments);
+        let work = self.stats.work_efficiency(self.ds.n(), self.kcfg.k);
         let fit = FitResult {
             centroids: self.centroids,
             assignments: self.assignments,
@@ -347,6 +349,7 @@ impl<'a> FitState<'a> {
             wall_seconds: self.started.elapsed().as_secs_f64(),
             tiles_dispatched: self.tiles_dispatched,
             points_rescanned: self.points_rescanned,
+            work,
             ..Default::default()
         };
         SystemOutput { fit, report }
@@ -381,6 +384,30 @@ pub fn run_with_engine(
 ) -> Result<SystemOutput> {
     let name = engine.name();
     run_engine(engine, name, ds, kcfg)
+}
+
+/// Run one pinned kernel variant host-side — the serve layer's
+/// explicit-`algorithm` path (PROTOCOL.md §3). No engine loop, no tiling:
+/// the named algorithm's own iteration structure runs exactly as
+/// `kmeans::fit` defines it, so the full multi-level filter stats
+/// (group/point level included, for yinyang) flow into the report's
+/// work-efficiency rollup.
+pub fn run_algorithm(
+    algo: Algorithm,
+    backend_name: &str,
+    ds: &Dataset,
+    kcfg: &KMeansConfig,
+) -> Result<SystemOutput> {
+    let t0 = Instant::now();
+    let fit = crate::kmeans::fit(algo, ds, kcfg)?;
+    let report = RunReport {
+        backend: backend_name.into(),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        points_rescanned: fit.stats.iters.iter().map(|i| i.survivors).sum(),
+        work: fit.stats.work_efficiency(ds.n(), kcfg.k),
+        ..Default::default()
+    };
+    Ok(SystemOutput { fit, report })
 }
 
 /// Per-algorithm shard-local bound state for a [`PartialFitState`].
@@ -778,6 +805,23 @@ mod tests {
         assert_eq!(reference.fit.iterations, stepped.fit.iterations);
         assert_eq!(reference.report.tiles_dispatched, stepped.report.tiles_dispatched);
         assert_eq!(reference.report.points_rescanned, stepped.report.points_rescanned);
+    }
+
+    #[test]
+    fn pinned_kernels_report_their_filter_savings() {
+        // The acceptance contrast in miniature: yinyang prunes points via
+        // its global filter, lloyd (by construction) never does — and the
+        // report's work rollup must show exactly that.
+        let ds = synth::blobs(2000, 8, 5, 4);
+        let kcfg = KMeansConfig { k: 5, seed: 6, max_iters: 40, ..Default::default() };
+        let yy = run_algorithm(Algorithm::Yinyang, "native", &ds, &kcfg).unwrap();
+        let ll = run_algorithm(Algorithm::Lloyd, "native", &ds, &kcfg).unwrap();
+        assert!(yy.report.work.points_pruned > 0, "yinyang must prune");
+        assert!(yy.report.work.dist_comps_avoided > 0);
+        assert_eq!(ll.report.work.points_pruned, 0, "lloyd filters nothing");
+        assert_eq!(ll.report.work.dist_comps_avoided, 0);
+        // Same clustering either way — pinning changes work, not results.
+        assert_eq!(yy.fit.assignments, ll.fit.assignments);
     }
 
     #[test]

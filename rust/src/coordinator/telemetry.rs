@@ -1,6 +1,7 @@
 //! Run-level telemetry emitted by the coordinator.
 
 use crate::hw::CycleBreakdown;
+use crate::kmeans::metrics::WorkEfficiency;
 
 /// What a run cost, in whichever currencies the backend produces.
 #[derive(Clone, Debug, Default)]
@@ -24,6 +25,9 @@ pub struct RunReport {
     /// Points that survived filtering and were re-scanned, summed over
     /// iterations (engine backends; equals n × iters with filters off).
     pub points_rescanned: u64,
+    /// Whole-run triangle-inequality savings (all backends that track
+    /// per-iteration stats; all-zero otherwise — `kmeans::metrics`).
+    pub work: WorkEfficiency,
 }
 
 impl RunReport {

@@ -59,6 +59,64 @@ impl RunStats {
         }
         self.total_dist_comps() as f64 / lloyd as f64
     }
+
+    /// Points pruned whole by the global filter, summed over iterations —
+    /// the headline "work-efficiency" count (0 for Lloyd, which filters
+    /// nothing).
+    pub fn points_pruned(&self) -> u64 {
+        self.iters.iter().map(|i| i.filtered_global).sum()
+    }
+
+    /// Distance evaluations the filters avoided relative to standard
+    /// K-means at the same iteration count. Saturating: a run that did
+    /// extra bookkeeping distance work never reports negative savings.
+    pub fn dist_comps_avoided(&self, n: usize, k: usize) -> u64 {
+        self.lloyd_equivalent_dist_comps(n, k)
+            .saturating_sub(self.total_dist_comps())
+    }
+
+    /// Group-filter hit rate: the fraction of candidate work settled by
+    /// the group-level filter rather than by executed distance
+    /// computations — `filtered_group / (filtered_group + dist_comps)`,
+    /// summed over the run. 0.0 both for Lloyd (no filters) and for an
+    /// empty run.
+    pub fn group_hit_rate(&self) -> f64 {
+        let hits: u64 = self.iters.iter().map(|i| i.filtered_group).sum();
+        let denom = hits + self.total_dist_comps();
+        if denom == 0 {
+            0.0
+        } else {
+            hits as f64 / denom as f64
+        }
+    }
+
+    /// The whole-run work-efficiency rollup, as one copyable record —
+    /// what flows into `coordinator::telemetry::RunReport` and up through
+    /// `serve::FitSummary` onto the wire (PROTOCOL.md §4).
+    pub fn work_efficiency(&self, n: usize, k: usize) -> WorkEfficiency {
+        WorkEfficiency {
+            dist_comps: self.total_dist_comps(),
+            dist_comps_avoided: self.dist_comps_avoided(n, k),
+            points_pruned: self.points_pruned(),
+            group_hit_rate: self.group_hit_rate(),
+        }
+    }
+}
+
+/// Whole-run filter savings, in the units the paper's evaluation uses.
+/// All-zero when per-iteration stats are unavailable (map-reduce fits
+/// deliberately do not reproduce them — `cluster::mapreduce`): zero
+/// claims "nothing measured", never "everything avoided".
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkEfficiency {
+    /// Distance computations actually executed.
+    pub dist_comps: u64,
+    /// Distance computations avoided vs. Lloyd at the same iteration count.
+    pub dist_comps_avoided: u64,
+    /// Points pruned whole by the global filter.
+    pub points_pruned: u64,
+    /// Fraction of candidate work settled by the group-level filter.
+    pub group_hit_rate: f64,
 }
 
 #[cfg(test)]
@@ -80,5 +138,35 @@ mod tests {
     fn empty_run_is_nan() {
         let rs = RunStats::default();
         assert!(rs.work_ratio(10, 10).is_nan());
+    }
+
+    #[test]
+    fn work_efficiency_rolls_up_filter_savings() {
+        let mut rs = RunStats::default();
+        rs.push(IterStats { dist_comps: 100, ..Default::default() });
+        rs.push(IterStats {
+            dist_comps: 20,
+            filtered_global: 6,
+            filtered_group: 30,
+            ..Default::default()
+        });
+        // n=10, k=10 → lloyd would do 200; we did 120.
+        let eff = rs.work_efficiency(10, 10);
+        assert_eq!(eff.dist_comps, 120);
+        assert_eq!(eff.dist_comps_avoided, 80);
+        assert_eq!(eff.points_pruned, 6);
+        // 30 group hits vs 120 executed comps.
+        assert!((eff.group_hit_rate - 30.0 / 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn work_efficiency_of_an_unfiltered_run_is_zero_savings() {
+        // Lloyd: full scans, nothing filtered — and `avoided` must
+        // saturate at 0, never go negative, when comps == lloyd-equiv.
+        let mut rs = RunStats::default();
+        rs.push(IterStats { dist_comps: 100, ..Default::default() });
+        let eff = rs.work_efficiency(10, 10);
+        assert_eq!(eff, WorkEfficiency { dist_comps: 100, ..Default::default() });
+        assert_eq!(RunStats::default().work_efficiency(10, 10), WorkEfficiency::default());
     }
 }

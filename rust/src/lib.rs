@@ -55,6 +55,7 @@ pub mod error;
 pub mod harness;
 pub mod hw;
 pub mod kmeans;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod util;

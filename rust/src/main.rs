@@ -25,6 +25,7 @@ use kpynq::hw::filter_unit::FilterUnitConfig;
 use kpynq::hw::resource::{self, ProblemShape};
 use kpynq::hw::ZynqPart;
 use kpynq::kmeans;
+use kpynq::obs;
 use kpynq::runtime::manifest::Manifest;
 use kpynq::util::bench::Table;
 
@@ -104,6 +105,8 @@ fn print_help() {
          \x20 --listen ADDR         host:port (0 = ephemeral) or unix:/path.sock\n\
          \x20 --max-conns N         simultaneous client connections (default 32)\n\
          \x20 --idle-timeout-ms N   close idle connections after N ms (default 0 = never)\n\
+         \x20 --trace-log FILE      append drained trace spans to FILE as JSONL\n\
+         \x20                       (PROTOCOL.md \u{a7}11; spans also drain via {{\"op\":\"trace\"}})\n\
          \n\
          cluster options (cross-process shards behind one endpoint; same wire\n\
          protocol as the daemon — external clients cannot tell the difference):\n\
@@ -120,7 +123,10 @@ fn print_help() {
          \x20                       map-reduce (slice each job's points across all shards;\n\
          \x20                       one fit scales with shard count, results bit-identical)\n\
          \x20 plus the serve pool flags (--workers/--queue/--batch/--shed, per shard)\n\
-         \x20 and the daemon flags (--max-conns/--idle-timeout-ms, at the front)"
+         \x20 and the daemon flags (--max-conns/--idle-timeout-ms/--trace-log, at the front)\n\
+         \n\
+         environment:\n\
+         \x20 KPYNQ_LOG=error|warn|info|debug   stderr log threshold (default info)"
     );
 }
 
@@ -273,7 +279,7 @@ fn cmd_serve(args: &[String]) -> kpynq::Result<()> {
         Some(path) => std::fs::read_to_string(&path)?,
         None => {
             use std::io::Read;
-            eprintln!("reading NDJSON jobs from stdin (one object per line, EOF ends)...");
+            obs::log::info("serve", "reading NDJSON jobs from stdin (one object per line, EOF ends)...");
             let mut s = String::new();
             std::io::stdin().read_to_string(&mut s)?;
             s
@@ -289,13 +295,16 @@ fn cmd_serve(args: &[String]) -> kpynq::Result<()> {
             .map_err(|e| kpynq::Error::Parse(format!("jobs line {}: {e}", lineno + 1)))?;
         jobs.push(req);
     }
-    eprintln!(
-        "serving {} jobs on {} workers (queue {}, batch {}, {} policy)",
-        jobs.len(),
-        scfg.workers,
-        scfg.queue_capacity,
-        scfg.max_batch,
-        scfg.shed_policy.name()
+    obs::log::info(
+        "serve",
+        &format!(
+            "serving {} jobs on {} workers (queue {}, batch {}, {} policy)",
+            jobs.len(),
+            scfg.workers,
+            scfg.queue_capacity,
+            scfg.max_batch,
+            scfg.shed_policy.name()
+        ),
     );
 
     let outcome = Server::new(scfg)?.run(jobs)?;
@@ -310,7 +319,7 @@ fn cmd_serve(args: &[String]) -> kpynq::Result<()> {
     match &out_path {
         Some(path) => {
             std::fs::write(path, &ndjson)?;
-            eprintln!("wrote {} responses to {path}", outcome.responses.len());
+            obs::log::info("serve", &format!("wrote {} responses to {path}", outcome.responses.len()));
         }
         None => print!("{ndjson}"),
     }
@@ -339,16 +348,22 @@ fn cmd_serve_daemon(
             .parse()
             .map_err(|_| kpynq::Error::Config(format!("bad --idle-timeout-ms '{t}'")))?;
     }
+    if let Some(p) = take_opt(args, "--trace-log") {
+        net.trace_log = Some(p);
+    }
     net.validate()?;
 
     let daemon = Daemon::bind(addr, net, scfg)?;
-    eprintln!(
-        "kpynq serve: listening on {} (proto {PROTO_VERSION}, {} workers, batch {}, {} policy; \
-         NDJSON jobs per PROTOCOL.md, drain with {{\"op\":\"shutdown\"}})",
-        daemon.local_addr(),
-        daemon.serve_config().workers,
-        daemon.serve_config().max_batch,
-        daemon.serve_config().shed_policy.name(),
+    obs::log::info(
+        "serve",
+        &format!(
+            "kpynq serve: listening on {} (proto {PROTO_VERSION}, {} workers, batch {}, {} policy; \
+             NDJSON jobs per PROTOCOL.md, drain with {{\"op\":\"shutdown\"}})",
+            daemon.local_addr(),
+            daemon.serve_config().workers,
+            daemon.serve_config().max_batch,
+            daemon.serve_config().shed_policy.name(),
+        ),
     );
     let report = daemon.run()?;
     eprint!("{}", report.render());
@@ -443,6 +458,9 @@ fn cmd_cluster(args: &[String]) -> kpynq::Result<()> {
             .parse()
             .map_err(|_| kpynq::Error::Config(format!("bad --idle-timeout-ms '{t}'")))?;
     }
+    if let Some(p) = take_opt(args, "--trace-log") {
+        net.trace_log = Some(p);
+    }
     net.validate()?;
 
     let shards = ccfg.shard_count();
@@ -454,14 +472,17 @@ fn cmd_cluster(args: &[String]) -> kpynq::Result<()> {
         format!("remote: {}", ccfg.remote_shards.join(", "))
     };
     let cluster = Cluster::start(&listen, net, ccfg)?;
-    eprintln!(
-        "kpynq cluster: {} shards ({}) x {} workers behind {}, {} fits (proto \
-         {PROTO_VERSION}; NDJSON jobs per PROTOCOL.md, drain with {{\"op\":\"shutdown\"}})",
-        shards,
-        mode,
-        workers,
-        cluster.local_addr(),
-        fit_mode,
+    obs::log::info(
+        "cluster",
+        &format!(
+            "kpynq cluster: {} shards ({}) x {} workers behind {}, {} fits (proto \
+             {PROTO_VERSION}; NDJSON jobs per PROTOCOL.md, drain with {{\"op\":\"shutdown\"}})",
+            shards,
+            mode,
+            workers,
+            cluster.local_addr(),
+            fit_mode,
+        ),
     );
     let report = cluster.run()?;
     eprint!("{}", report.render());

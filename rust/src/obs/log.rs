@@ -1,0 +1,142 @@
+//! The leveled stderr sink: one parseable diagnostic stream for every
+//! process in the stack (CLI, serve daemon, cluster front, shards).
+//!
+//! Before this module, operational diagnostics were bare `eprintln!`
+//! calls scattered through `main.rs` and the cluster supervisor — fine
+//! for a CLI, useless for a fleet whose stderr is collected. Every line
+//! now has one shape:
+//!
+//! ```text
+//! [<epoch_ms>] [<level>] [<target>] <message>
+//! ```
+//!
+//! The threshold comes from `KPYNQ_LOG` (`error`, `warn`, `info`,
+//! `debug`; default `info`), read once on first use. An unknown value
+//! falls back to `info` rather than erroring — a typo in an env var must
+//! not take a daemon down. No timestamps formatting, no file sinks, no
+//! async: stderr is line-buffered enough for diagnostics, and anything
+//! heavier belongs in [`super::metrics`] or [`super::trace`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::trace::epoch_ms;
+
+/// Diagnostic severity, most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `KPYNQ_LOG` value; `None` for anything unrecognized.
+    pub fn from_name(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            3 => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+}
+
+/// Current threshold, encoded as `Level as u8`; `UNSET` means the env
+/// var has not been consulted yet.
+static THRESHOLD: AtomicU8 = AtomicU8::new(UNSET);
+const UNSET: u8 = u8::MAX;
+
+/// The active threshold, parsing `KPYNQ_LOG` on first call.
+pub fn threshold() -> Level {
+    match THRESHOLD.load(Ordering::Relaxed) {
+        UNSET => {
+            let level = std::env::var("KPYNQ_LOG")
+                .ok()
+                .and_then(|v| Level::from_name(&v))
+                .unwrap_or(Level::Info);
+            THRESHOLD.store(level as u8, Ordering::Relaxed);
+            level
+        }
+        v => Level::from_u8(v),
+    }
+}
+
+/// Override the threshold (tests; `--quiet`-style CLI flags).
+pub fn set_threshold(level: Level) {
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+/// Would a record at `level` be emitted?
+pub fn enabled(level: Level) -> bool {
+    level <= threshold()
+}
+
+/// Emit one record to stderr if `level` clears the threshold.
+pub fn log(level: Level, target: &str, msg: &str) {
+    if enabled(level) {
+        eprintln!("[{}] [{}] [{}] {}", epoch_ms(), level.name(), target, msg);
+    }
+}
+
+pub fn error(target: &str, msg: &str) {
+    log(Level::Error, target, msg);
+}
+
+pub fn warn(target: &str, msg: &str) {
+    log(Level::Warn, target, msg);
+}
+
+pub fn info(target: &str, msg: &str) {
+    log(Level::Info, target, msg);
+}
+
+pub fn debug(target: &str, msg: &str) {
+    log(Level::Debug, target, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_names_round_trip() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::from_name(l.name()), Some(l));
+        }
+        assert_eq!(Level::from_name("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::from_name("  Debug "), Some(Level::Debug));
+        assert_eq!(Level::from_name("verbose"), None);
+    }
+
+    #[test]
+    fn threshold_orders_severity() {
+        // Error is the most severe (lowest discriminant): a `warn`
+        // threshold passes error+warn and drops info+debug.
+        set_threshold(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_threshold(Level::Info); // restore the default for other tests
+    }
+}

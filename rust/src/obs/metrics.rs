@@ -1,0 +1,391 @@
+//! The metrics registry: named counters, gauges and log2-bucketed
+//! histograms behind lock-cheap cloneable handles.
+//!
+//! A [`Registry`] is a name → metric map. Handles ([`Counter`],
+//! [`Gauge`], [`Histogram`]) are `Arc`s over atomics: registering takes
+//! the registry lock once, but every subsequent `inc`/`set`/`record` is a
+//! single atomic op — the hot serving path never contends on the map.
+//! Registering a name twice returns the *same* underlying metric, so a
+//! queue and a session can share `serve.queue.depth` without plumbing.
+//!
+//! Registries are instantiable so each serving session owns its own
+//! numbers (two daemons embedded in one test process must not merge
+//! their `serve.jobs.submitted`); [`global()`] provides the process-wide
+//! one for code with no session to hang a registry on.
+//!
+//! [`Registry::snapshot`] encodes the whole registry as one
+//! `util::json::Json` object — the same encoder the wire uses — so a
+//! snapshot can be logged, asserted on in tests, or written as
+//! `BENCH_<name>.json` by the benches. Every name in [`names`] must be
+//! documented (backticked) in README.md or PROTOCOL.md; `tools/
+//! check-docs.sh` enforces this.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Canonical metric names registered by the stack. Kept in one block so
+/// `tools/check-docs.sh` can extract them and assert each is documented.
+pub mod names {
+    /// Jobs accepted by a local serve session.
+    pub const SERVE_JOBS_SUBMITTED: &str = "serve.jobs.submitted";
+    /// Current admission-queue depth (all priority lanes).
+    pub const SERVE_QUEUE_DEPTH: &str = "serve.queue.depth";
+    /// High-water admission-queue depth.
+    pub const SERVE_QUEUE_PEAK_DEPTH: &str = "serve.queue.peak_depth";
+    /// Jobs shed because the queue was full.
+    pub const SERVE_QUEUE_SHED_FULL: &str = "serve.queue.shed_full";
+    /// Jobs shed because their deadline expired while queued.
+    pub const SERVE_QUEUE_SHED_DEADLINE: &str = "serve.queue.shed_deadline";
+    /// Histogram of queue-wait time (ms) over answered jobs.
+    pub const SERVE_QUEUE_WAIT_MS: &str = "serve.queue_wait_ms";
+    /// Histogram of tenant-observed latency (queue + service, ms).
+    pub const SERVE_LATENCY_MS: &str = "serve.latency_ms";
+    /// Jobs accepted by a cluster front.
+    pub const CLUSTER_JOBS_SUBMITTED: &str = "cluster.jobs.submitted";
+    /// Jobs re-queued off a dead shard for re-dispatch.
+    pub const CLUSTER_REQUEUES: &str = "cluster.requeues";
+    /// Shard daemons restarted by the supervisor.
+    pub const CLUSTER_SHARD_RESTARTS: &str = "cluster.shard_restarts";
+    /// Remote-shard links re-established after a drop.
+    pub const CLUSTER_REMOTE_RECONNECTS: &str = "cluster.remote.reconnects";
+}
+
+/// A monotonically increasing counter handle (clone = same counter).
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// A free-standing counter, not attached to any registry — used where
+    /// a struct wants counter semantics without naming a metric.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A set-to-current-value gauge handle (clone = same gauge).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if `v` is higher — the high-water-mark op.
+    pub fn set_max(&self, v: i64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of log2 buckets: index 0 holds the value 0, index `i ≥ 1`
+/// holds values in `[2^(i-1), 2^i)`, up to index 64 (top bit set).
+const BUCKETS: usize = 65;
+
+#[derive(Debug)]
+struct HistInner {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for HistInner {
+    fn default() -> Self {
+        HistInner {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: [(); BUCKETS].map(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// A log2-bucketed histogram handle (clone = same histogram). Buckets
+/// double: 0, [1,2), [2,4), [4,8), … — coarse, but latency spans five
+/// orders of magnitude and log2 resolution is what capacity planning
+/// actually reads.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram(Arc<HistInner>);
+
+/// Bucket index for a recorded value: 0 for 0, else `64 - leading_zeros`
+/// (so bucket `i ≥ 1` covers `[2^(i-1), 2^i)`).
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// Exclusive upper bound of bucket `i`, as f64 (bucket 64's bound, 2^64,
+/// does not fit in u64).
+pub fn bucket_bound(i: usize) -> f64 {
+    if i == 0 {
+        1.0
+    } else {
+        (2.0f64).powi(i as i32)
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&self, v: u64) {
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+        self.0.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a millisecond duration given as f64 (negative clamps to 0).
+    pub fn record_ms(&self, ms: f64) {
+        self.record(if ms > 0.0 { ms as u64 } else { 0 });
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.0.sum.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the non-empty buckets as `(exclusive upper bound, n)`.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        (0..BUCKETS)
+            .filter_map(|i| {
+                let n = self.0.buckets[i].load(Ordering::Relaxed);
+                (n > 0).then(|| (bucket_bound(i), n))
+            })
+            .collect()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count() as f64));
+        m.insert("sum".to_string(), Json::Num(self.sum() as f64));
+        let buckets = self
+            .buckets()
+            .into_iter()
+            .map(|(le, n)| {
+                let mut b = BTreeMap::new();
+                b.insert("le".to_string(), Json::Num(le));
+                b.insert("n".to_string(), Json::Num(n as f64));
+                Json::Obj(b)
+            })
+            .collect();
+        m.insert("buckets".to_string(), Json::Arr(buckets));
+        Json::Obj(m)
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// A name → metric map. See the module docs for scoping guidance.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create the counter `name`. If `name` is already registered
+    /// as a different metric type, a detached handle is returned (the
+    /// snapshot keeps the first registration) — a programming error, but
+    /// one that must not panic a serving daemon.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.metrics.lock().expect("metrics registry poisoned");
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Counter::new()))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => Counter::new(),
+        }
+    }
+
+    /// Get-or-create the gauge `name` (type-mismatch rule as [`Registry::counter`]).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.metrics.lock().expect("metrics registry poisoned");
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Gauge::new()))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => Gauge::new(),
+        }
+    }
+
+    /// Get-or-create the histogram `name` (type-mismatch rule as [`Registry::counter`]).
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut m = self.metrics.lock().expect("metrics registry poisoned");
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Histogram::new()))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => Histogram::new(),
+        }
+    }
+
+    /// Encode the registry as one JSON object:
+    /// `{"counters":{..},"gauges":{..},"histograms":{..}}`.
+    pub fn snapshot(&self) -> Json {
+        let m = self.metrics.lock().expect("metrics registry poisoned");
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut histograms = BTreeMap::new();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => {
+                    counters.insert(name.clone(), Json::Num(c.get() as f64));
+                }
+                Metric::Gauge(g) => {
+                    gauges.insert(name.clone(), Json::Num(g.get() as f64));
+                }
+                Metric::Histogram(h) => {
+                    histograms.insert(name.clone(), h.to_json());
+                }
+            }
+        }
+        let mut out = BTreeMap::new();
+        out.insert("counters".to_string(), Json::Obj(counters));
+        out.insert("gauges".to_string(), Json::Obj(gauges));
+        out.insert("histograms".to_string(), Json::Obj(histograms));
+        Json::Obj(out)
+    }
+}
+
+/// The process-wide registry, for code with no session registry in reach
+/// (CLI paths, benches). Session-scoped counters belong on the session's
+/// own [`Registry`].
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_handles_share_state() {
+        let r = Registry::new();
+        let a = r.counter("jobs");
+        let b = r.counter("jobs");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let g = r.gauge("depth");
+        g.set(5);
+        g.set_max(3); // lower: no-op
+        assert_eq!(r.gauge("depth").get(), 5);
+        g.set_max(9);
+        assert_eq!(g.get(), 9);
+        g.add(-4);
+        assert_eq!(g.get(), 5);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_powers_of_two() {
+        // Bucket 0 holds exactly the value 0.
+        assert_eq!(bucket_index(0), 0);
+        // Bucket i (i ≥ 1) covers [2^(i-1), 2^i): both edges land where
+        // the encoder's `le` (exclusive upper bound) says they do.
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(7), 3);
+        assert_eq!(bucket_index(8), 4);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_bound(0), 1.0);
+        assert_eq!(bucket_bound(1), 2.0);
+        assert_eq!(bucket_bound(10), 1024.0);
+    }
+
+    #[test]
+    fn histogram_records_into_the_right_buckets() {
+        let h = Histogram::new();
+        for v in [0, 1, 1, 2, 3, 900] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 907);
+        let buckets = h.buckets();
+        // 0 → bucket 0 (le 1); 1,1 → bucket 1 (le 2); 2,3 → bucket 2
+        // (le 4); 900 → bucket 10 (le 1024).
+        assert_eq!(buckets, vec![(1.0, 1), (2.0, 2), (4.0, 2), (1024.0, 1)]);
+        // record_ms clamps negatives and truncates.
+        h.record_ms(-3.5);
+        h.record_ms(2.9);
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.buckets()[0], (1.0, 2));
+    }
+
+    #[test]
+    fn snapshot_encodes_all_three_kinds() {
+        let r = Registry::new();
+        r.counter("c").add(7);
+        r.gauge("g").set(-2);
+        r.histogram("h").record(5);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("counters").unwrap().get("c").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(snap.get("gauges").unwrap().get("g").unwrap().as_f64().unwrap(), -2.0);
+        let h = snap.get("histograms").unwrap().get("h").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(h.get("sum").unwrap().as_usize().unwrap(), 5);
+        // The snapshot re-parses through the crate's own JSON codec.
+        let text = snap.to_string();
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+    }
+
+    #[test]
+    fn type_mismatch_returns_detached_handle_without_panicking() {
+        let r = Registry::new();
+        r.counter("x").add(4);
+        let g = r.gauge("x"); // wrong type: detached
+        g.set(99);
+        assert_eq!(
+            r.snapshot().get("counters").unwrap().get("x").unwrap().as_usize().unwrap(),
+            4
+        );
+        assert!(r.snapshot().get("gauges").unwrap().get("x").is_err());
+    }
+}

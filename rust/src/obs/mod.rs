@@ -1,0 +1,35 @@
+//! `kpynq::obs` — the observability layer: a zero-dependency metrics
+//! registry, structured trace spans, and a leveled stderr log sink.
+//!
+//! Everything above the kernels now runs as a service (serve daemon,
+//! cluster front, remote shards), and services are debugged from their
+//! telemetry, not their stdout. This module gives the stack one shared
+//! vocabulary for that telemetry:
+//!
+//! - [`metrics`] — process- or session-scoped named counters, gauges and
+//!   log2-bucketed histograms behind lock-cheap [`Counter`]/[`Gauge`]/
+//!   [`Histogram`] handles, with a snapshot-to-JSON encoder. The serve
+//!   session, admission queue, net front and cluster front all register
+//!   their counters here instead of hand-threading atomics.
+//! - [`trace`] — per-request span events (`admit`, `queue-wait`,
+//!   `dispatch`, `reduce-barrier`, `reply`) keyed by a `trace_id` that is
+//!   minted at the front (or supplied by the client, PROTOCOL.md §11) and
+//!   propagated on every shard-bound frame. Events land in a bounded
+//!   in-memory [`TraceRing`], drainable as JSONL via the `{"op":"trace"}`
+//!   control frame or `kpynq serve --trace-log <path>`.
+//! - [`log`] — a leveled stderr sink (`KPYNQ_LOG=error|warn|info|debug`)
+//!   that the CLI, supervisor and remote-fleet diagnostics route through,
+//!   so daemon stderr is one parseable stream.
+//!
+//! Layer contracts live in DESIGN.md §2; the wire-visible parts
+//! (`trace_id`, the `trace` frame) are normative in PROTOCOL.md §11.
+//!
+//! Like the rest of the crate, this module uses only `std` — no tracing
+//! or metrics crates, per DESIGN.md §1.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{global, Counter, Gauge, Histogram, Registry};
+pub use trace::{mint_trace_id, SpanEvent, TraceRing};

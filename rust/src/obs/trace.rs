@@ -1,0 +1,239 @@
+//! Structured trace spans: per-request events keyed by a `trace_id`,
+//! buffered in a bounded in-memory ring.
+//!
+//! A trace is not a span *tree* — the stack is a pipeline, so a flat
+//! chain of timestamped events (`admit` → `queue-wait` → `dispatch` →
+//! `reduce-barrier`* → `reply`) reconstructs a request's life exactly,
+//! including across the front → shard hop: the front mints the
+//! `trace_id` (or accepts the client's, PROTOCOL.md §11) and the id
+//! rides the shard-bound `FitRequest`/`partial_fit` frames, so one grep
+//! over the drained JSONL follows one request through every process.
+//!
+//! The [`TraceRing`] is deliberately lossy: a fixed-capacity deque that
+//! drops its *oldest* events under pressure and counts what it dropped.
+//! Observability must never wedge serving — pushing is one short mutex
+//! hold, never an allocation spike, never a flush.
+//!
+//! Draining is destructive and cheap (`swap` out the deque); the
+//! `{"op":"trace"}` control frame and `--trace-log` both drain the same
+//! ring, so events are delivered exactly once to whoever asks first.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Default event capacity of a session's ring.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Milliseconds since the Unix epoch — the timestamp spans carry.
+pub fn epoch_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Mint a 16-hex-char trace id: epoch nanos mixed (splitmix64-style)
+/// with a process-local sequence and the pid, so concurrent mints —
+/// and mints from different shard processes — never collide in practice
+/// without any RNG dependency.
+pub fn mint_trace_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut x = nanos ^ seq.rotate_left(32) ^ ((std::process::id() as u64) << 17);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58476d1ce4e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d049bb133111eb);
+    x ^= x >> 31;
+    format!("{x:016x}")
+}
+
+/// One timestamped trace event. Serialized as a single JSON object —
+/// one JSONL line — by [`SpanEvent::to_json`].
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub trace_id: String,
+    /// Event name: `admit`, `queue-wait`, `dispatch`, `reduce-barrier`,
+    /// `reply` (PROTOCOL.md §11 lists the normative set).
+    pub name: String,
+    /// Milliseconds since the Unix epoch at emission.
+    pub ts_ms: u64,
+    /// Event-specific attributes (job id, shard, epoch, durations).
+    pub attrs: BTreeMap<String, Json>,
+}
+
+impl SpanEvent {
+    /// A new event stamped now, with no attributes yet.
+    pub fn new(trace_id: &str, name: &str) -> SpanEvent {
+        SpanEvent {
+            trace_id: trace_id.to_string(),
+            name: name.to_string(),
+            ts_ms: epoch_ms(),
+            attrs: BTreeMap::new(),
+        }
+    }
+
+    /// Builder-style attribute attachment.
+    pub fn attr(mut self, key: &str, value: Json) -> SpanEvent {
+        self.attrs.insert(key.to_string(), value);
+        self
+    }
+
+    /// Numeric-attribute convenience (ids, shard indices, millisecond
+    /// durations all flow through here).
+    pub fn num(self, key: &str, value: f64) -> SpanEvent {
+        self.attr(key, Json::Num(value))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("trace_id".to_string(), Json::Str(self.trace_id.clone()));
+        m.insert("event".to_string(), Json::Str(self.name.clone()));
+        m.insert("ts_ms".to_string(), Json::Num(self.ts_ms as f64));
+        for (k, v) in &self.attrs {
+            m.insert(k.clone(), v.clone());
+        }
+        Json::Obj(m)
+    }
+}
+
+#[derive(Debug, Default)]
+struct RingInner {
+    events: VecDeque<SpanEvent>,
+    /// Events evicted since the last drain.
+    dropped: u64,
+}
+
+/// A bounded, drop-oldest buffer of [`SpanEvent`]s. Cloneable via `Arc`
+/// at the owner's discretion; all methods take `&self`.
+#[derive(Debug)]
+pub struct TraceRing {
+    capacity: usize,
+    inner: Mutex<RingInner>,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        TraceRing::new(DEFAULT_RING_CAPACITY)
+    }
+}
+
+impl TraceRing {
+    /// A ring holding at most `capacity` events (capacity 0 is clamped
+    /// to 1 — a ring that can hold nothing would silently drop forever).
+    pub fn new(capacity: usize) -> TraceRing {
+        TraceRing { capacity: capacity.max(1), inner: Mutex::new(RingInner::default()) }
+    }
+
+    /// Append one event, evicting the oldest if the ring is full.
+    pub fn push(&self, event: SpanEvent) {
+        let mut inner = self.inner.lock().expect("trace ring poisoned");
+        if inner.events.len() >= self.capacity {
+            inner.events.pop_front();
+            inner.dropped += 1;
+        }
+        inner.events.push_back(event);
+    }
+
+    /// Buffered event count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("trace ring poisoned").events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take every buffered event (oldest first) plus the count of events
+    /// evicted since the previous drain. Destructive: each event is
+    /// delivered exactly once across all drainers.
+    pub fn drain(&self) -> (Vec<SpanEvent>, u64) {
+        let mut inner = self.inner.lock().expect("trace ring poisoned");
+        let events = std::mem::take(&mut inner.events).into();
+        let dropped = std::mem::take(&mut inner.dropped);
+        (events, dropped)
+    }
+
+    /// Drain into the wire shape of the `{"op":"trace"}` reply
+    /// (PROTOCOL.md §11): `{"op":"trace","events":[...],"dropped":N}`.
+    pub fn drain_json(&self) -> Json {
+        let (events, dropped) = self.drain();
+        let mut m = BTreeMap::new();
+        m.insert("op".to_string(), Json::Str("trace".into()));
+        m.insert(
+            "events".to_string(),
+            Json::Arr(events.iter().map(SpanEvent::to_json).collect()),
+        );
+        m.insert("dropped".to_string(), Json::Num(dropped as f64));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mint_produces_distinct_16_hex_ids() {
+        let a = mint_trace_id();
+        let b = mint_trace_id();
+        assert_eq!(a.len(), 16);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+        assert_ne!(a, b, "sequence component must separate same-instant mints");
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let ring = TraceRing::new(3);
+        for i in 0..5 {
+            ring.push(SpanEvent::new("t", "admit").num("id", i as f64));
+        }
+        assert_eq!(ring.len(), 3);
+        let (events, dropped) = ring.drain();
+        assert_eq!(dropped, 2);
+        let ids: Vec<usize> =
+            events.iter().map(|e| e.attrs["id"].as_usize().unwrap()).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest events are the ones evicted");
+        // Dropped counter resets per drain.
+        ring.push(SpanEvent::new("t", "reply"));
+        let (events, dropped) = ring.drain();
+        assert_eq!((events.len(), dropped), (1, 0));
+    }
+
+    #[test]
+    fn drain_is_destructive_and_ordered() {
+        let ring = TraceRing::default();
+        ring.push(SpanEvent::new("abc", "admit"));
+        ring.push(SpanEvent::new("abc", "reply"));
+        let (events, dropped) = ring.drain();
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].name, "admit");
+        assert_eq!(events[1].name, "reply");
+        assert!(ring.is_empty());
+        assert_eq!(ring.drain().0.len(), 0, "second drain finds nothing");
+    }
+
+    #[test]
+    fn drain_json_matches_the_wire_shape() {
+        let ring = TraceRing::new(8);
+        ring.push(SpanEvent::new("deadbeef00000000", "admit").num("id", 7.0));
+        let j = ring.drain_json();
+        assert_eq!(j.get("op").unwrap().as_str().unwrap(), "trace");
+        assert_eq!(j.get("dropped").unwrap().as_usize().unwrap(), 0);
+        let events = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("trace_id").unwrap().as_str().unwrap(), "deadbeef00000000");
+        assert_eq!(events[0].get("event").unwrap().as_str().unwrap(), "admit");
+        assert_eq!(events[0].get("id").unwrap().as_usize().unwrap(), 7);
+        assert!(events[0].get("ts_ms").is_ok());
+    }
+}

@@ -69,11 +69,13 @@ impl BatchKey {
     /// The request's key, when it is batchable at all: engine backends
     /// with a generator dataset (whose `d` is known without materialising
     /// anything). `None` marks a job that must run solo — fpga-sim (its
-    /// whole iteration structure lives inside the cycle simulator) and
-    /// file datasets (unknown `d` until loaded).
+    /// whole iteration structure lives inside the cycle simulator), file
+    /// datasets (unknown `d` until loaded), and explicit-`algorithm`
+    /// requests (a pinned kernel variant runs its own iteration loop, not
+    /// the lockstep engine loop).
     pub fn of(req: &FitRequest) -> Option<BatchKey> {
         let backend = BackendKind::from_name(&req.backend_name)?;
-        if backend == BackendKind::FpgaSim {
+        if backend == BackendKind::FpgaSim || !req.algorithm.is_empty() {
             return None;
         }
         let d = dataset_dim(&req.dataset)?;
@@ -172,6 +174,10 @@ mod tests {
         let mut file = FitRequest::default();
         file.dataset = "points.csv".into();
         assert_eq!(BatchKey::of(&file), None);
+
+        let mut pinned = FitRequest::default();
+        pinned.algorithm = "yinyang".into();
+        assert_eq!(BatchKey::of(&pinned), None, "pinned kernels run solo");
     }
 
     #[test]

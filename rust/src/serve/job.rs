@@ -24,7 +24,8 @@ use crate::config::RunConfig;
 use crate::coordinator::RunReport;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
-use crate::kmeans::{FitResult, KMeansConfig};
+use crate::kmeans::metrics::WorkEfficiency;
+use crate::kmeans::{Algorithm, FitResult, KMeansConfig};
 use crate::util::json::Json;
 
 /// Scheduling priority (PROTOCOL.md §7). Lower index pops first; FIFO
@@ -94,6 +95,16 @@ pub struct FitRequest {
     /// `elapsed >= deadline`, so `0` *always* sheds — a deliberate escape
     /// hatch for probing the shed path. `None` = no deadline.
     pub deadline_ms: Option<u64>,
+    /// Explicit kernel variant ("lloyd", "hamerly", "elkan", "yinyang");
+    /// empty = the backend's default execution path. Client-optional
+    /// (PROTOCOL.md §3/§9): naming an algorithm pins the fit to that
+    /// kernel so its work-efficiency counters are the ones reported.
+    /// Engine backends run explicit-algorithm jobs solo (never coalesced).
+    pub algorithm: String,
+    /// Client-supplied trace id (PROTOCOL.md §11); empty = the front
+    /// mints one at admission. Propagated on every shard-bound frame and
+    /// echoed byte-identically on the response.
+    pub trace_id: String,
 }
 
 impl Default for FitRequest {
@@ -109,6 +120,8 @@ impl Default for FitRequest {
             artifact_dir: "artifacts".into(),
             priority: Priority::Normal,
             deadline_ms: None,
+            algorithm: String::new(),
+            trace_id: String::new(),
         }
     }
 }
@@ -148,6 +161,8 @@ impl FitRequest {
             "artifact_dir",
             "priority",
             "deadline_ms",
+            "algorithm",
+            "trace_id",
         ];
         if let Some(unknown) = map.keys().find(|k| !KNOWN.contains(&k.as_str())) {
             return Err(Error::Parse(format!("unknown job key '{unknown}'")));
@@ -191,6 +206,23 @@ impl FitRequest {
         }
         if let Some(v) = map.get("deadline_ms") {
             req.deadline_ms = Some(v.as_usize()? as u64);
+        }
+        if let Some(v) = map.get("algorithm") {
+            req.algorithm = v.as_str()?.to_string();
+            if !req.algorithm.is_empty() {
+                // Fail unknown kernel names at admission, like backends.
+                Algorithm::from_name(&req.algorithm)?;
+                if req.backend_name == "fpga-sim" {
+                    return Err(Error::Parse(
+                        "the fpga-sim backend runs the accelerator's own multi-level \
+                         filter pipeline; 'algorithm' applies to engine backends only"
+                            .into(),
+                    ));
+                }
+            }
+        }
+        if let Some(v) = map.get("trace_id") {
+            req.trace_id = v.as_str()?.to_string();
         }
         // Fail malformed names (backend / normalize) at parse time.
         req.to_run_config()?;
@@ -242,6 +274,14 @@ impl FitRequest {
         m.insert("priority".into(), Json::Str(self.priority.name().into()));
         if let Some(d) = self.deadline_ms {
             m.insert("deadline_ms".into(), Json::Num(d as f64));
+        }
+        // Client-optional keys (§9): absent when unset, so pre-§11 wire
+        // shapes are reproduced byte-for-byte by default requests.
+        if !self.algorithm.is_empty() {
+            m.insert("algorithm".into(), Json::Str(self.algorithm.clone()));
+        }
+        if !self.trace_id.is_empty() {
+            m.insert("trace_id".into(), Json::Str(self.trace_id.clone()));
         }
         Json::Obj(m)
     }
@@ -316,6 +356,10 @@ pub struct FitSummary {
     pub converged: bool,
     /// FNV-1a fingerprint of the assignment vector (PROTOCOL.md §8).
     pub assignments_fnv: u64,
+    /// Whole-run triangle-inequality savings (PROTOCOL.md §4). All-zero
+    /// when the executing path tracked no per-iteration stats (map-reduce
+    /// fits) — "nothing measured", never "everything avoided".
+    pub work: WorkEfficiency,
 }
 
 impl FitSummary {
@@ -325,6 +369,7 @@ impl FitSummary {
             iterations: fit.iterations,
             converged: fit.converged,
             assignments_fnv: assignments_checksum(&fit.assignments),
+            work: fit.stats.work_efficiency(fit.assignments.len(), fit.centroids.rows()),
         }
     }
 }
@@ -357,6 +402,11 @@ pub struct FitResponse {
     /// responses received over the wire.
     pub fit: Option<FitResult>,
     pub report: Option<RunReport>,
+    /// The trace id this job ran under (PROTOCOL.md §11) — the client's
+    /// own if it supplied one, else the id the front minted. Empty only
+    /// on paths that never saw a request (batch-mode fronts without
+    /// tracing). Echoed byte-identically across fan-out/fan-in hops.
+    pub trace_id: String,
 }
 
 impl FitResponse {
@@ -373,6 +423,7 @@ impl FitResponse {
             summary: None,
             fit: None,
             report: None,
+            trace_id: String::new(),
         }
     }
 
@@ -396,6 +447,7 @@ impl FitResponse {
             summary: None,
             fit: None,
             report: None,
+            trace_id: String::new(),
         }
     }
 
@@ -424,6 +476,7 @@ impl FitResponse {
             summary: Some(FitSummary::of(&fit)),
             fit: Some(fit),
             report: Some(report),
+            trace_id: String::new(),
         }
     }
 
@@ -458,6 +511,18 @@ impl FitResponse {
                 "assignments_fnv".into(),
                 Json::Str(format!("{:016x}", s.assignments_fnv)),
             );
+            // Work-efficiency counters (PROTOCOL.md §4): always present on
+            // an `ok` line so peers can tell measured-zero from absent.
+            m.insert("dist_comps".into(), Json::Num(s.work.dist_comps as f64));
+            m.insert(
+                "dist_comps_avoided".into(),
+                Json::Num(s.work.dist_comps_avoided as f64),
+            );
+            m.insert("points_pruned".into(), Json::Num(s.work.points_pruned as f64));
+            m.insert("group_hit_rate".into(), Json::Num(s.work.group_hit_rate));
+        }
+        if !self.trace_id.is_empty() {
+            m.insert("trace_id".into(), Json::Str(self.trace_id.clone()));
         }
         Json::Obj(m)
     }
@@ -488,11 +553,22 @@ impl FitResponse {
             let assignments_fnv = u64::from_str_radix(fnv_hex, 16).map_err(|_| {
                 Error::Parse(format!("assignments_fnv '{fnv_hex}' is not 16 hex digits"))
             })?;
+            // Work counters are additive §9 keys: absent (an older peer)
+            // reads as zero, exactly the "nothing measured" convention.
+            let get_u64 = |key: &str| -> Result<u64> {
+                Ok(map.get(key).map(|v| v.as_usize()).transpose()?.unwrap_or(0) as u64)
+            };
             Some(FitSummary {
                 inertia: j.get("inertia")?.as_f64()?,
                 iterations: j.get("iterations")?.as_usize()?,
                 converged: matches!(j.get("converged")?, Json::Bool(true)),
                 assignments_fnv,
+                work: WorkEfficiency {
+                    dist_comps: get_u64("dist_comps")?,
+                    dist_comps_avoided: get_u64("dist_comps_avoided")?,
+                    points_pruned: get_u64("points_pruned")?,
+                    group_hit_rate: get_num("group_hit_rate")?,
+                },
             })
         } else {
             None
@@ -509,6 +585,7 @@ impl FitResponse {
             summary,
             fit: None,
             report: None,
+            trace_id: get_str("trace_id")?,
         })
     }
 }
@@ -601,6 +678,8 @@ mod tests {
             artifact_dir: "arts".into(),
             priority: Priority::High,
             deadline_ms: Some(900),
+            algorithm: "yinyang".into(),
+            trace_id: "deadbeefcafef00d".into(),
         };
         let back = FitRequest::from_json(&req.to_json()).unwrap();
         assert_eq!(back.id, req.id);
@@ -617,9 +696,35 @@ mod tests {
         assert_eq!(back.artifact_dir, req.artifact_dir);
         assert_eq!(back.priority, req.priority);
         assert_eq!(back.deadline_ms, req.deadline_ms);
-        // No deadline ⇒ no key on the wire (absent, not 0 — PROTOCOL.md §3).
+        assert_eq!(back.algorithm, req.algorithm);
+        assert_eq!(back.trace_id, req.trace_id);
+        // No deadline ⇒ no key on the wire (absent, not 0 — PROTOCOL.md §3);
+        // same for the client-optional §9 keys when unset.
         let none = FitRequest { deadline_ms: None, ..FitRequest::default() };
         assert!(none.to_json().get("deadline_ms").is_err());
+        assert!(none.to_json().get("algorithm").is_err());
+        assert!(none.to_json().get("trace_id").is_err());
+    }
+
+    #[test]
+    fn explicit_algorithm_is_validated_at_admission() {
+        let req =
+            FitRequest::from_json_line(r#"{"id": 1, "algorithm": "lloyd"}"#).unwrap();
+        assert_eq!(req.algorithm, "lloyd");
+        assert!(
+            FitRequest::from_json_line(r#"{"id": 1, "algorithm": "kmedoids"}"#).is_err(),
+            "unknown kernel names fail at parse time"
+        );
+        // Empty string means "backend default", identical to key-absent.
+        let blank = FitRequest::from_json_line(r#"{"id": 1, "algorithm": ""}"#).unwrap();
+        assert_eq!(blank.algorithm, "");
+        assert!(
+            FitRequest::from_json_line(
+                r#"{"id": 1, "backend": "fpga-sim", "algorithm": "lloyd"}"#
+            )
+            .is_err(),
+            "the simulator's filter pipeline is not pinnable"
+        );
     }
 
     #[test]
@@ -633,7 +738,9 @@ mod tests {
         )
         .unwrap();
         let fnv = assignments_checksum(&out.fit.assignments);
-        let resp = FitResponse::ok(3, "native".into(), 1, 2, 0.004, 0.09, out.fit, out.report);
+        let mut resp =
+            FitResponse::ok(3, "native".into(), 1, 2, 0.004, 0.09, out.fit, out.report);
+        resp.trace_id = "00c0ffee00c0ffee".into();
         let wire = resp.to_json().to_string();
         let back = FitResponse::from_wire_json(&Json::parse(&wire).unwrap()).unwrap();
         assert_eq!(back.id, 3);
@@ -642,9 +749,11 @@ mod tests {
         assert_eq!(back.summary.unwrap().assignments_fnv, fnv);
         assert_eq!(back.worker, 1);
         assert_eq!(back.batch_size, 2);
+        assert_eq!(back.trace_id, "00c0ffee00c0ffee");
         assert!(back.fit.is_none(), "the clustering itself never crosses the wire");
         // Re-serializing the parsed response is byte-stable: the summary
-        // (fingerprint included) survives a fan-out/fan-in hop unchanged.
+        // (fingerprint, work counters, trace id included) survives a
+        // fan-out/fan-in hop unchanged.
         assert_eq!(back.to_json().to_string(), wire);
     }
 

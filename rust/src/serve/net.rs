@@ -96,6 +96,15 @@ pub trait FrontCore: Send + Sync + 'static {
     /// the connection-level ones (`connections`, `active_conns`,
     /// `pending_here`).
     fn stats_fields(&self, m: &mut BTreeMap<String, Json>);
+
+    /// Drain the core's trace span ring into the `{"op":"trace"}` reply
+    /// shape (PROTOCOL.md §11). Destructive: each span is delivered to
+    /// exactly one drainer.
+    fn drain_trace(&self) -> Json;
+
+    /// Snapshot the core's metrics registry (`obs::metrics`) — the body
+    /// of the `{"op":"metrics"}` reply (PROTOCOL.md §6).
+    fn metrics(&self) -> Json;
 }
 
 impl FrontCore for ServeSession {
@@ -121,6 +130,19 @@ impl FrontCore for ServeSession {
         m.insert("shed_full".to_string(), Json::Num(q.shed_full as f64));
         m.insert("shed_deadline".to_string(), Json::Num(q.shed_deadline as f64));
         m.insert("peak_queue_depth".to_string(), Json::Num(q.peak_depth as f64));
+        m.insert("uptime_ms".to_string(), Json::Num(self.uptime_ms() as f64));
+        m.insert(
+            "queue_lanes".to_string(),
+            Json::Arr(self.lane_depths().iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+    }
+
+    fn drain_trace(&self) -> Json {
+        ServeSession::drain_trace(self)
+    }
+
+    fn metrics(&self) -> Json {
+        ServeSession::metrics(self)
     }
 }
 
@@ -144,11 +166,15 @@ pub struct NetConfig {
     /// Close a connection that has sent no traffic and has no pending
     /// responses for this many milliseconds. 0 disables the idle timeout.
     pub idle_timeout_ms: u64,
+    /// Append drained trace spans (PROTOCOL.md §11) to this file as JSONL
+    /// (`kpynq serve --trace-log <path>`): every `{"op":"trace"}` drain is
+    /// teed here, plus one final drain at shutdown.
+    pub trace_log: Option<String>,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
-        Self { max_conns: 32, idle_timeout_ms: 0 }
+        Self { max_conns: 32, idle_timeout_ms: 0, trace_log: None }
     }
 }
 
@@ -219,6 +245,9 @@ struct ConnCtx {
     counters: Arc<NetCounters>,
     shutdown: Arc<AtomicBool>,
     net: NetConfig,
+    /// The open `--trace-log` sink, shared by every connection (trace
+    /// drains tee into it) and the shutdown path (final drain).
+    trace_sink: Option<Arc<Mutex<std::fs::File>>>,
 }
 
 /// A bound-but-not-yet-running daemon. [`Daemon::run`] drives the accept
@@ -313,6 +342,16 @@ impl Daemon {
     ) -> Result<ServeReport> {
         let Daemon { listener, net, serve: _, shutdown } = self;
         let counters = Arc::new(NetCounters::default());
+        let trace_sink = match &net.trace_log {
+            Some(path) => Some(Arc::new(Mutex::new(
+                std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(path)
+                    .map_err(|e| Error::Config(format!("cannot open trace log '{path}': {e}")))?,
+            ))),
+            None => None,
+        };
         listener.set_nonblocking()?;
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
 
@@ -325,13 +364,17 @@ impl Daemon {
                 Err(_) | Ok(Accepted::Pending) => std::thread::sleep(ACCEPT_TICK),
                 Ok(Accepted::Tcp(stream)) => {
                     let _ = stream.set_nodelay(true);
-                    if let Some(h) = spawn_conn(stream, &core, &counters, &shutdown, &net) {
+                    if let Some(h) =
+                        spawn_conn(stream, &core, &counters, &shutdown, &net, &trace_sink)
+                    {
                         conns.push(h);
                     }
                 }
                 #[cfg(unix)]
                 Ok(Accepted::Unix(stream)) => {
-                    if let Some(h) = spawn_conn(stream, &core, &counters, &shutdown, &net) {
+                    if let Some(h) =
+                        spawn_conn(stream, &core, &counters, &shutdown, &net, &trace_sink)
+                    {
                         conns.push(h);
                     }
                 }
@@ -355,6 +398,10 @@ impl Daemon {
             _ => {}
         }
         drop(listener);
+        // Spans nobody drained over the wire still reach the trace log.
+        if let Some(sink) = &trace_sink {
+            append_trace(sink, &core.drain_trace());
+        }
         drop(core); // `finish` must now hold the only core reference
 
         let mut report = finish()?;
@@ -394,6 +441,7 @@ fn spawn_conn<S: WireStream>(
     counters: &Arc<NetCounters>,
     shutdown: &Arc<AtomicBool>,
     net: &NetConfig,
+    trace_sink: &Option<Arc<Mutex<std::fs::File>>>,
 ) -> Option<std::thread::JoinHandle<()>> {
     if counters.active.load(Ordering::SeqCst) >= net.max_conns {
         counters.refused.fetch_add(1, Ordering::SeqCst);
@@ -417,6 +465,7 @@ fn spawn_conn<S: WireStream>(
         counters: Arc::clone(counters),
         shutdown: Arc::clone(shutdown),
         net: net.clone(),
+        trace_sink: trace_sink.clone(),
     };
     Some(std::thread::spawn(move || {
         handle_conn(stream, &ctx);
@@ -666,6 +715,32 @@ fn control_frame<S: WireStream>(
             let _ = write_line(out, &Json::Obj(m).to_string());
             true
         }
+        "trace" => {
+            // Drain the core's span ring (PROTOCOL.md §11). Destructive —
+            // each span reaches exactly one wire drainer — but spans are
+            // teed to the `--trace-log` sink on their way out when one is
+            // configured.
+            let drained = ctx.core.drain_trace();
+            if let Some(sink) = &ctx.trace_sink {
+                append_trace(sink, &drained);
+            }
+            let _ = write_line(out, &drained.to_string());
+            true
+        }
+        "metrics" => {
+            // Non-destructive registry snapshot (PROTOCOL.md §6).
+            let mut m = match ctx.core.metrics() {
+                Json::Obj(m) => m,
+                other => {
+                    let mut m = BTreeMap::new();
+                    m.insert("snapshot".to_string(), other);
+                    m
+                }
+            };
+            m.insert("op".to_string(), Json::Str("metrics".into()));
+            let _ = write_line(out, &Json::Obj(m).to_string());
+            true
+        }
         "partial_fit" => {
             // Map-reduce fit, shard side (PROTOCOL.md §10). Computed
             // inline on this reader thread: the assignment pass blocks
@@ -715,6 +790,24 @@ fn greeting(ctx: &ConnCtx) -> String {
     Json::Obj(m).to_string()
 }
 
+/// Append a drained trace reply's spans to the `--trace-log` sink, one
+/// JSON object per line (JSONL). Write failures are swallowed: a full
+/// disk must not take the serving path down with it.
+fn append_trace(sink: &Mutex<std::fs::File>, drained: &Json) {
+    let events = match drained.get("events").and_then(|e| e.as_arr()) {
+        Ok(events) if !events.is_empty() => events,
+        _ => return,
+    };
+    let mut buf = String::new();
+    for e in events {
+        buf.push_str(&e.to_string());
+        buf.push('\n');
+    }
+    let mut f = sink.lock().expect("trace sink poisoned");
+    let _ = f.write_all(buf.as_bytes());
+    let _ = f.flush();
+}
+
 /// Structured protocol-error reply (PROTOCOL.md §5).
 fn error_reply(lineno: u64, msg: &str) -> String {
     let mut m = BTreeMap::new();
@@ -759,10 +852,54 @@ mod tests {
         assert!(m.contains_key("queue_depth"), "router least-loaded needs this");
         assert!(m.contains_key("submitted"));
         assert!(m.contains_key("peak_queue_depth"));
+        assert!(m.contains_key("uptime_ms"));
+        match m.get("queue_lanes") {
+            Some(Json::Arr(lanes)) => {
+                assert_eq!(lanes.len(), crate::serve::Priority::LEVELS)
+            }
+            other => panic!("queue_lanes must be a per-priority array, got {other:?}"),
+        }
         let mut g = BTreeMap::new();
         FrontCore::greeting_fields(&session, &mut g);
         assert!(g.contains_key("workers"));
         assert!(g.contains_key("backends"));
         session.shutdown();
+    }
+
+    #[test]
+    fn session_core_drains_trace_and_snapshots_metrics() {
+        let session = ServeSession::start(ServeConfig::default()).unwrap();
+        let snap = FrontCore::metrics(&session);
+        assert!(snap.get("counters").is_ok());
+        assert!(snap.get("histograms").is_ok());
+        let drained = FrontCore::drain_trace(&session);
+        assert_eq!(drained.get("op").unwrap().as_str().unwrap(), "trace");
+        assert!(drained.get("events").unwrap().as_arr().unwrap().is_empty());
+        session.shutdown();
+    }
+
+    #[test]
+    fn trace_log_appends_drained_spans_as_jsonl() {
+        use crate::obs::{SpanEvent, TraceRing};
+        let dir = std::env::temp_dir().join(format!("kpynq-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let sink = Mutex::new(
+            std::fs::OpenOptions::new().create(true).append(true).open(&path).unwrap(),
+        );
+        let ring = TraceRing::default();
+        ring.push(SpanEvent::new("00000000000000aa", "admit").num("ticket", 1.0));
+        ring.push(SpanEvent::new("00000000000000aa", "reply").num("ticket", 1.0));
+        append_trace(&sink, &ring.drain_json());
+        append_trace(&sink, &ring.drain_json()); // empty drain appends nothing
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{text}");
+        for line in &lines {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("trace_id").unwrap().as_str().unwrap(), "00000000000000aa");
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -125,6 +125,17 @@ impl AdmissionQueue {
         self.lanes.iter().map(VecDeque::len).sum()
     }
 
+    /// Per-priority-lane depths, indexed by [`Priority::index`] (high,
+    /// normal, low) — the `queue_lanes` field of the `stats` control
+    /// frame (PROTOCOL.md §6).
+    pub fn lane_depths(&self) -> [usize; Priority::LEVELS] {
+        let mut out = [0usize; Priority::LEVELS];
+        for (slot, lane) in out.iter_mut().zip(self.lanes.iter()) {
+            *slot = lane.len();
+        }
+        out
+    }
+
     pub fn is_empty(&self) -> bool {
         self.lanes.iter().all(VecDeque::is_empty)
     }
@@ -311,6 +322,12 @@ impl SharedQueue {
         self.inner.lock().expect("queue mutex poisoned").len()
     }
 
+    /// Per-priority-lane depths (high, normal, low) — see
+    /// [`AdmissionQueue::lane_depths`].
+    pub fn lane_depths(&self) -> [usize; Priority::LEVELS] {
+        self.inner.lock().expect("queue mutex poisoned").lane_depths()
+    }
+
     /// Close the queue and wake everyone (submitters shed, workers drain
     /// and exit).
     pub fn close(&self) {
@@ -352,10 +369,12 @@ mod tests {
         q.try_admit(req(2, Priority::Normal));
         q.try_admit(req(3, Priority::High));
         q.try_admit(req(4, Priority::High));
+        assert_eq!(q.lane_depths(), [2, 1, 1], "high, normal, low");
         let order: Vec<u64> = (0..4)
             .map(|_| q.pop_batch(1).batch.remove(0).req.id)
             .collect();
         assert_eq!(order, vec![3, 4, 2, 1]);
+        assert_eq!(q.lane_depths(), [0, 0, 0]);
     }
 
     #[test]

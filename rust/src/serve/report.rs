@@ -35,6 +35,12 @@ pub struct BackendUtilization {
     pub total_cycles: u64,
     pub tiles_dispatched: u64,
     pub points_rescanned: u64,
+    /// Distance computations actually performed (work-efficiency rollup
+    /// of `RunReport::work` across this backend's completed jobs).
+    pub dist_comps: u64,
+    /// Distance computations the triangle-inequality filters avoided
+    /// relative to Lloyd's n·k-per-iteration baseline.
+    pub dist_comps_avoided: u64,
 }
 
 /// What one serving session cost and delivered.
@@ -111,6 +117,8 @@ impl ResponseAccumulator {
                     u.total_cycles += rep.total_cycles;
                     u.tiles_dispatched += rep.tiles_dispatched;
                     u.points_rescanned += rep.points_rescanned;
+                    u.dist_comps += rep.work.dist_comps;
+                    u.dist_comps_avoided += rep.work.dist_comps_avoided;
                 }
             }
             JobStatus::Shed => self.shed += 1,
@@ -214,6 +222,8 @@ impl ServeReport {
                     m.total_cycles += u.total_cycles;
                     m.tiles_dispatched += u.tiles_dispatched;
                     m.points_rescanned += u.points_rescanned;
+                    m.dist_comps += u.dist_comps;
+                    m.dist_comps_avoided += u.dist_comps_avoided;
                 }
                 None => self.per_backend.push(u.clone()),
             }
@@ -287,6 +297,8 @@ impl ServeReport {
                 "fit_s",
                 "tiles",
                 "rescanned",
+                "dist_comps",
+                "avoided",
                 "sim_cycles",
             ]);
             for u in &self.per_backend {
@@ -296,6 +308,8 @@ impl ServeReport {
                     format!("{:.3}", u.fit_seconds),
                     u.tiles_dispatched.to_string(),
                     u.points_rescanned.to_string(),
+                    u.dist_comps.to_string(),
+                    u.dist_comps_avoided.to_string(),
                     u.total_cycles.to_string(),
                 ]);
             }
@@ -309,6 +323,7 @@ impl ServeReport {
 mod tests {
     use super::*;
     use crate::coordinator::RunReport;
+    use crate::kmeans::metrics::WorkEfficiency;
     use crate::serve::job::FitResponse;
 
     fn ok_response(id: u64, backend: &str, queue_s: f64, service_s: f64) -> FitResponse {
@@ -328,8 +343,15 @@ mod tests {
                 wall_seconds: service_s,
                 tiles_dispatched: 4,
                 points_rescanned: 100,
+                work: WorkEfficiency {
+                    dist_comps: 800,
+                    dist_comps_avoided: 200,
+                    points_pruned: 50,
+                    group_hit_rate: 0.25,
+                },
                 ..Default::default()
             }),
+            trace_id: String::new(),
         }
     }
 
@@ -362,6 +384,8 @@ mod tests {
         let native = r.per_backend.iter().find(|u| u.backend == "native").unwrap();
         assert_eq!(native.jobs, 2);
         assert_eq!(native.tiles_dispatched, 8);
+        assert_eq!(native.dist_comps, 1600, "work-efficiency counters sum per backend");
+        assert_eq!(native.dist_comps_avoided, 400);
         // 3 jobs / 0.4 s.
         assert!((r.throughput_jobs_per_sec() - 7.5).abs() < 1e-9);
         // 0.4 busy over 0.8 capacity.
@@ -459,6 +483,7 @@ mod tests {
         assert!((a.max_latency_ms - 400.0).abs() < 1e-9);
         let native = a.per_backend.iter().find(|u| u.backend == "native").unwrap();
         assert_eq!(native.jobs, 3, "per-backend rollups merge by name");
+        assert_eq!(native.dist_comps, 2400, "work counters merge too");
         assert!(a.per_backend.iter().any(|u| u.backend == "fpga-sim"));
     }
 

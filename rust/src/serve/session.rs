@@ -49,6 +49,8 @@ use crate::coordinator::driver::PartialFitState;
 use crate::error::{Error, Result};
 use crate::kmeans::reduce::{matrix_from_hex, matrix_to_hex, u32s_to_hex};
 use crate::kmeans::Algorithm;
+use crate::obs::metrics::names;
+use crate::obs::{mint_trace_id, Counter, Histogram, Registry, SpanEvent, TraceRing};
 use crate::util::json::Json;
 
 use super::job::{FitRequest, FitResponse};
@@ -77,13 +79,20 @@ pub struct ServeSession {
     queue: Arc<SharedQueue>,
     routes: Arc<Mutex<HashMap<u64, Route>>>,
     next_ticket: AtomicU64,
-    submitted: AtomicU64,
+    /// `serve.jobs.submitted` — the session's submission count lives in
+    /// the metrics registry, not a private atomic (`obs::metrics`).
+    submitted: Counter,
     /// Feeds shed-at-admission responses through the router so they get
     /// the same id-restoration and accounting as worker responses.
     tx: Option<mpsc::Sender<FitResponse>>,
     workers: Vec<JoinHandle<WorkerStats>>,
     router: Option<JoinHandle<ResponseAccumulator>>,
     started: Instant,
+    /// Per-session metrics registry: two daemons in one process (tests,
+    /// a cluster front with an embedded shard) must not merge counters.
+    registry: Arc<Registry>,
+    /// Per-session trace span ring (PROTOCOL.md §11).
+    ring: Arc<TraceRing>,
 }
 
 impl ServeSession {
@@ -93,29 +102,39 @@ impl ServeSession {
         cfg.validate()?;
         let queue = Arc::new(SharedQueue::new(cfg.queue_capacity));
         let routes: Arc<Mutex<HashMap<u64, Route>>> = Arc::new(Mutex::new(HashMap::new()));
+        let registry = Arc::new(Registry::new());
+        let ring = Arc::new(TraceRing::default());
         let (tx, rx) = mpsc::channel::<FitResponse>();
         let workers = (0..cfg.workers)
             .map(|w| {
                 let cfg = cfg.clone();
                 let queue = Arc::clone(&queue);
                 let tx = tx.clone();
-                std::thread::spawn(move || worker::run_worker(w, &cfg, &queue, &tx))
+                let ring = Arc::clone(&ring);
+                std::thread::spawn(move || worker::run_worker(w, &cfg, &queue, &tx, &ring))
             })
             .collect();
         let router = {
             let routes = Arc::clone(&routes);
-            std::thread::spawn(move || route_responses(rx, &routes))
+            let ring = Arc::clone(&ring);
+            let queue_wait = registry.histogram(names::SERVE_QUEUE_WAIT_MS);
+            let latency = registry.histogram(names::SERVE_LATENCY_MS);
+            std::thread::spawn(move || {
+                route_responses(rx, &routes, &ring, &queue_wait, &latency)
+            })
         };
         Ok(ServeSession {
             cfg,
             queue,
             routes,
             next_ticket: AtomicU64::new(1),
-            submitted: AtomicU64::new(0),
+            submitted: registry.counter(names::SERVE_JOBS_SUBMITTED),
             tx: Some(tx),
             workers,
             router: Some(router),
             started: Instant::now(),
+            registry,
+            ring,
         })
     }
 
@@ -126,7 +145,51 @@ impl ServeSession {
     /// Jobs submitted so far (admitted or shed — every one gets exactly
     /// one response).
     pub fn submitted(&self) -> u64 {
-        self.submitted.load(Ordering::Relaxed)
+        self.submitted.get()
+    }
+
+    /// Milliseconds since the session started — the `uptime_ms` field of
+    /// the `stats` control frame (PROTOCOL.md §6).
+    pub fn uptime_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// Per-priority-lane queue depths (high, normal, low) — the
+    /// `queue_lanes` field of the `stats` control frame (PROTOCOL.md §6).
+    pub fn lane_depths(&self) -> [usize; crate::serve::Priority::LEVELS] {
+        self.queue.lane_depths()
+    }
+
+    /// Snapshot the session's metrics registry as JSON, after syncing the
+    /// queue's mutex-guarded counters into it (the queue stays a pure
+    /// deterministic structure; the registry mirrors it at read time).
+    pub fn metrics(&self) -> Json {
+        let stats = self.queue.stats();
+        self.registry.gauge(names::SERVE_QUEUE_DEPTH).set(self.queue.depth() as i64);
+        self.registry
+            .gauge(names::SERVE_QUEUE_PEAK_DEPTH)
+            .set_max(stats.peak_depth as i64);
+        let shed_full = self.registry.counter(names::SERVE_QUEUE_SHED_FULL);
+        shed_full.add(stats.shed_full.saturating_sub(shed_full.get()));
+        let shed_deadline = self.registry.counter(names::SERVE_QUEUE_SHED_DEADLINE);
+        shed_deadline.add(stats.shed_deadline.saturating_sub(shed_deadline.get()));
+        self.registry.snapshot()
+    }
+
+    /// The session's metrics registry (tests; embedding fronts).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// The session's trace ring.
+    pub fn trace_ring(&self) -> &Arc<TraceRing> {
+        &self.ring
+    }
+
+    /// Drain the trace ring into the `{"op":"trace"}` reply shape
+    /// (PROTOCOL.md §11). Destructive — events deliver exactly once.
+    pub fn drain_trace(&self) -> Json {
+        self.ring.drain_json()
     }
 
     /// Live snapshot of the admission queue's counters (the `stats`
@@ -153,18 +216,30 @@ impl ServeSession {
     pub fn submit(&self, req: FitRequest, reply: &mpsc::Sender<FitResponse>) -> u64 {
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let client_id = req.id;
-        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.submitted.inc();
         self.routes
             .lock()
             .expect("route map poisoned")
             .insert(ticket, Route { client_id, reply: reply.clone() });
         let mut req = req;
         req.id = ticket;
+        // Every admitted job runs under a trace id (PROTOCOL.md §11): the
+        // client's own when supplied, else one minted here.
+        if req.trace_id.is_empty() {
+            req.trace_id = mint_trace_id();
+        }
+        self.ring.push(
+            SpanEvent::new(&req.trace_id, "admit")
+                .num("id", client_id as f64)
+                .num("ticket", ticket as f64),
+        );
         if let Submission::Shed { req, reason } = self.queue.submit(req, self.cfg.shed_policy) {
             // Route the shed response like any other so the submitter
             // sees its own id and the accumulator counts the shed.
             let tx = self.tx.as_ref().expect("session is live until shutdown");
-            let _ = tx.send(FitResponse::shed(req.id, reason, 0.0));
+            let mut resp = FitResponse::shed(req.id, reason, 0.0);
+            resp.trace_id = req.trace_id;
+            let _ = tx.send(resp);
         }
         ticket
     }
@@ -180,8 +255,10 @@ impl ServeSession {
         match self.queue.remove(ticket) {
             Some(p) => {
                 let tx = self.tx.as_ref().expect("session is live until shutdown");
-                let _ =
-                    tx.send(FitResponse::shed(ticket, "cancelled by client", p.queue_seconds()));
+                let mut resp =
+                    FitResponse::shed(ticket, "cancelled by client", p.queue_seconds());
+                resp.trace_id = p.req.trace_id;
+                let _ = tx.send(resp);
                 true
             }
             None => false,
@@ -207,7 +284,7 @@ impl ServeSession {
             .join()
             .expect("serve router panicked");
         acc.into_report(
-            self.submitted.load(Ordering::Relaxed),
+            self.submitted.get(),
             &worker_stats,
             self.queue.stats(),
             self.started.elapsed().as_secs_f64(),
@@ -226,15 +303,30 @@ impl Drop for ServeSession {
 
 /// Router main loop: restore client ids, deliver, accumulate. Responses
 /// whose submitter has gone (a disconnected socket client) are counted,
-/// not delivered — the job's engine time was already spent.
+/// not delivered — the job's engine time was already spent. Every
+/// response also feeds the latency histograms and closes its trace with a
+/// `reply` span (PROTOCOL.md §11).
 fn route_responses(
     rx: mpsc::Receiver<FitResponse>,
     routes: &Mutex<HashMap<u64, Route>>,
+    ring: &TraceRing,
+    queue_wait_ms: &Histogram,
+    latency_ms: &Histogram,
 ) -> ResponseAccumulator {
     let mut acc = ResponseAccumulator::default();
     for mut resp in rx {
         acc.observe(&resp);
+        queue_wait_ms.record_ms(resp.queue_seconds * 1e3);
+        latency_ms.record_ms(resp.latency_seconds() * 1e3);
         let route = routes.lock().expect("route map poisoned").remove(&resp.id);
+        if !resp.trace_id.is_empty() {
+            ring.push(
+                SpanEvent::new(&resp.trace_id, "reply")
+                    .num("ticket", resp.id as f64)
+                    .attr("status", Json::Str(resp.status.name().into()))
+                    .num("latency_ms", resp.latency_seconds() * 1e3),
+            );
+        }
         match route {
             Some(Route { client_id, reply }) => {
                 resp.id = client_id;
@@ -498,6 +590,61 @@ mod tests {
         assert_eq!(report.submitted, 2);
         assert_eq!(report.completed, 1);
         assert_eq!(report.shed, 1);
+    }
+
+    #[test]
+    fn a_served_job_leaves_a_full_span_chain_and_metrics() {
+        let session = ServeSession::start(ServeConfig { workers: 1, ..Default::default() })
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let mut traced = job(9, 5);
+        traced.trace_id = "00000000deadbeef".into();
+        session.submit(traced, &tx);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.status, JobStatus::Ok, "{}", resp.detail);
+        assert_eq!(resp.trace_id, "00000000deadbeef", "client trace ids echo verbatim");
+
+        // Metrics: the submission counter and both latency histograms
+        // (fed by the router before it delivered our response).
+        let m = session.metrics();
+        let counters = m.get("counters").unwrap();
+        assert_eq!(
+            counters.get("serve.jobs.submitted").unwrap().as_usize().unwrap(),
+            1
+        );
+        let hists = m.get("histograms").unwrap();
+        for name in ["serve.queue_wait_ms", "serve.latency_ms"] {
+            let h = hists.get(name).unwrap();
+            assert_eq!(h.get("count").unwrap().as_usize().unwrap(), 1, "{name}");
+        }
+        assert!(m.get("gauges").unwrap().get("serve.queue.depth").is_ok());
+
+        // Trace: one chain, in causal order, under the client's id.
+        let drained = session.drain_trace();
+        let events = drained.get("events").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = events
+            .iter()
+            .map(|e| e.get("event").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["admit", "queue-wait", "dispatch", "reply"]);
+        for e in events {
+            assert_eq!(e.get("trace_id").unwrap().as_str().unwrap(), "00000000deadbeef");
+        }
+        // Draining is destructive; a fresh drain is empty.
+        assert!(session.drain_trace().get("events").unwrap().as_arr().unwrap().is_empty());
+        session.shutdown();
+    }
+
+    #[test]
+    fn untraced_submissions_get_a_minted_trace_id() {
+        let session = ServeSession::start(ServeConfig { workers: 1, ..Default::default() })
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        session.submit(job(1, 3), &tx);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.trace_id.len(), 16, "the front mints when the client doesn't");
+        assert!(resp.trace_id.chars().all(|c| c.is_ascii_hexdigit()));
+        session.shutdown();
     }
 
     #[test]

@@ -17,6 +17,8 @@ use std::time::Instant;
 use crate::coordinator::{driver, SystemConfig, SystemOutput};
 use crate::data::Dataset;
 use crate::error::Result;
+use crate::kmeans::Algorithm;
+use crate::obs::{SpanEvent, TraceRing};
 use crate::runtime::{native::NativeEngine, xla::XlaEngine, Engine};
 
 use super::batch::{fit_lockstep, BackendKind};
@@ -62,28 +64,33 @@ impl EngineBank {
     }
 }
 
-/// Worker main loop: runs until the queue closes and drains.
+/// Worker main loop: runs until the queue closes and drains. Trace spans
+/// for every executed job (`queue-wait`, `dispatch` — PROTOCOL.md §11)
+/// land in `ring`.
 pub(crate) fn run_worker(
     worker: usize,
     cfg: &ServeConfig,
     queue: &SharedQueue,
     tx: &Sender<FitResponse>,
+    ring: &TraceRing,
 ) -> WorkerStats {
     let mut stats = WorkerStats { worker, ..Default::default() };
     let mut engines = EngineBank::default();
     while let Some(outcome) = queue.take_batch(cfg.max_batch) {
         for p in outcome.shed {
-            let _ = tx.send(FitResponse::shed(
+            let mut resp = FitResponse::shed(
                 p.req.id,
                 "start deadline expired in queue",
                 p.queue_seconds(),
-            ));
+            );
+            resp.trace_id = p.req.trace_id.clone();
+            let _ = tx.send(resp);
         }
         if outcome.batch.is_empty() {
             continue;
         }
         let t0 = Instant::now();
-        execute_batch(worker, &mut engines, outcome.batch, tx, &mut stats);
+        execute_batch(worker, &mut engines, outcome.batch, tx, &mut stats, ring);
         stats.busy_seconds += t0.elapsed().as_secs_f64();
     }
     stats
@@ -98,9 +105,28 @@ fn execute_batch(
     batch: Vec<Pending>,
     tx: &Sender<FitResponse>,
     stats: &mut WorkerStats,
+    ring: &TraceRing,
 ) {
     stats.batches += 1;
     stats.max_batch = stats.max_batch.max(batch.len());
+    let batch_size = batch.len();
+    for p in &batch {
+        if p.req.trace_id.is_empty() {
+            continue;
+        }
+        let queue_ms = p.queue_seconds() * 1e3;
+        ring.push(
+            SpanEvent::new(&p.req.trace_id, "queue-wait")
+                .num("id", p.req.id as f64)
+                .num("queue_ms", queue_ms),
+        );
+        ring.push(
+            SpanEvent::new(&p.req.trace_id, "dispatch")
+                .num("id", p.req.id as f64)
+                .num("worker", worker as f64)
+                .num("batch_size", batch_size as f64),
+        );
+    }
 
     // Materialise datasets and validate each job up front; a job whose
     // dataset fails to load (or whose k/n combination is invalid) answers
@@ -116,14 +142,16 @@ fn execute_batch(
             Ok(ds) => jobs.push((p, ds, queue_s)),
             Err(e) => {
                 stats.jobs += 1;
-                let _ = tx.send(FitResponse::failed(
+                let mut resp = FitResponse::failed(
                     p.req.id,
                     &p.req.backend_name,
                     worker,
                     1,
                     queue_s,
                     &e,
-                ));
+                );
+                resp.trace_id = p.req.trace_id.clone();
+                let _ = tx.send(resp);
             }
         }
     }
@@ -158,14 +186,16 @@ fn execute_batch(
                             // the construction error (e.g. feature off).
                             for (p, _, queue_s) in &jobs {
                                 stats.jobs += 1;
-                                let _ = tx.send(FitResponse::failed(
+                                let mut resp = FitResponse::failed(
                                     p.req.id,
                                     &p.req.backend_name,
                                     worker,
                                     jobs.len(),
                                     *queue_s,
                                     &e,
-                                ));
+                                );
+                                resp.trace_id = p.req.trace_id.clone();
+                                let _ = tx.send(resp);
                             }
                             return;
                         }
@@ -201,21 +231,32 @@ fn execute_batch(
                         // fail the batch.
                         for (p, _, queue_s) in &jobs {
                             stats.jobs += 1;
-                            let _ = tx.send(FitResponse::failed(
+                            let mut resp = FitResponse::failed(
                                 p.req.id,
                                 &p.req.backend_name,
                                 worker,
                                 jobs.len(),
                                 *queue_s,
                                 &e,
-                            ));
+                            );
+                            resp.trace_id = p.req.trace_id.clone();
+                            let _ = tx.send(resp);
                         }
                     }
                 }
             } else {
                 let (p, ds, queue_s) = &jobs[0];
                 let t0 = Instant::now();
-                let res = driver::run_with_engine(engine, ds, &p.req.kmeans);
+                // Explicit-`algorithm` jobs (PROTOCOL.md §3) pop solo
+                // (BatchKey invariant) and run the named kernel host-side,
+                // so its own filter hierarchy — not the engine loop's
+                // global filter — produces the reported work counters.
+                let res = if p.req.algorithm.is_empty() {
+                    driver::run_with_engine(engine, ds, &p.req.kmeans)
+                } else {
+                    Algorithm::from_name(&p.req.algorithm)
+                        .and_then(|algo| driver::run_algorithm(algo, name, ds, &p.req.kmeans))
+                };
                 send_result(tx, stats, worker, p, *queue_s, t0.elapsed().as_secs_f64(), 1, res);
             }
         }
@@ -234,7 +275,7 @@ fn send_result(
     res: Result<SystemOutput>,
 ) {
     stats.jobs += 1;
-    let resp = match res {
+    let mut resp = match res {
         Ok(out) => {
             let backend = out.report.backend.clone();
             FitResponse::ok(
@@ -255,6 +296,7 @@ fn send_result(
             r
         }
     };
+    resp.trace_id = p.req.trace_id.clone();
     let _ = tx.send(resp);
 }
 
@@ -286,7 +328,7 @@ mod tests {
         }
         queue.close();
         let (tx, rx) = mpsc::channel();
-        let stats = run_worker(0, &cfg, &queue, &tx);
+        let stats = run_worker(0, &cfg, &queue, &tx, &TraceRing::default());
         drop(tx);
         let responses: Vec<FitResponse> = rx.iter().collect();
         assert_eq!(responses.len(), 3);
@@ -310,7 +352,7 @@ mod tests {
         queue.submit(small_req(2, 3, 2), ShedPolicy::Block);
         queue.close();
         let (tx, rx) = mpsc::channel();
-        run_worker(0, &cfg, &queue, &tx);
+        run_worker(0, &cfg, &queue, &tx, &TraceRing::default());
         drop(tx);
         let mut responses: Vec<FitResponse> = rx.iter().collect();
         responses.sort_by_key(|r| r.id);
@@ -318,6 +360,43 @@ mod tests {
         assert_eq!(responses[0].status, JobStatus::Failed);
         assert!(responses[0].detail.contains("exceeds"), "{}", responses[0].detail);
         assert_eq!(responses[1].status, JobStatus::Ok);
+    }
+
+    #[test]
+    fn pinned_algorithm_jobs_run_solo_with_spans_and_counters() {
+        let cfg = ServeConfig { workers: 1, ..Default::default() };
+        let queue = SharedQueue::new(8);
+        let mut yy = small_req(1, 4, 5);
+        yy.algorithm = "yinyang".into();
+        yy.trace_id = "feedfacefeedface".into();
+        let mut ll = small_req(2, 4, 5);
+        ll.algorithm = "lloyd".into();
+        queue.submit(yy, ShedPolicy::Block);
+        queue.submit(ll, ShedPolicy::Block);
+        queue.close();
+        let ring = TraceRing::default();
+        let (tx, rx) = mpsc::channel();
+        run_worker(0, &cfg, &queue, &tx, &ring);
+        drop(tx);
+        let mut responses: Vec<FitResponse> = rx.iter().collect();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            assert_eq!(r.status, JobStatus::Ok, "{}", r.detail);
+            assert_eq!(r.batch_size, 1, "pinned kernels never coalesce");
+        }
+        let yy_work = responses[0].summary.unwrap().work;
+        let ll_work = responses[1].summary.unwrap().work;
+        assert!(yy_work.points_pruned > 0, "yinyang prunes");
+        assert_eq!(ll_work.points_pruned, 0, "lloyd filters nothing");
+        assert_eq!(responses[0].trace_id, "feedfacefeedface");
+        // The traced job left queue-wait + dispatch spans in the ring;
+        // the untraced one (empty trace_id) left none.
+        let (events, dropped) = ring.drain();
+        assert_eq!(dropped, 0);
+        let names: Vec<&str> = events.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["queue-wait", "dispatch"]);
+        assert!(events.iter().all(|e| e.trace_id == "feedfacefeedface"));
     }
 
     #[cfg(not(feature = "xla"))]
@@ -330,7 +409,7 @@ mod tests {
         queue.submit(req, ShedPolicy::Block);
         queue.close();
         let (tx, rx) = mpsc::channel();
-        run_worker(0, &cfg, &queue, &tx);
+        run_worker(0, &cfg, &queue, &tx, &TraceRing::default());
         drop(tx);
         let responses: Vec<FitResponse> = rx.iter().collect();
         assert_eq!(responses.len(), 1);

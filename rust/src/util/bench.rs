@@ -7,9 +7,12 @@
 //! work. The output format is stable and table-like so bench logs are
 //! directly pasteable into EXPERIMENTS.md.
 
+use std::collections::BTreeMap;
 use std::hint::black_box as std_black_box;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 /// Re-exported optimisation barrier.
@@ -32,6 +35,52 @@ impl Measurement {
     pub fn median_secs(&self) -> f64 {
         self.median.as_secs_f64()
     }
+
+    /// The measurement as a JSON object (seconds as floats), in the same
+    /// hand-rolled encoding the obs snapshot uses.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("iters".to_string(), Json::Num(self.iters as f64));
+        o.insert("median_s".to_string(), Json::Num(self.median.as_secs_f64()));
+        o.insert("mean_s".to_string(), Json::Num(self.mean.as_secs_f64()));
+        o.insert("min_s".to_string(), Json::Num(self.min.as_secs_f64()));
+        o.insert("max_s".to_string(), Json::Num(self.max.as_secs_f64()));
+        Json::Obj(o)
+    }
+}
+
+/// Everything the benches of this process have produced so far:
+/// measurements from every [`Bencher`] plus tables registered with
+/// [`record_table`]. Drained by [`write_bench_json`].
+static RECORDED_MEASUREMENTS: Mutex<Vec<Measurement>> = Mutex::new(Vec::new());
+static RECORDED_TABLES: Mutex<Vec<(String, Json)>> = Mutex::new(Vec::new());
+
+/// Register a finished result table for the bench's JSON artifact.
+pub fn record_table(name: &str, t: &Table) {
+    RECORDED_TABLES.lock().unwrap().push((name.to_string(), t.to_json()));
+}
+
+/// Drain everything recorded so far and write it as `BENCH_<name>.json`
+/// (in the working directory — the repo root under `cargo bench`),
+/// serialized with the same encoder as the obs metrics snapshot, which is
+/// embedded under `"metrics"` so kernel work-efficiency counters that
+/// accumulated during the bench ride along. Returns the path written.
+pub fn write_bench_json(name: &str) -> std::io::Result<String> {
+    let measurements: Vec<Measurement> =
+        std::mem::take(&mut *RECORDED_MEASUREMENTS.lock().unwrap());
+    let tables: Vec<(String, Json)> = std::mem::take(&mut *RECORDED_TABLES.lock().unwrap());
+    let mut o = BTreeMap::new();
+    o.insert("bench".to_string(), Json::Str(name.to_string()));
+    o.insert(
+        "measurements".to_string(),
+        Json::Arr(measurements.iter().map(Measurement::to_json).collect()),
+    );
+    o.insert("tables".to_string(), Json::Obj(tables.into_iter().collect()));
+    o.insert("metrics".to_string(), crate::obs::global().snapshot());
+    let path = format!("BENCH_{name}.json");
+    std::fs::write(&path, format!("{}\n", Json::Obj(o)))?;
+    Ok(path)
 }
 
 fn fmt_duration(d: Duration) -> String {
@@ -111,6 +160,7 @@ impl Bencher {
             min: Duration::from_secs_f64(min),
             max: Duration::from_secs_f64(max),
         };
+        RECORDED_MEASUREMENTS.lock().unwrap().push(m.clone());
         println!(
             "bench {:<44} iters {:>5}  median {:>12}  mean {:>12}  min {:>12}",
             m.name,
@@ -173,6 +223,25 @@ impl Table {
     pub fn print(&self) {
         print!("{}", self.render());
     }
+
+    /// The table as a JSON array of `{header: cell}` objects (all cells
+    /// stay strings — they are already formatted for display).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|row| {
+                    Json::Obj(
+                        self.headers
+                            .iter()
+                            .cloned()
+                            .zip(row.iter().map(|c| Json::Str(c.clone())))
+                            .collect(),
+                    )
+                })
+                .collect(),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -209,5 +278,28 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn table_and_measurement_encode_as_json() {
+        let mut t = Table::new(&["dataset", "speedup"]);
+        t.row(vec!["kegg".into(), "3.10x".into()]);
+        let j = t.to_json();
+        let rows = j.as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("dataset").unwrap().as_str().unwrap(), "kegg");
+        assert_eq!(rows[0].get("speedup").unwrap().as_str().unwrap(), "3.10x");
+
+        let m = Measurement {
+            name: "noop".into(),
+            iters: 3,
+            median: Duration::from_millis(2),
+            mean: Duration::from_millis(2),
+            min: Duration::from_millis(1),
+            max: Duration::from_millis(3),
+        };
+        let mj = m.to_json();
+        assert_eq!(mj.get("iters").unwrap().as_usize().unwrap(), 3);
+        assert!((mj.get("median_s").unwrap().as_f64().unwrap() - 0.002).abs() < 1e-9);
     }
 }

@@ -261,6 +261,74 @@ fn cancel_over_the_cluster_front_keeps_the_exactly_once_contract() {
 }
 
 #[test]
+fn cluster_fit_yields_metrics_trace_and_work_counters() {
+    // The ISSUE 7 acceptance triple, over the wire of a real 2-shard
+    // cluster: (1) a metrics snapshot with queue/latency histograms,
+    // (2) a drained trace with one admit→dispatch→reply chain under the
+    // client's trace_id, (3) pruned-point counters nonzero for yinyang
+    // and zero for lloyd.
+    let (addr, handle, thread) =
+        start_cluster(2, "obs", ServeConfig { workers: 1, ..Default::default() });
+    let mut cc = connect(&addr);
+
+    let mut yy = job(1, "blobs", 400, 4, 71);
+    yy.algorithm = "yinyang".into();
+    yy.trace_id = "0123456789abcdef".into();
+    let mut ll = job(2, "blobs", 400, 4, 71);
+    ll.algorithm = "lloyd".into();
+    cc.submit(&yy).unwrap();
+    cc.submit(&ll).unwrap();
+    let replies = collect_by_id(&mut cc, 2);
+
+    // (3) work-efficiency counters: the triangle-inequality kernel
+    // prunes; the exhaustive one by definition cannot.
+    let yy_reply = &replies[&1];
+    assert_eq!(yy_reply.status, JobStatus::Ok, "{}", yy_reply.detail);
+    assert_eq!(yy_reply.trace_id, "0123456789abcdef", "trace_id survives front→shard→front");
+    let yw = yy_reply.summary.expect("ok replies carry a summary").work;
+    assert!(yw.points_pruned > 0, "yinyang prunes points: {yw:?}");
+    assert!(yw.dist_comps_avoided > 0, "yinyang avoids distance work: {yw:?}");
+    let lw = replies[&2].summary.expect("ok replies carry a summary").work;
+    assert_eq!(lw.points_pruned, 0, "lloyd scans every point");
+    assert_eq!(lw.dist_comps_avoided, 0, "lloyd computes every distance");
+    assert!(lw.dist_comps > 0);
+
+    // (2) the front's span ring holds the chain for the traced job only.
+    let t = cc.drain_trace().unwrap();
+    let chain: Vec<String> = t
+        .get("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("trace_id").unwrap().as_str().unwrap() == "0123456789abcdef")
+        .map(|e| e.get("event").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(chain, ["admit", "dispatch", "reply"]);
+
+    // (1) the metrics snapshot carries the front's histograms.
+    let m = cc.metrics().unwrap();
+    assert_eq!(
+        m.get("counters").unwrap().get("cluster.jobs.submitted").unwrap().as_usize().unwrap(),
+        2
+    );
+    let h = m.get("histograms").unwrap();
+    assert!(h.get("serve.latency_ms").unwrap().get("count").unwrap().as_usize().unwrap() >= 2);
+    assert!(h.get("serve.queue_wait_ms").unwrap().get("count").unwrap().as_usize().unwrap() >= 1);
+
+    // §6 additive stats: front uptime plus per-lane depths summed over
+    // the shards (all drained by now).
+    let stats = cc.stats().unwrap();
+    assert_eq!(stats.submitted, 2);
+    assert_eq!(stats.queue_lanes.iter().sum::<usize>(), 0, "nothing left queued");
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.dropped_replies, 0);
+}
+
+#[test]
 fn router_pins_batch_keys_and_breaks_ties_low() {
     // The policy pinned at the public API (unit-level detail lives in
     // cluster::router's own tests): affinity beats load, new keys go

@@ -218,6 +218,53 @@ fn two_remote_shard_cluster_matches_single_daemon_and_direct_runs() {
 }
 
 #[test]
+fn client_trace_id_survives_the_remote_round_trip_byte_identically() {
+    // PROTOCOL.md §11: a client-supplied `trace_id` rides the forwarded
+    // frame to the remote shard, comes back on the shard's reply, and is
+    // handed to the external client unmodified — byte for byte. The
+    // front's span ring must hold the admit→dispatch→reply chain for
+    // exactly that id.
+    let a = FakeShard::start(vec![]);
+    let b = FakeShard::start(vec![]);
+    let (addr, handle, thread) =
+        start_remote_cluster(vec![a.addr(), b.addr()], Duration::from_secs(30));
+    let mut cc = connect(&addr);
+
+    let mut traced = job(1, "blobs", 210, 3, 55);
+    traced.trace_id = "00deadbeefcafe11".into();
+    let plain = job(2, "blobs", 211, 4, 56);
+    cc.submit(&traced).unwrap();
+    cc.submit(&plain).unwrap();
+    let replies = collect_by_id(&mut cc, 2);
+    assert_all_ok_and_bit_identical(&[traced.clone(), plain], &replies);
+    assert_eq!(
+        replies[&1].trace_id, traced.trace_id,
+        "the client's trace_id must survive front→shard→front unmodified"
+    );
+
+    let drained = cc.drain_trace().expect("trace drain");
+    let events = drained.get("events").unwrap().as_arr().unwrap();
+    let chain: Vec<&str> = events
+        .iter()
+        .filter(|e| {
+            e.get("trace_id").and_then(|v| v.as_str()).map(str::to_owned).ok()
+                == Some(traced.trace_id.clone())
+        })
+        .map(|e| e.get("event").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(
+        chain,
+        vec!["admit", "dispatch", "reply"],
+        "one span chain at the front under the client's trace_id"
+    );
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.dropped_replies, 0);
+}
+
+#[test]
 fn link_dropped_mid_reply_reconnects_with_exactly_once_replies() {
     // Shard 0's first connection answers one job, then severs the socket
     // halfway through the next reply; its second connection (the front's

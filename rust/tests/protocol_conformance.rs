@@ -108,6 +108,12 @@ enum Expect {
     ErrorAtLine(u64, &'static str),
     /// `{"op":"cancelled","id":N,"cancelled":B}` (§6).
     Cancelled { id: u64, value: bool },
+    /// A `{"op":"trace"}` drain reply: `events` array + `dropped` count (§11).
+    TraceDrain,
+    /// A `{"op":"metrics"}` snapshot carrying all three sections (§6).
+    MetricsSnapshot,
+    /// An `ok` reply echoing the client's `trace_id` byte-identically (§4).
+    OkJobWithTraceId { id: u64, trace_id: &'static str },
     /// A full §4 `ok` response: every always-present scalar, the
     /// `ok`-only fit fields, and a 16-lowercase-hex-digit §8 fingerprint.
     OkJob(u64),
@@ -179,7 +185,27 @@ fn vectors() -> Vec<Vector> {
                 "connections",
                 "active_conns",
                 "pending_here",
+                "uptime_ms",
+                "queue_lanes",
             ])],
+        },
+        Vector {
+            name: "trace drains the span ring as events + dropped (§11)",
+            send: vec![r#"{"op":"trace"}"#.into()],
+            expect: vec![Expect::TraceDrain],
+        },
+        Vector {
+            name: "metrics snapshots counters/gauges/histograms (§6)",
+            send: vec![r#"{"op":"metrics"}"#.into()],
+            expect: vec![Expect::MetricsSnapshot],
+        },
+        Vector {
+            name: "a client trace_id is echoed on the reply byte-identically (§3, §4)",
+            send: vec![format!(
+                "{{\"id\":31,\"dataset\":\"blobs\",\"data_seed\":7,\"max_points\":300,\
+                 \"k\":3,\"seed\":9,\"trace_id\":\"feedfacecafebeef\"}}"
+            )],
+            expect: vec![Expect::OkJobWithTraceId { id: 31, trace_id: "feedfacecafebeef" }],
         },
         Vector {
             name: "a handshake at the server's revision is accepted silently (§2)",
@@ -384,6 +410,26 @@ fn check(expect: &Expect, reply: Option<Json>, server: &str, vector: &str) {
                 matches!(j.get("cancelled"), Ok(Json::Bool(true))),
                 *value,
                 "{ctx}: cancelled flag"
+            );
+        }
+        Expect::TraceDrain => {
+            assert_eq!(j.get("op").unwrap().as_str().unwrap(), "trace", "{ctx}: {j:?}");
+            assert!(j.get("events").unwrap().as_arr().is_ok(), "{ctx}: events array");
+            assert!(j.get("dropped").unwrap().as_usize().is_ok(), "{ctx}: dropped count");
+        }
+        Expect::MetricsSnapshot => {
+            assert_eq!(j.get("op").unwrap().as_str().unwrap(), "metrics", "{ctx}: {j:?}");
+            for key in ["counters", "gauges", "histograms"] {
+                assert!(j.get(key).is_ok(), "{ctx}: metrics section '{key}' missing");
+            }
+        }
+        Expect::OkJobWithTraceId { id, trace_id } => {
+            assert_eq!(j.get("id").unwrap().as_usize().unwrap() as u64, *id, "{ctx}");
+            assert_eq!(j.get("status").unwrap().as_str().unwrap(), "ok", "{ctx}: {j:?}");
+            assert_eq!(
+                j.get("trace_id").unwrap().as_str().unwrap(),
+                *trace_id,
+                "{ctx}: trace_id must survive byte-identically"
             );
         }
         Expect::OkJob(id) => {

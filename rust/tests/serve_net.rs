@@ -409,6 +409,70 @@ fn cancel_op_sheds_a_queued_job_and_acks_misses_honestly() {
 }
 
 #[test]
+fn trace_and_metrics_surface_over_the_wire() {
+    let (addr, _handle, thread) = start_daemon(
+        ServeConfig { workers: 1, ..Default::default() },
+        NetConfig::default(),
+    );
+    let mut c = Client::connect(&addr);
+    c.expect_greeting();
+
+    // A client-supplied trace_id (PROTOCOL.md §3) comes back on the
+    // response byte-identically.
+    c.send(
+        r#"{"id": 1, "dataset": "blobs", "data_seed": 3, "max_points": 400, "k": 3, "seed": 5, "trace_id": "cafef00ddeadbeef"}"#,
+    );
+    let r = c.read_json();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(r.get("trace_id").unwrap().as_str().unwrap(), "cafef00ddeadbeef");
+    // Work-efficiency counters ride along on ok replies (§4).
+    assert!(r.get("dist_comps").unwrap().as_usize().unwrap() > 0);
+
+    // stats gained uptime_ms and per-priority queue depths (§6 additive).
+    c.send(r#"{"op":"stats"}"#);
+    let stats = c.read_json();
+    assert!(stats.get("uptime_ms").unwrap().as_usize().is_ok());
+    assert_eq!(
+        stats.get("queue_lanes").unwrap().as_arr().unwrap().len(),
+        kpynq::serve::Priority::LEVELS,
+    );
+
+    // {"op":"trace"} drains the span chain, exactly once (§11).
+    c.send(r#"{"op":"trace"}"#);
+    let t = c.read_json();
+    assert_eq!(t.get("op").unwrap().as_str().unwrap(), "trace");
+    assert_eq!(t.get("dropped").unwrap().as_usize().unwrap(), 0);
+    let chain: Vec<String> = t
+        .get("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("trace_id").unwrap().as_str().unwrap() == "cafef00ddeadbeef")
+        .map(|e| e.get("event").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(chain, ["admit", "queue-wait", "dispatch", "reply"]);
+    c.send(r#"{"op":"trace"}"#);
+    let again = c.read_json();
+    assert!(again.get("events").unwrap().as_arr().unwrap().is_empty(), "drain is destructive");
+
+    // {"op":"metrics"} snapshots the registry (§6).
+    c.send(r#"{"op":"metrics"}"#);
+    let m = c.read_json();
+    assert_eq!(m.get("op").unwrap().as_str().unwrap(), "metrics");
+    let counters = m.get("counters").unwrap();
+    assert_eq!(counters.get("serve.jobs.submitted").unwrap().as_usize().unwrap(), 1);
+    let lat = m.get("histograms").unwrap().get("serve.latency_ms").unwrap();
+    assert!(lat.get("count").unwrap().as_usize().unwrap() >= 1);
+    assert!(!lat.get("buckets").unwrap().as_arr().unwrap().is_empty());
+
+    c.send(r#"{"op":"shutdown"}"#);
+    let report = thread.join().unwrap();
+    assert_eq!(report.completed, 1);
+    assert_eq!(report.protocol_errors, 0, "trace/metrics are known ops");
+}
+
+#[test]
 fn served_deadline_and_shed_semantics_hold_over_the_wire() {
     // A deadline_ms of 0 always sheds (PROTOCOL.md §7's escape hatch) —
     // the wire reply must say so rather than fabricate a clustering.

@@ -255,6 +255,10 @@ fn job_reply_json(req: &FitRequest) -> Json {
         KpynqSystem::new(SystemConfig { backend: rc.backend(), verify: false })?
             .cluster(&ds, &req.kmeans)
     });
+    if !req.trace_id.is_empty() {
+        // §3/§4: a client-supplied trace_id rides the reply byte-identically.
+        m.insert("trace_id".to_string(), Json::Str(req.trace_id.clone()));
+    }
     match run {
         Ok(out) => {
             m.insert("status".to_string(), Json::Str("ok".into()));
@@ -454,6 +458,36 @@ fn control_frame(
                     ("connections", Json::Num(shared.accepted.load(Ordering::SeqCst) as f64)),
                     ("active_conns", Json::Num(shared.active_conns.load(Ordering::SeqCst) as f64)),
                     ("pending_here", Json::Num(0.0)),
+                    ("uptime_ms", Json::Num(0.0)),
+                    (
+                        "queue_lanes",
+                        Json::Arr(vec![Json::Num(0.0), Json::Num(0.0), Json::Num(0.0)]),
+                    ),
+                ]),
+            );
+            true
+        }
+        "trace" => {
+            // The fake keeps no span ring — an honest empty drain (§11).
+            let _ = write_line(
+                out,
+                &op_frame(&[
+                    ("op", Json::Str("trace".into())),
+                    ("events", Json::Arr(Vec::new())),
+                    ("dropped", Json::Num(0.0)),
+                ]),
+            );
+            true
+        }
+        "metrics" => {
+            // Likewise no registry: the three sections, all empty (§6).
+            let _ = write_line(
+                out,
+                &op_frame(&[
+                    ("op", Json::Str("metrics".into())),
+                    ("counters", Json::Obj(BTreeMap::new())),
+                    ("gauges", Json::Obj(BTreeMap::new())),
+                    ("histograms", Json::Obj(BTreeMap::new())),
                 ]),
             );
             true

@@ -18,6 +18,9 @@
 #      module carries at least one PROTOCOL.md §-citation (whose
 #      resolution check 1 already covers), and every `[cluster]` config
 #      key in the `kpynq init-config` EXAMPLE is documented in README.md.
+#   5. Every metric name the obs registry registers (the canonical
+#      `pub mod names` block in rust/src/obs/metrics.rs) is documented —
+#      backticked — in README.md or PROTOCOL.md. No mystery metrics.
 set -eu
 cd "$(dirname "$0")/.."
 fail=0
@@ -84,7 +87,7 @@ if [ -z "$req_ops" ]; then
 fi
 # Reply/notice ops and stats keys the cluster layer (and any other wire
 # consumer) depends on; extend this list when the control surface grows.
-emitted="pong cancelled shutdown-ack idle-timeout queue_depth shards shards_alive partial partial_done"
+emitted="pong cancelled shutdown-ack idle-timeout queue_depth shards shards_alive partial partial_done uptime_ms queue_lanes"
 for tok in $req_ops $emitted; do
     # Ops appear JSON-quoted ("ping", inside example frames or tables),
     # stats keys as backticked `queue_depth`.
@@ -111,6 +114,21 @@ fi
 for key in $cluster_keys; do
     if ! grep -q "\`$key\`" README.md; then
         echo "FAIL: [cluster] config key '$key' is undocumented in README.md"
+        fail=1
+    fi
+done
+
+# ---- 5. obs metric names are documented ---------------------------------
+metrics_rs=rust/src/obs/metrics.rs
+metric_names=$(sed -n '/pub mod names/,/^}/p' "$metrics_rs" \
+               | grep -oE '"[a-z][a-z_.]+"' | tr -d '"' | sort -u)
+if [ -z "$metric_names" ]; then
+    echo "FAIL: could not extract metric names from $metrics_rs (names block layout changed?)"
+    fail=1
+fi
+for name in $metric_names; do
+    if ! grep -q "\`$name\`" README.md PROTOCOL.md; then
+        echo "FAIL: metric name '$name' (obs::metrics::names) is undocumented in README.md/PROTOCOL.md"
         fail=1
     fi
 done
