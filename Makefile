@@ -9,7 +9,7 @@ PYTHON      ?= python3
 ARTIFACTS   := artifacts
 PY_SOURCES  := $(wildcard python/compile/*.py python/compile/kernels/*.py)
 
-.PHONY: all build test serve-test serve-net-test cluster-test cluster-remote-test mapreduce-test obs-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
+.PHONY: all build test serve-test serve-net-test cluster-test cluster-remote-test mapreduce-test obs-test kernel-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
 
 all: build
 
@@ -59,6 +59,14 @@ obs-test:
 	cargo test -q --lib obs
 	cargo test -q --test serve_net trace_and_metrics_surface_over_the_wire
 	cargo test -q --test cluster cluster_fit_yields_metrics_trace_and_work_counters
+
+# The distance micro-kernel's equivalence battery (DESIGN.md §5): kernel
+# vs naive bit-identity across tile-boundary shapes, all four algorithms
+# (and both backends) bit-identical on golden fixtures, work-efficiency
+# counters pinned — plus the kernel's own unit tests.
+kernel-test:
+	cargo test -q --test kernel_equivalence
+	cargo test -q --lib kmeans::kernel
 
 # Docs consistency: DESIGN.md/PROTOCOL.md/EXPERIMENTS.md §-citations in the
 # source must resolve, and every serve::job wire field must be documented

@@ -19,8 +19,10 @@ use kpynq::kmeans::{self, init, Algorithm, KMeansConfig};
 use kpynq::runtime::native::NativeEngine;
 use kpynq::runtime::xla::XlaEngine;
 use kpynq::runtime::Engine;
-use kpynq::util::bench::{self, black_box, Bencher};
-use kpynq::util::matrix::sq_dist;
+use kpynq::kmeans::kernel;
+use kpynq::util::bench::{self, black_box, Bencher, Table};
+use kpynq::util::matrix::{sq_dist, Matrix};
+use kpynq::util::rng::Rng;
 
 fn main() {
     let b = Bencher::default();
@@ -44,10 +46,16 @@ fn main() {
     b.bench("scan_all/d=64,k=16 (x1000)", || {
         let mut acc = 0usize;
         for i in 0..1000 {
-            acc += kmeans::lloyd::scan_all(black_box(ds.points.row(i)), black_box(&cents)).0;
+            acc += kmeans::kernel::scan_all(black_box(ds.points.row(i)), black_box(&cents)).0;
         }
         acc
     });
+
+    // --- tiled kernel: tile-size × (d, k) sweep (EXPERIMENTS.md §Perf) ---
+    // Every timed configuration is first proven bit-identical to the
+    // scalar per-point scan — a sweep row that changed results would be
+    // measuring a different computation (DESIGN.md §5 contract).
+    kernel_tile_sweep(&b);
 
     // --- software algorithm end-to-end (the CPU comparator's real cost) ---
     e2e.bench("fit/lloyd mnist@20k k=16", || {
@@ -95,4 +103,67 @@ fn main() {
     }
     let path = bench::write_bench_json("hotpath").expect("bench json");
     println!("wrote {path}");
+}
+
+/// Tile-size sweep for the batch distance kernel: n = 4096 points against
+/// (d, k) in {(8, 8), (64, 16), (128, 32)}, tiles (points × centroids) in
+/// {(8, 4), (32, 8), (128, 32)} plus the production default. Each cell is
+/// asserted bit-identical to the scalar `scan_all` reference per row
+/// before it is timed, then recorded into the hotpath bench JSON.
+fn kernel_tile_sweep(b: &Bencher) {
+    const N: usize = 4096;
+    let shapes: [(usize, usize); 3] = [(8, 8), (64, 16), (128, 32)];
+    let tiles: [(usize, usize); 3] = [(8, 4), (32, 8), (128, 32)];
+
+    let mut table = Table::new(&["shape", "tile", "median", "bit-identical"]);
+    for (d, k) in shapes {
+        let mut rng = Rng::new(0xBE2C ^ ((d as u64) << 8) ^ k as u64);
+        let pts: Vec<f32> = (0..N * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let cts: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let points = Matrix::from_vec(pts, N, d).unwrap();
+        let cents = Matrix::from_vec(cts, k, d).unwrap();
+
+        let mut idx = vec![0u32; N];
+        let mut best = vec![0.0f32; N];
+        let mut second = vec![0.0f32; N];
+        for (tp, tc) in tiles {
+            // Correctness gate: bit-identity per row vs the scalar scan.
+            kernel::nearest_into_tiled(&points, 0, N, &cents, tp, tc, &mut idx, &mut best, &mut second);
+            for i in 0..N {
+                let (arg, b0, s0) = kernel::scan_all(points.row(i), &cents);
+                assert_eq!(idx[i], arg as u32, "tile ({tp},{tc}) d={d} k={k} row {i}: argmin");
+                assert_eq!(
+                    best[i].to_bits(),
+                    b0.to_bits(),
+                    "tile ({tp},{tc}) d={d} k={k} row {i}: best bits"
+                );
+                assert_eq!(
+                    second[i].to_bits(),
+                    s0.to_bits(),
+                    "tile ({tp},{tc}) d={d} k={k} row {i}: second bits"
+                );
+            }
+            let m = b.bench(&format!("kernel/nearest n=4096 d={d} k={k} tile={tp}x{tc}"), || {
+                kernel::nearest_into_tiled(
+                    black_box(&points),
+                    0,
+                    N,
+                    black_box(&cents),
+                    tp,
+                    tc,
+                    &mut idx,
+                    &mut best,
+                    &mut second,
+                )
+            });
+            table.row(vec![
+                format!("d={d} k={k}"),
+                format!("{tp}x{tc}"),
+                format!("{:.3} ms", m.median_secs() * 1e3),
+                "yes".into(),
+            ]);
+        }
+    }
+    table.print();
+    bench::record_table("kernel_tile_sweep", &table);
 }

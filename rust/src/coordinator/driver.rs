@@ -38,7 +38,7 @@ use crate::error::{Error, Result};
 use crate::hw::{AccelConfig, Accelerator};
 use crate::kmeans::bounds::{deflate_lb, filter_safe, group_max_drifts, inflate_ub};
 use crate::kmeans::hamerly::half_nearest_other;
-use crate::kmeans::lloyd::scan_all;
+use crate::kmeans::kernel::{self, scan_all};
 use crate::kmeans::metrics::IterStats;
 use crate::kmeans::reduce::{ExactSum, PartialAccumulator};
 use crate::kmeans::{
@@ -46,7 +46,7 @@ use crate::kmeans::{
     KMeansConfig, RunStats,
 };
 use crate::runtime::{native::NativeEngine, xla::XlaEngine, AssignOut, Engine};
-use crate::util::matrix::{dist, sq_dist, Matrix};
+use crate::util::matrix::Matrix;
 
 use super::scheduler;
 use super::telemetry::RunReport;
@@ -504,41 +504,56 @@ impl PartialFitState {
         let mut assignments = vec![0u32; slice_n];
         let bounds = match algo {
             Algorithm::Lloyd => {
-                for (j, a) in assignments.iter_mut().enumerate() {
-                    let (arg, _, _) = scan_all(ds.points.row(lo + j), &centroids);
-                    *a = arg as u32;
-                }
+                let mut best = vec![0.0f32; slice_n];
+                let mut second = vec![0.0f32; slice_n];
+                kernel::nearest_into(
+                    &ds.points, lo, hi, &centroids, &mut assignments, &mut best, &mut second,
+                );
                 SliceBounds::Lloyd
             }
             Algorithm::Hamerly => {
                 let mut ub = vec![0.0f32; slice_n];
                 let mut lb = vec![0.0f32; slice_n];
+                let mut best = vec![0.0f32; slice_n];
+                let mut second = vec![0.0f32; slice_n];
+                kernel::nearest_into(
+                    &ds.points, lo, hi, &centroids, &mut assignments, &mut best, &mut second,
+                );
                 for j in 0..slice_n {
-                    let (arg, best, second) = scan_all(ds.points.row(lo + j), &centroids);
-                    assignments[j] = arg as u32;
-                    ub[j] = best.sqrt();
-                    lb[j] = second.sqrt();
+                    ub[j] = best[j].sqrt();
+                    lb[j] = second[j].sqrt();
                 }
                 SliceBounds::Hamerly { ub, lb }
             }
             Algorithm::Elkan => {
+                // Elkan compares in sqrt space: convert each kernel tile
+                // entry to a distance before the argmin compare, exactly
+                // as the solo fit's bound initialisation does.
                 let mut ub = vec![0.0f32; slice_n];
                 let mut lb = vec![0.0f32; slice_n * k];
-                for j in 0..slice_n {
-                    let row = ds.points.row(lo + j);
-                    let lbrow = &mut lb[j * k..(j + 1) * k];
-                    let mut best = f32::INFINITY;
-                    let mut arg = 0usize;
-                    for (c, slot) in lbrow.iter_mut().enumerate() {
-                        let d = dist(row, centroids.row(c));
-                        *slot = d;
-                        if d < best {
-                            best = d;
-                            arg = c;
+                let mut tile = vec![0.0f32; kernel::TILE_POINTS * k];
+                let mut j0 = 0usize;
+                while j0 < slice_n {
+                    let j1 = (j0 + kernel::TILE_POINTS).min(slice_n);
+                    kernel::sq_dist_block(
+                        &ds.points, lo + j0, lo + j1, &centroids, &mut tile[..(j1 - j0) * k],
+                    );
+                    for j in j0..j1 {
+                        let lbrow = &mut lb[j * k..(j + 1) * k];
+                        let mut best = f32::INFINITY;
+                        let mut arg = 0usize;
+                        for (c, slot) in lbrow.iter_mut().enumerate() {
+                            let d = tile[(j - j0) * k + c].sqrt();
+                            *slot = d;
+                            if d < best {
+                                best = d;
+                                arg = c;
+                            }
                         }
+                        assignments[j] = arg as u32;
+                        ub[j] = best;
                     }
-                    assignments[j] = arg as u32;
-                    ub[j] = best;
+                    j0 = j1;
                 }
                 SliceBounds::Elkan { ub, lb }
             }
@@ -630,10 +645,17 @@ impl PartialFitState {
         let (lo, slice_n) = (self.lo, self.hi - self.lo);
         match &mut self.bounds {
             SliceBounds::Lloyd => {
-                for (j, a) in self.assignments.iter_mut().enumerate() {
-                    let (arg, _, _) = scan_all(self.ds.points.row(lo + j), new_c);
-                    *a = arg as u32;
-                }
+                let mut best = vec![0.0f32; slice_n];
+                let mut second = vec![0.0f32; slice_n];
+                kernel::nearest_into(
+                    &self.ds.points,
+                    lo,
+                    lo + slice_n,
+                    new_c,
+                    &mut self.assignments,
+                    &mut best,
+                    &mut second,
+                );
             }
             SliceBounds::Hamerly { ub, lb } => {
                 for j in 0..slice_n {
@@ -648,7 +670,7 @@ impl PartialFitState {
                     if filter_safe(m, ub[j]) {
                         continue;
                     }
-                    let exact = dist(row, new_c.row(a));
+                    let exact = kernel::dist_pair(row, new_c.row(a));
                     ub[j] = exact;
                     if filter_safe(m, ub[j]) {
                         continue;
@@ -685,14 +707,14 @@ impl PartialFitState {
                             continue;
                         }
                         if !tight {
-                            ub_i = dist(row, new_c.row(a));
+                            ub_i = kernel::dist_pair(row, new_c.row(a));
                             lbrow[a] = ub_i;
                             tight = true;
                             if filter_safe(lbrow[c], ub_i) {
                                 continue;
                             }
                         }
-                        let dc = dist(row, new_c.row(c));
+                        let dc = kernel::dist_pair(row, new_c.row(c));
                         lbrow[c] = dc;
                         if dc < ub_i {
                             a = c;
@@ -734,7 +756,7 @@ impl PartialFitState {
         }
         let mut inertia = ExactSum::new();
         for (j, &a) in self.assignments.iter().enumerate() {
-            inertia.add(sq_dist(self.ds.points.row(self.lo + j), final_c.row(a as usize)));
+            inertia.add(kernel::sq_dist_pair(self.ds.points.row(self.lo + j), final_c.row(a as usize)));
         }
         Ok((self.assignments.clone(), inertia))
     }

@@ -22,7 +22,7 @@
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::kmeans::bounds::group_max_drifts;
-use crate::kmeans::lloyd::scan_all;
+use crate::kmeans::kernel::scan_all;
 use crate::kmeans::yinyang::{group_centroids, step_point, FilterState};
 use crate::kmeans::{
     centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,

@@ -12,11 +12,12 @@ use crate::data::Dataset;
 use crate::error::Result;
 use crate::kmeans::bounds::{deflate_lb, filter_safe, inflate_ub};
 use crate::kmeans::hamerly::half_nearest_other;
+use crate::kmeans::kernel;
 use crate::kmeans::{
     centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
     KMeansConfig, RunStats,
 };
-use crate::util::matrix::{dist, Matrix};
+use crate::util::matrix::Matrix;
 
 pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> {
     let n = ds.n();
@@ -31,25 +32,38 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
     let mut iterations = 0;
 
     // Iteration 1: full scan, initialise ub and all lower bounds exactly.
+    // Elkan's bounds live in sqrt space, so each kernel tile is converted
+    // entry-wise to distances *before* the argmin compare — bit-identical
+    // to the old per-pair `dist` loop.
     {
         iterations += 1;
         let mut it = IterStats::default();
-        for (i, row) in ds.points.rows_iter().enumerate() {
-            let lbrow = &mut lb[i * k..(i + 1) * k];
-            let mut best = f32::INFINITY;
-            let mut arg = 0usize;
-            for c in 0..k {
-                let d = dist(row, centroids.row(c));
-                lbrow[c] = d;
-                if d < best {
-                    best = d;
-                    arg = c;
+        let mut comps = 0u64;
+        let mut tile = vec![0.0f32; kernel::TILE_POINTS * k];
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + kernel::TILE_POINTS).min(n);
+            comps += kernel::sq_dist_block(&ds.points, lo, hi, &centroids, &mut tile[..(hi - lo) * k]);
+            for j in 0..hi - lo {
+                let i = lo + j;
+                let lbrow = &mut lb[i * k..(i + 1) * k];
+                let mut best = f32::INFINITY;
+                let mut arg = 0usize;
+                for c in 0..k {
+                    let d = tile[j * k + c].sqrt();
+                    lbrow[c] = d;
+                    if d < best {
+                        best = d;
+                        arg = c;
+                    }
                 }
+                assignments[i] = arg as u32;
+                ub[i] = best;
             }
-            assignments[i] = arg as u32;
-            ub[i] = best;
+            lo = hi;
         }
-        it.dist_comps = (n as u64) * (k as u64);
+        debug_assert_eq!(comps, (n as u64) * (k as u64));
+        it.dist_comps = comps;
         it.survivors = n as u64;
         it.reassigned = n as u64;
         let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
@@ -101,7 +115,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
                 }
                 if !tight {
                     // Tighten before paying for d(x, c).
-                    ub_i = dist(row, centroids.row(a));
+                    ub_i = kernel::dist_pair(row, centroids.row(a));
                     lbrow[a] = ub_i;
                     dist_comps += 1;
                     tight = true;
@@ -110,7 +124,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
                         continue;
                     }
                 }
-                let d = dist(row, centroids.row(c));
+                let d = kernel::dist_pair(row, centroids.row(c));
                 dist_comps += 1;
                 scanned_any = true;
                 lbrow[c] = d;

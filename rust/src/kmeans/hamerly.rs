@@ -8,12 +8,12 @@
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::kmeans::bounds::{deflate_lb, filter_safe, inflate_ub};
-use crate::kmeans::lloyd::scan_all;
+use crate::kmeans::kernel::{self, scan_all};
 use crate::kmeans::{
     centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
     KMeansConfig, RunStats,
 };
-use crate::util::matrix::{dist, Matrix};
+use crate::util::matrix::Matrix;
 
 /// Half the distance from each centroid to its nearest other centroid.
 /// A point with `ub <= s[a]` cannot change assignment (any other centroid
@@ -23,7 +23,7 @@ pub(crate) fn half_nearest_other(centroids: &Matrix) -> (Vec<f32>, u64) {
     let mut s = vec![f32::INFINITY; k];
     for a in 0..k {
         for b in (a + 1)..k {
-            let d = dist(centroids.row(a), centroids.row(b));
+            let d = kernel::dist_pair(centroids.row(a), centroids.row(b));
             if d < s[a] {
                 s[a] = d;
             }
@@ -56,13 +56,13 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
     {
         iterations += 1;
         let mut it = IterStats::default();
-        for (i, row) in ds.points.rows_iter().enumerate() {
-            let (arg, best, second) = scan_all(row, &centroids);
-            assignments[i] = arg as u32;
-            ub[i] = best.sqrt();
-            lb[i] = second.sqrt();
+        let scan = kernel::nearest_full_scan(&ds.points, &centroids);
+        for i in 0..n {
+            assignments[i] = scan.idx[i];
+            ub[i] = scan.best[i].sqrt();
+            lb[i] = scan.second[i].sqrt();
         }
-        it.dist_comps = (n as u64) * (k as u64);
+        it.dist_comps = scan.dist_comps;
         it.survivors = n as u64;
         it.reassigned = n as u64;
         let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
@@ -98,7 +98,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
                 continue;
             }
             // Tighten ub with one exact distance and retest.
-            let exact = dist(row, centroids.row(a));
+            let exact = kernel::dist_pair(row, centroids.row(a));
             dist_comps += 1;
             ub[i] = exact;
             if filter_safe(m, ub[i]) {

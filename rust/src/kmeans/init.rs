@@ -7,8 +7,9 @@
 
 use crate::data::Dataset;
 use crate::error::Result;
+use crate::kmeans::kernel;
 use crate::kmeans::{InitMethod, KMeansConfig};
-use crate::util::matrix::{sq_dist, Matrix};
+use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
 /// Initialise centroids per the config.
@@ -33,7 +34,10 @@ pub fn random_points(ds: &Dataset, k: usize, rng: &mut Rng) -> Matrix {
     ds.points.gather_rows(&idx[..k])
 }
 
-/// k-means++: D² weighted seeding (Arthur & Vassilvitskii 2007).
+/// k-means++: D² weighted seeding (Arthur & Vassilvitskii 2007). The D²
+/// scan against each new centroid is one kernel column
+/// (`kernel::sq_dists_to`) — element-wise the same `sq_dist` values the
+/// old per-point loop produced, so seeding stays bit-identical.
 pub fn kmeans_pp(ds: &Dataset, k: usize, rng: &mut Rng) -> Matrix {
     let n = ds.n();
     let d = ds.d();
@@ -44,18 +48,19 @@ pub fn kmeans_pp(ds: &Dataset, k: usize, rng: &mut Rng) -> Matrix {
     centroids.row_mut(0).copy_from_slice(ds.points.row(first));
 
     // Maintain the running min squared distance to the chosen set.
-    let mut min_d2: Vec<f64> = (0..n)
-        .map(|i| sq_dist(ds.points.row(i), centroids.row(0)) as f64)
-        .collect();
+    let mut col = vec![0.0f32; n];
+    kernel::sq_dists_to(&ds.points, centroids.row(0), &mut col);
+    let mut min_d2: Vec<f64> = col.iter().map(|&v| v as f64).collect();
 
     for c in 1..k {
         let pick = rng.sample_weighted(&min_d2);
         centroids.row_mut(c).copy_from_slice(ds.points.row(pick));
         if c + 1 < k {
-            for i in 0..n {
-                let d2 = sq_dist(ds.points.row(i), centroids.row(c)) as f64;
-                if d2 < min_d2[i] {
-                    min_d2[i] = d2;
+            kernel::sq_dists_to(&ds.points, centroids.row(c), &mut col);
+            for (m, &v) in min_d2.iter_mut().zip(&col) {
+                let d2 = v as f64;
+                if d2 < *m {
+                    *m = d2;
                 }
             }
         }

@@ -1,0 +1,491 @@
+//! The tiled points×centroids distance micro-kernel — the one home of all
+//! point↔centroid distance arithmetic (DESIGN.md §5, "distance kernel
+//! contract").
+//!
+//! The paper's whole premise (PAPER.md) is that the distance stage is the
+//! part worth accelerating: KPynq streams point tiles through a P-lane ×
+//! 8-wide MAC-tree pipeline while the multi-level filter decides which
+//! distances are worth computing at all. This module is the software
+//! mirror of that pipeline: every algorithm variant (`lloyd`, `hamerly`,
+//! `elkan`, `yinyang`), the k-means++ seeding scan, the coordinator's
+//! shard slices and the engine/accelerator backends call these batch APIs
+//! instead of hand-rolling their own loops over `util::matrix::sq_dist`.
+//!
+//! # Contract (normative — DESIGN.md §5)
+//!
+//! * **Bit-exactness.** Every API except [`sq_dist_block_norms`] produces
+//!   bit-identical results to the naive "for each point, for each centroid
+//!   in ascending order, `sq_dist`" loop, for *any* tile size. Tiling
+//!   iterates both axes in ascending order and each (point, centroid) pair
+//!   is computed by the same scalar `sq_dist` reduction, so the per-point
+//!   visit order — and therefore every strict-`<` argmin/second-best
+//!   update — is unchanged. `rust/tests/kernel_equivalence.rs` pins this
+//!   across every tile-boundary shape.
+//! * **Accounting.** Batch APIs return the exact number of distance
+//!   computations performed as a `u64`; a tile that computes `t` distances
+//!   reports exactly `t`. Callers feed these counts into
+//!   `metrics::IterStats` unmodified — the work-efficiency story survives
+//!   the batch seam byte for byte.
+//! * **The algebraic form is opt-in.** `‖x‖² + ‖c‖² − 2x·c` (via
+//!   [`row_sq_norms`]) trades the subtract-then-square reduction for a dot
+//!   product and changes bits (catastrophic cancellation near 0). It is
+//!   allowed only where the caller tolerates approximate distances (bench
+//!   baselines, approximate scoring) and never in a fit path; the exact
+//!   `sq_dist` tiling is the normative fallback.
+//!
+//! Tile sizes: [`TILE_POINTS`] keeps a point tile's rows plus a centroid
+//! tile resident in L1/L2 across the centroid sweep; [`TILE_CENTROIDS`]
+//! matches the 8-wide lane shape of `util::matrix::sq_dist` (and the
+//! FPGA MAC tree) so a `std::simd`/intrinsics drop-in later can hold eight
+//! running distances in one vector register.
+
+use crate::util::matrix::{sq_dist, Matrix};
+
+/// Points per tile: 32 rows of typical `d` keep the tile plus a centroid
+/// block L1-resident while the centroid axis is swept.
+pub const TILE_POINTS: usize = 32;
+
+/// Centroids per tile: matches the 8-lane accumulation shape of
+/// `util::matrix::sq_dist` (one future `f32x8` register of running bests).
+pub const TILE_CENTROIDS: usize = 8;
+
+/// Scan all centroids for one point; returns (argmin, best d², second d²).
+/// Ties break to the lowest index (strict `<`), matching the Pallas kernel
+/// and the oracle. The batch APIs below produce bit-identical results to
+/// repeating this scan per point; it remains public as the scalar
+/// reference scan for external engines and the fixed-point fidelity test.
+#[inline]
+pub fn scan_all(point: &[f32], centroids: &Matrix) -> (usize, f32, f32) {
+    let mut best = f32::INFINITY;
+    let mut second = f32::INFINITY;
+    let mut arg = 0usize;
+    for c in 0..centroids.rows() {
+        let d2 = sq_dist(point, centroids.row(c));
+        if d2 < best {
+            second = best;
+            best = d2;
+            arg = c;
+        } else if d2 < second {
+            second = d2;
+        }
+    }
+    (arg, best, second)
+}
+
+/// Exact squared distance between one point and one centroid — the same
+/// scalar reduction the tiled paths use. Single-pair escape hatch for the
+/// filtered algorithms' tighten steps (one distance, data-dependent),
+/// where batching has nothing to amortise.
+#[inline]
+pub fn sq_dist_pair(point: &[f32], centroid: &[f32]) -> f32 {
+    sq_dist(point, centroid)
+}
+
+/// Exact Euclidean distance for one (point, centroid) pair:
+/// `sq_dist_pair(..).sqrt()`.
+#[inline]
+pub fn dist_pair(point: &[f32], centroid: &[f32]) -> f32 {
+    sq_dist(point, centroid).sqrt()
+}
+
+/// Result of a batched nearest/second-nearest scan over a point range.
+#[derive(Clone, Debug)]
+pub struct NearestScan {
+    /// Argmin centroid per point (ties to the lowest index).
+    pub idx: Vec<u32>,
+    /// Best squared distance per point.
+    pub best: Vec<f32>,
+    /// Second-best squared distance per point (`+inf` when `k == 1`).
+    pub second: Vec<f32>,
+    /// Exact number of distance computations performed (`n·k`).
+    pub dist_comps: u64,
+}
+
+/// Batched [`scan_all`] over every row of `points` with the default tile
+/// sizes. Bit-identical to the per-row scalar scan; `dist_comps` is
+/// exactly `points.rows() · centroids.rows()`.
+pub fn nearest_full_scan(points: &Matrix, centroids: &Matrix) -> NearestScan {
+    let n = points.rows();
+    let mut idx = vec![0u32; n];
+    let mut best = vec![0.0f32; n];
+    let mut second = vec![0.0f32; n];
+    let dist_comps = nearest_into(points, 0, n, centroids, &mut idx, &mut best, &mut second);
+    NearestScan { idx, best, second, dist_comps }
+}
+
+/// Tiled nearest/second-nearest scan over `points[lo..hi]`, writing into
+/// caller-owned buffers (index 0 of each buffer corresponds to point `lo`)
+/// so iterative fits can reuse their allocations. Returns the exact
+/// distance-computation count, `(hi-lo) · k`.
+pub fn nearest_into(
+    points: &Matrix,
+    lo: usize,
+    hi: usize,
+    centroids: &Matrix,
+    idx: &mut [u32],
+    best: &mut [f32],
+    second: &mut [f32],
+) -> u64 {
+    nearest_into_tiled(points, lo, hi, centroids, TILE_POINTS, TILE_CENTROIDS, idx, best, second)
+}
+
+/// [`nearest_into`] with explicit tile sizes — the property tests sweep
+/// these to prove the results are tile-size independent; production call
+/// sites use the defaults via `nearest_into`.
+#[allow(clippy::too_many_arguments)]
+pub fn nearest_into_tiled(
+    points: &Matrix,
+    lo: usize,
+    hi: usize,
+    centroids: &Matrix,
+    tile_points: usize,
+    tile_centroids: usize,
+    idx: &mut [u32],
+    best: &mut [f32],
+    second: &mut [f32],
+) -> u64 {
+    let nn = hi - lo;
+    let k = centroids.rows();
+    assert!(lo <= hi && hi <= points.rows(), "point range out of bounds");
+    assert_eq!(points.cols(), centroids.cols(), "dimension mismatch");
+    assert_eq!(idx.len(), nn);
+    assert_eq!(best.len(), nn);
+    assert_eq!(second.len(), nn);
+    assert!(tile_points > 0 && tile_centroids > 0, "tile sizes must be positive");
+
+    best[..nn].fill(f32::INFINITY);
+    second[..nn].fill(f32::INFINITY);
+    idx[..nn].fill(0);
+
+    let mut comps = 0u64;
+    let mut p0 = 0usize;
+    while p0 < nn {
+        let p1 = (p0 + tile_points).min(nn);
+        // Sweep the centroid axis in ascending tiles: each point's running
+        // (best, second, arg) sees centroids in the same order as a flat
+        // scan, so strict-`<` updates are bit-identical for any tiling.
+        let mut c0 = 0usize;
+        while c0 < k {
+            let c1 = (c0 + tile_centroids).min(k);
+            for j in p0..p1 {
+                let row = points.row(lo + j);
+                let mut b = best[j];
+                let mut s = second[j];
+                let mut a = idx[j];
+                for c in c0..c1 {
+                    let d2 = sq_dist(row, centroids.row(c));
+                    if d2 < b {
+                        s = b;
+                        b = d2;
+                        a = c as u32;
+                    } else if d2 < s {
+                        s = d2;
+                    }
+                }
+                best[j] = b;
+                second[j] = s;
+                idx[j] = a;
+            }
+            comps += ((p1 - p0) * (c1 - c0)) as u64;
+            c0 = c1;
+        }
+        p0 = p1;
+    }
+    comps
+}
+
+/// Rectangular tile of exact squared distances: `out[(i-lo)*k + c] =
+/// sq_dist(points[i], centroids[c])` for `i` in `lo..hi`. What Elkan's
+/// bound initialisation and yinyang's group scans consume. Returns the
+/// exact count, `(hi-lo) · k`.
+pub fn sq_dist_block(
+    points: &Matrix,
+    lo: usize,
+    hi: usize,
+    centroids: &Matrix,
+    out: &mut [f32],
+) -> u64 {
+    sq_dist_block_tiled(points, lo, hi, centroids, TILE_POINTS, TILE_CENTROIDS, out)
+}
+
+/// [`sq_dist_block`] with explicit tile sizes (swept by the equivalence
+/// battery; every entry is an independent `sq_dist`, so tiling cannot
+/// change bits regardless of order — asserted anyway).
+pub fn sq_dist_block_tiled(
+    points: &Matrix,
+    lo: usize,
+    hi: usize,
+    centroids: &Matrix,
+    tile_points: usize,
+    tile_centroids: usize,
+    out: &mut [f32],
+) -> u64 {
+    let nn = hi - lo;
+    let k = centroids.rows();
+    assert!(lo <= hi && hi <= points.rows(), "point range out of bounds");
+    assert_eq!(points.cols(), centroids.cols(), "dimension mismatch");
+    assert_eq!(out.len(), nn * k, "output tile shape mismatch");
+    assert!(tile_points > 0 && tile_centroids > 0, "tile sizes must be positive");
+
+    let mut comps = 0u64;
+    let mut p0 = 0usize;
+    while p0 < nn {
+        let p1 = (p0 + tile_points).min(nn);
+        let mut c0 = 0usize;
+        while c0 < k {
+            let c1 = (c0 + tile_centroids).min(k);
+            for j in p0..p1 {
+                let row = points.row(lo + j);
+                let orow = &mut out[j * k..(j + 1) * k];
+                for c in c0..c1 {
+                    orow[c] = sq_dist(row, centroids.row(c));
+                }
+            }
+            comps += ((p1 - p0) * (c1 - c0)) as u64;
+            c0 = c1;
+        }
+        p0 = p1;
+    }
+    comps
+}
+
+/// One column of exact squared distances: `out[i] = sq_dist(points[i],
+/// target)` for every row. The k-means++ D² update (and the centroid
+/// grouping seed scan) is exactly this shape. Returns `points.rows()`.
+pub fn sq_dists_to(points: &Matrix, target: &[f32], out: &mut [f32]) -> u64 {
+    let n = points.rows();
+    assert_eq!(points.cols(), target.len(), "dimension mismatch");
+    assert_eq!(out.len(), n);
+    for (o, row) in out.iter_mut().zip(points.rows_iter()) {
+        *o = sq_dist(row, target);
+    }
+    n as u64
+}
+
+/// Per-row squared norms `‖r‖²`, accumulated with the same 8-lane
+/// reduction shape as `sq_dist`. Precompute these for the centroid set to
+/// feed [`sq_dist_block_norms`].
+pub fn row_sq_norms(m: &Matrix) -> Vec<f32> {
+    m.rows_iter().map(|r| sq_dist(r, &vec![0.0f32; r.len()])).collect()
+}
+
+/// Algebraic-form distance tile: `‖x‖² + ‖c‖² − 2x·c` with `c_norms`
+/// precomputed by [`row_sq_norms`], clamped at zero.
+///
+/// **Not bit-exact** — the cancellation `‖x‖² + ‖c‖² − 2x·c` loses
+/// low-order bits exactly where distances are small, which is where argmin
+/// decisions happen. Per the kernel contract (DESIGN.md §5) this path is
+/// opt-in for approximate consumers only (bench baselines, approximate
+/// scoring); fit paths must use the exact [`sq_dist_block`] fallback.
+/// Returns the exact count, `(hi-lo) · k` — accounting stays truthful even
+/// on the approximate path.
+pub fn sq_dist_block_norms(
+    points: &Matrix,
+    lo: usize,
+    hi: usize,
+    centroids: &Matrix,
+    c_norms: &[f32],
+    out: &mut [f32],
+) -> u64 {
+    let nn = hi - lo;
+    let k = centroids.rows();
+    let d = points.cols();
+    assert!(lo <= hi && hi <= points.rows(), "point range out of bounds");
+    assert_eq!(d, centroids.cols(), "dimension mismatch");
+    assert_eq!(c_norms.len(), k, "one precomputed norm per centroid");
+    assert_eq!(out.len(), nn * k, "output tile shape mismatch");
+
+    for j in 0..nn {
+        let row = points.row(lo + j);
+        // ‖x‖² with the same lane shape as sq_dist.
+        let mut lanes = [0.0f32; 8];
+        let ca = row.chunks_exact(8);
+        let rem = ca.remainder();
+        for xa in ca {
+            let xa: &[f32; 8] = xa.try_into().unwrap();
+            for l in 0..8 {
+                lanes[l] += xa[l] * xa[l];
+            }
+        }
+        let mut tail = 0.0f32;
+        for &x in rem {
+            tail += x * x;
+        }
+        let x_norm = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+            + tail;
+        let orow = &mut out[j * k..(j + 1) * k];
+        for (c, o) in orow.iter_mut().enumerate() {
+            let crow = centroids.row(c);
+            let mut dot_lanes = [0.0f32; 8];
+            let cx = row.chunks_exact(8);
+            let cc = crow.chunks_exact(8);
+            let (rx, rc) = (cx.remainder(), cc.remainder());
+            for (xa, xb) in cx.zip(cc) {
+                let xa: &[f32; 8] = xa.try_into().unwrap();
+                let xb: &[f32; 8] = xb.try_into().unwrap();
+                for l in 0..8 {
+                    dot_lanes[l] += xa[l] * xb[l];
+                }
+            }
+            let mut dot_tail = 0.0f32;
+            for (x, y) in rx.iter().zip(rc) {
+                dot_tail += x * y;
+            }
+            let dot = ((dot_lanes[0] + dot_lanes[1]) + (dot_lanes[2] + dot_lanes[3]))
+                + ((dot_lanes[4] + dot_lanes[5]) + (dot_lanes[6] + dot_lanes[7]))
+                + dot_tail;
+            *o = (x_norm + c_norms[c] - 2.0 * dot).max(0.0);
+        }
+    }
+    (nn as u64) * (k as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::rng::Rng;
+
+    fn random_instance(n: usize, d: usize, k: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let pts: Vec<f32> = (0..n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let cts: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        (Matrix::from_vec(pts, n, d).unwrap(), Matrix::from_vec(cts, k, d).unwrap())
+    }
+
+    #[test]
+    fn scan_all_finds_best_and_second() {
+        let c = Matrix::from_vec(vec![0.0, 0.0, 1.0, 0.0, 5.0, 0.0], 3, 2).unwrap();
+        let (arg, best, second) = scan_all(&[0.9, 0.0], &c);
+        assert_eq!(arg, 1);
+        assert!((best - 0.01).abs() < 1e-6);
+        assert!((second - 0.81).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scan_all_tie_breaks_low_index() {
+        let c = Matrix::from_vec(vec![1.0, 0.0, -1.0, 0.0], 2, 2).unwrap();
+        let (arg, _, _) = scan_all(&[0.0, 0.0], &c);
+        assert_eq!(arg, 0);
+    }
+
+    #[test]
+    fn batch_matches_scalar_scan_bit_for_bit() {
+        for &(n, d, k) in &[(1, 1, 1), (33, 7, 9), (67, 8, 8), (31, 9, 7)] {
+            let (pts, cts) = random_instance(n, d, k, 0xA11CE ^ (n * d * k) as u64);
+            let scan = nearest_full_scan(&pts, &cts);
+            assert_eq!(scan.dist_comps, (n as u64) * (k as u64));
+            for i in 0..n {
+                let (arg, best, second) = scan_all(pts.row(i), &cts);
+                assert_eq!(scan.idx[i], arg as u32, "n={n} d={d} k={k} i={i}");
+                assert_eq!(scan.best[i].to_bits(), best.to_bits());
+                assert_eq!(scan.second[i].to_bits(), second.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tiling_is_result_invariant() {
+        let (pts, cts) = random_instance(67, 9, 13, 42);
+        let reference = nearest_full_scan(&pts, &cts);
+        for &(tp, tc) in &[(1, 1), (2, 3), (31, 7), (32, 8), (33, 9), (100, 100)] {
+            let mut idx = vec![0u32; 67];
+            let mut best = vec![0.0f32; 67];
+            let mut second = vec![0.0f32; 67];
+            let comps =
+                nearest_into_tiled(&pts, 0, 67, &cts, tp, tc, &mut idx, &mut best, &mut second);
+            assert_eq!(comps, reference.dist_comps, "tp={tp} tc={tc}");
+            assert_eq!(idx, reference.idx, "tp={tp} tc={tc}");
+            assert_eq!(
+                best.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                reference.best.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                second.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                reference.second.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn block_matches_pairwise_sq_dist() {
+        let (pts, cts) = random_instance(33, 5, 9, 7);
+        let mut out = vec![0.0f32; 33 * 9];
+        let comps = sq_dist_block(&pts, 0, 33, &cts, &mut out);
+        assert_eq!(comps, 33 * 9);
+        for i in 0..33 {
+            for c in 0..9 {
+                let want = sq_dist(pts.row(i), cts.row(c));
+                assert_eq!(out[i * 9 + c].to_bits(), want.to_bits(), "i={i} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn sub_range_indexes_from_lo() {
+        let (pts, cts) = random_instance(20, 4, 3, 11);
+        let mut out = vec![0.0f32; 5 * 3];
+        sq_dist_block(&pts, 7, 12, &cts, &mut out);
+        for j in 0..5 {
+            for c in 0..3 {
+                let want = sq_dist(pts.row(7 + j), cts.row(c));
+                assert_eq!(out[j * 3 + c].to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn column_matches_pairwise_sq_dist() {
+        let (pts, cts) = random_instance(29, 6, 4, 3);
+        let mut col = vec![0.0f32; 29];
+        let comps = sq_dists_to(&pts, cts.row(2), &mut col);
+        assert_eq!(comps, 29);
+        for i in 0..29 {
+            let want = sq_dist(pts.row(i), cts.row(2));
+            assert_eq!(col[i].to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn k1_second_best_is_infinite() {
+        let (pts, cts) = random_instance(10, 3, 1, 5);
+        let scan = nearest_full_scan(&pts, &cts);
+        assert!(scan.second.iter().all(|s| s.is_infinite()));
+        assert!(scan.idx.iter().all(|&i| i == 0));
+    }
+
+    #[test]
+    fn norms_path_is_close_but_only_advisory() {
+        let ds = synth::blobs(120, 6, 3, 9);
+        let cts = ds.points.gather_rows(&[0, 40, 80]);
+        let norms = row_sq_norms(&cts);
+        let mut approx = vec![0.0f32; 120 * 3];
+        let comps = sq_dist_block_norms(&ds.points, 0, 120, &cts, &norms, &mut approx);
+        assert_eq!(comps, 120 * 3, "accounting is exact even on the approximate path");
+        let mut exact = vec![0.0f32; 120 * 3];
+        sq_dist_block(&ds.points, 0, 120, &cts, &mut exact);
+        for (i, (&a, &e)) in approx.iter().zip(&exact).enumerate() {
+            assert!(a >= 0.0, "clamped at zero");
+            assert!((a - e).abs() <= 1e-3 * e.max(1.0), "entry {i}: {a} vs {e}");
+        }
+        // On a well-separated fixture the approximate argmin still agrees.
+        for i in 0..120 {
+            let arow = &approx[i * 3..(i + 1) * 3];
+            let erow = &exact[i * 3..(i + 1) * 3];
+            let aa = arow.iter().enumerate().min_by(|x, y| x.1.partial_cmp(y.1).unwrap()).unwrap().0;
+            let ea = erow.iter().enumerate().min_by(|x, y| x.1.partial_cmp(y.1).unwrap()).unwrap().0;
+            assert_eq!(aa, ea, "point {i}");
+        }
+    }
+
+    #[test]
+    fn row_sq_norms_match_self_distance_to_origin() {
+        let (pts, _) = random_instance(17, 11, 1, 13);
+        let norms = row_sq_norms(&pts);
+        for i in 0..17 {
+            let origin = vec![0.0f32; 11];
+            assert_eq!(norms[i].to_bits(), sq_dist(pts.row(i), &origin).to_bits());
+        }
+    }
+}

@@ -17,11 +17,19 @@
 //! arithmetic carries a conservative epsilon so float rounding can only
 //! cause extra distance computations, never wrong ones). The property tests
 //! in `rust/tests/` assert this equivalence on random instances.
+//!
+//! Every point↔centroid distance any of them computes goes through the
+//! shared tiled micro-kernel, [`kernel`] (DESIGN.md §5) — the four
+//! algorithms differ only in *which* distances they decide to compute,
+//! never in how a distance is computed. `tools/check-docs.sh` enforces
+//! the seam: no file in this module except `kernel.rs` may call the raw
+//! `util::matrix` distance helpers.
 
 pub mod bounds;
 pub mod elkan;
 pub mod hamerly;
 pub mod init;
+pub mod kernel;
 pub mod lloyd;
 pub mod metrics;
 pub mod reduce;
@@ -210,7 +218,7 @@ pub(crate) fn centroid_drifts(old: &Matrix, new: &Matrix) -> (Vec<f32>, f32) {
     let mut drifts = Vec::with_capacity(old.rows());
     let mut max = 0.0f32;
     for c in 0..old.rows() {
-        let d = crate::util::matrix::dist(old.row(c), new.row(c));
+        let d = kernel::dist_pair(old.row(c), new.row(c));
         max = max.max(d);
         drifts.push(d);
     }
@@ -224,7 +232,7 @@ pub(crate) fn centroid_drifts(old: &Matrix, new: &Matrix) -> (Vec<f32>, f32) {
 pub(crate) fn compute_inertia(ds: &Dataset, centroids: &Matrix, assignments: &[u32]) -> f64 {
     let mut sum = reduce::ExactSum::new();
     for (i, &a) in assignments.iter().enumerate() {
-        sum.add(crate::util::matrix::sq_dist(ds.points.row(i), centroids.row(a as usize)));
+        sum.add(kernel::sq_dist_pair(ds.points.row(i), centroids.row(a as usize)));
     }
     sum.value()
 }

@@ -29,12 +29,12 @@
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::kmeans::bounds::{filter_safe, group_max_drifts, inflate_ub};
-use crate::kmeans::lloyd::scan_all;
+use crate::kmeans::kernel::{self, scan_all};
 use crate::kmeans::{
     centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
     KMeansConfig, RunStats,
 };
-use crate::util::matrix::{dist, Matrix};
+use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
 /// A partition of centroids into groups.
@@ -96,20 +96,22 @@ pub fn group_centroids(centroids: &Matrix, n_groups: usize, seed: u64) -> Groupi
         return Grouping::from_assignment(&(0..k).collect::<Vec<_>>(), k);
     }
 
-    // Mini k-means++ + Lloyd over the centroid set.
+    // Mini k-means++ + Lloyd over the centroid set. The D² columns come
+    // from the kernel's column scan — the same per-element `sq_dist`
+    // values the old per-pair loop produced.
     let mut rng = Rng::new(seed ^ 0x9159_2A5B_71C3_0DEF);
     let mut seeds = Matrix::zeros(n_groups, centroids.cols());
     let first = rng.next_below(k);
     seeds.row_mut(0).copy_from_slice(centroids.row(first));
-    let mut min_d2: Vec<f64> = (0..k)
-        .map(|c| crate::util::matrix::sq_dist(centroids.row(c), seeds.row(0)) as f64)
-        .collect();
+    let mut col = vec![0.0f32; k];
+    kernel::sq_dists_to(centroids, seeds.row(0), &mut col);
+    let mut min_d2: Vec<f64> = col.iter().map(|&v| v as f64).collect();
     for s in 1..n_groups {
         let pick = rng.sample_weighted(&min_d2);
         seeds.row_mut(s).copy_from_slice(centroids.row(pick));
-        for c in 0..k {
-            let d2 = crate::util::matrix::sq_dist(centroids.row(c), seeds.row(s)) as f64;
-            min_d2[c] = min_d2[c].min(d2);
+        kernel::sq_dists_to(centroids, seeds.row(s), &mut col);
+        for (m, &v) in min_d2.iter_mut().zip(&col) {
+            *m = m.min(v as f64);
         }
     }
 
@@ -172,6 +174,9 @@ pub struct FilterState {
 impl FilterState {
     /// Initialise by full scan: exactly `n·k` distance computations — the
     /// same first iteration the hardware performs with filters disabled.
+    /// Runs on kernel tiles; each tile entry is converted to sqrt space
+    /// before any comparison, so the argmin and every group bound carry
+    /// the exact bits of the old per-pair `dist` loop.
     pub fn init_full_scan(ds: &Dataset, centroids: &Matrix, grouping: &Grouping) -> (Self, u64) {
         let n = ds.n();
         let k = centroids.rows();
@@ -180,34 +185,41 @@ impl FilterState {
         let mut ub = vec![0.0f32; n];
         let mut lb = vec![f32::INFINITY; n * g_count];
         let mut dists = vec![0.0f32; k];
-        for (i, row) in ds.points.rows_iter().enumerate() {
-            let mut best = f32::INFINITY;
-            let mut arg = 0usize;
-            for c in 0..k {
-                let d = dist(row, centroids.row(c));
-                dists[c] = d;
-                if d < best {
-                    best = d;
-                    arg = c;
+        let mut tile = vec![0.0f32; kernel::TILE_POINTS * k];
+        let mut comps = 0u64;
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + kernel::TILE_POINTS).min(n);
+            comps += kernel::sq_dist_block(&ds.points, lo, hi, centroids, &mut tile[..(hi - lo) * k]);
+            for j in 0..hi - lo {
+                let i = lo + j;
+                let mut best = f32::INFINITY;
+                let mut arg = 0usize;
+                for c in 0..k {
+                    let d = tile[j * k + c].sqrt();
+                    dists[c] = d;
+                    if d < best {
+                        best = d;
+                        arg = c;
+                    }
+                }
+                assignments[i] = arg as u32;
+                ub[i] = best;
+                let lbrow = &mut lb[i * g_count..(i + 1) * g_count];
+                for (c, &d) in dists.iter().enumerate() {
+                    if c == arg {
+                        continue;
+                    }
+                    let g = grouping.group_of[c];
+                    if d < lbrow[g] {
+                        lbrow[g] = d;
+                    }
                 }
             }
-            assignments[i] = arg as u32;
-            ub[i] = best;
-            let lbrow = &mut lb[i * g_count..(i + 1) * g_count];
-            for (c, &d) in dists.iter().enumerate() {
-                if c == arg {
-                    continue;
-                }
-                let g = grouping.group_of[c];
-                if d < lbrow[g] {
-                    lbrow[g] = d;
-                }
-            }
+            lo = hi;
         }
-        (
-            FilterState { assignments, ub, lb, n_groups: g_count },
-            (n as u64) * (k as u64),
-        )
+        debug_assert_eq!(comps, (n as u64) * (k as u64));
+        (FilterState { assignments, ub, lb, n_groups: g_count }, comps)
     }
 
     /// Apply post-update drifts to every bound (the host-side part of the
@@ -284,7 +296,7 @@ pub fn step_point(
     }
 
     // ---- Tighten: one exact distance to the current assignment ----
-    let d_a_orig = dist(row, centroids.row(a_orig));
+    let d_a_orig = kernel::dist_pair(row, centroids.row(a_orig));
     counts.dists += 1;
     st.ub[i] = d_a_orig;
     if filter_safe(global_lb, st.ub[i]) {
@@ -320,7 +332,7 @@ pub fn step_point(
                 counts.points_skipped += 1;
                 local_bound // a valid lower bound for the new lb_g
             } else {
-                let d = dist(row, centroids.row(c));
+                let d = kernel::dist_pair(row, centroids.row(c));
                 counts.dists += 1;
                 if d < ub_cur {
                     a_cur = c;

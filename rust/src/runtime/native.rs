@@ -1,12 +1,12 @@
 //! The native (pure-Rust) tile engine.
 //!
-//! Shares its scan kernel with the software algorithms (`lloyd::scan_all`),
-//! so a coordinator run through the native engine is numerically identical
-//! to a direct `kmeans::fit` — the anchor for all cross-engine parity
-//! tests.
+//! Shares the tiled distance micro-kernel with the software algorithms
+//! (`kmeans::kernel`, DESIGN.md §5), so a coordinator run through the
+//! native engine is numerically identical to a direct `kmeans::fit` — the
+//! anchor for all cross-engine parity tests.
 
 use crate::error::Result;
-use crate::kmeans::lloyd::scan_all;
+use crate::kmeans::kernel;
 use crate::util::matrix::Matrix;
 
 use super::{AssignOut, Engine};
@@ -21,17 +21,8 @@ impl Engine for NativeEngine {
     }
 
     fn assign_tile(&mut self, points: &Matrix, centroids: &Matrix) -> Result<AssignOut> {
-        let n = points.rows();
-        let mut idx = Vec::with_capacity(n);
-        let mut best = Vec::with_capacity(n);
-        let mut second = Vec::with_capacity(n);
-        for row in points.rows_iter() {
-            let (a, b, s) = scan_all(row, centroids);
-            idx.push(a as u32);
-            best.push(b);
-            second.push(s);
-        }
-        Ok(AssignOut { idx, best, second })
+        let scan = kernel::nearest_full_scan(points, centroids);
+        Ok(AssignOut { idx: scan.idx, best: scan.best, second: scan.second })
     }
 }
 

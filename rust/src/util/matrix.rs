@@ -92,6 +92,30 @@ impl Matrix {
 /// Deliberately `d * d + acc`, NOT `f32::mul_add`: without `-C
 /// target-feature=+fma` the latter lowers to a libm `fmaf` call and is ~6×
 /// slower (measured in the hotpath bench).
+///
+/// Edge semantics (pinned by the table-driven tests below; the tiled
+/// kernel `kmeans::kernel` inherits them verbatim since every tile entry
+/// is this reduction):
+///
+/// * length 0 ⇒ `+0.0`; all-equal finite inputs ⇒ `+0.0` (never `-0.0`,
+///   even when coordinates mix `±0.0` — IEEE-754 `(-0.0)+(+0.0) = +0.0`
+///   and squares are non-negative).
+/// * any `NaN` coordinate ⇒ `NaN`; `∞` coordinate opposite a finite one
+///   ⇒ `+∞`; `∞` opposite `∞` (same sign) ⇒ `NaN` (`∞ − ∞`). NaN/∞ are
+///   *propagated, not filtered* — callers wanting validation do it at
+///   ingest (`Dataset::validate`), not per distance.
+/// * subnormal differences underflow to `+0.0` when `d·d` rounds below
+///   the smallest subnormal — two distinct points can legally be at
+///   squared distance zero. Bound logic must therefore never divide by a
+///   squared distance without checking it.
+/// * identical behavior in the 8-lane body and the `len % 8` remainder
+///   tail: the tests sweep a special value through every position of a
+///   length-9 slice (lanes and tail) and every length 0..=17.
+///
+/// Note the result is *not* guaranteed bit-equal to a naive sequential
+/// `Σ(aᵢ-bᵢ)²` for arbitrary finite inputs — the 8-lane pairwise
+/// reduction associates differently. The normative reference for the
+/// kernel equivalence battery is this function itself, applied per pair.
 #[inline]
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -118,7 +142,8 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     s + tail
 }
 
-/// Euclidean distance.
+/// Euclidean distance. Inherits `sq_dist`'s edge semantics; additionally
+/// `sqrt` maps `NaN` to `NaN` and never produces a negative zero.
 #[inline]
 pub fn dist(a: &[f32], b: &[f32]) -> f32 {
     sq_dist(a, b).sqrt()
@@ -168,5 +193,88 @@ mod tests {
         let a = [1.0, 2.0, 3.0];
         let b = [4.0, 6.0, 3.0];
         assert!((dist(&a, &b) - 5.0).abs() < 1e-6);
+    }
+
+    /// What the doc contract calls "edge semantics": table-driven pins for
+    /// NaN, ±0.0, infinities and subnormal underflow, exercised in both an
+    /// 8-lane body position (index 3 of a length-9 slice) and the
+    /// remainder tail (index 8).
+    #[test]
+    fn sq_dist_edge_semantics_table() {
+        #[derive(Clone, Copy)]
+        enum Expect {
+            /// Exact bit pattern (covers the +0.0-not--0.0 pins).
+            Bits(f32),
+            IsNan,
+            IsPosInf,
+        }
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        let sub = 1.0e-40f32; // subnormal; sub*sub underflows to 0
+        // (name, position, a-value, b-value, expectation); position is
+        // patched into otherwise-zero length-9 slices.
+        let table: &[(&str, usize, f32, f32, Expect)] = &[
+            ("signed zeros in lane", 3, -0.0, 0.0, Expect::Bits(0.0)),
+            ("signed zeros in tail", 8, -0.0, 0.0, Expect::Bits(0.0)),
+            ("nan in lane", 3, f32::NAN, 0.0, Expect::IsNan),
+            ("nan in tail", 8, f32::NAN, 0.0, Expect::IsNan),
+            ("nan on rhs", 3, 0.0, f32::NAN, Expect::IsNan),
+            ("inf in lane", 3, f32::INFINITY, 0.0, Expect::IsPosInf),
+            ("inf in tail", 8, f32::INFINITY, 0.0, Expect::IsPosInf),
+            ("neg inf", 3, f32::NEG_INFINITY, 1.0, Expect::IsPosInf),
+            ("inf minus inf in lane", 3, f32::INFINITY, f32::INFINITY, Expect::IsNan),
+            ("inf minus inf in tail", 8, f32::INFINITY, f32::INFINITY, Expect::IsNan),
+            ("min subnormal underflows (lane)", 3, tiny, 0.0, Expect::Bits(0.0)),
+            ("min subnormal underflows (tail)", 8, tiny, 0.0, Expect::Bits(0.0)),
+            ("1e-40 diff underflows", 3, sub, 0.0, Expect::Bits(0.0)),
+            ("equal subnormals cancel", 3, sub, sub, Expect::Bits(0.0)),
+        ];
+        for &(name, pos, av, bv, want) in table {
+            let mut a = [0.0f32; 9];
+            let mut b = [0.0f32; 9];
+            a[pos] = av;
+            b[pos] = bv;
+            let got = sq_dist(&a, &b);
+            match want {
+                Expect::Bits(w) => {
+                    assert_eq!(got.to_bits(), w.to_bits(), "{name}: got {got}");
+                }
+                Expect::IsNan => assert!(got.is_nan(), "{name}: got {got}"),
+                Expect::IsPosInf => {
+                    assert!(got.is_infinite() && got > 0.0, "{name}: got {got}")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sq_dist_zero_length_is_positive_zero() {
+        let got = sq_dist(&[], &[]);
+        assert_eq!(got.to_bits(), 0.0f32.to_bits());
+    }
+
+    /// A single nonzero difference has exactly one nonzero term, so the
+    /// reduction order cannot matter: the result must be bit-equal to
+    /// `diff²` wherever the difference sits — lane body or remainder tail
+    /// — for every length 0..=17 (two full chunks plus every tail size).
+    #[test]
+    fn sq_dist_remainder_path_every_length_and_position() {
+        for len in 1..=17usize {
+            for pos in 0..len {
+                let mut a = vec![0.0f32; len];
+                let b = vec![0.0f32; len];
+                a[pos] = 3.0;
+                let got = sq_dist(&a, &b);
+                assert_eq!(got.to_bits(), 9.0f32.to_bits(), "len={len} pos={pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn dist_propagates_nan_and_never_negative() {
+        let mut a = [0.0f32; 9];
+        a[4] = f32::NAN;
+        assert!(dist(&a, &[0.0; 9]).is_nan());
+        let d = dist(&[-0.0, 0.0], &[0.0, -0.0]);
+        assert_eq!(d.to_bits(), 0.0f32.to_bits());
     }
 }

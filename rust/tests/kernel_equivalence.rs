@@ -1,0 +1,451 @@
+//! The distance micro-kernel equivalence battery (DESIGN.md §5).
+//!
+//! The tiled kernel (`kmeans::kernel`) replaced four hand-rolled distance
+//! loops; this suite is the proof the refactor changed *nothing* the
+//! paper's work-efficiency story depends on. Three layers:
+//!
+//! (a) **kernel == naive, bit for bit** — every batch API against the
+//!     per-pair `util::matrix::sq_dist` loop it replaced, across a grid of
+//!     tile-boundary shapes (n, k, d each in {1, tile−1, tile, tile+1,
+//!     odd primes, 67}) and random-shape/random-tile property cases.
+//! (b) **fits bit-identical across algorithms and backends** — a frozen
+//!     naive-Lloyd oracle (the pre-kernel implementation, re-inlined here)
+//!     against `kmeans::fit_from` for all four algorithms, the simulated
+//!     accelerator and the native-engine coordinator, on golden fixtures:
+//!     assignments, centroids, inertia and the PROTOCOL.md §8 FNV
+//!     fingerprint all equal.
+//! (c) **`WorkEfficiency` invariants pinned** — Lloyd reports exactly
+//!     `n·k` dist comps per iteration through the batch seam; yinyang's
+//!     filter counters (`points_pruned` included) are deterministic and
+//!     identical between software and the accelerator model.
+
+use kpynq::data::{synth, Dataset};
+use kpynq::hw::{AccelConfig, Accelerator};
+use kpynq::kmeans::kernel::{self, TILE_CENTROIDS, TILE_POINTS};
+use kpynq::kmeans::reduce::{ExactSum, PartialAccumulator};
+use kpynq::kmeans::{self, init, Algorithm, FitResult, InitMethod, KMeansConfig};
+use kpynq::serve::job::assignments_checksum;
+use kpynq::util::matrix::{sq_dist, Matrix};
+use kpynq::util::proptest::{run_cases, run_cases_n};
+use kpynq::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// (a) kernel == naive sq_dist loops, bit for bit
+// ---------------------------------------------------------------------
+
+/// Tile-boundary values for one axis: 1, around the tile size, small odd
+/// primes, and 67 (> 2 tiles for both default tile sizes).
+fn axis_values(tile: usize) -> Vec<usize> {
+    let mut v = vec![1, tile - 1, tile, tile + 1, 3, 7, 13, 67];
+    v.sort_unstable();
+    v.dedup();
+    v.retain(|&x| x > 0);
+    v
+}
+
+fn random_instance(n: usize, d: usize, k: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let pts: Vec<f32> = (0..n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let cts: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    (Matrix::from_vec(pts, n, d).unwrap(), Matrix::from_vec(cts, k, d).unwrap())
+}
+
+/// The naive reference the kernel replaced: per point, scan centroids in
+/// ascending order with strict-`<` best/second updates over `sq_dist`.
+fn naive_nearest(points: &Matrix, centroids: &Matrix) -> (Vec<u32>, Vec<f32>, Vec<f32>) {
+    let mut idx = Vec::with_capacity(points.rows());
+    let mut best = Vec::with_capacity(points.rows());
+    let mut second = Vec::with_capacity(points.rows());
+    for row in points.rows_iter() {
+        let mut b = f32::INFINITY;
+        let mut s = f32::INFINITY;
+        let mut a = 0usize;
+        for c in 0..centroids.rows() {
+            let d2 = sq_dist(row, centroids.row(c));
+            if d2 < b {
+                s = b;
+                b = d2;
+                a = c;
+            } else if d2 < s {
+                s = d2;
+            }
+        }
+        idx.push(a as u32);
+        best.push(b);
+        second.push(s);
+    }
+    (idx, best, second)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Check every kernel API against the naive loops on one instance, with
+/// the given tile sizes. Returns an error description on any bit mismatch.
+fn check_kernel_vs_naive(
+    pts: &Matrix,
+    cts: &Matrix,
+    tp: usize,
+    tc: usize,
+) -> Result<(), String> {
+    let n = pts.rows();
+    let k = cts.rows();
+    let tag = format!("n={n} k={k} d={} tp={tp} tc={tc}", pts.cols());
+
+    // nearest_into_tiled == naive scan.
+    let (ridx, rbest, rsecond) = naive_nearest(pts, cts);
+    let mut idx = vec![0u32; n];
+    let mut best = vec![0.0f32; n];
+    let mut second = vec![0.0f32; n];
+    let comps = kernel::nearest_into_tiled(pts, 0, n, cts, tp, tc, &mut idx, &mut best, &mut second);
+    if comps != (n as u64) * (k as u64) {
+        return Err(format!("{tag}: nearest count {comps} != n*k"));
+    }
+    if idx != ridx {
+        return Err(format!("{tag}: argmin mismatch"));
+    }
+    if bits(&best) != bits(&rbest) || bits(&second) != bits(&rsecond) {
+        return Err(format!("{tag}: best/second bits mismatch"));
+    }
+
+    // sq_dist_block_tiled == per-pair sq_dist.
+    let mut block = vec![0.0f32; n * k];
+    let comps = kernel::sq_dist_block_tiled(pts, 0, n, cts, tp, tc, &mut block);
+    if comps != (n as u64) * (k as u64) {
+        return Err(format!("{tag}: block count {comps} != n*k"));
+    }
+    for i in 0..n {
+        for c in 0..k {
+            let want = sq_dist(pts.row(i), cts.row(c));
+            if block[i * k + c].to_bits() != want.to_bits() {
+                return Err(format!("{tag}: block[{i},{c}] bits mismatch"));
+            }
+        }
+    }
+
+    // sq_dists_to == naive column (against each centroid as target).
+    let mut col = vec![0.0f32; n];
+    for c in 0..k {
+        let comps = kernel::sq_dists_to(pts, cts.row(c), &mut col);
+        if comps != n as u64 {
+            return Err(format!("{tag}: column count {comps} != n"));
+        }
+        for i in 0..n {
+            let want = sq_dist(pts.row(i), cts.row(c));
+            if col[i].to_bits() != want.to_bits() {
+                return Err(format!("{tag}: col[{i}] vs centroid {c} bits mismatch"));
+            }
+        }
+    }
+
+    // Singles are literally the same reduction.
+    for i in 0..n.min(4) {
+        for c in 0..k.min(4) {
+            let want = sq_dist(pts.row(i), cts.row(c));
+            if kernel::sq_dist_pair(pts.row(i), cts.row(c)).to_bits() != want.to_bits() {
+                return Err(format!("{tag}: sq_dist_pair mismatch"));
+            }
+            if kernel::dist_pair(pts.row(i), cts.row(c)).to_bits() != want.sqrt().to_bits() {
+                return Err(format!("{tag}: dist_pair mismatch"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// (a) The full tile-boundary grid with the production tile sizes. Every
+/// (n, k, d) combination where each axis takes a boundary value.
+#[test]
+fn kernel_matches_naive_on_every_tile_boundary_shape() {
+    let mut case = 0u64;
+    for &n in &axis_values(TILE_POINTS) {
+        for &k in &axis_values(TILE_CENTROIDS) {
+            for &d in &axis_values(8) {
+                case += 1;
+                let (pts, cts) = random_instance(n, d, k, 0x5EED ^ case);
+                check_kernel_vs_naive(&pts, &cts, TILE_POINTS, TILE_CENTROIDS).unwrap();
+            }
+        }
+    }
+    assert!(case > 300, "grid unexpectedly small: {case} cases");
+}
+
+/// (a) Random shapes AND random tile sizes: the result must be invariant
+/// to tiling, not just correct for the production tiles.
+#[test]
+fn kernel_is_tile_size_invariant_on_random_shapes() {
+    run_cases("kernel tiling invariant", 0x7117E, |rng| {
+        let n = 1 + rng.next_below(80);
+        let d = 1 + rng.next_below(20);
+        let k = 1 + rng.next_below(20);
+        let (pts, cts) = random_instance(n, d, k, rng.next_u64());
+        let tp = 1 + rng.next_below(n + 4);
+        let tc = 1 + rng.next_below(k + 4);
+        check_kernel_vs_naive(&pts, &cts, tp, tc)?;
+        // Sub-range form: a middle slice must index its buffers from lo.
+        if n >= 3 {
+            let lo = 1 + rng.next_below(n - 2);
+            let hi = lo + 1 + rng.next_below(n - lo);
+            let nn = hi - lo;
+            let mut idx = vec![0u32; nn];
+            let mut best = vec![0.0f32; nn];
+            let mut second = vec![0.0f32; nn];
+            kernel::nearest_into_tiled(&pts, lo, hi, &cts, tp, tc, &mut idx, &mut best, &mut second);
+            let (ridx, rbest, _) = naive_nearest(&pts, &cts);
+            for j in 0..nn {
+                if idx[j] != ridx[lo + j] || best[j].to_bits() != rbest[lo + j].to_bits() {
+                    return Err(format!("sub-range [{lo},{hi}) row {j} mismatch"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// (b) all four algorithms bit-identical on golden fixtures + backends
+// ---------------------------------------------------------------------
+
+/// Golden fixtures: shapes chosen to straddle tile boundaries (odd n,
+/// n == 67, k around TILE_CENTROIDS) on both blob and uniform geometry.
+fn fixtures() -> Vec<(Dataset, KMeansConfig)> {
+    let cfg = |k: usize, groups: usize, seed: u64| KMeansConfig {
+        k,
+        groups,
+        seed,
+        max_iters: 40,
+        init: InitMethod::KMeansPlusPlus,
+        ..Default::default()
+    };
+    vec![
+        (synth::blobs(400, 8, 4, 17), cfg(6, 2, 5)),
+        (synth::blobs(257, 3, 5, 23), cfg(5, 0, 9)),
+        (synth::blobs(67, 13, 3, 41), cfg(3, 1, 1)),
+        (synth::uniform(123, 2, 31), cfg(7, 3, 3)),
+        (synth::uniform(96, 9, 47), cfg(9, 0, 11)),
+    ]
+}
+
+/// The pre-kernel Lloyd implementation, frozen here as the oracle: scalar
+/// scan per point (ascending centroids, strict `<`), shared exact centroid
+/// update, drift-based convergence, order-independent inertia.
+fn naive_lloyd_oracle(ds: &Dataset, cfg: &KMeansConfig, init_c: Matrix) -> FitResult {
+    let n = ds.n();
+    let mut centroids = init_c;
+    let mut assignments = vec![0u32; n];
+    let mut stats = kpynq::kmeans::RunStats::default();
+    let mut converged = false;
+    let mut iterations = 0usize;
+    for _ in 0..cfg.max_iters {
+        iterations += 1;
+        let mut it = kpynq::kmeans::IterStats::default();
+        let mut reassigned = 0u64;
+        for (i, row) in ds.points.rows_iter().enumerate() {
+            let mut best = f32::INFINITY;
+            let mut arg = 0usize;
+            for c in 0..centroids.rows() {
+                let d2 = sq_dist(row, centroids.row(c));
+                if d2 < best {
+                    best = d2;
+                    arg = c;
+                }
+            }
+            if assignments[i] != arg as u32 {
+                reassigned += 1;
+                assignments[i] = arg as u32;
+            }
+        }
+        it.dist_comps = (n as u64) * (cfg.k as u64);
+        it.reassigned = reassigned;
+        it.survivors = n as u64;
+        // Exact update: same order-independent accumulator the library uses.
+        let mut acc = PartialAccumulator::new(cfg.k, ds.d());
+        for (i, row) in ds.points.rows_iter().enumerate() {
+            acc.add_point(row, assignments[i] as usize);
+        }
+        let (new_c, _counts) = acc.finalize(&centroids);
+        let mut max_drift = 0.0f32;
+        for c in 0..cfg.k {
+            let d = sq_dist(centroids.row(c), new_c.row(c)).sqrt();
+            max_drift = max_drift.max(d);
+        }
+        centroids = new_c;
+        it.max_drift = max_drift;
+        stats.push(it);
+        if (max_drift as f64) <= cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+    let mut sum = ExactSum::new();
+    for (i, &a) in assignments.iter().enumerate() {
+        sum.add(sq_dist(ds.points.row(i), centroids.row(a as usize)));
+    }
+    FitResult { centroids, assignments, inertia: sum.value(), iterations, converged, stats }
+}
+
+fn assert_bit_identical(name: &str, a: &FitResult, b: &FitResult) {
+    assert_eq!(a.iterations, b.iterations, "{name}: iterations");
+    assert_eq!(a.converged, b.converged, "{name}: converged");
+    assert_eq!(a.assignments, b.assignments, "{name}: assignments");
+    assert_eq!(a.centroids, b.centroids, "{name}: centroids");
+    assert_eq!(
+        a.inertia.to_bits(),
+        b.inertia.to_bits(),
+        "{name}: inertia {} vs {}",
+        a.inertia,
+        b.inertia
+    );
+    assert_eq!(
+        assignments_checksum(&a.assignments),
+        assignments_checksum(&b.assignments),
+        "{name}: PROTOCOL.md §8 fingerprint"
+    );
+}
+
+/// (b) The kernel-backed Lloyd reproduces the frozen pre-kernel oracle bit
+/// for bit on every golden fixture — including per-iteration dist-comp
+/// accounting through the batch seam.
+#[test]
+fn lloyd_matches_frozen_prerewire_oracle() {
+    for (fi, (ds, cfg)) in fixtures().into_iter().enumerate() {
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let oracle = naive_lloyd_oracle(&ds, &cfg, c0.clone());
+        let lloyd = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0).unwrap();
+        assert_bit_identical(&format!("fixture {fi}: lloyd vs oracle"), &oracle, &lloyd);
+        assert_eq!(oracle.stats.iters.len(), lloyd.stats.iters.len(), "fixture {fi}");
+        for (t, (a, b)) in oracle.stats.iters.iter().zip(&lloyd.stats.iters).enumerate() {
+            assert_eq!(a.dist_comps, b.dist_comps, "fixture {fi} iter {t}: dist_comps");
+            assert_eq!(a.reassigned, b.reassigned, "fixture {fi} iter {t}: reassigned");
+            assert_eq!(
+                a.max_drift.to_bits(),
+                b.max_drift.to_bits(),
+                "fixture {fi} iter {t}: max_drift"
+            );
+        }
+    }
+}
+
+/// (b) All four algorithms produce bit-identical fits on the fixtures, and
+/// the accelerator + native-engine coordinator backends agree too.
+#[test]
+fn four_algorithms_and_backends_bit_identical_on_fixtures() {
+    use kpynq::coordinator::driver::run_with_engine;
+    use kpynq::runtime::native::NativeEngine;
+    for (fi, (ds, cfg)) in fixtures().into_iter().enumerate() {
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let lloyd = kmeans::fit_from(Algorithm::Lloyd, &ds, &cfg, c0.clone()).unwrap();
+        for algo in [Algorithm::Hamerly, Algorithm::Elkan, Algorithm::Yinyang] {
+            let f = kmeans::fit_from(algo, &ds, &cfg, c0.clone()).unwrap();
+            assert_bit_identical(&format!("fixture {fi}: {} vs lloyd", algo.name()), &lloyd, &f);
+        }
+        let hw = Accelerator::new(AccelConfig::default()).run_fit(&ds, &cfg, c0.clone()).unwrap();
+        assert_bit_identical(&format!("fixture {fi}: accelerator vs lloyd"), &lloyd, &hw.fit);
+        let out = run_with_engine(&mut NativeEngine, &ds, &cfg).unwrap();
+        assert_bit_identical(&format!("fixture {fi}: native coordinator vs lloyd"), &lloyd, &out.fit);
+    }
+}
+
+/// (b) The same holds on random instances (fewer cases than the dedicated
+/// equivalence suite — this is the kernel battery's smoke layer, extended
+/// to inertia bits + fingerprint which `equivalence.rs` doesn't compare).
+#[test]
+fn algorithms_bit_identical_on_random_instances() {
+    run_cases_n("kernel battery random fits", 0xFAB, 25, |rng| {
+        let (pts, n, d, k) = kpynq::util::proptest::small_instance(rng);
+        let ds = Dataset::new("kb", Matrix::from_vec(pts, n, d).unwrap());
+        let cfg = KMeansConfig {
+            k,
+            groups: 1 + rng.next_below(k),
+            max_iters: 20,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let oracle = naive_lloyd_oracle(&ds, &cfg, c0.clone());
+        for algo in Algorithm::ALL {
+            let f = kmeans::fit_from(algo, &ds, &cfg, c0.clone()).unwrap();
+            if f.assignments != oracle.assignments {
+                return Err(format!("{}: assignments diverge from oracle", algo.name()));
+            }
+            if f.centroids != oracle.centroids || f.iterations != oracle.iterations {
+                return Err(format!("{}: trajectory diverges from oracle", algo.name()));
+            }
+            if f.inertia.to_bits() != oracle.inertia.to_bits() {
+                return Err(format!("{}: inertia bits diverge", algo.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// (c) WorkEfficiency invariants pinned
+// ---------------------------------------------------------------------
+
+/// (c) Lloyd through the batch seam still reports exactly n·k distance
+/// computations per iteration: work_ratio 1, nothing pruned.
+#[test]
+fn lloyd_work_accounting_exact_through_batch_seam() {
+    for (fi, (ds, cfg)) in fixtures().into_iter().enumerate() {
+        let r = kmeans::fit(Algorithm::Lloyd, &ds, &cfg).unwrap();
+        let nk = (ds.n() as u64) * (cfg.k as u64);
+        for (t, it) in r.stats.iters.iter().enumerate() {
+            assert_eq!(it.dist_comps, nk, "fixture {fi} iter {t}");
+            assert_eq!(it.filtered_global, 0, "fixture {fi} iter {t}");
+            assert_eq!(it.survivors, ds.n() as u64, "fixture {fi} iter {t}");
+        }
+        assert!((r.stats.work_ratio(ds.n(), cfg.k) - 1.0).abs() < 1e-12, "fixture {fi}");
+        let eff = r.stats.work_efficiency(ds.n(), cfg.k);
+        assert_eq!(eff.points_pruned, 0, "fixture {fi}");
+        assert_eq!(eff.dist_comps_avoided, 0, "fixture {fi}");
+    }
+}
+
+/// (c) Yinyang's filter counters are deterministic across re-runs and
+/// identical between the software fit and the accelerator model — pinning
+/// `points_pruned` (and every other counter) on the fixture set, so a
+/// kernel change that silently altered filter decisions would fail here.
+#[test]
+fn yinyang_filter_counters_unchanged_and_match_accelerator() {
+    let mut pruned_anywhere = false;
+    for (fi, (ds, cfg)) in fixtures().into_iter().enumerate() {
+        let c0 = init::initialize(&ds, &cfg).unwrap();
+        let y1 = kmeans::fit_from(Algorithm::Yinyang, &ds, &cfg, c0.clone()).unwrap();
+        let y2 = kmeans::fit_from(Algorithm::Yinyang, &ds, &cfg, c0.clone()).unwrap();
+        let hw = Accelerator::new(AccelConfig::default()).run_fit(&ds, &cfg, c0).unwrap();
+        for (name, other) in [("rerun", &y2), ("accelerator", &hw.fit)] {
+            assert_eq!(
+                y1.stats.iters.len(),
+                other.stats.iters.len(),
+                "fixture {fi} vs {name}: iteration count"
+            );
+            for (t, (a, b)) in y1.stats.iters.iter().zip(&other.stats.iters).enumerate() {
+                assert_eq!(a.dist_comps, b.dist_comps, "fixture {fi} {name} iter {t}");
+                assert_eq!(a.filtered_global, b.filtered_global, "fixture {fi} {name} iter {t}");
+                assert_eq!(a.filtered_group, b.filtered_group, "fixture {fi} {name} iter {t}");
+                assert_eq!(a.filtered_point, b.filtered_point, "fixture {fi} {name} iter {t}");
+                assert_eq!(a.survivors, b.survivors, "fixture {fi} {name} iter {t}");
+                assert_eq!(a.reassigned, b.reassigned, "fixture {fi} {name} iter {t}");
+            }
+            assert_eq!(
+                y1.stats.points_pruned(),
+                other.stats.points_pruned(),
+                "fixture {fi} vs {name}: points_pruned"
+            );
+        }
+        // Counter conservation each filtered iteration.
+        for (t, it) in y1.stats.iters.iter().enumerate().skip(1) {
+            assert_eq!(
+                it.filtered_global + it.survivors,
+                ds.n() as u64,
+                "fixture {fi} iter {t}: every point filtered or scanned"
+            );
+        }
+        pruned_anywhere |= y1.stats.points_pruned() > 0;
+    }
+    // The fixture set must actually exercise the filter (blobs converge
+    // with most points globally filtered after a couple of iterations).
+    assert!(pruned_anywhere, "no fixture pruned any point — fixtures too hard?");
+}

@@ -21,6 +21,10 @@
 #   5. Every metric name the obs registry registers (the canonical
 #      `pub mod names` block in rust/src/obs/metrics.rs) is documented —
 #      backticked — in README.md or PROTOCOL.md. No mystery metrics.
+#   6. The distance-kernel seam holds (DESIGN.md §5): no algorithm file
+#      under rust/src/kmeans/ except kernel.rs calls the raw
+#      `sq_dist(`/`dist(` primitives directly — every point↔centroid
+#      distance goes through `kmeans::kernel`.
 set -eu
 cd "$(dirname "$0")/.."
 fail=0
@@ -133,7 +137,25 @@ for name in $metric_names; do
     fi
 done
 
+# ---- 6. the distance-kernel seam: no raw sq_dist/dist outside kernel.rs -
+# kernel.rs is the one module allowed to call the matrix primitives; every
+# other kmeans module must route point<->centroid distances through it
+# (DESIGN.md §5). Comments are stripped so prose mentioning `sq_dist(` does
+# not trip the gate; the pattern rejects a call not preceded by an
+# identifier character, so `kernel::sq_dist_pair(`/`sq_dists_to(` pass.
+for f in rust/src/kmeans/*.rs; do
+    case "$f" in
+        */kernel.rs) continue ;;
+    esac
+    hits=$(sed 's@//.*@@' "$f" | grep -nE '(^|[^_A-Za-z0-9])(sq_dist|dist)\(' || true)
+    if [ -n "$hits" ]; then
+        echo "FAIL: $f calls raw sq_dist()/dist() — route distances through kmeans::kernel (DESIGN.md §5):"
+        printf '%s\n' "$hits" | sed 's/^/    /'
+        fail=1
+    fi
+done
+
 if [ "$fail" -eq 0 ]; then
-    echo "docs-consistency: OK (citations resolve; all serve wire fields documented)"
+    echo "docs-consistency: OK (citations resolve; wire fields documented; kernel seam holds)"
 fi
 exit "$fail"
