@@ -9,7 +9,7 @@ PYTHON      ?= python3
 ARTIFACTS   := artifacts
 PY_SOURCES  := $(wildcard python/compile/*.py python/compile/kernels/*.py)
 
-.PHONY: all build test serve-test serve-net-test cluster-test cluster-remote-test mapreduce-test obs-test kernel-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
+.PHONY: all build test serve-test serve-net-test cluster-test cluster-remote-test mapreduce-test obs-test profile-test kernel-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
 
 all: build
 
@@ -58,7 +58,14 @@ mapreduce-test:
 obs-test:
 	cargo test -q --lib obs
 	cargo test -q --test serve_net trace_and_metrics_surface_over_the_wire
+	cargo test -q --test serve_net http_metrics_sidecar_serves_a_prometheus_scrape
 	cargo test -q --test cluster cluster_fit_yields_metrics_trace_and_work_counters
+
+# The profiling non-perturbation contract (DESIGN.md §2): a fit with the
+# per-phase timers on is bit-identical — assignments, centroid bits, §8
+# fingerprint — to the same fit with them off, for all four algorithms.
+profile-test:
+	cargo test -q --test profile
 
 # The distance micro-kernel's equivalence battery (DESIGN.md §5): kernel
 # vs naive bit-identity across tile-boundary shapes, all four algorithms

@@ -68,6 +68,37 @@ fn main() {
         kmeans::fit_from(Algorithm::Elkan, &ds, &kcfg, cents.clone()).unwrap().iterations
     });
 
+    // --- profiling overhead (DESIGN.md §2: annotation, not perturbation) ---
+    // The same fit with the per-phase timers off vs on. Bit-identity is
+    // asserted before either configuration is timed — an overhead number
+    // for a fit that changed results would be meaningless — and the
+    // median ratio is printed against the §2 budget (<2%).
+    {
+        use kpynq::obs::profile;
+        profile::set_enabled(false);
+        let base = kmeans::fit_from(Algorithm::Yinyang, &ds, &kcfg, cents.clone()).unwrap();
+        profile::set_enabled(true);
+        let prof = kmeans::fit_from(Algorithm::Yinyang, &ds, &kcfg, cents.clone()).unwrap();
+        assert_eq!(prof.assignments, base.assignments, "profiled fit perturbed assignments");
+        assert_eq!(
+            prof.inertia.to_bits(),
+            base.inertia.to_bits(),
+            "profiled fit perturbed inertia"
+        );
+
+        profile::set_enabled(false);
+        let off = e2e.bench("fit/yinyang mnist@20k k=16 profile=off", || {
+            kmeans::fit_from(Algorithm::Yinyang, &ds, &kcfg, cents.clone()).unwrap().iterations
+        });
+        profile::set_enabled(true);
+        let on = e2e.bench("fit/yinyang mnist@20k k=16 profile=on", || {
+            kmeans::fit_from(Algorithm::Yinyang, &ds, &kcfg, cents.clone()).unwrap().iterations
+        });
+        profile::set_enabled(false);
+        let overhead = on.median_secs() / off.median_secs() - 1.0;
+        println!("profiling overhead: {:+.2}% (budget <2%, DESIGN.md §2)", overhead * 100.0);
+    }
+
     // --- the simulator's own host cost ---
     let acc = Accelerator::new(AccelConfig::default());
     e2e.bench("simulate/fpga mnist@20k k=16", || {

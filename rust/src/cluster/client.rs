@@ -371,6 +371,13 @@ impl ClientSender {
         self.shared.send_op("stats")
     }
 
+    /// Request a `metrics` snapshot (PROTOCOL.md §6); the reply arrives
+    /// as a [`ClientEvent::Notice`] whose `op` is `"metrics"` — the
+    /// cluster front's fleet-wide scrape path (PROTOCOL.md §11).
+    pub fn request_metrics(&self) -> Result<()> {
+        self.shared.send_op("metrics")
+    }
+
     /// Request a `pong` (arrives as [`ClientEvent::Pong`]).
     pub fn request_ping(&self) -> Result<()> {
         self.shared.send_op("ping")

@@ -60,12 +60,13 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
-use crate::obs::metrics::names;
+use crate::obs::metrics::{merge_snapshot_labeled, names};
+use crate::obs::profile::Phase;
 use crate::obs::{mint_trace_id, Counter, Histogram, Registry, SpanEvent, TraceRing};
 use crate::serve::job::{FitRequest, FitResponse, FitSummary, JobStatus};
 use crate::serve::net::{advertised_backends, Daemon, DaemonHandle, FrontCore, NetConfig};
 use crate::serve::queue::QueueStats;
-use crate::serve::report::ResponseAccumulator;
+use crate::serve::report::{tenants_json, ResponseAccumulator, TenantAcc};
 use crate::serve::{ServeConfig, ServeReport};
 use crate::util::json::Json;
 
@@ -95,6 +96,8 @@ enum ShardCmd {
     /// Cancel by cluster ticket.
     Cancel(u64),
     Stats,
+    /// Scrape the shard's metrics registry (fleet merge, PROTOCOL.md §11).
+    Metrics,
     /// Drain-and-exit frame for shards the cluster owns (local children).
     Shutdown,
     /// Graceful goodbye for shards it does not (remote daemons).
@@ -219,6 +222,8 @@ struct ShardLink {
     last_stats: Arc<Mutex<super::client::ShardStats>>,
     /// FIFO of synchronous stats requests (single link ⇒ replies ordered).
     stats_waiters: Arc<Mutex<VecDeque<mpsc::Sender<super::client::ShardStats>>>>,
+    /// FIFO of synchronous metrics scrapes (same ordering argument).
+    metrics_waiters: Arc<Mutex<VecDeque<mpsc::Sender<Json>>>>,
     /// When the link last heard *anything* from the shard — the hung-shard
     /// watchdog's signal (see [`ClusterConfig::health_timeout`]).
     last_heard: Arc<Mutex<Instant>>,
@@ -240,6 +245,9 @@ struct ClusterRoute {
     client_id: u64,
     reply: mpsc::Sender<FitResponse>,
     shard: usize,
+    /// The request's tenant label, restored onto the reply in `deliver`
+    /// (shards never see the front's tenant accounting).
+    tenant: String,
 }
 
 /// The fan-out/fan-in core behind the cluster's front door — the
@@ -272,6 +280,9 @@ pub(crate) struct ClusterCore {
     /// reply, plus per-epoch reduce barriers in map-reduce mode.
     ring: Arc<TraceRing>,
     acc: Mutex<ResponseAccumulator>,
+    /// Per-tenant accounting table, fed in `deliver` (the `tenants`
+    /// object of the `stats` reply, PROTOCOL.md §6).
+    tenants: Mutex<BTreeMap<String, TenantAcc>>,
     pending_cancels: Mutex<HashMap<u64, mpsc::Sender<bool>>>,
     /// Outstanding (submitted, unanswered) jobs, bounded by
     /// `admission_cap`: past the cap, `submit` blocks the submitting
@@ -331,6 +342,7 @@ impl ClusterCore {
             registry,
             ring: Arc::new(TraceRing::default()),
             acc: Mutex::new(ResponseAccumulator::default()),
+            tenants: Mutex::new(BTreeMap::new()),
             pending_cancels: Mutex::new(HashMap::new()),
             admission: Mutex::new(0),
             admission_free: Condvar::new(),
@@ -378,6 +390,7 @@ impl ClusterCore {
                 fit: Some(fit),
                 report: None,
                 trace_id: String::new(),
+                tenant: String::new(),
             },
             Err(e) => FitResponse::failed(ticket, &backend, 0, 0, 0.0, &e),
         };
@@ -438,10 +451,40 @@ impl ClusterCore {
     /// ignored — the ticket's one real answer was already delivered.
     fn deliver(&self, mut resp: FitResponse) {
         let route = self.routes.lock().expect("routes poisoned").remove(&resp.id);
-        if let Some(ClusterRoute { client_id, reply, .. }) = route {
+        if let Some(ClusterRoute { client_id, reply, tenant, .. }) = route {
             self.acc.lock().expect("accumulator poisoned").observe(&resp);
             self.queue_wait_ms.record_ms(resp.queue_seconds * 1e3);
             self.latency_ms.record_ms(resp.latency_seconds() * 1e3);
+            // Per-phase solver timings (profiling runs only) — same
+            // labeled series the single daemon's router feeds.
+            if let Some(p) = resp.summary.as_ref().and_then(|s| s.phases) {
+                for ph in Phase::ALL {
+                    self.registry
+                        .histogram_with(names::FIT_PHASE_MS, &[("phase", ph.name())])
+                        .record_ms(p.get(ph));
+                }
+            }
+            resp.tenant = tenant;
+            if !resp.tenant.is_empty() {
+                let t = resp.tenant.as_str();
+                self.registry
+                    .histogram_with(names::SERVE_LATENCY_MS, &[("tenant", t)])
+                    .record_ms(resp.latency_seconds() * 1e3);
+                if resp.status == JobStatus::Shed {
+                    let name = if resp.detail.contains("deadline") {
+                        names::SERVE_QUEUE_SHED_DEADLINE
+                    } else {
+                        names::SERVE_QUEUE_SHED_FULL
+                    };
+                    self.registry.counter_with(name, &[("tenant", t)]).inc();
+                }
+                self.tenants
+                    .lock()
+                    .expect("tenant table poisoned")
+                    .entry(resp.tenant.clone())
+                    .or_default()
+                    .observe(&resp);
+            }
             if !resp.trace_id.is_empty() {
                 self.ring.push(
                     SpanEvent::new(&resp.trace_id, "reply")
@@ -631,7 +674,12 @@ impl FrontCore for ClusterCore {
         let client_id = req.id;
         self.routes.lock().expect("routes poisoned").insert(
             ticket,
-            ClusterRoute { client_id, reply: reply.clone(), shard: UNROUTED },
+            ClusterRoute {
+                client_id,
+                reply: reply.clone(),
+                shard: UNROUTED,
+                tenant: req.tenant.clone(),
+            },
         );
         let mut req = req;
         req.id = ticket;
@@ -707,15 +755,46 @@ impl FrontCore for ClusterCore {
             "queue_lanes".to_string(),
             Json::Arr(lanes.iter().map(|&d| Json::Num(d as f64)).collect()),
         );
+        m.insert(
+            "tenants".to_string(),
+            tenants_json(&self.tenants.lock().expect("tenant table poisoned")),
+        );
     }
 
     fn drain_trace(&self) -> Json {
         self.ring.drain_json()
     }
 
+    fn peek_trace(&self) -> Json {
+        self.ring.peek_json()
+    }
+
+    /// Fleet-wide snapshot (PROTOCOL.md §11): the front's own registry
+    /// tagged `shard="front"`, plus every live shard's registry scraped
+    /// over its link and tagged `shard="<index>"`. A shard that misses
+    /// its reply window is simply absent from this scrape — the next one
+    /// catches it, and Prometheus tolerates a gap far better than a
+    /// stalled endpoint.
     fn metrics(&self) -> Json {
         self.registry.gauge(names::SERVE_QUEUE_DEPTH).set(self.queue_depth_total() as i64);
-        self.registry.snapshot()
+        let mut merged = Json::Obj(BTreeMap::new());
+        merge_snapshot_labeled(&mut merged, &self.registry.snapshot(), "shard", "front");
+        let mut scrapes = Vec::new();
+        {
+            let links = self.links.lock().expect("links poisoned");
+            for (i, l) in links.iter().enumerate().filter(|(_, l)| l.alive) {
+                let (tx, rx) = mpsc::channel();
+                l.metrics_waiters.lock().expect("waiters poisoned").push_back(tx);
+                let _ = l.tx.send(ShardCmd::Metrics);
+                scrapes.push((i, rx));
+            }
+        }
+        for (i, rx) in scrapes {
+            if let Ok(snap) = rx.recv_timeout(FINAL_STATS_WAIT) {
+                merge_snapshot_labeled(&mut merged, &snap, "shard", &i.to_string());
+            }
+        }
+        merged
     }
 }
 
@@ -736,6 +815,8 @@ fn spawn_link(
     let inflight: Arc<Mutex<HashMap<u64, FitRequest>>> = Arc::new(Mutex::new(HashMap::new()));
     let last_stats = Arc::new(Mutex::new(super::client::ShardStats::default()));
     let stats_waiters: Arc<Mutex<VecDeque<mpsc::Sender<super::client::ShardStats>>>> =
+        Arc::new(Mutex::new(VecDeque::new()));
+    let metrics_waiters: Arc<Mutex<VecDeque<mpsc::Sender<Json>>>> =
         Arc::new(Mutex::new(VecDeque::new()));
     let last_heard = Arc::new(Mutex::new(Instant::now()));
 
@@ -760,6 +841,7 @@ fn spawn_link(
                         Err(e) => Err(e),
                     },
                     ShardCmd::Stats => sender.request_stats(),
+                    ShardCmd::Metrics => sender.request_metrics(),
                     ShardCmd::Shutdown => sender.request_shutdown(),
                     ShardCmd::Bye => sender.send_bye(),
                 };
@@ -776,6 +858,7 @@ fn spawn_link(
         let inflight = Arc::clone(&inflight);
         let last_stats = Arc::clone(&last_stats);
         let stats_waiters = Arc::clone(&stats_waiters);
+        let metrics_waiters = Arc::clone(&metrics_waiters);
         let last_heard = Arc::clone(&last_heard);
         std::thread::spawn(move || loop {
             let event = match receiver.next_event() {
@@ -821,6 +904,17 @@ fn spawn_link(
                     let _ = monitor_tx.send(MonitorMsg::ShardDown { shard, generation });
                     return;
                 }
+                ClientEvent::Notice(j)
+                    if matches!(j.get("op").and_then(|v| v.as_str()), Ok("metrics")) =>
+                {
+                    // A fleet-scrape reply (PROTOCOL.md §11); FIFO pairing
+                    // with the requester, like the stats waiters.
+                    if let Some(w) =
+                        metrics_waiters.lock().expect("waiters poisoned").pop_front()
+                    {
+                        let _ = w.send(j);
+                    }
+                }
                 _ => {} // pongs, notices, protocol errors: nothing owed
             }
         });
@@ -834,6 +928,7 @@ fn spawn_link(
         inflight,
         last_stats,
         stats_waiters,
+        metrics_waiters,
         last_heard,
     }
 }
@@ -1027,6 +1122,13 @@ impl Cluster {
     /// The front door's bound address, in `Daemon::bind` notation.
     pub fn local_addr(&self) -> String {
         self.daemon.local_addr()
+    }
+
+    /// The bound `GET /metrics` scrape address, when the front's
+    /// `NetConfig` asked for one — a scrape here answers the merged
+    /// fleet snapshot, labeled by shard (PROTOCOL.md §11).
+    pub fn metrics_addr(&self) -> Option<String> {
+        self.daemon.metrics_addr()
     }
 
     pub fn handle(&self) -> ClusterHandle {

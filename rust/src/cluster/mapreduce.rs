@@ -73,7 +73,7 @@ pub fn fit_sliced(
     let (centroids, iterations, converged) = loop {
         let epoch = states[0].epoch();
         let mut acc = PartialAccumulator::new(k, d);
-        for st in &states {
+        for st in &mut states {
             acc.merge(&st.partial())?;
         }
         let (new_c, _) = acc.finalize(&prev);
@@ -90,7 +90,7 @@ pub fn fit_sliced(
     };
     let mut assignments = Vec::with_capacity(ds.n());
     let mut inertia = ExactSum::new();
-    for st in &states {
+    for st in &mut states {
         let (a, s) = st.finish(&centroids)?;
         assignments.extend_from_slice(&a);
         inertia.merge(&s);

@@ -59,6 +59,14 @@ pub struct RunConfig {
     pub serve_max_conns: usize,
     /// Daemon: idle-connection timeout in milliseconds (0 = never).
     pub serve_idle_timeout_ms: u64,
+    /// Daemon: tee drained trace spans to this JSONL file ("" = off).
+    pub serve_trace_log: String,
+    /// Daemon: also serve `GET /metrics` (Prometheus text 0.0.4) on this
+    /// `host:port` ("" = off). PROTOCOL.md §11.
+    pub serve_metrics_listen: String,
+    /// Enable the per-phase solver timers (`obs::profile`): replies gain
+    /// the `phase_*_ms` keys. Provably non-perturbing (DESIGN.md §2).
+    pub profile: bool,
     /// Cluster: shard daemon count (`kpynq cluster`).
     pub cluster_shards: usize,
     /// Cluster: directory for shard `unix:` sockets ("" = per-process
@@ -108,6 +116,9 @@ impl Default for RunConfig {
             serve_listen: String::new(),
             serve_max_conns: 32,
             serve_idle_timeout_ms: 0,
+            serve_trace_log: String::new(),
+            serve_metrics_listen: String::new(),
+            profile: false,
             cluster_shards: 2,
             cluster_socket_dir: String::new(),
             cluster_max_restarts: 3,
@@ -127,6 +138,7 @@ dataset = "kegg"        # gassensor|kegg|roadnetwork|uscensus|covtype|mnist|blob
 data_seed = 12648430
 max_points = 0           # 0 = full dataset
 normalize = "minmax"     # minmax|zscore|none
+profile = false          # per-phase solver timers; replies gain phase_*_ms keys
 
 [kmeans]
 k = 16
@@ -158,6 +170,8 @@ shed = "block"           # block|shed (full-queue policy)
 listen = ""              # daemon: "host:port" or "unix:/path.sock"; "" = one-shot stdin mode
 max_conns = 32           # simultaneous client connections (extras refused)
 idle_timeout_ms = 0      # close idle connections after this long (0 = never)
+trace_log = ""           # tee drained trace spans to this JSONL file ("" = off)
+metrics_listen = ""      # serve GET /metrics (Prometheus text 0.0.4) on "host:port" ("" = off)
 
 [cluster]
 shards = 2               # shard daemon processes (kpynq cluster); each gets the [serve] pool
@@ -194,6 +208,9 @@ impl RunConfig {
         }
         if let Some(v) = toml::get(&doc, "", "normalize") {
             cfg.normalize = v.as_str()?.to_string();
+        }
+        if let Some(v) = toml::get(&doc, "", "profile") {
+            cfg.profile = v.as_bool()?;
         }
 
         if let Some(v) = toml::get(&doc, "kmeans", "k") {
@@ -270,6 +287,12 @@ impl RunConfig {
             // as_usize rejects negatives; `-500` must error, not wrap to
             // a ~584-million-year timeout.
             cfg.serve_idle_timeout_ms = v.as_usize()? as u64;
+        }
+        if let Some(v) = toml::get(&doc, "serve.net", "trace_log") {
+            cfg.serve_trace_log = v.as_str()?.to_string();
+        }
+        if let Some(v) = toml::get(&doc, "serve.net", "metrics_listen") {
+            cfg.serve_metrics_listen = v.as_str()?.to_string();
         }
 
         if let Some(v) = toml::get(&doc, "cluster", "shards") {
@@ -384,6 +407,9 @@ impl RunConfig {
         let cfg = NetConfig {
             max_conns: self.serve_max_conns,
             idle_timeout_ms: self.serve_idle_timeout_ms,
+            trace_log: (!self.serve_trace_log.is_empty()).then(|| self.serve_trace_log.clone()),
+            metrics_listen: (!self.serve_metrics_listen.is_empty())
+                .then(|| self.serve_metrics_listen.clone()),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -472,6 +498,10 @@ mod tests {
         assert_eq!(serve.queue_capacity, 64);
         assert_eq!(serve.max_batch, 8);
         assert_eq!(serve.shed_policy, crate::serve::ShedPolicy::Block);
+        assert!(!cfg.profile, "example keeps profiling timers off");
+        let net = cfg.net_config().unwrap();
+        assert!(net.trace_log.is_none(), "empty string means no trace tee");
+        assert!(net.metrics_listen.is_none(), "empty string means no scrape endpoint");
     }
 
     #[test]
@@ -548,17 +578,31 @@ mod tests {
     #[test]
     fn serve_net_section_configures_the_daemon() {
         let cfg = RunConfig::from_toml(
-            "[serve.net]\nlisten = \"127.0.0.1:7071\"\nmax_conns = 4\nidle_timeout_ms = 1500",
+            "[serve.net]\nlisten = \"127.0.0.1:7071\"\nmax_conns = 4\nidle_timeout_ms = 1500\n\
+             trace_log = \"/tmp/spans.jsonl\"\nmetrics_listen = \"127.0.0.1:9200\"",
         )
         .unwrap();
         assert_eq!(cfg.serve_listen, "127.0.0.1:7071");
         let net = cfg.net_config().unwrap();
         assert_eq!(net.max_conns, 4);
         assert_eq!(net.idle_timeout_ms, 1500);
-        // Defaults: no listener (one-shot mode), idle timeout off.
+        assert_eq!(net.trace_log.as_deref(), Some("/tmp/spans.jsonl"));
+        assert_eq!(net.metrics_listen.as_deref(), Some("127.0.0.1:9200"));
+        // Defaults: no listener (one-shot mode), idle timeout off, no
+        // trace tee, no scrape endpoint.
         let d = RunConfig::default();
         assert!(d.serve_listen.is_empty());
-        assert_eq!(d.net_config().unwrap().idle_timeout_ms, 0);
+        let dn = d.net_config().unwrap();
+        assert_eq!(dn.idle_timeout_ms, 0);
+        assert!(dn.trace_log.is_none());
+        assert!(dn.metrics_listen.is_none());
+    }
+
+    #[test]
+    fn profile_flag_parses_and_defaults_off() {
+        assert!(!RunConfig::default().profile);
+        assert!(RunConfig::from_toml("profile = true").unwrap().profile);
+        assert!(RunConfig::from_toml("profile = \"yes\"").is_err());
     }
 
     #[test]

@@ -45,6 +45,7 @@ use crate::kmeans::{
     centroid_drifts, compute_inertia, init, recompute_centroids, yinyang, Algorithm, FitResult,
     KMeansConfig, RunStats,
 };
+use crate::obs::profile::{Phase, PhaseTimer};
 use crate::runtime::{native::NativeEngine, xla::XlaEngine, AssignOut, Engine};
 use crate::util::matrix::Matrix;
 
@@ -88,6 +89,7 @@ fn run_fpga(acfg: &AccelConfig, ds: &Dataset, kcfg: &KMeansConfig) -> Result<Sys
         tiles_dispatched: 0,
         points_rescanned: run.fit.stats.iters.iter().map(|i| i.survivors).sum(),
         work: run.fit.stats.work_efficiency(ds.n(), kcfg.k),
+        phases: run.fit.stats.phases,
     };
     Ok(SystemOutput { fit: run.fit, report })
 }
@@ -134,6 +136,10 @@ pub struct FitState<'a> {
     iterations: usize,
     started: Instant,
     pending: Option<PendingIter>,
+    /// obs::profile phase clock — pure annotation, bit-identical on/off.
+    /// The Assign phase opened by `begin_iteration` stays open across the
+    /// engine dispatch so the scan itself is attributed to Assign.
+    timer: PhaseTimer,
 }
 
 impl<'a> FitState<'a> {
@@ -144,7 +150,10 @@ impl<'a> FitState<'a> {
         ds.validate()?;
         let started = Instant::now();
         let n = ds.n();
+        let mut timer = PhaseTimer::new();
+        timer.enter(Phase::Init);
         let centroids = init::initialize(ds, kcfg)?;
+        timer.exit();
         Ok(Self {
             ds,
             kcfg,
@@ -159,6 +168,7 @@ impl<'a> FitState<'a> {
             iterations: 0,
             started,
             pending: None,
+            timer,
         })
     }
 
@@ -192,6 +202,7 @@ impl<'a> FitState<'a> {
     pub fn begin_iteration(&mut self) -> Dispatch {
         assert!(self.pending.is_none(), "iteration already in flight");
         assert!(!self.done(), "begin_iteration on a finished fit");
+        self.timer.enter(Phase::Assign);
         self.iterations += 1;
         let n = self.ds.n();
         let k = self.kcfg.k;
@@ -313,6 +324,7 @@ impl<'a> FitState<'a> {
             }
         }
 
+        self.timer.enter(Phase::Update);
         let (new_c, _) = recompute_centroids(self.ds, &self.assignments, &self.centroids);
         let (drifts, max_drift) = centroid_drifts(&self.centroids, &new_c);
         self.centroids = new_c;
@@ -322,18 +334,22 @@ impl<'a> FitState<'a> {
         if (max_drift as f64) <= self.kcfg.tol {
             self.converged = true;
         } else {
+            self.timer.enter(Phase::Bounds);
             for i in 0..self.ds.n() {
                 self.ub[i] = inflate_ub(self.ub[i], drifts[self.assignments[i] as usize]);
                 self.lb[i] = deflate_lb(self.lb[i], max_drift);
             }
         }
+        self.timer.exit();
         Ok(())
     }
 
     /// Seal the fit into a [`SystemOutput`] with the final inertia and the
     /// wall-clock measured since [`new`](FitState::new).
-    pub fn finish(self, backend_name: &str) -> SystemOutput {
+    pub fn finish(mut self, backend_name: &str) -> SystemOutput {
         debug_assert!(self.pending.is_none(), "finish with an iteration in flight");
+        let phases = self.timer.totals();
+        self.stats.phases = phases;
         let inertia = compute_inertia(self.ds, &self.centroids, &self.assignments);
         let work = self.stats.work_efficiency(self.ds.n(), self.kcfg.k);
         let fit = FitResult {
@@ -350,6 +366,7 @@ impl<'a> FitState<'a> {
             tiles_dispatched: self.tiles_dispatched,
             points_rescanned: self.points_rescanned,
             work,
+            phases,
             ..Default::default()
         };
         SystemOutput { fit, report }
@@ -405,6 +422,7 @@ pub fn run_algorithm(
         wall_seconds: t0.elapsed().as_secs_f64(),
         points_rescanned: fit.stats.iters.iter().map(|i| i.survivors).sum(),
         work: fit.stats.work_efficiency(ds.n(), kcfg.k),
+        phases: fit.stats.phases,
         ..Default::default()
     };
     Ok(SystemOutput { fit, report })
@@ -471,6 +489,10 @@ pub struct PartialFitState {
     /// Slice-local assignments (`hi - lo` entries).
     assignments: Vec<u32>,
     bounds: SliceBounds,
+    /// obs::profile phase clock — pure annotation, bit-identical on/off.
+    /// Reduce covers packaging partial sums (`partial`) and sealing the
+    /// slice (`finish`); the assignment passes land in Init/Assign/Bounds.
+    timer: PhaseTimer,
 }
 
 impl PartialFitState {
@@ -496,6 +518,8 @@ impl PartialFitState {
         }
         kcfg.validate(ds.n())?;
         ds.validate()?;
+        let mut timer = PhaseTimer::new();
+        timer.enter(Phase::Init);
         let n = ds.n();
         let k = kcfg.k;
         let (lo, hi) = (shard_index * n / shard_count, (shard_index + 1) * n / shard_count);
@@ -571,6 +595,7 @@ impl PartialFitState {
                 SliceBounds::Yinyang { sub, grouping, st }
             }
         };
+        timer.exit();
         Ok(PartialFitState {
             ds,
             kcfg,
@@ -583,6 +608,7 @@ impl PartialFitState {
             epoch: 1,
             assignments,
             bounds,
+            timer,
         })
     }
 
@@ -619,12 +645,19 @@ impl PartialFitState {
     /// This slice's per-cluster partial sums + counts for the current
     /// epoch's assignments — the shard's contribution to the front's
     /// reduction. Empty slices return an all-zero accumulator.
-    pub fn partial(&self) -> PartialAccumulator {
+    pub fn partial(&mut self) -> PartialAccumulator {
+        self.timer.enter(Phase::Reduce);
         let mut acc = PartialAccumulator::new(self.kcfg.k, self.ds.d());
         for (j, &a) in self.assignments.iter().enumerate() {
             acc.add_point(self.ds.points.row(self.lo + j), a as usize);
         }
+        self.timer.exit();
         acc
+    }
+
+    /// Per-phase totals accumulated so far (`None` when profiling is off).
+    pub fn phase_totals(&mut self) -> Option<crate::obs::profile::PhaseTotals> {
+        self.timer.totals()
     }
 
     /// Accept the reduced centroids for the just-completed epoch, apply
@@ -645,6 +678,7 @@ impl PartialFitState {
         let (lo, slice_n) = (self.lo, self.hi - self.lo);
         match &mut self.bounds {
             SliceBounds::Lloyd => {
+                self.timer.enter(Phase::Assign);
                 let mut best = vec![0.0f32; slice_n];
                 let mut second = vec![0.0f32; slice_n];
                 kernel::nearest_into(
@@ -658,10 +692,12 @@ impl PartialFitState {
                 );
             }
             SliceBounds::Hamerly { ub, lb } => {
+                self.timer.enter(Phase::Bounds);
                 for j in 0..slice_n {
                     ub[j] = inflate_ub(ub[j], drifts[self.assignments[j] as usize]);
                     lb[j] = deflate_lb(lb[j], max_drift);
                 }
+                self.timer.enter(Phase::Assign);
                 let (s_half, _) = half_nearest_other(new_c);
                 for j in 0..slice_n {
                     let row = self.ds.points.row(lo + j);
@@ -682,6 +718,7 @@ impl PartialFitState {
                 }
             }
             SliceBounds::Elkan { ub, lb } => {
+                self.timer.enter(Phase::Bounds);
                 for j in 0..slice_n {
                     ub[j] = inflate_ub(ub[j], drifts[self.assignments[j] as usize]);
                     let lbrow = &mut lb[j * k..(j + 1) * k];
@@ -689,6 +726,7 @@ impl PartialFitState {
                         lbrow[c] = deflate_lb(lbrow[c], drifts[c]);
                     }
                 }
+                self.timer.enter(Phase::Assign);
                 let (s_half, _) = half_nearest_other(new_c);
                 for j in 0..slice_n {
                     let row = self.ds.points.row(lo + j);
@@ -726,14 +764,17 @@ impl PartialFitState {
                 }
             }
             SliceBounds::Yinyang { sub, grouping, st } => {
+                self.timer.enter(Phase::Bounds);
                 let group_drifts = group_max_drifts(&drifts, &grouping.group_of, grouping.n_groups());
                 st.apply_drifts(&drifts, &group_drifts);
+                self.timer.enter(Phase::Assign);
                 for (j, row) in sub.points.rows_iter().enumerate() {
                     yinyang::step_point(row, new_c, grouping, &drifts, &group_drifts, j, st);
                 }
                 self.assignments.copy_from_slice(&st.assignments);
             }
         }
+        self.timer.exit();
         self.centroids = new_c.clone();
         self.epoch += 1;
         Ok(())
@@ -744,7 +785,7 @@ impl PartialFitState {
     /// contribution (to be merged across shards). No reassignment happens
     /// here — exactly like the solo fits, the final assignments are the
     /// ones from the last completed pass.
-    pub fn finish(&self, final_c: &Matrix) -> Result<(Vec<u32>, ExactSum)> {
+    pub fn finish(&mut self, final_c: &Matrix) -> Result<(Vec<u32>, ExactSum)> {
         if final_c.rows() != self.kcfg.k || final_c.cols() != self.ds.d() {
             return Err(Error::Config(format!(
                 "final centroids are {}x{}, expected {}x{}",
@@ -754,10 +795,12 @@ impl PartialFitState {
                 self.ds.d()
             )));
         }
+        self.timer.enter(Phase::Reduce);
         let mut inertia = ExactSum::new();
         for (j, &a) in self.assignments.iter().enumerate() {
             inertia.add(kernel::sq_dist_pair(self.ds.points.row(self.lo + j), final_c.row(a as usize)));
         }
+        self.timer.exit();
         Ok((self.assignments.clone(), inertia))
     }
 }

@@ -2,6 +2,7 @@
 
 use crate::hw::CycleBreakdown;
 use crate::kmeans::metrics::WorkEfficiency;
+use crate::obs::profile::PhaseTotals;
 
 /// What a run cost, in whichever currencies the backend produces.
 #[derive(Clone, Debug, Default)]
@@ -28,6 +29,10 @@ pub struct RunReport {
     /// Whole-run triangle-inequality savings (all backends that track
     /// per-iteration stats; all-zero otherwise — `kmeans::metrics`).
     pub work: WorkEfficiency,
+    /// Per-phase wall-time split from `obs::profile` — `Some` only when
+    /// profiling was enabled for the run. The timers are provably
+    /// non-perturbing (DESIGN.md §2): the fit is bit-identical on or off.
+    pub phases: Option<PhaseTotals>,
 }
 
 impl RunReport {

@@ -17,6 +17,7 @@ use crate::kmeans::{
     centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
     KMeansConfig, RunStats,
 };
+use crate::obs::profile::{Phase, PhaseTimer};
 use crate::util::matrix::Matrix;
 
 pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> {
@@ -30,6 +31,8 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
     let mut stats = RunStats::default();
     let mut converged = false;
     let mut iterations = 0;
+    // obs::profile phase clock — pure annotation, bit-identical on/off.
+    let mut timer = PhaseTimer::new();
 
     // Iteration 1: full scan, initialise ub and all lower bounds exactly.
     // Elkan's bounds live in sqrt space, so each kernel tile is converted
@@ -37,6 +40,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
     // to the old per-pair `dist` loop.
     {
         iterations += 1;
+        timer.enter(Phase::Init);
         let mut it = IterStats::default();
         let mut comps = 0u64;
         let mut tile = vec![0.0f32; kernel::TILE_POINTS * k];
@@ -66,6 +70,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         it.dist_comps = comps;
         it.survivors = n as u64;
         it.reassigned = n as u64;
+        timer.enter(Phase::Update);
         let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
         let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
         centroids = new_c;
@@ -74,6 +79,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         if (max_drift as f64) <= cfg.tol {
             converged = true;
         } else {
+            timer.enter(Phase::Bounds);
             for i in 0..n {
                 ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
                 let lbrow = &mut lb[i * k..(i + 1) * k];
@@ -82,6 +88,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
                 }
             }
         }
+        timer.exit();
     }
 
     while !converged && iterations < cfg.max_iters {
@@ -90,6 +97,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         let mut dist_comps = 0u64;
 
         // Inter-centroid geometry: s[c] = half distance to nearest other.
+        timer.enter(Phase::Assign);
         let (s_half, pair_comps) = half_nearest_other(&centroids);
         dist_comps += pair_comps;
 
@@ -146,6 +154,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         }
 
         it.dist_comps = dist_comps;
+        timer.enter(Phase::Update);
         let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
         let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
         centroids = new_c;
@@ -155,6 +164,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         if (max_drift as f64) <= cfg.tol {
             converged = true;
         } else {
+            timer.enter(Phase::Bounds);
             for i in 0..n {
                 ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
                 let lbrow = &mut lb[i * k..(i + 1) * k];
@@ -163,8 +173,10 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
                 }
             }
         }
+        timer.exit();
     }
 
+    stats.phases = timer.totals();
     let inertia = compute_inertia(ds, &centroids, &assignments);
     Ok(FitResult { centroids, assignments, inertia, iterations, converged, stats })
 }

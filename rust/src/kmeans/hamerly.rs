@@ -13,6 +13,7 @@ use crate::kmeans::{
     centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
     KMeansConfig, RunStats,
 };
+use crate::obs::profile::{Phase, PhaseTimer};
 use crate::util::matrix::Matrix;
 
 /// Half the distance from each centroid to its nearest other centroid.
@@ -51,10 +52,13 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
     let mut stats = RunStats::default();
     let mut converged = false;
     let mut iterations = 0;
+    // obs::profile phase clock — pure annotation, bit-identical on/off.
+    let mut timer = PhaseTimer::new();
 
     // Iteration 1: full scan initialises bounds (counted like Lloyd's).
     {
         iterations += 1;
+        timer.enter(Phase::Init);
         let mut it = IterStats::default();
         let scan = kernel::nearest_full_scan(&ds.points, &centroids);
         for i in 0..n {
@@ -65,6 +69,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         it.dist_comps = scan.dist_comps;
         it.survivors = n as u64;
         it.reassigned = n as u64;
+        timer.enter(Phase::Update);
         let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
         let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
         centroids = new_c;
@@ -74,11 +79,13 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
             converged = true;
         } else {
             // Apply drifts for the next iteration's bounds.
+            timer.enter(Phase::Bounds);
             for i in 0..n {
                 ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
                 lb[i] = deflate_lb(lb[i], max_drift);
             }
         }
+        timer.exit();
     }
 
     while !converged && iterations < cfg.max_iters {
@@ -86,6 +93,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         let mut it = IterStats::default();
         let mut dist_comps = 0u64;
 
+        timer.enter(Phase::Assign);
         let (s_half, pair_comps) = half_nearest_other(&centroids);
         dist_comps += pair_comps;
 
@@ -118,6 +126,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         }
 
         it.dist_comps = dist_comps;
+        timer.enter(Phase::Update);
         let (new_c, _) = recompute_centroids(ds, &assignments, &centroids);
         let (drifts, max_drift) = centroid_drifts(&centroids, &new_c);
         centroids = new_c;
@@ -127,13 +136,16 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         if (max_drift as f64) <= cfg.tol {
             converged = true;
         } else {
+            timer.enter(Phase::Bounds);
             for i in 0..n {
                 ub[i] = inflate_ub(ub[i], drifts[assignments[i] as usize]);
                 lb[i] = deflate_lb(lb[i], max_drift);
             }
         }
+        timer.exit();
     }
 
+    stats.phases = timer.totals();
     let inertia = compute_inertia(ds, &centroids, &assignments);
     Ok(FitResult { centroids, assignments, inertia, iterations, converged, stats })
 }

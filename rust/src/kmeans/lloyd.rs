@@ -16,6 +16,7 @@ use crate::kmeans::{
     centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
     KMeansConfig, RunStats,
 };
+use crate::obs::profile::{Phase, PhaseTimer};
 use crate::util::matrix::Matrix;
 
 // The scalar reference scan lived here before the kernel module existed;
@@ -35,12 +36,17 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
     let mut stats = RunStats::default();
     let mut converged = false;
     let mut iterations = 0;
+    // Per-phase wall clock (obs::profile): a no-op unless profiling is
+    // enabled; touches nothing the fit reads, so results are
+    // bit-identical either way (DESIGN.md §2).
+    let mut timer = PhaseTimer::new();
 
     for _ in 0..cfg.max_iters {
         iterations += 1;
         let mut it = IterStats::default();
 
         // Assignment step: full scan (n·k distances by definition).
+        timer.enter(Phase::Assign);
         let comps =
             kernel::nearest_into(&ds.points, 0, n, &centroids, &mut idx, &mut best, &mut second);
         let mut reassigned = 0u64;
@@ -56,11 +62,13 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         it.survivors = n as u64;
 
         // Update step.
+        timer.enter(Phase::Update);
         let (new_centroids, _counts) = recompute_centroids(ds, &assignments, &centroids);
         let (_, max_drift) = centroid_drifts(&centroids, &new_centroids);
         centroids = new_centroids;
         it.max_drift = max_drift;
         stats.push(it);
+        timer.exit();
 
         if (max_drift as f64) <= cfg.tol {
             converged = true;
@@ -68,6 +76,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         }
     }
 
+    stats.phases = timer.totals();
     let inertia = compute_inertia(ds, &centroids, &assignments);
     Ok(FitResult { centroids, assignments, inertia, iterations, converged, stats })
 }

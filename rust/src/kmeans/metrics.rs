@@ -31,6 +31,10 @@ pub struct IterStats {
 #[derive(Clone, Debug, Default)]
 pub struct RunStats {
     pub iters: Vec<IterStats>,
+    /// Per-phase wall-time totals from `obs::profile` — `Some` only when
+    /// profiling was enabled for the fit (the timers are provably
+    /// non-perturbing, DESIGN.md §2, so this is pure annotation).
+    pub phases: Option<crate::obs::profile::PhaseTotals>,
 }
 
 impl RunStats {

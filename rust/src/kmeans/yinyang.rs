@@ -34,6 +34,7 @@ use crate::kmeans::{
     centroid_drifts, compute_inertia, metrics::IterStats, recompute_centroids, FitResult,
     KMeansConfig, RunStats,
 };
+use crate::obs::profile::{Phase, PhaseTimer};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
 
@@ -381,8 +382,11 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
     let mut stats = RunStats::default();
     let mut converged = false;
     let mut iterations = 0;
+    // obs::profile phase clock — pure annotation, bit-identical on/off.
+    let mut timer = PhaseTimer::new();
 
     // Iteration 1: full scan (bound init).
+    timer.enter(Phase::Init);
     let (mut st, init_dists) = FilterState::init_full_scan(ds, &centroids, &grouping);
     let mut drifts;
     let mut group_drifts;
@@ -392,6 +396,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         it.dist_comps = init_dists;
         it.survivors = n as u64;
         it.reassigned = n as u64;
+        timer.enter(Phase::Update);
         let (new_c, _) = recompute_centroids(ds, &st.assignments, &centroids);
         let (dr, max_drift) = centroid_drifts(&centroids, &new_c);
         centroids = new_c;
@@ -402,13 +407,16 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         if (max_drift as f64) <= cfg.tol {
             converged = true;
         } else {
+            timer.enter(Phase::Bounds);
             st.apply_drifts(&drifts, &group_drifts);
         }
+        timer.exit();
     }
 
     while !converged && iterations < cfg.max_iters {
         iterations += 1;
         let mut it = IterStats::default();
+        timer.enter(Phase::Assign);
         for (i, row) in ds.points.rows_iter().enumerate() {
             let c = step_point(row, &centroids, &grouping, &drifts, &group_drifts, i, &mut st);
             it.dist_comps += c.dists as u64;
@@ -424,6 +432,7 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
             }
         }
 
+        timer.enter(Phase::Update);
         let (new_c, _) = recompute_centroids(ds, &st.assignments, &centroids);
         let (dr, max_drift) = centroid_drifts(&centroids, &new_c);
         centroids = new_c;
@@ -435,10 +444,13 @@ pub fn fit(ds: &Dataset, cfg: &KMeansConfig, init: Matrix) -> Result<FitResult> 
         if (max_drift as f64) <= cfg.tol {
             converged = true;
         } else {
+            timer.enter(Phase::Bounds);
             st.apply_drifts(&drifts, &group_drifts);
         }
+        timer.exit();
     }
 
+    stats.phases = timer.totals();
     let inertia = compute_inertia(ds, &centroids, &st.assignments);
     Ok(FitResult {
         centroids,

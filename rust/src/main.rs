@@ -88,6 +88,8 @@ fn print_help() {
          \x20 --backend B      fpga-sim | native | xla (xla needs the `xla` cargo feature + `make artifacts`)\n\
          \x20 --software       run the software algorithm (config [kmeans].algorithm) instead of a backend\n\
          \x20 --verify         cross-check the result against a direct Lloyd run\n\
+         \x20 --profile        per-phase solver timers (init/assign/bounds/update/reduce);\n\
+         \x20                  provably non-perturbing — results stay bit-identical\n\
          \n\
          serve options (jobs: one JSON object per line, `#` comments allowed;\n\
          e.g. {{\"id\":1,\"dataset\":\"kegg\",\"k\":16,\"backend\":\"native\",\"priority\":\"high\"}}):\n\
@@ -107,6 +109,9 @@ fn print_help() {
          \x20 --idle-timeout-ms N   close idle connections after N ms (default 0 = never)\n\
          \x20 --trace-log FILE      append drained trace spans to FILE as JSONL\n\
          \x20                       (PROTOCOL.md \u{a7}11; spans also drain via {{\"op\":\"trace\"}})\n\
+         \x20 --metrics-listen ADDR serve GET /metrics (Prometheus text 0.0.4) on host:port\n\
+         \x20                       (own listener — scrapers never consume a job slot)\n\
+         \x20 --profile             per-phase solver timers; replies gain phase_*_ms keys\n\
          \n\
          cluster options (cross-process shards behind one endpoint; same wire\n\
          protocol as the daemon — external clients cannot tell the difference):\n\
@@ -123,7 +128,9 @@ fn print_help() {
          \x20                       map-reduce (slice each job's points across all shards;\n\
          \x20                       one fit scales with shard count, results bit-identical)\n\
          \x20 plus the serve pool flags (--workers/--queue/--batch/--shed, per shard)\n\
-         \x20 and the daemon flags (--max-conns/--idle-timeout-ms/--trace-log, at the front)\n\
+         \x20 and the daemon flags (--max-conns/--idle-timeout-ms/--trace-log/\n\
+         \x20 --metrics-listen/--profile, at the front; a front scrape merges every\n\
+         \x20 shard's registry, labeled by shard)\n\
          \n\
          environment:\n\
          \x20 KPYNQ_LOG=error|warn|info|debug   stderr log threshold (default info)"
@@ -164,6 +171,9 @@ fn cmd_run(args: &[String]) -> kpynq::Result<()> {
         cfg.backend_name = b;
         cfg.validate()?;
     }
+    if has_flag(args, "--profile") || cfg.profile {
+        obs::profile::set_enabled(true);
+    }
 
     let ds = cfg.load_dataset()?;
     println!(
@@ -190,6 +200,9 @@ fn cmd_run(args: &[String]) -> kpynq::Result<()> {
             fit.stats.total_dist_comps(),
             fit.stats.work_ratio(ds.n(), cfg.kmeans.k) * 100.0
         );
+        if let Some(p) = &fit.stats.phases {
+            println!("{}", render_phases(p));
+        }
         return Ok(());
     }
 
@@ -219,7 +232,21 @@ fn cmd_run(args: &[String]) -> kpynq::Result<()> {
             out.report.wall_seconds, out.report.tiles_dispatched, out.report.points_rescanned
         );
     }
+    if let Some(p) = &out.report.phases {
+        println!("{}", render_phases(p));
+    }
     Ok(())
+}
+
+/// One-line per-phase wall-time split for `--profile` runs.
+fn render_phases(p: &kpynq::obs::profile::PhaseTotals) -> String {
+    use kpynq::obs::profile::Phase;
+    let mut s = String::from("phases:");
+    for ph in Phase::ALL {
+        s.push_str(&format!(" {} {:.3}ms", ph.name(), p.get(ph)));
+    }
+    s.push_str(&format!(" (total {:.3}ms)", p.total_ms()));
+    s
 }
 
 fn cmd_serve(args: &[String]) -> kpynq::Result<()> {
@@ -249,6 +276,9 @@ fn cmd_serve(args: &[String]) -> kpynq::Result<()> {
         scfg.shed_policy = ShedPolicy::from_name(&s)?;
     }
     scfg.validate()?;
+    if has_flag(args, "--profile") || cfg.profile {
+        obs::profile::set_enabled(true);
+    }
 
     // Daemon mode: `--listen` (or a `[serve.net] listen` config entry)
     // turns the one-shot filter into the persistent socket front-end.
@@ -351,6 +381,9 @@ fn cmd_serve_daemon(
     if let Some(p) = take_opt(args, "--trace-log") {
         net.trace_log = Some(p);
     }
+    if let Some(m) = take_opt(args, "--metrics-listen") {
+        net.metrics_listen = Some(m);
+    }
     net.validate()?;
 
     let daemon = Daemon::bind(addr, net, scfg)?;
@@ -365,6 +398,9 @@ fn cmd_serve_daemon(
             daemon.serve_config().shed_policy.name(),
         ),
     );
+    if let Some(maddr) = daemon.metrics_addr() {
+        obs::log::info("serve", &format!("metrics: GET http://{maddr}/metrics (Prometheus text 0.0.4)"));
+    }
     let report = daemon.run()?;
     eprint!("{}", report.render());
     Ok(())
@@ -461,7 +497,17 @@ fn cmd_cluster(args: &[String]) -> kpynq::Result<()> {
     if let Some(p) = take_opt(args, "--trace-log") {
         net.trace_log = Some(p);
     }
+    if let Some(m) = take_opt(args, "--metrics-listen") {
+        net.metrics_listen = Some(m);
+    }
     net.validate()?;
+    // Enables the front's own timers; spawned local shards inherit the
+    // flag through their command line only if the operator passes it to
+    // the shard binary via config — the front still merges whatever
+    // phase series the shards report.
+    if has_flag(args, "--profile") || cfg.profile {
+        obs::profile::set_enabled(true);
+    }
 
     let shards = ccfg.shard_count();
     let workers = ccfg.serve.workers;

@@ -1,0 +1,262 @@
+//! Prometheus exposition: render a registry snapshot as text-format
+//! 0.0.4, plus the two helpers behind the `--metrics-listen` HTTP
+//! responder (PROTOCOL.md §11).
+//!
+//! The renderer consumes the *snapshot JSON* — not the registry — on
+//! purpose: the cluster front merges shard snapshots at the JSON level
+//! (`metrics::merge_snapshot_labeled`), so rendering from JSON means one
+//! code path serves a session's own registry, a front's merged fleet
+//! snapshot, and the `{"op":"metrics","format":"prometheus"}` wire reply
+//! identically.
+//!
+//! Format notes (text format 0.0.4):
+//! * metric names must match `[a-zA-Z_:][a-zA-Z0-9_:]*`, so the dotted
+//!   canonical names (`serve.latency_ms`) are transliterated with `.` →
+//!   `_` ([`prom_name`]); the `# HELP` line keeps the dotted original so
+//!   a scrape can be mapped back to `obs::metrics::names`;
+//! * label values escape `\` → `\\`, `"` → `\"` and newline → `\n` —
+//!   the same escaping the series encoding uses, shared via
+//!   `metrics::escape_label_value`;
+//! * histograms emit *cumulative* `_bucket{le="…"}` lines closed by
+//!   `le="+Inf"`, plus `_sum` and `_count` — converted from the
+//!   snapshot's non-cumulative sparse log2 buckets.
+
+use std::collections::BTreeMap;
+
+use super::metrics::{decode_series, escape_label_value};
+use crate::util::json::Json;
+
+/// Transliterate a dotted metric name into the Prometheus name grammar
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*` (every illegal character becomes `_`).
+pub fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit());
+        out.push(if ok { c } else { '_' });
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Render one label block (`{k="v",…}`, or `""` when empty), with an
+/// optional extra pair appended (the histogram `le`). Keys pass through
+/// [`prom_name`]; values are escaped.
+fn prom_labels(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    let mut first = true;
+    for (k, v) in labels {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&prom_name(k));
+        out.push_str("=\"");
+        out.push_str(&escape_label_value(v));
+        out.push('"');
+    }
+    if let Some((k, v)) = extra {
+        if !first {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(&escape_label_value(v));
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+/// Format a sample value: integral f64s print without the trailing `.0`
+/// JSON-style floats would carry (Prometheus parses either; the integer
+/// form is what every textbook exposition looks like).
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Group one snapshot section's series by base metric name. BTreeMap
+/// input + output keeps the rendering deterministic.
+fn group_section<'j>(
+    section: &'j Json,
+) -> BTreeMap<String, Vec<(Vec<(String, String)>, &'j Json)>> {
+    let mut grouped: BTreeMap<String, Vec<(Vec<(String, String)>, &Json)>> = BTreeMap::new();
+    if let Json::Obj(map) = section {
+        for (series, value) in map {
+            let (name, labels) = decode_series(series);
+            grouped.entry(name).or_default().push((labels, value));
+        }
+    }
+    grouped
+}
+
+fn render_scalar_section(out: &mut String, section: &Json, kind: &str) {
+    for (name, series) in group_section(section) {
+        let pname = prom_name(&name);
+        out.push_str(&format!("# HELP {pname} kpynq metric {name}\n"));
+        out.push_str(&format!("# TYPE {pname} {kind}\n"));
+        for (labels, value) in series {
+            let v = value.as_f64().unwrap_or(0.0);
+            out.push_str(&format!("{pname}{} {}\n", prom_labels(&labels, None), fmt_num(v)));
+        }
+    }
+}
+
+fn render_histogram_section(out: &mut String, section: &Json) {
+    for (name, series) in group_section(section) {
+        let pname = prom_name(&name);
+        out.push_str(&format!("# HELP {pname} kpynq metric {name}\n"));
+        out.push_str(&format!("# TYPE {pname} histogram\n"));
+        for (labels, value) in series {
+            let count = value.get("count").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let sum = value.get("sum").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let mut cum = 0.0;
+            if let Ok(Json::Arr(buckets)) = value.get("buckets") {
+                // Snapshot buckets are sparse, non-cumulative and already
+                // in ascending `le` order (obs::metrics encoding).
+                for b in buckets {
+                    let le = b.get("le").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    let n = b.get("n").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    cum += n;
+                    out.push_str(&format!(
+                        "{pname}_bucket{} {}\n",
+                        prom_labels(&labels, Some(("le", &fmt_num(le)))),
+                        fmt_num(cum)
+                    ));
+                }
+            }
+            out.push_str(&format!(
+                "{pname}_bucket{} {}\n",
+                prom_labels(&labels, Some(("le", "+Inf"))),
+                fmt_num(count)
+            ));
+            out.push_str(&format!("{pname}_sum{} {}\n", prom_labels(&labels, None), fmt_num(sum)));
+            out.push_str(&format!(
+                "{pname}_count{} {}\n",
+                prom_labels(&labels, None),
+                fmt_num(count)
+            ));
+        }
+    }
+}
+
+/// Render a `Registry::snapshot()`-shaped JSON object (possibly a merged
+/// fleet snapshot) as one Prometheus text-format 0.0.4 body.
+pub fn render_prometheus(snapshot: &Json) -> String {
+    let mut out = String::new();
+    if let Ok(section) = snapshot.get("counters") {
+        render_scalar_section(&mut out, section, "counter");
+    }
+    if let Ok(section) = snapshot.get("gauges") {
+        render_scalar_section(&mut out, section, "gauge");
+    }
+    if let Ok(section) = snapshot.get("histograms") {
+        render_histogram_section(&mut out, section);
+    }
+    out
+}
+
+/// Parse the request line of an HTTP/1.1 request head into
+/// `(method, path)` — all the routing a read-only scrape endpoint needs.
+pub fn parse_request_line(head: &str) -> Option<(&str, &str)> {
+    let line = head.lines().next()?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?;
+    let path = parts.next()?;
+    parts.next()?; // HTTP-version must be present
+    Some((method, path))
+}
+
+/// Serialize one connection-per-scrape HTTP/1.1 response.
+pub fn http_response(status: u16, reason: &str, content_type: &str, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// The Content-Type a Prometheus scraper expects from text format 0.0.4.
+pub const PROM_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Registry;
+
+    #[test]
+    fn renders_all_three_kinds_with_escaped_labels() {
+        let r = Registry::new();
+        r.counter("serve.jobs.submitted").add(3);
+        r.counter_with("serve.jobs.submitted", &[("tenant", "a\"b\\c\nd")]).inc();
+        r.gauge("serve.queue.depth").set(2);
+        let h = r.histogram_with("serve.latency_ms", &[("tenant", "acme")]);
+        h.record(0);
+        h.record(3);
+        h.record(900);
+        let body = render_prometheus(&r.snapshot());
+        assert!(body.contains("# TYPE serve_jobs_submitted counter\n"));
+        assert!(body.contains("serve_jobs_submitted 3\n"));
+        // The hostile tenant value is escaped per the 0.0.4 rules.
+        assert!(
+            body.contains("serve_jobs_submitted{tenant=\"a\\\"b\\\\c\\nd\"} 1\n"),
+            "escaping failed:\n{body}"
+        );
+        assert!(body.contains("# TYPE serve_queue_depth gauge\n"));
+        assert!(body.contains("serve_queue_depth 2\n"));
+        // Histogram: cumulative buckets closed by +Inf, then sum/count.
+        assert!(body.contains("# TYPE serve_latency_ms histogram\n"));
+        assert!(body.contains("serve_latency_ms_bucket{tenant=\"acme\",le=\"1\"} 1\n"));
+        assert!(body.contains("serve_latency_ms_bucket{tenant=\"acme\",le=\"4\"} 2\n"));
+        assert!(body.contains("serve_latency_ms_bucket{tenant=\"acme\",le=\"1024\"} 3\n"));
+        assert!(body.contains("serve_latency_ms_bucket{tenant=\"acme\",le=\"+Inf\"} 3\n"));
+        assert!(body.contains("serve_latency_ms_sum{tenant=\"acme\"} 903\n"));
+        assert!(body.contains("serve_latency_ms_count{tenant=\"acme\"} 3\n"));
+        // Names are transliterated into the 0.0.4 grammar: no dots.
+        for line in body.lines().filter(|l| !l.starts_with('#')) {
+            let name_end = line.find(['{', ' ']).unwrap_or(line.len());
+            assert!(
+                !line[..name_end].contains('.'),
+                "metric name not transliterated: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn rendering_is_deterministic_and_empty_snapshot_is_empty_body() {
+        let r = Registry::new();
+        assert_eq!(render_prometheus(&r.snapshot()), "");
+        r.counter_with("c", &[("shard", "1")]).inc();
+        r.counter_with("c", &[("shard", "0")]).inc();
+        let a = render_prometheus(&r.snapshot());
+        let b = render_prometheus(&r.snapshot());
+        assert_eq!(a, b);
+        // One HELP/TYPE pair per base name, shared by both series.
+        assert_eq!(a.matches("# TYPE c counter").count(), 1);
+        let s0 = a.find("c{shard=\"0\"} 1").expect("shard 0 series");
+        let s1 = a.find("c{shard=\"1\"} 1").expect("shard 1 series");
+        assert!(s0 < s1, "series render in deterministic (BTreeMap) order");
+    }
+
+    #[test]
+    fn http_helpers_route_a_scrape() {
+        let (method, path) =
+            parse_request_line("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!((method, path), ("GET", "/metrics"));
+        assert!(parse_request_line("garbage").is_none());
+        let resp = http_response(200, "OK", PROM_CONTENT_TYPE, "a 1\n");
+        let text = String::from_utf8(resp).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 4\r\n"));
+        assert!(text.ends_with("\r\n\r\na 1\n"));
+    }
+}

@@ -19,6 +19,20 @@
 //! `BENCH_<name>.json` by the benches. Every name in [`names`] must be
 //! documented (backticked) in README.md or PROTOCOL.md; `tools/
 //! check-docs.sh` enforces this.
+//!
+//! ## Labels
+//!
+//! Metrics optionally carry an ordered label set (PROTOCOL.md §11). A
+//! labeled metric is registered through [`Registry::counter_with`] /
+//! [`Registry::gauge_with`] / [`Registry::histogram_with`]: the (name,
+//! labels) pair is interned into one canonical *series key* —
+//! `name{key="value",…}` with keys in [`names::LABEL_KEYS`] order and
+//! values escaped — under which the series lives in the map. Interning
+//! pays the registry lock once; the returned handle is the same
+//! single-atomic-op handle unlabeled metrics get, so the hot path cost
+//! is identical. `snapshot()` needs no new shape: labeled series appear
+//! in the same three sections keyed by their series key, and `BTreeMap`
+//! ordering makes the encoding deterministic.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
@@ -51,6 +65,162 @@ pub mod names {
     pub const CLUSTER_SHARD_RESTARTS: &str = "cluster.shard_restarts";
     /// Remote-shard links re-established after a drop.
     pub const CLUSTER_REMOTE_RECONNECTS: &str = "cluster.remote.reconnects";
+    /// Histogram of per-fit solver phase wall time (ms), labeled by
+    /// `phase` (obs::profile; populated only when profiling is enabled).
+    pub const FIT_PHASE_MS: &str = "fit.phase_ms";
+
+    /// The allowed label keys, in canonical encoding order (PROTOCOL.md
+    /// §11). Per metric: `tenant` labels `serve.latency_ms` and the two
+    /// `serve.queue.shed_*` counters; `shard` labels every series in a
+    /// cluster front's merged fleet snapshot; `phase` labels
+    /// `fit.phase_ms`; `algorithm`, `backend` and `priority` are
+    /// reserved for per-dimension rollups. `tools/check-docs.sh`
+    /// requires each key to be documented in PROTOCOL.md.
+    pub const LABEL_KEYS: &[&str] =
+        &["tenant", "shard", "algorithm", "backend", "priority", "phase"];
+}
+
+/// Canonical-order rank of a label key: position in
+/// [`names::LABEL_KEYS`], with unknown keys after every known one (then
+/// ordered alphabetically among themselves by the encoder).
+fn label_rank(key: &str) -> usize {
+    names::LABEL_KEYS
+        .iter()
+        .position(|&k| k == key)
+        .unwrap_or(names::LABEL_KEYS.len())
+}
+
+/// Escape a label value for the series encoding (shared with the
+/// Prometheus exposition format): `\` → `\\`, `"` → `\"`, newline →
+/// `\n`.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn unescape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    let mut chars = v.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some(c) => out.push(c), // covers \\ and \"
+            None => out.push('\\'),
+        }
+    }
+    out
+}
+
+/// Intern a (name, labels) pair into its canonical series key:
+/// `name` alone when unlabeled, else `name{k="v",…}` with keys in
+/// [`names::LABEL_KEYS`] order (unknown keys after, alphabetically),
+/// duplicate keys last-wins, values escaped by [`escape_label_value`].
+pub fn encode_series(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut pairs: Vec<(&str, &str)> = Vec::with_capacity(labels.len());
+    for &(k, v) in labels {
+        if let Some(existing) = pairs.iter_mut().find(|(pk, _)| *pk == k) {
+            existing.1 = v; // duplicate key: last wins
+        } else {
+            pairs.push((k, v));
+        }
+    }
+    pairs.sort_by(|a, b| (label_rank(a.0), a.0).cmp(&(label_rank(b.0), b.0)));
+    let mut out = String::from(name);
+    out.push('{');
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(&escape_label_value(v));
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+/// Invert [`encode_series`]: split a series key into its base name and
+/// decoded `(key, value)` pairs. Tolerant of foreign input: a key with
+/// no `{` is an unlabeled series, and a malformed label block decodes
+/// to whatever well-formed prefix it has.
+pub fn decode_series(series: &str) -> (String, Vec<(String, String)>) {
+    let Some(brace) = series.find('{') else {
+        return (series.to_string(), Vec::new());
+    };
+    let name = series[..brace].to_string();
+    let body = series[brace + 1..].strip_suffix('}').unwrap_or(&series[brace + 1..]);
+    let mut labels = Vec::new();
+    let mut rest = body;
+    while !rest.is_empty() {
+        let Some(eq) = rest.find("=\"") else { break };
+        let key = rest[..eq].to_string();
+        let val_start = eq + 2;
+        // Scan for the closing quote, honouring backslash escapes.
+        let bytes = rest.as_bytes();
+        let mut i = val_start;
+        let mut escaped = false;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'\\' if !escaped => escaped = true,
+                b'"' if !escaped => break,
+                _ => escaped = false,
+            }
+            i += 1;
+        }
+        if i >= bytes.len() {
+            break; // unterminated value: drop the malformed tail
+        }
+        labels.push((key, unescape_label_value(&rest[val_start..i])));
+        rest = rest[i + 1..].strip_prefix(',').unwrap_or(&rest[i + 1..]);
+    }
+    (name, labels)
+}
+
+/// Re-encode a series key with one label added (or overwritten) — the
+/// cluster front's fleet-merge primitive (PROTOCOL.md §11): every series
+/// scraped from shard `i` gains `shard="i"` before entering the merged
+/// snapshot.
+pub fn relabel_series(series: &str, key: &str, value: &str) -> String {
+    let (name, labels) = decode_series(series);
+    let mut pairs: Vec<(&str, &str)> =
+        labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    pairs.push((key, value)); // last wins in encode_series
+    encode_series(&name, &pairs)
+}
+
+/// Merge a foreign snapshot into `into`, tagging every merged series
+/// with `key="value"` first. Sections absent from either side are
+/// created/skipped as needed; on a (pathological) series-key collision
+/// the merged-in value wins.
+pub fn merge_snapshot_labeled(into: &mut Json, snapshot: &Json, key: &str, value: &str) {
+    let Json::Obj(dst) = into else { return };
+    for section in ["counters", "gauges", "histograms"] {
+        let Ok(Json::Obj(src)) = snapshot.get(section) else { continue };
+        let entry = dst
+            .entry(section.to_string())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        if let Json::Obj(dst_map) = entry {
+            for (series, v) in src {
+                dst_map.insert(relabel_series(series, key, value), v.clone());
+            }
+        }
+    }
 }
 
 /// A monotonically increasing counter handle (clone = same counter).
@@ -262,6 +432,24 @@ impl Registry {
         }
     }
 
+    /// Get-or-create the counter `name` carrying `labels` (PROTOCOL.md
+    /// §11). The pair is interned via [`encode_series`]; hold the handle
+    /// — every subsequent `inc`/`add` is the same single atomic op an
+    /// unlabeled counter costs.
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        self.counter(&encode_series(name, labels))
+    }
+
+    /// Labeled variant of [`Registry::gauge`] (see [`Registry::counter_with`]).
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        self.gauge(&encode_series(name, labels))
+    }
+
+    /// Labeled variant of [`Registry::histogram`] (see [`Registry::counter_with`]).
+    pub fn histogram_with(&self, name: &str, labels: &[(&str, &str)]) -> Histogram {
+        self.histogram(&encode_series(name, labels))
+    }
+
     /// Encode the registry as one JSON object:
     /// `{"counters":{..},"gauges":{..},"histograms":{..}}`.
     pub fn snapshot(&self) -> Json {
@@ -374,6 +562,93 @@ mod tests {
         // The snapshot re-parses through the crate's own JSON codec.
         let text = snap.to_string();
         assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+    }
+
+    #[test]
+    fn labeled_handles_intern_to_one_series() {
+        let r = Registry::new();
+        let a = r.counter_with("serve.latency_ms", &[("tenant", "acme")]);
+        let b = r.counter_with("serve.latency_ms", &[("tenant", "acme")]);
+        a.inc();
+        b.add(4);
+        assert_eq!(a.get(), 5, "same (name, labels) ⇒ same underlying counter");
+        // A different label value is a different series.
+        let c = r.counter_with("serve.latency_ms", &[("tenant", "umbrella")]);
+        c.inc();
+        assert_eq!(c.get(), 1);
+        // The unlabeled series is independent of every labeled one.
+        r.counter("serve.latency_ms").add(7);
+        let snap = r.snapshot();
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.get("serve.latency_ms").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(
+            counters.get("serve.latency_ms{tenant=\"acme\"}").unwrap().as_usize().unwrap(),
+            5
+        );
+    }
+
+    #[test]
+    fn series_encoding_orders_canonically_and_round_trips_escapes() {
+        // Keys are emitted in names::LABEL_KEYS order regardless of the
+        // order the caller passed them in; unknown keys come last.
+        assert_eq!(
+            encode_series("m", &[("phase", "assign"), ("tenant", "t"), ("zz", "x")]),
+            "m{tenant=\"t\",phase=\"assign\",zz=\"x\"}"
+        );
+        // Duplicate key: last wins.
+        assert_eq!(encode_series("m", &[("tenant", "a"), ("tenant", "b")]), "m{tenant=\"b\"}");
+        // The three escape-worthy characters round-trip through
+        // encode → decode exactly.
+        let hostile = "a\"b\\c\nd";
+        let series = encode_series("m", &[("tenant", hostile)]);
+        assert_eq!(series, "m{tenant=\"a\\\"b\\\\c\\nd\"}");
+        let (name, labels) = decode_series(&series);
+        assert_eq!(name, "m");
+        assert_eq!(labels, vec![("tenant".to_string(), hostile.to_string())]);
+        // Unlabeled keys decode to an empty label list.
+        assert_eq!(decode_series("plain.name"), ("plain.name".to_string(), Vec::new()));
+    }
+
+    #[test]
+    fn relabel_inserts_in_canonical_position_and_overwrites() {
+        assert_eq!(relabel_series("m", "shard", "2"), "m{shard=\"2\"}");
+        assert_eq!(
+            relabel_series("m{tenant=\"t\",phase=\"init\"}", "shard", "0"),
+            "m{tenant=\"t\",shard=\"0\",phase=\"init\"}"
+        );
+        assert_eq!(relabel_series("m{shard=\"9\"}", "shard", "front"), "m{shard=\"front\"}");
+    }
+
+    #[test]
+    fn merge_snapshot_labeled_tags_every_foreign_series() {
+        let front = Registry::new();
+        front.counter("cluster.jobs.submitted").add(3);
+        let shard = Registry::new();
+        shard.counter("serve.jobs.submitted").add(2);
+        shard.histogram_with("serve.latency_ms", &[("tenant", "acme")]).record(5);
+        let mut merged = front.snapshot();
+        merge_snapshot_labeled(&mut merged, &shard.snapshot(), "shard", "1");
+        let counters = merged.get("counters").unwrap();
+        assert!(counters.get("cluster.jobs.submitted").is_ok(), "front series untouched");
+        assert_eq!(
+            counters.get("serve.jobs.submitted{shard=\"1\"}").unwrap().as_usize().unwrap(),
+            2
+        );
+        let hists = merged.get("histograms").unwrap();
+        let labeled = hists.get("serve.latency_ms{tenant=\"acme\",shard=\"1\"}").unwrap();
+        assert_eq!(labeled.get("count").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn snapshot_with_labels_is_deterministic() {
+        let build = || {
+            let r = Registry::new();
+            r.counter_with("c", &[("shard", "1"), ("tenant", "b")]).inc();
+            r.counter_with("c", &[("tenant", "a")]).inc();
+            r.gauge("g").set(2);
+            r.snapshot().to_string()
+        };
+        assert_eq!(build(), build(), "same registrations ⇒ byte-identical snapshot");
     }
 
     #[test]

@@ -8,15 +8,25 @@
 //!
 //! - [`metrics`] — process- or session-scoped named counters, gauges and
 //!   log2-bucketed histograms behind lock-cheap [`Counter`]/[`Gauge`]/
-//!   [`Histogram`] handles, with a snapshot-to-JSON encoder. The serve
+//!   [`Histogram`] handles, optionally carrying an ordered label set
+//!   (`tenant`, `shard`, `algorithm`, `backend`, `priority`, `phase` —
+//!   PROTOCOL.md §11), with a snapshot-to-JSON encoder. The serve
 //!   session, admission queue, net front and cluster front all register
 //!   their counters here instead of hand-threading atomics.
+//! - [`profile`] — per-phase solver profiling: a monotonic [`PhaseTimer`]
+//!   splitting each fit's wall time into `init`/`assign`/`bounds`/
+//!   `update`/`reduce`, off by default and provably non-perturbing
+//!   (bit-identical fits either way; DESIGN.md §2).
+//! - [`expo`] — Prometheus text-format 0.0.4 rendering of a registry
+//!   snapshot, serving `{"op":"metrics","format":"prometheus"}` and the
+//!   `--metrics-listen` `GET /metrics` scrape endpoint.
 //! - [`trace`] — per-request span events (`admit`, `queue-wait`,
 //!   `dispatch`, `reduce-barrier`, `reply`) keyed by a `trace_id` that is
 //!   minted at the front (or supplied by the client, PROTOCOL.md §11) and
 //!   propagated on every shard-bound frame. Events land in a bounded
 //!   in-memory [`TraceRing`], drainable as JSONL via the `{"op":"trace"}`
-//!   control frame or `kpynq serve --trace-log <path>`.
+//!   control frame or `kpynq serve --trace-log <path>` — or read without
+//!   consuming via `{"op":"trace","peek":true}`.
 //! - [`log`] — a leveled stderr sink (`KPYNQ_LOG=error|warn|info|debug`)
 //!   that the CLI, supervisor and remote-fleet diagnostics route through,
 //!   so daemon stderr is one parseable stream.
@@ -27,9 +37,12 @@
 //! Like the rest of the crate, this module uses only `std` — no tracing
 //! or metrics crates, per DESIGN.md §1.
 
+pub mod expo;
 pub mod log;
 pub mod metrics;
+pub mod profile;
 pub mod trace;
 
 pub use metrics::{global, Counter, Gauge, Histogram, Registry};
+pub use profile::{Phase, PhaseTimer, PhaseTotals};
 pub use trace::{mint_trace_id, SpanEvent, TraceRing};

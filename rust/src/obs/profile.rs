@@ -1,0 +1,218 @@
+//! Per-phase solver profiling: a low-overhead monotonic [`PhaseTimer`]
+//! threaded through the four algorithms and the coordinator driver
+//! (DESIGN.md §2).
+//!
+//! The work-efficiency counters (`kmeans::metrics::WorkEfficiency`) say
+//! how much distance work the triangle-inequality filters avoided; the
+//! phase timer says where the remaining *time* went — split into the
+//! five canonical phases of a fit:
+//!
+//! | phase    | meaning                                                |
+//! |----------|--------------------------------------------------------|
+//! | `init`   | seeding + the first full assignment scan               |
+//! | `assign` | per-iteration assignment (filter walk + kernel scans)  |
+//! | `bounds` | bound maintenance (inflate/deflate after drifts)       |
+//! | `update` | centroid recomputation + drift measurement             |
+//! | `reduce` | map-reduce partial accumulation / final reduction      |
+//!
+//! ## The non-perturbation contract (normative)
+//!
+//! Profiling must be *provably non-perturbing*: a fit with the timer on
+//! is bit-identical (assignments, centroid bits, §8 FNV fingerprint) to
+//! the same fit with it off. The timer holds that contract by
+//! construction — it touches only the monotonic clock and its own
+//! nanosecond accumulators, never a point, bound or centroid — and
+//! `rust/tests/profile.rs` (`make profile-test`) holds it empirically
+//! across all four algorithms.
+//!
+//! Enablement is a process-wide flag ([`set_enabled`], wired to the
+//! `--profile` CLI flag / `profile` config key) sampled once per timer
+//! at construction: a disabled timer never reads the clock — every call
+//! is a branch on a cold bool, which is what "off ⇒ zero-cost no-op"
+//! means here. The resulting [`PhaseTotals`] ride `RunStats` →
+//! `RunReport` → `FitSummary` → the §4 wire reply (`phase_*_ms` keys,
+//! present only when profiling produced them).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// The canonical phases, in wire/reporting order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Init = 0,
+    Assign = 1,
+    Bounds = 2,
+    Update = 3,
+    Reduce = 4,
+}
+
+/// Number of phases (array dimension for [`PhaseTotals`]).
+pub const PHASES: usize = 5;
+
+impl Phase {
+    pub const ALL: [Phase; PHASES] =
+        [Phase::Init, Phase::Assign, Phase::Bounds, Phase::Update, Phase::Reduce];
+
+    /// The phase's wire name (label value for `fit.phase_ms`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Init => "init",
+            Phase::Assign => "assign",
+            Phase::Bounds => "bounds",
+            Phase::Update => "update",
+            Phase::Reduce => "reduce",
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn per-phase profiling on or off process-wide. Timers sample the
+/// flag at construction, so flipping it mid-fit affects only later fits.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether new [`PhaseTimer`]s will record.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Accumulated per-phase wall time for one fit, in milliseconds,
+/// indexed by [`Phase`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseTotals {
+    pub ms: [f64; PHASES],
+}
+
+impl PhaseTotals {
+    pub fn get(&self, p: Phase) -> f64 {
+        self.ms[p as usize]
+    }
+
+    /// Sum across phases (the profiled share of the fit's wall time).
+    pub fn total_ms(&self) -> f64 {
+        self.ms.iter().sum()
+    }
+
+    /// Fold another fit's totals in (map-reduce rollup).
+    pub fn absorb(&mut self, other: &PhaseTotals) {
+        for i in 0..PHASES {
+            self.ms[i] += other.ms[i];
+        }
+    }
+}
+
+/// A monotonic stopwatch with one lane per [`Phase`]. `enter` switches
+/// the active phase (closing the previous one), `exit` closes it; both
+/// are inlineable no-ops when profiling was disabled at construction.
+#[derive(Debug)]
+pub struct PhaseTimer {
+    enabled: bool,
+    current: Option<(Phase, Instant)>,
+    ns: [u64; PHASES],
+}
+
+impl Default for PhaseTimer {
+    fn default() -> Self {
+        PhaseTimer::new()
+    }
+}
+
+impl PhaseTimer {
+    /// A timer honouring the process-wide [`enabled`] flag.
+    pub fn new() -> PhaseTimer {
+        PhaseTimer::with_enabled(enabled())
+    }
+
+    /// A timer with explicit enablement (tests, benches).
+    pub fn with_enabled(on: bool) -> PhaseTimer {
+        PhaseTimer { enabled: on, current: None, ns: [0; PHASES] }
+    }
+
+    #[inline]
+    fn flush(&mut self, now: Instant) {
+        if let Some((p, t0)) = self.current.take() {
+            self.ns[p as usize] += now.duration_since(t0).as_nanos() as u64;
+        }
+    }
+
+    /// Start attributing wall time to `p`, closing any open phase.
+    #[inline]
+    pub fn enter(&mut self, p: Phase) {
+        if !self.enabled {
+            return;
+        }
+        let now = Instant::now();
+        self.flush(now);
+        self.current = Some((p, now));
+    }
+
+    /// Close the open phase without opening another (time between `exit`
+    /// and the next `enter` is attributed to nothing).
+    #[inline]
+    pub fn exit(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        let now = Instant::now();
+        self.flush(now);
+    }
+
+    /// Close any open phase and return the totals — `None` when the
+    /// timer was disabled, so callers can thread `Option<PhaseTotals>`
+    /// straight into reports without an emptiness convention.
+    pub fn totals(&mut self) -> Option<PhaseTotals> {
+        if !self.enabled {
+            return None;
+        }
+        self.exit();
+        let mut t = PhaseTotals::default();
+        for i in 0..PHASES {
+            t.ms[i] = self.ns[i] as f64 / 1.0e6;
+        }
+        Some(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_timer_reports_none_and_never_accumulates() {
+        let mut t = PhaseTimer::with_enabled(false);
+        t.enter(Phase::Assign);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.exit();
+        assert_eq!(t.totals(), None);
+    }
+
+    #[test]
+    fn enter_switches_phases_and_totals_accumulate() {
+        let mut t = PhaseTimer::with_enabled(true);
+        t.enter(Phase::Init);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        // enter() closes init and opens assign in one call.
+        t.enter(Phase::Assign);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.exit();
+        // Time after exit() is attributed to nothing.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let totals = t.totals().expect("enabled timer yields totals");
+        assert!(totals.get(Phase::Init) > 0.0);
+        assert!(totals.get(Phase::Assign) > 0.0);
+        assert_eq!(totals.get(Phase::Update), 0.0);
+        assert!(totals.total_ms() >= totals.get(Phase::Init) + totals.get(Phase::Assign));
+        let mut sum = PhaseTotals::default();
+        sum.absorb(&totals);
+        sum.absorb(&totals);
+        assert_eq!(sum.get(Phase::Init), 2.0 * totals.get(Phase::Init));
+    }
+
+    #[test]
+    fn phase_names_cover_the_wire_order() {
+        let names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(names, vec!["init", "assign", "bounds", "update", "reduce"]);
+    }
+}

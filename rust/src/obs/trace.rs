@@ -17,6 +17,11 @@
 //! Draining is destructive and cheap (`swap` out the deque); the
 //! `{"op":"trace"}` control frame and `--trace-log` both drain the same
 //! ring, so events are delivered exactly once to whoever asks first.
+//! A wire scraper that must not steal events from the `--trace-log` tee
+//! (or from another scraper) sends `{"op":"trace","peek":true}` instead:
+//! [`TraceRing::peek`] copies the buffer and leaves both the events and
+//! the dropped counter in place (PROTOCOL.md §11 documents the
+//! exactly-once-vs-peek contract).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -162,19 +167,38 @@ impl TraceRing {
         (events, dropped)
     }
 
+    /// Copy every buffered event (oldest first) plus the
+    /// evicted-since-last-drain count, leaving the ring untouched — the
+    /// non-destructive read behind `{"op":"trace","peek":true}`
+    /// (PROTOCOL.md §11). A peek never consumes: the same events remain
+    /// for the next drain (or the `--trace-log` tee) to deliver
+    /// exactly once.
+    pub fn peek(&self) -> (Vec<SpanEvent>, u64) {
+        let inner = self.inner.lock().expect("trace ring poisoned");
+        (inner.events.iter().cloned().collect(), inner.dropped)
+    }
+
     /// Drain into the wire shape of the `{"op":"trace"}` reply
     /// (PROTOCOL.md §11): `{"op":"trace","events":[...],"dropped":N}`.
     pub fn drain_json(&self) -> Json {
         let (events, dropped) = self.drain();
-        let mut m = BTreeMap::new();
-        m.insert("op".to_string(), Json::Str("trace".into()));
-        m.insert(
-            "events".to_string(),
-            Json::Arr(events.iter().map(SpanEvent::to_json).collect()),
-        );
-        m.insert("dropped".to_string(), Json::Num(dropped as f64));
-        Json::Obj(m)
+        trace_reply_json(&events, dropped)
     }
+
+    /// Non-destructive variant of [`TraceRing::drain_json`] — the same
+    /// wire shape, built from [`TraceRing::peek`].
+    pub fn peek_json(&self) -> Json {
+        let (events, dropped) = self.peek();
+        trace_reply_json(&events, dropped)
+    }
+}
+
+fn trace_reply_json(events: &[SpanEvent], dropped: u64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("op".to_string(), Json::Str("trace".into()));
+    m.insert("events".to_string(), Json::Arr(events.iter().map(SpanEvent::to_json).collect()));
+    m.insert("dropped".to_string(), Json::Num(dropped as f64));
+    Json::Obj(m)
 }
 
 #[cfg(test)]
@@ -220,6 +244,27 @@ mod tests {
         assert_eq!(events[1].name, "reply");
         assert!(ring.is_empty());
         assert_eq!(ring.drain().0.len(), 0, "second drain finds nothing");
+    }
+
+    #[test]
+    fn peek_is_non_destructive_and_preserves_the_dropped_counter() {
+        let ring = TraceRing::new(2);
+        for i in 0..3 {
+            ring.push(SpanEvent::new("t", "admit").num("id", i as f64));
+        }
+        // Peek twice: identical views, nothing consumed.
+        let (e1, d1) = ring.peek();
+        let (e2, d2) = ring.peek();
+        assert_eq!((e1.len(), d1), (2, 1));
+        assert_eq!((e2.len(), d2), (2, 1));
+        assert_eq!(ring.len(), 2);
+        let j = ring.peek_json();
+        assert_eq!(j.get("op").unwrap().as_str().unwrap(), "trace");
+        assert_eq!(j.get("dropped").unwrap().as_usize().unwrap(), 1);
+        // The drain that follows still delivers every event exactly once.
+        let (events, dropped) = ring.drain();
+        assert_eq!((events.len(), dropped), (2, 1));
+        assert!(ring.is_empty());
     }
 
     #[test]

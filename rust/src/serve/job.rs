@@ -26,6 +26,7 @@ use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::kmeans::metrics::WorkEfficiency;
 use crate::kmeans::{Algorithm, FitResult, KMeansConfig};
+use crate::obs::profile::{Phase, PhaseTotals};
 use crate::util::json::Json;
 
 /// Scheduling priority (PROTOCOL.md §7). Lower index pops first; FIFO
@@ -105,6 +106,11 @@ pub struct FitRequest {
     /// mints one at admission. Propagated on every shard-bound frame and
     /// echoed byte-identically on the response.
     pub trace_id: String,
+    /// Tenant the job is accounted to (PROTOCOL.md §3, client-optional).
+    /// Empty = untenanted. Purely an accounting label: it never affects
+    /// scheduling or results, only the per-tenant latency/shed rollups in
+    /// the `stats` reply and the `tenant`-labeled metrics series.
+    pub tenant: String,
 }
 
 impl Default for FitRequest {
@@ -122,6 +128,7 @@ impl Default for FitRequest {
             deadline_ms: None,
             algorithm: String::new(),
             trace_id: String::new(),
+            tenant: String::new(),
         }
     }
 }
@@ -163,6 +170,7 @@ impl FitRequest {
             "deadline_ms",
             "algorithm",
             "trace_id",
+            "tenant",
         ];
         if let Some(unknown) = map.keys().find(|k| !KNOWN.contains(&k.as_str())) {
             return Err(Error::Parse(format!("unknown job key '{unknown}'")));
@@ -224,6 +232,9 @@ impl FitRequest {
         if let Some(v) = map.get("trace_id") {
             req.trace_id = v.as_str()?.to_string();
         }
+        if let Some(v) = map.get("tenant") {
+            req.tenant = v.as_str()?.to_string();
+        }
         // Fail malformed names (backend / normalize) at parse time.
         req.to_run_config()?;
         Ok(req)
@@ -282,6 +293,9 @@ impl FitRequest {
         }
         if !self.trace_id.is_empty() {
             m.insert("trace_id".into(), Json::Str(self.trace_id.clone()));
+        }
+        if !self.tenant.is_empty() {
+            m.insert("tenant".into(), Json::Str(self.tenant.clone()));
         }
         Json::Obj(m)
     }
@@ -360,6 +374,11 @@ pub struct FitSummary {
     /// when the executing path tracked no per-iteration stats (map-reduce
     /// fits) — "nothing measured", never "everything avoided".
     pub work: WorkEfficiency,
+    /// Per-phase wall-time split (`obs::profile`) — `Some` only when
+    /// profiling was enabled on the executing daemon. Additive §9 keys
+    /// (`phase_*_ms`): absent from the wire when profiling is off, so
+    /// pre-profiling response lines are reproduced byte-for-byte.
+    pub phases: Option<PhaseTotals>,
 }
 
 impl FitSummary {
@@ -370,6 +389,7 @@ impl FitSummary {
             converged: fit.converged,
             assignments_fnv: assignments_checksum(&fit.assignments),
             work: fit.stats.work_efficiency(fit.assignments.len(), fit.centroids.rows()),
+            phases: fit.stats.phases,
         }
     }
 }
@@ -407,6 +427,10 @@ pub struct FitResponse {
     /// on paths that never saw a request (batch-mode fronts without
     /// tracing). Echoed byte-identically across fan-out/fan-in hops.
     pub trace_id: String,
+    /// Tenant the job was accounted to — echoed from the request by the
+    /// response router (workers never see tenants). Empty = untenanted;
+    /// the key is absent from the wire in that case (PROTOCOL.md §4).
+    pub tenant: String,
 }
 
 impl FitResponse {
@@ -424,6 +448,7 @@ impl FitResponse {
             fit: None,
             report: None,
             trace_id: String::new(),
+            tenant: String::new(),
         }
     }
 
@@ -448,6 +473,7 @@ impl FitResponse {
             fit: None,
             report: None,
             trace_id: String::new(),
+            tenant: String::new(),
         }
     }
 
@@ -477,6 +503,7 @@ impl FitResponse {
             fit: Some(fit),
             report: Some(report),
             trace_id: String::new(),
+            tenant: String::new(),
         }
     }
 
@@ -520,9 +547,19 @@ impl FitResponse {
             );
             m.insert("points_pruned".into(), Json::Num(s.work.points_pruned as f64));
             m.insert("group_hit_rate".into(), Json::Num(s.work.group_hit_rate));
+            // Per-phase timings (PROTOCOL.md §4, additive §9 keys): only
+            // present when profiling was enabled on the executing daemon.
+            if let Some(p) = &s.phases {
+                for ph in Phase::ALL {
+                    m.insert(format!("phase_{}_ms", ph.name()), Json::Num(p.get(ph)));
+                }
+            }
         }
         if !self.trace_id.is_empty() {
             m.insert("trace_id".into(), Json::Str(self.trace_id.clone()));
+        }
+        if !self.tenant.is_empty() {
+            m.insert("tenant".into(), Json::Str(self.tenant.clone()));
         }
         Json::Obj(m)
     }
@@ -558,6 +595,16 @@ impl FitResponse {
             let get_u64 = |key: &str| -> Result<u64> {
                 Ok(map.get(key).map(|v| v.as_usize()).transpose()?.unwrap_or(0) as u64)
             };
+            // Phase timings reconstruct to `Some` iff any `phase_*_ms`
+            // key is present — symmetric with `to_json`, so re-serializing
+            // a parsed response is byte-stable with profiling on or off.
+            let mut phases: Option<PhaseTotals> = None;
+            for ph in Phase::ALL {
+                if let Some(v) = map.get(&format!("phase_{}_ms", ph.name())) {
+                    phases.get_or_insert_with(PhaseTotals::default).ms[ph as usize] =
+                        v.as_f64()?;
+                }
+            }
             Some(FitSummary {
                 inertia: j.get("inertia")?.as_f64()?,
                 iterations: j.get("iterations")?.as_usize()?,
@@ -569,6 +616,7 @@ impl FitResponse {
                     points_pruned: get_u64("points_pruned")?,
                     group_hit_rate: get_num("group_hit_rate")?,
                 },
+                phases,
             })
         } else {
             None
@@ -586,6 +634,7 @@ impl FitResponse {
             fit: None,
             report: None,
             trace_id: get_str("trace_id")?,
+            tenant: get_str("tenant")?,
         })
     }
 }
@@ -680,6 +729,7 @@ mod tests {
             deadline_ms: Some(900),
             algorithm: "yinyang".into(),
             trace_id: "deadbeefcafef00d".into(),
+            tenant: "acme".into(),
         };
         let back = FitRequest::from_json(&req.to_json()).unwrap();
         assert_eq!(back.id, req.id);
@@ -698,12 +748,44 @@ mod tests {
         assert_eq!(back.deadline_ms, req.deadline_ms);
         assert_eq!(back.algorithm, req.algorithm);
         assert_eq!(back.trace_id, req.trace_id);
+        assert_eq!(back.tenant, req.tenant);
         // No deadline ⇒ no key on the wire (absent, not 0 — PROTOCOL.md §3);
         // same for the client-optional §9 keys when unset.
         let none = FitRequest { deadline_ms: None, ..FitRequest::default() };
         assert!(none.to_json().get("deadline_ms").is_err());
         assert!(none.to_json().get("algorithm").is_err());
         assert!(none.to_json().get("trace_id").is_err());
+        assert!(none.to_json().get("tenant").is_err());
+    }
+
+    #[test]
+    fn phase_timings_round_trip_when_present_and_stay_absent_when_off() {
+        let req = FitRequest { id: 4, max_points: 200, ..Default::default() };
+        let ds = req.load_dataset().unwrap();
+        let out = crate::coordinator::driver::run_with_engine(
+            &mut crate::runtime::native::NativeEngine,
+            &ds,
+            &req.kmeans,
+        )
+        .unwrap();
+        let mut resp =
+            FitResponse::ok(4, "native".into(), 0, 1, 0.001, 0.02, out.fit, out.report);
+        // Profiling off (the default): no phase_* keys on the wire.
+        let wire = resp.to_json();
+        for ph in Phase::ALL {
+            assert!(wire.get(&format!("phase_{}_ms", ph.name())).is_err());
+        }
+        // Simulate a profiled run: the summary carries totals, every
+        // phase key crosses the wire, and re-serializing is byte-stable.
+        let mut totals = PhaseTotals::default();
+        totals.ms = [1.5, 20.0, 3.25, 7.0, 0.0];
+        resp.summary.as_mut().unwrap().phases = Some(totals);
+        resp.tenant = "acme".into();
+        let line = resp.to_json().to_string();
+        let back = FitResponse::from_wire_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.summary.unwrap().phases, Some(totals));
+        assert_eq!(back.tenant, "acme");
+        assert_eq!(back.to_json().to_string(), line);
     }
 
     #[test]

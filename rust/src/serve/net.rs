@@ -102,8 +102,14 @@ pub trait FrontCore: Send + Sync + 'static {
     /// exactly one drainer.
     fn drain_trace(&self) -> Json;
 
+    /// Non-destructive snapshot of the trace span ring — the
+    /// `{"op":"trace","peek":true}` form (PROTOCOL.md §11). Dashboards
+    /// poll with this so they never race a log shipper's drain.
+    fn peek_trace(&self) -> Json;
+
     /// Snapshot the core's metrics registry (`obs::metrics`) — the body
-    /// of the `{"op":"metrics"}` reply (PROTOCOL.md §6).
+    /// of the `{"op":"metrics"}` reply (PROTOCOL.md §6), and the source
+    /// the `GET /metrics` Prometheus endpoint renders.
     fn metrics(&self) -> Json;
 }
 
@@ -135,10 +141,15 @@ impl FrontCore for ServeSession {
             "queue_lanes".to_string(),
             Json::Arr(self.lane_depths().iter().map(|&d| Json::Num(d as f64)).collect()),
         );
+        m.insert("tenants".to_string(), self.tenants_json());
     }
 
     fn drain_trace(&self) -> Json {
         ServeSession::drain_trace(self)
+    }
+
+    fn peek_trace(&self) -> Json {
+        ServeSession::peek_trace(self)
     }
 
     fn metrics(&self) -> Json {
@@ -170,11 +181,16 @@ pub struct NetConfig {
     /// (`kpynq serve --trace-log <path>`): every `{"op":"trace"}` drain is
     /// teed here, plus one final drain at shutdown.
     pub trace_log: Option<String>,
+    /// Also serve `GET /metrics` (Prometheus text 0.0.4) over plain HTTP
+    /// on this `host:port` (`kpynq serve --metrics-listen <addr>`). The
+    /// scrape endpoint is read-only and separate from the NDJSON listener
+    /// so scrapers never consume a job-connection slot (PROTOCOL.md §11).
+    pub metrics_listen: Option<String>,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
-        Self { max_conns: 32, idle_timeout_ms: 0, trace_log: None }
+        Self { max_conns: 32, idle_timeout_ms: 0, trace_log: None, metrics_listen: None }
     }
 }
 
@@ -259,6 +275,10 @@ pub struct Daemon {
     net: NetConfig,
     serve: ServeConfig,
     shutdown: Arc<AtomicBool>,
+    /// Bound eagerly in [`Daemon::bind`] (so `--metrics-listen 127.0.0.1:0`
+    /// has a readable port before `run`), served by a sidecar thread in
+    /// `run_with`.
+    metrics_listener: Option<TcpListener>,
 }
 
 /// A cloneable remote control for a running daemon (the embedding test /
@@ -291,7 +311,28 @@ impl Daemon {
                 Error::Config(format!("cannot listen on '{addr}': {e}"))
             })?),
         };
-        Ok(Daemon { listener, net, serve, shutdown: Arc::new(AtomicBool::new(false)) })
+        let metrics_listener = match &net.metrics_listen {
+            Some(maddr) => Some(TcpListener::bind(maddr).map_err(|e| {
+                Error::Config(format!("cannot serve metrics on '{maddr}': {e}"))
+            })?),
+            None => None,
+        };
+        Ok(Daemon {
+            listener,
+            net,
+            serve,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            metrics_listener,
+        })
+    }
+
+    /// The bound `GET /metrics` scrape address, when `metrics_listen` was
+    /// configured (PROTOCOL.md §11).
+    pub fn metrics_addr(&self) -> Option<String> {
+        self.metrics_listener
+            .as_ref()
+            .and_then(|l| l.local_addr().ok())
+            .map(|a| a.to_string())
     }
 
     /// The bound address, in the same notation `bind` accepts.
@@ -340,8 +381,16 @@ impl Daemon {
         core: Arc<dyn FrontCore>,
         finish: impl FnOnce() -> Result<ServeReport>,
     ) -> Result<ServeReport> {
-        let Daemon { listener, net, serve: _, shutdown } = self;
+        let Daemon { listener, net, serve: _, shutdown, metrics_listener } = self;
         let counters = Arc::new(NetCounters::default());
+        // The Prometheus scrape sidecar (PROTOCOL.md §11): its own
+        // listener and thread, so scrapers never consume an NDJSON
+        // connection slot and a wedged scraper cannot wedge serving.
+        let metrics_thread = metrics_listener.map(|l| {
+            let core = Arc::clone(&core);
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::spawn(move || serve_metrics_http(&l, &*core, &shutdown))
+        });
         let trace_sink = match &net.trace_log {
             Some(path) => Some(Arc::new(Mutex::new(
                 std::fs::OpenOptions::new()
@@ -401,6 +450,11 @@ impl Daemon {
         // Spans nobody drained over the wire still reach the trace log.
         if let Some(sink) = &trace_sink {
             append_trace(sink, &core.drain_trace());
+        }
+        // The scrape sidecar holds a core clone; it exits on the shutdown
+        // flag (set before we got here) within one accept tick.
+        if let Some(h) = metrics_thread {
+            let _ = h.join();
         }
         drop(core); // `finish` must now hold the only core reference
 
@@ -716,10 +770,18 @@ fn control_frame<S: WireStream>(
             true
         }
         "trace" => {
-            // Drain the core's span ring (PROTOCOL.md §11). Destructive —
-            // each span reaches exactly one wire drainer — but spans are
-            // teed to the `--trace-log` sink on their way out when one is
-            // configured.
+            // `peek: true` snapshots the span ring without consuming it
+            // (PROTOCOL.md §11): dashboards poll with peek so they never
+            // race a log shipper for the exactly-once drain. A peek is
+            // not teed to `--trace-log` — the eventual drain still
+            // delivers every span there exactly once.
+            if matches!(map.get("peek"), Some(Json::Bool(true))) {
+                let _ = write_line(out, &ctx.core.peek_trace().to_string());
+                return true;
+            }
+            // Default: drain. Destructive — each span reaches exactly one
+            // wire drainer — but spans are teed to the `--trace-log` sink
+            // on their way out when one is configured.
             let drained = ctx.core.drain_trace();
             if let Some(sink) = &ctx.trace_sink {
                 append_trace(sink, &drained);
@@ -728,7 +790,38 @@ fn control_frame<S: WireStream>(
             true
         }
         "metrics" => {
-            // Non-destructive registry snapshot (PROTOCOL.md §6).
+            // Non-destructive registry snapshot (PROTOCOL.md §6). The
+            // default reply embeds the JSON snapshot; `"format":
+            // "prometheus"` returns the same snapshot rendered as
+            // Prometheus text 0.0.4 in a `body` string (PROTOCOL.md §11).
+            match map.get("format").map(|v| v.as_str()) {
+                None => {}
+                Some(Ok("json")) => {}
+                Some(Ok("prometheus")) => {
+                    let mut m = BTreeMap::new();
+                    m.insert("op".to_string(), Json::Str("metrics".into()));
+                    m.insert("format".to_string(), Json::Str("prometheus".into()));
+                    m.insert(
+                        "body".to_string(),
+                        Json::Str(crate::obs::expo::render_prometheus(&ctx.core.metrics())),
+                    );
+                    let _ = write_line(out, &Json::Obj(m).to_string());
+                    return true;
+                }
+                Some(Ok(other)) => {
+                    proto_error(
+                        ctx,
+                        out,
+                        lineno,
+                        &format!("unknown metrics format '{other}' (json, prometheus)"),
+                    );
+                    return true;
+                }
+                Some(Err(_)) => {
+                    proto_error(ctx, out, lineno, "metrics 'format' must be a string");
+                    return true;
+                }
+            }
             let mut m = match ctx.core.metrics() {
                 Json::Obj(m) => m,
                 other => {
@@ -775,6 +868,66 @@ fn control_frame<S: WireStream>(
             proto_error(ctx, out, lineno, &format!("unknown op '{other}'"));
             true
         }
+    }
+}
+
+/// Serve `GET /metrics` (Prometheus text 0.0.4, PROTOCOL.md §11) until
+/// the shutdown flag flips. One short-lived connection per scrape with
+/// `Connection: close` — scrapers arrive every few seconds at most, so
+/// there is nothing worth keeping alive. The handler is deliberately
+/// minimal HTTP/1.1: request line + headers in, one response out.
+fn serve_metrics_http(listener: &TcpListener, core: &dyn FrontCore, shutdown: &AtomicBool) {
+    use crate::obs::expo::{
+        http_response, parse_request_line, render_prometheus, PROM_CONTENT_TYPE,
+    };
+    let _ = listener.set_nonblocking(true);
+    while !shutdown.load(Ordering::SeqCst) {
+        let mut stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                // WouldBlock (the common case) and transient accept
+                // failures alike: back off one tick, re-check shutdown.
+                std::thread::sleep(ACCEPT_TICK);
+                continue;
+            }
+        };
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+        let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+        // Read the request head (through the blank line); scrapes carry
+        // no body, and anything past 8 KiB is not a scrape.
+        let mut head = Vec::new();
+        let mut buf = [0u8; 1024];
+        loop {
+            match io::Read::read(&mut stream, &mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => {
+                    head.extend_from_slice(&buf[..n]);
+                    if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+                        break;
+                    }
+                }
+            }
+        }
+        let head = String::from_utf8_lossy(&head);
+        let reply = match parse_request_line(&head) {
+            Some(("GET", "/metrics")) => {
+                http_response(200, "OK", PROM_CONTENT_TYPE, &render_prometheus(&core.metrics()))
+            }
+            Some(("GET", _)) => http_response(
+                404,
+                "Not Found",
+                "text/plain; charset=utf-8",
+                "only /metrics is served here\n",
+            ),
+            _ => http_response(
+                405,
+                "Method Not Allowed",
+                "text/plain; charset=utf-8",
+                "only GET /metrics is supported\n",
+            ),
+        };
+        let _ = stream.write_all(&reply);
+        let _ = stream.shutdown(std::net::Shutdown::Both);
     }
 }
 
@@ -858,6 +1011,10 @@ mod tests {
                 assert_eq!(lanes.len(), crate::serve::Priority::LEVELS)
             }
             other => panic!("queue_lanes must be a per-priority array, got {other:?}"),
+        }
+        match m.get("tenants") {
+            Some(Json::Obj(t)) => assert!(t.is_empty(), "no tenanted traffic yet"),
+            other => panic!("tenants must be an object, got {other:?}"),
         }
         let mut g = BTreeMap::new();
         FrontCore::greeting_fields(&session, &mut g);

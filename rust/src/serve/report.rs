@@ -17,11 +17,61 @@
 use std::collections::BTreeMap;
 
 use crate::util::bench::Table;
+use crate::util::json::Json;
 use crate::util::stats::percentile;
 
 use super::job::{FitResponse, JobStatus};
 use super::queue::QueueStats;
 use super::worker::WorkerStats;
+
+/// Streaming per-tenant accounting (PROTOCOL.md §6, the `stats` reply's
+/// `tenants` object). The response router folds every response whose
+/// request carried a non-empty `tenant` into one of these; the cluster
+/// front keeps the same table over delivered responses. Purely
+/// observational — tenancy never affects scheduling or results.
+#[derive(Clone, Debug, Default)]
+pub struct TenantAcc {
+    /// Responses delivered with `status: "ok"`.
+    pub answered: u64,
+    /// Responses delivered with `status: "shed"` or `"failed"`.
+    pub shed: u64,
+    /// Tenant-observed latency samples (queue + service), completed jobs.
+    pub latencies_ms: Vec<f64>,
+}
+
+impl TenantAcc {
+    pub fn observe(&mut self, resp: &FitResponse) {
+        match resp.status {
+            JobStatus::Ok => {
+                self.answered += 1;
+                self.latencies_ms.push(resp.latency_seconds() * 1e3);
+            }
+            JobStatus::Shed | JobStatus::Failed => self.shed += 1,
+        }
+    }
+
+    /// The tenant's `stats`-reply entry: counts plus nearest-rank
+    /// percentiles (0.0, never NaN, when no job completed).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("answered".into(), Json::Num(self.answered as f64));
+        m.insert("shed".into(), Json::Num(self.shed as f64));
+        let (p50, p95) = if self.latencies_ms.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(&self.latencies_ms, 50.0), percentile(&self.latencies_ms, 95.0))
+        };
+        m.insert("p50_ms".into(), Json::Num(p50));
+        m.insert("p95_ms".into(), Json::Num(p95));
+        Json::Obj(m)
+    }
+}
+
+/// Render a tenant table as the `stats` reply's `tenants` object —
+/// `{}` when no tenanted job has been seen.
+pub fn tenants_json(tenants: &BTreeMap<String, TenantAcc>) -> Json {
+    Json::Obj(tenants.iter().map(|(t, acc)| (t.clone(), acc.to_json())).collect())
+}
 
 /// Engine-time accounting for one backend, summed over completed jobs
 /// (the serve-level rollup of `coordinator::telemetry::RunReport`).
@@ -352,6 +402,7 @@ mod tests {
                 ..Default::default()
             }),
             trace_id: String::new(),
+            tenant: String::new(),
         }
     }
 
@@ -485,6 +536,28 @@ mod tests {
         assert_eq!(native.jobs, 3, "per-backend rollups merge by name");
         assert_eq!(native.dist_comps, 2400, "work counters merge too");
         assert!(a.per_backend.iter().any(|u| u.backend == "fpga-sim"));
+    }
+
+    #[test]
+    fn tenant_accounting_rolls_up_latency_and_sheds() {
+        let mut by_tenant: BTreeMap<String, TenantAcc> = BTreeMap::new();
+        let mut ok = ok_response(1, "native", 0.010, 0.090);
+        ok.tenant = "acme".into();
+        by_tenant.entry(ok.tenant.clone()).or_default().observe(&ok);
+        let mut shed = FitResponse::shed(2, "queue full", 0.001);
+        shed.tenant = "acme".into();
+        by_tenant.entry(shed.tenant.clone()).or_default().observe(&shed);
+        let j = tenants_json(&by_tenant);
+        let acme = j.get("acme").unwrap();
+        assert_eq!(acme.get("answered").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(acme.get("shed").unwrap().as_usize().unwrap(), 1);
+        assert!((acme.get("p50_ms").unwrap().as_f64().unwrap() - 100.0).abs() < 1e-9);
+        assert!((acme.get("p95_ms").unwrap().as_f64().unwrap() - 100.0).abs() < 1e-9);
+        // A tenant with only sheds reports 0.0 percentiles, never NaN.
+        let lone = TenantAcc { shed: 3, ..Default::default() };
+        assert_eq!(lone.to_json().get("p50_ms").unwrap().as_f64().unwrap(), 0.0);
+        // No tenanted traffic at all → an empty object.
+        assert!(tenants_json(&BTreeMap::new()).get("acme").is_err());
     }
 
     #[test]

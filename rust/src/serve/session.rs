@@ -39,7 +39,7 @@
 //! println!("{}", session.shutdown().render());
 //! ```
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -50,12 +50,13 @@ use crate::error::{Error, Result};
 use crate::kmeans::reduce::{matrix_from_hex, matrix_to_hex, u32s_to_hex};
 use crate::kmeans::Algorithm;
 use crate::obs::metrics::names;
-use crate::obs::{mint_trace_id, Counter, Histogram, Registry, SpanEvent, TraceRing};
+use crate::obs::profile::Phase;
+use crate::obs::{mint_trace_id, Counter, Registry, SpanEvent, TraceRing};
 use crate::util::json::Json;
 
-use super::job::{FitRequest, FitResponse};
+use super::job::{FitRequest, FitResponse, JobStatus};
 use super::queue::{QueueStats, SharedQueue, Submission};
-use super::report::{ResponseAccumulator, ServeReport};
+use super::report::{ResponseAccumulator, ServeReport, TenantAcc};
 use super::worker::{self, WorkerStats};
 use super::ServeConfig;
 
@@ -64,6 +65,9 @@ struct Route {
     /// The id the submitter chose (restored onto the response).
     client_id: u64,
     reply: mpsc::Sender<FitResponse>,
+    /// The request's tenant label (restored onto the response — workers
+    /// never see tenants, exactly like client ids).
+    tenant: String,
 }
 
 /// A running serving pool: admission queue + sharded workers + response
@@ -93,6 +97,9 @@ pub struct ServeSession {
     registry: Arc<Registry>,
     /// Per-session trace span ring (PROTOCOL.md §11).
     ring: Arc<TraceRing>,
+    /// Per-tenant accounting table, fed by the router as responses pass
+    /// through (the `tenants` object of the `stats` reply, PROTOCOL.md §6).
+    tenants: Arc<Mutex<BTreeMap<String, TenantAcc>>>,
 }
 
 impl ServeSession {
@@ -114,13 +121,15 @@ impl ServeSession {
                 std::thread::spawn(move || worker::run_worker(w, &cfg, &queue, &tx, &ring))
             })
             .collect();
+        let tenants: Arc<Mutex<BTreeMap<String, TenantAcc>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
         let router = {
             let routes = Arc::clone(&routes);
             let ring = Arc::clone(&ring);
-            let queue_wait = registry.histogram(names::SERVE_QUEUE_WAIT_MS);
-            let latency = registry.histogram(names::SERVE_LATENCY_MS);
+            let registry = Arc::clone(&registry);
+            let tenants = Arc::clone(&tenants);
             std::thread::spawn(move || {
-                route_responses(rx, &routes, &ring, &queue_wait, &latency)
+                route_responses(rx, &routes, &ring, &registry, &tenants)
             })
         };
         Ok(ServeSession {
@@ -135,6 +144,7 @@ impl ServeSession {
             started: Instant::now(),
             registry,
             ring,
+            tenants,
         })
     }
 
@@ -192,6 +202,19 @@ impl ServeSession {
         self.ring.drain_json()
     }
 
+    /// Non-destructive snapshot of the trace ring — the `{"op":"trace",
+    /// "peek":true}` form (PROTOCOL.md §11). Dashboards poll with this so
+    /// they never race a log shipper for the exactly-once drain.
+    pub fn peek_trace(&self) -> Json {
+        self.ring.peek_json()
+    }
+
+    /// Per-tenant rollups (answered / shed / p50 / p95) for the `tenants`
+    /// object of the `stats` reply (PROTOCOL.md §6).
+    pub fn tenants_json(&self) -> Json {
+        super::report::tenants_json(&self.tenants.lock().expect("tenant table poisoned"))
+    }
+
     /// Live snapshot of the admission queue's counters (the `stats`
     /// control frame surfaces this on the wire — PROTOCOL.md §6).
     pub fn queue_stats(&self) -> QueueStats {
@@ -217,10 +240,10 @@ impl ServeSession {
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let client_id = req.id;
         self.submitted.inc();
-        self.routes
-            .lock()
-            .expect("route map poisoned")
-            .insert(ticket, Route { client_id, reply: reply.clone() });
+        self.routes.lock().expect("route map poisoned").insert(
+            ticket,
+            Route { client_id, reply: reply.clone(), tenant: req.tenant.clone() },
+        );
         let mut req = req;
         req.id = ticket;
         // Every admitted job runs under a trace id (PROTOCOL.md §11): the
@@ -301,23 +324,36 @@ impl Drop for ServeSession {
     }
 }
 
-/// Router main loop: restore client ids, deliver, accumulate. Responses
-/// whose submitter has gone (a disconnected socket client) are counted,
-/// not delivered — the job's engine time was already spent. Every
-/// response also feeds the latency histograms and closes its trace with a
+/// Router main loop: restore client ids and tenants, deliver, accumulate.
+/// Responses whose submitter has gone (a disconnected socket client) are
+/// counted, not delivered — the job's engine time was already spent.
+/// Every response also feeds the latency histograms (plus tenant-labeled
+/// and phase-labeled series when applicable) and closes its trace with a
 /// `reply` span (PROTOCOL.md §11).
 fn route_responses(
     rx: mpsc::Receiver<FitResponse>,
     routes: &Mutex<HashMap<u64, Route>>,
     ring: &TraceRing,
-    queue_wait_ms: &Histogram,
-    latency_ms: &Histogram,
+    registry: &Registry,
+    tenants: &Mutex<BTreeMap<String, TenantAcc>>,
 ) -> ResponseAccumulator {
+    let queue_wait_ms = registry.histogram(names::SERVE_QUEUE_WAIT_MS);
+    let latency_ms = registry.histogram(names::SERVE_LATENCY_MS);
     let mut acc = ResponseAccumulator::default();
     for mut resp in rx {
         acc.observe(&resp);
         queue_wait_ms.record_ms(resp.queue_seconds * 1e3);
         latency_ms.record_ms(resp.latency_seconds() * 1e3);
+        // Per-phase solver timings → `fit.phase_ms{phase=…}`. Present only
+        // on runs with profiling enabled, so this path costs nothing when
+        // the timers are off.
+        if let Some(p) = resp.summary.as_ref().and_then(|s| s.phases) {
+            for ph in Phase::ALL {
+                registry
+                    .histogram_with(names::FIT_PHASE_MS, &[("phase", ph.name())])
+                    .record_ms(p.get(ph));
+            }
+        }
         let route = routes.lock().expect("route map poisoned").remove(&resp.id);
         if !resp.trace_id.is_empty() {
             ring.push(
@@ -328,8 +364,29 @@ fn route_responses(
             );
         }
         match route {
-            Some(Route { client_id, reply }) => {
+            Some(Route { client_id, reply, tenant }) => {
                 resp.id = client_id;
+                resp.tenant = tenant;
+                if !resp.tenant.is_empty() {
+                    let t = resp.tenant.as_str();
+                    registry
+                        .histogram_with(names::SERVE_LATENCY_MS, &[("tenant", t)])
+                        .record_ms(resp.latency_seconds() * 1e3);
+                    if resp.status == JobStatus::Shed {
+                        let name = if resp.detail.contains("deadline") {
+                            names::SERVE_QUEUE_SHED_DEADLINE
+                        } else {
+                            names::SERVE_QUEUE_SHED_FULL
+                        };
+                        registry.counter_with(name, &[("tenant", t)]).inc();
+                    }
+                    tenants
+                        .lock()
+                        .expect("tenant table poisoned")
+                        .entry(resp.tenant.clone())
+                        .or_default()
+                        .observe(&resp);
+                }
                 if reply.send(resp).is_err() {
                     acc.count_dropped_reply();
                 }
@@ -418,7 +475,7 @@ impl PartialSession {
             let m = matrix_from_hex(&history[entry * chunk..(entry + 1) * chunk], st.k(), st.d())?;
             st.apply_sync(&m)?;
         }
-        let reply = partial_reply(id, &st, true);
+        let reply = partial_reply(id, &mut st, true);
         self.fits.insert(id, st);
         Ok(reply)
     }
@@ -468,7 +525,7 @@ impl PartialSession {
 
 /// Build a `partial` reply frame (PROTOCOL.md §10) for the fit's current
 /// epoch. `include_init` is set only when answering `partial_fit`.
-fn partial_reply(id: u64, st: &PartialFitState, include_init: bool) -> Json {
+fn partial_reply(id: u64, st: &mut PartialFitState, include_init: bool) -> Json {
     let acc = st.partial();
     let mut m = std::collections::BTreeMap::new();
     m.insert("op".into(), Json::Str("partial".into()));
@@ -632,6 +689,60 @@ mod tests {
         }
         // Draining is destructive; a fresh drain is empty.
         assert!(session.drain_trace().get("events").unwrap().as_arr().unwrap().is_empty());
+        session.shutdown();
+    }
+
+    #[test]
+    fn tenanted_jobs_roll_up_into_labeled_series_and_the_tenant_table() {
+        let session = ServeSession::start(ServeConfig { workers: 1, ..Default::default() })
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let mut tenanted = job(9, 5);
+        tenanted.tenant = "acme".into();
+        session.submit(tenanted, &tx);
+        session.submit(job(10, 6), &tx); // anonymous traffic stays unlabeled
+        let mut by_id = std::collections::HashMap::new();
+        for _ in 0..2 {
+            let r = rx.recv().unwrap();
+            by_id.insert(r.id, r);
+        }
+        assert_eq!(by_id[&9].status, JobStatus::Ok, "{}", by_id[&9].detail);
+        assert_eq!(by_id[&9].tenant, "acme", "the router restores the tenant label");
+        assert!(by_id[&10].tenant.is_empty());
+
+        let t = session.tenants_json();
+        let acme = t.get("acme").unwrap();
+        assert_eq!(acme.get("answered").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(acme.get("shed").unwrap().as_usize().unwrap(), 0);
+        assert!(acme.get("p95_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+        let m = session.metrics();
+        let hists = m.get("histograms").unwrap();
+        let labeled = hists.get("serve.latency_ms{tenant=\"acme\"}").unwrap();
+        assert_eq!(labeled.get("count").unwrap().as_usize().unwrap(), 1);
+        // The unlabeled series counts ALL traffic, tenanted or not.
+        let total = hists.get("serve.latency_ms").unwrap();
+        assert_eq!(total.get("count").unwrap().as_usize().unwrap(), 2);
+        session.shutdown();
+    }
+
+    #[test]
+    fn peeking_the_trace_ring_is_not_destructive() {
+        let session = ServeSession::start(ServeConfig { workers: 1, ..Default::default() })
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        session.submit(job(1, 3), &tx);
+        rx.recv().unwrap();
+        let peeked = session.peek_trace();
+        let n = peeked.get("events").unwrap().as_arr().unwrap().len();
+        assert!(n >= 2, "admit + reply at minimum, got {n}");
+        // Peek again: same events still there. Then drain: ring empties.
+        assert_eq!(
+            session.peek_trace().get("events").unwrap().as_arr().unwrap().len(),
+            n
+        );
+        assert_eq!(session.drain_trace().get("events").unwrap().as_arr().unwrap().len(), n);
+        assert!(session.peek_trace().get("events").unwrap().as_arr().unwrap().is_empty());
         session.shutdown();
     }
 

@@ -218,6 +218,82 @@ fn two_remote_shard_cluster_matches_single_daemon_and_direct_runs() {
 }
 
 #[test]
+fn front_scrape_merges_every_shard_registry_labeled_by_shard() {
+    // PROTOCOL.md §11 fleet aggregation: one `GET /metrics` on the
+    // front's scrape endpoint answers Prometheus text 0.0.4 holding the
+    // front's own registry (`shard="front"`) *and* every live shard's
+    // registry (`shard="0"`, `shard="1"`), scraped over the job links.
+    use std::io::{Read, Write};
+    let a = FakeShard::start(vec![]);
+    let b = FakeShard::start(vec![]);
+    let cfg = ClusterConfig {
+        remote_shards: vec![a.addr(), b.addr()],
+        reconnect: fast_reconnect(),
+        health_timeout: Duration::from_secs(30),
+        serve: ServeConfig { workers: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let cluster = Cluster::start(
+        "127.0.0.1:0",
+        NetConfig { metrics_listen: Some("127.0.0.1:0".into()), ..Default::default() },
+        cfg,
+    )
+    .expect("remote cluster start");
+    let addr = cluster.local_addr();
+    let maddr = cluster.metrics_addr().expect("front scrape endpoint bound");
+    let handle = cluster.handle();
+    let thread = std::thread::spawn(move || cluster.run().expect("cluster run"));
+
+    // Run real traffic so shard registries carry answered-job series.
+    let jobs = vec![job(1, "blobs", 100, 3, 41), job(2, "kegg", 102, 4, 43)];
+    let mut cc = connect(&addr);
+    for j in &jobs {
+        cc.submit(j).unwrap();
+    }
+    let replies = collect_by_id(&mut cc, jobs.len());
+    assert_all_ok_and_bit_identical(&jobs, &replies);
+
+    let mut s = std::net::TcpStream::connect(&maddr).expect("connect scrape");
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n").expect("write scrape");
+    let mut scrape = String::new();
+    s.read_to_string(&mut scrape).expect("read scrape");
+    assert!(scrape.starts_with("HTTP/1.1 200 OK\r\n"), "scrape status:\n{scrape}");
+    assert!(
+        scrape.contains("Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n"),
+        "scrape content type:\n{scrape}"
+    );
+    let body = scrape.split("\r\n\r\n").nth(1).expect("scrape body");
+    // The front's own series, relabeled as the "front" shard.
+    assert!(
+        body.contains("cluster_jobs_submitted{shard=\"front\"} 2"),
+        "front series missing:\n{body}"
+    );
+    // Every live shard's registry, labeled by its index: the two jobs
+    // land somewhere, but both shards report their submitted counter
+    // (an idle shard's counters exist at zero).
+    for shard in ["0", "1"] {
+        assert!(
+            body.contains(&format!("serve_jobs_submitted{{shard=\"{shard}\"}}")),
+            "shard {shard} series missing:\n{body}"
+        );
+    }
+    // No sample line escapes the per-shard labeling: every non-comment
+    // line in a fleet scrape names its origin.
+    for line in body.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        assert!(line.contains("shard=\""), "unlabeled fleet series: {line}");
+    }
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.completed, jobs.len() as u64);
+    assert_eq!(
+        a.answered() + b.answered(),
+        jobs.len() as u64,
+        "every job ran on exactly one remote"
+    );
+}
+
+#[test]
 fn client_trace_id_survives_the_remote_round_trip_byte_identically() {
     // PROTOCOL.md §11: a client-supplied `trace_id` rides the forwarded
     // frame to the remote shard, comes back on the shard's reply, and is

@@ -1,0 +1,65 @@
+//! The non-perturbation contract, held empirically (DESIGN.md §2,
+//! `make profile-test`): a fit with per-phase profiling on is
+//! bit-identical — assignments, centroid bits, exact inertia, §8 FNV
+//! fingerprint — to the same fit with it off, across all four
+//! algorithms. Profiling is pure annotation: `Some(PhaseTotals)` on,
+//! `None` off, and nothing else about the result may move.
+//!
+//! Everything lives in ONE `#[test]` fn on purpose: `profile::set_enabled`
+//! is process-global and the test harness runs `#[test]` fns on parallel
+//! threads — two fns toggling the flag would race each other.
+
+use kpynq::data::synth;
+use kpynq::kmeans::{self, Algorithm, KMeansConfig};
+use kpynq::obs::profile;
+use kpynq::serve::job::assignments_checksum;
+
+#[test]
+fn profiling_is_provably_non_perturbing_across_all_four_algorithms() {
+    let ds = synth::blobs(2_000, 16, 4, 99);
+    let cfg = KMeansConfig { k: 5, seed: 17, max_iters: 40, ..Default::default() };
+    for algo in [Algorithm::Lloyd, Algorithm::Hamerly, Algorithm::Elkan, Algorithm::Yinyang] {
+        profile::set_enabled(false);
+        let off = kmeans::fit(algo, &ds, &cfg).expect("fit with profiling off");
+        profile::set_enabled(true);
+        let on = kmeans::fit(algo, &ds, &cfg).expect("fit with profiling on");
+        profile::set_enabled(false);
+
+        // The only permitted difference: totals exist exactly when the
+        // timer was on.
+        assert_eq!(
+            off.stats.phases, None,
+            "{}: a profiling-off fit must carry no phase totals",
+            algo.name()
+        );
+        let phases = on
+            .stats
+            .phases
+            .unwrap_or_else(|| panic!("{}: a profiling-on fit must carry totals", algo.name()));
+        assert!(
+            phases.total_ms() > 0.0,
+            "{}: a 40-iteration fit attributes some wall time",
+            algo.name()
+        );
+
+        // Bit-for-bit identity of everything that matters.
+        assert_eq!(on.assignments, off.assignments, "{}: assignments diverge", algo.name());
+        assert_eq!(
+            assignments_checksum(&on.assignments),
+            assignments_checksum(&off.assignments),
+            "{}: §8 fingerprints diverge",
+            algo.name()
+        );
+        let off_bits: Vec<u64> = off.centroids.as_slice().iter().map(|v| v.to_bits()).collect();
+        let on_bits: Vec<u64> = on.centroids.as_slice().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(on_bits, off_bits, "{}: centroid bits diverge", algo.name());
+        assert_eq!(
+            on.inertia.to_bits(),
+            off.inertia.to_bits(),
+            "{}: inertia bits diverge",
+            algo.name()
+        );
+        assert_eq!(on.iterations, off.iterations, "{}: iteration counts diverge", algo.name());
+        assert_eq!(on.converged, off.converged, "{}: convergence flags diverge", algo.name());
+    }
+}

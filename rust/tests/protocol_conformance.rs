@@ -112,6 +112,9 @@ enum Expect {
     TraceDrain,
     /// A `{"op":"metrics"}` snapshot carrying all three sections (§6).
     MetricsSnapshot,
+    /// A `{"op":"metrics","format":"prometheus"}` reply: the format
+    /// echoed and a text-0.0.4 `body` containing the needle (§11).
+    PrometheusBody(&'static str),
     /// An `ok` reply echoing the client's `trace_id` byte-identically (§4).
     OkJobWithTraceId { id: u64, trace_id: &'static str },
     /// A full §4 `ok` response: every always-present scalar, the
@@ -187,6 +190,7 @@ fn vectors() -> Vec<Vector> {
                 "pending_here",
                 "uptime_ms",
                 "queue_lanes",
+                "tenants",
             ])],
         },
         Vector {
@@ -195,9 +199,29 @@ fn vectors() -> Vec<Vector> {
             expect: vec![Expect::TraceDrain],
         },
         Vector {
+            name: "trace peek:true answers the same shape without draining (§11)",
+            send: vec![r#"{"op":"trace","peek":true}"#.into(), r#"{"op":"trace","peek":true}"#.into()],
+            expect: vec![Expect::TraceDrain, Expect::TraceDrain],
+        },
+        Vector {
             name: "metrics snapshots counters/gauges/histograms (§6)",
             send: vec![r#"{"op":"metrics"}"#.into()],
             expect: vec![Expect::MetricsSnapshot],
+        },
+        Vector {
+            name: "metrics format=prometheus answers a text-0.0.4 body (§11)",
+            send: vec![ok_job_line(41), r#"{"op":"metrics","format":"prometheus"}"#.into()],
+            expect: vec![Expect::OkJob(41), Expect::PrometheusBody("serve_jobs_submitted")],
+        },
+        Vector {
+            name: "an unknown metrics format draws a §5 error (§11)",
+            send: vec![r#"{"op":"metrics","format":"xml"}"#.into()],
+            expect: vec![Expect::ErrorContains("unknown metrics format")],
+        },
+        Vector {
+            name: "a non-string metrics format draws a §5 error (§11)",
+            send: vec![r#"{"op":"metrics","format":7}"#.into()],
+            expect: vec![Expect::ErrorContains("must be a string")],
         },
         Vector {
             name: "a client trace_id is echoed on the reply byte-identically (§3, §4)",
@@ -422,6 +446,20 @@ fn check(expect: &Expect, reply: Option<Json>, server: &str, vector: &str) {
             for key in ["counters", "gauges", "histograms"] {
                 assert!(j.get(key).is_ok(), "{ctx}: metrics section '{key}' missing");
             }
+        }
+        Expect::PrometheusBody(needle) => {
+            assert_eq!(j.get("op").unwrap().as_str().unwrap(), "metrics", "{ctx}: {j:?}");
+            assert_eq!(
+                j.get("format").unwrap().as_str().unwrap(),
+                "prometheus",
+                "{ctx}: the reply echoes the requested format (§11)"
+            );
+            let body = j.get("body").unwrap().as_str().unwrap().to_string();
+            assert!(body.contains(needle), "{ctx}: body lacks '{needle}':\n{body}");
+            assert!(
+                body.lines().filter(|l| !l.starts_with('#') && !l.is_empty()).count() > 0,
+                "{ctx}: body carries at least one sample line"
+            );
         }
         Expect::OkJobWithTraceId { id, trace_id } => {
             assert_eq!(j.get("id").unwrap().as_usize().unwrap() as u64, *id, "{ctx}");

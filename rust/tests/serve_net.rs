@@ -491,3 +491,63 @@ fn served_deadline_and_shed_semantics_hold_over_the_wire() {
     let report = thread.join().unwrap();
     assert_eq!(report.shed, 1);
 }
+
+#[test]
+fn http_metrics_sidecar_serves_a_prometheus_scrape() {
+    // `--metrics-listen` (PROTOCOL.md §11): a plain-HTTP GET /metrics on
+    // a separate listener answers text format 0.0.4 rendered from the
+    // live registry — including tenant-labeled series.
+    use std::io::Read;
+    let daemon = Daemon::bind(
+        "127.0.0.1:0",
+        NetConfig { metrics_listen: Some("127.0.0.1:0".into()), ..Default::default() },
+        ServeConfig { workers: 1, ..Default::default() },
+    )
+    .expect("bind loopback");
+    let addr = daemon.local_addr();
+    let maddr = daemon.metrics_addr().expect("metrics listener binds eagerly");
+    let thread = std::thread::spawn(move || daemon.run().expect("daemon run"));
+
+    // One tenanted job, so the scrape carries real labeled series. The
+    // registry records land before the reply is routed back, so reading
+    // the reply orders the scrape after them.
+    let mut c = Client::connect(&addr);
+    c.expect_greeting();
+    c.send(
+        r#"{"id": 1, "dataset": "blobs", "data_seed": 3, "max_points": 400, "k": 3, "seed": 5, "tenant": "acme"}"#,
+    );
+    let r = c.read_json();
+    assert_eq!(r.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(r.get("tenant").unwrap().as_str().unwrap(), "acme");
+
+    let scrape = |method: &str, path: &str| -> String {
+        let mut s = TcpStream::connect(&maddr).expect("connect scrape");
+        s.write_all(format!("{method} {path} HTTP/1.1\r\nHost: test\r\n\r\n").as_bytes())
+            .expect("write scrape");
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).expect("read scrape");
+        buf
+    };
+    let ok = scrape("GET", "/metrics");
+    assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "scrape status:\n{ok}");
+    assert!(
+        ok.contains("Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n"),
+        "scrape content type:\n{ok}"
+    );
+    let body = ok.split("\r\n\r\n").nth(1).expect("scrape body");
+    for name in ["serve_jobs_submitted 1", "serve_queue_depth", "serve_latency_ms_count"] {
+        assert!(body.contains(name), "scrape lacks '{name}':\n{body}");
+    }
+    assert!(
+        body.contains("serve_latency_ms_count{tenant=\"acme\"} 1"),
+        "tenant-labeled series missing:\n{body}"
+    );
+
+    // The endpoint serves exactly one read-only path.
+    assert!(scrape("GET", "/other").starts_with("HTTP/1.1 404 "), "404 on unknown paths");
+    assert!(scrape("POST", "/metrics").starts_with("HTTP/1.1 405 "), "405 on non-GET");
+
+    c.send(r#"{"op":"shutdown"}"#);
+    let report = thread.join().unwrap();
+    assert_eq!(report.completed, 1);
+}

@@ -58,6 +58,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use kpynq::coordinator::{KpynqSystem, SystemConfig};
+use kpynq::obs::expo::render_prometheus;
+use kpynq::obs::metrics::{names, Registry};
 use kpynq::serve::codec::{write_line, LineEvent, LineReader, MAX_LINE_BYTES};
 use kpynq::serve::job::{assignments_checksum, FitRequest};
 use kpynq::serve::net::PROTO_VERSION;
@@ -116,6 +118,11 @@ struct SharedState {
     submitted: AtomicU64,
     /// Job replies fully written (ok + failed), across all connections.
     answered: AtomicU64,
+    /// A real metrics registry under the canonical `names::*` series, so
+    /// `{"op":"metrics"}` (both formats) answers with genuine data — a
+    /// cluster front scraping this double gets mergeable shard series,
+    /// not a hollow mock (PROTOCOL.md §11).
+    registry: Registry,
 }
 
 /// A running fake shard: one listener, real protocol, scripted faults.
@@ -143,7 +150,12 @@ impl FakeShard {
             active_conns: AtomicUsize::new(0),
             submitted: AtomicU64::new(0),
             answered: AtomicU64::new(0),
+            registry: Registry::new(),
         });
+        // Like the real session, the canonical series exist from start —
+        // an idle shard scrapes as zeros, not as an empty body.
+        shared.registry.counter(names::SERVE_JOBS_SUBMITTED);
+        shared.registry.histogram(names::SERVE_LATENCY_MS);
         let accept_shared = Arc::clone(&shared);
         let accept_thread = std::thread::spawn(move || {
             while !accept_shared.stop.load(Ordering::SeqCst) {
@@ -391,6 +403,7 @@ fn serve_conn(stream: TcpStream, fault: Fault, shared: &SharedState) {
                 match FitRequest::from_json(&parsed) {
                     Ok(req) => {
                         shared.submitted.fetch_add(1, Ordering::SeqCst);
+                        shared.registry.counter(names::SERVE_JOBS_SUBMITTED).inc();
                         if !answer_job(&req, fault, &mut answered_here, &out, shared) {
                             return; // the fault severed the connection
                         }
@@ -463,12 +476,17 @@ fn control_frame(
                         "queue_lanes",
                         Json::Arr(vec![Json::Num(0.0), Json::Num(0.0), Json::Num(0.0)]),
                     ),
+                    // The fake keeps no per-tenant table — an honest
+                    // empty object (§6: `tenants` is always present).
+                    ("tenants", Json::Obj(BTreeMap::new())),
                 ]),
             );
             true
         }
         "trace" => {
             // The fake keeps no span ring — an honest empty drain (§11).
+            // `peek:true` answers identically: on an empty ring the
+            // non-destructive read and the drain are indistinguishable.
             let _ = write_line(
                 out,
                 &op_frame(&[
@@ -480,16 +498,49 @@ fn control_frame(
             true
         }
         "metrics" => {
-            // Likewise no registry: the three sections, all empty (§6).
-            let _ = write_line(
-                out,
-                &op_frame(&[
-                    ("op", Json::Str("metrics".into())),
-                    ("counters", Json::Obj(BTreeMap::new())),
-                    ("gauges", Json::Obj(BTreeMap::new())),
-                    ("histograms", Json::Obj(BTreeMap::new())),
-                ]),
-            );
+            // Real registry, both formats — mirrors the daemon's §6/§11
+            // dispatch (including its error strings) so the conformance
+            // suite can hold the two to the same wire shape.
+            let snapshot = shared.registry.snapshot();
+            match map.get("format").map(|v| v.as_str()) {
+                None | Some(Ok("json")) => {
+                    let section = |key: &str| {
+                        snapshot.get(key).cloned().unwrap_or_else(|_| Json::Obj(BTreeMap::new()))
+                    };
+                    let _ = write_line(
+                        out,
+                        &op_frame(&[
+                            ("op", Json::Str("metrics".into())),
+                            ("counters", section("counters")),
+                            ("gauges", section("gauges")),
+                            ("histograms", section("histograms")),
+                        ]),
+                    );
+                }
+                Some(Ok("prometheus")) => {
+                    let _ = write_line(
+                        out,
+                        &op_frame(&[
+                            ("op", Json::Str("metrics".into())),
+                            ("format", Json::Str("prometheus".into())),
+                            ("body", Json::Str(render_prometheus(&snapshot))),
+                        ]),
+                    );
+                }
+                Some(Ok(other)) => {
+                    let _ = write_line(
+                        out,
+                        &error_reply(
+                            lineno,
+                            &format!("unknown metrics format '{other}' (json, prometheus)"),
+                        ),
+                    );
+                }
+                Some(Err(_)) => {
+                    let _ =
+                        write_line(out, &error_reply(lineno, "metrics 'format' must be a string"));
+                }
+            }
             true
         }
         "cancel" => {
@@ -557,6 +608,20 @@ fn answer_job(
     out: &Mutex<TcpStream>,
     shared: &SharedState,
 ) -> bool {
+    let t0 = std::time::Instant::now();
+    // Real series for every answered job: the unlabeled latency histogram
+    // plus, for tenanted jobs, the same series labeled by tenant — so a
+    // scrape of this double exercises the documented §11 label surface.
+    let record = |shared: &SharedState| {
+        let el = t0.elapsed().as_secs_f64() * 1e3;
+        shared.registry.histogram(names::SERVE_LATENCY_MS).record_ms(el);
+        if !req.tenant.is_empty() {
+            shared
+                .registry
+                .histogram_with(names::SERVE_LATENCY_MS, &[("tenant", &req.tenant)])
+                .record_ms(el);
+        }
+    };
     match fault {
         Fault::DropMidReply { after } if *answered_here == after => {
             let line = job_reply_json(req).to_string();
@@ -588,6 +653,7 @@ fn answer_job(
             if ok {
                 *answered_here += 1;
                 shared.answered.fetch_add(1, Ordering::SeqCst);
+                record(shared);
             }
             ok
         }
@@ -604,6 +670,7 @@ fn answer_job(
             if ok {
                 *answered_here += 1;
                 shared.answered.fetch_add(1, Ordering::SeqCst);
+                record(shared);
             }
             ok
         }
@@ -612,6 +679,7 @@ fn answer_job(
             if ok {
                 *answered_here += 1;
                 shared.answered.fetch_add(1, Ordering::SeqCst);
+                record(shared);
             }
             ok
         }

@@ -91,7 +91,7 @@ if [ -z "$req_ops" ]; then
 fi
 # Reply/notice ops and stats keys the cluster layer (and any other wire
 # consumer) depends on; extend this list when the control surface grows.
-emitted="pong cancelled shutdown-ack idle-timeout queue_depth shards shards_alive partial partial_done uptime_ms queue_lanes"
+emitted="pong cancelled shutdown-ack idle-timeout queue_depth shards shards_alive partial partial_done uptime_ms queue_lanes peek format body tenants"
 for tok in $req_ops $emitted; do
     # Ops appear JSON-quoted ("ping", inside example frames or tables),
     # stats keys as backticked `queue_depth`.
@@ -133,6 +133,29 @@ fi
 for name in $metric_names; do
     if ! grep -q "\`$name\`" README.md PROTOCOL.md; then
         echo "FAIL: metric name '$name' (obs::metrics::names) is undocumented in README.md/PROTOCOL.md"
+        fail=1
+    fi
+done
+# The label vocabulary is part of the wire contract (series keys and the
+# Prometheus exposition both carry it), so each LABEL_KEYS entry must be
+# backticked in PROTOCOL.md specifically — not just anywhere in the docs.
+label_keys=$(sed -n '/pub const LABEL_KEYS/,/];/p' "$metrics_rs" \
+             | grep -oE '"[a-z_]+"' | tr -d '"' | sort -u)
+if [ -z "$label_keys" ]; then
+    echo "FAIL: could not extract LABEL_KEYS from $metrics_rs (const layout changed?)"
+    fail=1
+fi
+for key in $label_keys; do
+    if ! grep -q "\`$key\`" PROTOCOL.md; then
+        echo "FAIL: metric label key '$key' (obs::metrics::names::LABEL_KEYS) is undocumented in PROTOCOL.md"
+        fail=1
+    fi
+done
+# The scrape surface must be discoverable from the README: the endpoint
+# and the two flags that turn it (and per-phase profiling) on.
+for tok in 'GET /metrics' '--metrics-listen' '--profile'; do
+    if ! grep -qF -e "$tok" README.md; then
+        echo "FAIL: README.md does not mention '$tok' (observability surface undocumented)"
         fail=1
     fi
 done
