@@ -9,7 +9,7 @@ PYTHON      ?= python3
 ARTIFACTS   := artifacts
 PY_SOURCES  := $(wildcard python/compile/*.py python/compile/kernels/*.py)
 
-.PHONY: all build test serve-test serve-net-test cluster-test cluster-remote-test mapreduce-test obs-test profile-test kernel-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
+.PHONY: all build test serve-test serve-net-test cluster-test cluster-remote-test mapreduce-test obs-test profile-test qos-test kernel-test check-docs bench-compile examples doc artifacts artifacts-quick pytest clean
 
 all: build
 
@@ -66,6 +66,20 @@ obs-test:
 # fingerprint — to the same fit with them off, for all four algorithms.
 profile-test:
 	cargo test -q --test profile
+
+# The QoS layer (PROTOCOL.md §7–§8): weighted-fair scheduling, per-tenant
+# quotas and the submission-anchored deadline/queue-wait clocks
+# (serve::queue unit + property tests), the result cache's replay/LRU
+# unit tests, and the end-to-end acceptance — blocked-submitter deadline
+# shed, two-tenant overload fairness, cache replays proven byte-identical
+# over a daemon socket and through a 2-shard cluster front.
+qos-test:
+	cargo test -q --lib serve::queue
+	cargo test -q --lib serve::cache
+	cargo test -q --test serve_integration a_blocked_submitter_sheds_on_deadline_instead_of_waiting_forever
+	cargo test -q --test serve_integration a_flooding_tenant_is_quota_shed_while_the_light_tenant_completes
+	cargo test -q --test serve_net cache_hits_replay_byte_identical_results_over_the_wire
+	cargo test -q --test cluster duplicate_fits_replay_from_the_front_cache_bit_identically
 
 # The distance micro-kernel's equivalence battery (DESIGN.md §5): kernel
 # vs naive bit-identity across tile-boundary shapes, all four algorithms

@@ -63,10 +63,11 @@ use crate::error::{Error, Result};
 use crate::obs::metrics::{merge_snapshot_labeled, names};
 use crate::obs::profile::Phase;
 use crate::obs::{mint_trace_id, Counter, Histogram, Registry, SpanEvent, TraceRing};
+use crate::serve::cache::{self, ResultCache};
 use crate::serve::job::{FitRequest, FitResponse, FitSummary, JobStatus};
 use crate::serve::net::{advertised_backends, Daemon, DaemonHandle, FrontCore, NetConfig};
 use crate::serve::queue::QueueStats;
-use crate::serve::report::{tenants_json, ResponseAccumulator, TenantAcc};
+use crate::serve::report::{tenants_json, ResponseAccumulator, TenantAcc, OVERFLOW_TENANT};
 use crate::serve::{ServeConfig, ServeReport};
 use crate::util::json::Json;
 
@@ -248,6 +249,9 @@ struct ClusterRoute {
     /// The request's tenant label, restored onto the reply in `deliver`
     /// (shards never see the front's tenant accounting).
     tenant: String,
+    /// The request fingerprint (PROTOCOL.md §8), when cacheable:
+    /// `deliver` stores the finished result under it.
+    fingerprint: Option<u64>,
 }
 
 /// The fan-out/fan-in core behind the cluster's front door — the
@@ -281,8 +285,14 @@ pub(crate) struct ClusterCore {
     ring: Arc<TraceRing>,
     acc: Mutex<ResponseAccumulator>,
     /// Per-tenant accounting table, fed in `deliver` (the `tenants`
-    /// object of the `stats` reply, PROTOCOL.md §6).
+    /// object of the `stats` reply, PROTOCOL.md §6). Capped at
+    /// `max_tracked_tenants`; overflow lands in [`OVERFLOW_TENANT`].
     tenants: Mutex<BTreeMap<String, TenantAcc>>,
+    /// Front-side fingerprint-keyed result cache (PROTOCOL.md §8),
+    /// consulted in `submit` before any shard dispatch — a cache hit
+    /// never crosses a shard link. Works in both fit modes: map-reduce
+    /// replies are bit-identical to solo runs, so they replay the same.
+    cache: Mutex<ResultCache>,
     pending_cancels: Mutex<HashMap<u64, mpsc::Sender<bool>>>,
     /// Outstanding (submitted, unanswered) jobs, bounded by
     /// `admission_cap`: past the cap, `submit` blocks the submitting
@@ -327,6 +337,7 @@ impl ClusterCore {
             cfg.remote_shards.clone()
         };
         let registry = Arc::new(Registry::new());
+        let cache = Mutex::new(ResultCache::new(cfg.serve.cache_capacity, &registry));
         ClusterCore {
             serve: cfg.serve.clone(),
             shard_count: shards,
@@ -343,6 +354,7 @@ impl ClusterCore {
             ring: Arc::new(TraceRing::default()),
             acc: Mutex::new(ResponseAccumulator::default()),
             tenants: Mutex::new(BTreeMap::new()),
+            cache,
             pending_cancels: Mutex::new(HashMap::new()),
             admission: Mutex::new(0),
             admission_free: Condvar::new(),
@@ -391,6 +403,7 @@ impl ClusterCore {
                 report: None,
                 trace_id: String::new(),
                 tenant: String::new(),
+                cached: false,
             },
             Err(e) => FitResponse::failed(ticket, &backend, 0, 0, 0.0, &e),
         };
@@ -451,7 +464,7 @@ impl ClusterCore {
     /// ignored — the ticket's one real answer was already delivered.
     fn deliver(&self, mut resp: FitResponse) {
         let route = self.routes.lock().expect("routes poisoned").remove(&resp.id);
-        if let Some(ClusterRoute { client_id, reply, tenant, .. }) = route {
+        if let Some(ClusterRoute { client_id, reply, tenant, fingerprint, .. }) = route {
             self.acc.lock().expect("accumulator poisoned").observe(&resp);
             self.queue_wait_ms.record_ms(resp.queue_seconds * 1e3);
             self.latency_ms.record_ms(resp.latency_seconds() * 1e3);
@@ -464,9 +477,28 @@ impl ClusterCore {
                         .record_ms(p.get(ph));
                 }
             }
+            // Seed the front's result cache with freshly computed
+            // successes (replayed hits never re-insert — PROTOCOL.md §8).
+            if let Some(fp) = fingerprint {
+                if resp.status == JobStatus::Ok {
+                    self.cache.lock().expect("result cache poisoned").insert(fp, &resp);
+                }
+            }
             resp.tenant = tenant;
             if !resp.tenant.is_empty() {
-                let t = resp.tenant.as_str();
+                // Cardinality cap (PROTOCOL.md §3): same `~other` overflow
+                // rule the single daemon's router applies.
+                let label = {
+                    let table = self.tenants.lock().expect("tenant table poisoned");
+                    if table.contains_key(&resp.tenant)
+                        || table.len() < self.serve.max_tracked_tenants
+                    {
+                        resp.tenant.clone()
+                    } else {
+                        OVERFLOW_TENANT.to_string()
+                    }
+                };
+                let t = label.as_str();
                 self.registry
                     .histogram_with(names::SERVE_LATENCY_MS, &[("tenant", t)])
                     .record_ms(resp.latency_seconds() * 1e3);
@@ -481,7 +513,7 @@ impl ClusterCore {
                 self.tenants
                     .lock()
                     .expect("tenant table poisoned")
-                    .entry(resp.tenant.clone())
+                    .entry(label)
                     .or_default()
                     .observe(&resp);
             }
@@ -672,6 +704,7 @@ impl FrontCore for ClusterCore {
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         self.submitted.inc();
         let client_id = req.id;
+        let fingerprint = cache::fingerprint_of(&req);
         self.routes.lock().expect("routes poisoned").insert(
             ticket,
             ClusterRoute {
@@ -679,6 +712,7 @@ impl FrontCore for ClusterCore {
                 reply: reply.clone(),
                 shard: UNROUTED,
                 tenant: req.tenant.clone(),
+                fingerprint,
             },
         );
         let mut req = req;
@@ -695,6 +729,21 @@ impl FrontCore for ClusterCore {
                 .num("id", client_id as f64)
                 .num("ticket", ticket as f64),
         );
+        // Result cache (PROTOCOL.md §8): a hit replays the finished reply
+        // through `deliver` — same id restoration, accounting and
+        // admission-slot release as a shard-computed response — without
+        // ever crossing a shard link.
+        if let Some(fp) = fingerprint {
+            let hit = self
+                .cache
+                .lock()
+                .expect("result cache poisoned")
+                .lookup(fp, &req);
+            if let Some(resp) = hit {
+                self.deliver(resp);
+                return ticket;
+            }
+        }
         match self.fit_mode {
             FitMode::Request => self.dispatch(ticket, req),
             FitMode::MapReduce => self.dispatch_mapreduce(ticket, req),
@@ -795,6 +844,12 @@ impl FrontCore for ClusterCore {
             }
         }
         merged
+    }
+
+    fn cache_control(&self, clear: bool) -> Json {
+        let mut c = self.cache.lock().expect("result cache poisoned");
+        let cleared = clear.then(|| c.clear());
+        cache::cache_json(c.len(), c.capacity(), cleared)
     }
 }
 

@@ -52,6 +52,18 @@ pub struct RunConfig {
     pub serve_max_batch: usize,
     /// Serving pool: full-queue policy, "block" or "shed".
     pub serve_shed: String,
+    /// Serving pool: per-tenant weighted-fair weights, as raw
+    /// `"tenant=weight"` entries (PROTOCOL.md §7).
+    pub serve_tenant_weights: Vec<String>,
+    /// Serving pool: weight for tenants not listed in `tenant_weights`.
+    pub serve_default_tenant_weight: usize,
+    /// Serving pool: max queued jobs per tenant (0 = no per-tenant quota).
+    pub serve_tenant_queue_cap: usize,
+    /// Serving pool: result-cache entries (0 = caching off, PROTOCOL.md §8).
+    pub serve_cache_capacity: usize,
+    /// Serving pool: distinct tenants tracked before overflow rolls into
+    /// the `~other` bucket (PROTOCOL.md §3).
+    pub serve_max_tracked_tenants: usize,
     /// Daemon listener: `host:port`, `unix:<path>`, or "" for one-shot
     /// stdin mode (`kpynq serve --listen` overrides).
     pub serve_listen: String,
@@ -113,6 +125,11 @@ impl Default for RunConfig {
             serve_queue_capacity: 64,
             serve_max_batch: 8,
             serve_shed: "block".into(),
+            serve_tenant_weights: Vec::new(),
+            serve_default_tenant_weight: 1,
+            serve_tenant_queue_cap: 0,
+            serve_cache_capacity: 64,
+            serve_max_tracked_tenants: 64,
             serve_listen: String::new(),
             serve_max_conns: 32,
             serve_idle_timeout_ms: 0,
@@ -165,6 +182,11 @@ workers = 2              # worker shards (kpynq serve)
 queue_capacity = 64      # bounded admission queue
 max_batch = 8            # micro-batch cap (1 = no coalescing)
 shed = "block"           # block|shed (full-queue policy)
+tenant_weights = []      # weighted-fair scheduling: ["acme=3", "free=1"]
+default_tenant_weight = 1  # weight for tenants not listed above
+tenant_queue_cap = 0     # max queued jobs per tenant (0 = no quota)
+cache_capacity = 64      # result-cache entries (0 = caching off)
+max_tracked_tenants = 64 # distinct tenants tracked before ~other overflow
 
 [serve.net]
 listen = ""              # daemon: "host:port" or "unix:/path.sock"; "" = one-shot stdin mode
@@ -275,6 +297,32 @@ impl RunConfig {
         }
         if let Some(v) = toml::get(&doc, "serve", "shed") {
             cfg.serve_shed = v.as_str()?.to_string();
+        }
+        if let Some(v) = toml::get(&doc, "serve", "tenant_weights") {
+            cfg.serve_tenant_weights = match v {
+                toml::Value::Arr(items) => items
+                    .iter()
+                    .map(|item| Ok(item.as_str()?.to_string()))
+                    .collect::<Result<Vec<String>>>()?,
+                other => {
+                    return Err(Error::Config(format!(
+                        "serve tenant_weights must be an array of \"tenant=weight\" strings, \
+                         got {other:?}"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = toml::get(&doc, "serve", "default_tenant_weight") {
+            cfg.serve_default_tenant_weight = v.as_usize()?;
+        }
+        if let Some(v) = toml::get(&doc, "serve", "tenant_queue_cap") {
+            cfg.serve_tenant_queue_cap = v.as_usize()?;
+        }
+        if let Some(v) = toml::get(&doc, "serve", "cache_capacity") {
+            cfg.serve_cache_capacity = v.as_usize()?;
+        }
+        if let Some(v) = toml::get(&doc, "serve", "max_tracked_tenants") {
+            cfg.serve_max_tracked_tenants = v.as_usize()?;
         }
 
         if let Some(v) = toml::get(&doc, "serve.net", "listen") {
@@ -396,6 +444,11 @@ impl RunConfig {
             queue_capacity: self.serve_queue_capacity,
             max_batch: self.serve_max_batch,
             shed_policy: ShedPolicy::from_name(&self.serve_shed)?,
+            tenant_weights: ServeConfig::parse_tenant_weights(&self.serve_tenant_weights)?,
+            default_tenant_weight: self.serve_default_tenant_weight as u32,
+            tenant_queue_cap: self.serve_tenant_queue_cap,
+            cache_capacity: self.serve_cache_capacity,
+            max_tracked_tenants: self.serve_max_tracked_tenants,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -616,6 +669,35 @@ mod tests {
         assert_eq!(serve.queue_capacity, 16);
         assert_eq!(serve.max_batch, 2);
         assert_eq!(serve.shed_policy, crate::serve::ShedPolicy::ShedArrivals);
+    }
+
+    #[test]
+    fn serve_fairness_and_cache_knobs_parse() {
+        let cfg = RunConfig::from_toml(
+            "[serve]\ntenant_weights = [\"acme=3\", \"free=1\"]\ndefault_tenant_weight = 2\n\
+             tenant_queue_cap = 8\ncache_capacity = 16\nmax_tracked_tenants = 10",
+        )
+        .unwrap();
+        let serve = cfg.serve_config().unwrap();
+        assert_eq!(serve.tenant_weights.get("acme"), Some(&3));
+        assert_eq!(serve.tenant_weights.get("free"), Some(&1));
+        assert_eq!(serve.default_tenant_weight, 2);
+        assert_eq!(serve.tenant_queue_cap, 8);
+        assert_eq!(serve.cache_capacity, 16);
+        assert_eq!(serve.max_tracked_tenants, 10);
+        // Defaults: no weights, no quota, cache on, 64-tenant cardinality.
+        let d = RunConfig::default().serve_config().unwrap();
+        assert!(d.tenant_weights.is_empty());
+        assert_eq!(d.default_tenant_weight, 1);
+        assert_eq!(d.tenant_queue_cap, 0);
+        assert_eq!(d.cache_capacity, 64);
+        // Malformed entries fail loudly at parse time.
+        assert!(RunConfig::from_toml("[serve]\ntenant_weights = [\"acme\"]").is_err());
+        assert!(RunConfig::from_toml("[serve]\ntenant_weights = [\"acme=0\"]").is_err());
+        assert!(RunConfig::from_toml("[serve]\ntenant_weights = [\"two words=1\"]").is_err());
+        assert!(RunConfig::from_toml("[serve]\ntenant_weights = \"acme=1\"").is_err());
+        assert!(RunConfig::from_toml("[serve]\ndefault_tenant_weight = 0").is_err());
+        assert!(RunConfig::from_toml("[serve]\nmax_tracked_tenants = 0").is_err());
     }
 
     #[test]

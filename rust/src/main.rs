@@ -99,6 +99,10 @@ fn print_help() {
          \x20 --queue N        admission queue capacity (default 64)\n\
          \x20 --batch N        micro-batch cap, 1 disables coalescing (default 8)\n\
          \x20 --shed POLICY    block | shed (full-queue policy, default block)\n\
+         \x20 --tenant-weights L  weighted-fair scheduling, e.g. acme=3,free=1\n\
+         \x20                  (unlisted tenants get [serve] default_tenant_weight)\n\
+         \x20 --tenant-cap N   max queued jobs per tenant (default 0 = no quota)\n\
+         \x20 --cache N        result-cache entries (default 64; 0 disables)\n\
          \x20 --out FILE       write NDJSON responses to FILE (default: stdout)\n\
          \x20                  the ServeReport summary always goes to stderr\n\
          \n\
@@ -127,7 +131,8 @@ fn print_help() {
          \x20 --mode MODE           request (default: route each job whole to one shard) or\n\
          \x20                       map-reduce (slice each job's points across all shards;\n\
          \x20                       one fit scales with shard count, results bit-identical)\n\
-         \x20 plus the serve pool flags (--workers/--queue/--batch/--shed, per shard)\n\
+         \x20 plus the serve pool flags (--workers/--queue/--batch/--shed/\n\
+         \x20 --tenant-weights/--tenant-cap, per shard; --cache at the front)\n\
          \x20 and the daemon flags (--max-conns/--idle-timeout-ms/--trace-log/\n\
          \x20 --metrics-listen/--profile, at the front; a front scrape merges every\n\
          \x20 shard's registry, labeled by shard)\n\
@@ -249,6 +254,30 @@ fn render_phases(p: &kpynq::obs::profile::PhaseTotals) -> String {
     s
 }
 
+/// Scheduling/caching knobs shared by `serve` and `cluster`:
+/// `--tenant-weights acme=3,free=1`, `--tenant-cap N`, `--cache N`.
+fn apply_qos_flags(args: &[String], scfg: &mut kpynq::serve::ServeConfig) -> kpynq::Result<()> {
+    if let Some(list) = take_opt(args, "--tenant-weights") {
+        let entries: Vec<String> = list
+            .split(',')
+            .map(|e| e.trim().to_string())
+            .filter(|e| !e.is_empty())
+            .collect();
+        scfg.tenant_weights = kpynq::serve::ServeConfig::parse_tenant_weights(&entries)?;
+    }
+    if let Some(c) = take_opt(args, "--tenant-cap") {
+        scfg.tenant_queue_cap = c
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --tenant-cap '{c}'")))?;
+    }
+    if let Some(c) = take_opt(args, "--cache") {
+        scfg.cache_capacity = c
+            .parse()
+            .map_err(|_| kpynq::Error::Config(format!("bad --cache '{c}'")))?;
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &[String]) -> kpynq::Result<()> {
     use kpynq::serve::{FitRequest, Server, ShedPolicy};
 
@@ -275,6 +304,7 @@ fn cmd_serve(args: &[String]) -> kpynq::Result<()> {
     if let Some(s) = take_opt(args, "--shed") {
         scfg.shed_policy = ShedPolicy::from_name(&s)?;
     }
+    apply_qos_flags(args, &mut scfg)?;
     scfg.validate()?;
     if has_flag(args, "--profile") || cfg.profile {
         obs::profile::set_enabled(true);
@@ -438,6 +468,7 @@ fn cmd_cluster(args: &[String]) -> kpynq::Result<()> {
     if let Some(s) = take_opt(args, "--shed") {
         scfg.shed_policy = ShedPolicy::from_name(&s)?;
     }
+    apply_qos_flags(args, &mut scfg)?;
 
     // The flag-overridden pool shape replaces cluster_config()'s copy;
     // the single ccfg.validate() below covers both it and the cluster

@@ -57,6 +57,12 @@ pub mod names {
     pub const SERVE_QUEUE_WAIT_MS: &str = "serve.queue_wait_ms";
     /// Histogram of tenant-observed latency (queue + service, ms).
     pub const SERVE_LATENCY_MS: &str = "serve.latency_ms";
+    /// Duplicate fits answered from the result cache (PROTOCOL.md §8).
+    pub const SERVE_CACHE_HITS: &str = "serve.cache.hits";
+    /// Cacheable fits that found no cache entry and ran cold.
+    pub const SERVE_CACHE_MISSES: &str = "serve.cache.misses";
+    /// Cache entries evicted by the LRU bound.
+    pub const SERVE_CACHE_EVICTIONS: &str = "serve.cache.evictions";
     /// Jobs accepted by a cluster front.
     pub const CLUSTER_JOBS_SUBMITTED: &str = "cluster.jobs.submitted";
     /// Jobs re-queued off a dead shard for re-dispatch.
@@ -70,8 +76,11 @@ pub mod names {
     pub const FIT_PHASE_MS: &str = "fit.phase_ms";
 
     /// The allowed label keys, in canonical encoding order (PROTOCOL.md
-    /// §11). Per metric: `tenant` labels `serve.latency_ms` and the two
-    /// `serve.queue.shed_*` counters; `shard` labels every series in a
+    /// §11). Per metric: `tenant` labels `serve.latency_ms`, the two
+    /// `serve.queue.shed_*` counters, and the per-tenant
+    /// `serve.queue.depth` sub-lane gauges (weighted-fair scheduling,
+    /// PROTOCOL.md §7; cardinality capped via `max_tracked_tenants` +
+    /// the `~other` overflow label); `shard` labels every series in a
     /// cluster front's merged fleet snapshot; `phase` labels
     /// `fit.phase_ms`; `algorithm`, `backend` and `priority` are
     /// reserved for per-dimension rollups. `tools/check-docs.sh`

@@ -1,0 +1,324 @@
+//! Fingerprint-keyed result cache: answer duplicate fits without
+//! touching a shard.
+//!
+//! KPynq's work-efficiency ethos applied to traffic: a fit the system
+//! has already computed is distance work the triangle inequality cannot
+//! skip but the front trivially can. Requests are canonicalized into a
+//! **request fingerprint** (PROTOCOL.md §8) — FNV-1a over the canonical
+//! JSON of every result-determining key, with the scheduling/identity
+//! keys (`id`, `priority`, `deadline_ms`, `trace_id`, `tenant`)
+//! stripped, since they never change the bits of a clustering. Served
+//! results are deterministic functions of that surface (generator
+//! datasets are seed-addressed; fits are bit-reproducible), so a cache
+//! hit replays the stored reply **bit-identically** — same assignments
+//! fingerprint, inertia, iterations and work counters — marked only by
+//! the `cached` key (PROTOCOL.md §4).
+//!
+//! File datasets (`.kpm` / `.csv` paths) are *never* cached: the bytes
+//! behind a path can change between requests, and a fingerprint that
+//! cannot see them must not vouch for them.
+//!
+//! Bounded LRU: `capacity` entries, least-recently-used evicted first,
+//! `serve.cache.{hits,misses,evictions}` counters, and a
+//! `{"op":"cache","clear":true}` control frame (PROTOCOL.md §6) for
+//! operators who need to drop stale state. Both fronts — the daemon
+//! session and the cluster front — consult one of these before
+//! admission, so a duplicate fit costs neither a queue slot nor an
+//! engine dispatch.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::obs::metrics::{names, Counter, Registry};
+use crate::util::json::Json;
+
+use super::batch::dataset_dim;
+use super::job::{FitRequest, FitResponse, JobStatus};
+
+/// FNV-1a (64-bit) over raw bytes — the same constants as the §8
+/// assignment fingerprint, applied to the canonical request JSON.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Wire keys that schedule or label a job without changing its result —
+/// exactly the keys stripped before fingerprinting (PROTOCOL.md §8).
+pub const NON_RESULT_KEYS: &[&str] = &["id", "priority", "deadline_ms", "trace_id", "tenant"];
+
+/// The request fingerprint (PROTOCOL.md §8): canonicalize the §3 wire
+/// form (BTreeMap-ordered keys, the crate's own JSON encoder), strip
+/// [`NON_RESULT_KEYS`], and FNV-1a the UTF-8 bytes. `None` marks an
+/// uncacheable request — any file-path dataset, whose content the
+/// fingerprint cannot observe.
+pub fn fingerprint_of(req: &FitRequest) -> Option<u64> {
+    dataset_dim(&req.dataset)?;
+    let mut m = match req.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!("FitRequest::to_json always yields an object"),
+    };
+    for k in NON_RESULT_KEYS {
+        m.remove(*k);
+    }
+    Some(fnv1a(Json::Obj(m).to_string().as_bytes()))
+}
+
+/// The `{"op":"cache"}` reply body (PROTOCOL.md §6): current `size`,
+/// configured `capacity`, and — after a clear — how many entries were
+/// `cleared`.
+pub fn cache_json(size: usize, capacity: usize, cleared: Option<usize>) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("op".to_string(), Json::Str("cache".to_string()));
+    m.insert("size".to_string(), Json::Num(size as f64));
+    m.insert("capacity".to_string(), Json::Num(capacity as f64));
+    if let Some(n) = cleared {
+        m.insert("cleared".to_string(), Json::Num(n as f64));
+    }
+    Json::Obj(m)
+}
+
+/// Bounded LRU of finished replies, keyed by [`fingerprint_of`].
+/// Not thread-safe — callers wrap it in their session/front mutex.
+#[derive(Debug)]
+pub struct ResultCache {
+    capacity: usize,
+    entries: HashMap<u64, FitResponse>,
+    /// Recency order, front = least recently used.
+    order: VecDeque<u64>,
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
+}
+
+impl ResultCache {
+    /// `capacity` 0 disables the cache (every lookup misses silently).
+    pub fn new(capacity: usize, registry: &Registry) -> Self {
+        Self {
+            capacity,
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+            hits: registry.counter(names::SERVE_CACHE_HITS),
+            misses: registry.counter(names::SERVE_CACHE_MISSES),
+            evictions: registry.counter(names::SERVE_CACHE_EVICTIONS),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Replay the stored reply for `fp`, re-identified for `req`: the
+    /// caller's id / trace id / tenant are restored, timing fields are
+    /// zeroed (no queue was waited on, no engine ran), and the `cached`
+    /// marker is set. Every *result* field — summary, fit, report,
+    /// backend, worker, batch size — is the stored run's, bit-identical.
+    pub fn lookup(&mut self, fp: u64, req: &FitRequest) -> Option<FitResponse> {
+        if !self.enabled() {
+            return None;
+        }
+        let Some(stored) = self.entries.get(&fp) else {
+            self.misses.inc();
+            return None;
+        };
+        let mut resp = stored.clone();
+        self.order.retain(|k| *k != fp);
+        self.order.push_back(fp);
+        resp.id = req.id;
+        resp.trace_id = req.trace_id.clone();
+        resp.tenant = req.tenant.clone();
+        resp.queue_seconds = 0.0;
+        resp.service_seconds = 0.0;
+        resp.cached = true;
+        self.hits.inc();
+        Some(resp)
+    }
+
+    /// Store a finished reply under `fp`. Only completed, cold results
+    /// enter (shed/failed outcomes are scheduling verdicts, and a cached
+    /// reply must not re-seed itself); the first result for a
+    /// fingerprint wins — duplicates are, by construction, bit-identical.
+    pub fn insert(&mut self, fp: u64, resp: &FitResponse) {
+        if !self.enabled() || resp.status != JobStatus::Ok || resp.cached {
+            return;
+        }
+        if self.entries.contains_key(&fp) {
+            return;
+        }
+        while self.entries.len() >= self.capacity {
+            let Some(lru) = self.order.pop_front() else { break };
+            self.entries.remove(&lru);
+            self.evictions.inc();
+        }
+        self.entries.insert(fp, resp.clone());
+        self.order.push_back(fp);
+    }
+
+    /// Drop everything; returns how many entries were dropped (the
+    /// `cleared` field of the §6 `cache` control reply).
+    pub fn clear(&mut self) -> usize {
+        let n = self.entries.len();
+        self.entries.clear();
+        self.order.clear();
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::job::Priority;
+
+    fn ok_resp(id: u64) -> FitResponse {
+        let req = FitRequest { id, max_points: 200, ..Default::default() };
+        let ds = req.load_dataset().unwrap();
+        let out = crate::coordinator::driver::run_with_engine(
+            &mut crate::runtime::native::NativeEngine,
+            &ds,
+            &req.kmeans,
+        )
+        .unwrap();
+        FitResponse::ok(id, "native".into(), 0, 1, 0.01, 0.2, out.fit, out.report)
+    }
+
+    #[test]
+    fn fingerprint_ignores_scheduling_keys_only() {
+        let base = FitRequest { id: 1, ..Default::default() };
+        let fp = fingerprint_of(&base).unwrap();
+        // Identity/scheduling keys do not move the fingerprint…
+        let mut twin = base.clone();
+        twin.id = 999;
+        twin.priority = Priority::High;
+        twin.deadline_ms = Some(50);
+        twin.trace_id = "cafe".into();
+        twin.tenant = "acme".into();
+        assert_eq!(fingerprint_of(&twin).unwrap(), fp);
+        // …while every result-determining key does.
+        for mutate in [
+            |r: &mut FitRequest| r.kmeans.seed = 123,
+            |r: &mut FitRequest| r.kmeans.k += 1,
+            |r: &mut FitRequest| r.dataset = "kegg".into(),
+            |r: &mut FitRequest| r.data_seed += 1,
+            |r: &mut FitRequest| r.max_points = 99,
+            |r: &mut FitRequest| r.normalize = "zscore".into(),
+            |r: &mut FitRequest| r.algorithm = "lloyd".into(),
+        ] {
+            let mut other = base.clone();
+            mutate(&mut other);
+            assert_ne!(fingerprint_of(&other).unwrap(), fp, "{other:?}");
+        }
+    }
+
+    #[test]
+    fn file_datasets_are_never_cacheable() {
+        let mut req = FitRequest::default();
+        req.dataset = "data/points.csv".into();
+        assert_eq!(fingerprint_of(&req), None);
+    }
+
+    #[test]
+    fn hit_replays_the_result_bits_under_the_new_identity() {
+        let reg = Registry::new();
+        let mut cache = ResultCache::new(4, &reg);
+        let req = FitRequest { id: 1, tenant: "acme".into(), ..Default::default() };
+        let fp = fingerprint_of(&req).unwrap();
+        assert!(cache.lookup(fp, &req).is_none(), "cold start misses");
+        let cold = ok_resp(1);
+        cache.insert(fp, &cold);
+        let mut dup = req.clone();
+        dup.id = 42;
+        dup.trace_id = "feedface".into();
+        let hit = cache.lookup(fp, &dup).expect("second identical request hits");
+        assert!(hit.cached);
+        assert_eq!(hit.id, 42);
+        assert_eq!(hit.trace_id, "feedface");
+        assert_eq!(hit.tenant, "acme");
+        assert_eq!(hit.queue_seconds, 0.0);
+        assert_eq!(hit.service_seconds, 0.0);
+        assert_eq!(hit.summary, cold.summary, "result scalars are bit-identical");
+        assert_eq!(
+            hit.fit.as_ref().unwrap().assignments,
+            cold.fit.as_ref().unwrap().assignments
+        );
+        assert_eq!(
+            hit.fit.as_ref().unwrap().centroids,
+            cold.fit.as_ref().unwrap().centroids
+        );
+        assert_eq!(reg.counter(names::SERVE_CACHE_HITS).get(), 1);
+        assert_eq!(reg.counter(names::SERVE_CACHE_MISSES).get(), 1);
+    }
+
+    #[test]
+    fn cached_replies_do_not_reinsert_and_non_ok_never_enter() {
+        let reg = Registry::new();
+        let mut cache = ResultCache::new(4, &reg);
+        let shed = FitResponse::shed(1, "queue full", 0.0);
+        cache.insert(7, &shed);
+        assert!(cache.is_empty(), "shed outcomes are not results");
+        let mut replay = ok_resp(1);
+        replay.cached = true;
+        cache.insert(7, &replay);
+        assert!(cache.is_empty(), "a cache hit must not re-seed the cache");
+    }
+
+    #[test]
+    fn lru_eviction_is_bounded_and_counted() {
+        let reg = Registry::new();
+        let mut cache = ResultCache::new(2, &reg);
+        let r = ok_resp(1);
+        cache.insert(10, &r);
+        cache.insert(20, &r);
+        // Touch 10 so 20 becomes the LRU.
+        let probe = FitRequest { id: 5, ..Default::default() };
+        assert!(cache.lookup(10, &probe).is_some());
+        cache.insert(30, &r);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup(20, &probe).is_none(), "LRU entry evicted");
+        assert!(cache.lookup(10, &probe).is_some(), "recently used entry kept");
+        assert_eq!(reg.counter(names::SERVE_CACHE_EVICTIONS).get(), 1);
+    }
+
+    #[test]
+    fn clear_reports_the_drop_count_and_zero_capacity_disables() {
+        let reg = Registry::new();
+        let mut cache = ResultCache::new(4, &reg);
+        let r = ok_resp(1);
+        cache.insert(1, &r);
+        cache.insert(2, &r);
+        assert_eq!(cache.clear(), 2);
+        assert!(cache.is_empty());
+        assert_eq!(cache.clear(), 0);
+
+        let mut off = ResultCache::new(0, &reg);
+        assert!(!off.enabled());
+        off.insert(1, &r);
+        let probe = FitRequest::default();
+        assert!(off.lookup(1, &probe).is_none());
+        assert_eq!(off.len(), 0);
+    }
+
+    #[test]
+    fn cache_json_shape() {
+        let j = cache_json(3, 64, None);
+        assert_eq!(j.get("op").unwrap().as_str().unwrap(), "cache");
+        assert_eq!(j.get("size").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("capacity").unwrap().as_usize().unwrap(), 64);
+        assert!(j.get("cleared").is_err());
+        let c = cache_json(0, 64, Some(3));
+        assert_eq!(c.get("cleared").unwrap().as_usize().unwrap(), 3);
+    }
+}

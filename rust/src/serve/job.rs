@@ -107,9 +107,11 @@ pub struct FitRequest {
     /// echoed byte-identically on the response.
     pub trace_id: String,
     /// Tenant the job is accounted to (PROTOCOL.md §3, client-optional).
-    /// Empty = untenanted. Purely an accounting label: it never affects
-    /// scheduling or results, only the per-tenant latency/shed rollups in
-    /// the `stats` reply and the `tenant`-labeled metrics series.
+    /// Empty = untenanted. Constrained to 64 bytes of `[A-Za-z0-9._-]`
+    /// ([`validate_tenant_label`]). The label drives per-tenant accounting
+    /// (`stats` rollups, `tenant`-labeled series) and *scheduling* — the
+    /// queue's weighted-fair rotation and per-tenant quota (PROTOCOL.md
+    /// §7) — but never the result: a fit's bits are tenant-independent.
     pub tenant: String,
 }
 
@@ -129,6 +131,7 @@ impl Default for FitRequest {
             algorithm: String::new(),
             trace_id: String::new(),
             tenant: String::new(),
+            cached: false,
         }
     }
 }
@@ -234,6 +237,9 @@ impl FitRequest {
         }
         if let Some(v) = map.get("tenant") {
             req.tenant = v.as_str()?.to_string();
+            // Arbitrary client strings become accounting labels and
+            // scheduler lanes — bound them at admission (PROTOCOL.md §3).
+            validate_tenant_label(&req.tenant)?;
         }
         // Fail malformed names (backend / normalize) at parse time.
         req.to_run_config()?;
@@ -431,6 +437,11 @@ pub struct FitResponse {
     /// response router (workers never see tenants). Empty = untenanted;
     /// the key is absent from the wire in that case (PROTOCOL.md §4).
     pub tenant: String,
+    /// True when this reply was answered from the result cache
+    /// (PROTOCOL.md §8 request fingerprint) instead of a fresh fit. The
+    /// wire key is emitted only when true, so cold-fit response lines are
+    /// byte-identical to their pre-cache shape (PROTOCOL.md §4).
+    pub cached: bool,
 }
 
 impl FitResponse {
@@ -449,6 +460,7 @@ impl FitResponse {
             report: None,
             trace_id: String::new(),
             tenant: String::new(),
+            cached: false,
         }
     }
 
@@ -474,6 +486,7 @@ impl FitResponse {
             report: None,
             trace_id: String::new(),
             tenant: String::new(),
+            cached: false,
         }
     }
 
@@ -504,6 +517,7 @@ impl FitResponse {
             report: Some(report),
             trace_id: String::new(),
             tenant: String::new(),
+            cached: false,
         }
     }
 
@@ -560,6 +574,9 @@ impl FitResponse {
         }
         if !self.tenant.is_empty() {
             m.insert("tenant".into(), Json::Str(self.tenant.clone()));
+        }
+        if self.cached {
+            m.insert("cached".into(), Json::Bool(true));
         }
         Json::Obj(m)
     }
@@ -635,8 +652,33 @@ impl FitResponse {
             report: None,
             trace_id: get_str("trace_id")?,
             tenant: get_str("tenant")?,
+            cached: matches!(map.get("cached"), Some(Json::Bool(true))),
         })
     }
+}
+
+/// Validate a §3 `tenant` label: at most 64 bytes drawn from
+/// `[A-Za-z0-9._-]` (PROTOCOL.md §3). Empty is allowed (untenanted).
+/// Tenant labels become metric label values, accounting-table keys and
+/// scheduler lanes, so they are bounded at admission; `~` is excluded on
+/// purpose so the server-side `~other` overflow bucket can never collide
+/// with a real tenant.
+pub fn validate_tenant_label(tenant: &str) -> Result<()> {
+    if tenant.len() > 64 {
+        return Err(Error::Parse(format!(
+            "tenant label is {} bytes, limit 64",
+            tenant.len()
+        )));
+    }
+    if let Some(c) = tenant
+        .chars()
+        .find(|c| !(c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')))
+    {
+        return Err(Error::Parse(format!(
+            "tenant label contains '{c}'; allowed characters are A-Z a-z 0-9 . _ -"
+        )));
+    }
+    Ok(())
 }
 
 /// FNV-1a (64-bit) over the little-endian assignment words — the stable
@@ -851,6 +893,34 @@ mod tests {
             FitResponse::from_wire_json(&Json::parse(r#"{"id":1}"#).unwrap()).is_err(),
             "status is required"
         );
+    }
+
+    #[test]
+    fn tenant_labels_are_validated_at_admission() {
+        for good in ["", "acme", "team-7", "a.b_c-d", &"x".repeat(64)] {
+            assert!(validate_tenant_label(good).is_ok(), "'{good}' should pass");
+        }
+        for bad in ["~other", "two words", "acme/eu", "emoji🙂", &"x".repeat(65)] {
+            assert!(validate_tenant_label(bad).is_err(), "'{bad}' should fail");
+        }
+        assert!(FitRequest::from_json_line(r#"{"id": 1, "tenant": "acme"}"#).is_ok());
+        let err = FitRequest::from_json_line(r#"{"id": 1, "tenant": "no spaces"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tenant label"), "got: {err}");
+        let long = format!(r#"{{"id": 1, "tenant": "{}"}}"#, "y".repeat(65));
+        assert!(FitRequest::from_json_line(&long).is_err());
+    }
+
+    #[test]
+    fn cached_marker_round_trips_and_stays_absent_when_cold() {
+        let mut resp = FitResponse::shed(5, "queue full", 0.0);
+        assert!(resp.to_json().get("cached").is_err(), "cold replies carry no key");
+        resp.cached = true;
+        let line = resp.to_json().to_string();
+        let back = FitResponse::from_wire_json(&Json::parse(&line).unwrap()).unwrap();
+        assert!(back.cached);
+        assert_eq!(back.to_json().to_string(), line, "byte-stable with the marker");
     }
 
     #[test]

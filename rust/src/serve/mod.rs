@@ -51,6 +51,7 @@
 //! ```
 
 pub mod batch;
+pub mod cache;
 pub mod codec;
 pub mod job;
 pub mod net;
@@ -63,9 +64,10 @@ use std::sync::mpsc;
 
 use crate::error::{Error, Result};
 
+pub use cache::ResultCache;
 pub use job::{FitRequest, FitResponse, FitSummary, JobStatus, Priority};
 pub use net::{Daemon, NetConfig};
-pub use queue::ShedPolicy;
+pub use queue::{FairConfig, ShedPolicy};
 pub use report::ServeReport;
 pub use session::{PartialSession, ServeSession};
 
@@ -81,6 +83,22 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// What happens to arrivals when the queue is full.
     pub shed_policy: ShedPolicy,
+    /// Per-tenant weighted-fair weights (`tenant_weights = ["acme=3"]`):
+    /// a tenant with weight `w` takes up to `w` consecutive pops per
+    /// scheduler rotation while it has queued work (PROTOCOL.md §7).
+    pub tenant_weights: std::collections::BTreeMap<String, u32>,
+    /// Weight for tenants absent from `tenant_weights` (min 1).
+    pub default_tenant_weight: u32,
+    /// Max jobs one tenant may hold in the queue at once; 0 disables the
+    /// per-tenant quota.
+    pub tenant_queue_cap: usize,
+    /// Result-cache capacity in entries (fingerprint → finished reply,
+    /// PROTOCOL.md §8); 0 disables caching.
+    pub cache_capacity: usize,
+    /// Cardinality cap on distinct tenants tracked by the accounting
+    /// table and tenant-labeled series; overflow lands in the `~other`
+    /// bucket (PROTOCOL.md §3).
+    pub max_tracked_tenants: usize,
 }
 
 impl Default for ServeConfig {
@@ -90,6 +108,11 @@ impl Default for ServeConfig {
             queue_capacity: 64,
             max_batch: 8,
             shed_policy: ShedPolicy::Block,
+            tenant_weights: std::collections::BTreeMap::new(),
+            default_tenant_weight: 1,
+            tenant_queue_cap: 0,
+            cache_capacity: 64,
+            max_tracked_tenants: 64,
         }
     }
 }
@@ -101,7 +124,66 @@ impl ServeConfig {
                 "serve workers/queue_capacity/max_batch must be positive".into(),
             ));
         }
+        if self.default_tenant_weight == 0 {
+            return Err(Error::Config(
+                "serve default_tenant_weight must be positive".into(),
+            ));
+        }
+        if let Some((t, _)) = self.tenant_weights.iter().find(|(_, w)| **w == 0) {
+            return Err(Error::Config(format!(
+                "serve tenant_weights: tenant '{t}' has zero weight"
+            )));
+        }
+        if self.max_tracked_tenants == 0 {
+            return Err(Error::Config(
+                "serve max_tracked_tenants must be positive".into(),
+            ));
+        }
         Ok(())
+    }
+
+    /// The queue-side view of the tenant scheduling knobs.
+    pub fn fair(&self) -> queue::FairConfig {
+        queue::FairConfig {
+            weights: self.tenant_weights.clone(),
+            default_weight: self.default_tenant_weight,
+            tenant_queue_cap: self.tenant_queue_cap,
+        }
+    }
+
+    /// Parse `"tenant=weight"` entries (the `[serve] tenant_weights`
+    /// array and the `--tenant-weights` CLI list).
+    pub fn parse_tenant_weights(
+        entries: &[String],
+    ) -> Result<std::collections::BTreeMap<String, u32>> {
+        let mut out = std::collections::BTreeMap::new();
+        for entry in entries {
+            let (tenant, weight) = entry.split_once('=').ok_or_else(|| {
+                Error::Config(format!(
+                    "tenant weight '{entry}' must look like 'tenant=weight'"
+                ))
+            })?;
+            job::validate_tenant_label(tenant).map_err(|e| {
+                Error::Config(format!("tenant weight '{entry}': {e}"))
+            })?;
+            if tenant.is_empty() {
+                return Err(Error::Config(format!(
+                    "tenant weight '{entry}' names an empty tenant"
+                )));
+            }
+            let w: u32 = weight.parse().map_err(|_| {
+                Error::Config(format!(
+                    "tenant weight '{entry}' has a non-numeric weight"
+                ))
+            })?;
+            if w == 0 {
+                return Err(Error::Config(format!(
+                    "tenant weight '{entry}' must be at least 1"
+                )));
+            }
+            out.insert(tenant.to_string(), w);
+        }
+        Ok(out)
     }
 }
 

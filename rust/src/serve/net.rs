@@ -111,6 +111,12 @@ pub trait FrontCore: Send + Sync + 'static {
     /// of the `{"op":"metrics"}` reply (PROTOCOL.md §6), and the source
     /// the `GET /metrics` Prometheus endpoint renders.
     fn metrics(&self) -> Json;
+
+    /// Handle the `{"op":"cache"}` control frame (PROTOCOL.md §6): report
+    /// the result cache's size/capacity, clearing it first when `clear`
+    /// is set. Both cores own a fingerprint-keyed result cache
+    /// (PROTOCOL.md §8), so the frame is part of the shared wire surface.
+    fn cache_control(&self, clear: bool) -> Json;
 }
 
 impl FrontCore for ServeSession {
@@ -154,6 +160,10 @@ impl FrontCore for ServeSession {
 
     fn metrics(&self) -> Json {
         ServeSession::metrics(self)
+    }
+
+    fn cache_control(&self, clear: bool) -> Json {
+        ServeSession::cache_control(self, clear)
     }
 }
 
@@ -832,6 +842,20 @@ fn control_frame<S: WireStream>(
             };
             m.insert("op".to_string(), Json::Str("metrics".into()));
             let _ = write_line(out, &Json::Obj(m).to_string());
+            true
+        }
+        "cache" => {
+            // Result-cache introspection and reset (PROTOCOL.md §6/§8).
+            // `clear` is optional; when present it must be a boolean.
+            let clear = match map.get("clear") {
+                None => false,
+                Some(Json::Bool(b)) => *b,
+                Some(_) => {
+                    proto_error(ctx, out, lineno, "cache 'clear' must be a boolean");
+                    return true;
+                }
+            };
+            let _ = write_line(out, &ctx.core.cache_control(clear).to_string());
             true
         }
         "partial_fit" => {

@@ -1,20 +1,32 @@
-//! Bounded admission with priorities, deadlines and shedding.
+//! Bounded admission with priorities, deadlines, shedding and
+//! per-tenant weighted-fair scheduling.
 //!
 //! [`AdmissionQueue`] is the pure (single-threaded, deterministic) core:
-//! one FIFO lane per [`Priority`] level, a hard capacity, and a pop that
-//! both enforces deadline shedding and performs micro-batch coalescing
-//! (see `serve::batch` for the compatibility key). [`SharedQueue`] wraps
-//! it in a mutex + two condvars for the worker pool:
+//! one sub-lane set per tenant (a FIFO lane per [`Priority`] level), a
+//! hard capacity, optional per-tenant in-queue quotas, and a pop that
+//! enforces deadline shedding, rotates tenants under a weighted
+//! round-robin credit scheme, and performs micro-batch coalescing (see
+//! `serve::batch` for the compatibility key). [`SharedQueue`] wraps it
+//! in a mutex + two condvars for the worker pool:
 //!
 //! * **Backpressure** — under [`ShedPolicy::Block`] a submitter sleeps
-//!   until a worker frees a slot (the `space` condvar); under
+//!   until a worker frees a slot (the `space` condvar) *or its own start
+//!   deadline passes*, whichever comes first; under
 //!   [`ShedPolicy::ShedArrivals`] a full queue rejects the newcomer
 //!   immediately (load-shedding, the "fail fast under overload" contract).
 //! * **Start deadlines** — a job that has not begun executing within its
-//!   `deadline_ms` is shed at pop time, never executed: a tenant that has
-//!   stopped waiting should not consume engine time.
+//!   `deadline_ms` is shed, never executed: a tenant that has stopped
+//!   waiting should not consume engine time. The clock starts at
+//!   *submission* (`SharedQueue::submit` entry), so time spent blocked on
+//!   a full queue counts — deadlines must not silently stretch exactly
+//!   when the system is overloaded.
+//! * **Fairness** — pops rotate across tenants, each tenant taking up to
+//!   `weight` consecutive pops per rotation (PROTOCOL.md §7). Priority
+//!   ordering is preserved *within* a tenant's entitlement. Batch riders
+//!   are exempt: compatible queued jobs coalesce with the head regardless
+//!   of tenant (they are a free upgrade, not a scheduling decision).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -49,25 +61,92 @@ impl ShedPolicy {
     }
 }
 
+/// Per-tenant scheduling knobs (`[serve] tenant_weights`, PROTOCOL.md §7).
+#[derive(Clone, Debug)]
+pub struct FairConfig {
+    /// Explicit per-tenant weights; tenants not listed get
+    /// `default_weight`. A weight of `w` entitles the tenant to `w`
+    /// consecutive pops per rotation while it has queued work.
+    pub weights: BTreeMap<String, u32>,
+    /// Weight for tenants absent from `weights` (including the anonymous
+    /// `""` tenant). Clamped to at least 1.
+    pub default_weight: u32,
+    /// Maximum jobs one tenant may hold in the queue at once; `0`
+    /// disables the per-tenant cap (only the global capacity applies).
+    pub tenant_queue_cap: usize,
+}
+
+impl Default for FairConfig {
+    fn default() -> Self {
+        Self { weights: BTreeMap::new(), default_weight: 1, tenant_queue_cap: 0 }
+    }
+}
+
+impl FairConfig {
+    fn weight_of(&self, tenant: &str) -> u64 {
+        u64::from(
+            self.weights
+                .get(tenant)
+                .copied()
+                .unwrap_or(self.default_weight)
+                .max(1),
+        )
+    }
+}
+
 /// A job waiting in the queue.
 #[derive(Debug)]
 pub struct Pending {
     pub req: FitRequest,
-    pub admitted_at: Instant,
+    /// When the client handed the job to [`SharedQueue::submit`] — *not*
+    /// when a slot freed up. Deadlines and queue-wait are measured from
+    /// here so overload-time blocking is visible.
+    pub submitted_at: Instant,
 }
 
 impl Pending {
     /// True once the job's start deadline has passed.
     pub fn expired(&self) -> bool {
         match self.req.deadline_ms {
-            Some(ms) => self.admitted_at.elapsed() >= Duration::from_millis(ms),
+            Some(ms) => self.submitted_at.elapsed() >= Duration::from_millis(ms),
             None => false,
         }
     }
 
-    /// Seconds this job has been queued so far.
+    /// Seconds since submission — the `queue_wait` a client observes.
     pub fn queue_seconds(&self) -> f64 {
-        self.admitted_at.elapsed().as_secs_f64()
+        self.submitted_at.elapsed().as_secs_f64()
+    }
+}
+
+/// One tenant's sub-lanes: a FIFO per priority level.
+#[derive(Debug)]
+struct TenantLane {
+    tenant: String,
+    weight: u64,
+    lanes: [VecDeque<Pending>; Priority::LEVELS],
+}
+
+impl TenantLane {
+    fn new(tenant: String, weight: u64) -> Self {
+        Self {
+            tenant,
+            weight,
+            lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.lanes.iter().map(VecDeque::len).sum()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.lanes.iter().all(VecDeque::is_empty)
+    }
+
+    /// Oldest job in the highest non-empty priority lane.
+    fn pop_head(&mut self) -> Option<Pending> {
+        self.lanes.iter_mut().find(|l| !l.is_empty())?.pop_front()
     }
 }
 
@@ -76,7 +155,9 @@ impl Pending {
 pub enum Admission {
     Admitted,
     /// At capacity — the request is handed back for the policy to decide.
-    Full(FitRequest),
+    /// `tenant_cap` distinguishes a per-tenant quota rejection from the
+    /// global queue being full.
+    Full { req: FitRequest, tenant_cap: bool },
     /// Queue closed — no further admissions.
     Closed(FitRequest),
 }
@@ -93,9 +174,11 @@ pub struct PopOutcome {
 /// Counters the queue accumulates over its lifetime.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct QueueStats {
-    /// Arrivals rejected because the queue was full (ShedArrivals only).
+    /// Arrivals rejected because the queue (or a tenant quota) was full
+    /// (ShedArrivals only).
     pub shed_full: u64,
-    /// Jobs shed at pop time because their start deadline had passed.
+    /// Jobs shed because their start deadline passed — at pop time, or
+    /// while their submitter was blocked on a full queue.
     pub shed_deadline: u64,
     /// Highest simultaneous queue depth observed.
     pub peak_depth: usize,
@@ -105,39 +188,66 @@ pub struct QueueStats {
 #[derive(Debug)]
 pub struct AdmissionQueue {
     capacity: usize,
-    lanes: [VecDeque<Pending>; Priority::LEVELS],
+    fair: FairConfig,
+    /// Tenant sub-lanes in first-arrival order; empty lanes are garbage
+    /// collected after every pop/remove, so each entry has queued work.
+    tenants: Vec<TenantLane>,
+    /// Weighted round-robin position: `tenants[cursor]` may take
+    /// `credits` more pops before the rotation advances.
+    cursor: usize,
+    credits: u64,
     closed: bool,
     stats: QueueStats,
 }
 
 impl AdmissionQueue {
     pub fn new(capacity: usize) -> Self {
+        Self::with_fair(capacity, FairConfig::default())
+    }
+
+    pub fn with_fair(capacity: usize, fair: FairConfig) -> Self {
         assert!(capacity >= 1, "queue capacity must be positive");
         Self {
             capacity,
-            lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            fair,
+            tenants: Vec::new(),
+            cursor: 0,
+            credits: 0,
             closed: false,
             stats: QueueStats::default(),
         }
     }
 
     pub fn len(&self) -> usize {
-        self.lanes.iter().map(VecDeque::len).sum()
+        self.tenants.iter().map(TenantLane::len).sum()
     }
 
     /// Per-priority-lane depths, indexed by [`Priority::index`] (high,
-    /// normal, low) — the `queue_lanes` field of the `stats` control
-    /// frame (PROTOCOL.md §6).
+    /// normal, low), summed across tenants — the `queue_lanes` field of
+    /// the `stats` control frame (PROTOCOL.md §6).
     pub fn lane_depths(&self) -> [usize; Priority::LEVELS] {
         let mut out = [0usize; Priority::LEVELS];
-        for (slot, lane) in out.iter_mut().zip(self.lanes.iter()) {
-            *slot = lane.len();
+        for t in &self.tenants {
+            for (slot, lane) in out.iter_mut().zip(t.lanes.iter()) {
+                *slot += lane.len();
+            }
         }
         out
     }
 
+    /// Queued jobs per named tenant — the `serve.queue.depth{tenant=…}`
+    /// series and the `queued` key of the `stats` tenants object. The
+    /// anonymous `""` tenant is folded into the unlabeled total only.
+    pub fn tenant_depths(&self) -> BTreeMap<String, usize> {
+        self.tenants
+            .iter()
+            .filter(|t| !t.tenant.is_empty() && !t.is_empty())
+            .map(|t| (t.tenant.clone(), t.len()))
+            .collect()
+    }
+
     pub fn is_empty(&self) -> bool {
-        self.lanes.iter().all(VecDeque::is_empty)
+        self.tenants.iter().all(TenantLane::is_empty)
     }
 
     /// Stop admitting; queued jobs still drain.
@@ -157,16 +267,52 @@ impl AdmissionQueue {
         self.stats.shed_full += 1;
     }
 
-    /// Admit one job, or hand it back if the queue is full/closed.
+    pub(crate) fn count_shed_deadline(&mut self) {
+        self.stats.shed_deadline += 1;
+    }
+
+    /// Admit one job stamped now — see [`Self::try_admit_at`].
     pub fn try_admit(&mut self, req: FitRequest) -> Admission {
+        self.try_admit_at(req, Instant::now())
+    }
+
+    /// Admit one job carrying its original submission instant, or hand it
+    /// back if the queue (or the tenant's quota) is full, or closed.
+    pub fn try_admit_at(&mut self, req: FitRequest, submitted_at: Instant) -> Admission {
         if self.closed {
             return Admission::Closed(req);
         }
         if self.len() >= self.capacity {
-            return Admission::Full(req);
+            return Admission::Full { req, tenant_cap: false };
         }
+        let cap = self.fair.tenant_queue_cap;
+        if cap > 0 {
+            let depth = self
+                .tenants
+                .iter()
+                .find(|t| t.tenant == req.tenant)
+                .map(TenantLane::len)
+                .unwrap_or(0);
+            if depth >= cap {
+                return Admission::Full { req, tenant_cap: true };
+            }
+        }
+        let ti = match self.tenants.iter().position(|t| t.tenant == req.tenant) {
+            Some(i) => i,
+            None => {
+                let weight = self.fair.weight_of(&req.tenant);
+                self.tenants.push(TenantLane::new(req.tenant.clone(), weight));
+                if self.tenants.len() == 1 {
+                    // First lane: start the rotation here with a full
+                    // credit allotment.
+                    self.cursor = 0;
+                    self.credits = self.tenants[0].weight;
+                }
+                self.tenants.len() - 1
+            }
+        };
         let lane = req.priority.index();
-        self.lanes[lane].push_back(Pending { req, admitted_at: Instant::now() });
+        self.tenants[ti].lanes[lane].push_back(Pending { req, submitted_at });
         let depth = self.len();
         if depth > self.stats.peak_depth {
             self.stats.peak_depth = depth;
@@ -180,54 +326,128 @@ impl AdmissionQueue {
     /// already popped, or never existed). Ids are session tickets, so at
     /// most one queued job can match.
     pub fn remove(&mut self, id: u64) -> Option<Pending> {
-        for lane in self.lanes.iter_mut() {
-            if let Some(i) = lane.iter().position(|p| p.req.id == id) {
-                return lane.remove(i);
+        for t in self.tenants.iter_mut() {
+            for lane in t.lanes.iter_mut() {
+                if let Some(i) = lane.iter().position(|p| p.req.id == id) {
+                    let removed = lane.remove(i);
+                    self.gc_lanes();
+                    return removed;
+                }
             }
         }
         None
     }
 
-    /// Pop the oldest highest-priority live job plus up to `max_batch - 1`
-    /// queued jobs sharing its [`BatchKey`], scanned in pop order (so a
-    /// high-priority head coalesces compatible lower-priority riders —
-    /// they get a free upgrade, never the reverse). Jobs whose key is
-    /// unknown (file datasets) or unbatchable (fpga-sim) always pop solo.
-    /// Expired jobs encountered during the scan are removed and returned
-    /// in `shed`.
-    pub fn pop_batch(&mut self, max_batch: usize) -> PopOutcome {
-        assert!(max_batch >= 1, "max_batch must be positive");
-        let mut out = PopOutcome::default();
-        let mut shed_deadline = 0u64;
-        let mut key: Option<BatchKey> = None;
-        'lanes: for lane in self.lanes.iter_mut() {
-            let mut i = 0;
-            while i < lane.len() {
-                if out.batch.len() >= max_batch {
-                    break 'lanes;
-                }
-                if lane[i].expired() {
-                    out.shed.push(lane.remove(i).expect("index checked"));
-                    shed_deadline += 1;
-                    continue; // `i` now addresses the next element
-                }
-                if out.batch.is_empty() {
-                    let head = lane.remove(i).expect("index checked");
-                    key = BatchKey::of(&head.req);
-                    out.batch.push(head);
-                    if key.is_none() || max_batch == 1 {
-                        break 'lanes; // unbatchable head pops solo
+    /// Drop emptied tenant lanes, keeping the rotation cursor coherent.
+    fn gc_lanes(&mut self) {
+        let mut i = 0;
+        while i < self.tenants.len() {
+            if self.tenants[i].is_empty() {
+                self.tenants.remove(i);
+                if self.cursor > i {
+                    self.cursor -= 1;
+                } else if self.cursor == i {
+                    // The lane under the cursor vanished; whichever lane
+                    // slid (or wrapped) into its place starts fresh.
+                    if self.cursor >= self.tenants.len() {
+                        self.cursor = 0;
                     }
-                    continue;
+                    self.credits = self
+                        .tenants
+                        .get(self.cursor)
+                        .map(|t| t.weight)
+                        .unwrap_or(0);
                 }
-                if BatchKey::of(&lane[i].req) == key {
-                    out.batch.push(lane.remove(i).expect("index checked"));
-                    continue;
-                }
+            } else {
                 i += 1;
             }
         }
+    }
+
+    /// Advance the weighted round-robin to the lane that owns the next
+    /// pop. Callers must ensure the queue is non-empty; after
+    /// [`Self::gc_lanes`] every lane has work, so only exhausted credits
+    /// move the cursor.
+    fn fair_head_index(&mut self) -> usize {
+        let n = self.tenants.len();
+        debug_assert!(n > 0, "fair_head_index on an empty queue");
+        if self.cursor >= n {
+            self.cursor = 0;
+            self.credits = self.tenants[0].weight;
+        }
+        if self.credits == 0 {
+            self.cursor = (self.cursor + 1) % n;
+            self.credits = self.tenants[self.cursor].weight;
+        }
+        self.cursor
+    }
+
+    /// Shed every job whose start deadline has passed, queue-wide.
+    /// Work-efficiency at the scheduling layer: expired jobs are removed
+    /// before they can occupy a batch slot or a fairness credit.
+    fn shed_expired(&mut self, out: &mut PopOutcome) {
+        let mut shed_deadline = 0u64;
+        for t in self.tenants.iter_mut() {
+            for lane in t.lanes.iter_mut() {
+                let mut i = 0;
+                while i < lane.len() {
+                    if lane[i].expired() {
+                        out.shed.push(lane.remove(i).expect("index checked"));
+                        shed_deadline += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
         self.stats.shed_deadline += shed_deadline;
+        self.gc_lanes();
+    }
+
+    /// Pop the next job under the weighted-fair rotation (oldest
+    /// highest-priority job of the tenant whose turn it is) plus up to
+    /// `max_batch - 1` queued jobs sharing its [`BatchKey`], scanned in
+    /// rotation order across all tenants (riders are a free upgrade — a
+    /// high-priority head coalesces compatible lower-priority riders from
+    /// any tenant without spending that tenant's credits). Jobs whose key
+    /// is unknown (file datasets) or unbatchable (fpga-sim) always pop
+    /// solo. Expired jobs are removed first and returned in `shed`.
+    pub fn pop_batch(&mut self, max_batch: usize) -> PopOutcome {
+        assert!(max_batch >= 1, "max_batch must be positive");
+        let mut out = PopOutcome::default();
+        self.shed_expired(&mut out);
+        if self.is_empty() {
+            return out;
+        }
+        let head_idx = self.fair_head_index();
+        self.credits = self.credits.saturating_sub(1);
+        let head = self.tenants[head_idx]
+            .pop_head()
+            .expect("gc left only non-empty lanes");
+        let key = BatchKey::of(&head.req);
+        out.batch.push(head);
+        if key.is_none() || max_batch == 1 {
+            self.gc_lanes();
+            return out;
+        }
+        let n = self.tenants.len();
+        'riders: for step in 0..n {
+            let ti = (head_idx + step) % n;
+            for lane in self.tenants[ti].lanes.iter_mut() {
+                let mut i = 0;
+                while i < lane.len() {
+                    if out.batch.len() >= max_batch {
+                        break 'riders;
+                    }
+                    if BatchKey::of(&lane[i].req) == key {
+                        out.batch.push(lane.remove(i).expect("index checked"));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        self.gc_lanes();
         out
     }
 }
@@ -236,8 +456,11 @@ impl AdmissionQueue {
 #[derive(Debug)]
 pub enum Submission {
     Admitted,
-    /// Rejected; the reason is queue-full (ShedArrivals) or queue-closed.
-    Shed { req: FitRequest, reason: &'static str },
+    /// Rejected; the reason is queue-full or tenant-quota (ShedArrivals),
+    /// deadline-expired-while-blocked (Block), or queue-closed.
+    /// `waited_seconds` is how long the submitter spent blocked before
+    /// the verdict — zero on immediate rejections.
+    Shed { req: FitRequest, reason: &'static str, waited_seconds: f64 },
 }
 
 /// Thread-safe wrapper: the admission side of the serve subsystem.
@@ -252,35 +475,81 @@ pub struct SharedQueue {
 
 impl SharedQueue {
     pub fn new(capacity: usize) -> Self {
+        Self::with_fair(capacity, FairConfig::default())
+    }
+
+    pub fn with_fair(capacity: usize, fair: FairConfig) -> Self {
         Self {
-            inner: Mutex::new(AdmissionQueue::new(capacity)),
+            inner: Mutex::new(AdmissionQueue::with_fair(capacity, fair)),
             space: Condvar::new(),
             work: Condvar::new(),
         }
     }
 
     /// Submit one job under the given policy. Blocks only under
-    /// [`ShedPolicy::Block`] with a full queue.
+    /// [`ShedPolicy::Block`] with a full queue — and even then never past
+    /// the job's own start deadline: a deadline that expires while the
+    /// submitter is blocked unblocks it with a shed verdict (the clock
+    /// runs from submission, PROTOCOL.md §7).
     pub fn submit(&self, req: FitRequest, policy: ShedPolicy) -> Submission {
+        let submitted_at = Instant::now();
         let mut q = self.inner.lock().expect("queue mutex poisoned");
         let mut req = req;
         loop {
-            match q.try_admit(req) {
+            match q.try_admit_at(req, submitted_at) {
                 Admission::Admitted => {
                     self.work.notify_one();
                     return Submission::Admitted;
                 }
                 Admission::Closed(r) => {
-                    return Submission::Shed { req: r, reason: "queue closed" };
+                    return Submission::Shed {
+                        req: r,
+                        reason: "queue closed",
+                        waited_seconds: submitted_at.elapsed().as_secs_f64(),
+                    };
                 }
-                Admission::Full(r) => match policy {
+                Admission::Full { req: r, tenant_cap } => match policy {
                     ShedPolicy::ShedArrivals => {
                         q.count_shed_full();
-                        return Submission::Shed { req: r, reason: "queue full" };
+                        let reason = if tenant_cap {
+                            "tenant queue quota exceeded"
+                        } else {
+                            "queue full"
+                        };
+                        return Submission::Shed {
+                            req: r,
+                            reason,
+                            waited_seconds: submitted_at.elapsed().as_secs_f64(),
+                        };
                     }
                     ShedPolicy::Block => {
+                        let wait = match r.deadline_ms {
+                            Some(ms) => {
+                                let deadline = submitted_at + Duration::from_millis(ms);
+                                let now = Instant::now();
+                                if now >= deadline {
+                                    q.count_shed_deadline();
+                                    return Submission::Shed {
+                                        req: r,
+                                        reason:
+                                            "start deadline expired while blocked on a full queue",
+                                        waited_seconds: submitted_at.elapsed().as_secs_f64(),
+                                    };
+                                }
+                                Some(deadline - now)
+                            }
+                            None => None,
+                        };
                         req = r;
-                        q = self.space.wait(q).expect("queue mutex poisoned");
+                        q = match wait {
+                            Some(d) => {
+                                self.space
+                                    .wait_timeout(q, d)
+                                    .expect("queue mutex poisoned")
+                                    .0
+                            }
+                            None => self.space.wait(q).expect("queue mutex poisoned"),
+                        };
                     }
                 },
             }
@@ -328,6 +597,11 @@ impl SharedQueue {
         self.inner.lock().expect("queue mutex poisoned").lane_depths()
     }
 
+    /// Queued jobs per named tenant — see [`AdmissionQueue::tenant_depths`].
+    pub fn tenant_depths(&self) -> BTreeMap<String, usize> {
+        self.inner.lock().expect("queue mutex poisoned").tenant_depths()
+    }
+
     /// Close the queue and wake everyone (submitters shed, workers drain
     /// and exit).
     pub fn close(&self) {
@@ -345,9 +619,21 @@ impl SharedQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest;
 
     fn req(id: u64, priority: Priority) -> FitRequest {
         FitRequest { id, priority, ..Default::default() }
+    }
+
+    fn treq(id: u64, tenant: &str) -> FitRequest {
+        FitRequest { id, tenant: tenant.into(), ..Default::default() }
+    }
+
+    fn weights(pairs: &[(&str, u32)]) -> FairConfig {
+        FairConfig {
+            weights: pairs.iter().map(|(t, w)| (t.to_string(), *w)).collect(),
+            ..FairConfig::default()
+        }
     }
 
     #[test]
@@ -356,7 +642,10 @@ mod tests {
         assert!(matches!(q.try_admit(req(1, Priority::Normal)), Admission::Admitted));
         assert!(matches!(q.try_admit(req(2, Priority::Normal)), Admission::Admitted));
         match q.try_admit(req(3, Priority::Normal)) {
-            Admission::Full(r) => assert_eq!(r.id, 3),
+            Admission::Full { req: r, tenant_cap } => {
+                assert_eq!(r.id, 3);
+                assert!(!tenant_cap, "global capacity, not a tenant quota");
+            }
             other => panic!("expected Full, got {other:?}"),
         }
         assert_eq!(q.stats().peak_depth, 2);
@@ -519,7 +808,7 @@ mod tests {
             Submission::Admitted
         ));
         match q.submit(req(2, Priority::Normal), ShedPolicy::ShedArrivals) {
-            Submission::Shed { req, reason } => {
+            Submission::Shed { req, reason, .. } => {
                 assert_eq!(req.id, 2);
                 assert_eq!(reason, "queue full");
             }
@@ -534,5 +823,219 @@ mod tests {
             assert_eq!(ShedPolicy::from_name(p.name()).unwrap(), p);
         }
         assert!(ShedPolicy::from_name("drop").is_err());
+    }
+
+    // ---- submission-clock deadlines (the overload-time bugfix) ----
+
+    #[test]
+    fn blocked_submitter_sheds_on_its_own_deadline() {
+        let q = SharedQueue::new(1);
+        assert!(matches!(
+            q.submit(req(1, Priority::Normal), ShedPolicy::Block),
+            Submission::Admitted
+        ));
+        let mut late = req(2, Priority::Normal);
+        late.deadline_ms = Some(40);
+        let start = Instant::now();
+        match q.submit(late, ShedPolicy::Block) {
+            Submission::Shed { req, reason, waited_seconds } => {
+                assert_eq!(req.id, 2);
+                assert!(reason.contains("deadline"), "reason was '{reason}'");
+                assert!(waited_seconds >= 0.03, "waited only {waited_seconds}s");
+            }
+            other => panic!("expected a deadline shed, got {other:?}"),
+        }
+        assert!(
+            start.elapsed() >= Duration::from_millis(30),
+            "the submitter must block until its deadline, not spin"
+        );
+        assert_eq!(q.stats().shed_deadline, 1);
+        assert_eq!(q.depth(), 1, "the queued job is untouched");
+    }
+
+    #[test]
+    fn queue_wait_clock_starts_at_submission_not_admission() {
+        let q = SharedQueue::new(1);
+        assert!(matches!(
+            q.submit(req(1, Priority::Normal), ShedPolicy::Block),
+            Submission::Admitted
+        ));
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                // Blocks on the full queue until the first pop frees a slot.
+                assert!(matches!(
+                    q.submit(req(2, Priority::Normal), ShedPolicy::Block),
+                    Submission::Admitted
+                ));
+            });
+            std::thread::sleep(Duration::from_millis(60));
+            assert_eq!(q.take_batch(1).unwrap().batch[0].req.id, 1);
+            let second = q.take_batch(1).unwrap();
+            let p = &second.batch[0];
+            assert_eq!(p.req.id, 2);
+            assert!(
+                p.queue_seconds() >= 0.05,
+                "queue-wait must include blocked time, got {}s",
+                p.queue_seconds()
+            );
+        });
+    }
+
+    // ---- weighted-fair tenant scheduling ----
+
+    #[test]
+    fn weighted_fair_pop_interleaves_tenants_by_weight() {
+        let mut q = AdmissionQueue::with_fair(16, weights(&[("acme", 2), ("free", 1)]));
+        q.try_admit(treq(1, "acme"));
+        q.try_admit(treq(11, "free"));
+        q.try_admit(treq(2, "acme"));
+        q.try_admit(treq(12, "free"));
+        q.try_admit(treq(3, "acme"));
+        q.try_admit(treq(4, "acme"));
+        let order: Vec<u64> = (0..6)
+            .map(|_| q.pop_batch(1).batch.remove(0).req.id)
+            .collect();
+        assert_eq!(
+            order,
+            vec![1, 2, 11, 3, 4, 12],
+            "two acme pops, one free pop, repeating"
+        );
+    }
+
+    #[test]
+    fn flooding_tenant_cannot_starve_a_light_one() {
+        let mut q = AdmissionQueue::with_fair(32, FairConfig::default());
+        for id in 1..=6 {
+            q.try_admit(treq(id, "flood"));
+        }
+        q.try_admit(treq(100, "light"));
+        let first_two: Vec<u64> = (0..2)
+            .map(|_| q.pop_batch(1).batch.remove(0).req.id)
+            .collect();
+        assert!(
+            first_two.contains(&100),
+            "the light tenant must pop within one rotation, got {first_two:?}"
+        );
+    }
+
+    #[test]
+    fn tenant_queue_cap_rejects_only_the_hog() {
+        let fair = FairConfig { tenant_queue_cap: 2, ..FairConfig::default() };
+        let mut q = AdmissionQueue::with_fair(8, fair);
+        assert!(matches!(q.try_admit(treq(1, "hog")), Admission::Admitted));
+        assert!(matches!(q.try_admit(treq(2, "hog")), Admission::Admitted));
+        match q.try_admit(treq(3, "hog")) {
+            Admission::Full { req: r, tenant_cap } => {
+                assert_eq!(r.id, 3);
+                assert!(tenant_cap, "a quota rejection, not global capacity");
+            }
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert!(
+            matches!(q.try_admit(treq(4, "other")), Admission::Admitted),
+            "other tenants still have room"
+        );
+        assert_eq!(q.tenant_depths().get("hog"), Some(&2));
+        assert_eq!(q.tenant_depths().get("other"), Some(&1));
+    }
+
+    #[test]
+    fn tenant_quota_shed_reason_names_the_quota() {
+        let fair = FairConfig { tenant_queue_cap: 1, ..FairConfig::default() };
+        let q = SharedQueue::with_fair(8, fair);
+        assert!(matches!(
+            q.submit(treq(1, "hog"), ShedPolicy::ShedArrivals),
+            Submission::Admitted
+        ));
+        match q.submit(treq(2, "hog"), ShedPolicy::ShedArrivals) {
+            Submission::Shed { reason, .. } => {
+                assert_eq!(reason, "tenant queue quota exceeded");
+            }
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert_eq!(q.stats().shed_full, 1);
+    }
+
+    #[test]
+    fn riders_coalesce_across_tenants_without_spending_credits() {
+        let mut q = AdmissionQueue::with_fair(16, weights(&[("a", 1), ("b", 1)]));
+        q.try_admit(treq(1, "a"));
+        q.try_admit(treq(2, "b"));
+        q.try_admit(treq(3, "b"));
+        let out = q.pop_batch(8);
+        assert_eq!(
+            out.batch.iter().map(|p| p.req.id).collect::<Vec<_>>(),
+            vec![1, 2, 3],
+            "compatible jobs coalesce across tenant lanes"
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fair_pop_order_is_deterministic() {
+        proptest::run_cases("fair-pop-deterministic", 0xFA1A, |rng| {
+            let tenants = ["", "a", "b", "c"];
+            let njobs = 4 + rng.next_below(24);
+            let mut reqs = Vec::with_capacity(njobs);
+            for id in 0..njobs {
+                let mut r = treq(id as u64 + 1, tenants[rng.next_below(tenants.len())]);
+                r.priority = [Priority::High, Priority::Normal, Priority::Low]
+                    [rng.next_below(3)];
+                reqs.push(r);
+            }
+            let fair = weights(&[("a", 3), ("b", 1)]);
+            let mut q1 = AdmissionQueue::with_fair(64, fair.clone());
+            let mut q2 = AdmissionQueue::with_fair(64, fair);
+            for r in &reqs {
+                q1.try_admit(r.clone());
+                q2.try_admit(r.clone());
+            }
+            for _ in 0..njobs {
+                let a = q1.pop_batch(1).batch.remove(0).req.id;
+                let b = q2.pop_batch(1).batch.remove(0).req.id;
+                if a != b {
+                    return Err(format!("pop order diverged: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn saturated_rotation_gives_each_tenant_exactly_its_weight() {
+        proptest::run_cases("fair-rotation-weights", 0x0F41, |rng| {
+            let ntenants = 2 + rng.next_below(3); // 2..=4 tenants
+            let mut fair = FairConfig::default();
+            let mut per_tenant = Vec::new();
+            for i in 0..ntenants {
+                let w = 1 + rng.next_below(3) as u32; // weights 1..=3
+                fair.weights.insert(format!("t{i}"), w);
+                per_tenant.push(w as usize);
+            }
+            let rotation: usize = per_tenant.iter().sum();
+            let mut q = AdmissionQueue::with_fair(256, fair);
+            // Keep every lane saturated: two full rotations of backlog each.
+            let mut id = 0u64;
+            for (i, w) in per_tenant.iter().enumerate() {
+                for _ in 0..(w * 2 + 1) {
+                    id += 1;
+                    q.try_admit(treq(id, &format!("t{i}")));
+                }
+            }
+            let mut counts = BTreeMap::new();
+            for _ in 0..rotation {
+                let t = q.pop_batch(1).batch.remove(0).req.tenant.clone();
+                *counts.entry(t).or_insert(0usize) += 1;
+            }
+            for (i, w) in per_tenant.iter().enumerate() {
+                let got = counts.get(&format!("t{i}")).copied().unwrap_or(0);
+                if got != *w {
+                    return Err(format!(
+                        "tenant t{i} took {got} pops in a rotation of {rotation}, want {w}"
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 }

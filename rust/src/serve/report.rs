@@ -24,11 +24,17 @@ use super::job::{FitResponse, JobStatus};
 use super::queue::QueueStats;
 use super::worker::WorkerStats;
 
+/// The bucket absorbing tenants past the `max_tracked_tenants`
+/// cardinality cap (PROTOCOL.md §3). `~` is outside the tenant-label
+/// charset, so a real tenant can never collide with it.
+pub const OVERFLOW_TENANT: &str = "~other";
+
 /// Streaming per-tenant accounting (PROTOCOL.md §6, the `stats` reply's
 /// `tenants` object). The response router folds every response whose
 /// request carried a non-empty `tenant` into one of these; the cluster
-/// front keeps the same table over delivered responses. Purely
-/// observational — tenancy never affects scheduling or results.
+/// front keeps the same table over delivered responses. Tenancy drives
+/// scheduling (weighted-fair pops, per-tenant queue quotas — PROTOCOL.md
+/// §7) but never the result bits of an individual fit.
 #[derive(Clone, Debug, Default)]
 pub struct TenantAcc {
     /// Responses delivered with `status: "ok"`.
@@ -71,6 +77,37 @@ impl TenantAcc {
 /// `{}` when no tenanted job has been seen.
 pub fn tenants_json(tenants: &BTreeMap<String, TenantAcc>) -> Json {
     Json::Obj(tenants.iter().map(|(t, acc)| (t.clone(), acc.to_json())).collect())
+}
+
+/// [`tenants_json`] plus live queue depths: each tenant's entry gains a
+/// `queued` count (0 when drained), and a tenant whose first job is
+/// still waiting appears with *only* queue state — the `stats` reply
+/// shows it before any response has been delivered (PROTOCOL.md §6).
+pub fn tenants_json_with_queue(
+    tenants: &BTreeMap<String, TenantAcc>,
+    queued: &BTreeMap<String, usize>,
+) -> Json {
+    let mut out = BTreeMap::new();
+    for (t, acc) in tenants {
+        let mut entry = match acc.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("TenantAcc::to_json returns an object"),
+        };
+        let depth = queued.get(t).copied().unwrap_or(0);
+        entry.insert("queued".into(), Json::Num(depth as f64));
+        out.insert(t.clone(), Json::Obj(entry));
+    }
+    for (t, depth) in queued {
+        if !out.contains_key(t) {
+            let mut entry = match TenantAcc::default().to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("TenantAcc::to_json returns an object"),
+            };
+            entry.insert("queued".into(), Json::Num(*depth as f64));
+            out.insert(t.clone(), Json::Obj(entry));
+        }
+    }
+    Json::Obj(out)
 }
 
 /// Engine-time accounting for one backend, summed over completed jobs
@@ -403,6 +440,7 @@ mod tests {
             }),
             trace_id: String::new(),
             tenant: String::new(),
+            cached: false,
         }
     }
 
@@ -558,6 +596,32 @@ mod tests {
         assert_eq!(lone.to_json().get("p50_ms").unwrap().as_f64().unwrap(), 0.0);
         // No tenanted traffic at all → an empty object.
         assert!(tenants_json(&BTreeMap::new()).get("acme").is_err());
+    }
+
+    #[test]
+    fn queue_depths_merge_into_the_tenant_table() {
+        let mut by_tenant: BTreeMap<String, TenantAcc> = BTreeMap::new();
+        let mut ok = ok_response(1, "native", 0.010, 0.090);
+        ok.tenant = "acme".into();
+        by_tenant.entry(ok.tenant.clone()).or_default().observe(&ok);
+        let mut queued = BTreeMap::new();
+        queued.insert("acme".to_string(), 2usize);
+        queued.insert("newbie".to_string(), 5usize);
+        let j = tenants_json_with_queue(&by_tenant, &queued);
+        let acme = j.get("acme").unwrap();
+        assert_eq!(acme.get("answered").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(acme.get("queued").unwrap().as_usize().unwrap(), 2);
+        // A tenant with queued work but no delivered response yet still
+        // shows up — zero counts, live depth.
+        let newbie = j.get("newbie").unwrap();
+        assert_eq!(newbie.get("answered").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(newbie.get("queued").unwrap().as_usize().unwrap(), 5);
+        // Drained tenants report queued: 0, not a missing key.
+        let j = tenants_json_with_queue(&by_tenant, &BTreeMap::new());
+        assert_eq!(
+            j.get("acme").unwrap().get("queued").unwrap().as_usize().unwrap(),
+            0
+        );
     }
 
     #[test]

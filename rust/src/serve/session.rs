@@ -54,9 +54,10 @@ use crate::obs::profile::Phase;
 use crate::obs::{mint_trace_id, Counter, Registry, SpanEvent, TraceRing};
 use crate::util::json::Json;
 
+use super::cache::{self, ResultCache};
 use super::job::{FitRequest, FitResponse, JobStatus};
 use super::queue::{QueueStats, SharedQueue, Submission};
-use super::report::{ResponseAccumulator, ServeReport, TenantAcc};
+use super::report::{ResponseAccumulator, ServeReport, TenantAcc, OVERFLOW_TENANT};
 use super::worker::{self, WorkerStats};
 use super::ServeConfig;
 
@@ -68,6 +69,18 @@ struct Route {
     /// The request's tenant label (restored onto the response — workers
     /// never see tenants, exactly like client ids).
     tenant: String,
+    /// The request fingerprint (PROTOCOL.md §8), when cacheable: the
+    /// router stores the finished result under it.
+    fingerprint: Option<u64>,
+}
+
+/// Tenants with a live `serve.queue.depth{tenant=…}` gauge, so drained
+/// tenants are zeroed (not silently dropped) on the next snapshot, plus
+/// whether the cardinality cap ever pushed depth into `~other`.
+#[derive(Default)]
+struct DepthSeries {
+    tenants: std::collections::BTreeSet<String>,
+    overflowed: bool,
 }
 
 /// A running serving pool: admission queue + sharded workers + response
@@ -99,7 +112,14 @@ pub struct ServeSession {
     ring: Arc<TraceRing>,
     /// Per-tenant accounting table, fed by the router as responses pass
     /// through (the `tenants` object of the `stats` reply, PROTOCOL.md §6).
+    /// Capped at `max_tracked_tenants` distinct tenants; overflow lands
+    /// in the [`OVERFLOW_TENANT`] bucket (PROTOCOL.md §3).
     tenants: Arc<Mutex<BTreeMap<String, TenantAcc>>>,
+    /// Fingerprint-keyed result cache (PROTOCOL.md §8), consulted before
+    /// admission and fed by the router.
+    cache: Arc<Mutex<ResultCache>>,
+    /// Tenants currently carrying a `serve.queue.depth{tenant=…}` gauge.
+    depth_series: Mutex<DepthSeries>,
 }
 
 impl ServeSession {
@@ -107,9 +127,10 @@ impl ServeSession {
     /// router, and return the live session.
     pub fn start(cfg: ServeConfig) -> Result<ServeSession> {
         cfg.validate()?;
-        let queue = Arc::new(SharedQueue::new(cfg.queue_capacity));
+        let queue = Arc::new(SharedQueue::with_fair(cfg.queue_capacity, cfg.fair()));
         let routes: Arc<Mutex<HashMap<u64, Route>>> = Arc::new(Mutex::new(HashMap::new()));
         let registry = Arc::new(Registry::new());
+        let cache = Arc::new(Mutex::new(ResultCache::new(cfg.cache_capacity, &registry)));
         let ring = Arc::new(TraceRing::default());
         let (tx, rx) = mpsc::channel::<FitResponse>();
         let workers = (0..cfg.workers)
@@ -128,8 +149,10 @@ impl ServeSession {
             let ring = Arc::clone(&ring);
             let registry = Arc::clone(&registry);
             let tenants = Arc::clone(&tenants);
+            let cache = Arc::clone(&cache);
+            let max_tracked = cfg.max_tracked_tenants;
             std::thread::spawn(move || {
-                route_responses(rx, &routes, &ring, &registry, &tenants)
+                route_responses(rx, &routes, &ring, &registry, &tenants, &cache, max_tracked)
             })
         };
         Ok(ServeSession {
@@ -145,6 +168,8 @@ impl ServeSession {
             registry,
             ring,
             tenants,
+            cache,
+            depth_series: Mutex::new(DepthSeries::default()),
         })
     }
 
@@ -183,6 +208,43 @@ impl ServeSession {
         shed_full.add(stats.shed_full.saturating_sub(shed_full.get()));
         let shed_deadline = self.registry.counter(names::SERVE_QUEUE_SHED_DEADLINE);
         shed_deadline.add(stats.shed_deadline.saturating_sub(shed_deadline.get()));
+        // Per-tenant queue depth (`serve.queue.depth{tenant=…}`,
+        // PROTOCOL.md §6/§11), capped like the accounting table: past
+        // `max_tracked_tenants` distinct series, further tenants aggregate
+        // into `~other`. Tenants that drained since the last snapshot are
+        // zeroed, not dropped, so scrapes watch the queue empty out.
+        {
+            let depths = self.queue.tenant_depths();
+            let mut series = self.depth_series.lock().expect("depth series poisoned");
+            let mut overflow = 0usize;
+            for (t, n) in &depths {
+                if series.tenants.contains(t)
+                    || series.tenants.len() < self.cfg.max_tracked_tenants
+                {
+                    series.tenants.insert(t.clone());
+                    self.registry
+                        .gauge_with(names::SERVE_QUEUE_DEPTH, &[("tenant", t)])
+                        .set(*n as i64);
+                } else {
+                    overflow += *n;
+                }
+            }
+            for t in &series.tenants {
+                if !depths.contains_key(t) {
+                    self.registry
+                        .gauge_with(names::SERVE_QUEUE_DEPTH, &[("tenant", t)])
+                        .set(0);
+                }
+            }
+            if overflow > 0 {
+                series.overflowed = true;
+            }
+            if series.overflowed {
+                self.registry
+                    .gauge_with(names::SERVE_QUEUE_DEPTH, &[("tenant", OVERFLOW_TENANT)])
+                    .set(overflow as i64);
+            }
+        }
         self.registry.snapshot()
     }
 
@@ -209,10 +271,24 @@ impl ServeSession {
         self.ring.peek_json()
     }
 
-    /// Per-tenant rollups (answered / shed / p50 / p95) for the `tenants`
-    /// object of the `stats` reply (PROTOCOL.md §6).
+    /// Per-tenant rollups (answered / shed / p50 / p95 / queued) for the
+    /// `tenants` object of the `stats` reply (PROTOCOL.md §6). Queue
+    /// depths merge in live, so a tenant whose first job is still queued
+    /// already shows up with `queued` > 0.
     pub fn tenants_json(&self) -> Json {
-        super::report::tenants_json(&self.tenants.lock().expect("tenant table poisoned"))
+        super::report::tenants_json_with_queue(
+            &self.tenants.lock().expect("tenant table poisoned"),
+            &self.queue.tenant_depths(),
+        )
+    }
+
+    /// Handle the `{"op":"cache"}` control frame (PROTOCOL.md §6):
+    /// report the result cache's size/capacity, clearing it first when
+    /// `clear` is set.
+    pub fn cache_control(&self, clear: bool) -> Json {
+        let mut c = self.cache.lock().expect("result cache poisoned");
+        let cleared = clear.then(|| c.clear());
+        cache::cache_json(c.len(), c.capacity(), cleared)
     }
 
     /// Live snapshot of the admission queue's counters (the `stats`
@@ -240,9 +316,15 @@ impl ServeSession {
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let client_id = req.id;
         self.submitted.inc();
+        let fingerprint = cache::fingerprint_of(&req);
         self.routes.lock().expect("route map poisoned").insert(
             ticket,
-            Route { client_id, reply: reply.clone(), tenant: req.tenant.clone() },
+            Route {
+                client_id,
+                reply: reply.clone(),
+                tenant: req.tenant.clone(),
+                fingerprint,
+            },
         );
         let mut req = req;
         req.id = ticket;
@@ -256,11 +338,29 @@ impl ServeSession {
                 .num("id", client_id as f64)
                 .num("ticket", ticket as f64),
         );
-        if let Submission::Shed { req, reason } = self.queue.submit(req, self.cfg.shed_policy) {
+        // Result cache (PROTOCOL.md §8): a hit replays the finished reply
+        // without touching the queue — it still flows through the router,
+        // so id restoration, accounting and tracing are identical to a
+        // computed response.
+        if let Some(fp) = fingerprint {
+            let hit = self
+                .cache
+                .lock()
+                .expect("result cache poisoned")
+                .lookup(fp, &req);
+            if let Some(resp) = hit {
+                let tx = self.tx.as_ref().expect("session is live until shutdown");
+                let _ = tx.send(resp);
+                return ticket;
+            }
+        }
+        if let Submission::Shed { req, reason, waited_seconds } =
+            self.queue.submit(req, self.cfg.shed_policy)
+        {
             // Route the shed response like any other so the submitter
             // sees its own id and the accumulator counts the shed.
             let tx = self.tx.as_ref().expect("session is live until shutdown");
-            let mut resp = FitResponse::shed(req.id, reason, 0.0);
+            let mut resp = FitResponse::shed(req.id, reason, waited_seconds);
             resp.trace_id = req.trace_id;
             let _ = tx.send(resp);
         }
@@ -336,6 +436,8 @@ fn route_responses(
     ring: &TraceRing,
     registry: &Registry,
     tenants: &Mutex<BTreeMap<String, TenantAcc>>,
+    cache: &Mutex<ResultCache>,
+    max_tracked_tenants: usize,
 ) -> ResponseAccumulator {
     let queue_wait_ms = registry.histogram(names::SERVE_QUEUE_WAIT_MS);
     let latency_ms = registry.histogram(names::SERVE_LATENCY_MS);
@@ -364,11 +466,32 @@ fn route_responses(
             );
         }
         match route {
-            Some(Route { client_id, reply, tenant }) => {
+            Some(Route { client_id, reply, tenant, fingerprint }) => {
                 resp.id = client_id;
                 resp.tenant = tenant;
+                // Seed the result cache with freshly computed successes
+                // (replayed hits never re-insert — `ResultCache::insert`
+                // skips `cached` responses).
+                if let Some(fp) = fingerprint {
+                    if resp.status == JobStatus::Ok {
+                        cache.lock().expect("result cache poisoned").insert(fp, &resp);
+                    }
+                }
                 if !resp.tenant.is_empty() {
-                    let t = resp.tenant.as_str();
+                    // Cardinality cap (PROTOCOL.md §3): once the table
+                    // holds `max_tracked_tenants` distinct tenants, new
+                    // ones roll up into `~other` — series and table agree.
+                    let label = {
+                        let table = tenants.lock().expect("tenant table poisoned");
+                        if table.contains_key(&resp.tenant)
+                            || table.len() < max_tracked_tenants
+                        {
+                            resp.tenant.clone()
+                        } else {
+                            OVERFLOW_TENANT.to_string()
+                        }
+                    };
+                    let t = label.as_str();
                     registry
                         .histogram_with(names::SERVE_LATENCY_MS, &[("tenant", t)])
                         .record_ms(resp.latency_seconds() * 1e3);
@@ -383,7 +506,7 @@ fn route_responses(
                     tenants
                         .lock()
                         .expect("tenant table poisoned")
-                        .entry(resp.tenant.clone())
+                        .entry(label)
                         .or_default()
                         .observe(&resp);
                 }
@@ -755,6 +878,141 @@ mod tests {
         let resp = rx.recv().unwrap();
         assert_eq!(resp.trace_id.len(), 16, "the front mints when the client doesn't");
         assert!(resp.trace_id.chars().all(|c| c.is_ascii_hexdigit()));
+        session.shutdown();
+    }
+
+    #[test]
+    fn cache_hit_replays_identical_bits_under_the_new_identity() {
+        let session = ServeSession::start(ServeConfig { workers: 1, ..Default::default() })
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        session.submit(job(1, 5), &tx);
+        let cold = rx.recv().unwrap();
+        assert_eq!(cold.status, JobStatus::Ok, "{}", cold.detail);
+        assert!(!cold.cached, "the first computation is not a replay");
+        // Same request parameters, different id: the scheduling identity
+        // is outside the fingerprint (PROTOCOL.md §8), so this hits.
+        session.submit(job(2, 5), &tx);
+        let hit = rx.recv().unwrap();
+        assert_eq!(hit.id, 2, "replayed under the submitter's id");
+        assert!(hit.cached, "the replay is marked");
+        let (a, b) = (cold.fit.as_ref().unwrap(), hit.fit.as_ref().unwrap());
+        assert_eq!(a.assignments, b.assignments, "bit-identical clustering");
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(
+            cold.summary.as_ref().unwrap().inertia,
+            hit.summary.as_ref().unwrap().inertia
+        );
+        let m = session.metrics();
+        let counters = m.get("counters").unwrap();
+        assert_eq!(counters.get("serve.cache.hits").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(counters.get("serve.cache.misses").unwrap().as_usize().unwrap(), 1);
+        // A hit never touches the queue but still routes + accounts.
+        let report = session.shutdown();
+        assert_eq!(report.submitted, 2);
+        assert_eq!(report.completed, 2);
+    }
+
+    #[test]
+    fn cache_control_reports_and_clears() {
+        let session = ServeSession::start(ServeConfig { workers: 1, ..Default::default() })
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        session.submit(job(1, 5), &tx);
+        rx.recv().unwrap();
+        let peek = session.cache_control(false);
+        assert_eq!(peek.get("size").unwrap().as_usize().unwrap(), 1);
+        assert!(peek.get("cleared").is_err(), "no cleared key without clear");
+        let cleared = session.cache_control(true);
+        assert_eq!(cleared.get("cleared").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(cleared.get("size").unwrap().as_usize().unwrap(), 0);
+        // Post-clear, the same request recomputes (a miss).
+        session.submit(job(2, 5), &tx);
+        let resp = rx.recv().unwrap();
+        assert!(!resp.cached);
+        session.shutdown();
+    }
+
+    #[test]
+    fn cancel_after_completion_is_a_no_op_with_one_terminal_reply() {
+        // Regression (the cancel/completion race): cancelling a ticket
+        // whose job already answered must return false and must NOT
+        // produce a second reply.
+        let session = ServeSession::start(ServeConfig { workers: 1, ..Default::default() })
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let ticket = session.submit(job(1, 5), &tx);
+        let first = rx.recv().unwrap();
+        assert_eq!(first.status, JobStatus::Ok, "{}", first.detail);
+        assert!(!session.cancel(ticket), "the job already answered");
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_millis(100)).is_err(),
+            "exactly one terminal reply per job"
+        );
+        let report = session.shutdown();
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.shed, 0);
+    }
+
+    #[test]
+    fn tenant_cardinality_is_capped_into_the_overflow_bucket() {
+        let session = ServeSession::start(ServeConfig {
+            workers: 1,
+            max_tracked_tenants: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        for (i, t) in ["alpha", "beta", "gamma", "delta"].iter().enumerate() {
+            let mut r = job(i as u64 + 1, i as u64 + 1);
+            r.tenant = (*t).into();
+            session.submit(r, &tx);
+            // Serialize so the table fills deterministically (alpha, beta
+            // tracked; gamma, delta overflow).
+            rx.recv().unwrap();
+        }
+        let t = session.tenants_json();
+        assert!(t.get("alpha").is_ok());
+        assert!(t.get("beta").is_ok());
+        assert!(t.get("gamma").is_err(), "third tenant rolls into ~other");
+        let other = t.get("~other").unwrap();
+        assert_eq!(other.get("answered").unwrap().as_usize().unwrap(), 2);
+        session.shutdown();
+    }
+
+    #[test]
+    fn tenant_queue_depth_gauges_appear_and_zero_after_drain() {
+        let session = ServeSession::start(ServeConfig { workers: 1, ..Default::default() })
+            .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let mut r = job(1, 9);
+        r.tenant = "acme".into();
+        session.submit(r, &tx);
+        rx.recv().unwrap();
+        // The job drained before this snapshot; the series may simply not
+        // exist yet (depth observed only at snapshot time) — but once a
+        // tenant HAS been seen queued, later snapshots zero it. Force the
+        // "seen" path by snapshotting while a job is queued.
+        let mut slow = job(2, 10);
+        slow.tenant = "acme".into();
+        slow.max_points = 4_000;
+        slow.kmeans.k = 8;
+        session.submit(slow, &tx); // occupies the worker
+        let mut queued = job(3, 11);
+        queued.tenant = "acme".into();
+        session.submit(queued, &tx);
+        let m = session.metrics();
+        let gauges = m.get("gauges").unwrap();
+        if let Ok(g) = gauges.get("serve.queue.depth{tenant=\"acme\"}") {
+            assert!(g.as_usize().unwrap() <= 2);
+        }
+        rx.recv().unwrap();
+        rx.recv().unwrap();
+        let m = session.metrics();
+        let gauges = m.get("gauges").unwrap();
+        if let Ok(g) = gauges.get("serve.queue.depth{tenant=\"acme\"}") {
+            assert_eq!(g.as_usize().unwrap(), 0, "drained tenants zero, not vanish");
+        }
         session.shutdown();
     }
 

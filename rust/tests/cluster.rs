@@ -329,6 +329,77 @@ fn cluster_fit_yields_metrics_trace_and_work_counters() {
 }
 
 #[test]
+fn duplicate_fits_replay_from_the_front_cache_bit_identically() {
+    // The §8 result cache on the cluster front: the second submission of
+    // a fingerprint-identical fit (different id / trace_id — identity
+    // keys are stripped) replays the stored reply without consuming a
+    // shard, bit-identical to both the computed reply and a direct run.
+    let (addr, handle, thread) =
+        start_cluster(2, "cache", ServeConfig { workers: 1, ..Default::default() });
+    let mut cc = connect(&addr);
+    let a = job(11, "blobs", 700, 4, 81);
+    let mut b = job(12, "blobs", 700, 4, 81);
+    b.trace_id = "beefbeefbeefbeef".into();
+
+    cc.submit(&a).unwrap();
+    // Wait for the computed reply so it is cached before the duplicate.
+    let first = cc.recv_response().unwrap();
+    assert_eq!(first.id, 11);
+    assert_eq!(first.status, JobStatus::Ok, "{}", first.detail);
+    assert!(!first.cached, "a cold fit is computed, not replayed");
+
+    cc.submit(&b).unwrap();
+    let second = cc.recv_response().unwrap();
+    assert_eq!(second.id, 12, "the replay answers under the caller's id");
+    assert_eq!(second.status, JobStatus::Ok, "{}", second.detail);
+    assert!(second.cached, "a duplicate fit replays from the front cache");
+    assert_eq!(second.trace_id, "beefbeefbeefbeef", "identity keys are the caller's");
+    assert_eq!(second.queue_seconds, 0.0, "a replay waits on no queue");
+    assert_eq!(second.service_seconds, 0.0, "a replay runs no engine");
+
+    let want = direct(&a);
+    for (tag, r) in [("computed", &first), ("cached", &second)] {
+        let s = r.summary.expect("ok replies carry a summary");
+        assert_eq!(
+            s.assignments_fnv,
+            assignments_checksum(&want.fit.assignments),
+            "{tag} fingerprint"
+        );
+        assert_eq!(s.inertia, want.fit.inertia, "{tag} inertia");
+        assert_eq!(s.iterations, want.fit.iterations, "{tag} iterations");
+    }
+
+    // The front's registry counted the hit, and the §6 cache frame
+    // reports + clears the front-side entries over the wire.
+    let m = cc.metrics().unwrap();
+    assert_eq!(
+        m.get("counters").unwrap().get("serve.cache.hits").unwrap().as_usize().unwrap(),
+        1
+    );
+    let mut frame = BTreeMap::new();
+    frame.insert("op".to_string(), kpynq::util::json::Json::Str("cache".into()));
+    frame.insert("clear".to_string(), kpynq::util::json::Json::Bool(true));
+    cc.send_frame(&kpynq::util::json::Json::Obj(frame)).unwrap();
+    loop {
+        match cc.next_event().unwrap() {
+            kpynq::cluster::ClientEvent::Notice(j) => {
+                assert_eq!(j.get("op").unwrap().as_str().unwrap(), "cache");
+                assert!(j.get("cleared").unwrap().as_usize().unwrap() >= 1, "{j:?}");
+                assert_eq!(j.get("size").unwrap().as_usize().unwrap(), 0);
+                break;
+            }
+            other => panic!("expected the cache reply, got {other:?}"),
+        }
+    }
+
+    handle.shutdown();
+    let report = thread.join().unwrap();
+    assert_eq!(report.submitted, 2);
+    assert_eq!(report.completed, 2, "cached replays count as completions");
+    assert_eq!(report.dropped_replies, 0);
+}
+
+#[test]
 fn router_pins_batch_keys_and_breaks_ties_low() {
     // The policy pinned at the public API (unit-level detail lives in
     // cluster::router's own tests): affinity beats load, new keys go

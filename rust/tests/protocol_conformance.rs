@@ -120,6 +120,12 @@ enum Expect {
     /// A full §4 `ok` response: every always-present scalar, the
     /// `ok`-only fit fields, and a 16-lowercase-hex-digit §8 fingerprint.
     OkJob(u64),
+    /// A §4 `ok` response replayed from the result cache: the full ok
+    /// surface plus `cached:true` and zeroed timing (§4, §8).
+    CachedOkJob(u64),
+    /// A `{"op":"cache"}` reply: `size` + `capacity`, with `cleared`
+    /// present exactly when the frame asked for a clear (§6).
+    CacheStats { cleared: bool },
     /// A §4 `failed` response with a non-empty `detail`.
     FailedJob(u64),
     /// A §10 `partial` frame: id/epoch/shard_index echoed, `counts` one
@@ -142,6 +148,13 @@ struct Vector {
 
 fn ok_job_line(id: u64) -> String {
     format!("{{\"id\":{id},\"dataset\":\"blobs\",\"data_seed\":7,\"max_points\":300,\"k\":3,\"seed\":9}}")
+}
+
+/// A job body used *only* by the cache vector (distinct `data_seed`), so
+/// its first send is a guaranteed cache miss no matter which vectors ran
+/// before it on the shared server.
+fn dup_job_line(id: u64) -> String {
+    format!("{{\"id\":{id},\"dataset\":\"blobs\",\"data_seed\":13,\"max_points\":300,\"k\":3,\"seed\":9}}")
 }
 
 /// A §10 `partial_fit` frame: the §3 job body of [`ok_job_line`] plus the
@@ -295,6 +308,35 @@ fn vectors() -> Vec<Vector> {
             name: "bye delivers every owed reply, then closes (§6, §2)",
             send: vec![ok_job_line(9), r#"{"op":"bye"}"#.into()],
             expect: vec![Expect::OkJob(9), Expect::Closed],
+        },
+        Vector {
+            name: "a tenant label outside the §3 charset is rejected at admission (§3, §5)",
+            send: vec![r#"{"id":61,"k":3,"tenant":"no spaces"}"#.into()],
+            expect: vec![Expect::ErrorContains("tenant label")],
+        },
+        Vector {
+            name: "a duplicate fit replays from the result cache with cached:true (§4, §8)",
+            // data_seed 13 appears nowhere else in the suite, so the
+            // first send is a deterministic miss and the second a hit —
+            // the ids differ on purpose: identity keys are stripped from
+            // the §8 fingerprint.
+            send: vec![dup_job_line(62), dup_job_line(63)],
+            expect: vec![Expect::OkJob(62), Expect::CachedOkJob(63)],
+        },
+        Vector {
+            name: "the cache op reports size and capacity (§6)",
+            send: vec![r#"{"op":"cache"}"#.into()],
+            expect: vec![Expect::CacheStats { cleared: false }],
+        },
+        Vector {
+            name: "cache clear:true drops every entry and reports cleared (§6)",
+            send: vec![r#"{"op":"cache","clear":true}"#.into()],
+            expect: vec![Expect::CacheStats { cleared: true }],
+        },
+        Vector {
+            name: "a non-boolean cache clear is a §5 error (§6)",
+            send: vec![r#"{"op":"cache","clear":"yes"}"#.into()],
+            expect: vec![Expect::ErrorContains("must be a boolean")],
         },
         // --- §10 map-reduce ops ------------------------------------------
         Vector {
@@ -494,6 +536,40 @@ fn check(expect: &Expect, reply: Option<Json>, server: &str, vector: &str) {
                 fnv.chars().all(|c| c.is_ascii_hexdigit() && !c.is_ascii_uppercase()),
                 "{ctx}: fingerprint '{fnv}' is not lowercase hex"
             );
+        }
+        Expect::CachedOkJob(id) => {
+            assert_eq!(j.get("id").unwrap().as_usize().unwrap() as u64, *id, "{ctx}");
+            assert_eq!(j.get("status").unwrap().as_str().unwrap(), "ok", "{ctx}: {j:?}");
+            assert!(
+                matches!(j.get("cached"), Ok(Json::Bool(true))),
+                "{ctx}: a replayed reply must carry cached:true (§4), got {j:?}"
+            );
+            // Replays waited on no queue and ran no engine (§8).
+            assert_eq!(j.get("queue_ms").unwrap().as_f64().unwrap(), 0.0, "{ctx}: queue_ms");
+            assert_eq!(j.get("service_ms").unwrap().as_f64().unwrap(), 0.0, "{ctx}: service_ms");
+            // The result surface is still the full §4 ok shape.
+            assert!(j.get("inertia").and_then(|v| v.as_f64()).is_ok(), "{ctx}: inertia");
+            let fnv = j.get("assignments_fnv").unwrap().as_str().unwrap().to_string();
+            assert_eq!(fnv.len(), 16, "{ctx}: fingerprint '{fnv}' is not 16 digits");
+        }
+        Expect::CacheStats { cleared } => {
+            assert_eq!(j.get("op").unwrap().as_str().unwrap(), "cache", "{ctx}: {j:?}");
+            assert!(j.get("size").and_then(|v| v.as_usize()).is_ok(), "{ctx}: size");
+            let cap = j.get("capacity").unwrap().as_usize().unwrap();
+            assert!(cap > 0, "{ctx}: a default-config server caches");
+            if *cleared {
+                assert!(
+                    j.get("cleared").and_then(|v| v.as_usize()).is_ok(),
+                    "{ctx}: clear:true reports how many entries dropped (§6)"
+                );
+                assert_eq!(
+                    j.get("size").unwrap().as_usize().unwrap(),
+                    0,
+                    "{ctx}: size is the post-clear count"
+                );
+            } else {
+                assert!(j.get("cleared").is_err(), "{ctx}: cleared only after a clear (§6)");
+            }
         }
         Expect::FailedJob(id) => {
             assert_eq!(j.get("id").unwrap().as_usize().unwrap() as u64, *id, "{ctx}");

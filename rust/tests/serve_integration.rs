@@ -9,7 +9,7 @@ use kpynq::coordinator::{KpynqSystem, SystemConfig, SystemOutput};
 use kpynq::kmeans::KMeansConfig;
 use kpynq::runtime::native::NativeEngine;
 use kpynq::serve::job::assignments_checksum;
-use kpynq::serve::{FitRequest, JobStatus, ServeConfig, Server};
+use kpynq::serve::{FitRequest, JobStatus, ServeConfig, Server, ShedPolicy};
 use kpynq::util::json::Json;
 
 /// The reference: run the request directly through the coordinator, no
@@ -120,6 +120,116 @@ fn expired_deadlines_shed_instead_of_executing() {
     assert_eq!(outcome.report.shed, 1);
     assert_eq!(outcome.report.shed_deadline, 1);
     assert_eq!(outcome.report.completed, 2);
+}
+
+#[test]
+fn a_blocked_submitter_sheds_on_deadline_instead_of_waiting_forever() {
+    // The overload-clock fix: under `ShedPolicy::Block` the queue-wait
+    // clock used to start only at admission, so a job whose deadline
+    // expired while its submitter was parked on a full queue neither
+    // shed on time nor reported the blocked wait. The clock now starts
+    // at submission: the expired job sheds while the queue is *still*
+    // full, and its reported wait covers the blocked time.
+    let heavy = |id: u64| FitRequest {
+        id,
+        max_points: 8000,
+        kmeans: KMeansConfig { k: 12, seed: id, ..Default::default() },
+        ..Default::default()
+    };
+    let jobs = vec![
+        heavy(1), // occupies the single worker for a long while
+        heavy(2), // fills the one-slot queue behind it
+        FitRequest {
+            id: 3,
+            max_points: 600,
+            deadline_ms: Some(60), // expires while the submitter is blocked
+            ..Default::default()
+        },
+    ];
+    let outcome = Server::new(ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        queue_capacity: 1,
+        ..Default::default() // Block policy
+    })
+    .unwrap()
+    .run(jobs)
+    .unwrap();
+    assert_eq!(outcome.responses[0].status, JobStatus::Ok);
+    assert_eq!(outcome.responses[1].status, JobStatus::Ok);
+    let blocked = &outcome.responses[2];
+    assert_eq!(blocked.status, JobStatus::Shed, "detail: {}", blocked.detail);
+    assert!(blocked.detail.contains("deadline"), "detail: {}", blocked.detail);
+    assert!(
+        blocked.detail.contains("blocked"),
+        "the reason names the blocked wait: {}",
+        blocked.detail
+    );
+    assert!(
+        blocked.queue_seconds >= 0.05,
+        "queue-wait is measured from submission, got {}s",
+        blocked.queue_seconds
+    );
+    assert_eq!(outcome.report.shed_deadline, 1);
+    assert_eq!(outcome.report.completed, 2);
+}
+
+#[test]
+fn a_flooding_tenant_is_quota_shed_while_the_light_tenant_completes() {
+    // Two-tenant overload acceptance: a flooder that submits faster than
+    // the pool drains takes the per-tenant quota shed; the light tenant,
+    // weighted 4:1 and far under its own quota, completes everything.
+    let mut weights = std::collections::BTreeMap::new();
+    weights.insert("light".to_string(), 4u32);
+    weights.insert("flood".to_string(), 1u32);
+    let job = |id: u64, tenant: &str, pts: usize| FitRequest {
+        id,
+        tenant: tenant.into(),
+        max_points: pts,
+        kmeans: KMeansConfig { k: 4, seed: id, ..Default::default() },
+        ..Default::default()
+    };
+    let mut jobs = Vec::new();
+    for id in 1..=16 {
+        jobs.push(job(id, "flood", 2000));
+    }
+    jobs.push(job(90, "light", 400));
+    jobs.push(job(91, "light", 400));
+    let outcome = Server::new(ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        shed_policy: ShedPolicy::ShedArrivals,
+        tenant_weights: weights,
+        tenant_queue_cap: 2,
+        ..Default::default()
+    })
+    .unwrap()
+    .run(jobs)
+    .unwrap();
+
+    let light: Vec<_> = outcome.responses.iter().filter(|r| r.tenant == "light").collect();
+    assert_eq!(light.len(), 2);
+    for r in &light {
+        assert_eq!(r.status, JobStatus::Ok, "light job {}: {}", r.id, r.detail);
+    }
+    let flood_shed: Vec<_> = outcome
+        .responses
+        .iter()
+        .filter(|r| r.tenant == "flood" && r.status == JobStatus::Shed)
+        .collect();
+    assert!(!flood_shed.is_empty(), "a 16-deep flood against a 2-slot quota must shed");
+    for r in &flood_shed {
+        assert_eq!(r.detail, "tenant queue quota exceeded", "flood job {}", r.id);
+    }
+    let flood_ok =
+        outcome.responses.iter().filter(|r| r.tenant == "flood" && r.status == JobStatus::Ok);
+    assert_eq!(
+        flood_ok.count() + flood_shed.len(),
+        16,
+        "every flood job answers exactly once, ok or shed"
+    );
+    assert_eq!(outcome.report.completed as usize, 18 - flood_shed.len());
+    assert_eq!(outcome.report.shed as usize, flood_shed.len());
 }
 
 #[test]

@@ -473,6 +473,74 @@ fn trace_and_metrics_surface_over_the_wire() {
 }
 
 #[test]
+fn cache_hits_replay_byte_identical_results_over_the_wire() {
+    // The §8 result cache on the daemon: a fingerprint-identical resend
+    // (identity keys differ — they are stripped) replays the stored
+    // reply with `cached:true`, byte-identical on every result key.
+    let (addr, _handle, thread) = start_daemon(
+        ServeConfig { workers: 1, ..Default::default() },
+        NetConfig::default(),
+    );
+    let mut c = Client::connect(&addr);
+    c.expect_greeting();
+    let line = job_line(1, 900, 4, 31);
+    c.send(&line);
+    let first = c.read_json();
+    assert_eq!(first.get("status").unwrap().as_str().unwrap(), "ok");
+    assert!(first.get("cached").is_err(), "a cold fit is computed, not replayed");
+    assert_matches_direct(&first, &line);
+
+    c.send(&job_line(2, 900, 4, 31)); // same fit, new id
+    let second = c.read_json();
+    assert_eq!(second.get("id").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(
+        second.get("cached").unwrap(),
+        &Json::Bool(true),
+        "a duplicate fit replays from the cache: {second:?}"
+    );
+    assert_eq!(second.get("queue_ms").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(second.get("service_ms").unwrap().as_f64().unwrap(), 0.0);
+    // Byte-identity of the result surface: strip the identity, timing
+    // and marker keys; every remaining key must serialize identically.
+    let strip = |j: &Json| -> std::collections::BTreeMap<String, String> {
+        match j {
+            Json::Obj(m) => m
+                .iter()
+                .filter(|(k, _)| {
+                    !matches!(k.as_str(), "id" | "trace_id" | "queue_ms" | "service_ms" | "cached")
+                })
+                .map(|(k, v)| (k.clone(), v.to_string()))
+                .collect(),
+            _ => panic!("replies are objects"),
+        }
+    };
+    assert_eq!(strip(&first), strip(&second), "replayed result bytes must be identical");
+
+    // §6 cache frame + §11 counters, then clear and recompute.
+    c.send(r#"{"op":"cache"}"#);
+    let info = c.read_json();
+    assert_eq!(info.get("op").unwrap().as_str().unwrap(), "cache");
+    assert_eq!(info.get("size").unwrap().as_usize().unwrap(), 1);
+    assert!(info.get("capacity").unwrap().as_usize().unwrap() >= 1);
+    c.send(r#"{"op":"metrics"}"#);
+    let counters = c.read_json().get("counters").unwrap().clone();
+    assert_eq!(counters.get("serve.cache.hits").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(counters.get("serve.cache.misses").unwrap().as_usize().unwrap(), 1);
+    c.send(r#"{"op":"cache","clear":true}"#);
+    let cleared = c.read_json();
+    assert_eq!(cleared.get("cleared").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(cleared.get("size").unwrap().as_usize().unwrap(), 0);
+    c.send(&job_line(3, 900, 4, 31));
+    let third = c.read_json();
+    assert_eq!(third.get("status").unwrap().as_str().unwrap(), "ok");
+    assert!(third.get("cached").is_err(), "a cleared cache computes again");
+
+    c.send(r#"{"op":"shutdown"}"#);
+    let report = thread.join().unwrap();
+    assert_eq!(report.completed, 3, "cached replays count as completions");
+}
+
+#[test]
 fn served_deadline_and_shed_semantics_hold_over_the_wire() {
     // A deadline_ms of 0 always sheds (PROTOCOL.md §7's escape hatch) —
     // the wire reply must say so rather than fabricate a clustering.

@@ -50,7 +50,7 @@
 //! this double *and* the production daemon, which is what keeps the two
 //! from diverging.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -60,6 +60,7 @@ use std::time::Duration;
 use kpynq::coordinator::{KpynqSystem, SystemConfig};
 use kpynq::obs::expo::render_prometheus;
 use kpynq::obs::metrics::{names, Registry};
+use kpynq::serve::cache::fingerprint_of;
 use kpynq::serve::codec::{write_line, LineEvent, LineReader, MAX_LINE_BYTES};
 use kpynq::serve::job::{assignments_checksum, FitRequest};
 use kpynq::serve::net::PROTO_VERSION;
@@ -68,6 +69,20 @@ use kpynq::util::json::Json;
 
 /// Accept-poll tick for the fake's (non-blocking) listener loop.
 const ACCEPT_TICK: Duration = Duration::from_millis(5);
+
+/// Entries in the fake's fingerprint replay cache — the default the
+/// production fronts ship with, so the §6 `cache` reply shape matches.
+const CACHE_CAP: usize = 64;
+
+/// Fingerprint-keyed replay cache (PROTOCOL.md §8): raw reply lines
+/// keyed by the §8 request fingerprint, FIFO-bounded. Deliberately not
+/// the production `ResultCache` — the double must hold the *wire*
+/// surface (the `cached` key, identity rewrite, §6 `cache` frame) to the
+/// documented shape from its own implementation, not a shared one.
+struct ReplayCache {
+    entries: HashMap<u64, Json>,
+    order: VecDeque<u64>,
+}
 
 /// One scripted fault, consumed by one accepted connection.
 #[derive(Clone, Copy, Debug)]
@@ -123,6 +138,9 @@ struct SharedState {
     /// cluster front scraping this double gets mergeable shard series,
     /// not a hollow mock (PROTOCOL.md §11).
     registry: Registry,
+    /// Result replay cache shared across connections, like the real
+    /// fronts' (a duplicate fit hits even over a reconnect).
+    cache: Mutex<ReplayCache>,
 }
 
 /// A running fake shard: one listener, real protocol, scripted faults.
@@ -151,11 +169,15 @@ impl FakeShard {
             submitted: AtomicU64::new(0),
             answered: AtomicU64::new(0),
             registry: Registry::new(),
+            cache: Mutex::new(ReplayCache { entries: HashMap::new(), order: VecDeque::new() }),
         });
         // Like the real session, the canonical series exist from start —
         // an idle shard scrapes as zeros, not as an empty body.
         shared.registry.counter(names::SERVE_JOBS_SUBMITTED);
         shared.registry.histogram(names::SERVE_LATENCY_MS);
+        shared.registry.counter(names::SERVE_CACHE_HITS);
+        shared.registry.counter(names::SERVE_CACHE_MISSES);
+        shared.registry.counter(names::SERVE_CACHE_EVICTIONS);
         let accept_shared = Arc::clone(&shared);
         let accept_thread = std::thread::spawn(move || {
             while !accept_shared.stop.load(Ordering::SeqCst) {
@@ -566,6 +588,31 @@ fn control_frame(
             );
             true
         }
+        "cache" => {
+            // §6 cache frame — same `clear` validation and reply shape
+            // as the production fronts (`serve::cache::cache_json`).
+            let clear = match map.get("clear") {
+                None => false,
+                Some(Json::Bool(b)) => *b,
+                Some(_) => {
+                    let _ =
+                        write_line(out, &error_reply(lineno, "cache 'clear' must be a boolean"));
+                    return true;
+                }
+            };
+            let mut cache = shared.cache.lock().expect("fake cache poisoned");
+            let mut pairs = vec![("op", Json::Str("cache".into()))];
+            if clear {
+                let n = cache.entries.len();
+                cache.entries.clear();
+                cache.order.clear();
+                pairs.push(("cleared", Json::Num(n as f64)));
+            }
+            pairs.push(("size", Json::Num(cache.entries.len() as f64)));
+            pairs.push(("capacity", Json::Num(CACHE_CAP as f64)));
+            let _ = write_line(out, &op_frame(&pairs));
+            true
+        }
         "partial_fit" => {
             match partial.partial_fit(&Json::Obj(map.clone())) {
                 Ok(reply) => write_partial_reply("partial_fit", map, reply, fault, fault_fired, out),
@@ -675,7 +722,7 @@ fn answer_job(
             ok
         }
         _ => {
-            let ok = write_line(out, &job_reply_json(req).to_string()).is_ok();
+            let ok = write_line(out, &cached_reply_json(req, shared).to_string()).is_ok();
             if ok {
                 *answered_here += 1;
                 shared.answered.fetch_add(1, Ordering::SeqCst);
@@ -684,6 +731,52 @@ fn answer_job(
             ok
         }
     }
+}
+
+/// Answer through the fake's fingerprint cache (PROTOCOL.md §8): a hit
+/// replays the stored reply under the caller's identity with
+/// `cached:true`; a miss runs the real fit and stores successful
+/// replies, FIFO-bounded at [`CACHE_CAP`]. Faulted replies bypass this
+/// path — a scripted tear or garble must apply to a freshly built line.
+fn cached_reply_json(req: &FitRequest, shared: &SharedState) -> Json {
+    let Some(fp) = fingerprint_of(req) else {
+        return job_reply_json(req); // file datasets are never cached
+    };
+    {
+        let mut cache = shared.cache.lock().expect("fake cache poisoned");
+        if let Some(stored) = cache.entries.get(&fp) {
+            shared.registry.counter(names::SERVE_CACHE_HITS).inc();
+            let mut reply = stored.clone();
+            if let Json::Obj(m) = &mut reply {
+                m.insert("id".to_string(), Json::Num(req.id as f64));
+                if req.trace_id.is_empty() {
+                    m.remove("trace_id");
+                } else {
+                    m.insert("trace_id".to_string(), Json::Str(req.trace_id.clone()));
+                }
+                m.insert("cached".to_string(), Json::Bool(true));
+            }
+            // Reorder so the replayed entry is the most recently used.
+            cache.order.retain(|k| *k != fp);
+            cache.order.push_back(fp);
+            return reply;
+        }
+        shared.registry.counter(names::SERVE_CACHE_MISSES).inc();
+    }
+    let reply = job_reply_json(req);
+    if reply.get("status").ok().and_then(|v| v.as_str().ok()) == Some("ok") {
+        let mut cache = shared.cache.lock().expect("fake cache poisoned");
+        if !cache.entries.contains_key(&fp) {
+            while cache.entries.len() >= CACHE_CAP {
+                let Some(lru) = cache.order.pop_front() else { break };
+                cache.entries.remove(&lru);
+                shared.registry.counter(names::SERVE_CACHE_EVICTIONS).inc();
+            }
+            cache.entries.insert(fp, reply.clone());
+            cache.order.push_back(fp);
+        }
+    }
+    reply
 }
 
 /// Write one §10 map-reduce reply, applying the connection's scripted

@@ -91,7 +91,7 @@ if [ -z "$req_ops" ]; then
 fi
 # Reply/notice ops and stats keys the cluster layer (and any other wire
 # consumer) depends on; extend this list when the control surface grows.
-emitted="pong cancelled shutdown-ack idle-timeout queue_depth shards shards_alive partial partial_done uptime_ms queue_lanes peek format body tenants"
+emitted="pong cancelled shutdown-ack idle-timeout queue_depth shards shards_alive partial partial_done uptime_ms queue_lanes peek format body tenants queued size capacity cleared"
 for tok in $req_ops $emitted; do
     # Ops appear JSON-quoted ("ping", inside example frames or tables),
     # stats keys as backticked `queue_depth`.
@@ -118,6 +118,19 @@ fi
 for key in $cluster_keys; do
     if ! grep -q "\`$key\`" README.md; then
         echo "FAIL: [cluster] config key '$key' is undocumented in README.md"
+        fail=1
+    fi
+done
+# Same rule for the [serve] section (scheduling/caching knobs live there);
+# the range ends at the blank line before [serve.net].
+serve_keys=$(sed -n '/^\[serve\]$/,/^$/p' rust/src/config.rs | grep -oE '^[a-z_]+' | sort -u)
+if [ -z "$serve_keys" ]; then
+    echo "FAIL: could not extract [serve] keys from rust/src/config.rs (EXAMPLE layout changed?)"
+    fail=1
+fi
+for key in $serve_keys; do
+    if ! grep -q "\`$key\`" README.md; then
+        echo "FAIL: [serve] config key '$key' is undocumented in README.md"
         fail=1
     fi
 done
